@@ -1,0 +1,101 @@
+//! Ablation study runner (paper §6, Tables 4–7): evaluates the component
+//! ablations on longbench-sim through the real engine.
+//!
+//!     cargo run --release --example ablation_sweep -- --ablation all
+//!     cargo run --release --example ablation_sweep -- --ablation schedule
+//!         (schedule | dense-blocks | compensator | predictor | all)
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use fastforward::engine::{Engine, SparsityConfig};
+use fastforward::eval::{self, EvalSpec};
+use fastforward::manifest::Manifest;
+use fastforward::runtime::Runtime;
+use fastforward::sparsity::masks::ExpertSource;
+use fastforward::util::cli::Args;
+use fastforward::weights::WeightStore;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let dir = std::path::PathBuf::from(args.str("artifacts", "artifacts"));
+    let which = args.str("ablation", "all");
+    let spec = EvalSpec {
+        tasks_per_group: args.usize("tasks", 3),
+        prompt_chars: args.usize("prompt-chars", 1024),
+        seed: args.usize("seed", 17) as u64,
+        with_generation: false,
+        max_gen_tokens: 16,
+    };
+
+    let m = Rc::new(Manifest::load(&dir)?);
+    let w = Rc::new(WeightStore::load(&m)?);
+    let engine = Engine::new(Rc::new(Runtime::new(m, w)?));
+    let tasks = eval::build_tasks(&spec);
+
+    let dense = eval::evaluate(&engine, &tasks, &SparsityConfig::dense(),
+                               &spec)?;
+    println!("{}", eval::TABLE_HEADER);
+    println!("{}", eval::format_row("dense reference", &dense, 0.0));
+    let mut run = |label: &str, cfg: &SparsityConfig| -> Result<f64> {
+        let r = eval::evaluate(&engine, &tasks, cfg, &spec)?;
+        println!(
+            "{}",
+            eval::format_row(label, &r, r.rel_gap_pct(dense.average))
+        );
+        Ok(r.average)
+    };
+
+    let base = SparsityConfig::fastforward(0.5);
+
+    if which == "schedule" || which == "all" {
+        println!("\n-- Table 4: layerwise vs uniform sparsity schedule --");
+        run("layerwise 50%", &base)?;
+        let mut uni = base.clone();
+        uni.layerwise = false;
+        run("uniform 50%", &uni)?;
+    }
+
+    if which == "dense-blocks" || which == "all" {
+        println!("\n-- Table 5: dense first/last block --");
+        let mut none = base.clone();
+        none.layerwise = false;
+        none.dense_first = false;
+        none.dense_last = false;
+        run("uniform 50% (all sparse)", &none)?;
+        let mut first = none.clone();
+        first.dense_first = true;
+        run("+ dense first", &first)?;
+        let mut both = first.clone();
+        both.dense_last = true;
+        run("+ dense first & last", &both)?;
+    }
+
+    if which == "compensator" || which == "all" {
+        println!("\n-- Table 6: error compensator --");
+        run("50% with compensator", &base)?;
+        let mut nc = base.clone();
+        nc.compensator = false;
+        run("50% without compensator", &nc)?;
+    }
+
+    if which == "predictor" || which == "all" {
+        println!("\n-- Table 7: expert predictor variants --");
+        // paper setting: dense first block, 50% sparsity elsewhere,
+        // no layerwise schedule, isolate the selector
+        let mut t7 = SparsityConfig::fastforward(0.5);
+        t7.layerwise = false;
+        t7.dense_last = false;
+        for (label, source) in [
+            ("trained predictor", ExpertSource::Trained),
+            ("per-block dynamic (oracle)", ExpertSource::Oracle),
+            ("first-block static (GRIFFIN)", ExpertSource::FirstBlockStatic),
+            ("CATS thresholding (baseline)", ExpertSource::Cats),
+        ] {
+            let mut cfg = t7.clone();
+            cfg.source = source;
+            run(label, &cfg)?;
+        }
+    }
+    Ok(())
+}

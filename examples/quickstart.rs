@@ -1,0 +1,68 @@
+//! Quickstart: load the AOT artifacts, prefill a prompt dense vs sparse,
+//! and generate a short continuation — the 60-second tour of the API.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use fastforward::engine::{Engine, SparsityConfig};
+use fastforward::manifest::Manifest;
+use fastforward::runtime::Runtime;
+use fastforward::tokenizer::Tokenizer;
+use fastforward::weights::WeightStore;
+
+fn main() -> Result<()> {
+    // 1. Load the artifact bundle produced by `make artifacts`.
+    let dir = std::path::PathBuf::from(
+        std::env::var("FF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let manifest = Rc::new(Manifest::load(&dir)?);
+    let weights = Rc::new(WeightStore::load(&manifest)?);
+    let runtime = Rc::new(Runtime::new(manifest, weights)?);
+    let engine = Engine::new(runtime);
+    let tok = Tokenizer::new(engine.manifest().model.vocab);
+    println!(
+        "loaded {} ({} executables, {} weights)",
+        engine.manifest().model.name,
+        engine.manifest().executables.len(),
+        engine.manifest().weights.len(),
+    );
+
+    // 2. Build a long-ish prompt ending in a QA-style question.
+    let mut rng = fastforward::util::rng::Rng::new(7);
+    let bank = fastforward::trace::WordBank::new(&mut rng, 128);
+    let prompt_text = format!(
+        "{} the passkey is kwxqzj. remember it. {}\nthe passkey is",
+        bank.filler(&mut rng, 400),
+        bank.filler(&mut rng, 500),
+    );
+    let prompt = tok.encode(&prompt_text);
+    println!("prompt: {} tokens", prompt.len());
+
+    // 3. Prefill dense vs FastForward-50% and compare.
+    for (label, cfg) in [
+        ("dense (baseline)", SparsityConfig::dense()),
+        ("fastforward @50%", SparsityConfig::fastforward(0.5)),
+    ] {
+        // warm once so compile time doesn't pollute the comparison
+        let _ = engine.prefill(&prompt, &cfg)?;
+        let pre = engine.prefill(&prompt, &cfg)?;
+        println!(
+            "{label:20} prefill {:7.1} ms ({} blocks, {} dense, tail {})",
+            pre.timing.total.as_secs_f64() * 1e3,
+            pre.timing.blocks,
+            pre.timing.dense_blocks,
+            pre.timing.tail_tokens,
+        );
+    }
+
+    // 4. Generate with the full FastForward configuration.
+    let gen = engine.generate(&prompt, 24, &SparsityConfig::fastforward(0.5))?;
+    println!("generated: {:?}", gen.text);
+    println!(
+        "ttft {:.1} ms | tpot {:.2} ms/token",
+        gen.ttft_ms, gen.tpot_ms
+    );
+    Ok(())
+}

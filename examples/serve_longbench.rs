@@ -1,0 +1,157 @@
+//! End-to-end serving driver (DESIGN.md "end-to-end validation"): boots
+//! the full stack (router → dynamic batcher → engine), replays a
+//! longbench-sim request trace through it with Poisson arrivals, and
+//! reports TTFT / TPOT / throughput dense-vs-sparse plus the accuracy
+//! summary — the paper's headline quantities on one screen.
+//!
+//!     cargo run --release --example serve_longbench -- \
+//!         --requests 12 --prompt-chars 1024 --sparsity 0.5
+
+use std::rc::Rc;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use anyhow::Result;
+use fastforward::batcher::{Batcher, BatcherConfig};
+use fastforward::engine::{Engine, SparsityConfig};
+use fastforward::eval::{self, EvalSpec};
+use fastforward::manifest::Manifest;
+use fastforward::metrics::Metrics;
+use fastforward::router::{Response, Router};
+use fastforward::runtime::Runtime;
+use fastforward::tokenizer::Tokenizer;
+use fastforward::trace::longbench::{TaskGen, TaskGroup};
+use fastforward::util::cli::Args;
+use fastforward::util::rng::Rng;
+use fastforward::util::stats::Summary;
+use fastforward::weights::WeightStore;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let dir = std::path::PathBuf::from(args.str("artifacts", "artifacts"));
+    let n_requests = args.usize("requests", 12);
+    let prompt_chars = args.usize("prompt-chars", 1024);
+    let sparsity = args.f64("sparsity", 0.5);
+    let rate = args.f64("rate", 2.0);
+
+    // ---- serving stack -------------------------------------------------
+    let metrics = Arc::new(Metrics::new());
+    let probe = Manifest::load(&dir)?;
+    let router = Arc::new(Router::new(
+        256,
+        probe.model.max_ctx,
+        16 * probe.model.max_ctx / 128,
+        128,
+        metrics.clone(),
+    ));
+    let r2 = router.clone();
+    let dir2 = dir.clone();
+    let exec = std::thread::spawn(move || -> Result<()> {
+        let m = Rc::new(Manifest::load(&dir2)?);
+        let w = Rc::new(WeightStore::load(&m)?);
+        let rt = Rc::new(Runtime::new(m, w)?);
+        Batcher::new(
+            Engine::new(rt),
+            r2,
+            BatcherConfig {
+                max_active: 8,
+                prefill_block_budget: 4,
+            },
+        )
+        .run()
+    });
+
+    // ---- trace replay ----------------------------------------------------
+    let tok = Tokenizer::new(probe.model.vocab);
+    let mut taskgen = TaskGen::new(77);
+    let mut rng = Rng::new(42);
+    let cfg = if sparsity > 0.0 {
+        SparsityConfig::fastforward(sparsity)
+    } else {
+        SparsityConfig::dense()
+    };
+    println!(
+        "replaying {n_requests} longbench-sim requests (~{prompt_chars} tokens, \
+         poisson {rate}/s) at sparsity {sparsity}"
+    );
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    let groups = TaskGroup::all();
+    for i in 0..n_requests {
+        let wait = -(1.0 - rng.f64()).ln() / rate;
+        std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(1.0)));
+        let task = taskgen.generate(groups[i % groups.len()], prompt_chars);
+        let (tx, rx) = channel::<Response>();
+        match router.submit(tok.encode(&task.prompt), 16, cfg.clone(), tx) {
+            Ok(id) => pending.push((id, rx)),
+            Err(e) => println!("  request {i} rejected: {e:?}"),
+        }
+    }
+    let mut ttft = Summary::new();
+    let mut tpot = Summary::new();
+    let mut total_tokens = 0usize;
+    for (id, rx) in pending {
+        let resp = rx.recv()?;
+        if let Some(e) = resp.error {
+            println!("  request {id} failed: {e}");
+            continue;
+        }
+        ttft.add(resp.ttft_ms);
+        if resp.tokens > 0 {
+            tpot.add(resp.tpot_ms);
+        }
+        total_tokens += resp.tokens;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    router.close();
+    exec.join().unwrap()?;
+
+    println!("\n== serving metrics ({n_requests} requests, {wall:.1}s wall) ==");
+    println!(
+        "TTFT   p50 {:8.1} ms   p95 {:8.1} ms   mean {:8.1} ms",
+        ttft.percentile(50.0),
+        ttft.percentile(95.0),
+        ttft.mean()
+    );
+    println!(
+        "TPOT   p50 {:8.2} ms   p95 {:8.2} ms   mean {:8.2} ms",
+        tpot.percentile(50.0),
+        tpot.percentile(95.0),
+        tpot.mean()
+    );
+    println!(
+        "throughput: {:.2} req/s, {:.1} generated tok/s",
+        n_requests as f64 / wall,
+        total_tokens as f64 / wall
+    );
+    println!("\n== prometheus snapshot ==");
+    for line in metrics.export().lines().filter(|l| !l.starts_with('#')) {
+        println!("  {line}");
+    }
+
+    // ---- offline accuracy summary on the same task family ---------------
+    println!("\n== accuracy (offline, same engine artifacts) ==");
+    let m = Rc::new(Manifest::load(&dir)?);
+    let w = Rc::new(WeightStore::load(&m)?);
+    let engine = Engine::new(Rc::new(Runtime::new(m, w)?));
+    let spec = EvalSpec {
+        tasks_per_group: 2,
+        prompt_chars,
+        ..Default::default()
+    };
+    let tasks = eval::build_tasks(&spec);
+    println!("{}", eval::TABLE_HEADER);
+    let dense = eval::evaluate(&engine, &tasks, &SparsityConfig::dense(),
+                               &spec)?;
+    println!("{}", eval::format_row("dense (0%)", &dense, 0.0));
+    let sparse = eval::evaluate(&engine, &tasks, &cfg, &spec)?;
+    println!(
+        "{}",
+        eval::format_row(
+            &format!("fastforward {:.0}%", sparsity * 100.0),
+            &sparse,
+            sparse.rel_gap_pct(dense.average)
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,374 @@
+"""AOT compilation pipeline: train → calibrate → lower → serialize.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits into the artifacts directory:
+
+* ``*.hlo.txt``       — HLO **text** per entry point (xla_extension 0.5.1
+                        rejects jax≥0.5 serialized protos: 64-bit ids; the
+                        text parser reassigns ids — see aot_recipe).
+* ``weights.bin``     — all trained parameters, flat little-endian f32.
+* ``manifest.json``   — model config, weight table (name→offset/shape),
+                        executable ABI table (argument order!), K grid,
+                        tokenizer spec.
+* ``schedule.json``   — calibration masses + per-budget layer schedules.
+* ``train_log.json``  — training curves + predictor quality for
+                        EXPERIMENTS.md.
+
+Python runs ONLY here; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import calibrate, train
+from . import model as M
+from .corpus import VOCAB
+
+F32 = "f32"
+I32 = "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered → HLO text via stablehlo → XlaComputation."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir: str, cfg: M.ModelConfig):
+        self.out_dir = out_dir
+        self.cfg = cfg
+        self.weights: List[np.ndarray] = []
+        self.weight_table: Dict[str, Dict] = {}
+        self.executables: List[Dict] = []
+        self.offset = 0
+        os.makedirs(out_dir, exist_ok=True)
+
+    # -- weights ---------------------------------------------------------
+    def add_weight(self, name: str, arr) -> None:
+        a = np.ascontiguousarray(np.asarray(arr), dtype=np.float32)
+        self.weight_table[name] = {
+            "offset": self.offset,
+            "shape": list(a.shape),
+            "dtype": F32,
+        }
+        self.weights.append(a)
+        self.offset += a.nbytes
+
+    def add_params(self, params, pred, comp) -> None:
+        self.add_weight("embed", params["embed"])
+        self.add_weight("final_norm", params["final_norm"])
+        for li, lp in enumerate(params["layers"]):
+            for role in M.LAYER_ROLES:
+                self.add_weight(f"layers.{li}.{role}", lp[role])
+        for li, pp in enumerate(pred):
+            for role in M.PRED_ROLES:
+                self.add_weight(f"pred.{li}.{role}", pp[role])
+        for li, cp in enumerate(comp):
+            for role in M.COMP_ROLES:
+                self.add_weight(f"comp.{li}.{role}", cp[role])
+
+    # -- executables -----------------------------------------------------
+    def lower(self, name: str, fn, arg_specs: List[Dict]) -> None:
+        """Lower `fn` at the shapes in arg_specs and record the ABI."""
+        t0 = time.time()
+        example = []
+        for spec in arg_specs:
+            shape = tuple(spec["shape"])
+            dt = jnp.int32 if spec["dtype"] == I32 else jnp.float32
+            example.append(jax.ShapeDtypeStruct(shape, dt))
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.executables.append(
+            {"name": name, "file": fname, "args": arg_specs})
+        print(f"  lowered {name:42s} {len(text)//1024:5d} KiB "
+              f"{time.time()-t0:5.1f}s")
+
+    def finish(self, schedule: Dict, train_log: Dict, k_grid: List[int],
+               extra: Dict) -> None:
+        blob = b"".join(a.tobytes() for a in self.weights)
+        with open(os.path.join(self.out_dir, "weights.bin"), "wb") as f:
+            f.write(blob)
+        cfg = self.cfg
+        manifest = {
+            "schema_version": 1,
+            "model": {
+                "name": cfg.name, "vocab": cfg.vocab,
+                "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+                "n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads,
+                "d_head": cfg.d_head, "d_ffn": cfg.d_ffn,
+                "block": cfg.block, "ftile": cfg.ftile,
+                "max_ctx": cfg.max_ctx, "buckets": cfg.buckets,
+                "rope_base": cfg.rope_base, "norm_eps": cfg.norm_eps,
+                "pred_r": cfg.pred_r, "comp_r": cfg.comp_r,
+            },
+            "tokenizer": {"kind": "byte", "vocab": VOCAB,
+                          "pad": 256, "bos": 257, "eos": 258},
+            "k_grid": k_grid,
+            "weights_file": "weights.bin",
+            "weights": self.weight_table,
+            "executables": self.executables,
+        }
+        manifest.update(extra)
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        with open(os.path.join(self.out_dir, "schedule.json"), "w") as f:
+            json.dump(schedule, f, indent=1)
+        with open(os.path.join(self.out_dir, "train_log.json"), "w") as f:
+            json.dump(train_log, f, indent=1)
+        print(f"  weights.bin: {len(blob)//1024} KiB, "
+              f"{len(self.executables)} executables")
+
+
+# ---------------------------------------------------------------------------
+# Arg-spec builders (the artifact ABI; mirrored by rust/src/runtime)
+# ---------------------------------------------------------------------------
+
+
+def w(role):             # per-layer transformer weight
+    return {"kind": "layer_weight", "role": role}
+
+
+def pw(role):            # per-layer predictor weight
+    return {"kind": "pred_weight", "role": role}
+
+
+def cw(role):            # per-layer compensator weight
+    return {"kind": "comp_weight", "role": role}
+
+
+def gw(name):            # global weight
+    return {"kind": "weight", "name": name}
+
+
+def inp(name, shape, dtype=F32):
+    return {"kind": "input", "name": name, "shape": list(shape),
+            "dtype": dtype}
+
+
+def build_arg_specs(cfg: M.ModelConfig, weight_table: Dict) -> None:
+    """Fill in shapes/dtypes for weight args from the weight table."""
+
+
+def resolve_spec(spec: Dict, cfg: M.ModelConfig) -> Dict:
+    """Attach concrete shape/dtype to weight arg specs (layer 0 as the
+    exemplar — all layers share shapes)."""
+    if spec["kind"] == "input":
+        return spec
+    shapes = {
+        "rms1": [cfg.d_model], "rms2": [cfg.d_model],
+        "wq": [cfg.d_model, cfg.n_heads * cfg.d_head],
+        "wk": [cfg.d_model, cfg.n_kv_heads * cfg.d_head],
+        "wv": [cfg.d_model, cfg.n_kv_heads * cfg.d_head],
+        "wo": [cfg.n_heads * cfg.d_head, cfg.d_model],
+        "wg": [cfg.d_model, cfg.d_ffn], "wu": [cfg.d_model, cfg.d_ffn],
+        "wd": [cfg.d_ffn, cfg.d_model],
+    }
+    pred_shapes = {"q": [cfg.d_model], "w1": [cfg.d_model, cfg.pred_r],
+                   "w2": [cfg.pred_r, cfg.d_ffn]}
+    comp_shapes = {"w1": [cfg.d_model, cfg.comp_r],
+                   "w2": [cfg.comp_r, cfg.d_model]}
+    glob_shapes = {"embed": [cfg.vocab, cfg.d_model],
+                   "final_norm": [cfg.d_model]}
+    out = dict(spec)
+    out["dtype"] = F32
+    if spec["kind"] == "layer_weight":
+        out["shape"] = shapes[spec["role"]]
+    elif spec["kind"] == "pred_weight":
+        out["shape"] = pred_shapes[spec["role"]]
+    elif spec["kind"] == "comp_weight":
+        out["shape"] = comp_shapes[spec["role"]]
+    elif spec["kind"] == "weight":
+        out["shape"] = glob_shapes[spec["name"]]
+    return out
+
+
+def lower_all(aw: ArtifactWriter, cfg: M.ModelConfig, k_grid: List[int],
+              decode_k: List[int]) -> None:
+    """Lower every entry point × shape variant."""
+    ep = M.make_entry_points(cfg)
+    d, nkv, dh = cfg.d_model, cfg.n_kv_heads, cfg.d_head
+    B = cfg.block
+
+    def rs(specs):
+        return [resolve_spec(s, cfg) for s in specs]
+
+    for T in (B, 1):
+        aw.lower(f"embed_t{T}", ep["embed"], rs([
+            gw("embed"), inp("tokens", [T], I32)]))
+        aw.lower(f"lm_head_t{T}", ep["lm_head"], rs([
+            gw("final_norm"), gw("embed"), inp("x", [T, d])]))
+
+    layer_w = [w(r) for r in M.LAYER_ROLES]
+    attn_w = [w(r) for r in M.ATTN_ROLES]
+    ffn_w = [w(r) for r in M.FFN_ROLES]
+    sparse_w = layer_w + [pw(r) for r in M.PRED_ROLES] + \
+        [cw(r) for r in M.COMP_ROLES]
+
+    for S in cfg.buckets:
+        kv = [inp("k_cache", [S, nkv, dh]), inp("v_cache", [S, nkv, dh]),
+              inp("pos", [], I32)]
+        for T in (B, 1):
+            aw.lower(f"layer_dense_t{T}_s{S}", ep["layer_dense"], rs(
+                layer_w + [inp("x", [T, d])] + kv))
+        aw.lower(f"layer_attn_t{B}_s{S}", ep["layer_attn"], rs(
+            attn_w + [inp("x", [B, d])] + kv))
+        for K in k_grid:
+            aw.lower(f"layer_sparse_k{K}_t{B}_s{S}",
+                     ep["make_layer_sparse"](K),
+                     rs(sparse_w + [inp("x", [B, d])] + kv))
+        for K in decode_k:
+            aw.lower(f"layer_sparse_k{K}_t1_s{S}",
+                     ep["make_layer_sparse"](K),
+                     rs(sparse_w + [inp("x", [1, d])] + kv))
+
+    # FFN-module-level entry points (split path: ablations, Fig. 6 benches)
+    aw.lower(f"ffn_dense_t{B}", ep["ffn_dense"], rs(
+        ffn_w + [inp("h", [B, d])]))
+    for K in k_grid:
+        aw.lower(f"ffn_sparse_ext_k{K}_t{B}", ep["make_ffn_sparse_ext"](K),
+                 rs(ffn_w + [cw("w1"), cw("w2"), inp("h", [B, d]),
+                             inp("idx", [K], I32)]))
+    aw.lower(f"ffn_acts_t{B}", ep["ffn_acts"], rs(
+        [w("rms2"), w("wg"), w("wu"), inp("h", [B, d])]))
+    aw.lower(f"predictor_t{B}", ep["predictor"], rs(
+        [w("rms2")] + [pw(r) for r in M.PRED_ROLES] + [inp("h", [B, d])]))
+
+
+# ---------------------------------------------------------------------------
+# Training cache
+# ---------------------------------------------------------------------------
+
+
+def save_cache(path, params, pred, comp):
+    flat = {}
+    flat["embed"] = np.asarray(params["embed"])
+    flat["final_norm"] = np.asarray(params["final_norm"])
+    for li, lp in enumerate(params["layers"]):
+        for role in M.LAYER_ROLES:
+            flat[f"layers.{li}.{role}"] = np.asarray(lp[role])
+    for li, pp in enumerate(pred):
+        for role in M.PRED_ROLES:
+            flat[f"pred.{li}.{role}"] = np.asarray(pp[role])
+    for li, cp in enumerate(comp):
+        for role in M.COMP_ROLES:
+            flat[f"comp.{li}.{role}"] = np.asarray(cp[role])
+    np.savez(path, **flat)
+
+
+def load_cache(path, cfg):
+    z = np.load(path)
+    params = {
+        "embed": jnp.asarray(z["embed"]),
+        "final_norm": jnp.asarray(z["final_norm"]),
+        "layers": [
+            {role: jnp.asarray(z[f"layers.{li}.{role}"])
+             for role in M.LAYER_ROLES}
+            for li in range(cfg.n_layers)
+        ],
+    }
+    pred = [{role: jnp.asarray(z[f"pred.{li}.{role}"])
+             for role in M.PRED_ROLES} for li in range(cfg.n_layers)]
+    comp = [{role: jnp.asarray(z[f"comp.{li}.{role}"])
+             for role in M.COMP_ROLES} for li in range(cfg.n_layers)]
+    return params, pred, comp
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--model", default=os.environ.get("MODEL",
+                                                      "ff-mini-128"))
+    ap.add_argument("--base-steps", type=int, default=700)
+    ap.add_argument("--pred-steps", type=int, default=200)
+    ap.add_argument("--comp-steps", type=int, default=120)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--use-cache", action="store_true",
+                    help="reuse cached trained weights if present")
+    args = ap.parse_args()
+
+    cfg = M.CONFIGS[args.model]
+    cache = os.path.join(args.out_dir, "train_cache.npz")
+    t0 = time.time()
+    log: Dict[str, Any] = {"model": cfg.name}
+
+    if args.use_cache and os.path.exists(cache):
+        print(f"[aot] loading cached weights from {cache}")
+        params, pred, comp = load_cache(cache, cfg)
+        log["cached"] = True
+    else:
+        print(f"[aot] training base model {cfg.name}")
+        params, base_log = train.train_base(
+            cfg, steps=args.base_steps, seed=args.seed)
+        print("[aot] training expert predictors")
+        pred, pred_log = train.train_predictors(
+            params, cfg, steps=args.pred_steps, seed=args.seed + 10)
+        print("[aot] training error compensators")
+        comp, comp_log = train.train_compensators(
+            params, pred, cfg, steps_a=args.comp_steps,
+            steps_b=args.comp_steps, seed=args.seed + 20)
+        log.update({"base": base_log, "pred": pred_log, "comp": comp_log})
+        os.makedirs(args.out_dir, exist_ok=True)
+        save_cache(cache, params, pred, comp)
+
+    print("[aot] predictor top-K overlap vs oracle")
+    overlap = train.predictor_topk_overlap(params, pred, cfg)
+    log["pred_topk_overlap@0.5"] = overlap
+    print(f"  per-layer overlap: {[round(o, 3) for o in overlap]}")
+
+    print("[aot] calibrating layerwise schedule")
+    schedule = calibrate.build_schedule(params, cfg)
+    k_grid = sorted({
+        k
+        for s in schedule["schedules"].values()
+        for k in (s["layer_k"] + s["uniform_k"])
+        if k < cfg.d_ffn
+    })
+    # Ensure the canonical 50%-uniform K is present for ablations.
+    k50 = schedule["schedules"]["0.50"]["uniform_k"][0]
+    decode_k = sorted({k for k in
+                       schedule["schedules"]["0.50"]["layer_k"] +
+                       [k50] if k < cfg.d_ffn})
+    print(f"  k_grid={k_grid} decode_k={decode_k}")
+
+    print("[aot] lowering entry points")
+    aw = ArtifactWriter(args.out_dir, cfg)
+    aw.add_params(params, pred, comp)
+    lower_all(aw, cfg, k_grid, decode_k)
+    aw.finish(schedule, log, k_grid, extra={"decode_k": decode_k})
+
+    # Cross-language parity fixture: the Rust engine's dense blockwise
+    # prefill must reproduce these logits (rust/tests/parity.rs).
+    print("[aot] writing parity fixture")
+    from .corpus import CorpusGen
+
+    fx_tokens = CorpusGen(seed=1234).tokens(300)  # 2 blocks + 44-token tail
+    logits = M.forward_train(params, cfg, jnp.asarray(fx_tokens)[None])[0]
+    fixture = {
+        "tokens": [int(t) for t in fx_tokens],
+        "last_logits": [float(x) for x in np.asarray(logits[-1])],
+    }
+    with open(os.path.join(args.out_dir, "parity_fixture.json"), "w") as f:
+        json.dump(fixture, f)
+    print(f"[aot] done in {time.time()-t0:.0f}s → {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Layerwise sparsity calibration (paper §3.4, eq. 23 + Algorithm 1).
+
+Computes, per layer, the total attention mass received by non-sink keys
+(everything outside the first 128-token block) over a calibration set of
+long synthetic prompts, then allocates per-layer density budgets with the
+paper's greedy linear schedule. The schedule is quantized to the FFN
+kernel's tile quantum so every per-layer K maps to a compiled artifact.
+
+Algorithm 1 is re-implemented (and property-tested) in Rust
+(rust/src/sparsity/schedule.rs); this module is the authoritative source
+of the calibration *statistics* written into schedule.json.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+from . import model as M
+from .corpus import CorpusGen
+from .kernels import ref
+
+
+def attention_masses(params, cfg: M.ModelConfig, *, n_samples=8,
+                     ctx_len=1024, seed=7) -> List[float]:
+    """Per-layer mean attention mass received by non-sink tokens (eq. 23),
+    accumulated block-by-block during prefill of calibration prompts."""
+    gen = CorpusGen(seed=seed)
+    L = cfg.n_layers
+    masses = np.zeros(L, dtype=np.float64)
+
+    @jax.jit
+    def block_masses(params, tokens):
+        """Prefill one prompt, returning per-layer non-sink attention mass."""
+        T = tokens.shape[0]
+        x = params["embed"][tokens]
+        mask = kernels.make_block_mask(0, T, T)
+        kz = jnp.zeros((T, cfg.n_kv_heads, cfg.d_head))
+        out = []
+        for lp in params["layers"]:
+            xh = ref.rmsnorm(x, lp["rms1"], cfg.norm_eps)
+            positions = jnp.arange(T, dtype=jnp.int32)
+            q = ref.rope(
+                (xh @ lp["wq"]).reshape(T, cfg.n_heads, cfg.d_head),
+                positions, cfg.rope_base)
+            k = ref.rope(
+                (xh @ lp["wk"]).reshape(T, cfg.n_kv_heads, cfg.d_head),
+                positions, cfg.rope_base)
+            v = (xh @ lp["wv"]).reshape(T, cfg.n_kv_heads, cfg.d_head)
+            out.append(
+                ref.attention_mass_non_sink(q, k, mask, cfg.block))
+            o = ref.block_attention(q, k, v, mask)
+            h = x + o.reshape(T, cfg.n_heads * cfg.d_head) @ lp["wo"]
+            x = M.ffn_dense_sublayer_jnp(lp, cfg, h)
+        return jnp.stack(out)
+
+    for _ in range(n_samples):
+        toks = jnp.asarray(gen.tokens(ctx_len))
+        masses += np.asarray(block_masses(params, toks), dtype=np.float64)
+    # Normalize per head and sample (eq. 23 averages over |D| and H).
+    masses /= n_samples * cfg.n_heads
+    return masses.tolist()
+
+
+def layerwise_schedule(scores: List[float], budget: float) -> List[float]:
+    """Paper Algorithm 1 verbatim: greedy proportional allocation of the
+    per-layer density budgets b_i ∈ (0, 1], clamped at 1.
+
+    `budget` B is the mean target density (1 - sparsity); the returned
+    list satisfies sum(b) <= B * L with equality unless everything
+    saturates at 1."""
+    L = len(scores)
+    T = budget * L
+    s_total = float(sum(scores))
+    out = []
+    for s in scores:
+        b = min(1.0, s / s_total * T) if s_total > 0 else min(1.0, T / 1)
+        T -= b
+        s_total -= s
+        out.append(b)
+    return out
+
+
+def quantize_densities(densities: List[float], d_ffn: int,
+                       ftile: int) -> List[int]:
+    """Round per-layer densities to K = multiples of the kernel tile,
+    keeping every layer at least one tile wide."""
+    return [
+        int(np.clip(round(b * d_ffn / ftile), 1, d_ffn // ftile)) * ftile
+        for b in densities
+    ]
+
+
+def build_schedule(params, cfg: M.ModelConfig, *,
+                   sparsities=(0.3, 0.4, 0.5), n_samples=8,
+                   ctx_len=1024, seed=7) -> Dict:
+    """Full schedule.json payload: masses + per-budget layerwise and
+    uniform K allocations."""
+    masses = attention_masses(params, cfg, n_samples=n_samples,
+                              ctx_len=ctx_len, seed=seed)
+    schedules = {}
+    for sp in sparsities:
+        budget = 1.0 - sp
+        dens = layerwise_schedule(masses, budget)
+        schedules[f"{sp:.2f}"] = {
+            "sparsity": sp,
+            "layer_densities": dens,
+            "layer_k": quantize_densities(dens, cfg.d_ffn, cfg.ftile),
+            "uniform_k": quantize_densities(
+                [budget] * cfg.n_layers, cfg.d_ffn, cfg.ftile),
+        }
+    return {
+        "attention_masses": masses,
+        "calibration": {"n_samples": n_samples, "ctx_len": ctx_len,
+                        "sink_len": cfg.block, "seed": seed},
+        "schedules": schedules,
+    }

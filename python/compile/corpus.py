@@ -1,0 +1,154 @@
+"""Synthetic training / calibration corpus (Minipile substitute).
+
+A Zipfian char-gram language with long-range repeated motifs: documents
+are built from a fixed vocabulary of pseudo-words sampled Zipf(1.2), with
+sentence structure and periodic motif repetition so that (a) a small LM
+can learn real structure in a few hundred steps and (b) attention has
+genuine long-range mass (needed for the calibration statistic, eq. 23).
+
+Tokenizer: byte-level with three specials. Mirrored exactly by
+rust/src/tokenizer (round-trip tested on both sides).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+PAD, BOS, EOS = 256, 257, 258
+VOCAB = 384  # 256 bytes + specials, padded up for tidy matmul shapes
+
+
+def encode(text: str) -> np.ndarray:
+    """Byte-level encode (no specials appended)."""
+    return np.frombuffer(text.encode("utf-8"), dtype=np.uint8).astype(np.int32)
+
+
+def decode(tokens) -> str:
+    bs = bytes(int(t) for t in tokens if 0 <= int(t) < 256)
+    return bs.decode("utf-8", errors="replace")
+
+
+class CorpusGen:
+    """Deterministic synthetic corpus generator."""
+
+    def __init__(self, seed: int = 0, n_words: int = 2048):
+        self.rng = np.random.default_rng(seed)
+        letters = "abcdefghijklmnopqrstuvwxyz"
+        self.words = []
+        for _ in range(n_words):
+            n = int(self.rng.integers(2, 9))
+            self.words.append(
+                "".join(letters[i] for i in self.rng.integers(0, 26, n))
+            )
+        ranks = np.arange(1, n_words + 1, dtype=np.float64)
+        p = ranks ** -1.2
+        self.p = p / p.sum()
+
+    def sentence(self) -> str:
+        n = int(self.rng.integers(4, 13))
+        idx = self.rng.choice(len(self.words), size=n, p=self.p)
+        return " ".join(self.words[i] for i in idx) + "."
+
+    def document(self, target_chars: int) -> str:
+        """A document with a repeated motif every ~8 sentences, giving
+        attention something long-range to lock onto."""
+        motif = self.sentence()
+        parts, total = [], 0
+        i = 0
+        while total < target_chars:
+            s = motif if (i % 8 == 7) else self.sentence()
+            parts.append(s)
+            total += len(s) + 1
+            i += 1
+        return " ".join(parts)[:target_chars]
+
+    def tokens(self, n: int) -> np.ndarray:
+        """n tokens of corpus text (byte-encoded)."""
+        return encode(self.document(n + 16))[:n]
+
+    def batch(self, batch_size: int, seq_len: int) -> np.ndarray:
+        return np.stack([self.tokens(seq_len) for _ in range(batch_size)])
+
+    # -- task-formatted training examples --------------------------------
+    # The LongBench substitute (rust/src/trace/longbench.rs) evaluates six
+    # task formats; the base model must have seen those *formats* during
+    # training (the analogue of LLaMA's pretraining coverage of QA /
+    # few-shot / code shapes). Instances here are freshly sampled, so eval
+    # tasks (different seed stream, generated in Rust) test generalization.
+
+    def _word(self) -> str:
+        return self.words[int(self.rng.integers(0, len(self.words)))]
+
+    def task_example(self, target_chars: int) -> str:
+        kind = int(self.rng.integers(0, 6))
+        fill = lambda n: self.document(max(n, 8))  # noqa: E731
+        if kind == 0:    # single-doc QA
+            key, val = self._word(), self._word()
+            body = max(target_chars - len(key) * 2 - len(val) * 2 - 60, 16)
+            return (f"{fill(body // 2)} the {key} is {val}. "
+                    f"{fill(body - body // 2)}\n"
+                    f"question: what is the {key}?\nanswer: the {key} is {val}")
+        if kind == 1:    # multi-doc QA
+            pairs = [(self._word(), self._word()) for _ in range(3)]
+            per = max(target_chars // 3 - 40, 16)
+            docs = [
+                f"document {i}: {fill(per)} the {k} is {v}."
+                for i, (k, v) in enumerate(pairs)
+            ]
+            k, v = pairs[int(self.rng.integers(0, 3))]
+            return ("\n".join(docs)
+                    + f"\nquestion: what is the {k}?\nanswer: the {k} is {v}")
+        if kind == 2:    # summarization
+            topic = self._word()
+            parts, total = [], 0
+            while total < max(target_chars - 60, 32):
+                s = self.sentence()
+                if self.rng.random() < 0.5:
+                    s = f"the {topic} {s}"
+                parts.append(s)
+                total += len(s) + 1
+            return (" ".join(parts)
+                    + f"\nsummary: this text is mostly about the {topic}")
+        if kind == 3:    # few-shot mapping
+            lines, total = [], 0
+            while total < max(target_chars - 30, 32):
+                w = self._word()
+                line = f"{w} maps to {w}x."
+                lines.append(line)
+                total += len(line) + 1
+            w = self._word()
+            return " ".join(lines) + f"\n{w} maps to {w}x"
+        if kind == 4:    # passkey retrieval
+            pk = "".join(
+                chr(97 + int(self.rng.integers(0, 26))) for _ in range(6))
+            body = max(target_chars - 80, 16)
+            return (f"{fill(body // 3)} the passkey is {pk}. remember it. "
+                    f"{fill(body - body // 3)}\nthe passkey is {pk}")
+        # kind == 5: bracket-balanced "code"
+        out, depth = [], 0
+        while sum(len(p) for p in out) < max(target_chars - 24, 16):
+            if depth < 4 and (depth == 0 or self.rng.random() < 0.55):
+                out.append(f"fn {self._word()}() {{ ")
+                depth += 1
+            else:
+                out.append("} ")
+                depth -= 1
+        return "".join(out).rstrip() + " }" * depth
+
+    def task_tokens(self, n: int) -> np.ndarray:
+        toks = encode(self.task_example(n))
+        if len(toks) >= n:
+            return toks[:n]
+        return np.concatenate(
+            [toks, np.full(n - len(toks), PAD, dtype=np.int32)])
+
+    def mixed_batch(self, batch_size: int, seq_len: int,
+                    task_frac: float = 0.5) -> np.ndarray:
+        """Training mixture: plain corpus + task-formatted examples."""
+        rows = []
+        for _ in range(batch_size):
+            if self.rng.random() < task_frac:
+                rows.append(self.task_tokens(seq_len))
+            else:
+                rows.append(self.tokens(seq_len))
+        return np.stack(rows)

@@ -1,0 +1,81 @@
+"""L2 perf tool: static inspection of the lowered HLO artifacts.
+
+Verifies the structural perf properties DESIGN.md §8 claims for the L2
+graphs — no unsupported custom-calls (the 0.5.1 parser would reject
+them at load), no `topk` instructions (must lower through sort), bounded
+artifact sizes, and a per-artifact op census (dot/while/gather counts)
+that makes regressions visible in review.
+
+Usage: cd python && python -m compile.inspect_hlo [--artifacts ../artifacts]
+Also exercised by python/tests/test_artifacts.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+from collections import Counter
+from typing import Dict
+
+
+OP_RE = re.compile(r"=\s+(?:\([^)]*\)\s+)?[a-z0-9\[\],{}#@ ._\-]*?\b"
+                   r"(dot|while|gather|sort|custom-call|topk|convolution|"
+                   r"dynamic-update-slice|dynamic-slice)\b")
+
+
+def census(text: str) -> Counter:
+    counts: Counter = Counter()
+    for m in OP_RE.finditer(text):
+        counts[m.group(1)] += 1
+    return counts
+
+
+def inspect(artifacts: str) -> Dict[str, Counter]:
+    with open(os.path.join(artifacts, "manifest.json")) as f:
+        manifest = json.load(f)
+    out = {}
+    for e in manifest["executables"]:
+        with open(os.path.join(artifacts, e["file"])) as f:
+            out[e["name"]] = census(f.read())
+    return out
+
+
+def check(artifacts: str) -> list:
+    """Return a list of violations (empty = clean)."""
+    problems = []
+    for name, c in inspect(artifacts).items():
+        if c.get("topk"):
+            problems.append(f"{name}: contains topk (0.5.1-incompatible)")
+        if c.get("custom-call"):
+            problems.append(f"{name}: contains custom-call "
+                            f"(Mosaic leak? not loadable on CPU PJRT)")
+        if c.get("convolution"):
+            problems.append(f"{name}: unexpected convolution")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+    table = inspect(args.artifacts)
+    print(f"{'artifact':<42} {'dot':>5} {'while':>6} {'gather':>7} "
+          f"{'sort':>5} {'dus':>5}")
+    for name in sorted(table):
+        c = table[name]
+        print(f"{name:<42} {c.get('dot', 0):>5} {c.get('while', 0):>6} "
+              f"{c.get('gather', 0):>7} {c.get('sort', 0):>5} "
+              f"{c.get('dynamic-update-slice', 0):>5}")
+    problems = check(args.artifacts)
+    if problems:
+        print("\nVIOLATIONS:")
+        for p in problems:
+            print(f"  {p}")
+        raise SystemExit(1)
+    print(f"\n{len(table)} artifacts clean: no topk / custom-call / conv.")
+
+
+if __name__ == "__main__":
+    main()

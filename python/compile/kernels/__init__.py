@@ -1,0 +1,6 @@
+"""FastForward Layer-1 Pallas kernels (interpret-mode on CPU PJRT)."""
+
+from .attention import block_attention, make_block_mask  # noqa: F401
+from .compensator import compensator  # noqa: F401
+from .ffn import ffn_dense, ffn_neuron_scores, ffn_sparse  # noqa: F401
+from .predictor import predictor_scores  # noqa: F401

@@ -1,0 +1,118 @@
+"""Layer-1 Pallas kernel: block-causal attention against a padded KV cache.
+
+The token-mixing substrate for block-wise prefill. The grid walks the KV
+cache in 128-key tiles with an online-softmax accumulator (flash-style),
+so the [T, S] score matrix never materializes in VMEM. Causality and
+cache-length padding are encoded in an additive mask computed (cheaply,
+elementwise) by the L2 model outside the kernel — keeping the kernel free
+of dynamic scalar plumbing.
+
+GQA: queries keep nh heads; kv stay at nkv heads and head h reads kv head
+h // (nh // nkv) via the BlockSpec index map (no materialized repeat).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ffn import INTERPRET
+
+STILE = 128  # KV tile width
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref):
+    """One (head, kv-tile) grid step with online softmax.
+
+    q_ref:    [1, T, dh]      queries for head h
+    k_ref:    [1, STILE, dh]  key tile (of the matching kv head)
+    v_ref:    [1, STILE, dh]  value tile
+    mask_ref: [T, STILE]      additive mask tile
+    o_ref:    [1, T, dh]      output for head h
+    m/l/acc:  VMEM scratch: running max [T,1], denom [T,1], acc [T,dh]
+    """
+    i = pl.program_id(1)  # kv tile index
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # [T, dh]
+    k = k_ref[0]                                   # [STILE, dh]
+    dh = q.shape[-1]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.asarray(dh, jnp.float32)) + mask_ref[...]
+
+    m_prev = m_ref[...]                            # [T, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    # Guard fully-masked rows: keep the exp argument finite.
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v_ref[0], preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stile",))
+def block_attention(q, k, v, mask, *, stile=STILE):
+    """Flash-style block attention. q: [T, nh, dh], k/v: [S, nkv, dh],
+    mask: [T, S] additive (0 attendable / -inf masked) → [T, nh, dh]."""
+    T, nh, dh = q.shape
+    S, nkv, _ = k.shape
+    rep = nh // nkv
+    assert S % stile == 0, f"S={S} not a multiple of {stile}"
+    grid = (nh, S // stile)
+
+    qt = jnp.transpose(q, (1, 0, 2))          # [nh, T, dh]
+    kt = jnp.transpose(k, (1, 0, 2))          # [nkv, S, dh]
+    vt = jnp.transpose(v, (1, 0, 2))
+
+    out = pl.pallas_call(
+        _attn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T, dh), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, stile, dh), lambda h, i: (h // rep, i, 0)),
+            pl.BlockSpec((1, stile, dh), lambda h, i: (h // rep, i, 0)),
+            pl.BlockSpec((T, stile), lambda h, i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, T, dh), lambda h, i: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nh, T, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((T, 1), jnp.float32),
+            pltpu.VMEM((T, 1), jnp.float32),
+            pltpu.VMEM((T, dh), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(qt, kt, vt, mask)
+    return jnp.transpose(out, (1, 0, 2))
+
+
+def make_block_mask(pos, T, S, dtype=jnp.float32):
+    """Additive causal+padding mask for a query block starting at `pos`.
+
+    Query t sits at global position pos + t; key s is attendable iff
+    s <= pos + t (causal w.r.t. the running cache, which holds keys
+    [0, pos + T) after this block's K/V are appended). `pos` may be a
+    traced scalar — the mask is built with broadcasting only.
+    """
+    rows = pos + jnp.arange(T, dtype=jnp.int32)[:, None]   # [T, 1]
+    cols = jnp.arange(S, dtype=jnp.int32)[None, :]         # [1, S]
+    return jnp.where(cols <= rows, 0.0, NEG_INF).astype(dtype)

@@ -1,0 +1,44 @@
+"""Layer-1 Pallas kernel for the error compensation network (paper §3.3).
+
+A low-rank (r' = d/8) two-layer MLP applied per token, run in parallel
+with the sparse FFN; its output is added to the sparse FFN output. Small
+enough that the whole computation fits one VMEM-resident kernel step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ffn import INTERPRET
+
+
+def _comp_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    x = x_ref[...]
+    h = jax.nn.relu(
+        jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    )
+    y = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@jax.jit
+def compensator(x, w1, w2):
+    """Ycomp = relu(x W1) W2. x: [T, d], w1: [d, r'], w2: [r', d]."""
+    T, d = x.shape
+    r = w1.shape[1]
+    return pl.pallas_call(
+        _comp_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((T, d), lambda j: (0, 0)),
+            pl.BlockSpec((d, r), lambda j: (0, 0)),
+            pl.BlockSpec((r, d), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((T, d), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
+        interpret=INTERPRET,
+    )(x, w1, w2)

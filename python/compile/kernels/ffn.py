@@ -1,0 +1,125 @@
+"""Layer-1 Pallas kernels for the FastForward FFN hot path.
+
+Hardware adaptation (DESIGN.md §2): the paper's custom CUDA kernels tile
+the gathered sub-FFN per thread-block; here the same schedule is expressed
+for the TPU model Pallas exposes — the grid walks the intermediate (f or K)
+dimension in MXU-friendly 128-wide tiles, the gate⊙up SwiGLU is fused
+between the two projections so the intermediate never leaves VMEM, and the
+down-projection accumulates into the output tile across grid steps.
+
+All kernels are lowered with interpret=True: CPU PJRT cannot execute
+Mosaic custom-calls, so interpret mode is the correctness (and artifact)
+path; real-TPU efficiency is estimated analytically in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly tile along the intermediate dimension. All f / K used by
+# the AOT pipeline are multiples of this (the sparsity scheduler quantizes
+# per-layer budgets to it).
+FTILE = 128
+
+INTERPRET = True  # CPU PJRT: Mosaic custom-calls are not executable.
+
+
+def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    """One grid step: a 128-wide slab of intermediate neurons.
+
+    x_ref:  [T, d]      (whole block resident in VMEM)
+    wg_ref: [d, FTILE]  gate slab
+    wu_ref: [d, FTILE]  up slab
+    wd_ref: [FTILE, d]  down slab
+    o_ref:  [T, d]      output accumulator
+    """
+    j = pl.program_id(0)
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    h = (g * jax.nn.sigmoid(g)) * u            # fused SwiGLU, stays in VMEM
+    y = jnp.dot(h, wd_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = y.astype(o_ref.dtype)
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] += y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("ftile",))
+def ffn_dense(x, wg, wu, wd, *, ftile=FTILE):
+    """Dense gated FFN via the tiled Pallas kernel.
+
+    x: [T, d], wg/wu: [d, f], wd: [f, d] → [T, d].
+    f must be a multiple of `ftile`.
+    """
+    T, d = x.shape
+    f = wg.shape[1]
+    assert f % ftile == 0, f"f={f} not a multiple of {ftile}"
+    grid = (f // ftile,)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((T, d), lambda j: (0, 0)),
+            pl.BlockSpec((d, ftile), lambda j: (0, j)),
+            pl.BlockSpec((d, ftile), lambda j: (0, j)),
+            pl.BlockSpec((ftile, d), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((T, d), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
+        interpret=INTERPRET,
+    )(x, wg, wu, wd)
+
+
+def ffn_sparse(x, wg, wu, wd, idx, *, ftile=FTILE):
+    """Sparse (gathered) gated FFN over the top-K expert neurons.
+
+    The gather runs as an XLA op feeding the kernel (on TPU it fuses into
+    the HBM→VMEM staging of the weight slabs; the kernel itself is the
+    same MXU schedule with f → K). idx: int32[K], K a multiple of `ftile`.
+    """
+    wg_s = jnp.take(wg, idx, axis=1)
+    wu_s = jnp.take(wu, idx, axis=1)
+    wd_s = jnp.take(wd, idx, axis=0)
+    return ffn_dense(x, wg_s, wu_s, wd_s, ftile=ftile)
+
+
+def _acts_kernel(x_ref, wg_ref, wu_ref, o_ref):
+    """Per-neuron squared-activation-norm slab (oracle statistic)."""
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    h = (g * jax.nn.sigmoid(g)) * u            # [T, FTILE]
+    o_ref[...] = jnp.sum(h * h, axis=0, keepdims=True).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("ftile",))
+def ffn_neuron_scores(x, wg, wu, *, ftile=FTILE):
+    """GRIFFIN 'flocking' statistic: L2 norm per intermediate neuron over
+    the block. Feeds the per-block-dynamic oracle and the GRIFFIN
+    first-block-static baseline (paper Table 7).
+    """
+    T, d = x.shape
+    f = wg.shape[1]
+    assert f % ftile == 0
+    out = pl.pallas_call(
+        _acts_kernel,
+        grid=(f // ftile,),
+        in_specs=[
+            pl.BlockSpec((T, d), lambda j: (0, 0)),
+            pl.BlockSpec((d, ftile), lambda j: (0, j)),
+            pl.BlockSpec((d, ftile), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, ftile), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, f), x.dtype),
+        interpret=INTERPRET,
+    )(x, wg, wu)
+    return jnp.sqrt(out[0])

@@ -1,0 +1,64 @@
+"""Layer-1 Pallas kernel for the expert neuron predictor (paper §3.2).
+
+A single-head attention pool with a trainable query aggregates the block
+into one d-vector, then a 2-layer MLP projects it to per-neuron scores in
+the d_ffn space. The whole thing is one kernel: the pooled vector and the
+rank-r hidden stay in VMEM, and the grid walks the d_ffn output in
+128-wide slabs (matching the FFN kernel's tiling, so the top-K indices it
+induces line up with the sub-FFN weight slabs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ffn import FTILE, INTERPRET
+
+
+def _predictor_kernel(x_ref, q_ref, w1_ref, w2_ref, o_ref):
+    """Grid step j emits scores for neurons [j*FTILE, (j+1)*FTILE).
+
+    The attention pool + first MLP layer are recomputed per slab; both are
+    O(T·d + d·r) — negligible next to the FFN they gate, and recomputing
+    keeps every operand in VMEM with no cross-step scratch.
+    """
+    x = x_ref[...]                                  # [T, d]
+    q = q_ref[...]                                  # [1, d]
+    d = x.shape[-1]
+    logits = jnp.dot(x, q.T, preferred_element_type=jnp.float32)  # [T, 1]
+    logits = logits / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    w = jax.nn.softmax(logits[:, 0], axis=-1)       # [T]
+    a = jnp.dot(w[None, :], x, preferred_element_type=jnp.float32)  # [1, d]
+    h = jax.nn.relu(
+        jnp.dot(a, w1_ref[...], preferred_element_type=jnp.float32)
+    )                                               # [1, r]
+    s = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = s.astype(o_ref.dtype)              # [1, FTILE]
+
+
+@functools.partial(jax.jit, static_argnames=("ftile",))
+def predictor_scores(x, q, w1, w2, *, ftile=FTILE):
+    """Score all f FFN neurons for a block. x: [T, d], q: [d],
+    w1: [d, r], w2: [r, f] → [f]."""
+    T, d = x.shape
+    r = w1.shape[1]
+    f = w2.shape[1]
+    assert f % ftile == 0
+    out = pl.pallas_call(
+        _predictor_kernel,
+        grid=(f // ftile,),
+        in_specs=[
+            pl.BlockSpec((T, d), lambda j: (0, 0)),
+            pl.BlockSpec((1, d), lambda j: (0, 0)),
+            pl.BlockSpec((d, r), lambda j: (0, 0)),
+            pl.BlockSpec((r, ftile), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, ftile), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, f), x.dtype),
+        interpret=INTERPRET,
+    )(x, q[None, :], w1, w2)
+    return out[0]

@@ -1,0 +1,150 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal: pytest/hypothesis sweeps shapes,
+dtypes and sparsity levels and asserts the Pallas kernels (run in
+interpret mode) match these to tight tolerances.
+
+All functions operate on a single 128-token (or 1-token, for decode)
+block, mirroring the paper's block-wise prompt processing (§3.1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# FFN (gated / SwiGLU) — paper eq. (10)
+# ---------------------------------------------------------------------------
+
+def ffn_dense(x, wg, wu, wd):
+    """Dense gated FFN: y = (silu(x Wg) ⊙ (x Wu)) Wd.
+
+    x: [T, d], wg/wu: [d, f], wd: [f, d] → [T, d]
+    """
+    h = silu(x @ wg) * (x @ wu)
+    return h @ wd
+
+
+def ffn_sparse(x, wg, wu, wd, idx):
+    """Sparse gated FFN over the top-K expert neurons (paper eq. 15-18).
+
+    idx: int32[K] column indices into the f dimension. Equivalent to
+    running the dense FFN with all non-selected intermediate neurons
+    zeroed.
+    """
+    wg_s = jnp.take(wg, idx, axis=1)          # [d, K]
+    wu_s = jnp.take(wu, idx, axis=1)          # [d, K]
+    wd_s = jnp.take(wd, idx, axis=0)          # [K, d]
+    h = silu(x @ wg_s) * (x @ wu_s)
+    return h @ wd_s
+
+
+def ffn_neuron_scores(x, wg, wu):
+    """Per-neuron importance for the oracle / GRIFFIN-style selection:
+    L2 norm over the block of the gated intermediate activation.
+
+    Returns [f] scores (the 'flocking' statistic of Dong et al. 2024).
+    """
+    h = silu(x @ wg) * (x @ wu)               # [T, f]
+    return jnp.sqrt(jnp.sum(h * h, axis=0))
+
+
+# ---------------------------------------------------------------------------
+# Expert neuron predictor — paper §3.2, eq. (12)-(13)
+# ---------------------------------------------------------------------------
+
+def predictor_scores(x, q, w1, w2):
+    """Attention-pool the block with trainable query q, then 2-layer MLP.
+
+    x: [T, d], q: [d], w1: [d, r], w2: [r, f] → [f]
+    """
+    logits = (x @ q) / jnp.sqrt(jnp.asarray(x.shape[-1], x.dtype))  # [T]
+    a = jax.nn.softmax(logits, axis=-1) @ x                          # [d]
+    return jax.nn.relu(a @ w1) @ w2                                  # [f]
+
+
+# ---------------------------------------------------------------------------
+# Error compensation network — paper §3.3, eq. (20)
+# ---------------------------------------------------------------------------
+
+def compensator(x, w1, w2):
+    """Low-rank corrective term: Ycomp = relu(x W1) W2.
+
+    x: [T, d], w1: [d, r'], w2: [r', d] → [T, d]
+    """
+    return jax.nn.relu(x @ w1) @ w2
+
+
+# ---------------------------------------------------------------------------
+# Block-causal attention with KV cache (the token-mixing substrate)
+# ---------------------------------------------------------------------------
+
+def block_attention(q, k, v, mask):
+    """Multi-head attention of a query block against the (padded) KV cache.
+
+    q: [T, nh, dh]   query block
+    k: [S, nkv, dh]  key cache (padded to bucket size S)
+    v: [S, nkv, dh]  value cache
+    mask: [T, S]     additive mask (0 where attendable, -inf elsewhere);
+                     encodes causality w.r.t. the block position AND
+                     padding beyond the true cache length.
+    Returns [T, nh, dh]. GQA: head h reads kv head h // (nh // nkv).
+    """
+    T, nh, dh = q.shape
+    S, nkv, _ = k.shape
+    rep = nh // nkv
+    kx = jnp.repeat(k, rep, axis=1)            # [S, nh, dh]
+    vx = jnp.repeat(v, rep, axis=1)
+    scores = jnp.einsum("thd,shd->hts", q, kx) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype)
+    )                                           # [nh, T, S]
+    scores = scores + mask[None, :, :]
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hts,shd->thd", w, vx)
+
+
+def attention_mass_non_sink(q, k, mask, sink_len):
+    """Calibration statistic (paper eq. 23): total attention mass received
+    by keys outside the first (sink) block, summed over heads and queries.
+
+    Used by calibrate.py to derive the layerwise sparsity schedule.
+    """
+    T, nh, dh = q.shape
+    S, nkv, _ = k.shape
+    rep = nh // nkv
+    kx = jnp.repeat(k, rep, axis=1)
+    scores = jnp.einsum("thd,shd->hts", q, kx) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype)
+    )
+    scores = scores + mask[None, :, :]
+    w = jax.nn.softmax(scores, axis=-1)        # [nh, T, S]
+    return jnp.sum(w[:, :, sink_len:])
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm + RoPE (layer plumbing, also used by model.py)
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def rope(x, positions, base=10000.0):
+    """Rotary position embedding. x: [T, n, dh], positions: [T] int32."""
+    T, n, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos = jnp.cos(ang)[:, None, :]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    ).astype(x.dtype)

@@ -1,0 +1,350 @@
+"""Layer-2 JAX model: a LLaMA-architecture transformer with block-wise
+prefill and FastForward FFN sparsity.
+
+Two parallel implementations of every layer op:
+
+* a **pure-jnp path** (`ref.py` ops) used by training / calibration where
+  trace-and-grad speed matters, and
+* a **Pallas path** (`kernels/`) used by every AOT entry point, so the
+  artifacts the Rust runtime executes go through the paper's kernels.
+
+AOT entry points take *explicit flat arguments* (no pytrees) so the HLO
+parameter order is self-evident and recorded verbatim in the artifact
+manifest for the Rust dispatcher.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """LLaMA-shape hyperparameters (ratios match LLaMA-3: SwiGLU FFN,
+    GQA, RMSNorm, RoPE). See DESIGN.md §3 for the scale substitution."""
+
+    name: str = "ff-mini-128"
+    vocab: int = 384
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ffn: int = 512
+    block: int = 128           # paper §3.1: 128-token prompt blocks
+    ftile: int = 64            # intermediate-dim tile; K quantum
+    rope_base: float = 10000.0
+    norm_eps: float = 1e-5
+    max_ctx: int = 4096
+    # Paper: r = d_model/16 (pred), r' = d_model/8 (comp), rounded to a
+    # pow2. At our scale those collapse to <16, starving the modules, so
+    # we floor both at 32 (documented deviation, DESIGN.md §3).
+    pred_r: int = 32
+    comp_r: int = 32
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def buckets(self) -> List[int]:
+        """KV-cache padding buckets (powers of two up to max_ctx)."""
+        out, s = [], 512
+        while s <= self.max_ctx:
+            out.append(s)
+            s *= 2
+        return out
+
+
+CONFIGS: Dict[str, ModelConfig] = {
+    "ff-mini-128": ModelConfig(),
+    "ff-mini-256": ModelConfig(
+        name="ff-mini-256", d_model=256, n_layers=8, n_heads=8,
+        n_kv_heads=4, d_ffn=1024, ftile=128, pred_r=32, comp_r=32,
+    ),
+    "ff-mini-512": ModelConfig(
+        name="ff-mini-512", d_model=512, n_layers=12, n_heads=8,
+        n_kv_heads=4, d_ffn=2048, ftile=128, pred_r=32, comp_r=64,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ffn
+    nh, nkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 7)
+    sd = d ** -0.5
+    return {
+        "rms1": jnp.ones((d,), jnp.float32),
+        "wq": jax.random.normal(ks[0], (d, nh * dh)) * sd,
+        "wk": jax.random.normal(ks[1], (d, nkv * dh)) * sd,
+        "wv": jax.random.normal(ks[2], (d, nkv * dh)) * sd,
+        "wo": jax.random.normal(ks[3], (nh * dh, d)) * sd,
+        "rms2": jnp.ones((d,), jnp.float32),
+        "wg": jax.random.normal(ks[4], (d, f)) * sd,
+        "wu": jax.random.normal(ks[5], (d, f)) * sd,
+        "wd": jax.random.normal(ks[6], (f, d)) * (f ** -0.5),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    return {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": [init_layer(keys[i + 1], cfg) for i in range(cfg.n_layers)],
+    }
+
+
+def init_predictor(key, cfg: ModelConfig) -> List[Dict[str, Any]]:
+    """Per-layer expert-predictor params (paper §3.2)."""
+    out = []
+    for k in jax.random.split(key, cfg.n_layers):
+        k1, k2, k3 = jax.random.split(k, 3)
+        out.append({
+            "q": jax.random.normal(k1, (cfg.d_model,)) * 0.02,
+            "w1": jax.random.normal(k2, (cfg.d_model, cfg.pred_r))
+            * (cfg.d_model ** -0.5),
+            "w2": jax.random.normal(k3, (cfg.pred_r, cfg.d_ffn))
+            * (cfg.pred_r ** -0.5),
+        })
+    return out
+
+
+def init_compensator(key, cfg: ModelConfig) -> List[Dict[str, Any]]:
+    """Per-layer error-compensator params (paper §3.3). W2 starts at zero
+    so the untrained compensator is a no-op."""
+    out = []
+    for k in jax.random.split(key, cfg.n_layers):
+        out.append({
+            "w1": jax.random.normal(k, (cfg.d_model, cfg.comp_r))
+            * (cfg.d_model ** -0.5),
+            "w2": jnp.zeros((cfg.comp_r, cfg.d_model), jnp.float32),
+        })
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Layer ops — pure-jnp path (training / calibration)
+# ---------------------------------------------------------------------------
+
+
+def attn_sublayer_jnp(lp, cfg, x, k_cache, v_cache, pos, mask):
+    """h = x + Wo·Attn(RoPE(Wq·x̂), cache ∪ RoPE(Wk·x̂), ...), x̂=rms1(x).
+
+    Returns (h, k_rows, v_rows): the new K/V rows for this block, already
+    rotary-encoded, to be appended to the cache by the caller.
+    """
+    T = x.shape[0]
+    nh, nkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    xh = ref.rmsnorm(x, lp["rms1"], cfg.norm_eps)
+    positions = pos + jnp.arange(T, dtype=jnp.int32)
+    q = ref.rope((xh @ lp["wq"]).reshape(T, nh, dh), positions, cfg.rope_base)
+    k = ref.rope((xh @ lp["wk"]).reshape(T, nkv, dh), positions, cfg.rope_base)
+    v = (xh @ lp["wv"]).reshape(T, nkv, dh)
+    k_all = jax.lax.dynamic_update_slice(k_cache, k, (pos, 0, 0))
+    v_all = jax.lax.dynamic_update_slice(v_cache, v, (pos, 0, 0))
+    o = ref.block_attention(q, k_all, v_all, mask)
+    h = x + o.reshape(T, nh * dh) @ lp["wo"]
+    return h, k, v
+
+
+def ffn_dense_sublayer_jnp(lp, cfg, h):
+    xh = ref.rmsnorm(h, lp["rms2"], cfg.norm_eps)
+    return h + ref.ffn_dense(xh, lp["wg"], lp["wu"], lp["wd"])
+
+
+def forward_train(params, cfg: ModelConfig, tokens):
+    """Full-sequence causal forward for training. tokens: [B, T] → logits."""
+
+    def one(seq):
+        T = seq.shape[0]
+        x = params["embed"][seq]
+        mask = kernels.make_block_mask(0, T, T)
+        kz = jnp.zeros((T, cfg.n_kv_heads, cfg.d_head), jnp.float32)
+        for lp in params["layers"]:
+            h, _, _ = attn_sublayer_jnp(lp, cfg, x, kz, kz, 0, mask)
+            x = ffn_dense_sublayer_jnp(lp, cfg, h)
+        x = ref.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return x @ params["embed"].T
+
+    return jax.vmap(one)(tokens)
+
+
+def forward_ffn_inputs(params, cfg: ModelConfig, tokens):
+    """Forward over one sequence returning per-layer FFN inputs
+    (post-rms2 hidden states), used for predictor/compensator training.
+    tokens: [T] → (logits, ffn_inputs [L, T, d], resid_states [L, T, d])."""
+    T = tokens.shape[0]
+    x = params["embed"][tokens]
+    mask = kernels.make_block_mask(0, T, T)
+    kz = jnp.zeros((T, cfg.n_kv_heads, cfg.d_head), jnp.float32)
+    ffn_in, resid = [], []
+    for lp in params["layers"]:
+        h, _, _ = attn_sublayer_jnp(lp, cfg, x, kz, kz, 0, mask)
+        resid.append(h)
+        ffn_in.append(ref.rmsnorm(h, lp["rms2"], cfg.norm_eps))
+        x = ffn_dense_sublayer_jnp(lp, cfg, h)
+    x = ref.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["embed"].T, jnp.stack(ffn_in), jnp.stack(resid)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points — Pallas path, explicit flat arguments
+# ---------------------------------------------------------------------------
+# Argument order in these signatures is the artifact ABI: aot.py records it
+# verbatim in manifest.json and the Rust runtime feeds buffers in the same
+# order. Never reorder without bumping the manifest schema.
+
+
+def make_entry_points(cfg: ModelConfig) -> Dict[str, Any]:
+    """Build the jittable entry-point functions for one model config."""
+    nh, nkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    eps = cfg.norm_eps
+
+    def embed(embed_w, tokens):
+        return (jnp.take(embed_w, tokens, axis=0),)
+
+    def lm_head(final_norm, embed_w, x):
+        xh = ref.rmsnorm(x, final_norm, eps)
+        return (xh @ embed_w.T,)
+
+    def _attn(rms1, wq, wk, wv, wo, x, k_cache, v_cache, pos):
+        T = x.shape[0]
+        S = k_cache.shape[0]
+        xh = ref.rmsnorm(x, rms1, eps)
+        positions = pos + jnp.arange(T, dtype=jnp.int32)
+        q = ref.rope((xh @ wq).reshape(T, nh, dh), positions, cfg.rope_base)
+        k = ref.rope((xh @ wk).reshape(T, nkv, dh), positions, cfg.rope_base)
+        v = (xh @ wv).reshape(T, nkv, dh)
+        k_all = jax.lax.dynamic_update_slice(k_cache, k, (pos, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(v_cache, v, (pos, 0, 0))
+        mask = kernels.make_block_mask(pos, T, S)
+        o = kernels.block_attention(q, k_all, v_all, mask)
+        h = x + o.reshape(T, nh * dh) @ wo
+        return h, k, v
+
+    def layer_attn(rms1, wq, wk, wv, wo, x, k_cache, v_cache, pos):
+        """Split entry: attention sublayer only (ablation path)."""
+        return _attn(rms1, wq, wk, wv, wo, x, k_cache, v_cache, pos)
+
+    def ffn_dense(rms2, wg, wu, wd, h):
+        """Split entry: dense FFN sublayer with residual."""
+        xh = ref.rmsnorm(h, rms2, eps)
+        return (h + kernels.ffn_dense(xh, wg, wu, wd, ftile=cfg.ftile),)
+
+    def make_ffn_sparse_ext(K):
+        def ffn_sparse_ext(rms2, wg, wu, wd, cw1, cw2, h, idx):
+            """Split entry: sparse FFN at external top-K indices.
+            Returns the sparse residual output and the compensator term
+            separately so the harness can toggle compensation (Tab. 6)."""
+            xh = ref.rmsnorm(h, rms2, eps)
+            y = h + kernels.ffn_sparse(xh, wg, wu, wd, idx, ftile=cfg.ftile)
+            comp = kernels.compensator(xh, cw1, cw2)
+            return y, comp
+        return ffn_sparse_ext
+
+    def ffn_acts(rms2, wg, wu, h):
+        """Split entry: GRIFFIN activation-norm statistic (oracle)."""
+        xh = ref.rmsnorm(h, rms2, eps)
+        return (kernels.ffn_neuron_scores(xh, wg, wu, ftile=cfg.ftile),)
+
+    def predictor(rms2, pq, pw1, pw2, h):
+        """Split entry: expert-predictor neuron scores."""
+        xh = ref.rmsnorm(h, rms2, eps)
+        return (kernels.predictor_scores(xh, pq, pw1, pw2, ftile=cfg.ftile),)
+
+    def layer_dense(rms1, wq, wk, wv, wo, rms2, wg, wu, wd,
+                    x, k_cache, v_cache, pos):
+        """Fused entry: whole dense transformer layer (fast path)."""
+        h, k, v = _attn(rms1, wq, wk, wv, wo, x, k_cache, v_cache, pos)
+        xh = ref.rmsnorm(h, rms2, eps)
+        y = h + kernels.ffn_dense(xh, wg, wu, wd, ftile=cfg.ftile)
+        return y, k, v
+
+    def make_layer_sparse(K):
+        def layer_sparse(rms1, wq, wk, wv, wo, rms2, wg, wu, wd,
+                         pq, pw1, pw2, cw1, cw2,
+                         x, k_cache, v_cache, pos):
+            """Fused entry: attention + predictor → top-K → gathered
+            sparse FFN + error compensator (the FastForward fast path)."""
+            h, k, v = _attn(rms1, wq, wk, wv, wo, x, k_cache, v_cache, pos)
+            xh = ref.rmsnorm(h, rms2, eps)
+            scores = kernels.predictor_scores(xh, pq, pw1, pw2,
+                                              ftile=cfg.ftile)
+            # top-K via argsort: xla_extension 0.5.1's HLO parser predates
+            # the dedicated `topk` instruction (largest= attribute), so we
+            # lower through `sort` instead of jax.lax.top_k.
+            order = jnp.argsort(-scores)
+            idx = jnp.sort(order[:K]).astype(jnp.int32)
+            y = h + kernels.ffn_sparse(xh, wg, wu, wd, idx, ftile=cfg.ftile)
+            y = y + kernels.compensator(xh, cw1, cw2)
+            return y, k, v
+        return layer_sparse
+
+    return {
+        "embed": embed,
+        "lm_head": lm_head,
+        "layer_attn": layer_attn,
+        "layer_dense": layer_dense,
+        "make_layer_sparse": make_layer_sparse,
+        "ffn_dense": ffn_dense,
+        "make_ffn_sparse_ext": make_ffn_sparse_ext,
+        "ffn_acts": ffn_acts,
+        "predictor": predictor,
+    }
+
+
+# Canonical per-layer weight roles in ABI order, per entry-point family.
+LAYER_ROLES = ["rms1", "wq", "wk", "wv", "wo", "rms2", "wg", "wu", "wd"]
+ATTN_ROLES = ["rms1", "wq", "wk", "wv", "wo"]
+FFN_ROLES = ["rms2", "wg", "wu", "wd"]
+PRED_ROLES = ["q", "w1", "w2"]
+COMP_ROLES = ["w1", "w2"]
+
+
+# ---------------------------------------------------------------------------
+# Blockwise prefill in python (tests + calibration parity with the Rust
+# engine; mirrors rust/src/engine/prefill.rs)
+# ---------------------------------------------------------------------------
+
+
+def blockwise_prefill_dense(params, cfg: ModelConfig, tokens):
+    """Process a prompt block-by-block through the jnp path; returns the
+    final hidden states [T, d] and the per-layer KV caches. Must equal
+    forward_train on the same tokens (causality test)."""
+    T = tokens.shape[0]
+    assert T % cfg.block == 0
+    n_blocks = T // cfg.block
+    S = T
+    d = cfg.d_model
+    kc = [jnp.zeros((S, cfg.n_kv_heads, cfg.d_head)) for _ in params["layers"]]
+    vc = [jnp.zeros((S, cfg.n_kv_heads, cfg.d_head)) for _ in params["layers"]]
+    out = jnp.zeros((T, d))
+    for b in range(n_blocks):
+        pos = b * cfg.block
+        blk = jax.lax.dynamic_slice(tokens, (pos,), (cfg.block,))
+        x = params["embed"][blk]
+        mask = kernels.make_block_mask(pos, cfg.block, S)
+        for li, lp in enumerate(params["layers"]):
+            h, k, v = attn_sublayer_jnp(lp, cfg, x, kc[li], vc[li], pos, mask)
+            kc[li] = jax.lax.dynamic_update_slice(kc[li], k, (pos, 0, 0))
+            vc[li] = jax.lax.dynamic_update_slice(vc[li], v, (pos, 0, 0))
+            x = ffn_dense_sublayer_jnp(lp, cfg, h)
+        out = jax.lax.dynamic_update_slice(out, x, (pos, 0))
+    return out, kc, vc

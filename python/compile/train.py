@@ -1,0 +1,284 @@
+"""Build-time training: base LM, expert predictors, error compensators.
+
+Runs once inside `make artifacts` (never on the request path). Three
+stages, all on the pure-jnp model path for trace speed:
+
+1. **Base LM** — AdamW on the synthetic corpus (next-byte prediction).
+2. **Expert predictors** (paper §3.2) — weighted BCE against GRIFFIN
+   activation-norm labels: top-50% neurons per block are positive, with
+   exponentially decaying weights 32/16/8/4/2 over positive rank
+   quintiles; negatives weigh 1.
+3. **Error compensators** (paper §3.3) — layerwise distillation (MSE vs
+   the dense FFN output) in two phases: oracle-mask warm start, then
+   predictor-mask adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .corpus import PAD, CorpusGen
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# AdamW (hand-rolled; no optax dependency)
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 wd=0.01):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree.map(
+        lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p),
+        params, mh, vh,
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: base LM
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, cfg, tokens):
+    logits = M.forward_train(params, cfg, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != PAD).astype(jnp.float32)  # don't learn padding
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def train_base(cfg: M.ModelConfig, *, steps=700, batch=12, seq=384,
+               lr=3e-3, seed=0, log_every=25) -> Tuple[Dict, List[Dict]]:
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(key, cfg)
+    opt = adamw_init(params)
+    gen = CorpusGen(seed=seed + 1)
+
+    @jax.jit
+    def step(params, opt, tokens, lr):
+        loss, grads = jax.value_and_grad(lm_loss)(params, cfg, tokens)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    log = []
+    t0 = time.time()
+    for i in range(steps):
+        tokens = jnp.asarray(gen.mixed_batch(batch, seq + 1))
+        cur_lr = lr * 0.5 * (1 + np.cos(np.pi * i / steps))
+        params, opt, loss = step(params, opt, tokens, cur_lr)
+        if i % log_every == 0 or i == steps - 1:
+            entry = {"step": i, "loss": float(loss),
+                     "elapsed_s": round(time.time() - t0, 1)}
+            log.append(entry)
+            print(f"[base] step {i:4d} loss {float(loss):.4f}")
+    return params, log
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: expert predictors (weighted BCE vs GRIFFIN labels)
+# ---------------------------------------------------------------------------
+
+
+def griffin_labels_and_weights(ffn_in, lp):
+    """Labels/weights per paper §3.2 from one block's dense activations.
+
+    ffn_in: [T, d] post-rms2 FFN input. Returns (y [f], w [f]).
+    Top 50% of neurons by block activation norm → label 1; positive rank
+    quintiles get weights 32/16/8/4/2; negatives weight 1.
+    """
+    scores = ref.ffn_neuron_scores(ffn_in, lp["wg"], lp["wu"])  # [f]
+    f = scores.shape[0]
+    order = jnp.argsort(-scores)                 # descending
+    rank = jnp.argsort(order)                    # rank of each neuron
+    y = (rank < f // 2).astype(jnp.float32)
+    quint = rank // (f // 10)                    # positive quintiles 0..4
+    wpos = 2.0 ** (5 - jnp.clip(quint, 0, 4))    # 32,16,8,4,2
+    w = jnp.where(y > 0, wpos, 1.0)
+    return y, w
+
+
+def predictor_loss(pred_stack, ffn_in_blocks, labels, weights):
+    """Weighted BCE over stacked layers. pred_stack leaves: [L, ...];
+    ffn_in_blocks: [L, B, T, d]; labels/weights: [L, B, f]."""
+
+    def layer_loss(pp, xs, ys, ws):
+        def block_loss(x, y, w):
+            s = ref.predictor_scores(x, pp["q"], pp["w1"], pp["w2"])
+            p = jax.nn.log_sigmoid(s)
+            q = jax.nn.log_sigmoid(-s)
+            return jnp.sum(w * -(y * p + (1 - y) * q)) / jnp.sum(w)
+        return jnp.mean(jax.vmap(block_loss)(xs, ys, ws))
+
+    losses = jax.vmap(layer_loss)(pred_stack, ffn_in_blocks, labels, weights)
+    return jnp.mean(losses)
+
+
+def stack_layers(per_layer: List[Dict]) -> Dict:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+def unstack_layers(stacked: Dict, n: int) -> List[Dict]:
+    return [jax.tree.map(lambda x: x[i], stacked) for i in range(n)]
+
+
+def collect_ffn_inputs(params, cfg, gen: CorpusGen, n_blocks: int):
+    """Sample corpus blocks and return per-layer FFN inputs [L, B, T, d]."""
+    fwd = jax.jit(functools.partial(M.forward_ffn_inputs, params, cfg))
+    outs = []
+    for _ in range(n_blocks):
+        toks = jnp.asarray(gen.mixed_batch(1, cfg.block)[0])
+        _, ffn_in, _ = fwd(toks)
+        outs.append(ffn_in)                      # [L, T, d]
+    return jnp.stack(outs, axis=1)               # [L, B, T, d]
+
+
+def train_predictors(params, cfg: M.ModelConfig, *, steps=250, batch=16,
+                     lr=2e-3, seed=10) -> Tuple[List[Dict], List[Dict]]:
+    key = jax.random.PRNGKey(seed)
+    pred = stack_layers(M.init_predictor(key, cfg))
+    opt = adamw_init(pred)
+    gen = CorpusGen(seed=seed + 1)
+    L = cfg.n_layers
+
+    label_fn = jax.jit(
+        lambda ffn_in: jax.vmap(                    # over layers
+            lambda xs, lp: jax.vmap(
+                lambda x: griffin_labels_and_weights(x, lp)
+            )(xs),
+            in_axes=(0, 0),
+        )(ffn_in, stack_layers(params["layers"]))
+    )
+
+    @jax.jit
+    def step(pred, opt, ffn_in, labels, weights, lr):
+        loss, grads = jax.value_and_grad(predictor_loss)(
+            pred, ffn_in, labels, weights)
+        pred, opt = adamw_update(pred, grads, opt, lr, wd=0.0)
+        return pred, opt, loss
+
+    log = []
+    for i in range(steps):
+        ffn_in = collect_ffn_inputs(params, cfg, gen, batch)  # [L,B,T,d]
+        labels, weights = label_fn(ffn_in)
+        pred, opt, loss = step(pred, opt, ffn_in, labels, weights, lr)
+        if i % 25 == 0 or i == steps - 1:
+            log.append({"step": i, "loss": float(loss)})
+            print(f"[pred] step {i:4d} wBCE {float(loss):.4f}")
+    return unstack_layers(pred, L), log
+
+
+def predictor_topk_overlap(params, pred, cfg, *, n_blocks=16, density=0.5,
+                           seed=99) -> List[float]:
+    """Eval: mean |predicted ∩ oracle| / K per layer (reported in
+    EXPERIMENTS.md; the quality signal behind paper Table 7)."""
+    gen = CorpusGen(seed=seed)
+    K = int(cfg.d_ffn * density)
+    ffn_in = collect_ffn_inputs(params, cfg, gen, n_blocks)  # [L,B,T,d]
+    overlaps = []
+    for li in range(cfg.n_layers):
+        lp = params["layers"][li]
+        pp = pred[li]
+        tot = 0.0
+        for b in range(n_blocks):
+            x = ffn_in[li, b]
+            oracle = np.argsort(
+                -np.asarray(ref.ffn_neuron_scores(x, lp["wg"], lp["wu"])))[:K]
+            predicted = np.argsort(
+                -np.asarray(ref.predictor_scores(
+                    x, pp["q"], pp["w1"], pp["w2"])))[:K]
+            tot += len(set(oracle.tolist()) & set(predicted.tolist())) / K
+        overlaps.append(tot / n_blocks)
+    return overlaps
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: error compensators (two-phase layerwise distillation)
+# ---------------------------------------------------------------------------
+
+
+def comp_loss(comp_stack, layer_stack, ffn_in, idx):
+    """MSE between dense FFN output and sparse+compensated output.
+    ffn_in: [L, B, T, d]; idx: [L, B, K] expert indices."""
+
+    def layer_loss(cp, lp, xs, idxs):
+        def block_loss(x, ix):
+            dense = ref.ffn_dense(x, lp["wg"], lp["wu"], lp["wd"])
+            sparse = ref.ffn_sparse(x, lp["wg"], lp["wu"], lp["wd"], ix)
+            comp = ref.compensator(x, cp["w1"], cp["w2"])
+            return jnp.mean((dense - (sparse + comp)) ** 2)
+        return jnp.mean(jax.vmap(block_loss)(xs, idxs))
+
+    return jnp.mean(
+        jax.vmap(layer_loss)(comp_stack, layer_stack, ffn_in, idx))
+
+
+def train_compensators(params, pred, cfg: M.ModelConfig, *, steps_a=150,
+                       steps_b=150, batch=16, density=0.5, lr=2e-3,
+                       seed=20) -> Tuple[List[Dict], List[Dict]]:
+    key = jax.random.PRNGKey(seed)
+    comp = stack_layers(M.init_compensator(key, cfg))
+    opt = adamw_init(comp)
+    gen = CorpusGen(seed=seed + 1)
+    K = int(cfg.d_ffn * density)
+    layer_stack = stack_layers(params["layers"])
+    pred_stack = stack_layers(pred)
+
+    @jax.jit
+    def oracle_idx(ffn_in):
+        def per(lp, xs):
+            def one(x):
+                s = ref.ffn_neuron_scores(x, lp["wg"], lp["wu"])
+                _, ix = jax.lax.top_k(s, K)
+                return jnp.sort(ix).astype(jnp.int32)
+            return jax.vmap(one)(xs)
+        return jax.vmap(per)(layer_stack, ffn_in)
+
+    @jax.jit
+    def pred_idx(ffn_in):
+        def per(pp, xs):
+            def one(x):
+                s = ref.predictor_scores(x, pp["q"], pp["w1"], pp["w2"])
+                _, ix = jax.lax.top_k(s, K)
+                return jnp.sort(ix).astype(jnp.int32)
+            return jax.vmap(one)(xs)
+        return jax.vmap(per)(pred_stack, ffn_in)
+
+    @jax.jit
+    def step(comp, opt, ffn_in, idx, lr):
+        loss, grads = jax.value_and_grad(comp_loss)(
+            comp, layer_stack, ffn_in, idx)
+        comp, opt = adamw_update(comp, grads, opt, lr, wd=0.0)
+        return comp, opt, loss
+
+    log = []
+    for phase, steps, idx_fn in (
+        ("oracle", steps_a, oracle_idx),
+        ("predictor", steps_b, pred_idx),
+    ):
+        for i in range(steps):
+            ffn_in = collect_ffn_inputs(params, cfg, gen, batch)
+            idx = idx_fn(ffn_in)
+            comp, opt, loss = step(comp, opt, ffn_in, idx, lr)
+            if i % 25 == 0 or i == steps - 1:
+                log.append({"phase": phase, "step": i, "loss": float(loss)})
+                print(f"[comp/{phase}] step {i:4d} mse {float(loss):.6f}")
+    return unstack_layers(comp, cfg.n_layers), log

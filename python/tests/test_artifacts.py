@@ -1,0 +1,93 @@
+"""Artifact-bundle consistency: manifest ABI vs emitted HLO files and
+weights.bin. Skips when `make artifacts` has not been run."""
+
+import json
+import os
+import re
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_every_executable_file_exists(manifest):
+    for e in manifest["executables"]:
+        assert os.path.exists(os.path.join(ART, e["file"])), e["name"]
+
+
+def test_weights_bin_covers_table(manifest):
+    size = os.path.getsize(os.path.join(ART, manifest["weights_file"]))
+    end = 0
+    for name, w in manifest["weights"].items():
+        n = int(np.prod(w["shape"])) if w["shape"] else 1
+        assert w["offset"] % 4 == 0, name
+        end = max(end, w["offset"] + 4 * n)
+    assert end == size, f"table end {end} != blob size {size}"
+
+
+def test_abi_param_count_matches_hlo(manifest):
+    """Each HLO entry computation must declare exactly len(args) params."""
+    for e in manifest["executables"][:8]:  # sample to keep test fast
+        text = open(os.path.join(ART, e["file"])).read()
+        m = re.search(r"ENTRY[^{]*\{(.*?)\n\}", text, re.S)
+        assert m, e["name"]
+        n_params = len(re.findall(r"parameter\((\d+)\)", m.group(1)))
+        assert n_params == len(e["args"]), (
+            f"{e['name']}: HLO has {n_params} params, ABI {len(e['args'])}"
+        )
+
+
+def test_schedule_consistency(manifest):
+    with open(os.path.join(ART, "schedule.json")) as f:
+        sched = json.load(f)
+    L = manifest["model"]["n_layers"]
+    assert len(sched["attention_masses"]) == L
+    for key, s in sched["schedules"].items():
+        assert len(s["layer_k"]) == L
+        for k in s["layer_k"]:
+            assert k % manifest["model"]["ftile"] == 0
+            assert k <= manifest["model"]["d_ffn"]
+        # every sub-d_ffn K is a compiled artifact
+        for k in s["layer_k"]:
+            if k < manifest["model"]["d_ffn"]:
+                assert k in manifest["k_grid"], (key, k)
+
+
+def test_k_grid_artifacts_exist(manifest):
+    names = {e["name"] for e in manifest["executables"]}
+    b = manifest["model"]["block"]
+    for k in manifest["k_grid"]:
+        for s in manifest["model"]["buckets"]:
+            assert f"layer_sparse_k{k}_t{b}_s{s}" in names
+        assert f"ffn_sparse_ext_k{k}_t{b}" in names
+    for k in manifest["decode_k"]:
+        for s in manifest["model"]["buckets"]:
+            assert f"layer_sparse_k{k}_t1_s{s}" in names
+
+
+def test_parity_fixture_shape(manifest):
+    path = os.path.join(ART, "parity_fixture.json")
+    if not os.path.exists(path):
+        pytest.skip("fixture not emitted by this artifact build")
+    with open(path) as f:
+        fx = json.load(f)
+    assert len(fx["last_logits"]) == manifest["model"]["vocab"]
+    assert all(0 <= t < manifest["model"]["vocab"] for t in fx["tokens"])
+
+
+def test_hlo_census_is_clean(manifest):
+    """No topk / custom-call / convolution in any artifact (loadability
+    + interpret-mode purity; see compile/inspect_hlo.py)."""
+    from compile.inspect_hlo import check
+
+    assert check(ART) == []

@@ -1,0 +1,183 @@
+"""L1 correctness: every Pallas kernel (interpret mode) vs its pure-jnp
+oracle in ref.py — the core build-time correctness signal, swept over
+shapes/K/seeds with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RNG = np.random.default_rng(0)
+
+
+def randn(*shape, scale=0.1):
+    return jnp.asarray(
+        RNG.standard_normal(shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# FFN kernels
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t=st.sampled_from([1, 8, 128]),
+    d=st.sampled_from([64, 128]),
+    f_tiles=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_ffn_dense_matches_ref(t, d, f_tiles, seed):
+    rng = np.random.default_rng(seed)
+    f = 64 * f_tiles
+    x = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+    wg = jnp.asarray(rng.standard_normal((d, f)).astype(np.float32) * 0.05)
+    wu = jnp.asarray(rng.standard_normal((d, f)).astype(np.float32) * 0.05)
+    wd = jnp.asarray(rng.standard_normal((f, d)).astype(np.float32) * 0.05)
+    got = kernels.ffn_dense(x, wg, wu, wd, ftile=64)
+    want = ref.ffn_dense(x, wg, wu, wd)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    k_tiles=st.integers(min_value=1, max_value=7),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_ffn_sparse_matches_ref(k_tiles, seed):
+    rng = np.random.default_rng(seed)
+    t, d, f = 128, 128, 512
+    k = 64 * k_tiles
+    x = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+    wg = jnp.asarray(rng.standard_normal((d, f)).astype(np.float32) * 0.05)
+    wu = jnp.asarray(rng.standard_normal((d, f)).astype(np.float32) * 0.05)
+    wd = jnp.asarray(rng.standard_normal((f, d)).astype(np.float32) * 0.05)
+    idx = jnp.asarray(
+        np.sort(rng.permutation(f)[:k]).astype(np.int32))
+    got = kernels.ffn_sparse(x, wg, wu, wd, idx, ftile=64)
+    want = ref.ffn_sparse(x, wg, wu, wd, idx)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_equals_dense_with_zeroed_neurons():
+    """Invariant: sparse FFN over mask M == dense FFN with the complement
+    neurons' down-projection rows zeroed (paper eq. 15-18)."""
+    t, d, f, k = 32, 64, 256, 128
+    x = randn(t, d, scale=1.0)
+    wg, wu = randn(d, f, scale=0.05), randn(d, f, scale=0.05)
+    wd = randn(f, d, scale=0.05)
+    idx = jnp.asarray(np.sort(RNG.permutation(f)[:k]).astype(np.int32))
+    sparse = kernels.ffn_sparse(x, wg, wu, wd, idx, ftile=64)
+    mask = np.zeros((f, 1), np.float32)
+    mask[np.asarray(idx)] = 1.0
+    dense_masked = ref.ffn_dense(x, wg, wu, wd * jnp.asarray(mask))
+    np.testing.assert_allclose(sparse, dense_masked, rtol=1e-4, atol=1e-5)
+
+
+def test_neuron_scores_match_ref():
+    x = randn(128, 128, scale=1.0)
+    wg, wu = randn(128, 512, scale=0.05), randn(128, 512, scale=0.05)
+    got = kernels.ffn_neuron_scores(x, wg, wu, ftile=64)
+    want = ref.ffn_neuron_scores(x, wg, wu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Predictor + compensator kernels
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    r=st.sampled_from([16, 32, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_predictor_matches_ref(r, seed):
+    rng = np.random.default_rng(seed)
+    t, d, f = 128, 128, 512
+    x = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+    q = jnp.asarray(rng.standard_normal((d,)).astype(np.float32))
+    w1 = jnp.asarray(rng.standard_normal((d, r)).astype(np.float32) * 0.1)
+    w2 = jnp.asarray(rng.standard_normal((r, f)).astype(np.float32) * 0.1)
+    got = kernels.predictor_scores(x, q, w1, w2, ftile=64)
+    want = ref.predictor_scores(x, q, w1, w2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.sampled_from([1, 16, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_compensator_matches_ref(t, seed):
+    rng = np.random.default_rng(seed)
+    d, r = 128, 32
+    x = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+    w1 = jnp.asarray(rng.standard_normal((d, r)).astype(np.float32) * 0.1)
+    w2 = jnp.asarray(rng.standard_normal((r, d)).astype(np.float32) * 0.1)
+    got = kernels.compensator(x, w1, w2)
+    want = ref.compensator(x, w1, w2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_zero_w2_compensator_is_noop():
+    x = randn(16, 128, scale=1.0)
+    w1 = randn(128, 32)
+    w2 = jnp.zeros((32, 128))
+    got = kernels.compensator(x, w1, w2)
+    np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Attention kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.sampled_from([1, 128]),
+    s_tiles=st.integers(min_value=1, max_value=8),
+    nh=st.sampled_from([2, 4]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_block_attention_matches_ref(t, s_tiles, nh, seed):
+    rng = np.random.default_rng(seed)
+    s = 128 * s_tiles
+    nkv, dh = nh // 2, 32
+    pos = int(rng.integers(0, s - t + 1))
+    q = jnp.asarray(rng.standard_normal((t, nh, dh)).astype(np.float32))
+    k = np.zeros((s, nkv, dh), np.float32)
+    v = np.zeros((s, nkv, dh), np.float32)
+    k[: pos + t] = rng.standard_normal((pos + t, nkv, dh))
+    v[: pos + t] = rng.standard_normal((pos + t, nkv, dh))
+    mask = kernels.make_block_mask(pos, t, s)
+    got = kernels.block_attention(q, jnp.asarray(k), jnp.asarray(v), mask)
+    want = ref.block_attention(q, jnp.asarray(k), jnp.asarray(v), mask)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_mask_semantics():
+    """Row t attends exactly to keys [0, pos+t]."""
+    mask = np.asarray(kernels.make_block_mask(4, 3, 16))
+    for t in range(3):
+        attendable = (mask[t] == 0.0).nonzero()[0]
+        assert attendable.max() == 4 + t
+        assert (attendable == np.arange(4 + t + 1)).all()
+
+
+def test_attention_rows_are_convex_combinations():
+    """Output of attention lies in the convex hull of V rows: with all
+    V rows equal, the output equals that row regardless of scores."""
+    t, s, nh, nkv, dh = 8, 128, 4, 2, 16
+    q = randn(t, nh, dh, scale=1.0)
+    k = randn(s, nkv, dh, scale=1.0)
+    v = jnp.ones((s, nkv, dh))
+    mask = kernels.make_block_mask(s - t, t, s)
+    out = kernels.block_attention(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5)

@@ -1,0 +1,40 @@
+#![allow(dead_code)] // each bench uses a subset of these helpers
+
+//! Shared bench plumbing (criterion substitute — the offline vendored
+//! crate set has no criterion; util::stats::bench provides warmup + reps
+//! with mean/σ/percentile reporting).
+
+use std::rc::Rc;
+
+use fastforward::engine::Engine;
+use fastforward::manifest::Manifest;
+use fastforward::runtime::Runtime;
+use fastforward::tokenizer::Tokenizer;
+use fastforward::trace::WordBank;
+use fastforward::util::rng::Rng;
+use fastforward::weights::WeightStore;
+
+pub fn engine() -> Option<Engine> {
+    let dir = fastforward::test_artifacts_dir()?;
+    let m = Rc::new(Manifest::load(&dir).unwrap());
+    let w = Rc::new(WeightStore::load(&m).unwrap());
+    let rt = Rc::new(Runtime::new(m, w).unwrap());
+    Some(Engine::new(rt))
+}
+
+pub fn prompt_tokens(len_tokens: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    let bank = WordBank::new(&mut rng, 256);
+    let text = bank.filler(&mut rng, len_tokens);
+    let mut toks = Tokenizer::new(384).encode(&text);
+    toks.truncate(len_tokens);
+    while toks.len() < len_tokens {
+        toks.push(b' ' as i32);
+    }
+    toks
+}
+
+/// Standard bench header naming the paper artifact being reproduced.
+pub fn header(id: &str, what: &str) {
+    println!("\n=== {id}: {what} ===");
+}

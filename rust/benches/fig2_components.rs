@@ -1,0 +1,104 @@
+//! Paper Figure 2: per-component time of a transformer block across
+//! context lengths (attention vs FFN vs the rest).
+//!
+//! Measured with the split-path executables (layer_attn / ffn_dense) on
+//! the real artifacts, plus the cost model's FLOP shares for the
+//! LLaMA-8B shape the paper profiles.
+
+mod common;
+
+use fastforward::cost::CostModel;
+use fastforward::engine::SparsityConfig;
+use fastforward::runtime::Input;
+use fastforward::util::stats;
+
+fn main() {
+    common::header("Figure 2",
+                   "per-component block time across context lengths");
+    let Some(engine) = common::engine() else { return };
+    let m = engine.manifest().model.clone();
+    let rt = engine.rt.clone();
+    let (block, d) = (m.block, m.d_model);
+
+    println!("\n-- measured per-block split timing (layer 0, ff-mini) --");
+    println!("{:>8} {:>12} {:>12} {:>10}", "cache", "attn ms", "ffn ms",
+             "ffn share");
+    let x = vec![0.05f32; block * d];
+    for &s in &m.buckets {
+        let kc = vec![0f32; s * m.n_kv_heads * m.d_head];
+        let pos = [(s - block) as i32];
+        let attn = stats::bench(
+            &format!("fig2/layer_attn/s{s}"),
+            2,
+            5,
+            || {
+                rt.run(
+                    &format!("layer_attn_t{block}_s{s}"),
+                    0,
+                    &[
+                        ("x", Input::F32(&x, vec![block, d])),
+                        ("k_cache",
+                         Input::F32(&kc, vec![s, m.n_kv_heads, m.d_head])),
+                        ("v_cache",
+                         Input::F32(&kc, vec![s, m.n_kv_heads, m.d_head])),
+                        ("pos", Input::I32(&pos, vec![])),
+                    ],
+                )
+                .unwrap();
+            },
+        );
+        let ffn = stats::bench(&format!("fig2/ffn_dense/s{s}"), 2, 5, || {
+            rt.run(
+                &format!("ffn_dense_t{block}"),
+                0,
+                &[("h", Input::F32(&x, vec![block, d]))],
+            )
+            .unwrap();
+        });
+        println!(
+            "{s:>8} {:>12.3} {:>12.3} {:>9.1}%",
+            attn * 1e3,
+            ffn * 1e3,
+            100.0 * ffn / (attn + ffn)
+        );
+    }
+
+    // whole-prefill component split from the engine timing breakdown
+    println!("\n-- measured whole-prefill breakdown (dense) --");
+    println!("{:>8} {:>10} {:>10} {:>10}", "ctx", "embed ms", "layers ms",
+             "lm_head ms");
+    for ctx in [512usize, 1024, 2048, 4096] {
+        if ctx > m.max_ctx {
+            break;
+        }
+        let prompt = common::prompt_tokens(ctx, 3);
+        let _ = engine.prefill(&prompt, &SparsityConfig::dense()).unwrap();
+        let pre = engine.prefill(&prompt, &SparsityConfig::dense()).unwrap();
+        println!(
+            "{ctx:>8} {:>10.1} {:>10.1} {:>10.2}",
+            pre.timing.embed.as_secs_f64() * 1e3,
+            pre.timing.layers.as_secs_f64() * 1e3,
+            pre.timing.lm_head.as_secs_f64() * 1e3
+        );
+    }
+
+    println!("\n-- FLOP shares, LLaMA-3.1-8B shape (paper Fig. 2 axis) --");
+    println!("{:>8} {:>12} {:>12} {:>12} {:>10}", "ctx", "attn-proj%",
+             "attn-mix%", "ffn%", "crossover");
+    let m8 = CostModel::llama8b();
+    let xover = m8.attn_ffn_crossover();
+    for ctx in [1024usize, 2048, 4096, 8192, 16384, 32768, 65536] {
+        let c = m8.dense_prefill(ctx);
+        let t = c.total();
+        let proj: f64 = c.per_layer.iter().map(|l| l.attn_proj).sum();
+        let mix: f64 = c.per_layer.iter().map(|l| l.attn_mix).sum();
+        println!(
+            "{ctx:>8} {:>11.1}% {:>11.1}% {:>11.1}% {:>10}",
+            100.0 * proj / t,
+            100.0 * mix / t,
+            100.0 * c.ffn() / t,
+            if ctx >= xover { "attn>ffn" } else { "" }
+        );
+    }
+    println!("\nattention/FFN crossover: {xover} tokens (paper §2.3: ~28K for 8B)");
+}

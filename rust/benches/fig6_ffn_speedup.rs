@@ -1,0 +1,76 @@
+//! Paper Figure 6: FFN-module speedup at 50% sparsity (module-level,
+//! custom kernels). Measures the dense FFN executable vs the gathered
+//! sparse FFN executable (+ predictor overhead) per 128-token block on
+//! the real artifacts, sweeping every compiled K.
+
+mod common;
+
+use fastforward::runtime::Input;
+use fastforward::sparsity::masks::top_k_indices;
+use fastforward::util::stats;
+
+fn main() {
+    common::header("Figure 6",
+                   "FFN module speedup vs dense at each compiled K");
+    let Some(engine) = common::engine() else { return };
+    let m = engine.manifest().model.clone();
+    let k_grid = engine.manifest().k_grid.clone();
+    let rt = engine.rt.clone();
+    let (block, d, f) = (m.block, m.d_model, m.d_ffn);
+    let h = vec![0.07f32; block * d];
+
+    let dense = stats::bench("fig6/ffn_dense", 3, 10, || {
+        rt.run(
+            &format!("ffn_dense_t{block}"),
+            0,
+            &[("h", Input::F32(&h, vec![block, d]))],
+        )
+        .unwrap();
+    });
+
+    // predictor overhead measured separately (runs once per block)
+    let pred = stats::bench("fig6/predictor", 3, 10, || {
+        rt.run(
+            &format!("predictor_t{block}"),
+            0,
+            &[("h", Input::F32(&h, vec![block, d]))],
+        )
+        .unwrap();
+    });
+
+    println!(
+        "\n{:>6} {:>10} {:>12} {:>12} {:>10} {:>10}",
+        "K", "density", "sparse ms", "+pred ms", "speedup", "ideal"
+    );
+    for &k in &k_grid {
+        let scores: Vec<f32> = (0..f).map(|i| (i * 37 % 101) as f32).collect();
+        let idx = top_k_indices(&scores, k);
+        let sparse = stats::bench(&format!("fig6/ffn_sparse_k{k}"), 3, 10, || {
+            rt.run(
+                &format!("ffn_sparse_ext_k{k}_t{block}"),
+                0,
+                &[
+                    ("h", Input::F32(&h, vec![block, d])),
+                    ("idx", Input::I32(&idx, vec![idx.len()])),
+                ],
+            )
+            .unwrap();
+        });
+        let total = sparse + pred;
+        println!(
+            "{k:>6} {:>9.2} {:>12.3} {:>12.3} {:>9.2}x {:>9.2}x",
+            k as f64 / f as f64,
+            sparse * 1e3,
+            total * 1e3,
+            dense / total,
+            f as f64 / k as f64
+        );
+    }
+    println!(
+        "\ndense module: {:.3} ms | predictor overhead: {:.3} ms per block",
+        dense * 1e3,
+        pred * 1e3
+    );
+    println!("paper Fig. 6: module speedup approaches (but stays under) the\n\
+              ideal 1/density bound due to gather + predictor overheads");
+}

@@ -1,0 +1,269 @@
+//! Dynamic batcher / executor: continuous batching with chunked prefill.
+//!
+//! One executor thread owns the (non-Sync) engine and iterates:
+//!
+//! 1. admit new requests from the router (up to `max_active`),
+//! 2. schedule up to `prefill_block_budget` prefill *blocks* across
+//!    active requests (Sarathi-style chunked prefill — long prompts
+//!    don't monopolize the engine),
+//! 3. run one decode round for every request in the decode phase
+//!    (continuous batching semantics; execution is serialized on the
+//!    single PJRT CPU stream but scheduling interleaves fairly),
+//! 4. retire finished requests, releasing their KV pages.
+//!
+//! TTFT is recorded when a request's first decode logits are produced —
+//! matching the paper's definition.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::{argmax, Engine, PrefillSession};
+use crate::kvcache::{PageId, SeqKvCache};
+use crate::metrics::Metrics;
+use crate::router::{Request, Response, Router};
+use crate::tokenizer::{Tokenizer, EOS};
+
+/// Executor tuning knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Max concurrently active (admitted) requests.
+    pub max_active: usize,
+    /// Prefill blocks processed per scheduler iteration.
+    pub prefill_block_budget: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_active: 8,
+            prefill_block_budget: 4,
+        }
+    }
+}
+
+enum Phase {
+    Prefill(PrefillSession),
+    Decode {
+        cache: SeqKvCache,
+        logits: Vec<f32>,
+        pos: usize,
+        generated: Vec<i32>,
+    },
+    Finished,
+}
+
+struct Active {
+    req: Request,
+    phase: Phase,
+    pages: Vec<PageId>,
+    admitted: Instant,
+    ttft_ms: Option<f64>,
+    decode_ms_total: f64,
+}
+
+/// Runs the scheduling loop until the router closes.
+pub struct Batcher {
+    engine: Engine,
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    cfg: BatcherConfig,
+    tokenizer: Tokenizer,
+}
+
+impl Batcher {
+    pub fn new(engine: Engine, router: Arc<Router>,
+               cfg: BatcherConfig) -> Self {
+        let vocab = engine.manifest().model.vocab;
+        Batcher {
+            metrics: router.metrics.clone(),
+            engine,
+            router,
+            cfg,
+            tokenizer: Tokenizer::new(vocab),
+        }
+    }
+
+    /// Main loop. Returns when the router is closed and all work drained.
+    pub fn run(mut self) -> Result<()> {
+        let mut active: Vec<Active> = Vec::new();
+        loop {
+            // 1. admit
+            let slots = self.cfg.max_active.saturating_sub(active.len());
+            if slots > 0 {
+                for req in self.router.pop_up_to(slots) {
+                    match self.admit(req) {
+                        Ok(a) => active.push(a),
+                        Err(e) => eprintln!("[batcher] admit failed: {e}"),
+                    }
+                }
+            }
+            if active.is_empty() {
+                // park on the router until work (or shutdown) arrives
+                match self.router.pop_blocking() {
+                    Some(req) => match self.admit(req) {
+                        Ok(a) => active.push(a),
+                        Err(e) => eprintln!("[batcher] admit failed: {e}"),
+                    },
+                    None => return Ok(()), // closed + drained
+                }
+            }
+
+            // 2. chunked prefill round-robin
+            let mut budget = self.cfg.prefill_block_budget;
+            'outer: loop {
+                let mut progressed = false;
+                for a in active.iter_mut() {
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    if let Err(e) = self.step_prefill(a, &mut budget,
+                                                      &mut progressed) {
+                        self.fail(a, e);
+                    }
+                }
+                if !progressed {
+                    break;
+                }
+            }
+
+            // 3. one decode round each
+            for a in active.iter_mut() {
+                if let Err(e) = self.step_decode(a) {
+                    self.fail(a, e);
+                }
+            }
+
+            // 4. retire
+            for a in active.iter_mut() {
+                if matches!(a.phase, Phase::Finished) {
+                    self.retire(a);
+                }
+            }
+            active.retain(|a| !matches!(a.phase, Phase::Finished));
+        }
+    }
+
+    fn admit(&mut self, req: Request) -> Result<Active> {
+        let total = req.prompt.len() + req.max_tokens;
+        let pages = {
+            let mut pool = self.router.kv_pool.lock().unwrap();
+            let n = pool.pages_for(total);
+            pool.allocate(n)?
+        };
+        let session = PrefillSession::new(
+            self.engine.clone(),
+            req.prompt.clone(),
+            req.cfg.clone(),
+        )?;
+        Ok(Active {
+            req,
+            phase: Phase::Prefill(session),
+            pages,
+            admitted: Instant::now(),
+            ttft_ms: None,
+            decode_ms_total: 0.0,
+        })
+    }
+
+    fn step_prefill(&mut self, a: &mut Active, budget: &mut usize,
+                    progressed: &mut bool) -> Result<()> {
+        let Phase::Prefill(session) = &mut a.phase else {
+            return Ok(());
+        };
+        if *budget == 0 {
+            return Ok(());
+        }
+        let consumed = session.step()?;
+        self.metrics.record_block(consumed == self.engine.block());
+        *budget -= 1;
+        *progressed = true;
+        if session.done() {
+            let Phase::Prefill(session) =
+                std::mem::replace(&mut a.phase, Phase::Finished)
+            else {
+                unreachable!()
+            };
+            let pre = session.finish()?;
+            let ttft = a.admitted.elapsed().as_secs_f64() * 1e3;
+            a.ttft_ms = Some(ttft);
+            self.metrics.record_ttft(ttft);
+            a.phase = Phase::Decode {
+                pos: a.req.prompt.len(),
+                logits: pre.last_logits,
+                cache: pre.cache,
+                generated: Vec::new(),
+            };
+        }
+        Ok(())
+    }
+
+    fn step_decode(&mut self, a: &mut Active) -> Result<()> {
+        let Phase::Decode { cache, logits, pos, generated } = &mut a.phase
+        else {
+            return Ok(());
+        };
+        let tok = argmax(logits) as i32;
+        if tok == EOS || generated.len() >= a.req.max_tokens {
+            self.finish_ok(a);
+            return Ok(());
+        }
+        generated.push(tok);
+        let t0 = Instant::now();
+        let new_logits =
+            self.engine.decode_step(tok, *pos, cache, &a.req.cfg)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        a.decode_ms_total += ms;
+        self.metrics.record_tpot(ms);
+        *logits = new_logits;
+        *pos += 1;
+        let hit_limit = generated.len() >= a.req.max_tokens;
+        if hit_limit {
+            self.finish_ok(a);
+        }
+        Ok(())
+    }
+
+    fn finish_ok(&mut self, a: &mut Active) {
+        let Phase::Decode { generated, .. } =
+            std::mem::replace(&mut a.phase, Phase::Finished)
+        else {
+            return;
+        };
+        let e2e = a.admitted.elapsed().as_secs_f64() * 1e3;
+        let n = generated.len();
+        self.metrics
+            .record_request(a.req.prompt.len(), n, e2e);
+        let _ = a.req.respond.send(Response {
+            id: a.req.id,
+            text: self.tokenizer.decode(&generated),
+            tokens: n,
+            ttft_ms: a.ttft_ms.unwrap_or(e2e),
+            tpot_ms: if n > 0 { a.decode_ms_total / n as f64 } else { 0.0 },
+            e2e_ms: e2e,
+            error: None,
+        });
+    }
+
+    fn fail(&mut self, a: &mut Active, err: anyhow::Error) {
+        let _ = a.req.respond.send(Response {
+            id: a.req.id,
+            text: String::new(),
+            tokens: 0,
+            ttft_ms: 0.0,
+            tpot_ms: 0.0,
+            e2e_ms: a.admitted.elapsed().as_secs_f64() * 1e3,
+            error: Some(err.to_string()),
+        });
+        a.phase = Phase::Finished;
+    }
+
+    fn retire(&mut self, a: &mut Active) {
+        let mut pool = self.router.kv_pool.lock().unwrap();
+        if let Err(e) = pool.release_all(&a.pages) {
+            eprintln!("[batcher] page release: {e}");
+        }
+        a.pages.clear();
+    }
+}

@@ -1,0 +1,42 @@
+// Dev tool: compile an AOT HLO artifact on the PJRT CPU client and run it
+// with fill-valued inputs of the given shapes, printing output shapes.
+// Usage: hlo_smoke <file.hlo.txt> <specs: f128x128, i0 (scalar), i64 ...>
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let mut args = std::env::args().skip(1);
+    let path = args.next().expect("hlo path");
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(&path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let t0 = std::time::Instant::now();
+    let exe = client.compile(&comp)?;
+    println!("compiled in {:?}", t0.elapsed());
+
+    let mut lits = Vec::new();
+    for spec in args {
+        let (ty, dims) = spec.split_at(1);
+        let dims: Vec<i64> = if dims.is_empty() || dims == "0" {
+            vec![]
+        } else {
+            dims.split('x').map(|d| d.parse().unwrap()).collect()
+        };
+        let n: usize = dims.iter().product::<i64>().max(1) as usize;
+        let lit = match (ty, dims.is_empty()) {
+            ("f", true) => xla::Literal::from(0.1f32),
+            ("f", false) => xla::Literal::vec1(&vec![0.1f32; n]).reshape(&dims)?,
+            ("i", true) => xla::Literal::from(0i32),
+            ("i", false) => xla::Literal::vec1(&vec![0i32; n]).reshape(&dims)?,
+            _ => panic!("bad spec {spec}"),
+        };
+        lits.push(lit);
+    }
+    let t0 = std::time::Instant::now();
+    let mut res = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+    println!("executed in {:?}", t0.elapsed());
+    let parts = res.decompose_tuple()?;
+    for (i, p) in parts.iter().enumerate() {
+        println!("out[{i}]: {:?}", p.shape()?);
+    }
+    Ok(())
+}

@@ -1,0 +1,360 @@
+//! Compute-bound FLOP cost model for blockwise prefill (paper §2.3).
+//!
+//! The paper's Figure 7 "compute-bound speedup" is FLOPs-derived; this
+//! module reproduces it analytically for any model shape, sparsity
+//! schedule and context length, and also powers Figure 1/2's component
+//! breakdown. A roofline constant (FLOPs/s) calibrated from a measured
+//! matmul turns FLOPs into projected wall-clock.
+
+pub mod tpu;
+
+use crate::manifest::ModelCfg;
+
+/// FLOPs for one transformer layer processing a block of `t` tokens with
+/// a KV cache of `s_ctx` attendable positions, decomposed by component.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LayerFlops {
+    pub attn_proj: f64,  // QKVO projections
+    pub attn_mix: f64,   // QK^T and AV (token mixing)
+    pub ffn: f64,        // gated FFN at the layer's density
+    pub predictor: f64,  // expert predictor overhead
+    pub comp: f64,       // error compensator overhead
+}
+
+impl LayerFlops {
+    pub fn total(&self) -> f64 {
+        self.attn_proj + self.attn_mix + self.ffn + self.predictor + self.comp
+    }
+}
+
+/// Per-layer FFN width actually computed (K neurons; d_ffn when dense).
+#[derive(Debug, Clone)]
+pub struct BlockCost {
+    pub per_layer: Vec<LayerFlops>,
+}
+
+impl BlockCost {
+    pub fn total(&self) -> f64 {
+        self.per_layer.iter().map(|l| l.total()).sum()
+    }
+
+    pub fn attn(&self) -> f64 {
+        self.per_layer
+            .iter()
+            .map(|l| l.attn_proj + l.attn_mix)
+            .sum()
+    }
+
+    pub fn ffn(&self) -> f64 {
+        self.per_layer.iter().map(|l| l.ffn).sum()
+    }
+
+    pub fn overhead(&self) -> f64 {
+        self.per_layer.iter().map(|l| l.predictor + l.comp).sum()
+    }
+}
+
+pub struct CostModel {
+    pub d_model: f64,
+    pub d_ffn: f64,
+    pub n_layers: usize,
+    pub n_heads: f64,
+    pub n_kv_heads: f64,
+    pub d_head: f64,
+    pub block: usize,
+    pub pred_r: f64,
+    pub comp_r: f64,
+}
+
+impl CostModel {
+    pub fn from_cfg(cfg: &ModelCfg) -> Self {
+        CostModel {
+            d_model: cfg.d_model as f64,
+            d_ffn: cfg.d_ffn as f64,
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads as f64,
+            n_kv_heads: cfg.n_kv_heads as f64,
+            d_head: cfg.d_head as f64,
+            block: cfg.block,
+            // overhead ranks per the paper: d/16 and d/8
+            pred_r: (cfg.d_model / 16) as f64,
+            comp_r: (cfg.d_model / 8) as f64,
+        }
+    }
+
+    /// LLaMA-3.1-8B shape — used to reproduce the paper's headline
+    /// figures at the scale the paper reports.
+    pub fn llama8b() -> Self {
+        CostModel {
+            d_model: 4096.0,
+            d_ffn: 14336.0,
+            n_layers: 32,
+            n_heads: 32.0,
+            n_kv_heads: 8.0,
+            d_head: 128.0,
+            block: 128,
+            pred_r: 256.0,
+            comp_r: 512.0,
+        }
+    }
+
+    pub fn llama1b() -> Self {
+        CostModel {
+            d_model: 2048.0,
+            d_ffn: 8192.0,
+            n_layers: 16,
+            n_heads: 32.0,
+            n_kv_heads: 8.0,
+            d_head: 64.0,
+            block: 128,
+            pred_r: 128.0,
+            comp_r: 256.0,
+        }
+    }
+
+    pub fn llama3b() -> Self {
+        CostModel {
+            d_model: 3072.0,
+            d_ffn: 8192.0,
+            n_layers: 28,
+            n_heads: 24.0,
+            n_kv_heads: 8.0,
+            d_head: 128.0,
+            block: 128,
+            pred_r: 256.0,
+            comp_r: 384.0,
+        }
+    }
+
+    /// One layer's FLOPs for a `t`-token block attending to `s_ctx`
+    /// positions, computing `k_ffn` of the d_ffn neurons (dense:
+    /// k_ffn = d_ffn, no predictor/compensator overhead).
+    pub fn layer_flops(&self, t: usize, s_ctx: usize, k_ffn: f64,
+                       sparse_overheads: bool) -> LayerFlops {
+        let t = t as f64;
+        let s = s_ctx as f64;
+        let d = self.d_model;
+        let dh = self.d_head;
+        let q_dim = self.n_heads * dh;
+        let kv_dim = self.n_kv_heads * dh;
+        // 2*m*n*k per matmul
+        let attn_proj =
+            2.0 * t * d * q_dim            // Q
+            + 2.0 * 2.0 * t * d * kv_dim   // K, V
+            + 2.0 * t * q_dim * d;         // O
+        let attn_mix = 2.0 * 2.0 * t * s * q_dim; // QK^T + AV over nh heads
+        let ffn = 3.0 * 2.0 * t * d * k_ffn; // gate, up, down
+        let (predictor, comp) = if sparse_overheads {
+            (
+                2.0 * t * d                       // attention pool
+                    + 2.0 * d * self.pred_r       // MLP-1 (one vector)
+                    + 2.0 * self.pred_r * self.d_ffn, // MLP-2
+                2.0 * 2.0 * t * d * self.comp_r,  // comp MLP both layers
+            )
+        } else {
+            (0.0, 0.0)
+        };
+        LayerFlops { attn_proj, attn_mix, ffn, predictor, comp }
+    }
+
+    /// FLOPs of a whole blockwise prefill of `ctx` tokens.
+    ///
+    /// `layer_k[l]` = FFN width for layer l on *sparse* blocks; the first
+    /// and last block run dense when `dense_first`/`dense_last` (paper
+    /// §3.4). Dense prefill = all layer_k = d_ffn, overheads off.
+    pub fn prefill_flops(&self, ctx: usize, layer_k: &[f64],
+                         sparse_overheads: bool, dense_first: bool,
+                         dense_last: bool) -> BlockCost {
+        assert_eq!(layer_k.len(), self.n_layers);
+        let n_blocks = ctx.div_ceil(self.block);
+        let mut per_layer = vec![LayerFlops::default(); self.n_layers];
+        for b in 0..n_blocks {
+            let t = self.block.min(ctx - b * self.block);
+            let s_ctx = b * self.block + t;
+            let dense_block = (dense_first && b == 0)
+                || (dense_last && b == n_blocks - 1);
+            for (l, acc) in per_layer.iter_mut().enumerate() {
+                let (k, ovh) = if dense_block {
+                    (self.d_ffn, false)
+                } else {
+                    (layer_k[l], sparse_overheads)
+                };
+                let lf = self.layer_flops(t, s_ctx, k, ovh);
+                acc.attn_proj += lf.attn_proj;
+                acc.attn_mix += lf.attn_mix;
+                acc.ffn += lf.ffn;
+                acc.predictor += lf.predictor;
+                acc.comp += lf.comp;
+            }
+        }
+        BlockCost { per_layer }
+    }
+
+    /// Dense-prefill FLOPs (baseline).
+    pub fn dense_prefill(&self, ctx: usize) -> BlockCost {
+        let ks = vec![self.d_ffn; self.n_layers];
+        self.prefill_flops(ctx, &ks, false, false, false)
+    }
+
+    /// Compute-bound speedup of a sparse configuration vs dense
+    /// (paper Fig. 7): ratio of total FLOPs.
+    pub fn speedup(&self, ctx: usize, layer_density: &[f64],
+                   dense_first: bool, dense_last: bool) -> f64 {
+        let ks: Vec<f64> =
+            layer_density.iter().map(|&b| b * self.d_ffn).collect();
+        let dense = self.dense_prefill(ctx).total();
+        let sparse = self
+            .prefill_flops(ctx, &ks, true, dense_first, dense_last)
+            .total();
+        dense / sparse
+    }
+
+    /// Context length at which attention FLOPs overtake FFN FLOPs in a
+    /// dense prefill (paper §2.3: ~28K tokens for the 8B model).
+    pub fn attn_ffn_crossover(&self) -> usize {
+        let mut lo = self.block;
+        let mut hi = 1 << 22;
+        while lo < hi {
+            let mid = (lo + hi) / 2 / self.block * self.block;
+            let mid = mid.max(lo + self.block);
+            let c = self.dense_prefill(mid);
+            if c.attn() >= c.ffn() {
+                hi = mid - self.block;
+            } else {
+                lo = mid;
+            }
+            if hi <= lo + self.block {
+                break;
+            }
+        }
+        lo
+    }
+}
+
+/// Roofline translation: FLOPs → seconds at a calibrated throughput.
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    pub flops_per_sec: f64,
+}
+
+impl Roofline {
+    pub fn project(&self, flops: f64) -> f64 {
+        flops / self.flops_per_sec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn ffn_dominates_short_context_8b() {
+        let m = CostModel::llama8b();
+        let c = m.dense_prefill(2048);
+        assert!(
+            c.ffn() > c.attn(),
+            "FFN should dominate at 2K: ffn={:.3e} attn={:.3e}",
+            c.ffn(),
+            c.attn()
+        );
+    }
+
+    #[test]
+    fn crossover_near_paper_value_8b() {
+        // paper §1: FFN dominates until ~28K tokens on Llama-3.1-8B
+        let m = CostModel::llama8b();
+        let x = m.attn_ffn_crossover();
+        assert!(
+            (16_000..48_000).contains(&x),
+            "crossover {x} should be in the ~28K regime"
+        );
+    }
+
+    #[test]
+    fn crossover_smaller_model_is_earlier() {
+        let x1 = CostModel::llama1b().attn_ffn_crossover();
+        let x8 = CostModel::llama8b().attn_ffn_crossover();
+        assert!(x1 < x8, "1B crossover {x1} should precede 8B {x8}");
+    }
+
+    #[test]
+    fn speedup_peaks_mid_context() {
+        // paper Fig. 7: modest at short ctx (dense first/last blocks),
+        // peak ~2-8K, decaying toward 1 as attention dominates
+        let m = CostModel::llama8b();
+        let dens = vec![0.5; m.n_layers];
+        let s_short = m.speedup(256, &dens, true, true);
+        let s_mid = m.speedup(4096, &dens, true, true);
+        let s_long = m.speedup(262_144, &dens, true, true);
+        assert!(s_mid > s_short, "mid {s_mid} > short {s_short}");
+        assert!(s_mid > s_long, "mid {s_mid} > long {s_long}");
+        assert!(s_mid > 1.2 && s_mid < 2.0, "mid speedup {s_mid}");
+        assert!(s_long < 1.15, "long-ctx speedup decays: {s_long}");
+    }
+
+    #[test]
+    fn speedup_50pct_in_paper_band() {
+        // paper: up to 1.45x at 50% sparsity for mid contexts
+        let m = CostModel::llama8b();
+        let dens = vec![0.5; m.n_layers];
+        let mut best = 0.0f64;
+        for ctx in [1024, 2048, 4096, 8192] {
+            best = best.max(m.speedup(ctx, &dens, true, true));
+        }
+        assert!(
+            (1.25..1.60).contains(&best),
+            "peak speedup {best} should be ~1.45x"
+        );
+    }
+
+    #[test]
+    fn prop_speedup_bounds() {
+        check("speedup-bounds", 100, |r| {
+            let m = CostModel::llama1b();
+            let dens: Vec<f64> =
+                (0..m.n_layers).map(|_| 0.3 + r.f64() * 0.7).collect();
+            let ctx = 128 * r.range(1, 128);
+            let s = m.speedup(ctx, &dens, true, true);
+            crate::prop_assert!(s >= 0.95, "speedup {s} collapsed");
+            crate::prop_assert!(s < 3.4, "speedup {s} impossible");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_denser_is_slower() {
+        check("denser-slower", 60, |r| {
+            let m = CostModel::llama3b();
+            let ctx = 128 * r.range(4, 64);
+            let d1 = 0.3 + r.f64() * 0.3;
+            let d2 = d1 + 0.2;
+            let s1 = m.speedup(ctx, &vec![d1; m.n_layers], true, true);
+            let s2 = m.speedup(ctx, &vec![d2; m.n_layers], true, true);
+            crate::prop_assert!(
+                s1 >= s2 - 1e-9,
+                "sparser should speed up more: {s1} vs {s2}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dense_blocks_reduce_speedup_at_short_ctx() {
+        let m = CostModel::llama8b();
+        let dens = vec![0.5; m.n_layers];
+        let with = m.speedup(512, &dens, true, true);
+        let without = m.speedup(512, &dens, false, false);
+        assert!(without > with);
+    }
+
+    #[test]
+    fn overheads_are_small() {
+        let m = CostModel::llama8b();
+        let ks = vec![m.d_ffn * 0.5; m.n_layers];
+        let c = m.prefill_flops(4096, &ks, true, true, true);
+        assert!(c.overhead() < 0.05 * c.total(),
+                "predictor+comp overhead should be <5%: {:.3}%",
+                100.0 * c.overhead() / c.total());
+    }
+}

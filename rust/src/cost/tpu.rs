@@ -1,0 +1,171 @@
+//! Real-TPU performance estimation for the L1 Pallas kernels
+//! (DESIGN.md §8): interpret-mode CPU timing is NOT a TPU proxy, so TPU
+//! viability is argued structurally — per-kernel VMEM footprint against
+//! the 16 MiB budget, MXU utilization from tile shapes, and arithmetic
+//! intensity against the HBM roofline.
+
+/// TPU-v4-ish machine constants (per core).
+pub const VMEM_BYTES: usize = 16 * 1024 * 1024;
+pub const MXU_DIM: usize = 128;
+pub const PEAK_BF16_FLOPS: f64 = 137.5e12; // TPU v4 per-chip dense peak
+pub const HBM_BW: f64 = 1.2e12; // bytes/s
+
+/// One kernel grid-step's VMEM + compute profile.
+#[derive(Debug, Clone)]
+pub struct KernelProfile {
+    pub name: String,
+    pub vmem_bytes: usize,
+    pub flops_per_step: f64,
+    pub hbm_bytes_per_step: f64,
+    /// Fraction of MXU lanes busy given the tile shapes (dims / 128,
+    /// capped at 1, multiplied across both systolic dimensions).
+    pub mxu_utilization: f64,
+}
+
+impl KernelProfile {
+    pub fn fits_vmem(&self) -> bool {
+        self.vmem_bytes <= VMEM_BYTES
+    }
+
+    /// Arithmetic intensity (FLOP/byte) and roofline-limited TFLOP/s.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.flops_per_step / self.hbm_bytes_per_step.max(1.0)
+    }
+
+    pub fn roofline_tflops(&self) -> f64 {
+        let compute = PEAK_BF16_FLOPS * self.mxu_utilization;
+        let memory = HBM_BW * self.arithmetic_intensity();
+        compute.min(memory) / 1e12
+    }
+
+    /// Achievable fraction of the MXU-degraded peak.
+    pub fn efficiency_ratio(&self) -> f64 {
+        let peak = PEAK_BF16_FLOPS * self.mxu_utilization;
+        (self.roofline_tflops() * 1e12) / peak
+    }
+}
+
+fn util(dim: usize) -> f64 {
+    (dim as f64 / MXU_DIM as f64).min(1.0)
+}
+
+/// FFN kernel grid step (python/compile/kernels/ffn.py): an [T, d] block
+/// against a [d, ftile]+[d, ftile]+[ftile, d] weight slab, f32 staging.
+pub fn ffn_step(t: usize, d: usize, ftile: usize) -> KernelProfile {
+    let el = 4; // f32 in this build; bf16 halves it on real TPU
+    let vmem = el * (t * d            // x tile
+        + 2 * d * ftile               // gate + up slabs
+        + ftile * d                   // down slab
+        + t * ftile                   // h intermediate
+        + t * d); // accumulator
+    let flops = 2.0 * (t * d * ftile) as f64 * 3.0; // three matmuls
+    let hbm = el as f64 * (3 * d * ftile) as f64;   // weight slabs stream
+    KernelProfile {
+        name: format!("ffn t{t} d{d} ftile{ftile}"),
+        vmem_bytes: vmem,
+        flops_per_step: flops,
+        hbm_bytes_per_step: hbm,
+        mxu_utilization: util(t) * util(d.min(ftile)),
+    }
+}
+
+/// Flash block-attention grid step (kernels/attention.py): [T, dh]
+/// queries for one head against a [STILE, dh] KV tile.
+pub fn attn_step(t: usize, dh: usize, stile: usize) -> KernelProfile {
+    let el = 4;
+    let vmem = el * (t * dh          // q
+        + 2 * stile * dh             // k + v tiles
+        + t * stile                  // scores/probs
+        + t * dh                     // acc
+        + 2 * t); // m, l scratch
+    let flops = 2.0 * (t * stile * dh) as f64 * 2.0; // qk^T + pv
+    let hbm = el as f64 * (2 * stile * dh) as f64;
+    KernelProfile {
+        name: format!("attn t{t} dh{dh} stile{stile}"),
+        vmem_bytes: vmem,
+        flops_per_step: flops,
+        hbm_bytes_per_step: hbm,
+        mxu_utilization: util(t) * util(dh),
+    }
+}
+
+/// Predictor grid step (kernels/predictor.py).
+pub fn predictor_step(t: usize, d: usize, r: usize,
+                      ftile: usize) -> KernelProfile {
+    let el = 4;
+    let vmem = el * (t * d + d + d * r + r * ftile + ftile + r);
+    let flops = 2.0 * ((t * d) + (d * r) + (r * ftile)) as f64;
+    let hbm = el as f64 * (d * r + r * ftile) as f64;
+    KernelProfile {
+        name: format!("predictor t{t} d{d} r{r}"),
+        vmem_bytes: vmem,
+        flops_per_step: flops,
+        hbm_bytes_per_step: hbm,
+        mxu_utilization: util(1) * util(r), // rank-r GEMV-ish: low, but tiny
+    }
+}
+
+/// The full per-kernel report for a model shape (printed by
+/// `fastforward tpu-estimate` and recorded in EXPERIMENTS.md §Perf).
+pub fn report(d: usize, d_ffn: usize, dh: usize, pred_r: usize,
+              ftile: usize) -> Vec<KernelProfile> {
+    vec![
+        ffn_step(128, d, ftile),
+        ffn_step(128, d, 128),          // MXU-native tile for comparison
+        attn_step(128, dh, 128),
+        predictor_step(128, d, pred_r, ftile.min(d_ffn)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kernels_fit_vmem_at_paper_scale() {
+        // Llama-8B shape: d=4096, ftile=128 — the slab schedule must fit
+        for p in report(4096, 14336, 128, 256, 128) {
+            assert!(
+                p.fits_vmem(),
+                "{} exceeds VMEM: {} MiB",
+                p.name,
+                p.vmem_bytes / (1024 * 1024)
+            );
+        }
+    }
+
+    #[test]
+    fn ffn_kernel_intensity_is_t_over_2() {
+        // Weight slabs stream once per block: intensity = T/2 FLOP/byte
+        // in f32 (64 at T=128) — just under the v4 knee (~115), so the
+        // f32 build is HBM-bound at ~0.56 of MXU peak; bf16 staging (the
+        // real-TPU configuration) doubles intensity to 128 and crosses
+        // into compute-bound. The estimate must reflect both honestly.
+        let p = ffn_step(128, 4096, 128);
+        assert!((p.arithmetic_intensity() - 64.0).abs() < 1e-9);
+        assert!(p.mxu_utilization >= 0.99);
+        let eff_f32 = p.efficiency_ratio();
+        assert!((0.4..0.7).contains(&eff_f32), "eff {eff_f32}");
+        // bf16: same FLOPs, half the bytes
+        let mut bf16 = p.clone();
+        bf16.hbm_bytes_per_step /= 2.0;
+        assert!(bf16.efficiency_ratio() > 0.9,
+                "bf16 eff {}", bf16.efficiency_ratio());
+    }
+
+    #[test]
+    fn small_model_tiles_underuse_mxu() {
+        // the ff-mini-128 build (ftile=64) trades MXU width for K
+        // granularity — the report must expose that honestly
+        let small = ffn_step(128, 128, 64);
+        let native = ffn_step(128, 128, 128);
+        assert!(small.mxu_utilization < native.mxu_utilization);
+    }
+
+    #[test]
+    fn attention_tile_fits_and_streams() {
+        let p = attn_step(128, 128, 128);
+        assert!(p.fits_vmem());
+        assert!(p.vmem_bytes < 1024 * 1024, "attn tile should be small");
+    }
+}

@@ -1,0 +1,92 @@
+//! Generation + teacher-forced scoring on top of the block engine.
+
+use anyhow::Result;
+
+use super::{argmax, log_softmax, Engine, PrefillTiming, SparsityConfig};
+use crate::tokenizer::EOS;
+
+/// Greedy generation outcome.
+#[derive(Debug, Clone)]
+pub struct GenerateResult {
+    pub tokens: Vec<i32>,
+    pub text: String,
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+    pub prefill: PrefillTiming,
+}
+
+/// Teacher-forced continuation scoring outcome.
+#[derive(Debug, Clone)]
+pub struct ScoreResult {
+    /// Mean per-token log-probability of the reference continuation.
+    pub mean_logprob: f64,
+    /// exp(mean_logprob) ∈ (0, 1]: per-token probability score.
+    pub likelihood: f64,
+    pub n_tokens: usize,
+    pub prefill: PrefillTiming,
+}
+
+impl Engine {
+    /// Greedy-decode up to `max_tokens` after prefilling `prompt`.
+    pub fn generate(&self, prompt: &[i32], max_tokens: usize,
+                    cfg: &SparsityConfig) -> Result<GenerateResult> {
+        let t0 = std::time::Instant::now();
+        let mut pre = self.prefill(prompt, cfg)?;
+        let ttft_ms = t0.elapsed().as_secs_f64() * 1e3; // first logits ready
+        let mut pos = prompt.len();
+        let mut logits = pre.last_logits.clone();
+        let mut out = Vec::new();
+        let t1 = std::time::Instant::now();
+        for _ in 0..max_tokens {
+            let tok = argmax(&logits) as i32;
+            if tok == EOS {
+                break;
+            }
+            out.push(tok);
+            logits = self.decode_step(tok, pos, &mut pre.cache, cfg)?;
+            pos += 1;
+        }
+        let tpot_ms = if out.is_empty() {
+            0.0
+        } else {
+            t1.elapsed().as_secs_f64() * 1e3 / out.len() as f64
+        };
+        let tok = crate::tokenizer::Tokenizer::new(
+            self.manifest().model.vocab,
+        );
+        Ok(GenerateResult {
+            text: tok.decode(&out),
+            tokens: out,
+            ttft_ms,
+            tpot_ms,
+            prefill: pre.timing,
+        })
+    }
+
+    /// Teacher-forced log-likelihood of `answer` given `prompt` — the
+    /// primary longbench-sim metric (smooth in sparsity-induced error;
+    /// see trace::longbench).
+    pub fn score_continuation(&self, prompt: &[i32], answer: &[i32],
+                              cfg: &SparsityConfig) -> Result<ScoreResult> {
+        anyhow::ensure!(!answer.is_empty(), "empty answer");
+        let mut pre = self.prefill(prompt, cfg)?;
+        let mut pos = prompt.len();
+        let mut logits = pre.last_logits.clone();
+        let mut total_lp = 0.0f64;
+        for (i, &tok) in answer.iter().enumerate() {
+            let lp = log_softmax(&logits);
+            total_lp += lp[tok as usize] as f64;
+            if i + 1 < answer.len() {
+                logits = self.decode_step(tok, pos, &mut pre.cache, cfg)?;
+                pos += 1;
+            }
+        }
+        let mean = total_lp / answer.len() as f64;
+        Ok(ScoreResult {
+            mean_logprob: mean,
+            likelihood: mean.exp(),
+            n_tokens: answer.len(),
+            prefill: pre.timing,
+        })
+    }
+}

@@ -1,0 +1,472 @@
+//! Block-wise prefill + decode engine: the FastForward fast path.
+//!
+//! Prompts are processed in 128-token blocks (paper §3.1). Per block and
+//! per layer the engine dispatches one of the AOT executables:
+//!
+//! * dense blocks (first/last, or density-1 layers) → `layer_dense_*`
+//! * sparse blocks, trained predictor + compensator → the fused
+//!   `layer_sparse_k{K}_*` (predictor → top-K → gathered FFN → comp, all
+//!   inside one executable — one dispatch per layer)
+//! * ablation variants (oracle / first-block-static / no-compensator) →
+//!   the split pipeline `layer_attn` → scores → host top-K →
+//!   `ffn_sparse_ext_k{K}`.
+//!
+//! The ragged prompt tail (len % 128) runs through T=1 decode-shaped
+//! executables, which keeps numerics exact without padding the KV cache
+//! with garbage positions.
+
+mod generate;
+mod session;
+
+pub use generate::{GenerateResult, ScoreResult};
+pub use session::PrefillSession;
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::kvcache::SeqKvCache;
+use crate::manifest::Manifest;
+use crate::runtime::{Input, Runtime};
+use crate::sparsity::masks::{top_k_indices, ExpertSource};
+use crate::sparsity::schedule::{layerwise_schedule, quantize_densities};
+
+/// Full sparsity configuration for a request (paper §3 + ablations).
+#[derive(Debug, Clone)]
+pub struct SparsityConfig {
+    /// None = dense baseline; Some(s) = target sparsity (0.3/0.4/0.5).
+    pub sparsity: Option<f64>,
+    /// Layerwise schedule (Algorithm 1) vs uniform allocation (Tab. 4).
+    pub layerwise: bool,
+    /// Keep the first block dense (attention sinks, §3.4 / Tab. 5).
+    pub dense_first: bool,
+    /// Keep the last block dense (QA answer locality, §3.4 / Tab. 5).
+    pub dense_last: bool,
+    /// Apply the error compensation network (§3.3 / Tab. 6).
+    pub compensator: bool,
+    /// Expert index source (Tab. 7).
+    pub source: ExpertSource,
+    /// Apply FFN sparsity during decode as well (Tab. 3).
+    pub sparse_decode: bool,
+}
+
+impl SparsityConfig {
+    pub fn dense() -> Self {
+        SparsityConfig {
+            sparsity: None,
+            layerwise: false,
+            dense_first: false,
+            dense_last: false,
+            compensator: false,
+            source: ExpertSource::Trained,
+            sparse_decode: false,
+        }
+    }
+
+    /// The paper's full method at a given sparsity.
+    pub fn fastforward(sparsity: f64) -> Self {
+        SparsityConfig {
+            sparsity: Some(sparsity),
+            layerwise: true,
+            dense_first: true,
+            dense_last: true,
+            compensator: true,
+            source: ExpertSource::Trained,
+            sparse_decode: false,
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        self.sparsity.is_none()
+    }
+}
+
+/// Timing breakdown of one prefill (drives Fig. 1 / Fig. 2).
+#[derive(Debug, Clone, Default)]
+pub struct PrefillTiming {
+    pub total: Duration,
+    pub embed: Duration,
+    pub layers: Duration,
+    pub lm_head: Duration,
+    pub blocks: usize,
+    pub dense_blocks: usize,
+    pub tail_tokens: usize,
+}
+
+/// Result of prefilling one prompt.
+pub struct PrefillResult {
+    pub cache: SeqKvCache,
+    /// Hidden state of the final prompt position, [d_model].
+    pub last_hidden: Vec<f32>,
+    /// Logits at the final prompt position, [vocab].
+    pub last_logits: Vec<f32>,
+    pub timing: PrefillTiming,
+}
+
+#[derive(Clone)]
+pub struct Engine {
+    pub rt: Rc<Runtime>,
+    block: usize,
+    d: usize,
+    n_layers: usize,
+}
+
+impl Engine {
+    pub fn new(rt: Rc<Runtime>) -> Self {
+        let m = &rt.manifest.model;
+        Engine {
+            block: m.block,
+            d: m.d_model,
+            n_layers: m.n_layers,
+            rt,
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.rt.manifest
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Per-layer FFN widths for sparse blocks under `cfg`; d_ffn = dense.
+    pub fn layer_ks(&self, cfg: &SparsityConfig) -> Result<Vec<usize>> {
+        let m = &self.rt.manifest;
+        let Some(sp) = cfg.sparsity else {
+            return Ok(vec![m.model.d_ffn; self.n_layers]);
+        };
+        if cfg.layerwise {
+            Ok(m.budget(sp)?.layer_k.clone())
+        } else {
+            // uniform allocation at the same budget, same quantization
+            let dens = layerwise_schedule(
+                &vec![1.0; self.n_layers],
+                1.0 - sp,
+            );
+            Ok(quantize_densities(&dens, m.model.d_ffn, m.model.ftile))
+        }
+    }
+
+    fn exe_name_dense(&self, t: usize, s: usize) -> String {
+        format!("layer_dense_t{t}_s{s}")
+    }
+
+    fn exe_name_sparse(&self, k: usize, t: usize, s: usize) -> String {
+        format!("layer_sparse_k{k}_t{t}_s{s}")
+    }
+
+    /// Embed a token block of length `t` (t == block or 1).
+    pub(crate) fn embed(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let t = tokens.len();
+        let out = self.rt.run(
+            &format!("embed_t{t}"),
+            0,
+            &[("tokens", Input::I32(tokens, vec![t]))],
+        )?;
+        Ok(out.into_iter().next().unwrap().data)
+    }
+
+    /// LM head over a t-length hidden block; returns [t * vocab] logits.
+    pub(crate) fn lm_head(&self, x: &[f32], t: usize) -> Result<Vec<f32>> {
+        let out = self.rt.run(
+            &format!("lm_head_t{t}"),
+            0,
+            &[("x", Input::F32(x, vec![t, self.d]))],
+        )?;
+        Ok(out.into_iter().next().unwrap().data)
+    }
+
+    /// One dense transformer layer over a t-block; appends KV rows.
+    fn layer_dense(&self, l: usize, x: &[f32], t: usize,
+                   cache: &mut SeqKvCache, pos: usize) -> Result<Vec<f32>> {
+        let s = cache.bucket;
+        let pos_i = [pos as i32];
+        let out = self.rt.run(
+            &self.exe_name_dense(t, s),
+            l,
+            &[
+                ("x", Input::F32(x, vec![t, self.d])),
+                ("k_cache", Input::F32(&cache.k[l], vec![s, cache.n_kv, cache.d_head])),
+                ("v_cache", Input::F32(&cache.v[l], vec![s, cache.n_kv, cache.d_head])),
+                ("pos", Input::I32(&pos_i, vec![])),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let y = it.next().unwrap().data;
+        let k_new = it.next().unwrap().data;
+        let v_new = it.next().unwrap().data;
+        cache.append_layer(l, &k_new, &v_new, t)?;
+        Ok(y)
+    }
+
+    /// One fused sparse layer (trained predictor + compensator inside).
+    fn layer_sparse_fused(&self, l: usize, k: usize, x: &[f32], t: usize,
+                          cache: &mut SeqKvCache, pos: usize)
+                          -> Result<Vec<f32>> {
+        let s = cache.bucket;
+        let pos_i = [pos as i32];
+        let out = self.rt.run(
+            &self.exe_name_sparse(k, t, s),
+            l,
+            &[
+                ("x", Input::F32(x, vec![t, self.d])),
+                ("k_cache", Input::F32(&cache.k[l], vec![s, cache.n_kv, cache.d_head])),
+                ("v_cache", Input::F32(&cache.v[l], vec![s, cache.n_kv, cache.d_head])),
+                ("pos", Input::I32(&pos_i, vec![])),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let y = it.next().unwrap().data;
+        let k_new = it.next().unwrap().data;
+        let v_new = it.next().unwrap().data;
+        cache.append_layer(l, &k_new, &v_new, t)?;
+        Ok(y)
+    }
+
+    /// Split path, attention half: returns h (post-attn residual state)
+    /// and appends KV.
+    fn layer_attn(&self, l: usize, x: &[f32], cache: &mut SeqKvCache,
+                  pos: usize) -> Result<Vec<f32>> {
+        let t = self.block;
+        let s = cache.bucket;
+        let pos_i = [pos as i32];
+        let out = self.rt.run(
+            &format!("layer_attn_t{t}_s{s}"),
+            l,
+            &[
+                ("x", Input::F32(x, vec![t, self.d])),
+                ("k_cache", Input::F32(&cache.k[l], vec![s, cache.n_kv, cache.d_head])),
+                ("v_cache", Input::F32(&cache.v[l], vec![s, cache.n_kv, cache.d_head])),
+                ("pos", Input::I32(&pos_i, vec![])),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let h = it.next().unwrap().data;
+        let k_new = it.next().unwrap().data;
+        let v_new = it.next().unwrap().data;
+        cache.append_layer(l, &k_new, &v_new, t)?;
+        Ok(h)
+    }
+
+    /// Split path: neuron scores for expert selection on this block.
+    fn neuron_scores(&self, l: usize, h: &[f32],
+                     source: ExpertSource) -> Result<Vec<f32>> {
+        let t = self.block;
+        let exe = match source {
+            ExpertSource::Trained => format!("predictor_t{t}"),
+            // oracle + first-block-static both read GRIFFIN activation
+            // statistics (of the current/first block respectively)
+            _ => format!("ffn_acts_t{t}"),
+        };
+        let out = self
+            .rt
+            .run(&exe, l, &[("h", Input::F32(h, vec![t, self.d]))])?;
+        Ok(out.into_iter().next().unwrap().data)
+    }
+
+    /// Split path, FFN half at external indices. Returns the sparse
+    /// residual output with (optionally) the compensator term added.
+    fn ffn_sparse_ext(&self, l: usize, k: usize, h: &[f32], idx: &[i32],
+                      compensate: bool) -> Result<Vec<f32>> {
+        let t = self.block;
+        let out = self.rt.run(
+            &format!("ffn_sparse_ext_k{k}_t{t}"),
+            l,
+            &[
+                ("h", Input::F32(h, vec![t, self.d])),
+                ("idx", Input::I32(idx, vec![idx.len()])),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let mut y = it.next().unwrap().data;
+        let comp = it.next().unwrap().data;
+        if compensate {
+            for (yi, ci) in y.iter_mut().zip(comp.iter()) {
+                *yi += ci;
+            }
+        }
+        Ok(y)
+    }
+
+    /// Dense FFN half of the split path.
+    fn ffn_dense(&self, l: usize, h: &[f32]) -> Result<Vec<f32>> {
+        let t = self.block;
+        let out = self
+            .rt
+            .run(&format!("ffn_dense_t{t}"), l,
+                 &[("h", Input::F32(h, vec![t, self.d]))])?;
+        Ok(out.into_iter().next().unwrap().data)
+    }
+
+    /// Grow the cache if the next `t` positions cross the bucket.
+    pub(crate) fn ensure_bucket(&self, cache: &mut SeqKvCache, needed: usize)
+                     -> Result<()> {
+        if needed > cache.bucket {
+            let b = self.rt.manifest.bucket_for(needed)?;
+            cache.grow(b);
+        }
+        Ok(())
+    }
+
+    /// Whether the fused sparse executable covers this config (fast path:
+    /// trained predictor with compensation — the production setting).
+    fn fused_ok(&self, cfg: &SparsityConfig) -> bool {
+        cfg.source == ExpertSource::Trained && cfg.compensator
+    }
+
+    /// Process one full 128-token block through all layers.
+    /// `static_idx`: per-layer expert indices captured on the first block
+    /// (FirstBlockStatic source); filled in when `capture_static`.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run_block(&self, x0: Vec<f32>, cache: &mut SeqKvCache, pos: usize,
+                 dense: bool, cfg: &SparsityConfig, layer_ks: &[usize],
+                 static_idx: &mut Vec<Option<Vec<i32>>>,
+                 capture_static: bool) -> Result<Vec<f32>> {
+        let d_ffn = self.rt.manifest.model.d_ffn;
+        let mut x = x0;
+        for l in 0..self.n_layers {
+            let k = layer_ks[l];
+            let layer_dense = dense || k >= d_ffn;
+            if layer_dense && !capture_static {
+                x = self.layer_dense(l, &x, self.block, cache, pos)?;
+            } else if !layer_dense && self.fused_ok(cfg) {
+                x = self.layer_sparse_fused(l, k, &x, self.block, cache, pos)?;
+            } else {
+                // split path (ablations, and static capture on block 0)
+                let h = self.layer_attn(l, &x, cache, pos)?;
+                if capture_static {
+                    let scores = self.neuron_scores(
+                        l, &h, ExpertSource::FirstBlockStatic)?;
+                    static_idx[l] = Some(top_k_indices(&scores, k.min(d_ffn)));
+                }
+                if layer_dense {
+                    x = self.ffn_dense(l, &h)?;
+                } else {
+                    let idx = match cfg.source {
+                        ExpertSource::FirstBlockStatic => static_idx[l]
+                            .clone()
+                            .ok_or_else(|| anyhow!("static idx missing"))?,
+                        ExpertSource::Cats => {
+                            // threshold at the layer's target density,
+                            // then pad/trim to the compiled K shape
+                            let scores =
+                                self.neuron_scores(l, &h,
+                                                   ExpertSource::Cats)?;
+                            let th = crate::sparsity::masks::
+                                cats_calibrate_threshold(
+                                    &scores, k as f64 / d_ffn as f64);
+                            let idx = crate::sparsity::masks::
+                                cats_threshold_indices(&scores, th);
+                            crate::sparsity::masks::pad_indices_to_k(
+                                idx, k, d_ffn)
+                        }
+                        src => {
+                            let scores = self.neuron_scores(l, &h, src)?;
+                            top_k_indices(&scores, k)
+                        }
+                    };
+                    x = self.ffn_sparse_ext(l, k, &h, &idx,
+                                            cfg.compensator)?;
+                }
+            }
+        }
+        Ok(x)
+    }
+
+    /// One T=1 step through all layers (prompt tail / decode).
+    pub(crate) fn run_token(&self, x0: Vec<f32>, cache: &mut SeqKvCache, pos: usize,
+                 sparse: bool, layer_ks: &[usize]) -> Result<Vec<f32>> {
+        let d_ffn = self.rt.manifest.model.d_ffn;
+        let mut x = x0;
+        for l in 0..self.n_layers {
+            let k = layer_ks[l];
+            if sparse && k < d_ffn {
+                x = self.layer_sparse_fused(l, k, &x, 1, cache, pos)?;
+            } else {
+                x = self.layer_dense(l, &x, 1, cache, pos)?;
+            }
+        }
+        Ok(x)
+    }
+
+    /// Block-wise prefill of `tokens` under `cfg`. Returns KV cache, the
+    /// last position's hidden state and logits, and the timing breakdown.
+    ///
+    pub fn prefill(&self, tokens: &[i32],
+                   cfg: &SparsityConfig) -> Result<PrefillResult> {
+        let mut s = PrefillSession::new(
+            self.clone(), tokens.to_vec(), cfg.clone())?;
+        while !s.done() {
+            s.step()?;
+        }
+        s.finish()
+    }
+
+    /// One decode step: feed `token` at `pos`, return next-token logits.
+    pub fn decode_step(&self, token: i32, pos: usize,
+                       cache: &mut SeqKvCache, cfg: &SparsityConfig)
+                       -> Result<Vec<f32>> {
+        self.ensure_bucket(cache, pos + 1)?;
+        let layer_ks = self.layer_ks(cfg)?;
+        let m = &self.rt.manifest;
+        let decode_ks: Vec<usize> = layer_ks
+            .iter()
+            .map(|&k| {
+                if m.decode_k.contains(&k) { k } else { m.model.d_ffn }
+            })
+            .collect();
+        let x = self.embed(&[token])?;
+        let sparse = !cfg.is_dense() && cfg.sparse_decode;
+        let x = self.run_token(x, cache, pos, sparse, &decode_ks)?;
+        cache.advance(1);
+        self.lm_head(&x, 1)
+    }
+}
+
+/// Host-side log-softmax over a logits row.
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f32 = logits.iter().map(|&x| (x - max).exp()).sum::<f32>().ln()
+        + max;
+    logits.iter().map(|&x| x - lse).collect()
+}
+
+/// Greedy argmax over logits.
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let lp = log_softmax(&[1.0, 2.0, 3.0]);
+        let total: f32 = lp.iter().map(|&x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert!(lp.iter().all(|&x| x < 0.0));
+    }
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 5.0, -2.0]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    #[test]
+    fn sparsity_config_presets() {
+        let d = SparsityConfig::dense();
+        assert!(d.is_dense());
+        let f = SparsityConfig::fastforward(0.5);
+        assert_eq!(f.sparsity, Some(0.5));
+        assert!(f.layerwise && f.dense_first && f.dense_last && f.compensator);
+    }
+}

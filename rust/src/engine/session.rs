@@ -1,0 +1,166 @@
+//! Incremental prefill session: block-level stepping so the dynamic
+//! batcher can interleave chunked prefills across requests (Sarathi-style
+//! chunked prefill, paper §3.1) and with decode rounds.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{Engine, PrefillResult, PrefillTiming, SparsityConfig};
+use crate::kvcache::SeqKvCache;
+use crate::sparsity::masks::ExpertSource;
+
+/// State of an in-flight block-wise prefill.
+pub struct PrefillSession {
+    engine: Engine,
+    tokens: Vec<i32>,
+    cfg: SparsityConfig,
+    layer_ks: Vec<usize>,
+    decode_ks: Vec<usize>,
+    pub cache: SeqKvCache,
+    static_idx: Vec<Option<Vec<i32>>>,
+    pub next_pos: usize,
+    x_last: Vec<f32>,
+    x_last_is_t1: bool,
+    timing: PrefillTiming,
+    started: Instant,
+}
+
+impl PrefillSession {
+    pub fn new(engine: Engine, tokens: Vec<i32>,
+               cfg: SparsityConfig) -> Result<Self> {
+        anyhow::ensure!(!tokens.is_empty(), "empty prompt");
+        let m = &engine.rt.manifest;
+        let layer_ks = engine.layer_ks(&cfg)?;
+        let decode_ks: Vec<usize> = layer_ks
+            .iter()
+            .map(|&k| if m.decode_k.contains(&k) { k } else { m.model.d_ffn })
+            .collect();
+        let cache = SeqKvCache::new(
+            m.model.n_layers,
+            m.model.n_kv_heads,
+            m.model.d_head,
+            m.bucket_for(engine.block().min(tokens.len()))?,
+        );
+        let n_layers = m.model.n_layers;
+        Ok(PrefillSession {
+            engine,
+            tokens,
+            cfg,
+            layer_ks,
+            decode_ks,
+            cache,
+            static_idx: vec![None; n_layers],
+            next_pos: 0,
+            x_last: Vec::new(),
+            x_last_is_t1: false,
+            timing: PrefillTiming::default(),
+            started: Instant::now(),
+        })
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn remaining_tokens(&self) -> usize {
+        self.tokens.len() - self.next_pos
+    }
+
+    pub fn done(&self) -> bool {
+        self.next_pos >= self.tokens.len()
+    }
+
+    /// Number of scheduling units left (full blocks + tail tokens).
+    pub fn remaining_steps(&self) -> usize {
+        let block = self.engine.block();
+        let rem = self.remaining_tokens();
+        rem / block + rem % block
+    }
+
+    /// Process the next scheduling unit: one full 128-token block, or one
+    /// tail token. Returns the number of tokens consumed.
+    pub fn step(&mut self) -> Result<usize> {
+        assert!(!self.done(), "step on finished session");
+        let block = self.engine.block();
+        let pos = self.next_pos;
+        let remaining = self.tokens.len() - pos;
+        let engine = self.engine.clone();
+
+        if remaining >= block {
+            engine.ensure_bucket(&mut self.cache, pos + block)?;
+            let blk = &self.tokens[pos..pos + block];
+            let t0 = Instant::now();
+            let x = engine.embed(blk)?;
+            self.timing.embed += t0.elapsed();
+
+            let is_first = pos == 0;
+            let is_last = remaining == block; // no tail after this block
+            let dense = self.cfg.is_dense()
+                || (self.cfg.dense_first && is_first)
+                || (self.cfg.dense_last && is_last);
+            let capture_static = self.cfg.source
+                == ExpertSource::FirstBlockStatic
+                && is_first
+                && !self.cfg.is_dense();
+            let t1 = Instant::now();
+            self.x_last = engine.run_block(
+                x, &mut self.cache, pos, dense, &self.cfg, &self.layer_ks,
+                &mut self.static_idx, capture_static,
+            )?;
+            self.timing.layers += t1.elapsed();
+            self.x_last_is_t1 = false;
+            self.cache.advance(block);
+            self.next_pos += block;
+            self.timing.blocks += 1;
+            if dense {
+                self.timing.dense_blocks += 1;
+            }
+            Ok(block)
+        } else {
+            // ragged tail: T=1 steps (dense under dense_last)
+            engine.ensure_bucket(&mut self.cache, pos + 1)?;
+            let t0 = Instant::now();
+            let x = engine.embed(&[self.tokens[pos]])?;
+            self.timing.embed += t0.elapsed();
+            let sparse_tail = !self.cfg.is_dense() && !self.cfg.dense_last;
+            let t1 = Instant::now();
+            self.x_last = engine.run_token(
+                x, &mut self.cache, pos, sparse_tail, &self.decode_ks,
+            )?;
+            self.timing.layers += t1.elapsed();
+            self.x_last_is_t1 = true;
+            self.cache.advance(1);
+            self.next_pos += 1;
+            self.timing.tail_tokens += 1;
+            Ok(1)
+        }
+    }
+
+    /// Finish: compute last-position hidden + logits.
+    pub fn finish(mut self) -> Result<PrefillResult> {
+        assert!(self.done(), "finish before all blocks processed");
+        let engine = self.engine.clone();
+        let m = &engine.rt.manifest.model;
+        let t2 = Instant::now();
+        let (last_hidden, last_logits) = if self.x_last_is_t1 {
+            let logits = engine.lm_head(&self.x_last, 1)?;
+            (std::mem::take(&mut self.x_last), logits)
+        } else {
+            let block = engine.block();
+            let d = m.d_model;
+            let logits_all = engine.lm_head(&self.x_last, block)?;
+            let h = self.x_last[(block - 1) * d..].to_vec();
+            let logits = logits_all[(block - 1) * m.vocab..].to_vec();
+            (h, logits)
+        };
+        self.timing.lm_head = t2.elapsed();
+        self.timing.total = self.started.elapsed();
+        Ok(PrefillResult {
+            cache: self.cache,
+            last_hidden,
+            last_logits,
+            timing: self.timing,
+        })
+    }
+}

@@ -1,0 +1,52 @@
+//! Fidelity analysis: how sparsity-induced error propagates through the
+//! blockwise prefill (the paper's §3.3 motivation for the error
+//! compensator — "errors accumulate across layers and blocks").
+
+use anyhow::Result;
+
+use crate::engine::{Engine, SparsityConfig};
+
+/// Per-block hidden-state divergence between a sparse and dense prefill.
+#[derive(Debug, Clone)]
+pub struct ErrorProfile {
+    /// Relative L2 error of the last-position logits.
+    pub logit_rel_l2: f64,
+    /// Cosine similarity of the last-position logits.
+    pub logit_cos: f64,
+}
+
+pub fn compare_configs(engine: &Engine, tokens: &[i32],
+                       a: &SparsityConfig, b: &SparsityConfig)
+                       -> Result<ErrorProfile> {
+    let ra = engine.prefill(tokens, a)?;
+    let rb = engine.prefill(tokens, b)?;
+    let (x, y) = (&ra.last_logits, &rb.last_logits);
+    let dot: f64 = x.iter().zip(y).map(|(a, b)| (a * b) as f64).sum();
+    let nx: f64 = x.iter().map(|v| (v * v) as f64).sum::<f64>().sqrt();
+    let ny: f64 = y.iter().map(|v| (v * v) as f64).sum::<f64>().sqrt();
+    let diff: f64 = x
+        .iter()
+        .zip(y)
+        .map(|(a, b)| ((a - b) * (a - b)) as f64)
+        .sum::<f64>()
+        .sqrt();
+    Ok(ErrorProfile {
+        logit_rel_l2: diff / nx.max(1e-12),
+        logit_cos: dot / (nx * ny).max(1e-12),
+    })
+}
+
+/// Error growth vs context length for a sparse config (drives the
+/// compensator discussion in EXPERIMENTS.md).
+pub fn error_vs_context(engine: &Engine, ctxs: &[usize],
+                        cfg: &SparsityConfig,
+                        make_prompt: impl Fn(usize) -> Vec<i32>)
+                        -> Result<Vec<(usize, ErrorProfile)>> {
+    let dense = SparsityConfig::dense();
+    let mut out = Vec::new();
+    for &ctx in ctxs {
+        let prompt = make_prompt(ctx);
+        out.push((ctx, compare_configs(engine, &prompt, &dense, cfg)?));
+    }
+    Ok(out)
+}

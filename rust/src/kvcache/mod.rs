@@ -1,0 +1,295 @@
+//! KV-cache management.
+//!
+//! Two cooperating pieces:
+//!
+//! * [`PagedAllocator`] — a vLLM-style page pool for admission control:
+//!   pages of `page_size` positions, ref-counted for prefix sharing, with
+//!   exact accounting so the router can bound resident memory.
+//! * [`SeqKvCache`] — the per-sequence host-resident cache the engine
+//!   feeds to the bucketed AOT executables: contiguous padded buffers per
+//!   layer, grown bucket-by-bucket, appended after each block step.
+
+use anyhow::{anyhow, Result};
+
+// ---------------------------------------------------------------------------
+// Paged allocator
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PageId(pub u32);
+
+#[derive(Debug)]
+pub struct PagedAllocator {
+    page_size: usize,
+    ref_counts: Vec<u32>,
+    free: Vec<PageId>,
+}
+
+impl PagedAllocator {
+    pub fn new(total_pages: usize, page_size: usize) -> Self {
+        PagedAllocator {
+            page_size,
+            ref_counts: vec![0; total_pages],
+            free: (0..total_pages as u32).rev().map(PageId).collect(),
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.page_size)
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.ref_counts.len() - self.free.len()
+    }
+
+    /// Can `positions` more positions be allocated right now?
+    pub fn can_allocate(&self, positions: usize) -> bool {
+        self.pages_for(positions) <= self.free.len()
+    }
+
+    pub fn allocate(&mut self, n_pages: usize) -> Result<Vec<PageId>> {
+        if n_pages > self.free.len() {
+            return Err(anyhow!(
+                "kv pool exhausted: want {n_pages}, free {}",
+                self.free.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(n_pages);
+        for _ in 0..n_pages {
+            let p = self.free.pop().unwrap();
+            debug_assert_eq!(self.ref_counts[p.0 as usize], 0);
+            self.ref_counts[p.0 as usize] = 1;
+            out.push(p);
+        }
+        Ok(out)
+    }
+
+    /// Share an existing page (prefix reuse): bump its refcount.
+    pub fn retain(&mut self, page: PageId) -> Result<()> {
+        let rc = self
+            .ref_counts
+            .get_mut(page.0 as usize)
+            .ok_or_else(|| anyhow!("bad page {page:?}"))?;
+        if *rc == 0 {
+            return Err(anyhow!("retain of free page {page:?}"));
+        }
+        *rc += 1;
+        Ok(())
+    }
+
+    pub fn release(&mut self, page: PageId) -> Result<()> {
+        let rc = self
+            .ref_counts
+            .get_mut(page.0 as usize)
+            .ok_or_else(|| anyhow!("bad page {page:?}"))?;
+        if *rc == 0 {
+            return Err(anyhow!("double free of page {page:?}"));
+        }
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(page);
+        }
+        Ok(())
+    }
+
+    pub fn release_all(&mut self, pages: &[PageId]) -> Result<()> {
+        for &p in pages {
+            self.release(p)?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-sequence host cache
+// ---------------------------------------------------------------------------
+
+/// Contiguous padded K/V buffers for one sequence, one pair per layer.
+/// Layout per buffer: [bucket, n_kv_heads, d_head] row-major f32, matching
+/// the AOT executable input shapes exactly.
+#[derive(Debug, Clone)]
+pub struct SeqKvCache {
+    pub n_layers: usize,
+    pub n_kv: usize,
+    pub d_head: usize,
+    pub bucket: usize,
+    pub len: usize,
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+impl SeqKvCache {
+    pub fn new(n_layers: usize, n_kv: usize, d_head: usize,
+               bucket: usize) -> Self {
+        let sz = bucket * n_kv * d_head;
+        SeqKvCache {
+            n_layers,
+            n_kv,
+            d_head,
+            bucket,
+            len: 0,
+            k: vec![vec![0.0; sz]; n_layers],
+            v: vec![vec![0.0; sz]; n_layers],
+        }
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.n_kv * self.d_head
+    }
+
+    /// Grow to a bigger bucket, preserving contents.
+    pub fn grow(&mut self, new_bucket: usize) {
+        assert!(new_bucket >= self.bucket);
+        if new_bucket == self.bucket {
+            return;
+        }
+        let row = self.row_elems();
+        for l in 0..self.n_layers {
+            self.k[l].resize(new_bucket * row, 0.0);
+            self.v[l].resize(new_bucket * row, 0.0);
+        }
+        self.bucket = new_bucket;
+    }
+
+    /// Append `t` new rows for layer `l` (from the executable's k_new /
+    /// v_new outputs, shape [t, n_kv, d_head]).
+    pub fn append_layer(&mut self, l: usize, k_new: &[f32], v_new: &[f32],
+                        t: usize) -> Result<()> {
+        let row = self.row_elems();
+        anyhow::ensure!(k_new.len() == t * row, "k_new wrong size");
+        anyhow::ensure!(v_new.len() == t * row, "v_new wrong size");
+        anyhow::ensure!(
+            self.len + t <= self.bucket,
+            "cache overflow: len {} + {t} > bucket {}",
+            self.len,
+            self.bucket
+        );
+        let dst = self.len * row;
+        self.k[l][dst..dst + t * row].copy_from_slice(k_new);
+        self.v[l][dst..dst + t * row].copy_from_slice(v_new);
+        Ok(())
+    }
+
+    /// Advance the filled length after all layers appended a block.
+    pub fn advance(&mut self, t: usize) {
+        self.len += t;
+        debug_assert!(self.len <= self.bucket);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut a = PagedAllocator::new(8, 128);
+        assert!(a.can_allocate(1024));
+        assert!(!a.can_allocate(1025));
+        let pages = a.allocate(4).unwrap();
+        assert_eq!(a.used_pages(), 4);
+        a.release_all(&pages).unwrap();
+        assert_eq!(a.used_pages(), 0);
+        assert_eq!(a.free_pages(), 8);
+    }
+
+    #[test]
+    fn refcounted_sharing() {
+        let mut a = PagedAllocator::new(4, 128);
+        let p = a.allocate(1).unwrap()[0];
+        a.retain(p).unwrap();
+        a.release(p).unwrap();
+        assert_eq!(a.used_pages(), 1, "still shared");
+        a.release(p).unwrap();
+        assert_eq!(a.used_pages(), 0);
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut a = PagedAllocator::new(2, 128);
+        let p = a.allocate(1).unwrap()[0];
+        a.release(p).unwrap();
+        assert!(a.release(p).is_err());
+        assert!(a.retain(p).is_err());
+    }
+
+    #[test]
+    fn exhaustion_is_clean() {
+        let mut a = PagedAllocator::new(2, 128);
+        assert!(a.allocate(3).is_err());
+        let _p = a.allocate(2).unwrap();
+        assert!(a.allocate(1).is_err());
+    }
+
+    #[test]
+    fn prop_allocator_conservation() {
+        check("pages-conserved", 150, |r| {
+            let total = r.range(1, 64);
+            let mut a = PagedAllocator::new(total, 128);
+            let mut held: Vec<Vec<PageId>> = Vec::new();
+            for _ in 0..r.range(1, 80) {
+                if r.bool(0.55) || held.is_empty() {
+                    let want = r.range(1, 8);
+                    if let Ok(p) = a.allocate(want) {
+                        held.push(p);
+                    }
+                } else {
+                    let i = r.range(0, held.len());
+                    let p = held.swap_remove(i);
+                    a.release_all(&p).map_err(|e| e.to_string())?;
+                }
+                let held_count: usize = held.iter().map(|v| v.len()).sum();
+                crate::prop_assert!(
+                    a.used_pages() == held_count,
+                    "accounting drift: used {} vs held {held_count}",
+                    a.used_pages()
+                );
+                crate::prop_assert!(
+                    a.free_pages() + a.used_pages() == total,
+                    "page leak"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn seq_cache_append_and_grow() {
+        let mut c = SeqKvCache::new(2, 2, 4, 8);
+        let row = c.row_elems();
+        let k: Vec<f32> = (0..4 * row).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..4 * row).map(|i| -(i as f32)).collect();
+        for l in 0..2 {
+            c.append_layer(l, &k, &v, 4).unwrap();
+        }
+        c.advance(4);
+        assert_eq!(c.len, 4);
+        c.grow(16);
+        assert_eq!(c.bucket, 16);
+        // contents preserved
+        assert_eq!(c.k[0][0..4 * row], k[..]);
+        // further appends land after the preserved prefix
+        for l in 0..2 {
+            c.append_layer(l, &k, &v, 4).unwrap();
+        }
+        c.advance(4);
+        assert_eq!(c.k[1][4 * row..8 * row], k[..]);
+    }
+
+    #[test]
+    fn seq_cache_overflow_rejected() {
+        let mut c = SeqKvCache::new(1, 1, 2, 4);
+        let row = c.row_elems();
+        let k = vec![0.0; 5 * row];
+        assert!(c.append_layer(0, &k, &k, 5).is_err());
+    }
+}

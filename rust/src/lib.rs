@@ -1,0 +1,61 @@
+//! # FastForward
+//!
+//! Full-stack reproduction of *"Fast Forward: Accelerating LLM Prefill
+//! with Predictive FFN Sparsity"* (CS.LG 2026) as a three-layer
+//! Rust + JAX + Pallas serving system:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): gathered sparse
+//!   SwiGLU FFN, expert predictor, error compensator, flash block
+//!   attention. Build-time only.
+//! * **L2** — JAX model (`python/compile/`): LLaMA-architecture
+//!   transformer, trained + AOT-lowered once to HLO-text artifacts.
+//! * **L3** — this crate: the serving coordinator. Block-wise prefill
+//!   engine with predictive FFN sparsity, dynamic batcher, request
+//!   router, HTTP server, paged KV management, the paper's layerwise
+//!   sparsity schedule (Algorithm 1), cost model, workload generators and
+//!   the full evaluation/benchmark harness.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `fastforward` binary is self-contained.
+//!
+//! ```text
+//! router → batcher → engine ─┬─ dense blocks  → layer_dense_*    (PJRT)
+//!                            └─ sparse blocks → layer_sparse_K_* (PJRT)
+//! ```
+
+pub mod batcher;
+pub mod cost;
+pub mod engine;
+pub mod eval;
+pub mod kvcache;
+pub mod manifest;
+pub mod metrics;
+pub mod router;
+pub mod runtime;
+pub mod server;
+pub mod sparsity;
+pub mod tokenizer;
+pub mod trace;
+pub mod util;
+pub mod weights;
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory for tests/benches: `FF_ARTIFACTS` env
+/// var, else `<crate>/artifacts` if it holds a manifest. Returns None
+/// (tests skip) when artifacts have not been built.
+pub fn test_artifacts_dir() -> Option<PathBuf> {
+    let cand = std::env::var("FF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    if cand.join("manifest.json").exists() {
+        Some(cand)
+    } else {
+        eprintln!(
+            "[skip] artifacts not found at {cand:?} — run `make artifacts`"
+        );
+        None
+    }
+}

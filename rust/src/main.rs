@@ -1,0 +1,340 @@
+//! FastForward CLI: the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//! * `serve`    — start the HTTP serving stack (router → batcher → engine)
+//! * `generate` — one-shot generation from the command line
+//! * `eval`     — run the longbench-sim accuracy harness
+//! * `schedule` — print the calibrated layerwise sparsity schedule
+//! * `cost`     — cost-model exploration (crossovers, speedup curves)
+//! * `info`     — artifact + model summary
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::Result;
+use fastforward::batcher::{Batcher, BatcherConfig};
+use fastforward::cost::CostModel;
+use fastforward::engine::{Engine, SparsityConfig};
+use fastforward::eval::{self, EvalSpec};
+use fastforward::manifest::Manifest;
+use fastforward::metrics::Metrics;
+use fastforward::router::Router;
+use fastforward::runtime::Runtime;
+use fastforward::server::Server;
+use fastforward::sparsity::masks::ExpertSource;
+use fastforward::tokenizer::Tokenizer;
+use fastforward::util::cli::Args;
+use fastforward::weights::WeightStore;
+
+fn usage() -> ! {
+    eprintln!(
+        "fastforward <serve|generate|eval|schedule|cost|info> [flags]
+  common:    --artifacts DIR (default ./artifacts)
+  serve:     --addr HOST:PORT --sparsity S --max-active N --queue N
+  generate:  --prompt TEXT --max-tokens N --sparsity S
+  eval:      --sparsity LIST --tasks N --prompt-chars N --ablation NAME
+  cost:      --model llama8b|llama1b|llama3b|artifact --sparsity LIST
+  schedule:  (no flags)
+  tpu-estimate: per-kernel VMEM/MXU/roofline report (DESIGN.md §8)
+  analyze:   sparsity error accumulation vs context (--sparsity S)"
+    );
+    std::process::exit(2);
+}
+
+fn load_engine(args: &Args) -> Result<Engine> {
+    let dir = std::path::PathBuf::from(args.str("artifacts", "artifacts"));
+    let manifest = Rc::new(Manifest::load(&dir)?);
+    let weights = Rc::new(WeightStore::load(&manifest)?);
+    let rt = Rc::new(Runtime::new(manifest, weights)?);
+    Ok(Engine::new(rt))
+}
+
+fn cfg_from_args(args: &Args) -> SparsityConfig {
+    let sp = args.f64("sparsity", 0.0);
+    if sp > 0.0 {
+        let mut cfg = SparsityConfig::fastforward(sp);
+        cfg.layerwise = !args.has("uniform");
+        cfg.dense_first = !args.has("no-dense-first");
+        cfg.dense_last = !args.has("no-dense-last");
+        cfg.compensator = !args.has("no-compensator");
+        cfg.sparse_decode = args.has("sparse-decode");
+        cfg.source = match args.str("source", "trained").as_str() {
+            "oracle" => ExpertSource::Oracle,
+            "static" => ExpertSource::FirstBlockStatic,
+            "cats" => ExpertSource::Cats,
+            _ => ExpertSource::Trained,
+        };
+        cfg
+    } else {
+        SparsityConfig::dense()
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let m = engine.manifest();
+    println!("model          : {}", m.model.name);
+    println!(
+        "dims           : d_model={} d_ffn={} layers={} heads={} kv={} block={}",
+        m.model.d_model, m.model.d_ffn, m.model.n_layers, m.model.n_heads,
+        m.model.n_kv_heads, m.model.block
+    );
+    println!("buckets        : {:?}", m.model.buckets);
+    println!("k grid         : {:?} (decode: {:?})", m.k_grid, m.decode_k);
+    println!("executables    : {}", m.executables.len());
+    println!(
+        "attention mass : {:?}",
+        m.schedule
+            .attention_masses
+            .iter()
+            .map(|x| (x * 10.0).round() / 10.0)
+            .collect::<Vec<_>>()
+    );
+    for (k, b) in &m.schedule.budgets {
+        println!("schedule {k}  : K={:?} uniform={:?}", b.layer_k,
+                 b.uniform_k);
+    }
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.str("artifacts", "artifacts"));
+    let manifest = Manifest::load(&dir)?;
+    println!("layer  attn-mass  K@30%  K@40%  K@50%");
+    let s = &manifest.schedule;
+    for l in 0..manifest.model.n_layers {
+        let k = |key: &str| {
+            s.budgets.get(key).map(|b| b.layer_k[l]).unwrap_or(0)
+        };
+        println!(
+            "{l:5}  {:9.2}  {:5}  {:5}  {:5}",
+            s.attention_masses[l],
+            k("0.30"),
+            k("0.40"),
+            k("0.50")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let tok = Tokenizer::new(engine.manifest().model.vocab);
+    let prompt = args.str("prompt", "the quick brown fox");
+    let cfg = cfg_from_args(args);
+    let r = engine.generate(
+        &tok.encode(&prompt),
+        args.usize("max-tokens", 48),
+        &cfg,
+    )?;
+    println!("--- generation ({} tokens) ---", r.tokens.len());
+    println!("{}", r.text);
+    println!(
+        "--- ttft {:.1} ms | tpot {:.2} ms | blocks {} ({} dense) ---",
+        r.ttft_ms, r.tpot_ms, r.prefill.blocks, r.prefill.dense_blocks
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let spec = EvalSpec {
+        tasks_per_group: args.usize("tasks", 4),
+        prompt_chars: args.usize("prompt-chars", 1024),
+        seed: args.usize("seed", 17) as u64,
+        with_generation: args.has("with-generation"),
+        max_gen_tokens: args.usize("max-tokens", 16),
+    };
+    let tasks = eval::build_tasks(&spec);
+    println!("{}", eval::TABLE_HEADER);
+    let dense = eval::evaluate(&engine, &tasks, &SparsityConfig::dense(),
+                               &spec)?;
+    println!("{}", eval::format_row("dense (0%)", &dense, 0.0));
+    for sp in args.f64_list("sparsity", &[0.3, 0.4, 0.5]) {
+        let mut cfg = cfg_from_args(args);
+        cfg.sparsity = Some(sp);
+        let r = eval::evaluate(&engine, &tasks, &cfg, &spec)?;
+        println!(
+            "{}",
+            eval::format_row(
+                &format!("fastforward {:.0}%", sp * 100.0),
+                &r,
+                r.rel_gap_pct(dense.average)
+            )
+        );
+    }
+    Ok(())
+}
+
+fn cmd_cost(args: &Args) -> Result<()> {
+    let model = args.str("model", "llama8b");
+    let cm = match model.as_str() {
+        "llama8b" => CostModel::llama8b(),
+        "llama3b" => CostModel::llama3b(),
+        "llama1b" => CostModel::llama1b(),
+        _ => {
+            let engine = load_engine(args)?;
+            CostModel::from_cfg(&engine.manifest().model)
+        }
+    };
+    println!("model {model}: attention/FFN FLOP crossover at {} tokens",
+             cm.attn_ffn_crossover());
+    println!("ctx      dense-GFLOP  ffn%   speedup@30%  @40%  @50%");
+    for ctx in [512usize, 1024, 2048, 4096, 8192, 16384, 32768] {
+        let c = cm.dense_prefill(ctx);
+        let mut row = format!(
+            "{ctx:7}  {:11.2}  {:4.1}%",
+            c.total() / 1e9,
+            100.0 * c.ffn() / c.total()
+        );
+        for sp in [0.3, 0.4, 0.5] {
+            let dens = vec![1.0 - sp; cm.n_layers];
+            row += &format!("  {:10.3}x", cm.speedup(ctx, &dens, true, true));
+        }
+        println!("{row}");
+    }
+    Ok(())
+}
+
+fn cmd_tpu_estimate(args: &Args) -> Result<()> {
+    use fastforward::cost::tpu;
+    let engine = load_engine(args)?;
+    let m = &engine.manifest().model;
+    println!("TPU-v4 structural estimate for {} kernels (DESIGN.md §8)", m.name);
+    println!("{:-<100}", "");
+    println!("{:<28} {:>10} {:>8} {:>12} {:>12} {:>10}",
+             "kernel step", "VMEM KiB", "fits?", "FLOP/byte",
+             "roofline TF/s", "eff ratio");
+    for p in tpu::report(m.d_model, m.d_ffn, m.d_head,
+                         m.d_model / 16, m.ftile) {
+        println!(
+            "{:<28} {:>10} {:>8} {:>12.1} {:>12.2} {:>9.2}",
+            p.name,
+            p.vmem_bytes / 1024,
+            if p.fits_vmem() { "yes" } else { "NO" },
+            p.arithmetic_intensity(),
+            p.roofline_tflops(),
+            p.efficiency_ratio(),
+        );
+    }
+    println!("\nPaper-scale (LLaMA-8B, d=4096, ftile=128):");
+    for p in tpu::report(4096, 14336, 128, 256, 128) {
+        println!(
+            "{:<28} {:>10} {:>8} {:>12.1} {:>12.2} {:>9.2}",
+            p.name,
+            p.vmem_bytes / 1024,
+            if p.fits_vmem() { "yes" } else { "NO" },
+            p.arithmetic_intensity(),
+            p.roofline_tflops(),
+            p.efficiency_ratio(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    use fastforward::eval::analysis;
+    use fastforward::trace::WordBank;
+    use fastforward::util::rng::Rng;
+    let engine = load_engine(args)?;
+    let tok = Tokenizer::new(engine.manifest().model.vocab);
+    let max_ctx = engine.manifest().model.max_ctx;
+    let ctxs: Vec<usize> = args
+        .usize_list("ctx", &[256, 512, 1024, 2048])
+        .into_iter()
+        .filter(|&c| c <= max_ctx)
+        .collect();
+    let make_prompt = |len: usize| {
+        let mut rng = Rng::new(13);
+        let bank = WordBank::new(&mut rng, 128);
+        let mut t = tok.encode(&bank.filler(&mut rng, len));
+        t.truncate(len);
+        t
+    };
+
+    println!("sparsity-induced logit error vs context (paper §3.3:");
+    println!("errors accumulate with depth/length; the compensator bounds them)\n");
+    println!("{:>8} {:>12} {:>12} {:>14} {:>14}",
+             "ctx", "rel-L2", "cosine", "rel-L2 (no-comp)", "cos (no-comp)");
+    let mut cfg = cfg_from_args(args);
+    if cfg.is_dense() {
+        cfg = SparsityConfig::fastforward(0.5);
+    }
+    let mut nc = cfg.clone();
+    nc.compensator = false;
+    for &ctx in &ctxs {
+        let prompt = make_prompt(ctx);
+        let with = analysis::compare_configs(
+            &engine, &prompt, &SparsityConfig::dense(), &cfg)?;
+        let without = analysis::compare_configs(
+            &engine, &prompt, &SparsityConfig::dense(), &nc)?;
+        println!(
+            "{ctx:>8} {:>12.4} {:>12.4} {:>14.4} {:>14.4}",
+            with.logit_rel_l2, with.logit_cos,
+            without.logit_rel_l2, without.logit_cos
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.str("addr", "127.0.0.1:8080");
+    let metrics = Arc::new(Metrics::new());
+    let dir = std::path::PathBuf::from(args.str("artifacts", "artifacts"));
+    // Probe the manifest on the main thread for fail-fast UX.
+    let probe = Manifest::load(&dir)?;
+    let max_ctx = probe.model.max_ctx;
+    let vocab = probe.model.vocab;
+    let kv_pages = args.usize("kv-pages", 8 * max_ctx / 128);
+    let router = Arc::new(Router::new(
+        args.usize("queue", 64),
+        max_ctx,
+        kv_pages,
+        128,
+        metrics.clone(),
+    ));
+
+    // Executor thread owns the engine (PJRT runtime is single-threaded).
+    let bcfg = BatcherConfig {
+        max_active: args.usize("max-active", 8),
+        prefill_block_budget: args.usize("block-budget", 4),
+    };
+    let router2 = router.clone();
+    let exec = std::thread::spawn(move || -> Result<()> {
+        let manifest = Rc::new(Manifest::load(&dir)?);
+        let weights = Rc::new(WeightStore::load(&manifest)?);
+        let rt = Rc::new(Runtime::new(manifest, weights)?);
+        let engine = Engine::new(rt);
+        Batcher::new(engine, router2, bcfg).run()
+    });
+
+    let default_sparsity = {
+        let s = args.f64("sparsity", 0.5);
+        if s > 0.0 { Some(s) } else { None }
+    };
+    let server = Arc::new(Server {
+        router: router.clone(),
+        metrics,
+        tokenizer: Tokenizer::new(vocab),
+        default_sparsity,
+    });
+    let res = server.serve(&addr);
+    router.close();
+    let _ = exec.join();
+    res
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("serve") => cmd_serve(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("schedule") => cmd_schedule(&args),
+        Some("cost") => cmd_cost(&args),
+        Some("info") => cmd_info(&args),
+        Some("tpu-estimate") => cmd_tpu_estimate(&args),
+        Some("analyze") => cmd_analyze(&args),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,299 @@
+//! Artifact manifest: the ABI contract between python/compile/aot.py and
+//! the Rust runtime. Parses manifest.json + schedule.json and exposes the
+//! model config, weight table, executable argument specs and sparsity
+//! schedules.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Model hyperparameters (mirrors python ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub block: usize,
+    pub ftile: usize,
+    pub max_ctx: usize,
+    pub buckets: Vec<usize>,
+}
+
+/// One weight's location in weights.bin.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl WeightEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Kinds of executable arguments (the dispatch ABI).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgKind {
+    /// Global weight, e.g. "embed".
+    Weight(String),
+    /// Per-layer transformer weight role, e.g. "wq".
+    LayerWeight(String),
+    /// Per-layer expert-predictor weight role.
+    PredWeight(String),
+    /// Per-layer compensator weight role.
+    CompWeight(String),
+    /// Runtime input (x, k_cache, pos, idx, ...).
+    Input(String),
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub kind: ArgKind,
+    pub shape: Vec<usize>,
+    pub is_i32: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecutableSpec {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+}
+
+/// Per-sparsity-budget schedule (paper Algorithm 1 output).
+#[derive(Debug, Clone)]
+pub struct BudgetSchedule {
+    pub sparsity: f64,
+    pub layer_densities: Vec<f64>,
+    pub layer_k: Vec<usize>,
+    pub uniform_k: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub attention_masses: Vec<f64>,
+    pub budgets: BTreeMap<String, BudgetSchedule>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelCfg,
+    pub weights_file: PathBuf,
+    pub weights: BTreeMap<String, WeightEntry>,
+    pub executables: BTreeMap<String, ExecutableSpec>,
+    pub k_grid: Vec<usize>,
+    pub decode_k: Vec<usize>,
+    pub schedule: Schedule,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {mpath:?} (run `make artifacts`)"))?;
+        let j = json::parse(&text).context("parsing manifest.json")?;
+
+        let m = j.req("model")?;
+        let model = ModelCfg {
+            name: m.req("name")?.as_str().unwrap_or("?").to_string(),
+            vocab: req_usize(m, "vocab")?,
+            d_model: req_usize(m, "d_model")?,
+            n_layers: req_usize(m, "n_layers")?,
+            n_heads: req_usize(m, "n_heads")?,
+            n_kv_heads: req_usize(m, "n_kv_heads")?,
+            d_head: req_usize(m, "d_head")?,
+            d_ffn: req_usize(m, "d_ffn")?,
+            block: req_usize(m, "block")?,
+            ftile: req_usize(m, "ftile")?,
+            max_ctx: req_usize(m, "max_ctx")?,
+            buckets: m.req("buckets")?.usize_vec()?,
+        };
+
+        let mut weights = BTreeMap::new();
+        for (name, w) in j
+            .req("weights")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("weights not an object"))?
+        {
+            weights.insert(
+                name.clone(),
+                WeightEntry {
+                    offset: req_usize(w, "offset")?,
+                    shape: w.req("shape")?.usize_vec()?,
+                },
+            );
+        }
+
+        let mut executables = BTreeMap::new();
+        for e in j
+            .req("executables")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("executables not an array"))?
+        {
+            let name = e.req("name")?.as_str().unwrap().to_string();
+            let file = e.req("file")?.as_str().unwrap().to_string();
+            let mut args = Vec::new();
+            for a in e.req("args")?.as_arr().unwrap() {
+                let kind = match a.req("kind")?.as_str().unwrap() {
+                    "weight" => {
+                        ArgKind::Weight(a.req("name")?.as_str().unwrap().into())
+                    }
+                    "layer_weight" => ArgKind::LayerWeight(
+                        a.req("role")?.as_str().unwrap().into(),
+                    ),
+                    "pred_weight" => ArgKind::PredWeight(
+                        a.req("role")?.as_str().unwrap().into(),
+                    ),
+                    "comp_weight" => ArgKind::CompWeight(
+                        a.req("role")?.as_str().unwrap().into(),
+                    ),
+                    "input" => {
+                        ArgKind::Input(a.req("name")?.as_str().unwrap().into())
+                    }
+                    other => anyhow::bail!("unknown arg kind {other}"),
+                };
+                args.push(ArgSpec {
+                    kind,
+                    shape: a.req("shape")?.usize_vec()?,
+                    is_i32: a.req("dtype")?.as_str() == Some("i32"),
+                });
+            }
+            executables.insert(
+                name.clone(),
+                ExecutableSpec { name, file, args },
+            );
+        }
+
+        let schedule = load_schedule(&dir.join("schedule.json"))?;
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            weights_file: dir.join(
+                j.req("weights_file")?.as_str().unwrap_or("weights.bin"),
+            ),
+            model,
+            weights,
+            executables,
+            k_grid: j.req("k_grid")?.usize_vec()?,
+            decode_k: j.req("decode_k")?.usize_vec()?,
+            schedule,
+        })
+    }
+
+    /// Resolve a weight-arg to a concrete weight name for `layer`.
+    pub fn resolve_weight_name(&self, kind: &ArgKind, layer: usize) -> Option<String> {
+        match kind {
+            ArgKind::Weight(name) => Some(name.clone()),
+            ArgKind::LayerWeight(role) => Some(format!("layers.{layer}.{role}")),
+            ArgKind::PredWeight(role) => Some(format!("pred.{layer}.{role}")),
+            ArgKind::CompWeight(role) => Some(format!("comp.{layer}.{role}")),
+            ArgKind::Input(_) => None,
+        }
+    }
+
+    /// Smallest KV bucket that can hold `len` positions.
+    pub fn bucket_for(&self, len: usize) -> Result<usize> {
+        self.model
+            .buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= len)
+            .ok_or_else(|| {
+                anyhow!(
+                    "context {len} exceeds max bucket {:?}",
+                    self.model.buckets.last()
+                )
+            })
+    }
+
+    /// The schedule entry for a sparsity level (key like "0.50").
+    pub fn budget(&self, sparsity: f64) -> Result<&BudgetSchedule> {
+        let key = format!("{sparsity:.2}");
+        self.schedule
+            .budgets
+            .get(&key)
+            .ok_or_else(|| anyhow!("no schedule for sparsity {key}"))
+    }
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("{key} not a usize"))
+}
+
+fn load_schedule(path: &Path) -> Result<Schedule> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path:?}"))?;
+    let j = json::parse(&text)?;
+    let mut budgets = BTreeMap::new();
+    for (key, s) in j.req("schedules")?.as_obj().unwrap() {
+        budgets.insert(
+            key.clone(),
+            BudgetSchedule {
+                sparsity: s.req("sparsity")?.as_f64().unwrap(),
+                layer_densities: s.req("layer_densities")?.f64_vec()?,
+                layer_k: s.req("layer_k")?.usize_vec()?,
+                uniform_k: s.req("uniform_k")?.usize_vec()?,
+            },
+        );
+    }
+    Ok(Schedule {
+        attention_masses: j.req("attention_masses")?.f64_vec()?,
+        budgets,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Manifest loading against real artifacts (skips if absent).
+    #[test]
+    fn loads_real_manifest() {
+        let dir = crate::test_artifacts_dir();
+        let Some(dir) = dir else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model.d_model >= 64);
+        assert_eq!(m.model.d_head * m.model.n_heads, m.model.d_model);
+        assert!(m.weights.contains_key("embed"));
+        assert!(m.weights.contains_key("layers.0.wq"));
+        assert!(m
+            .executables
+            .keys()
+            .any(|k| k.starts_with("layer_dense_t128")));
+        // every executable's file exists
+        for e in m.executables.values() {
+            assert!(m.dir.join(&e.file).exists(), "{} missing", e.file);
+        }
+        // schedules cover the paper's sparsity levels
+        for sp in [0.3, 0.4, 0.5] {
+            let b = m.budget(sp).unwrap();
+            assert_eq!(b.layer_k.len(), m.model.n_layers);
+            assert!(b.layer_k.iter().all(|&k| k <= m.model.d_ffn));
+        }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let dir = crate::test_artifacts_dir();
+        let Some(dir) = dir else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.bucket_for(1).unwrap(), m.model.buckets[0]);
+        assert_eq!(
+            m.bucket_for(m.model.buckets[0] + 1).unwrap(),
+            m.model.buckets[1]
+        );
+        assert!(m.bucket_for(m.model.max_ctx * 2).is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! Serving metrics: TTFT / TPOT / throughput histograms with a
+//! Prometheus-text exporter (hand-rolled; substrate for the absent
+//! metrics crates).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+#[derive(Default)]
+struct Inner {
+    ttft_ms: Summary,
+    tpot_ms: Summary,
+    e2e_ms: Summary,
+    prompt_tokens: u64,
+    generated_tokens: u64,
+    requests_completed: u64,
+    requests_rejected: u64,
+    blocks_dense: u64,
+    blocks_sparse: u64,
+}
+
+/// Thread-safe metrics registry shared by router/engine/server.
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            inner: Mutex::new(Inner::default()),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record_ttft(&self, ms: f64) {
+        self.inner.lock().unwrap().ttft_ms.add(ms);
+    }
+
+    pub fn record_tpot(&self, ms: f64) {
+        self.inner.lock().unwrap().tpot_ms.add(ms);
+    }
+
+    pub fn record_request(&self, prompt_tokens: usize, generated: usize,
+                          e2e_ms: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.prompt_tokens += prompt_tokens as u64;
+        g.generated_tokens += generated as u64;
+        g.requests_completed += 1;
+        g.e2e_ms.add(e2e_ms);
+    }
+
+    pub fn record_rejection(&self) {
+        self.inner.lock().unwrap().requests_rejected += 1;
+    }
+
+    pub fn record_block(&self, dense: bool) {
+        let mut g = self.inner.lock().unwrap();
+        if dense {
+            g.blocks_dense += 1;
+        } else {
+            g.blocks_sparse += 1;
+        }
+    }
+
+    pub fn ttft_p50_p95(&self) -> (f64, f64) {
+        let g = self.inner.lock().unwrap();
+        (g.ttft_ms.percentile(50.0), g.ttft_ms.percentile(95.0))
+    }
+
+    pub fn requests_completed(&self) -> u64 {
+        self.inner.lock().unwrap().requests_completed
+    }
+
+    /// Prometheus text exposition format.
+    pub fn export(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let up = self.started.elapsed().as_secs_f64();
+        let mut out = String::new();
+        let mut gauge = |name: &str, help: &str, v: f64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"
+            ));
+        };
+        gauge("ff_uptime_seconds", "process uptime", up);
+        gauge("ff_requests_completed", "completed requests",
+              g.requests_completed as f64);
+        gauge("ff_requests_rejected", "rejected (backpressure)",
+              g.requests_rejected as f64);
+        gauge("ff_prompt_tokens_total", "prefilled tokens",
+              g.prompt_tokens as f64);
+        gauge("ff_generated_tokens_total", "decoded tokens",
+              g.generated_tokens as f64);
+        gauge("ff_blocks_dense_total", "dense prefill blocks",
+              g.blocks_dense as f64);
+        gauge("ff_blocks_sparse_total", "sparse prefill blocks",
+              g.blocks_sparse as f64);
+        for (name, s) in [
+            ("ff_ttft_ms", &g.ttft_ms),
+            ("ff_tpot_ms", &g.tpot_ms),
+            ("ff_e2e_ms", &g.e2e_ms),
+        ] {
+            if !s.is_empty() {
+                gauge(&format!("{name}_mean"), "mean", s.mean());
+                gauge(&format!("{name}_p50"), "median", s.percentile(50.0));
+                gauge(&format!("{name}_p95"), "p95", s.percentile(95.0));
+                gauge(&format!("{name}_p99"), "p99", s.percentile(99.0));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_exports() {
+        let m = Metrics::new();
+        m.record_ttft(10.0);
+        m.record_ttft(20.0);
+        m.record_tpot(2.0);
+        m.record_request(512, 32, 600.0);
+        m.record_block(true);
+        m.record_block(false);
+        let (p50, p95) = m.ttft_p50_p95();
+        assert!((p50 - 15.0).abs() < 1e-9);
+        assert!(p95 > p50);
+        let text = m.export();
+        assert!(text.contains("ff_ttft_ms_mean 15"));
+        assert!(text.contains("ff_requests_completed 1"));
+        assert!(text.contains("ff_blocks_sparse_total 1"));
+    }
+
+    #[test]
+    fn thread_safety() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let hs: Vec<_> = (0..8)
+            .map(|i| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for j in 0..100 {
+                        m.record_ttft((i * 100 + j) as f64);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        let g = m.export();
+        assert!(g.contains("ff_ttft_ms_mean"));
+    }
+}

@@ -1,0 +1,220 @@
+//! Request router: admission control, bounded queueing, backpressure.
+//!
+//! The router sits between the (multi-threaded) HTTP front-end and the
+//! single-threaded engine executor. Admission enforces (a) a queue-depth
+//! bound and (b) KV-memory feasibility via the paged allocator, rejecting
+//! early (HTTP 429) rather than letting latency collapse.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::engine::SparsityConfig;
+use crate::kvcache::PagedAllocator;
+use crate::metrics::Metrics;
+
+/// A queued generation request.
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_tokens: usize,
+    pub cfg: SparsityConfig,
+    /// Channel the finished response is delivered on.
+    pub respond: Sender<Response>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub tokens: usize,
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+    pub e2e_ms: f64,
+    pub error: Option<String>,
+}
+
+/// Rejection reasons surfaced to clients.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reject {
+    QueueFull,
+    PromptTooLong { len: usize, max: usize },
+    KvExhausted,
+}
+
+struct Inner {
+    queue: VecDeque<Request>,
+    next_id: u64,
+    closed: bool,
+}
+
+/// Thread-safe router handle.
+pub struct Router {
+    inner: Mutex<Inner>,
+    notify: Condvar,
+    pub max_queue: usize,
+    pub max_ctx: usize,
+    pub kv_pool: Mutex<PagedAllocator>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Router {
+    pub fn new(max_queue: usize, max_ctx: usize, kv_pages: usize,
+               page_size: usize, metrics: Arc<Metrics>) -> Self {
+        Router {
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                next_id: 1,
+                closed: false,
+            }),
+            notify: Condvar::new(),
+            max_queue,
+            max_ctx,
+            kv_pool: Mutex::new(PagedAllocator::new(kv_pages, page_size)),
+            metrics,
+        }
+    }
+
+    /// Admit a request or reject with a reason.
+    pub fn submit(&self, prompt: Vec<i32>, max_tokens: usize,
+                  cfg: SparsityConfig, respond: Sender<Response>)
+                  -> Result<u64, Reject> {
+        let total = prompt.len() + max_tokens;
+        if total > self.max_ctx {
+            self.metrics.record_rejection();
+            return Err(Reject::PromptTooLong {
+                len: total,
+                max: self.max_ctx,
+            });
+        }
+        {
+            let pool = self.kv_pool.lock().unwrap();
+            if !pool.can_allocate(total) {
+                self.metrics.record_rejection();
+                return Err(Reject::KvExhausted);
+            }
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.queue.len() >= self.max_queue {
+            self.metrics.record_rejection();
+            return Err(Reject::QueueFull);
+        }
+        let id = g.next_id;
+        g.next_id += 1;
+        g.queue.push_back(Request {
+            id,
+            prompt,
+            max_tokens,
+            cfg,
+            respond,
+        });
+        drop(g);
+        self.notify.notify_one();
+        Ok(id)
+    }
+
+    /// Blocking pop for the executor thread; None once closed and empty.
+    pub fn pop_blocking(&self) -> Option<Request> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = g.queue.pop_front() {
+                return Some(r);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.notify.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking drain of up to `n` requests (batcher admission).
+    pub fn pop_up_to(&self, n: usize) -> Vec<Request> {
+        let mut g = self.inner.lock().unwrap();
+        let take = n.min(g.queue.len());
+        g.queue.drain(..take).collect()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.notify.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn router(max_queue: usize) -> Router {
+        Router::new(max_queue, 4096, 64, 128, Arc::new(Metrics::new()))
+    }
+
+    #[test]
+    fn admits_and_pops_fifo() {
+        let r = router(4);
+        let (tx, _rx) = channel();
+        let id1 = r
+            .submit(vec![1; 10], 4, SparsityConfig::dense(), tx.clone())
+            .unwrap();
+        let id2 = r
+            .submit(vec![2; 10], 4, SparsityConfig::dense(), tx)
+            .unwrap();
+        assert!(id2 > id1);
+        assert_eq!(r.queue_depth(), 2);
+        assert_eq!(r.pop_blocking().unwrap().id, id1);
+        assert_eq!(r.pop_up_to(5).len(), 1);
+    }
+
+    #[test]
+    fn rejects_on_queue_full() {
+        let r = router(1);
+        let (tx, _rx) = channel();
+        r.submit(vec![1; 8], 1, SparsityConfig::dense(), tx.clone())
+            .unwrap();
+        let e = r
+            .submit(vec![1; 8], 1, SparsityConfig::dense(), tx)
+            .unwrap_err();
+        assert_eq!(e, Reject::QueueFull);
+    }
+
+    #[test]
+    fn rejects_long_prompts() {
+        let r = router(4);
+        let (tx, _rx) = channel();
+        let e = r
+            .submit(vec![0; 5000], 10, SparsityConfig::dense(), tx)
+            .unwrap_err();
+        assert!(matches!(e, Reject::PromptTooLong { .. }));
+    }
+
+    #[test]
+    fn rejects_when_kv_exhausted() {
+        // pool: 64 pages * 128 = 8192 positions; max_ctx 4096 passes the
+        // length check; exhaust the pool first
+        let r = router(4);
+        {
+            let mut pool = r.kv_pool.lock().unwrap();
+            let _leak = pool.allocate(64).unwrap();
+            std::mem::forget(_leak);
+        }
+        let (tx, _rx) = channel();
+        let e = r
+            .submit(vec![0; 1000], 10, SparsityConfig::dense(), tx)
+            .unwrap_err();
+        assert_eq!(e, Reject::KvExhausted);
+    }
+
+    #[test]
+    fn close_unblocks_pop() {
+        let r = Arc::new(router(2));
+        let r2 = r.clone();
+        let h = std::thread::spawn(move || r2.pop_blocking().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        r.close();
+        assert!(h.join().unwrap());
+    }
+}

@@ -1,0 +1,367 @@
+//! PJRT runtime: loads AOT HLO-text artifacts, compiles them on the CPU
+//! PJRT client (lazily, cached), keeps every model weight resident as a
+//! device buffer, and dispatches executions with manifest-driven argument
+//! resolution (the per-layer weight substitution of the artifact ABI).
+//!
+//! Interchange gotcha (see /opt/xla-example/README.md): artifacts are HLO
+//! *text*; `HloModuleProto::from_text_file` reassigns instruction ids,
+//! which is what makes jax≥0.5 output loadable on xla_extension 0.5.1.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::{ArgKind, Manifest};
+use crate::weights::WeightStore;
+
+/// A runtime input value (host-side view, uploaded per call).
+pub enum Input<'a> {
+    F32(&'a [f32], Vec<usize>),
+    I32(&'a [i32], Vec<usize>),
+}
+
+impl<'a> Input<'a> {
+    fn dims(&self) -> &[usize] {
+        match self {
+            Input::F32(_, d) | Input::I32(_, d) => d,
+        }
+    }
+}
+
+/// One decomposed output tensor.
+#[derive(Debug, Clone)]
+pub struct Output {
+    pub data: Vec<f32>,
+}
+
+/// Cumulative dispatch statistics (perf accounting; EXPERIMENTS.md §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct DispatchStats {
+    pub executions: u64,
+    pub compile_time: Duration,
+    pub upload_time: Duration,
+    pub execute_time: Duration,
+    pub download_time: Duration,
+}
+
+/// Pre-resolved argument slot for one (executable, layer) pair: weight
+/// slots hold the device buffer directly; input slots remember which
+/// ABI arg they validate against.
+enum PlanArg {
+    Weight(Rc<xla::PjRtBuffer>),
+    Input { name: String, arg_idx: usize },
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Rc<Manifest>,
+    weights: Rc<WeightStore>,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    wbufs: RefCell<HashMap<String, Rc<xla::PjRtBuffer>>>,
+    plans: RefCell<HashMap<(String, usize), Rc<Vec<PlanArg>>>>,
+    stats: RefCell<DispatchStats>,
+}
+
+impl Runtime {
+    pub fn new(manifest: Rc<Manifest>, weights: Rc<WeightStore>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            weights,
+            exes: RefCell::new(HashMap::new()),
+            wbufs: RefCell::new(HashMap::new()),
+            plans: RefCell::new(HashMap::new()),
+            stats: RefCell::new(DispatchStats::default()),
+        })
+    }
+
+    pub fn stats(&self) -> DispatchStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Compile (or fetch cached) an executable by manifest name.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown executable {name}"))?;
+        let path = self.manifest.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        self.stats.borrow_mut().compile_time += t0.elapsed();
+        let exe = Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of executables (startup warmup).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+
+    /// Device-resident weight buffer (uploaded once, cached).
+    fn weight_buffer(&self, name: &str) -> Result<Rc<xla::PjRtBuffer>> {
+        if let Some(b) = self.wbufs.borrow().get(name) {
+            return Ok(b.clone());
+        }
+        let data = self.weights.get(name)?;
+        let dims = self.weights.shape(name)?.to_vec();
+        let buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(data, &dims, None)
+            .map_err(|e| anyhow!("uploading weight {name}: {e}"))?;
+        let buf = Rc::new(buf);
+        self.wbufs
+            .borrow_mut()
+            .insert(name.to_string(), buf.clone());
+        Ok(buf)
+    }
+
+    /// Build (or fetch) the cached dispatch plan for (exe, layer).
+    fn plan(&self, exe_name: &str, layer: usize)
+            -> Result<Rc<Vec<PlanArg>>> {
+        let key = (exe_name.to_string(), layer);
+        if let Some(p) = self.plans.borrow().get(&key) {
+            return Ok(p.clone());
+        }
+        let spec = self
+            .manifest
+            .executables
+            .get(exe_name)
+            .ok_or_else(|| anyhow!("unknown executable {exe_name}"))?;
+        let mut plan = Vec::with_capacity(spec.args.len());
+        for (arg_idx, arg) in spec.args.iter().enumerate() {
+            match &arg.kind {
+                ArgKind::Input(name) => plan.push(PlanArg::Input {
+                    name: name.clone(),
+                    arg_idx,
+                }),
+                kind => {
+                    let wname = self
+                        .manifest
+                        .resolve_weight_name(kind, layer)
+                        .unwrap();
+                    plan.push(PlanArg::Weight(self.weight_buffer(&wname)?));
+                }
+            }
+        }
+        let plan = Rc::new(plan);
+        self.plans.borrow_mut().insert(key, plan.clone());
+        Ok(plan)
+    }
+
+    fn upload(&self, input: &Input) -> Result<xla::PjRtBuffer> {
+        let r = match input {
+            Input::F32(data, dims) => {
+                self.client.buffer_from_host_buffer::<f32>(data, dims, None)
+            }
+            Input::I32(data, dims) => {
+                self.client.buffer_from_host_buffer::<i32>(data, dims, None)
+            }
+        };
+        r.map_err(|e| anyhow!("uploading input: {e}"))
+    }
+
+    /// Execute `exe_name` for transformer layer `layer` (ignored by
+    /// layer-independent entry points). `inputs` are matched by ABI name;
+    /// weight arguments resolve through the manifest + weight store.
+    /// Returns the decomposed output tuple as host f32 tensors.
+    pub fn run(&self, exe_name: &str, layer: usize,
+               inputs: &[(&str, Input)]) -> Result<Vec<Output>> {
+        // Perf (EXPERIMENTS.md §Perf, L3 iters 1+2): the per-(executable,
+        // layer) dispatch plan — weight-name resolution, weight-buffer
+        // lookup, spec clone — is computed once and cached; steady-state
+        // dispatch only uploads the true inputs.
+        let manifest = self.manifest.clone();
+        let plan = self.plan(exe_name, layer)?;
+        let spec = manifest
+            .executables
+            .get(exe_name)
+            .ok_or_else(|| anyhow!("unknown executable {exe_name}"))?;
+        let exe = self.executable(exe_name)?;
+
+        let t0 = Instant::now();
+        let mut owned: Vec<(usize, xla::PjRtBuffer)> = Vec::new();
+        for (slot, pa) in plan.iter().enumerate() {
+            if let PlanArg::Input { name, arg_idx } = pa {
+                let (_, input) = inputs
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .ok_or_else(|| {
+                        anyhow!("{exe_name}: missing input '{name}'")
+                    })?;
+                let arg = &spec.args[*arg_idx];
+                anyhow::ensure!(
+                    input.dims() == arg.shape.as_slice(),
+                    "{exe_name}: input '{name}' shape {:?} != ABI {:?}",
+                    input.dims(),
+                    arg.shape
+                );
+                owned.push((slot, self.upload(input)?));
+            }
+        }
+        let mut owned_it = owned.iter().peekable();
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(plan.len());
+        for (slot, pa) in plan.iter().enumerate() {
+            match pa {
+                PlanArg::Weight(b) => args.push(b.as_ref()),
+                PlanArg::Input { .. } => {
+                    let (s, b) = owned_it.next().unwrap();
+                    debug_assert_eq!(*s, slot);
+                    args.push(b);
+                }
+            }
+        }
+        let upload_t = t0.elapsed();
+
+        let t1 = Instant::now();
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("executing {exe_name}: {e}"))?;
+        let execute_t = t1.elapsed();
+
+        let t2 = Instant::now();
+        let mut lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("downloading {exe_name} output: {e}"))?;
+        let parts = lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("untupling {exe_name}: {e}"))?;
+        let mut outputs = Vec::with_capacity(parts.len());
+        for p in parts {
+            outputs.push(Output {
+                data: p
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output to_vec: {e}"))?,
+            });
+        }
+        let download_t = t2.elapsed();
+
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.upload_time += upload_t;
+        s.execute_time += execute_t;
+        s.download_time += download_t;
+        Ok(outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+    use crate::weights::WeightStore;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = crate::test_artifacts_dir()?;
+        let m = Rc::new(Manifest::load(&dir).unwrap());
+        let w = Rc::new(WeightStore::load(&m).unwrap());
+        Some(Runtime::new(m, w).unwrap())
+    }
+
+    #[test]
+    fn embed_executes() {
+        let Some(rt) = runtime() else { return };
+        let block = rt.manifest.model.block;
+        let d = rt.manifest.model.d_model;
+        let tokens: Vec<i32> = (0..block as i32).map(|i| i % 250).collect();
+        let out = rt
+            .run(
+                &format!("embed_t{block}"),
+                0,
+                &[("tokens", Input::I32(&tokens, vec![block]))],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].data.len(), block * d);
+        assert!(out[0].data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn layer_dense_roundtrip_shapes() {
+        let Some(rt) = runtime() else { return };
+        let m = &rt.manifest.model;
+        let s = m.buckets[0];
+        let (block, d, nkv, dh) = (m.block, m.d_model, m.n_kv_heads, m.d_head);
+        let x = vec![0.05f32; block * d];
+        let kc = vec![0f32; s * nkv * dh];
+        let pos = [0i32];
+        let out = rt
+            .run(
+                &format!("layer_dense_t{block}_s{s}"),
+                0,
+                &[
+                    ("x", Input::F32(&x, vec![block, d])),
+                    ("k_cache", Input::F32(&kc, vec![s, nkv, dh])),
+                    ("v_cache", Input::F32(&kc, vec![s, nkv, dh])),
+                    ("pos", Input::I32(&pos, vec![])),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].data.len(), block * d);
+        assert_eq!(out[1].data.len(), block * nkv * dh);
+        assert_eq!(out[2].data.len(), block * nkv * dh);
+        assert!(out[0].data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn missing_input_is_reported() {
+        let Some(rt) = runtime() else { return };
+        let block = rt.manifest.model.block;
+        let err = rt
+            .run(&format!("embed_t{block}"), 0, &[])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing input"), "{err}");
+    }
+
+    #[test]
+    fn shape_mismatch_is_reported() {
+        let Some(rt) = runtime() else { return };
+        let block = rt.manifest.model.block;
+        let tokens = vec![0i32; 3];
+        let err = rt
+            .run(
+                &format!("embed_t{block}"),
+                0,
+                &[("tokens", Input::I32(&tokens, vec![3]))],
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        let Some(rt) = runtime() else { return };
+        let block = rt.manifest.model.block;
+        let name = format!("embed_t{block}");
+        rt.executable(&name).unwrap();
+        let n = rt.compiled_count();
+        rt.executable(&name).unwrap();
+        assert_eq!(rt.compiled_count(), n);
+    }
+}

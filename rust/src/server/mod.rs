@@ -1,0 +1,195 @@
+//! Minimal HTTP/1.1 JSON API on std::net (the vendored crate set has no
+//! tokio/hyper; a thread-per-connection server is plenty for a CPU
+//! engine whose executor is single-threaded anyway).
+//!
+//! Endpoints:
+//! * `POST /generate`  — {"prompt": str, "max_tokens": n, "sparsity": s?}
+//! * `GET  /metrics`   — Prometheus text
+//! * `GET  /healthz`   — liveness
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::SparsityConfig;
+use crate::metrics::Metrics;
+use crate::router::{Reject, Router};
+use crate::tokenizer::Tokenizer;
+use crate::util::json::{self, Json};
+
+pub struct Server {
+    pub router: Arc<Router>,
+    pub metrics: Arc<Metrics>,
+    pub tokenizer: Tokenizer,
+    pub default_sparsity: Option<f64>,
+}
+
+/// A parsed HTTP request (just enough of HTTP/1.1).
+struct HttpReq {
+    method: String,
+    path: String,
+    body: String,
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<HttpReq> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("/").to_string();
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    if content_len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(HttpReq {
+        method,
+        path,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
+}
+
+fn respond(stream: &mut TcpStream, status: u16, content_type: &str,
+           body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        _ => "Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    Ok(())
+}
+
+impl Server {
+    /// Serve forever on `addr` (e.g. "127.0.0.1:8080").
+    pub fn serve(self: Arc<Self>, addr: &str) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        eprintln!("[server] listening on {addr}");
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let this = self.clone();
+            std::thread::spawn(move || {
+                let mut stream = stream;
+                if let Err(e) = this.handle(&mut stream) {
+                    let _ = respond(
+                        &mut stream,
+                        500,
+                        "application/json",
+                        &Json::obj(vec![(
+                            "error",
+                            Json::Str(e.to_string()),
+                        )])
+                        .to_string(),
+                    );
+                }
+            });
+        }
+        Ok(())
+    }
+
+    fn handle(&self, stream: &mut TcpStream) -> Result<()> {
+        let req = read_request(stream)?;
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => {
+                respond(stream, 200, "text/plain", "ok")
+            }
+            ("GET", "/metrics") => {
+                respond(stream, 200, "text/plain", &self.metrics.export())
+            }
+            ("POST", "/generate") => self.generate(stream, &req.body),
+            _ => respond(stream, 404, "text/plain", "not found"),
+        }
+    }
+
+    fn generate(&self, stream: &mut TcpStream, body: &str) -> Result<()> {
+        let j = match json::parse(body) {
+            Ok(j) => j,
+            Err(e) => {
+                return respond(
+                    stream,
+                    400,
+                    "application/json",
+                    &Json::obj(vec![("error", Json::Str(format!("bad json: {e}")))])
+                        .to_string(),
+                )
+            }
+        };
+        let prompt_text = j
+            .get("prompt")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| anyhow!("missing prompt"))?;
+        let max_tokens = j
+            .get("max_tokens")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(32);
+        let sparsity = j
+            .get("sparsity")
+            .and_then(|v| v.as_f64())
+            .or(self.default_sparsity);
+        let cfg = match sparsity {
+            Some(s) if s > 0.0 => SparsityConfig::fastforward(s),
+            _ => SparsityConfig::dense(),
+        };
+        let prompt = self.tokenizer.encode(prompt_text);
+        let (tx, rx) = channel();
+        match self.router.submit(prompt, max_tokens, cfg, tx) {
+            Err(reject) => {
+                let (code, msg) = match reject {
+                    Reject::QueueFull => (429, "queue full".to_string()),
+                    Reject::KvExhausted => (429, "kv pool exhausted".into()),
+                    Reject::PromptTooLong { len, max } => {
+                        (400, format!("prompt+gen {len} exceeds max {max}"))
+                    }
+                };
+                respond(
+                    stream,
+                    code,
+                    "application/json",
+                    &Json::obj(vec![("error", Json::Str(msg))]).to_string(),
+                )
+            }
+            Ok(id) => {
+                let resp = rx
+                    .recv()
+                    .map_err(|_| anyhow!("executor dropped request"))?;
+                let payload = Json::obj(vec![
+                    ("id", Json::Num(id as f64)),
+                    ("text", Json::Str(resp.text)),
+                    ("tokens", Json::Num(resp.tokens as f64)),
+                    ("ttft_ms", Json::Num(resp.ttft_ms)),
+                    ("tpot_ms", Json::Num(resp.tpot_ms)),
+                    ("e2e_ms", Json::Num(resp.e2e_ms)),
+                    (
+                        "error",
+                        resp.error.map(Json::Str).unwrap_or(Json::Null),
+                    ),
+                ]);
+                respond(stream, 200, "application/json",
+                        &payload.to_string())
+            }
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Expert mask selection: host-side top-K over neuron scores plus the
+//! paper's ablation baselines (Table 7) and the CATS thresholding
+//! comparator.
+
+/// Where a block's expert indices come from (paper Table 7 variants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExpertSource {
+    /// Learned expert predictor (the paper's method).
+    Trained,
+    /// Per-block dynamic oracle: dense activation norms of the block
+    /// itself (upper bound; infeasible in production).
+    Oracle,
+    /// GRIFFIN-style: experts picked on the first block, reused for all
+    /// subsequent blocks.
+    FirstBlockStatic,
+    /// CATS-style (Lee et al. 2024): threshold the activation statistic
+    /// instead of top-K. Cardinality is data-dependent, so the engine
+    /// must pad/trim to the nearest compiled K — demonstrating the
+    /// static-shape overhead the paper criticizes in §1.
+    Cats,
+}
+
+/// Indices of the K largest scores, ascending order (the AOT gather
+/// kernel requires sorted indices for coalesced weight slabs).
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<i32> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    if k < scores.len() {
+        // O(f) partial selection of the k largest by score.
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            scores[b].partial_cmp(&scores[a]).unwrap()
+        });
+        idx.truncate(k);
+    }
+    let mut out: Vec<i32> = idx.into_iter().map(|i| i as i32).collect();
+    out.sort_unstable();
+    out
+}
+
+/// CATS-style thresholding (Lee et al. 2024): keep neurons whose |score|
+/// exceeds a threshold chosen to hit a target density on calibration
+/// data. Returns (indices, achieved_density). Used as a baseline in the
+/// ablation harness; unlike top-K its cardinality is data-dependent,
+/// which is exactly why it breaks block-level batching during prefill
+/// (paper §1) — we surface that as a variable K the engine must pad.
+pub fn cats_threshold_indices(scores: &[f32], threshold: f32) -> Vec<i32> {
+    let mut idx: Vec<i32> = scores
+        .iter()
+        .enumerate()
+        .filter(|(_, &s)| s.abs() > threshold)
+        .map(|(i, _)| i as i32)
+        .collect();
+    idx.sort_unstable();
+    idx
+}
+
+/// Pick the CATS threshold achieving `density` on a score sample.
+pub fn cats_calibrate_threshold(scores: &[f32], density: f64) -> f32 {
+    let mut abs: Vec<f32> = scores.iter().map(|s| s.abs()).collect();
+    abs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let keep = ((abs.len() as f64) * density).round() as usize;
+    if keep == 0 {
+        return f32::MAX;
+    }
+    if keep >= abs.len() {
+        return -1.0;
+    }
+    abs[keep - 1]
+}
+
+/// Pad or trim an index set to exactly `k` entries (engine requirement:
+/// artifact shapes are static). Pads with distinct unused indices —
+/// never duplicates, which would double-count neurons through W_down.
+pub fn pad_indices_to_k(mut idx: Vec<i32>, k: usize, f: usize) -> Vec<i32> {
+    idx.truncate(k);
+    if idx.len() < k {
+        let present: std::collections::HashSet<i32> =
+            idx.iter().copied().collect();
+        for cand in 0..f as i32 {
+            if idx.len() == k {
+                break;
+            }
+            if !present.contains(&cand) {
+                idx.push(cand);
+            }
+        }
+    }
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn naive_top_k(scores: &[f32], k: usize) -> Vec<i32> {
+        let mut pairs: Vec<(f32, usize)> =
+            scores.iter().cloned().zip(0..).collect();
+        pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut idx: Vec<i32> =
+            pairs.iter().take(k).map(|&(_, i)| i as i32).collect();
+        idx.sort_unstable();
+        idx
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let scores = [0.1f32, 5.0, -2.0, 3.0, 3.5, 0.0];
+        assert_eq!(top_k_indices(&scores, 3), vec![1, 3, 4]);
+        assert_eq!(top_k_indices(&scores, 0), Vec::<i32>::new());
+        assert_eq!(top_k_indices(&scores, 10).len(), 6);
+    }
+
+    #[test]
+    fn prop_matches_naive() {
+        check("topk-vs-naive", 200, |r| {
+            let n = r.range(1, 600);
+            let k = r.range(0, n + 1);
+            let scores: Vec<f32> =
+                (0..n).map(|_| (r.f64() * 20.0 - 10.0) as f32).collect();
+            let fast = top_k_indices(&scores, k);
+            let naive = naive_top_k(&scores, k);
+            // score multisets must match (indices may differ under ties)
+            let sf: Vec<f32> =
+                fast.iter().map(|&i| scores[i as usize]).collect();
+            let sn: Vec<f32> =
+                naive.iter().map(|&i| scores[i as usize]).collect();
+            let sum_f: f32 = sf.iter().sum();
+            let sum_n: f32 = sn.iter().sum();
+            crate::prop_assert!(fast.len() == naive.len(), "len");
+            crate::prop_assert!(
+                (sum_f - sum_n).abs() < 1e-4 * (1.0 + sum_n.abs()),
+                "top-k score mass differs: {sum_f} vs {sum_n}"
+            );
+            // sortedness + dedup
+            for w in fast.windows(2) {
+                crate::prop_assert!(w[0] < w[1], "not strictly sorted");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cats_density_calibration() {
+        let mut r = crate::util::rng::Rng::new(9);
+        let scores: Vec<f32> =
+            (0..512).map(|_| (r.normal()) as f32).collect();
+        let th = cats_calibrate_threshold(&scores, 0.5);
+        let idx = cats_threshold_indices(&scores, th);
+        let density = idx.len() as f64 / scores.len() as f64;
+        assert!((density - 0.5).abs() < 0.02, "density={density}");
+    }
+
+    #[test]
+    fn pad_indices_distinct() {
+        let idx = pad_indices_to_k(vec![3, 7], 5, 512);
+        assert_eq!(idx.len(), 5);
+        let mut d = idx.clone();
+        d.dedup();
+        assert_eq!(d.len(), 5);
+        assert!(idx.contains(&3) && idx.contains(&7));
+    }
+}

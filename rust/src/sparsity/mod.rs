@@ -1,0 +1,10 @@
+//! FastForward sparsity machinery: the layerwise schedule (Algorithm 1),
+//! expert mask selection, and the baseline predictors from the paper's
+//! ablations (per-block-dynamic oracle, GRIFFIN first-block-static, CATS
+//! thresholding).
+
+pub mod masks;
+pub mod schedule;
+
+pub use masks::{top_k_indices, ExpertSource};
+pub use schedule::{layerwise_schedule, quantize_densities};

@@ -1,0 +1,100 @@
+//! Byte-level tokenizer, the exact mirror of python/compile/corpus.py.
+//!
+//! Token space: 0..=255 raw bytes, 256 = <pad>, 257 = <bos>, 258 = <eos>;
+//! the LM-head vocabulary is padded to `vocab` (384 by default) for tidy
+//! matmul shapes — ids ≥ 259 never occur in text and the model learns to
+//! assign them ~zero probability.
+
+pub const PAD: i32 = 256;
+pub const BOS: i32 = 257;
+pub const EOS: i32 = 258;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub vocab: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab > EOS as usize, "vocab must cover specials");
+        Tokenizer { vocab }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    /// Decode, skipping special / out-of-range ids; invalid UTF-8 is
+    /// replaced (matching python's errors="replace").
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Pad (with PAD) or truncate to exactly `len` tokens.
+    pub fn pad_to(&self, mut tokens: Vec<i32>, len: usize) -> Vec<i32> {
+        tokens.truncate(len);
+        while tokens.len() < len {
+            tokens.push(PAD);
+        }
+        tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = Tokenizer::new(384);
+        let s = "the quick brown fox! 123";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = Tokenizer::new(384);
+        let s = "héllo → wörld";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_skipped_in_decode() {
+        let t = Tokenizer::new(384);
+        let mut toks = t.encode("ab");
+        toks.push(EOS);
+        toks.push(PAD);
+        assert_eq!(t.decode(&toks), "ab");
+    }
+
+    #[test]
+    fn pad_to_len() {
+        let t = Tokenizer::new(384);
+        let padded = t.pad_to(t.encode("abc"), 8);
+        assert_eq!(padded.len(), 8);
+        assert_eq!(&padded[3..], &[PAD; 5]);
+        let truncated = t.pad_to(t.encode("abcdef"), 2);
+        assert_eq!(truncated, vec![b'a' as i32, b'b' as i32]);
+    }
+
+    #[test]
+    fn property_roundtrip_random_bytes() {
+        let t = Tokenizer::new(384);
+        crate::util::proptest::check("tok-roundtrip", 64, |r| {
+            let n = r.range(0, 200);
+            let s: String = (0..n)
+                .map(|_| (b'a' + r.range(0, 26) as u8) as char)
+                .collect();
+            if t.decode(&t.encode(&s)) == s {
+                Ok(())
+            } else {
+                Err(format!("roundtrip failed for {s:?}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,129 @@
+//! Tiny CLI argument parser (std-only substrate; no clap in the vendored
+//! crate set). Supports `--flag`, `--key value`, `--key=value` and
+//! positional arguments, with typed accessors and defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+pub const FLAG_SET: &str = "__set__";
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(rest.to_string(), v);
+                } else {
+                    args.flags.insert(rest.to_string(), FLAG_SET.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of f64 ("0.3,0.4,0.5").
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.flags.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+        }
+    }
+
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.flags.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_kinds() {
+        let a = args("serve --port 8080 --verbose --mode=sparse pos1");
+        assert_eq!(a.positional, vec!["serve", "pos1"]);
+        assert_eq!(a.usize("port", 0), 8080);
+        assert!(a.has("verbose"));
+        assert_eq!(a.str("mode", "dense"), "sparse");
+        assert_eq!(a.str("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn lists() {
+        let a = args("--sparsity 0.3,0.4,0.5 --ctx 512,1024");
+        assert_eq!(a.f64_list("sparsity", &[]), vec![0.3, 0.4, 0.5]);
+        assert_eq!(a.usize_list("ctx", &[]), vec![512, 1024]);
+        assert_eq!(a.usize_list("other", &[7]), vec![7]);
+    }
+
+    #[test]
+    fn flag_then_flag() {
+        let a = args("--a --b v");
+        assert!(a.has("a"));
+        assert_eq!(a.str("b", ""), "v");
+    }
+}

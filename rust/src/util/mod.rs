@@ -1,0 +1,8 @@
+//! Std-only substrates for the offline build environment (no serde /
+//! clap / rand / criterion / proptest in the vendored crate set).
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,56 @@
+//! Property-testing harness (std-only substrate for the absent proptest
+//! crate): runs a property over many seeded random cases and, on failure,
+//! reports the seed so the case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` random cases. `prop` receives a fresh Rng per
+/// case and returns Err(description) on violation. Panics with the seed
+/// of the first failing case.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let base = 0xFA57F0A4u64;
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed (case {i}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-like helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("add-commutes", 100, |r| {
+            let a = r.range(0, 1000) as i64;
+            let b = r.range(0, 1000) as i64;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failures() {
+        check("always-fails", 10, |_| Err("nope".into()));
+    }
+}

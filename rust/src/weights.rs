@@ -1,0 +1,111 @@
+//! Weight store: loads weights.bin (flat little-endian f32, offsets from
+//! the manifest) and serves per-tensor slices to the runtime dispatcher.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::manifest::{Manifest, WeightEntry};
+
+#[derive(Debug)]
+pub struct WeightStore {
+    data: Vec<f32>,
+    table: BTreeMap<String, WeightEntry>,
+}
+
+impl WeightStore {
+    pub fn load(manifest: &Manifest) -> Result<WeightStore> {
+        Self::load_from(&manifest.weights_file, manifest.weights.clone())
+    }
+
+    pub fn load_from(
+        path: &Path,
+        table: BTreeMap<String, WeightEntry>,
+    ) -> Result<WeightStore> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        anyhow::ensure!(
+            bytes.len() % 4 == 0,
+            "weights.bin length {} not a multiple of 4",
+            bytes.len()
+        );
+        let mut data = vec![0f32; bytes.len() / 4];
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        // Validate the table against the blob before serving anything.
+        for (name, e) in &table {
+            let end = e.offset / 4 + e.numel();
+            anyhow::ensure!(
+                e.offset % 4 == 0 && end <= data.len(),
+                "weight {name} out of bounds (offset {} numel {})",
+                e.offset,
+                e.numel()
+            );
+        }
+        Ok(WeightStore { data, table })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        let e = self
+            .table
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown weight {name}"))?;
+        let start = e.offset / 4;
+        Ok(&self.data[start..start + e.numel()])
+    }
+
+    pub fn shape(&self, name: &str) -> Result<&[usize]> {
+        Ok(&self
+            .table
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown weight {name}"))?
+            .shape)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.table.keys()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.table.values().map(|e| e.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+
+    #[test]
+    fn loads_and_validates_real_weights() {
+        let Some(dir) = crate::test_artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let w = WeightStore::load(&m).unwrap();
+        let embed = w.get("embed").unwrap();
+        assert_eq!(embed.len(), m.model.vocab * m.model.d_model);
+        // trained weights should not be all-zero or NaN
+        assert!(embed.iter().any(|&x| x != 0.0));
+        assert!(embed.iter().all(|x| x.is_finite()));
+        // rms gains near 1 (trained from init 1.0)
+        let rms = w.get("layers.0.rms1").unwrap();
+        let mean: f32 = rms.iter().sum::<f32>() / rms.len() as f32;
+        assert!((0.2..5.0).contains(&mean), "rms1 mean {mean}");
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_table() {
+        let Some(dir) = crate::test_artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let mut bad = m.weights.clone();
+        bad.insert(
+            "bogus".into(),
+            crate::manifest::WeightEntry {
+                offset: usize::MAX / 2,
+                shape: vec![10],
+            },
+        );
+        assert!(WeightStore::load_from(&m.weights_file, bad).is_err());
+    }
+}

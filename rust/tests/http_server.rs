@@ -1,0 +1,114 @@
+//! HTTP server integration: boots the full serve stack on an ephemeral
+//! port and exercises /generate, /metrics, /healthz with a raw TCP
+//! client. Skips without artifacts.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use fastforward::batcher::{Batcher, BatcherConfig};
+use fastforward::engine::Engine;
+use fastforward::manifest::Manifest;
+use fastforward::metrics::Metrics;
+use fastforward::router::Router;
+use fastforward::runtime::Runtime;
+use fastforward::server::Server;
+use fastforward::tokenizer::Tokenizer;
+use fastforward::util::json;
+use fastforward::weights::WeightStore;
+
+fn http(addr: &str, req: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(req.as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn post(addr: &str, path: &str, body: &str) -> String {
+    http(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn get(addr: &str, path: &str) -> String {
+    http(addr, &format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n"))
+}
+
+#[test]
+fn full_http_stack() {
+    let Some(dir) = fastforward::test_artifacts_dir() else { return };
+    let metrics = Arc::new(Metrics::new());
+    let router = Arc::new(Router::new(16, 4096, 256, 128, metrics.clone()));
+
+    // executor thread
+    let r2 = router.clone();
+    let d2 = dir.clone();
+    let exec = std::thread::spawn(move || {
+        let m = Rc::new(Manifest::load(&d2).unwrap());
+        let w = Rc::new(WeightStore::load(&m).unwrap());
+        let rt = Rc::new(Runtime::new(m, w).unwrap());
+        Batcher::new(Engine::new(rt), r2, BatcherConfig::default())
+            .run()
+            .unwrap();
+    });
+
+    // server on an ephemeral port (bind first to learn the port)
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener); // Server re-binds; tiny race is acceptable in tests
+    let server = Arc::new(Server {
+        router: router.clone(),
+        metrics: metrics.clone(),
+        tokenizer: Tokenizer::new(384),
+        default_sparsity: Some(0.5),
+    });
+    let addr2 = addr.clone();
+    std::thread::spawn(move || {
+        let _ = server.serve(&addr2);
+    });
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    // healthz
+    let h = get(&addr, "/healthz");
+    assert!(h.starts_with("HTTP/1.1 200"), "{h}");
+
+    // generate (sparse default)
+    let resp = post(
+        &addr,
+        "/generate",
+        r#"{"prompt": "the cat sat on the mat and the", "max_tokens": 4}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    let body = resp.split("\r\n\r\n").nth(1).unwrap();
+    let j = json::parse(body).unwrap();
+    assert!(j.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(j.get("error").unwrap(), &json::Json::Null);
+
+    // bad json → 400
+    let bad = post(&addr, "/generate", "{nope");
+    assert!(bad.starts_with("HTTP/1.1 400"), "{bad}");
+
+    // oversized prompt → 400 with reason
+    let huge = format!(
+        r#"{{"prompt": "{}", "max_tokens": 4}}"#,
+        "a".repeat(5000)
+    );
+    let rej = post(&addr, "/generate", &huge);
+    assert!(rej.starts_with("HTTP/1.1 400"), "{rej}");
+
+    // metrics reflect the completed request
+    let m = get(&addr, "/metrics");
+    assert!(m.contains("ff_requests_completed 1"), "{m}");
+
+    // unknown path → 404
+    assert!(get(&addr, "/nope").starts_with("HTTP/1.1 404"));
+
+    router.close();
+    exec.join().unwrap();
+}
