@@ -1,0 +1,23 @@
+# FastForward top-level targets.
+#
+#   make artifacts   train + AOT-lower the L2 model into rust/artifacts
+#   make check       build, test, doc (missing-docs denied), fmt --check
+#   make serve       run the server against the built artifacts
+
+ARTIFACTS ?= rust/artifacts
+REPLICAS  ?= 1
+
+.PHONY: check artifacts serve clean
+
+check:
+	scripts/check.sh
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS)
+
+serve:
+	cd rust && cargo run --release --features pjrt -- serve \
+		--artifacts artifacts --replicas $(REPLICAS)
+
+clean:
+	cd rust && cargo clean

@@ -1,18 +1,30 @@
-//! Dynamic batcher / executor: continuous batching with chunked prefill.
+//! Dynamic batcher: the per-replica executor loop — continuous batching
+//! with chunked prefill and prefix-aware KV reuse.
 //!
-//! One executor thread owns the (non-Sync) engine and iterates:
+//! One executor thread owns one (non-Sync) engine and iterates:
 //!
-//! 1. admit new requests from the router (up to `max_active`),
+//! 1. admit new requests from its replica queue (up to `max_active`),
+//!    adopting already-computed KV pages for the longest cached prefix,
 //! 2. schedule up to `prefill_block_budget` prefill *blocks* across
 //!    active requests (Sarathi-style chunked prefill — long prompts
 //!    don't monopolize the engine),
 //! 3. run one decode round for every request in the decode phase
 //!    (continuous batching semantics; execution is serialized on the
-//!    single PJRT CPU stream but scheduling interleaves fairly),
-//! 4. retire finished requests, releasing their KV pages.
+//!    replica's PJRT stream but scheduling interleaves fairly),
+//! 4. retire finished requests, releasing their KV pages and reporting
+//!    their cost back to the replica's load accounting.
+//!
+//! When a prefill completes, its leading full blocks are offered to the
+//! shared [`crate::kvcache::PrefixCache`], so a later request with the
+//! same prompt prefix — on *any* replica — prefills only the uncached
+//! suffix.
 //!
 //! TTFT is recorded when a request's first decode logits are produced —
 //! matching the paper's definition.
+//!
+//! [`crate::pool::ExecutorPool`] spawns one `Batcher` per replica; the
+//! single-threaded stack (`Batcher::new`) remains for tests and
+//! examples.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -22,13 +34,13 @@ use anyhow::Result;
 use crate::engine::{argmax, Engine, PrefillSession};
 use crate::kvcache::{PageId, SeqKvCache};
 use crate::metrics::Metrics;
-use crate::router::{Request, Response, Router};
+use crate::router::{Replica, Request, Response, Router};
 use crate::tokenizer::{Tokenizer, EOS};
 
-/// Executor tuning knobs.
+/// Executor tuning knobs (see docs/OPERATIONS.md for guidance).
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
-    /// Max concurrently active (admitted) requests.
+    /// Max concurrently active (admitted) requests per replica.
     pub max_active: usize,
     /// Prefill blocks processed per scheduler iteration.
     pub prefill_block_budget: usize,
@@ -41,6 +53,15 @@ impl Default for BatcherConfig {
             prefill_block_budget: 4,
         }
     }
+}
+
+/// Why an admission attempt failed.
+enum AdmitError {
+    /// Transient KV-page shortage: the request stays queued and is
+    /// retried once retires (or prefix-cache reclaim) free pages.
+    KvPressure,
+    /// Permanent failure for this request: answer it with an error.
+    Fatal(anyhow::Error),
 }
 
 enum Phase {
@@ -61,22 +82,34 @@ struct Active {
     admitted: Instant,
     ttft_ms: Option<f64>,
     decode_ms_total: f64,
+    reused_blocks: usize,
+    ok: bool,
 }
 
-/// Runs the scheduling loop until the router closes.
+/// Runs one replica's scheduling loop until the router closes.
 pub struct Batcher {
     engine: Engine,
     router: Arc<Router>,
+    replica: Arc<Replica>,
     metrics: Arc<Metrics>,
     cfg: BatcherConfig,
     tokenizer: Tokenizer,
 }
 
 impl Batcher {
+    /// Executor for replica 0 — the single-replica stack used by tests,
+    /// examples and `Batcher`-level embedding.
     pub fn new(engine: Engine, router: Arc<Router>,
                cfg: BatcherConfig) -> Self {
+        Self::for_replica(engine, router, cfg, 0)
+    }
+
+    /// Executor bound to replica `replica_id` of the router's pool.
+    pub fn for_replica(engine: Engine, router: Arc<Router>,
+                       cfg: BatcherConfig, replica_id: usize) -> Self {
         let vocab = engine.manifest().model.vocab;
         Batcher {
+            replica: router.replica(replica_id),
             metrics: router.metrics.clone(),
             engine,
             router,
@@ -92,19 +125,45 @@ impl Batcher {
             // 1. admit
             let slots = self.cfg.max_active.saturating_sub(active.len());
             if slots > 0 {
-                for req in self.router.pop_up_to(slots) {
+                let mut popped = self.replica.pop_up_to(slots);
+                while !popped.is_empty() {
+                    let req = popped.remove(0);
                     match self.admit(req) {
                         Ok(a) => active.push(a),
-                        Err(e) => eprintln!("[batcher] admit failed: {e}"),
+                        Err((req, AdmitError::KvPressure)) => {
+                            // transient: retires will free pages. Put
+                            // back EVERYTHING we popped — front-first so
+                            // FIFO order is preserved — and stop
+                            // admitting this round.
+                            for r in popped.drain(..).rev() {
+                                self.replica.requeue(r);
+                            }
+                            self.replica.requeue(req);
+                            break;
+                        }
+                        Err((req, AdmitError::Fatal(e))) => {
+                            self.reject_failed(req, e)
+                        }
                     }
                 }
             }
             if active.is_empty() {
-                // park on the router until work (or shutdown) arrives
-                match self.router.pop_blocking() {
+                // park on the replica queue until work (or shutdown)
+                match self.replica.pop_blocking() {
                     Some(req) => match self.admit(req) {
                         Ok(a) => active.push(a),
-                        Err(e) => eprintln!("[batcher] admit failed: {e}"),
+                        Err((req, AdmitError::KvPressure)) => {
+                            // nothing of ours will retire; wait briefly
+                            // for other replicas / the prefix cache to
+                            // release pages, then retry
+                            self.replica.requeue(req);
+                            std::thread::sleep(
+                                std::time::Duration::from_millis(2),
+                            );
+                        }
+                        Err((req, AdmitError::Fatal(e))) => {
+                            self.reject_failed(req, e)
+                        }
                     },
                     None => return Ok(()), // closed + drained
                 }
@@ -145,26 +204,127 @@ impl Batcher {
         }
     }
 
-    fn admit(&mut self, req: Request) -> Result<Active> {
+    /// A request that failed before becoming active: answer it and
+    /// settle its load accounting immediately.
+    fn reject_failed(&mut self, req: Request, err: anyhow::Error) {
+        eprintln!("[batcher:{}] admit failed: {err}", self.replica.id());
+        self.replica.complete(req.prompt.len(), req.max_tokens);
+        self.metrics.record_replica_done(self.replica.id(), false);
+        let _ = req
+            .respond
+            .send(Response::failed(req.id, err.to_string()));
+    }
+
+    fn admit(&mut self, req: Request)
+             -> std::result::Result<Active, (Request, AdmitError)> {
+        match self.try_admit(&req) {
+            Ok((session, pages, reused_blocks)) => Ok(Active {
+                req,
+                phase: Phase::Prefill(session),
+                pages,
+                admitted: Instant::now(),
+                ttft_ms: None,
+                decode_ms_total: 0.0,
+                reused_blocks,
+                ok: true,
+            }),
+            Err(e) => Err((req, e)),
+        }
+    }
+
+    /// Allocate pages, build the prefill session and adopt the longest
+    /// cached prefix (if any). Returns (session, pages, reused_blocks).
+    fn try_admit(&mut self, req: &Request)
+                 -> std::result::Result<
+                     (PrefillSession, Vec<PageId>, usize),
+                     AdmitError,
+                 > {
         let total = req.prompt.len() + req.max_tokens;
         let pages = {
             let mut pool = self.router.kv_pool.lock().unwrap();
             let n = pool.pages_for(total);
-            pool.allocate(n)?
+            match pool.allocate(n) {
+                Ok(p) => p,
+                Err(_) => {
+                    // live work outranks cached residency: reclaim
+                    // unpinned prefix entries and retry (lock order:
+                    // prefix_cache before kv_pool, as everywhere).
+                    // Still short = transient pressure, not a failure:
+                    // the router admitted this request, so pages will
+                    // appear as other work retires.
+                    drop(pool);
+                    let mut pc = self.router.prefix_cache.lock().unwrap();
+                    let mut pool = self.router.kv_pool.lock().unwrap();
+                    pc.evict_for(n, &mut pool);
+                    pool.allocate(n).map_err(|_| AdmitError::KvPressure)?
+                }
+            }
         };
-        let session = PrefillSession::new(
+        let release_on_err = |pages: &[PageId], router: &Router| {
+            let mut pool = router.kv_pool.lock().unwrap();
+            let _ = pool.release_all(pages);
+        };
+        let mut session = match PrefillSession::new(
             self.engine.clone(),
             req.prompt.clone(),
             req.cfg.clone(),
-        )?;
-        Ok(Active {
-            req,
-            phase: Phase::Prefill(session),
-            pages,
-            admitted: Instant::now(),
-            ttft_ms: None,
-            decode_ms_total: 0.0,
-        })
+        ) {
+            Ok(s) => s,
+            Err(e) => {
+                release_on_err(&pages, &self.router);
+                return Err(AdmitError::Fatal(e));
+            }
+        };
+
+        // Prefix adoption: pin the longest cached prefix under the lock,
+        // then copy lock-free from the hit's Arc-shared rows — a long
+        // memcpy never serializes the other replicas' admissions. The
+        // refcount pin keeps the entries (and their page accounting)
+        // resident until released.
+        let mut reused_blocks = 0;
+        if req.cfg.prefix_cacheable() {
+            let seed = req.cfg.prefill_fingerprint();
+            let hit = {
+                let mut pc = self.router.prefix_cache.lock().unwrap();
+                if !pc.enabled() {
+                    None
+                } else {
+                    let hit = pc.acquire(seed, &req.prompt);
+                    if hit.is_none() {
+                        // miss already counted by acquire
+                        self.metrics.set_prefix_state(
+                            pc.stats(),
+                            pc.used_bytes(),
+                            pc.entry_count(),
+                        );
+                    }
+                    hit
+                }
+            };
+            if let Some(hit) = hit {
+                let adopt = session
+                    .adopt_prefix(hit.tokens, |cache| hit.copy_into(cache));
+                {
+                    let mut pc = self.router.prefix_cache.lock().unwrap();
+                    pc.release(&hit);
+                    self.metrics.set_prefix_state(
+                        pc.stats(),
+                        pc.used_bytes(),
+                        pc.entry_count(),
+                    );
+                }
+                match adopt {
+                    Ok(()) => {
+                        reused_blocks = hit.tokens / self.engine.block();
+                    }
+                    Err(e) => {
+                        release_on_err(&pages, &self.router);
+                        return Err(AdmitError::Fatal(e));
+                    }
+                }
+            }
+        }
+        Ok((session, pages, reused_blocks))
     }
 
     fn step_prefill(&mut self, a: &mut Active, budget: &mut usize,
@@ -175,8 +335,7 @@ impl Batcher {
         if *budget == 0 {
             return Ok(());
         }
-        let consumed = session.step()?;
-        self.metrics.record_block(consumed == self.engine.block());
+        session.step()?;
         *budget -= 1;
         *progressed = true;
         if session.done() {
@@ -185,10 +344,16 @@ impl Batcher {
             else {
                 unreachable!()
             };
+            // accurate executed-block accounting (adopted blocks and
+            // tail tokens never count as executed blocks) — recorded
+            // before finish() so a finish-time error can't lose the
+            // blocks that genuinely ran
+            self.metrics.record_prefill_timing(session.timing());
             let pre = session.finish()?;
             let ttft = a.admitted.elapsed().as_secs_f64() * 1e3;
             a.ttft_ms = Some(ttft);
             self.metrics.record_ttft(ttft);
+            self.offer_prefix(&a.req, &pre.cache);
             a.phase = Phase::Decode {
                 pos: a.req.prompt.len(),
                 logits: pre.last_logits,
@@ -197,6 +362,60 @@ impl Batcher {
             };
         }
         Ok(())
+    }
+
+    /// Offer a finished prefill's leading full blocks to the shared
+    /// prefix cache. A `dense_last` final block is excluded: its KV is
+    /// position-special and would be wrong for a longer prompt sharing
+    /// the prefix. Never fails the request — caching is best-effort.
+    fn offer_prefix(&self, req: &Request, cache: &SeqKvCache) {
+        if !req.cfg.prefix_cacheable() {
+            return;
+        }
+        let block = self.engine.block();
+        let full_blocks = req.prompt.len() / block;
+        let prompt_is_block_aligned = req.prompt.len() % block == 0;
+        let dense_last_applies =
+            !req.cfg.is_dense() && req.cfg.dense_last && prompt_is_block_aligned;
+        let max_blocks = if dense_last_applies {
+            full_blocks.saturating_sub(1)
+        } else {
+            full_blocks
+        };
+        if max_blocks == 0 {
+            return;
+        }
+        let seed = req.cfg.prefill_fingerprint();
+        // cheap probe under the lock: which blocks are actually new
+        let missing = {
+            let pc = self.router.prefix_cache.lock().unwrap();
+            if !pc.enabled() {
+                return;
+            }
+            pc.missing_blocks(seed, &req.prompt, max_blocks, cache.len)
+        };
+        // the expensive memcpy runs with NO locks held, so offering a
+        // long prefill never serializes the other replicas
+        let prepared: Vec<crate::kvcache::PreparedBlock> = missing
+            .into_iter()
+            .map(|b| crate::kvcache::PreparedBlock::copy_from(
+                cache,
+                self.engine.block(),
+                b,
+            ))
+            .collect();
+        let mut pc = self.router.prefix_cache.lock().unwrap();
+        // lock order: prefix_cache before kv_pool (as at every nested
+        // site); insert_prepared only hashes, evicts and moves Arcs
+        let mut pool = self.router.kv_pool.lock().unwrap();
+        pc.insert_prepared(seed, &req.prompt, max_blocks, prepared,
+                           &mut pool);
+        drop(pool);
+        self.metrics.set_prefix_state(
+            pc.stats(),
+            pc.used_bytes(),
+            pc.entry_count(),
+        );
     }
 
     fn step_decode(&mut self, a: &mut Active) -> Result<()> {
@@ -242,28 +461,34 @@ impl Batcher {
             ttft_ms: a.ttft_ms.unwrap_or(e2e),
             tpot_ms: if n > 0 { a.decode_ms_total / n as f64 } else { 0.0 },
             e2e_ms: e2e,
+            reused_blocks: a.reused_blocks,
             error: None,
         });
     }
 
     fn fail(&mut self, a: &mut Active, err: anyhow::Error) {
-        let _ = a.req.respond.send(Response {
-            id: a.req.id,
-            text: String::new(),
-            tokens: 0,
-            ttft_ms: 0.0,
-            tpot_ms: 0.0,
-            e2e_ms: a.admitted.elapsed().as_secs_f64() * 1e3,
-            error: Some(err.to_string()),
-        });
+        // a request failing mid-prefill still executed blocks: keep the
+        // engine's block-execution counters truthful
+        if let Phase::Prefill(session) = &a.phase {
+            self.metrics.record_prefill_timing(session.timing());
+        }
+        let mut resp = Response::failed(a.req.id, err.to_string());
+        resp.e2e_ms = a.admitted.elapsed().as_secs_f64() * 1e3;
+        resp.reused_blocks = a.reused_blocks;
+        let _ = a.req.respond.send(resp);
+        a.ok = false;
         a.phase = Phase::Finished;
     }
 
     fn retire(&mut self, a: &mut Active) {
         let mut pool = self.router.kv_pool.lock().unwrap();
         if let Err(e) = pool.release_all(&a.pages) {
-            eprintln!("[batcher] page release: {e}");
+            eprintln!("[batcher:{}] page release: {e}", self.replica.id());
         }
+        drop(pool);
         a.pages.clear();
+        self.replica
+            .complete(a.req.prompt.len(), a.req.max_tokens);
+        self.metrics.record_replica_done(self.replica.id(), a.ok);
     }
 }

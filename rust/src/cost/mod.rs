@@ -14,30 +14,39 @@ use crate::manifest::ModelCfg;
 /// a KV cache of `s_ctx` attendable positions, decomposed by component.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct LayerFlops {
-    pub attn_proj: f64,  // QKVO projections
-    pub attn_mix: f64,   // QK^T and AV (token mixing)
-    pub ffn: f64,        // gated FFN at the layer's density
-    pub predictor: f64,  // expert predictor overhead
-    pub comp: f64,       // error compensator overhead
+    /// QKVO projections.
+    pub attn_proj: f64,
+    /// QK^T and AV (token mixing).
+    pub attn_mix: f64,
+    /// Gated FFN at the layer's density.
+    pub ffn: f64,
+    /// Expert predictor overhead.
+    pub predictor: f64,
+    /// Error compensator overhead.
+    pub comp: f64,
 }
 
 impl LayerFlops {
+    /// Sum of every component.
     pub fn total(&self) -> f64 {
         self.attn_proj + self.attn_mix + self.ffn + self.predictor + self.comp
     }
 }
 
-/// Per-layer FFN width actually computed (K neurons; d_ffn when dense).
+/// FLOPs of a whole prefill, decomposed per layer.
 #[derive(Debug, Clone)]
 pub struct BlockCost {
+    /// Accumulated FLOPs per transformer layer.
     pub per_layer: Vec<LayerFlops>,
 }
 
 impl BlockCost {
+    /// Total FLOPs across layers and components.
     pub fn total(&self) -> f64 {
         self.per_layer.iter().map(|l| l.total()).sum()
     }
 
+    /// Attention FLOPs (projections + mixing).
     pub fn attn(&self) -> f64 {
         self.per_layer
             .iter()
@@ -45,28 +54,41 @@ impl BlockCost {
             .sum()
     }
 
+    /// FFN FLOPs.
     pub fn ffn(&self) -> f64 {
         self.per_layer.iter().map(|l| l.ffn).sum()
     }
 
+    /// Predictor + compensator overhead FLOPs.
     pub fn overhead(&self) -> f64 {
         self.per_layer.iter().map(|l| l.predictor + l.comp).sum()
     }
 }
 
+/// Analytic FLOP model of blockwise prefill for one model shape.
 pub struct CostModel {
+    /// Residual stream width.
     pub d_model: f64,
+    /// FFN hidden width.
     pub d_ffn: f64,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// Query heads.
     pub n_heads: f64,
+    /// KV heads (GQA).
     pub n_kv_heads: f64,
+    /// Per-head dimension.
     pub d_head: f64,
+    /// Prefill block size in tokens.
     pub block: usize,
+    /// Expert-predictor rank (overhead model).
     pub pred_r: f64,
+    /// Compensator rank (overhead model).
     pub comp_r: f64,
 }
 
 impl CostModel {
+    /// Cost model matching a loaded artifact's model config.
     pub fn from_cfg(cfg: &ModelCfg) -> Self {
         CostModel {
             d_model: cfg.d_model as f64,
@@ -98,6 +120,7 @@ impl CostModel {
         }
     }
 
+    /// LLaMA-3.2-1B shape.
     pub fn llama1b() -> Self {
         CostModel {
             d_model: 2048.0,
@@ -112,6 +135,7 @@ impl CostModel {
         }
     }
 
+    /// LLaMA-3.2-3B shape.
     pub fn llama3b() -> Self {
         CostModel {
             d_model: 3072.0,
@@ -234,10 +258,12 @@ impl CostModel {
 /// Roofline translation: FLOPs → seconds at a calibrated throughput.
 #[derive(Debug, Clone, Copy)]
 pub struct Roofline {
+    /// Calibrated effective throughput in FLOP/s.
     pub flops_per_sec: f64,
 }
 
 impl Roofline {
+    /// Seconds to execute `flops` at the calibrated throughput.
     pub fn project(&self, flops: f64) -> f64 {
         flops / self.flops_per_sec
     }

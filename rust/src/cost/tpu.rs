@@ -4,18 +4,25 @@
 //! the 16 MiB budget, MXU utilization from tile shapes, and arithmetic
 //! intensity against the HBM roofline.
 
-/// TPU-v4-ish machine constants (per core).
+/// TPU-v4-ish per-core VMEM budget in bytes.
 pub const VMEM_BYTES: usize = 16 * 1024 * 1024;
+/// MXU systolic array dimension.
 pub const MXU_DIM: usize = 128;
-pub const PEAK_BF16_FLOPS: f64 = 137.5e12; // TPU v4 per-chip dense peak
-pub const HBM_BW: f64 = 1.2e12; // bytes/s
+/// TPU v4 per-chip dense bf16 peak, FLOP/s.
+pub const PEAK_BF16_FLOPS: f64 = 137.5e12;
+/// HBM bandwidth, bytes/s.
+pub const HBM_BW: f64 = 1.2e12;
 
 /// One kernel grid-step's VMEM + compute profile.
 #[derive(Debug, Clone)]
 pub struct KernelProfile {
+    /// Kernel + tile-shape label.
     pub name: String,
+    /// VMEM footprint of one grid step.
     pub vmem_bytes: usize,
+    /// FLOPs per grid step.
     pub flops_per_step: f64,
+    /// HBM bytes streamed per grid step.
     pub hbm_bytes_per_step: f64,
     /// Fraction of MXU lanes busy given the tile shapes (dims / 128,
     /// capped at 1, multiplied across both systolic dimensions).
@@ -23,15 +30,18 @@ pub struct KernelProfile {
 }
 
 impl KernelProfile {
+    /// Whether the step fits the per-core VMEM budget.
     pub fn fits_vmem(&self) -> bool {
         self.vmem_bytes <= VMEM_BYTES
     }
 
-    /// Arithmetic intensity (FLOP/byte) and roofline-limited TFLOP/s.
+    /// Arithmetic intensity in FLOP/byte.
     pub fn arithmetic_intensity(&self) -> f64 {
         self.flops_per_step / self.hbm_bytes_per_step.max(1.0)
     }
 
+    /// Roofline-limited throughput in TFLOP/s (min of compute and
+    /// memory bounds at this intensity).
     pub fn roofline_tflops(&self) -> f64 {
         let compute = PEAK_BF16_FLOPS * self.mxu_utilization;
         let memory = HBM_BW * self.arithmetic_intensity();

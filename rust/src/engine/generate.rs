@@ -8,10 +8,15 @@ use crate::tokenizer::EOS;
 /// Greedy generation outcome.
 #[derive(Debug, Clone)]
 pub struct GenerateResult {
+    /// Generated token ids (EOS excluded).
     pub tokens: Vec<i32>,
+    /// Decoded text of `tokens`.
     pub text: String,
+    /// Time to first token (prefill wall-clock) in milliseconds.
     pub ttft_ms: f64,
+    /// Mean time per output token in milliseconds.
     pub tpot_ms: f64,
+    /// Prefill timing breakdown.
     pub prefill: PrefillTiming,
 }
 
@@ -22,7 +27,9 @@ pub struct ScoreResult {
     pub mean_logprob: f64,
     /// exp(mean_logprob) ∈ (0, 1]: per-token probability score.
     pub likelihood: f64,
+    /// Length of the scored continuation in tokens.
     pub n_tokens: usize,
+    /// Prefill timing breakdown.
     pub prefill: PrefillTiming,
 }
 

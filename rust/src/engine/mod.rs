@@ -52,6 +52,7 @@ pub struct SparsityConfig {
 }
 
 impl SparsityConfig {
+    /// The dense baseline: no sparsity, no overhead networks.
     pub fn dense() -> Self {
         SparsityConfig {
             sparsity: None,
@@ -77,35 +78,100 @@ impl SparsityConfig {
         }
     }
 
+    /// Whether this is the dense baseline (no sparsity applied).
     pub fn is_dense(&self) -> bool {
         self.sparsity.is_none()
+    }
+
+    /// Whether prefill KV computed under this configuration is
+    /// position-generic enough for the prefix cache.
+    ///
+    /// The one exception is the GRIFFIN-style `FirstBlockStatic` ablation:
+    /// it captures expert indices on the prompt's first block during
+    /// prefill, and a session that adopts cached blocks would skip that
+    /// capture — so both adoption and insertion are disabled for it.
+    pub fn prefix_cacheable(&self) -> bool {
+        self.is_dense() || self.source != ExpertSource::FirstBlockStatic
+    }
+
+    /// Stable 64-bit fingerprint of every field that influences prefill
+    /// numerics. Seeds the prefix-cache hash chain so KV rows are only
+    /// ever adopted by sessions running the *same* configuration (sparse
+    /// KV differs numerically from dense KV). `sparse_decode` is
+    /// deliberately excluded: it only affects decode steps, never the
+    /// full blocks the cache stores, so including it would pointlessly
+    /// fragment the cache across otherwise-identical configurations.
+    pub fn prefill_fingerprint(&self) -> u64 {
+        fn mix(h: u64, v: u64) -> u64 {
+            let x = (h ^ v).wrapping_mul(0x100000001b3);
+            x ^ (x >> 31)
+        }
+        let mut h = 0xFA57_F0A4_D15C_0DE5u64;
+        h = mix(h, self.sparsity.map(|s| s.to_bits()).unwrap_or(u64::MAX));
+        h = mix(
+            h,
+            (self.layerwise as u64)
+                | (self.dense_first as u64) << 1
+                | (self.dense_last as u64) << 2
+                | (self.compensator as u64) << 3,
+        );
+        h = mix(
+            h,
+            match self.source {
+                ExpertSource::Trained => 1,
+                ExpertSource::Oracle => 2,
+                ExpertSource::FirstBlockStatic => 3,
+                ExpertSource::Cats => 4,
+            },
+        );
+        h
     }
 }
 
 /// Timing breakdown of one prefill (drives Fig. 1 / Fig. 2).
 #[derive(Debug, Clone, Default)]
 pub struct PrefillTiming {
+    /// Wall-clock of the whole prefill.
     pub total: Duration,
+    /// Time in token-embedding dispatches.
     pub embed: Duration,
+    /// Time in transformer-layer dispatches.
     pub layers: Duration,
+    /// Time in the final LM-head dispatch.
     pub lm_head: Duration,
+    /// Full 128-token blocks *executed* by this session. Blocks adopted
+    /// from the prefix cache are excluded — this is the engine's
+    /// block-execution counter, the ground truth that a prefix hit
+    /// actually skipped compute.
     pub blocks: usize,
+    /// Executed blocks that ran the dense path.
     pub dense_blocks: usize,
+    /// Ragged-tail tokens processed through T=1 steps.
     pub tail_tokens: usize,
+    /// Blocks whose KV was adopted from the prefix cache (not executed).
+    pub adopted_blocks: usize,
 }
 
 /// Result of prefilling one prompt.
 pub struct PrefillResult {
+    /// The filled KV cache (`len` == prompt length).
     pub cache: SeqKvCache,
     /// Hidden state of the final prompt position, [d_model].
     pub last_hidden: Vec<f32>,
     /// Logits at the final prompt position, [vocab].
     pub last_logits: Vec<f32>,
+    /// Timing and block-count breakdown.
     pub timing: PrefillTiming,
 }
 
+/// Block-wise prefill + decode engine bound to one [`Runtime`].
+///
+/// `Engine` is deliberately cheap to clone (it shares the `Rc<Runtime>`)
+/// but **not** `Send`: every executor-pool replica constructs its own
+/// engine on its own thread from the same artifacts.
 #[derive(Clone)]
 pub struct Engine {
+    /// The PJRT runtime executing the AOT artifacts.
     pub rt: Rc<Runtime>,
     block: usize,
     d: usize,
@@ -113,6 +179,7 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Build an engine over a loaded runtime.
     pub fn new(rt: Rc<Runtime>) -> Self {
         let m = &rt.manifest.model;
         Engine {
@@ -123,10 +190,12 @@ impl Engine {
         }
     }
 
+    /// The artifact manifest this engine dispatches against.
     pub fn manifest(&self) -> &Manifest {
         &self.rt.manifest
     }
 
+    /// Prefill block size in tokens (paper §3.1: 128).
     pub fn block(&self) -> usize {
         self.block
     }

@@ -17,8 +17,11 @@ pub struct PrefillSession {
     cfg: SparsityConfig,
     layer_ks: Vec<usize>,
     decode_ks: Vec<usize>,
+    /// The KV cache being filled (exposed so the executor can copy
+    /// prefix-cache rows into it via [`PrefillSession::adopt_prefix`]).
     pub cache: SeqKvCache,
     static_idx: Vec<Option<Vec<i32>>>,
+    /// Next prompt position to process (tokens before it are cached).
     pub next_pos: usize,
     x_last: Vec<f32>,
     x_last_is_t1: bool,
@@ -27,6 +30,8 @@ pub struct PrefillSession {
 }
 
 impl PrefillSession {
+    /// Start a session over `tokens` under `cfg` (no work happens until
+    /// the first [`PrefillSession::step`]).
     pub fn new(engine: Engine, tokens: Vec<i32>,
                cfg: SparsityConfig) -> Result<Self> {
         anyhow::ensure!(!tokens.is_empty(), "empty prompt");
@@ -59,16 +64,67 @@ impl PrefillSession {
         })
     }
 
+    /// Prompt length in tokens.
     pub fn total_tokens(&self) -> usize {
         self.tokens.len()
     }
 
+    /// Prompt tokens not yet processed.
     pub fn remaining_tokens(&self) -> usize {
         self.tokens.len() - self.next_pos
     }
 
+    /// Whether every prompt token has been processed.
     pub fn done(&self) -> bool {
         self.next_pos >= self.tokens.len()
+    }
+
+    /// Timing and block counts accumulated so far. `total` and
+    /// `lm_head` are only final after [`PrefillSession::finish`]; the
+    /// block/tail counters are always current — the executor uses them
+    /// to account blocks executed by sessions that fail mid-prefill.
+    pub fn timing(&self) -> &PrefillTiming {
+        &self.timing
+    }
+
+    /// Adopt `n_tokens` of already-computed KV from the prefix cache
+    /// instead of executing those blocks.
+    ///
+    /// Must be called before the first [`PrefillSession::step`].
+    /// `n_tokens` must be a whole number of blocks and strictly less
+    /// than the prompt length — at least one token is always computed so
+    /// the session still produces last-position logits. `copy` receives
+    /// the (pre-grown) session cache and must fill exactly `n_tokens`
+    /// positions (e.g. [`crate::kvcache::PrefixHit::copy_into`]).
+    pub fn adopt_prefix<F>(&mut self, n_tokens: usize, copy: F) -> Result<()>
+    where
+        F: FnOnce(&mut SeqKvCache) -> Result<()>,
+    {
+        let block = self.engine.block();
+        anyhow::ensure!(self.next_pos == 0, "adopt after prefill started");
+        anyhow::ensure!(self.cache.len == 0, "adopt into non-empty cache");
+        anyhow::ensure!(
+            n_tokens > 0 && n_tokens % block == 0,
+            "adoption must cover whole blocks (got {n_tokens})"
+        );
+        anyhow::ensure!(
+            n_tokens < self.tokens.len(),
+            "adoption must leave at least one token to prefill"
+        );
+        anyhow::ensure!(
+            self.cfg.prefix_cacheable(),
+            "configuration is not prefix-cacheable"
+        );
+        self.engine.ensure_bucket(&mut self.cache, n_tokens)?;
+        copy(&mut self.cache)?;
+        anyhow::ensure!(
+            self.cache.len == n_tokens,
+            "prefix copy filled {} of {n_tokens} positions",
+            self.cache.len
+        );
+        self.next_pos = n_tokens;
+        self.timing.adopted_blocks = n_tokens / block;
+        Ok(())
     }
 
     /// Number of scheduling units left (full blocks + tail tokens).

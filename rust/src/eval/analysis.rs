@@ -15,6 +15,8 @@ pub struct ErrorProfile {
     pub logit_cos: f64,
 }
 
+/// Prefill `tokens` under two configurations and measure the
+/// last-position logit divergence of `b` relative to `a`.
 pub fn compare_configs(engine: &Engine, tokens: &[i32],
                        a: &SparsityConfig, b: &SparsityConfig)
                        -> Result<ErrorProfile> {

@@ -8,12 +8,17 @@ use crate::engine::{Engine, SparsityConfig};
 use crate::tokenizer::Tokenizer;
 use crate::trace::mmlu::McGen;
 
+/// mmlu-sim outcome.
 #[derive(Debug, Clone)]
 pub struct MmluResult {
+    /// Accuracy on a 0-100 scale (25 = random).
     pub accuracy: f64,
+    /// Items evaluated.
     pub n_items: usize,
 }
 
+/// Score `n_items` generated multiple-choice items under `cfg` by
+/// teacher-forced option likelihood.
 pub fn evaluate_mmlu(engine: &Engine, n_items: usize, context_chars: usize,
                      seed: u64, cfg: &SparsityConfig) -> Result<MmluResult> {
     let tok = Tokenizer::new(engine.manifest().model.vocab);

@@ -27,9 +27,11 @@ pub struct EvalSpec {
     pub tasks_per_group: usize,
     /// Prompt length in characters (byte tokens) per task.
     pub prompt_chars: usize,
+    /// Task-generator seed (identical seed → identical task set).
     pub seed: u64,
     /// Also run greedy generation for the overlap score (slower).
     pub with_generation: bool,
+    /// Generation budget per task when `with_generation`.
     pub max_gen_tokens: usize,
 }
 
@@ -48,10 +50,15 @@ impl Default for EvalSpec {
 /// Per-group and aggregate scores.
 #[derive(Debug, Clone)]
 pub struct EvalResult {
+    /// Mean likelihood score per task group (0-100 scale).
     pub group_scores: BTreeMap<&'static str, f64>,
+    /// Mean greedy-overlap score per group (0 unless generation ran).
     pub group_overlap: BTreeMap<&'static str, f64>,
+    /// Mean of the group scores (the paper's "avg" column).
     pub average: f64,
+    /// Total tasks evaluated.
     pub n_tasks: usize,
+    /// Mean prefill wall-clock across tasks, milliseconds.
     pub mean_ttft_ms: f64,
 }
 
@@ -136,6 +143,7 @@ pub fn format_row(label: &str, r: &EvalResult, rel_gap: f64) -> String {
     )
 }
 
+/// Column header matching [`format_row`].
 pub const TABLE_HEADER: &str =
     "configuration                 1docQA  mdocQA   summ.  fewshot  synth.    code |    avg     gap";
 

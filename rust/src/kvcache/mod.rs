@@ -1,6 +1,6 @@
 //! KV-cache management.
 //!
-//! Two cooperating pieces:
+//! Three cooperating pieces:
 //!
 //! * [`PagedAllocator`] — a vLLM-style page pool for admission control:
 //!   pages of `page_size` positions, ref-counted for prefix sharing, with
@@ -8,6 +8,26 @@
 //! * [`SeqKvCache`] — the per-sequence host-resident cache the engine
 //!   feeds to the bucketed AOT executables: contiguous padded buffers per
 //!   layer, grown bucket-by-bucket, appended after each block step.
+//! * [`PrefixCache`] — a block-granular cache of already-computed KV
+//!   rows, keyed by a chained hash of token blocks (and the sparsity
+//!   configuration they were computed under). A new prefill session
+//!   adopts the KV pages of its longest cached prefix and only runs
+//!   prefill — dense or sparse — over the uncached suffix. Entries are
+//!   ref-counted while a session copies from them (eviction never frees
+//!   an in-use entry) and evicted LRU-first under memory pressure.
+//!
+//! The prefix-cache page lifecycle (see also docs/ARCHITECTURE.md):
+//!
+//! ```text
+//! prefill finishes ── insert ──▶ entry (pages allocated, refs=0)
+//!       new session ── acquire ─▶ refs+1 (pinned; eviction skips it)
+//!                      copy_into ▶ rows memcpy'd into the session cache
+//!                      release ──▶ refs-1
+//! memory pressure ──── evict ───▶ LRU entry with refs==0 dropped,
+//!                                 pages released to the allocator
+//! ```
+
+use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
@@ -15,9 +35,16 @@ use anyhow::{anyhow, Result};
 // Paged allocator
 // ---------------------------------------------------------------------------
 
+/// Identifier of one fixed-size page in the [`PagedAllocator`] pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct PageId(pub u32);
 
+/// Ref-counted page pool bounding total resident KV memory.
+///
+/// Pure accounting: pages carry no storage themselves (the engine's
+/// per-sequence buffers live in [`SeqKvCache`]); the allocator is what
+/// lets the router reject work *before* memory is committed, and what
+/// makes prefix-cache residency visible to admission control.
 #[derive(Debug)]
 pub struct PagedAllocator {
     page_size: usize,
@@ -26,6 +53,7 @@ pub struct PagedAllocator {
 }
 
 impl PagedAllocator {
+    /// Create a pool of `total_pages` pages of `page_size` positions.
     pub fn new(total_pages: usize, page_size: usize) -> Self {
         PagedAllocator {
             page_size,
@@ -34,18 +62,22 @@ impl PagedAllocator {
         }
     }
 
+    /// Positions covered by one page.
     pub fn page_size(&self) -> usize {
         self.page_size
     }
 
+    /// Number of pages needed to hold `positions` positions.
     pub fn pages_for(&self, positions: usize) -> usize {
         positions.div_ceil(self.page_size)
     }
 
+    /// Pages currently free.
     pub fn free_pages(&self) -> usize {
         self.free.len()
     }
 
+    /// Pages currently held by at least one owner.
     pub fn used_pages(&self) -> usize {
         self.ref_counts.len() - self.free.len()
     }
@@ -55,6 +87,7 @@ impl PagedAllocator {
         self.pages_for(positions) <= self.free.len()
     }
 
+    /// Take `n_pages` pages out of the free list (each with refcount 1).
     pub fn allocate(&mut self, n_pages: usize) -> Result<Vec<PageId>> {
         if n_pages > self.free.len() {
             return Err(anyhow!(
@@ -85,6 +118,7 @@ impl PagedAllocator {
         Ok(())
     }
 
+    /// Drop one reference; the page returns to the free list at zero.
     pub fn release(&mut self, page: PageId) -> Result<()> {
         let rc = self
             .ref_counts
@@ -100,6 +134,7 @@ impl PagedAllocator {
         Ok(())
     }
 
+    /// [`Self::release`] over a whole page list.
     pub fn release_all(&mut self, pages: &[PageId]) -> Result<()> {
         for &p in pages {
             self.release(p)?;
@@ -117,16 +152,24 @@ impl PagedAllocator {
 /// the AOT executable input shapes exactly.
 #[derive(Debug, Clone)]
 pub struct SeqKvCache {
+    /// Number of transformer layers (outer dimension of `k`/`v`).
     pub n_layers: usize,
+    /// KV heads per layer.
     pub n_kv: usize,
+    /// Head dimension.
     pub d_head: usize,
+    /// Current padded capacity in positions (an artifact bucket size).
     pub bucket: usize,
+    /// Filled positions (`<= bucket`).
     pub len: usize,
+    /// Per-layer key buffers, `bucket * n_kv * d_head` elements each.
     pub k: Vec<Vec<f32>>,
+    /// Per-layer value buffers, same layout as `k`.
     pub v: Vec<Vec<f32>>,
 }
 
 impl SeqKvCache {
+    /// Fresh empty cache at an initial `bucket` capacity.
     pub fn new(n_layers: usize, n_kv: usize, d_head: usize,
                bucket: usize) -> Self {
         let sz = bucket * n_kv * d_head;
@@ -141,6 +184,7 @@ impl SeqKvCache {
         }
     }
 
+    /// Elements per cached position per layer (`n_kv * d_head`).
     pub fn row_elems(&self) -> usize {
         self.n_kv * self.d_head
     }
@@ -182,6 +226,463 @@ impl SeqKvCache {
     pub fn advance(&mut self, t: usize) {
         self.len += t;
         debug_assert!(self.len <= self.bucket);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prefix cache
+// ---------------------------------------------------------------------------
+
+/// FNV-1a over the previous chain hash and one token block: the key of
+/// block `b` commits to the *entire* token prefix `[0, (b+1)*block)` and
+/// to the sparsity-configuration seed the KV was computed under.
+fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325 ^ prev;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    // one extra round so a zero block still perturbs the chain
+    h ^= prev.rotate_left(17);
+    h.wrapping_mul(0x100000001b3)
+}
+
+/// One cached block's KV rows for all layers. `Arc`-shared between the
+/// resident entry and in-flight adoptions, so copies proceed without
+/// holding the cache lock.
+#[derive(Debug)]
+struct BlockKv {
+    /// Per-layer key rows, `block * n_kv * d_head` elements each.
+    k: Vec<Vec<f32>>,
+    /// Per-layer value rows.
+    v: Vec<Vec<f32>>,
+}
+
+/// One cached token block entry.
+#[derive(Debug)]
+struct PrefixBlock {
+    /// The block's own tokens, re-verified on every lookup. Combined
+    /// with the chain walk from block 0 this checks each adopted
+    /// block's tokens exactly; the *ancestry* (earlier blocks) is
+    /// committed only through the 64-bit chain hash, so a silent wrong
+    /// adoption requires both a chain-hash collision *and* identical
+    /// current-block tokens — random collisions are caught here.
+    tokens: Vec<i32>,
+    /// The KV rows (shared with adopters).
+    data: std::sync::Arc<BlockKv>,
+    /// Pages accounting for this entry's residency in the shared pool.
+    pages: Vec<PageId>,
+    /// Sessions currently adopting this entry; eviction skips entries
+    /// with `refs > 0` so resident-page accounting stays honest while
+    /// an adoption is in flight.
+    refs: u32,
+    /// Logical clock of the last lookup/insert touch (LRU order).
+    last_used: u64,
+}
+
+/// A pinned run of cached blocks returned by [`PrefixCache::acquire`].
+///
+/// Holds `Arc` handles to the matched blocks' KV rows, so
+/// [`PrefixHit::copy_into`] runs **without** the cache lock. Every key
+/// in `keys` also has its entry's refcount bumped; the holder must call
+/// [`PrefixCache::release`] exactly once — after the copy, or on any
+/// error path — so the entries become evictable again.
+#[derive(Debug, Clone)]
+pub struct PrefixHit {
+    /// Chain keys of the matched blocks, in block order from position 0.
+    pub keys: Vec<u64>,
+    /// Total prompt tokens covered (`keys.len() * block`).
+    pub tokens: usize,
+    block: usize,
+    data: Vec<std::sync::Arc<BlockKv>>,
+}
+
+/// One block's KV rows staged for insertion, copied from a finished
+/// prefill's cache by [`PreparedBlock::copy_from`] — deliberately a
+/// free-standing copy so the executor can run the memcpy *without*
+/// holding the cache lock, then hand the result to
+/// [`PrefixCache::insert_prepared`].
+#[derive(Debug)]
+pub struct PreparedBlock {
+    index: usize,
+    data: BlockKv,
+}
+
+impl PreparedBlock {
+    /// Stage block `index` (0-based) of `src`'s rows. Pure memcpy; no
+    /// cache involvement.
+    pub fn copy_from(src: &SeqKvCache, block: usize, index: usize) -> Self {
+        let row = src.row_elems();
+        let lo = index * block * row;
+        let hi = (index + 1) * block * row;
+        PreparedBlock {
+            index,
+            data: BlockKv {
+                k: (0..src.n_layers)
+                    .map(|l| src.k[l][lo..hi].to_vec())
+                    .collect(),
+                v: (0..src.n_layers)
+                    .map(|l| src.v[l][lo..hi].to_vec())
+                    .collect(),
+            },
+        }
+    }
+}
+
+impl PrefixHit {
+    /// Copy the pinned blocks into an empty session cache, advancing
+    /// its filled length to `self.tokens`. The destination must already
+    /// have `bucket >= self.tokens` (the session grows it first). Runs
+    /// lock-free: the data is `Arc`-shared and the refcount pin keeps
+    /// the entries resident meanwhile.
+    pub fn copy_into(&self, dst: &mut SeqKvCache) -> Result<()> {
+        anyhow::ensure!(dst.len == 0, "prefix adoption into non-empty cache");
+        anyhow::ensure!(
+            dst.bucket >= self.tokens,
+            "destination bucket {} < adopted tokens {}",
+            dst.bucket,
+            self.tokens
+        );
+        for blk in &self.data {
+            anyhow::ensure!(
+                blk.k.len() == dst.n_layers
+                    && blk.k[0].len() == self.block * dst.row_elems(),
+                "prefix entry shape mismatch"
+            );
+            for l in 0..dst.n_layers {
+                dst.append_layer(l, &blk.k[l], &blk.v[l], self.block)?;
+            }
+            dst.advance(self.block);
+        }
+        Ok(())
+    }
+}
+
+/// Lifetime counters for the prefix cache (exported via `/metrics`).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PrefixCacheStats {
+    /// Lookups that adopted at least one block.
+    pub hits: u64,
+    /// Lookups that adopted nothing.
+    pub misses: u64,
+    /// Total blocks adopted across all hits (each skips one block of
+    /// prefill compute).
+    pub blocks_reused: u64,
+    /// Block entries inserted.
+    pub insertions: u64,
+    /// Block entries evicted under memory pressure.
+    pub evictions: u64,
+}
+
+/// Block-granular cache of computed KV rows shared by all replicas.
+///
+/// Keys chain-hash the token prefix *and* a sparsity-configuration seed
+/// ([`crate::engine::SparsityConfig::prefill_fingerprint`]): KV computed
+/// under 50% sparsity is numerically different from dense KV and must
+/// never be adopted across configurations. Entries hold pages from the
+/// shared [`PagedAllocator`] so cached residency competes with live
+/// sequences under the same admission bound.
+#[derive(Debug)]
+pub struct PrefixCache {
+    block: usize,
+    budget_bytes: usize,
+    used_bytes: usize,
+    clock: u64,
+    entries: HashMap<u64, PrefixBlock>,
+    stats: PrefixCacheStats,
+}
+
+impl PrefixCache {
+    /// A cache holding at most `budget_bytes` of KV data, at `block`
+    /// token granularity (must equal the engine's prefill block size).
+    /// A zero budget disables the cache entirely.
+    pub fn new(block: usize, budget_bytes: usize) -> Self {
+        PrefixCache {
+            block,
+            budget_bytes,
+            used_bytes: 0,
+            clock: 0,
+            entries: HashMap::new(),
+            stats: PrefixCacheStats::default(),
+        }
+    }
+
+    /// Whether the cache participates at all (a zero byte budget turns
+    /// both insertion and adoption off).
+    pub fn enabled(&self) -> bool {
+        self.budget_bytes > 0
+    }
+
+    /// Token-block granularity (the engine's prefill block size).
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Bytes of KV data currently resident.
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    /// Configured byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Number of resident block entries.
+    pub fn entry_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Snapshot of the lifetime counters.
+    pub fn stats(&self) -> PrefixCacheStats {
+        self.stats
+    }
+
+    /// Largest adoptable prefix for a prompt: whole blocks only, and
+    /// always at least one token left to prefill so the session still
+    /// produces last-position logits (and a `dense_last` final block is
+    /// still computed, not adopted).
+    fn max_adopt_tokens(&self, prompt_len: usize) -> usize {
+        if prompt_len == 0 {
+            return 0;
+        }
+        ((prompt_len - 1) / self.block) * self.block
+    }
+
+    /// Find and pin the longest cached prefix of `tokens` under the
+    /// configuration `seed`. Returns `None` (and counts a miss) when no
+    /// leading block is cached. On `Some(hit)`, every matched entry's
+    /// refcount is bumped — the caller owns a [`PrefixCache::release`].
+    pub fn acquire(&mut self, seed: u64, tokens: &[i32]) -> Option<PrefixHit> {
+        if !self.enabled() {
+            return None;
+        }
+        let max_tokens = self.max_adopt_tokens(tokens.len());
+        let mut keys = Vec::new();
+        let mut data = Vec::new();
+        let mut h = seed;
+        let mut covered = 0;
+        while covered + self.block <= max_tokens {
+            let blk = &tokens[covered..covered + self.block];
+            h = chain_hash(h, blk);
+            match self.entries.get_mut(&h) {
+                Some(e) if e.tokens == blk => {
+                    e.refs += 1;
+                    self.clock += 1;
+                    e.last_used = self.clock;
+                    keys.push(h);
+                    data.push(e.data.clone());
+                    covered += self.block;
+                }
+                _ => break,
+            }
+        }
+        if keys.is_empty() {
+            self.stats.misses += 1;
+            return None;
+        }
+        self.stats.hits += 1;
+        self.stats.blocks_reused += keys.len() as u64;
+        Some(PrefixHit {
+            tokens: covered,
+            keys,
+            block: self.block,
+            data,
+        })
+    }
+
+    /// Unpin the entries of a hit (the mirror of [`Self::acquire`]).
+    pub fn release(&mut self, hit: &PrefixHit) {
+        for key in &hit.keys {
+            if let Some(e) = self.entries.get_mut(key) {
+                debug_assert!(e.refs > 0, "release of unpinned prefix entry");
+                e.refs = e.refs.saturating_sub(1);
+            }
+        }
+    }
+
+    /// Bytes one block entry occupies for a given cache shape.
+    fn entry_bytes(&self, n_layers: usize, row: usize) -> usize {
+        n_layers * 2 * self.block * row * std::mem::size_of::<f32>()
+    }
+
+    /// Evict the least-recently-used unpinned entry, returning its pages
+    /// to `alloc`. Returns false when nothing is evictable (everything
+    /// pinned, or cache empty).
+    fn evict_one(&mut self, alloc: &mut PagedAllocator) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.refs == 0)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| *k);
+        let Some(key) = victim else { return false };
+        let e = self.entries.remove(&key).unwrap();
+        self.used_bytes = self.used_bytes.saturating_sub(self.entry_bytes(
+            e.data.k.len(),
+            e.data.k[0].len() / self.block,
+        ));
+        if let Err(err) = alloc.release_all(&e.pages) {
+            eprintln!("[prefix-cache] page release on evict: {err}");
+        }
+        self.stats.evictions += 1;
+        true
+    }
+
+    /// Which of the leading full blocks of `tokens` (up to `max_blocks`,
+    /// and never past the `src_len` rows actually computed) are not yet
+    /// cached. A cheap probe — hashing and map lookups only — so callers
+    /// can stage the memcpy of just those blocks *outside* the cache
+    /// lock and hand the result to [`PrefixCache::insert_prepared`].
+    pub fn missing_blocks(&self, seed: u64, tokens: &[i32],
+                          max_blocks: usize, src_len: usize) -> Vec<usize> {
+        if !self.enabled() {
+            return Vec::new();
+        }
+        let n_blocks = (tokens.len() / self.block)
+            .min(max_blocks)
+            .min(src_len / self.block);
+        let mut out = Vec::new();
+        let mut h = seed;
+        for b in 0..n_blocks {
+            let blk = &tokens[b * self.block..(b + 1) * self.block];
+            h = chain_hash(h, blk);
+            if !self.entries.contains_key(&h) {
+                out.push(b);
+            }
+        }
+        out
+    }
+
+    /// Cache the leading full blocks of a finished prefill.
+    ///
+    /// `src` must hold the prompt's KV rows (`src.len == tokens.len()`).
+    /// At most `max_blocks` leading blocks are inserted (the caller
+    /// excludes a `dense_last` final block, whose KV is not
+    /// position-generic). Returns the number of *new* block entries
+    /// stored. Convenience wrapper over [`PrefixCache::missing_blocks`]
+    /// + [`PreparedBlock::copy_from`] + [`PrefixCache::insert_prepared`]
+    /// — the executor uses those directly so the memcpy runs outside
+    /// the cache lock.
+    pub fn insert(&mut self, seed: u64, tokens: &[i32], max_blocks: usize,
+                  src: &SeqKvCache, alloc: &mut PagedAllocator) -> usize {
+        let prepared: Vec<PreparedBlock> = self
+            .missing_blocks(seed, tokens, max_blocks, src.len)
+            .into_iter()
+            .map(|b| PreparedBlock::copy_from(src, self.block, b))
+            .collect();
+        self.insert_prepared(seed, tokens, max_blocks, prepared, alloc)
+    }
+
+    /// Insert pre-staged blocks ([`PreparedBlock::copy_from`]) and
+    /// LRU-touch the already-cached ones. Cheap under the lock: the row
+    /// data was copied by the caller beforehand; this only hashes,
+    /// evicts under pressure, allocates pages and moves `Arc`s. Blocks
+    /// another replica cached in the probe→insert window are skipped
+    /// (their staged copy is dropped). Under byte-budget or page
+    /// pressure, LRU entries are evicted first; if space still cannot
+    /// be found the remaining blocks are simply not cached — insertion
+    /// never fails a request.
+    pub fn insert_prepared(&mut self, seed: u64, tokens: &[i32],
+                           max_blocks: usize,
+                           prepared: Vec<PreparedBlock>,
+                           alloc: &mut PagedAllocator) -> usize {
+        if !self.enabled() {
+            return 0;
+        }
+        let n_blocks = (tokens.len() / self.block).min(max_blocks);
+        let mut staged: HashMap<usize, BlockKv> = prepared
+            .into_iter()
+            .map(|p| (p.index, p.data))
+            .collect();
+        let pages_needed = alloc.pages_for(self.block);
+        let mut inserted = 0;
+        // Pin every block of the chain as we walk it, so make-room
+        // eviction can never cannibalize the *earlier* blocks of the
+        // chain being inserted (an evicted ancestor would strand the
+        // later blocks unreachable — lookups walk from block 0).
+        let mut pinned: Vec<u64> = Vec::new();
+        let mut h = seed;
+        'blocks: for b in 0..n_blocks {
+            let blk = &tokens[b * self.block..(b + 1) * self.block];
+            h = chain_hash(h, blk);
+            if let Some(e) = self.entries.get_mut(&h) {
+                // already cached (by us or another replica): LRU-touch
+                self.clock += 1;
+                e.last_used = self.clock;
+                e.refs += 1;
+                pinned.push(h);
+                continue;
+            }
+            // Neither cached nor staged: an ancestor was evicted in the
+            // probe→insert window. Later blocks of this chain would be
+            // unreachable (lookups walk from block 0), so stop rather
+            // than insert orphans that pin pages with zero hit value.
+            let Some(data) = staged.remove(&b) else { break 'blocks };
+            let bytes =
+                self.entry_bytes(data.k.len(), data.k[0].len() / self.block);
+            // make room: byte budget first, then page feasibility; if
+            // only pinned entries remain, stop caching instead
+            while self.used_bytes + bytes > self.budget_bytes {
+                if !self.evict_one(alloc) {
+                    break 'blocks;
+                }
+            }
+            let pages = loop {
+                match alloc.allocate(pages_needed) {
+                    Ok(p) => break Some(p),
+                    Err(_) => {
+                        if !self.evict_one(alloc) {
+                            break None;
+                        }
+                    }
+                }
+            };
+            let Some(pages) = pages else { break 'blocks };
+            self.clock += 1;
+            self.entries.insert(
+                h,
+                PrefixBlock {
+                    tokens: blk.to_vec(),
+                    data: std::sync::Arc::new(data),
+                    pages,
+                    refs: 1,
+                    last_used: self.clock,
+                },
+            );
+            pinned.push(h);
+            self.used_bytes += bytes;
+            self.stats.insertions += 1;
+            inserted += 1;
+        }
+        for key in pinned {
+            if let Some(e) = self.entries.get_mut(&key) {
+                e.refs = e.refs.saturating_sub(1);
+            }
+        }
+        inserted
+    }
+
+    /// Evict unpinned entries (LRU-first) until `alloc` has at least
+    /// `pages_needed` free pages. Returns whether it got there. This is
+    /// how *live* requests reclaim cached residency: admission calls it
+    /// before rejecting with KV-exhausted, so a full prefix cache can
+    /// never permanently starve the pool.
+    pub fn evict_for(&mut self, pages_needed: usize,
+                     alloc: &mut PagedAllocator) -> bool {
+        while alloc.free_pages() < pages_needed {
+            if !self.evict_one(alloc) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Drop every unpinned entry, returning all pages to `alloc`.
+    pub fn clear(&mut self, alloc: &mut PagedAllocator) {
+        while self.evict_one(alloc) {}
     }
 }
 
@@ -291,5 +792,214 @@ mod tests {
         let row = c.row_elems();
         let k = vec![0.0; 5 * row];
         assert!(c.append_layer(0, &k, &k, 5).is_err());
+    }
+
+    // ----- prefix cache ----------------------------------------------------
+
+    const BLOCK: usize = 4;
+
+    /// A tiny filled SeqKvCache whose row values are a deterministic
+    /// function of (layer, position), so copies can be verified exactly.
+    fn filled_cache(n_tokens: usize) -> SeqKvCache {
+        let (n_layers, n_kv, d_head) = (2, 1, 2);
+        let mut c = SeqKvCache::new(n_layers, n_kv, d_head, n_tokens.max(1));
+        let row = c.row_elems();
+        for pos in 0..n_tokens {
+            for l in 0..n_layers {
+                let base = (l * 1000 + pos) as f32;
+                let k: Vec<f32> = (0..row).map(|i| base + i as f32).collect();
+                let v: Vec<f32> = (0..row).map(|i| -(base + i as f32)).collect();
+                c.append_layer(l, &k, &v, 1).unwrap();
+            }
+            c.advance(1);
+        }
+        c
+    }
+
+    fn prompt(n: usize) -> Vec<i32> {
+        (0..n as i32).map(|i| i * 7 % 251).collect()
+    }
+
+    #[test]
+    fn adopt_roundtrip_is_exact() {
+        let mut alloc = PagedAllocator::new(64, BLOCK);
+        let mut pc = PrefixCache::new(BLOCK, 1 << 20);
+        let toks = prompt(3 * BLOCK + 2);
+        let src = filled_cache(toks.len());
+        let n = pc.insert(1, &toks, usize::MAX, &src, &mut alloc);
+        assert_eq!(n, 3, "three full blocks cacheable");
+        assert_eq!(pc.entry_count(), 3);
+        assert!(alloc.used_pages() > 0, "residency is accounted");
+
+        let hit = pc.acquire(1, &toks).expect("prefix hit");
+        assert_eq!(hit.tokens, 3 * BLOCK);
+        let mut dst = SeqKvCache::new(2, 1, 2, toks.len());
+        hit.copy_into(&mut dst).unwrap();
+        pc.release(&hit);
+        assert_eq!(dst.len, 3 * BLOCK);
+        let row = src.row_elems();
+        for l in 0..2 {
+            assert_eq!(
+                dst.k[l][..3 * BLOCK * row],
+                src.k[l][..3 * BLOCK * row],
+                "adopted K rows must be bit-identical"
+            );
+            assert_eq!(
+                dst.v[l][..3 * BLOCK * row],
+                src.v[l][..3 * BLOCK * row]
+            );
+        }
+        assert_eq!(pc.stats().hits, 1);
+        assert_eq!(pc.stats().blocks_reused, 3);
+    }
+
+    #[test]
+    fn partial_overlap_adopts_shared_blocks_only() {
+        let mut alloc = PagedAllocator::new(64, BLOCK);
+        let mut pc = PrefixCache::new(BLOCK, 1 << 20);
+        let a = prompt(4 * BLOCK);
+        // dense_last-style exclusion: only cache 3 of the 4 full blocks
+        pc.insert(7, &a, 3, &filled_cache(a.len()), &mut alloc);
+        assert_eq!(pc.entry_count(), 3);
+
+        // b shares exactly the first 2 blocks, then diverges
+        let mut b = a[..2 * BLOCK].to_vec();
+        b.extend(std::iter::repeat(999).take(2 * BLOCK));
+        let hit = pc.acquire(7, &b).expect("partial hit");
+        assert_eq!(hit.tokens, 2 * BLOCK);
+        pc.release(&hit);
+
+        // different config seed: no adoption across configurations
+        assert!(pc.acquire(8, &a).is_none());
+        // sub-block prompts can never adopt
+        assert!(pc.acquire(7, &a[..BLOCK - 1]).is_none());
+        // whole-prompt coverage is capped: one token must remain
+        let exact = a[..2 * BLOCK].to_vec();
+        let hit = pc.acquire(7, &exact).expect("capped hit");
+        assert_eq!(hit.tokens, BLOCK, "last block left for the session");
+        pc.release(&hit);
+    }
+
+    #[test]
+    fn refcounts_release_pages_on_retire() {
+        let mut alloc = PagedAllocator::new(8, BLOCK);
+        let mut pc = PrefixCache::new(BLOCK, 1 << 20);
+        let toks = prompt(2 * BLOCK + 1);
+        pc.insert(3, &toks, usize::MAX, &filled_cache(toks.len()), &mut alloc);
+        assert_eq!(alloc.used_pages(), 2);
+        let hit = pc.acquire(3, &toks).unwrap();
+        pc.release(&hit);
+        // retiring the cache returns every page
+        pc.clear(&mut alloc);
+        assert_eq!(alloc.used_pages(), 0);
+        assert_eq!(pc.entry_count(), 0);
+        assert_eq!(pc.used_bytes(), 0);
+    }
+
+    #[test]
+    fn eviction_never_frees_in_use_entries() {
+        let mut alloc = PagedAllocator::new(64, BLOCK);
+        // budget fits exactly two block entries of the test shape
+        let entry_bytes = 2 * 2 * BLOCK * 2 * 4;
+        let mut pc = PrefixCache::new(BLOCK, 2 * entry_bytes);
+        let a = prompt(BLOCK + 1);
+        let mut b = prompt(BLOCK + 1);
+        b[0] = 777; // distinct first block
+        pc.insert(5, &a, usize::MAX, &filled_cache(a.len()), &mut alloc);
+        pc.insert(5, &b, usize::MAX, &filled_cache(b.len()), &mut alloc);
+        assert_eq!(pc.entry_count(), 2);
+
+        // pin both entries, then force pressure: nothing may be evicted
+        let ha = pc.acquire(5, &a).unwrap();
+        let hb = pc.acquire(5, &b).unwrap();
+        let mut c = prompt(BLOCK + 1);
+        c[0] = 888;
+        let inserted =
+            pc.insert(5, &c, usize::MAX, &filled_cache(c.len()), &mut alloc);
+        assert_eq!(inserted, 0, "no room and nothing evictable");
+        assert_eq!(pc.stats().evictions, 0);
+        assert_eq!(pc.entry_count(), 2);
+        // the pinned data is still intact and copyable
+        let mut dst = SeqKvCache::new(2, 1, 2, BLOCK);
+        ha.copy_into(&mut dst).unwrap();
+
+        // unpin one: the next insert may now evict exactly the LRU one
+        pc.release(&ha);
+        pc.release(&hb);
+        let used_before = alloc.used_pages();
+        let inserted =
+            pc.insert(5, &c, usize::MAX, &filled_cache(c.len()), &mut alloc);
+        assert_eq!(inserted, 1);
+        assert_eq!(pc.stats().evictions, 1);
+        assert_eq!(pc.entry_count(), 2);
+        assert_eq!(alloc.used_pages(), used_before, "evict+insert balances");
+    }
+
+    #[test]
+    fn insert_is_idempotent_across_replicas() {
+        let mut alloc = PagedAllocator::new(64, BLOCK);
+        let mut pc = PrefixCache::new(BLOCK, 1 << 20);
+        let toks = prompt(2 * BLOCK + 3);
+        let src = filled_cache(toks.len());
+        assert_eq!(pc.insert(9, &toks, usize::MAX, &src, &mut alloc), 2);
+        // a second replica finishing the same prompt stores nothing new
+        assert_eq!(pc.insert(9, &toks, usize::MAX, &src, &mut alloc), 0);
+        assert_eq!(pc.entry_count(), 2);
+        assert_eq!(pc.stats().insertions, 2);
+    }
+
+    #[test]
+    fn zero_budget_disables_cache() {
+        let mut alloc = PagedAllocator::new(8, BLOCK);
+        let mut pc = PrefixCache::new(BLOCK, 0);
+        let toks = prompt(2 * BLOCK);
+        assert!(!pc.enabled());
+        assert_eq!(
+            pc.insert(1, &toks, usize::MAX, &filled_cache(toks.len()),
+                      &mut alloc),
+            0
+        );
+        assert!(pc.acquire(1, &toks).is_none());
+        assert_eq!(alloc.used_pages(), 0);
+        // a disabled cache records no misses either (it never looked)
+        assert_eq!(pc.stats().misses, 0);
+    }
+
+    #[test]
+    fn prop_prefix_cache_page_conservation() {
+        check("prefix-pages-conserved", 60, |r| {
+            let total_pages = r.range(2, 32);
+            let mut alloc = PagedAllocator::new(total_pages, BLOCK);
+            let budget = r.range(1, 16) * 2 * 2 * BLOCK * 2 * 4;
+            let mut pc = PrefixCache::new(BLOCK, budget);
+            for _ in 0..r.range(1, 24) {
+                let n = r.range(1, 5) * BLOCK + r.range(0, BLOCK);
+                let mut toks = prompt(n);
+                toks[0] = r.range(0, 1000) as i32;
+                let src = filled_cache(n);
+                if r.bool(0.6) {
+                    pc.insert(1, &toks, usize::MAX, &src, &mut alloc);
+                } else if let Some(hit) = pc.acquire(1, &toks) {
+                    let mut dst = SeqKvCache::new(2, 1, 2, hit.tokens.max(1));
+                    hit.copy_into(&mut dst).map_err(|e| e.to_string())?;
+                    pc.release(&hit);
+                }
+                let expect = pc.entry_count() * alloc.pages_for(BLOCK);
+                crate::prop_assert!(
+                    alloc.used_pages() == expect,
+                    "page drift: used {} vs entries want {expect}",
+                    alloc.used_pages()
+                );
+                crate::prop_assert!(
+                    pc.used_bytes() <= pc.budget_bytes(),
+                    "budget exceeded: {} > {}",
+                    pc.used_bytes(),
+                    pc.budget_bytes()
+                );
+            }
+            pc.clear(&mut alloc);
+            crate::prop_assert!(alloc.used_pages() == 0, "pages leaked");
+            Ok(())
+        });
     }
 }

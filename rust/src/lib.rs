@@ -1,3 +1,5 @@
+#![warn(missing_docs)]
+
 //! # FastForward
 //!
 //! Full-stack reproduction of *"Fast Forward: Accelerating LLM Prefill
@@ -10,18 +12,32 @@
 //! * **L2** — JAX model (`python/compile/`): LLaMA-architecture
 //!   transformer, trained + AOT-lowered once to HLO-text artifacts.
 //! * **L3** — this crate: the serving coordinator. Block-wise prefill
-//!   engine with predictive FFN sparsity, dynamic batcher, request
-//!   router, HTTP server, paged KV management, the paper's layerwise
-//!   sparsity schedule (Algorithm 1), cost model, workload generators and
-//!   the full evaluation/benchmark harness.
+//!   engine with predictive FFN sparsity, a replica-sharded executor
+//!   pool with least-loaded dispatch, block-granular prefix-aware KV
+//!   reuse, dynamic batching, request routing, HTTP server, paged KV
+//!   management, the paper's layerwise sparsity schedule (Algorithm 1),
+//!   cost model, workload generators and the full evaluation/benchmark
+//!   harness.
 //!
 //! Python never runs on the request path: after `make artifacts` the
 //! `fastforward` binary is self-contained.
 //!
 //! ```text
-//! router → batcher → engine ─┬─ dense blocks  → layer_dense_*    (PJRT)
-//!                            └─ sparse blocks → layer_sparse_K_* (PJRT)
+//!                          ┌───────────── ExecutorPool ─────────────┐
+//! client ─▶ Router ────┬──▶ replica 0: Batcher ─▶ Engine ─▶ PJRT
+//!   │  (admission,     ├──▶ replica 1: Batcher ─▶ Engine ─▶ PJRT
+//!   │   least-loaded   └──▶ replica N-1  …
+//!   │   dispatch)
+//!   └─ shared: PagedAllocator · PrefixCache · Metrics
+//!
+//! engine, per prompt block ─┬─ cached prefix → adopt KV rows (no compute)
+//!                           ├─ dense block   → layer_dense_*    (PJRT)
+//!                           └─ sparse block  → layer_sparse_K_* (PJRT)
 //! ```
+//!
+//! See `docs/ARCHITECTURE.md` for the end-to-end request-path
+//! walkthrough and `docs/OPERATIONS.md` for endpoints, CLI flags,
+//! metrics and tuning.
 
 pub mod batcher;
 pub mod cost;
@@ -30,6 +46,7 @@ pub mod eval;
 pub mod kvcache;
 pub mod manifest;
 pub mod metrics;
+pub mod pool;
 pub mod router;
 pub mod runtime;
 pub mod server;
@@ -39,12 +56,23 @@ pub mod trace;
 pub mod util;
 pub mod weights;
 
+#[cfg(not(feature = "pjrt"))]
+pub mod xla_stub;
+
 use std::path::PathBuf;
 
 /// Locate the artifacts directory for tests/benches: `FF_ARTIFACTS` env
 /// var, else `<crate>/artifacts` if it holds a manifest. Returns None
-/// (tests skip) when artifacts have not been built.
+/// (tests skip) when artifacts have not been built, or when the crate
+/// was built without the `pjrt` feature (artifacts cannot execute).
 pub fn test_artifacts_dir() -> Option<PathBuf> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!(
+            "[skip] built without the `pjrt` feature — artifact-backed \
+             tests and benches are disabled"
+        );
+        return None;
+    }
     let cand = std::env::var("FF_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| {

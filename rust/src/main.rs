@@ -12,13 +12,14 @@ use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::Result;
-use fastforward::batcher::{Batcher, BatcherConfig};
+use fastforward::batcher::BatcherConfig;
 use fastforward::cost::CostModel;
 use fastforward::engine::{Engine, SparsityConfig};
 use fastforward::eval::{self, EvalSpec};
 use fastforward::manifest::Manifest;
 use fastforward::metrics::Metrics;
-use fastforward::router::Router;
+use fastforward::pool::ExecutorPool;
+use fastforward::router::{LoadEstimator, Router};
 use fastforward::runtime::Runtime;
 use fastforward::server::Server;
 use fastforward::sparsity::masks::ExpertSource;
@@ -31,6 +32,10 @@ fn usage() -> ! {
         "fastforward <serve|generate|eval|schedule|cost|info> [flags]
   common:    --artifacts DIR (default ./artifacts)
   serve:     --addr HOST:PORT --sparsity S --max-active N --queue N
+             --replicas N (executor pool size, default 1)
+             --prefix-cache-mb MB (shared prefix KV cache, default 64;
+              0 disables) --kv-pages N --block-budget N
+             --flop-load-model (FLOP-weighted dispatch cost)
   generate:  --prompt TEXT --max-tokens N --sparsity S
   eval:      --sparsity LIST --tasks N --prompt-chars N --ablation NAME
   cost:      --model llama8b|llama1b|llama3b|artifact --sparsity LIST
@@ -285,28 +290,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let probe = Manifest::load(&dir)?;
     let max_ctx = probe.model.max_ctx;
     let vocab = probe.model.vocab;
-    let kv_pages = args.usize("kv-pages", 8 * max_ctx / 128);
-    let router = Arc::new(Router::new(
+    let block = probe.model.block;
+    let replicas = args.usize("replicas", 1).max(1);
+    // Default pool: 8 max-length sequences *per replica*, so scaling the
+    // pool out doesn't silently starve KV admission.
+    let kv_pages = args.usize(
+        "kv-pages",
+        replicas * 8 * max_ctx.div_ceil(block),
+    );
+    let estimator = if args.has("flop-load-model") {
+        LoadEstimator::from_cost_model(&CostModel::from_cfg(&probe.model))
+    } else {
+        LoadEstimator::new(block)
+    };
+    let router = Arc::new(Router::new_pooled(
         args.usize("queue", 64),
         max_ctx,
         kv_pages,
-        128,
+        block,
         metrics.clone(),
+        replicas,
+        estimator,
+        args.usize("prefix-cache-mb", 64) * (1 << 20),
     ));
 
-    // Executor thread owns the engine (PJRT runtime is single-threaded).
+    // One executor thread per replica; each owns its engine (the PJRT
+    // runtime is single-threaded, so parallelism comes from replicas).
     let bcfg = BatcherConfig {
         max_active: args.usize("max-active", 8),
         prefill_block_budget: args.usize("block-budget", 4),
     };
-    let router2 = router.clone();
-    let exec = std::thread::spawn(move || -> Result<()> {
-        let manifest = Rc::new(Manifest::load(&dir)?);
-        let weights = Rc::new(WeightStore::load(&manifest)?);
-        let rt = Rc::new(Runtime::new(manifest, weights)?);
-        let engine = Engine::new(rt);
-        Batcher::new(engine, router2, bcfg).run()
-    });
+    let pool = ExecutorPool::spawn_from_artifacts(router.clone(), bcfg, dir);
+    eprintln!(
+        "[serve] {replicas} replica(s), {} KV pages, prefix cache {} MiB",
+        kv_pages,
+        args.usize("prefix-cache-mb", 64)
+    );
 
     let default_sparsity = {
         let s = args.f64("sparsity", 0.5);
@@ -320,7 +339,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     });
     let res = server.serve(&addr);
     router.close();
-    let _ = exec.join();
+    let _ = pool.join();
     res
 }
 

@@ -13,28 +13,43 @@ use crate::util::json::{self, Json};
 /// Model hyperparameters (mirrors python ModelConfig).
 #[derive(Debug, Clone)]
 pub struct ModelCfg {
+    /// Model name, e.g. "ff-mini-128".
     pub name: String,
+    /// LM-head vocabulary size (byte tokenizer padded for tidy shapes).
     pub vocab: usize,
+    /// Residual stream width.
     pub d_model: usize,
+    /// Transformer layer count.
     pub n_layers: usize,
+    /// Attention query heads.
     pub n_heads: usize,
+    /// KV heads (GQA).
     pub n_kv_heads: usize,
+    /// Per-head dimension.
     pub d_head: usize,
+    /// FFN hidden width (the dimension sparsity selects over).
     pub d_ffn: usize,
+    /// Prefill block size in tokens (paper §3.1: 128).
     pub block: usize,
+    /// FFN kernel tile: every compiled K is a multiple of this.
     pub ftile: usize,
+    /// Maximum context length any request may use.
     pub max_ctx: usize,
+    /// Compiled KV-bucket sizes, ascending.
     pub buckets: Vec<usize>,
 }
 
 /// One weight's location in weights.bin.
 #[derive(Debug, Clone)]
 pub struct WeightEntry {
+    /// Byte offset into weights.bin (f32-aligned).
     pub offset: usize,
+    /// Tensor shape.
     pub shape: Vec<usize>,
 }
 
 impl WeightEntry {
+    /// Number of f32 elements (min 1 for scalars).
     pub fn numel(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
@@ -55,48 +70,74 @@ pub enum ArgKind {
     Input(String),
 }
 
+/// One argument slot of an executable's ABI.
 #[derive(Debug, Clone)]
 pub struct ArgSpec {
+    /// How the slot is filled at dispatch time.
     pub kind: ArgKind,
+    /// Expected tensor shape.
     pub shape: Vec<usize>,
+    /// Whether the slot carries i32 data (f32 otherwise).
     pub is_i32: bool,
 }
 
+/// One AOT-lowered executable in the artifact bundle.
 #[derive(Debug, Clone)]
 pub struct ExecutableSpec {
+    /// Manifest name, e.g. "layer_dense_t128_s512".
     pub name: String,
+    /// HLO-text file relative to the artifact dir.
     pub file: String,
+    /// Argument slots in positional order.
     pub args: Vec<ArgSpec>,
 }
 
 /// Per-sparsity-budget schedule (paper Algorithm 1 output).
 #[derive(Debug, Clone)]
 pub struct BudgetSchedule {
+    /// Target sparsity level (e.g. 0.5).
     pub sparsity: f64,
+    /// Per-layer density budgets b_i from Algorithm 1.
     pub layer_densities: Vec<f64>,
+    /// Per-layer K (quantized to the compiled grid).
     pub layer_k: Vec<usize>,
+    /// Uniform-allocation comparison K per layer (Table 4 ablation).
     pub uniform_k: Vec<usize>,
 }
 
+/// Calibration outputs shipped with the artifacts.
 #[derive(Debug, Clone)]
 pub struct Schedule {
+    /// Per-layer attention mass (the Algorithm 1 importance signal).
     pub attention_masses: Vec<f64>,
+    /// Schedules keyed by sparsity ("0.30", "0.40", "0.50").
     pub budgets: BTreeMap<String, BudgetSchedule>,
 }
 
+/// The parsed artifact manifest: the ABI contract between
+/// python/compile/aot.py and the Rust runtime.
 #[derive(Debug)]
 pub struct Manifest {
+    /// Artifact directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Model hyperparameters.
     pub model: ModelCfg,
+    /// Absolute path to weights.bin.
     pub weights_file: PathBuf,
+    /// Weight table keyed by name.
     pub weights: BTreeMap<String, WeightEntry>,
+    /// Executable specs keyed by name.
     pub executables: BTreeMap<String, ExecutableSpec>,
+    /// Compiled sparse-K grid for prefill blocks.
     pub k_grid: Vec<usize>,
+    /// Compiled sparse-K grid for T=1 decode steps.
     pub decode_k: Vec<usize>,
+    /// Calibrated sparsity schedules.
     pub schedule: Schedule,
 }
 
 impl Manifest {
+    /// Parse manifest.json + schedule.json from an artifact directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let mpath = dir.join("manifest.json");
         let text = std::fs::read_to_string(&mpath)

@@ -1,11 +1,23 @@
-//! Serving metrics: TTFT / TPOT / throughput histograms with a
-//! Prometheus-text exporter (hand-rolled; substrate for the absent
-//! metrics crates).
+//! Serving metrics: TTFT / TPOT / throughput histograms, per-replica
+//! dispatch counters and prefix-cache gauges, with a Prometheus-text
+//! exporter (hand-rolled; substrate for the absent metrics crates).
+//!
+//! Every series is documented in docs/OPERATIONS.md — keep the two in
+//! sync when adding series.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::kvcache::PrefixCacheStats;
 use crate::util::stats::Summary;
+
+/// Per-replica dispatch/completion counters.
+#[derive(Default, Clone)]
+struct ReplicaCounters {
+    dispatched: u64,
+    completed: u64,
+    failed: u64,
+}
 
 #[derive(Default)]
 struct Inner {
@@ -18,9 +30,17 @@ struct Inner {
     requests_rejected: u64,
     blocks_dense: u64,
     blocks_sparse: u64,
+    tail_tokens: u64,
+    replicas: Vec<ReplicaCounters>,
+    /// Latest snapshot of the prefix cache's own counters — the cache
+    /// is the single source of truth; the executor pushes snapshots
+    /// after lookups and inserts.
+    prefix: PrefixCacheStats,
+    prefix_bytes: u64,
+    prefix_entries: u64,
 }
 
-/// Thread-safe metrics registry shared by router/engine/server.
+/// Thread-safe metrics registry shared by router/pool/engine/server.
 pub struct Metrics {
     inner: Mutex<Inner>,
     started: Instant,
@@ -33,6 +53,7 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Fresh registry; uptime starts now.
     pub fn new() -> Self {
         Metrics {
             inner: Mutex::new(Inner::default()),
@@ -40,14 +61,17 @@ impl Metrics {
         }
     }
 
+    /// Record one request's time-to-first-token.
     pub fn record_ttft(&self, ms: f64) {
         self.inner.lock().unwrap().ttft_ms.add(ms);
     }
 
+    /// Record one decode step's latency.
     pub fn record_tpot(&self, ms: f64) {
         self.inner.lock().unwrap().tpot_ms.add(ms);
     }
 
+    /// Record a completed request (token counts + end-to-end latency).
     pub fn record_request(&self, prompt_tokens: usize, generated: usize,
                           e2e_ms: f64) {
         let mut g = self.inner.lock().unwrap();
@@ -57,26 +81,92 @@ impl Metrics {
         g.e2e_ms.add(e2e_ms);
     }
 
+    /// Record an admission rejection (backpressure).
     pub fn record_rejection(&self) {
         self.inner.lock().unwrap().requests_rejected += 1;
     }
 
-    pub fn record_block(&self, dense: bool) {
+    /// Fold one finished prefill's block counts into the registry.
+    /// `timing.blocks` only counts blocks actually *executed*, so
+    /// prefix-cache adoptions never inflate the execution counters.
+    pub fn record_prefill_timing(
+        &self,
+        timing: &crate::engine::PrefillTiming,
+    ) {
         let mut g = self.inner.lock().unwrap();
-        if dense {
-            g.blocks_dense += 1;
-        } else {
-            g.blocks_sparse += 1;
+        g.blocks_dense += timing.dense_blocks as u64;
+        g.blocks_sparse +=
+            (timing.blocks - timing.dense_blocks) as u64;
+        g.tail_tokens += timing.tail_tokens as u64;
+    }
+
+    /// Size the per-replica counter table (idempotent; grows only).
+    pub fn ensure_replicas(&self, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if g.replicas.len() < n {
+            g.replicas.resize(n, ReplicaCounters::default());
         }
     }
 
+    /// Record a request dispatched to replica `id`.
+    pub fn record_replica_dispatch(&self, id: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if g.replicas.len() <= id {
+            g.replicas.resize(id + 1, ReplicaCounters::default());
+        }
+        g.replicas[id].dispatched += 1;
+    }
+
+    /// Record a request finished on replica `id` (`ok` = no error).
+    pub fn record_replica_done(&self, id: usize, ok: bool) {
+        let mut g = self.inner.lock().unwrap();
+        if g.replicas.len() <= id {
+            g.replicas.resize(id + 1, ReplicaCounters::default());
+        }
+        if ok {
+            g.replicas[id].completed += 1;
+        } else {
+            g.replicas[id].failed += 1;
+        }
+    }
+
+    /// Push the latest prefix-cache snapshot (counters + residency).
+    /// Called by the executor after lookups and inserts while it holds
+    /// the cache lock, so the exported series never drift from the
+    /// cache's own accounting.
+    pub fn set_prefix_state(&self, stats: PrefixCacheStats, bytes: usize,
+                            entries: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.prefix = stats;
+        g.prefix_bytes = bytes as u64;
+        g.prefix_entries = entries as u64;
+    }
+
+    /// (p50, p95) of recorded TTFT samples.
     pub fn ttft_p50_p95(&self) -> (f64, f64) {
         let g = self.inner.lock().unwrap();
         (g.ttft_ms.percentile(50.0), g.ttft_ms.percentile(95.0))
     }
 
+    /// Requests completed so far.
     pub fn requests_completed(&self) -> u64 {
         self.inner.lock().unwrap().requests_completed
+    }
+
+    /// Total prefill blocks actually executed (dense + sparse). The
+    /// engine's block-execution counter: blocks adopted from the prefix
+    /// cache never pass through here, so the difference between prompt
+    /// blocks submitted and this counter is exactly the compute skipped.
+    pub fn blocks_executed(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.blocks_dense + g.blocks_sparse
+    }
+
+    /// Prefix-cache (hits, misses, blocks_reused) counters from the
+    /// latest snapshot.
+    pub fn prefix_counters(&self) -> (u64, u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.prefix.hits, g.prefix.misses, g.prefix.blocks_reused)
     }
 
     /// Prometheus text exposition format.
@@ -98,10 +188,28 @@ impl Metrics {
               g.prompt_tokens as f64);
         gauge("ff_generated_tokens_total", "decoded tokens",
               g.generated_tokens as f64);
-        gauge("ff_blocks_dense_total", "dense prefill blocks",
+        gauge("ff_blocks_dense_total", "dense prefill blocks executed",
               g.blocks_dense as f64);
-        gauge("ff_blocks_sparse_total", "sparse prefill blocks",
+        gauge("ff_blocks_sparse_total", "sparse prefill blocks executed",
               g.blocks_sparse as f64);
+        gauge("ff_prefill_tail_tokens_total",
+              "ragged-tail tokens prefilled through T=1 steps",
+              g.tail_tokens as f64);
+        gauge("ff_prefix_hits_total", "prefills that adopted a cached prefix",
+              g.prefix.hits as f64);
+        gauge("ff_prefix_misses_total", "prefills with no cached prefix",
+              g.prefix.misses as f64);
+        gauge("ff_prefix_blocks_reused_total",
+              "prefill blocks skipped via prefix adoption",
+              g.prefix.blocks_reused as f64);
+        gauge("ff_prefix_insertions_total", "prefix block entries stored",
+              g.prefix.insertions as f64);
+        gauge("ff_prefix_evictions_total", "prefix entries evicted (LRU)",
+              g.prefix.evictions as f64);
+        gauge("ff_prefix_cache_bytes", "prefix cache resident KV bytes",
+              g.prefix_bytes as f64);
+        gauge("ff_prefix_cache_entries", "prefix cache resident entries",
+              g.prefix_entries as f64);
         for (name, s) in [
             ("ff_ttft_ms", &g.ttft_ms),
             ("ff_tpot_ms", &g.tpot_ms),
@@ -112,6 +220,39 @@ impl Metrics {
                 gauge(&format!("{name}_p50"), "median", s.percentile(50.0));
                 gauge(&format!("{name}_p95"), "p95", s.percentile(95.0));
                 gauge(&format!("{name}_p99"), "p99", s.percentile(99.0));
+            }
+        }
+        // Per-replica series use Prometheus labels so dashboards can
+        // aggregate across any pool size.
+        for (metric, help, get) in [
+            (
+                "ff_replica_dispatched_total",
+                "requests dispatched to this replica",
+                (|c: &ReplicaCounters| c.dispatched)
+                    as fn(&ReplicaCounters) -> u64,
+            ),
+            (
+                "ff_replica_completed_total",
+                "requests completed by this replica",
+                |c: &ReplicaCounters| c.completed,
+            ),
+            (
+                "ff_replica_failed_total",
+                "requests failed on this replica",
+                |c: &ReplicaCounters| c.failed,
+            ),
+        ] {
+            if g.replicas.is_empty() {
+                continue;
+            }
+            out.push_str(&format!(
+                "# HELP {metric} {help}\n# TYPE {metric} gauge\n"
+            ));
+            for (i, c) in g.replicas.iter().enumerate() {
+                out.push_str(&format!(
+                    "{metric}{{replica=\"{i}\"}} {}\n",
+                    get(c)
+                ));
             }
         }
         out
@@ -129,15 +270,54 @@ mod tests {
         m.record_ttft(20.0);
         m.record_tpot(2.0);
         m.record_request(512, 32, 600.0);
-        m.record_block(true);
-        m.record_block(false);
+        m.record_prefill_timing(&crate::engine::PrefillTiming {
+            blocks: 2,
+            dense_blocks: 1,
+            tail_tokens: 3,
+            ..Default::default()
+        });
         let (p50, p95) = m.ttft_p50_p95();
         assert!((p50 - 15.0).abs() < 1e-9);
         assert!(p95 > p50);
         let text = m.export();
         assert!(text.contains("ff_ttft_ms_mean 15"));
         assert!(text.contains("ff_requests_completed 1"));
+        assert!(text.contains("ff_blocks_dense_total 1"));
         assert!(text.contains("ff_blocks_sparse_total 1"));
+        assert!(text.contains("ff_prefill_tail_tokens_total 3"));
+        assert_eq!(m.blocks_executed(), 2);
+    }
+
+    #[test]
+    fn replica_and_prefix_series() {
+        let m = Metrics::new();
+        m.ensure_replicas(2);
+        m.record_replica_dispatch(0);
+        m.record_replica_dispatch(1);
+        m.record_replica_dispatch(1);
+        m.record_replica_done(1, true);
+        m.record_replica_done(0, false);
+        m.set_prefix_state(
+            PrefixCacheStats {
+                hits: 1,
+                misses: 1,
+                blocks_reused: 3,
+                insertions: 4,
+                evictions: 1,
+            },
+            4096,
+            2,
+        );
+        let text = m.export();
+        assert!(text.contains("ff_replica_dispatched_total{replica=\"0\"} 1"));
+        assert!(text.contains("ff_replica_dispatched_total{replica=\"1\"} 2"));
+        assert!(text.contains("ff_replica_completed_total{replica=\"1\"} 1"));
+        assert!(text.contains("ff_replica_failed_total{replica=\"0\"} 1"));
+        assert!(text.contains("ff_prefix_hits_total 1"));
+        assert!(text.contains("ff_prefix_blocks_reused_total 3"));
+        assert!(text.contains("ff_prefix_insertions_total 4"));
+        assert!(text.contains("ff_prefix_cache_bytes 4096"));
+        assert_eq!(m.prefix_counters(), (1, 1, 3));
     }
 
     #[test]

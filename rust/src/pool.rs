@@ -1,0 +1,186 @@
+//! Replica-sharded executor pool.
+//!
+//! The engine is deliberately `!Send` (it holds `Rc`s into the PJRT
+//! runtime), so the pool cannot hand one engine to N threads. Instead
+//! each worker thread *constructs its own* engine from the same
+//! artifacts via a caller-supplied factory, then runs a [`Batcher`]
+//! loop against its [`crate::router::Replica`] queue. The router
+//! performs least-loaded dispatch across the replicas, and the paged KV
+//! pool and prefix cache are shared, so a prefix prefilled on one
+//! replica is adoptable by all of them.
+//!
+//! ```text
+//!                      ┌────────────── ExecutorPool ───────────────┐
+//! HTTP ─▶ Router ──┬──▶ replica 0 queue ─▶ Batcher ─▶ Engine ─▶ PJRT
+//!  (admission,     ├──▶ replica 1 queue ─▶ Batcher ─▶ Engine ─▶ PJRT
+//!   least-loaded   └──▶ replica N-1  …
+//!   dispatch)        shared: PagedAllocator · PrefixCache · Metrics
+//! ```
+//!
+//! A worker whose factory fails marks its replica dead: the router
+//! routes around it and its queued requests receive error responses
+//! instead of hanging.
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::batcher::{Batcher, BatcherConfig};
+use crate::engine::Engine;
+use crate::router::Router;
+
+/// Handle to the pool's worker threads.
+pub struct ExecutorPool {
+    workers: Vec<JoinHandle<Result<()>>>,
+}
+
+/// Drop guard that marks a replica dead when its executor thread
+/// terminates for *any* reason — normal drain, error return, or panic
+/// (unwinding runs destructors). Without it, a panicking executor
+/// would leave its queue live in the router: clients already queued
+/// would hang forever and new traffic would keep being dispatched into
+/// the void.
+struct DeadOnExit {
+    router: Arc<Router>,
+    id: usize,
+}
+
+impl Drop for DeadOnExit {
+    fn drop(&mut self) {
+        self.router
+            .replica(self.id)
+            .mark_dead("executor thread terminated");
+    }
+}
+
+impl ExecutorPool {
+    /// Spawn one executor thread per router replica.
+    ///
+    /// `factory` runs once on each worker thread to build that
+    /// replica's engine (loading artifacts, compiling nothing yet —
+    /// executables compile lazily on first dispatch). A factory error
+    /// kills only that replica; the rest of the pool keeps serving.
+    pub fn spawn<F>(router: Arc<Router>, cfg: BatcherConfig,
+                    factory: F) -> ExecutorPool
+    where
+        F: Fn() -> Result<Engine> + Send + Sync + 'static,
+    {
+        let factory = Arc::new(factory);
+        let workers = (0..router.replica_count())
+            .map(|id| {
+                let router = router.clone();
+                let factory = factory.clone();
+                let cfg = cfg.clone();
+                std::thread::Builder::new()
+                    .name(format!("ff-executor-{id}"))
+                    .spawn(move || -> Result<()> {
+                        let engine = match (factory.as_ref())() {
+                            Ok(e) => e,
+                            Err(e) => {
+                                let msg = format!(
+                                    "replica {id} failed to start: {e}"
+                                );
+                                eprintln!("[pool] {msg}");
+                                router.replica(id).mark_dead(&msg);
+                                return Err(e);
+                            }
+                        };
+                        let _guard = DeadOnExit {
+                            router: router.clone(),
+                            id,
+                        };
+                        Batcher::for_replica(engine, router, cfg, id).run()
+                    })
+                    .expect("spawn executor thread")
+            })
+            .collect();
+        ExecutorPool { workers }
+    }
+
+    /// Spawn a pool whose workers each load the artifact bundle at
+    /// `dir` — the standard production factory.
+    pub fn spawn_from_artifacts(router: Arc<Router>, cfg: BatcherConfig,
+                                dir: std::path::PathBuf) -> ExecutorPool {
+        Self::spawn(router, cfg, move || {
+            use std::rc::Rc;
+            let manifest = Rc::new(crate::manifest::Manifest::load(&dir)?);
+            let weights = Rc::new(crate::weights::WeightStore::load(&manifest)?);
+            let rt = Rc::new(crate::runtime::Runtime::new(manifest, weights)?);
+            Ok(Engine::new(rt))
+        })
+    }
+
+    /// Number of worker threads (== router replicas at spawn time).
+    pub fn replicas(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Wait for every worker to drain and exit (call after
+    /// [`Router::close`]). Returns the first worker error, if any.
+    pub fn join(self) -> Result<()> {
+        let mut first_err = None;
+        for (i, w) in self.workers.into_iter().enumerate() {
+            match w.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err
+                        .get_or_insert(anyhow!("executor {i} panicked"));
+                }
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SparsityConfig;
+    use crate::metrics::Metrics;
+    use crate::router::LoadEstimator;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn failed_factory_fails_requests_instead_of_hanging() {
+        let router = Arc::new(Router::new_pooled(
+            8,
+            4096,
+            64,
+            128,
+            Arc::new(Metrics::new()),
+            1,
+            LoadEstimator::new(128),
+            0,
+        ));
+        let (tx, rx) = channel();
+        router
+            .submit(vec![1; 64], 4, SparsityConfig::dense(), tx)
+            .unwrap();
+        let pool = ExecutorPool::spawn(
+            router.clone(),
+            BatcherConfig::default(),
+            || Err(anyhow!("no artifacts in unit tests")),
+        );
+        let resp = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("queued request must be answered");
+        assert!(resp.error.unwrap().contains("failed to start"));
+        router.close();
+        assert!(pool.join().is_err(), "factory error surfaces on join");
+        // and the router now rejects instead of queueing into the void
+        let (tx, _rx) = channel();
+        assert_eq!(
+            router
+                .submit(vec![1; 64], 4, SparsityConfig::dense(), tx)
+                .unwrap_err(),
+            crate::router::Reject::Unavailable
+        );
+    }
+}

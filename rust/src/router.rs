@@ -1,81 +1,397 @@
-//! Request router: admission control, bounded queueing, backpressure.
+//! Request router: admission control, bounded queueing, backpressure,
+//! and least-loaded dispatch across executor replicas.
 //!
 //! The router sits between the (multi-threaded) HTTP front-end and the
-//! single-threaded engine executor. Admission enforces (a) a queue-depth
-//! bound and (b) KV-memory feasibility via the paged allocator, rejecting
-//! early (HTTP 429) rather than letting latency collapse.
+//! executor pool. Admission enforces (a) a per-replica queue-depth bound
+//! and (b) KV-memory feasibility via the paged allocator, rejecting
+//! early (HTTP 429) rather than letting latency collapse. Admitted
+//! requests are dispatched to the replica with the lowest outstanding
+//! load, where load is the sum of per-request cost estimates — queue
+//! depth weighted by estimated prefill blocks plus discounted decode
+//! steps, from the [`LoadEstimator`] (optionally calibrated against the
+//! FLOP cost model).
+//!
+//! The router also owns the two resources shared by every replica: the
+//! paged KV allocator and the block-granular [`PrefixCache`], so a
+//! prefix computed on one replica is adoptable by all of them.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::cost::CostModel;
 use crate::engine::SparsityConfig;
-use crate::kvcache::PagedAllocator;
+use crate::kvcache::{PagedAllocator, PrefixCache};
 use crate::metrics::Metrics;
 
 /// A queued generation request.
 pub struct Request {
+    /// Router-assigned id (monotonic per process).
     pub id: u64,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Maximum tokens to decode.
     pub max_tokens: usize,
+    /// Sparsity configuration the request runs under.
     pub cfg: SparsityConfig,
     /// Channel the finished response is delivered on.
     pub respond: Sender<Response>,
 }
 
+/// A finished (or failed) generation delivered back to the submitter.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// The id returned by [`Router::submit`].
     pub id: u64,
+    /// Decoded generation (empty on error).
     pub text: String,
+    /// Number of generated tokens.
     pub tokens: usize,
+    /// Time to first token in milliseconds (prefill completion).
     pub ttft_ms: f64,
+    /// Mean decode time per output token in milliseconds.
     pub tpot_ms: f64,
+    /// End-to-end latency in milliseconds (admission to completion).
     pub e2e_ms: f64,
+    /// Prefill blocks adopted from the prefix cache (0 = cold prefill).
+    pub reused_blocks: usize,
+    /// Error description when the request failed.
     pub error: Option<String>,
+}
+
+impl Response {
+    /// An error response for a request that produced no output.
+    pub fn failed(id: u64, error: String) -> Self {
+        Response {
+            id,
+            text: String::new(),
+            tokens: 0,
+            ttft_ms: 0.0,
+            tpot_ms: 0.0,
+            e2e_ms: 0.0,
+            reused_blocks: 0,
+            error: Some(error),
+        }
+    }
 }
 
 /// Rejection reasons surfaced to clients.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Reject {
+    /// The least-loaded replica's queue is at the configured bound.
     QueueFull,
-    PromptTooLong { len: usize, max: usize },
+    /// prompt + max_tokens exceeds the model context.
+    PromptTooLong {
+        /// Requested total positions.
+        len: usize,
+        /// Model maximum.
+        max: usize,
+    },
+    /// The paged KV pool cannot hold the request right now.
     KvExhausted,
+    /// Every executor replica is dead (engine failed to load).
+    Unavailable,
 }
 
-struct Inner {
+/// Translates a request into abstract scheduling cost.
+///
+/// A full prefill block costs 1; ragged-tail tokens and decode steps —
+/// both of which execute as T=1 steps — each cost `decode_unit`. The
+/// default `decode_unit` of 1.0 models the dispatch-bound CPU engine,
+/// where a T=1 step costs about as much as a block step;
+/// [`LoadEstimator::from_cost_model`] calibrates it to the FLOP ratio
+/// instead, which is the right weighting for compute-bound hardware.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadEstimator {
+    /// Prefill block size in tokens.
+    pub block: usize,
+    /// Cost of one T=1 step (tail token or decode step) relative to one
+    /// prefill block.
+    pub decode_unit: f64,
+}
+
+impl LoadEstimator {
+    /// Step-count estimator at the given block size (decode step ≈ one
+    /// block step; right for the dispatch-bound CPU engine).
+    pub fn new(block: usize) -> Self {
+        LoadEstimator {
+            block: block.max(1),
+            decode_unit: 1.0,
+        }
+    }
+
+    /// FLOP-calibrated estimator: one decode step is weighted by the
+    /// cost model's single-token/full-block FLOP ratio at a
+    /// representative context (1024 tokens).
+    pub fn from_cost_model(cm: &CostModel) -> Self {
+        let block_flops = cm.layer_flops(cm.block, 1024, cm.d_ffn, false)
+            .total();
+        let token_flops = cm.layer_flops(1, 1024, cm.d_ffn, false).total();
+        LoadEstimator {
+            block: cm.block.max(1),
+            decode_unit: if block_flops > 0.0 {
+                token_flops / block_flops
+            } else {
+                1.0
+            },
+        }
+    }
+
+    /// Estimated cost of a request in prefill-block units.
+    pub fn cost(&self, prompt_len: usize, max_tokens: usize) -> f64 {
+        let full_blocks = prompt_len / self.block;
+        let tail = prompt_len % self.block;
+        full_blocks as f64 + self.decode_unit * (tail + max_tokens) as f64
+    }
+}
+
+struct ReplicaInner {
     queue: VecDeque<Request>,
-    next_id: u64,
+    queued_cost: f64,
+    inflight_cost: f64,
     closed: bool,
+    dead: bool,
 }
 
-/// Thread-safe router handle.
-pub struct Router {
-    inner: Mutex<Inner>,
+/// One executor replica's work queue and load accounting.
+///
+/// Created by the router ([`Router::new_pooled`]); each replica is owned
+/// by exactly one executor thread, which pops work with
+/// [`Replica::pop_blocking`] / [`Replica::pop_up_to`] and reports
+/// completions with [`Replica::complete`]. Cost accounting mirrors the
+/// request lifecycle: submit adds to `queued`, pop moves `queued` →
+/// `inflight`, complete removes from `inflight`.
+pub struct Replica {
+    id: usize,
+    estimator: LoadEstimator,
+    max_queue: usize,
+    inner: Mutex<ReplicaInner>,
     notify: Condvar,
+}
+
+impl Replica {
+    fn new(id: usize, estimator: LoadEstimator, max_queue: usize) -> Self {
+        Replica {
+            id,
+            estimator,
+            max_queue,
+            inner: Mutex::new(ReplicaInner {
+                queue: VecDeque::new(),
+                queued_cost: 0.0,
+                inflight_cost: 0.0,
+                closed: false,
+                dead: false,
+            }),
+            notify: Condvar::new(),
+        }
+    }
+
+    /// Index of this replica in the pool ([0, replica_count)).
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Requests currently queued (not yet popped by the executor).
+    pub fn queue_len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Outstanding load: queued + in-flight cost estimates.
+    pub fn load(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        g.queued_cost + g.inflight_cost
+    }
+
+    /// Whether the replica's executor failed permanently.
+    pub fn is_dead(&self) -> bool {
+        self.inner.lock().unwrap().dead
+    }
+
+    /// Enqueue a request. Refused with a reason when the replica is
+    /// closed/dead (nothing may land after the dead-drain and hang its
+    /// client) or when the queue is at its bound — enforced here, under
+    /// the same lock as the enqueue, so concurrent submits cannot
+    /// overshoot `max_queue` between check and push.
+    fn push(&self, req: Request)
+            -> std::result::Result<(), (Request, Reject)> {
+        let cost = self.estimator.cost(req.prompt.len(), req.max_tokens);
+        let mut g = self.inner.lock().unwrap();
+        if g.dead || g.closed {
+            return Err((req, Reject::Unavailable));
+        }
+        if g.queue.len() >= self.max_queue {
+            return Err((req, Reject::QueueFull));
+        }
+        g.queued_cost += cost;
+        g.queue.push_back(req);
+        drop(g);
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    fn take_front(g: &mut ReplicaInner, est: &LoadEstimator)
+                  -> Option<Request> {
+        let req = g.queue.pop_front()?;
+        let cost = est.cost(req.prompt.len(), req.max_tokens);
+        g.queued_cost = (g.queued_cost - cost).max(0.0);
+        g.inflight_cost += cost;
+        Some(req)
+    }
+
+    /// Blocking pop for the executor thread; None once closed and empty.
+    pub fn pop_blocking(&self) -> Option<Request> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = Self::take_front(&mut g, &self.estimator) {
+                return Some(r);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.notify.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking drain of up to `n` requests (executor admission).
+    pub fn pop_up_to(&self, n: usize) -> Vec<Request> {
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        while out.len() < n {
+            match Self::take_front(&mut g, &self.estimator) {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Return a popped request to the *front* of the queue: admission
+    /// hit transient KV pressure and will retry once pages free up.
+    /// Moves the cost estimate back from in-flight to queued.
+    pub fn requeue(&self, req: Request) {
+        let cost = self.estimator.cost(req.prompt.len(), req.max_tokens);
+        let mut g = self.inner.lock().unwrap();
+        g.inflight_cost = (g.inflight_cost - cost).max(0.0);
+        g.queued_cost += cost;
+        g.queue.push_front(req);
+    }
+
+    /// Report a popped request as finished (success or failure),
+    /// removing its cost estimate from the in-flight load.
+    pub fn complete(&self, prompt_len: usize, max_tokens: usize) {
+        let cost = self.estimator.cost(prompt_len, max_tokens);
+        let mut g = self.inner.lock().unwrap();
+        g.inflight_cost = (g.inflight_cost - cost).max(0.0);
+    }
+
+    /// Stop accepting work and wake the executor so it can drain.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.notify.notify_all();
+    }
+
+    /// Mark the replica permanently failed (the router stops dispatching
+    /// to it) and fail every queued request with `error`.
+    pub fn mark_dead(&self, error: &str) {
+        let drained: Vec<Request> = {
+            let mut g = self.inner.lock().unwrap();
+            g.dead = true;
+            g.closed = true;
+            g.queued_cost = 0.0;
+            g.queue.drain(..).collect()
+        };
+        self.notify.notify_all();
+        for req in drained {
+            let _ = req
+                .respond
+                .send(Response::failed(req.id, error.to_string()));
+        }
+    }
+}
+
+/// Thread-safe router handle shared by the HTTP front-end and the
+/// executor pool.
+pub struct Router {
+    replicas: Vec<Arc<Replica>>,
+    next_id: Mutex<u64>,
+    estimator: LoadEstimator,
+    /// Per-replica queue-depth bound enforced at admission.
     pub max_queue: usize,
+    /// Maximum prompt + generation positions per request.
     pub max_ctx: usize,
+    /// Shared paged KV allocator (admission control + prefix residency).
     pub kv_pool: Mutex<PagedAllocator>,
+    /// Shared block-granular prefix cache (disabled at zero budget).
+    pub prefix_cache: Mutex<PrefixCache>,
+    /// Shared metrics registry.
     pub metrics: Arc<Metrics>,
 }
 
 impl Router {
+    /// Single-replica router with the prefix cache disabled — the legacy
+    /// constructor used by the single-executor stack and tests.
     pub fn new(max_queue: usize, max_ctx: usize, kv_pages: usize,
                page_size: usize, metrics: Arc<Metrics>) -> Self {
+        Self::new_pooled(
+            max_queue,
+            max_ctx,
+            kv_pages,
+            page_size,
+            metrics,
+            1,
+            LoadEstimator::new(page_size),
+            0,
+        )
+    }
+
+    /// Full constructor: `n_replicas` executor queues and a prefix cache
+    /// of `prefix_cache_bytes` (0 disables prefix reuse). The prefix
+    /// cache's block granularity is taken from `estimator.block`, which
+    /// must equal the engine's prefill block size.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_pooled(max_queue: usize, max_ctx: usize, kv_pages: usize,
+                      page_size: usize, metrics: Arc<Metrics>,
+                      n_replicas: usize, estimator: LoadEstimator,
+                      prefix_cache_bytes: usize) -> Self {
+        let n = n_replicas.max(1);
+        metrics.ensure_replicas(n);
         Router {
-            inner: Mutex::new(Inner {
-                queue: VecDeque::new(),
-                next_id: 1,
-                closed: false,
-            }),
-            notify: Condvar::new(),
+            replicas: (0..n)
+                .map(|i| Arc::new(Replica::new(i, estimator, max_queue)))
+                .collect(),
+            next_id: Mutex::new(1),
+            estimator,
             max_queue,
             max_ctx,
             kv_pool: Mutex::new(PagedAllocator::new(kv_pages, page_size)),
+            prefix_cache: Mutex::new(PrefixCache::new(
+                estimator.block,
+                prefix_cache_bytes,
+            )),
             metrics,
         }
     }
 
+    /// Number of executor replicas.
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Handle to replica `i` (panics when out of range).
+    pub fn replica(&self, i: usize) -> Arc<Replica> {
+        self.replicas[i].clone()
+    }
+
+    /// The request-cost estimator used for dispatch.
+    pub fn estimator(&self) -> LoadEstimator {
+        self.estimator
+    }
+
     /// Admit a request or reject with a reason.
+    ///
+    /// Admission checks context bound, KV feasibility and the target
+    /// replica's queue bound, then dispatches to the least-loaded alive
+    /// replica.
     pub fn submit(&self, prompt: Vec<i32>, max_tokens: usize,
                   cfg: SparsityConfig, respond: Sender<Response>)
                   -> Result<u64, Reject> {
@@ -90,57 +406,103 @@ impl Router {
         {
             let pool = self.kv_pool.lock().unwrap();
             if !pool.can_allocate(total) {
-                self.metrics.record_rejection();
-                return Err(Reject::KvExhausted);
+                // Live requests outrank cached residency: reclaim
+                // unpinned prefix entries before rejecting. Lock order
+                // matches the batcher's insert site (prefix before
+                // pool), so re-acquire in that order.
+                drop(pool);
+                let mut pc = self.prefix_cache.lock().unwrap();
+                let mut pool = self.kv_pool.lock().unwrap();
+                let needed = pool.pages_for(total);
+                pc.evict_for(needed, &mut pool);
+                if !pool.can_allocate(total) {
+                    self.metrics.record_rejection();
+                    return Err(Reject::KvExhausted);
+                }
             }
         }
-        let mut g = self.inner.lock().unwrap();
-        if g.queue.len() >= self.max_queue {
-            self.metrics.record_rejection();
-            return Err(Reject::QueueFull);
-        }
-        let id = g.next_id;
-        g.next_id += 1;
-        g.queue.push_back(Request {
+        let replica = match self.least_loaded() {
+            Ok(r) => r,
+            Err(reject) => {
+                self.metrics.record_rejection();
+                return Err(reject);
+            }
+        };
+        let id = {
+            let mut g = self.next_id.lock().unwrap();
+            let id = *g;
+            *g += 1;
+            id
+        };
+        if let Err((_req, reject)) = replica.push(Request {
             id,
             prompt,
             max_tokens,
             cfg,
             respond,
-        });
-        drop(g);
-        self.notify.notify_one();
+        }) {
+            // the replica died or filled between least_loaded() and
+            // push(); the request was never enqueued, so reject instead
+            // of letting the client wait on a queue nobody will drain
+            self.metrics.record_rejection();
+            return Err(reject);
+        }
+        self.metrics.record_replica_dispatch(replica.id());
         Ok(id)
     }
 
-    /// Blocking pop for the executor thread; None once closed and empty.
-    pub fn pop_blocking(&self) -> Option<Request> {
-        let mut g = self.inner.lock().unwrap();
-        loop {
-            if let Some(r) = g.queue.pop_front() {
-                return Some(r);
+    /// The alive replica with the lowest outstanding load *among those
+    /// with queue room* (ties break toward the lowest id). Replicas at
+    /// their queue bound are skipped, so cost-based load and queue
+    /// depth diverging (one replica full of tiny requests, another of
+    /// huge ones) never causes spurious QueueFull while capacity
+    /// exists elsewhere.
+    fn least_loaded(&self) -> std::result::Result<Arc<Replica>, Reject> {
+        let mut any_alive = false;
+        let mut best: Option<(f64, &Arc<Replica>)> = None;
+        for r in &self.replicas {
+            if r.is_dead() {
+                continue;
             }
-            if g.closed {
-                return None;
+            any_alive = true;
+            if r.queue_len() >= self.max_queue {
+                continue;
             }
-            g = self.notify.wait(g).unwrap();
+            let load = r.load();
+            match best {
+                Some((b, _)) if b <= load => {}
+                _ => best = Some((load, r)),
+            }
+        }
+        match best {
+            Some((_, r)) => Ok(r.clone()),
+            None if any_alive => Err(Reject::QueueFull),
+            None => Err(Reject::Unavailable),
         }
     }
 
-    /// Non-blocking drain of up to `n` requests (batcher admission).
+    /// Blocking pop from replica 0 — the legacy single-executor path
+    /// (prefer [`Replica::pop_blocking`] via [`Router::replica`]).
+    pub fn pop_blocking(&self) -> Option<Request> {
+        self.replicas[0].pop_blocking()
+    }
+
+    /// Non-blocking drain of up to `n` requests from replica 0 (legacy
+    /// single-executor path).
     pub fn pop_up_to(&self, n: usize) -> Vec<Request> {
-        let mut g = self.inner.lock().unwrap();
-        let take = n.min(g.queue.len());
-        g.queue.drain(..take).collect()
+        self.replicas[0].pop_up_to(n)
     }
 
+    /// Total queued requests across all replicas.
     pub fn queue_depth(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        self.replicas.iter().map(|r| r.queue_len()).sum()
     }
 
+    /// Stop accepting work and wake every executor so the pool drains.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
-        self.notify.notify_all();
+        for r in &self.replicas {
+            r.close();
+        }
     }
 }
 
@@ -151,6 +513,19 @@ mod tests {
 
     fn router(max_queue: usize) -> Router {
         Router::new(max_queue, 4096, 64, 128, Arc::new(Metrics::new()))
+    }
+
+    fn pooled(max_queue: usize, replicas: usize) -> Router {
+        Router::new_pooled(
+            max_queue,
+            4096,
+            256,
+            128,
+            Arc::new(Metrics::new()),
+            replicas,
+            LoadEstimator::new(128),
+            0,
+        )
     }
 
     #[test]
@@ -216,5 +591,120 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         r.close();
         assert!(h.join().unwrap());
+    }
+
+    #[test]
+    fn estimator_units() {
+        let e = LoadEstimator::new(128);
+        // 2 full blocks + 5 tail tokens + 4 decode steps at unit weight
+        assert!((e.cost(261, 4) - 11.0).abs() < 1e-12);
+        assert_eq!(e.cost(0, 0), 0.0);
+        let fm = LoadEstimator::from_cost_model(
+            &crate::cost::CostModel::llama8b(),
+        );
+        assert!(fm.decode_unit > 0.0 && fm.decode_unit < 0.1,
+                "flop-weighted decode unit should be ~1/block: {}",
+                fm.decode_unit);
+        // tail tokens are T=1 steps: under FLOP weighting a 1023-token
+        // prompt must cost about the same as a 1024-token one, not 17x
+        let near = fm.cost(1023, 0);
+        let aligned = fm.cost(1024, 0);
+        assert!(
+            near < aligned * 1.1 && near > aligned * 0.5,
+            "unaligned prompt over-costed: {near} vs {aligned}"
+        );
+    }
+
+    #[test]
+    fn dispatch_is_least_loaded() {
+        let r = pooled(16, 2);
+        let (tx, _rx) = channel();
+        // heavy request lands on replica 0 (both idle, lowest id wins)
+        r.submit(vec![1; 512], 0, SparsityConfig::dense(), tx.clone())
+            .unwrap();
+        assert_eq!(r.replica(0).queue_len(), 1);
+        // the next two light requests both prefer replica 1 (4 blocks of
+        // queued load on replica 0 vs 1-2 on replica 1)
+        r.submit(vec![2; 128], 0, SparsityConfig::dense(), tx.clone())
+            .unwrap();
+        r.submit(vec![3; 128], 0, SparsityConfig::dense(), tx)
+            .unwrap();
+        assert_eq!(r.replica(0).queue_len(), 1);
+        assert_eq!(r.replica(1).queue_len(), 2);
+    }
+
+    #[test]
+    fn inflight_load_counts_until_complete() {
+        let r = pooled(16, 2);
+        let (tx, _rx) = channel();
+        r.submit(vec![1; 256], 8, SparsityConfig::dense(), tx.clone())
+            .unwrap();
+        let rep = r.replica(0);
+        let queued = rep.load();
+        assert!(queued > 0.0);
+        let req = rep.pop_blocking().unwrap();
+        // popped but not complete: load unchanged (moved to in-flight)
+        assert!((rep.load() - queued).abs() < 1e-9);
+        rep.complete(req.prompt.len(), req.max_tokens);
+        assert_eq!(rep.load(), 0.0);
+    }
+
+    #[test]
+    fn admission_reclaims_prefix_pages() {
+        use crate::kvcache::SeqKvCache;
+        let r = Router::new_pooled(
+            8,
+            4096,
+            8, // 8 pages total
+            128,
+            Arc::new(Metrics::new()),
+            1,
+            LoadEstimator::new(128),
+            1 << 30,
+        );
+        // fill the entire pool with cached prefix blocks
+        {
+            let mut pc = r.prefix_cache.lock().unwrap();
+            let mut pool = r.kv_pool.lock().unwrap();
+            let toks: Vec<i32> = (0..1024).collect();
+            let mut src = SeqKvCache::new(1, 1, 1, 1024);
+            let zeros = vec![0.0; 128];
+            for _ in 0..8 {
+                src.append_layer(0, &zeros, &zeros, 128).unwrap();
+                src.advance(128);
+            }
+            assert_eq!(pc.insert(1, &toks, usize::MAX, &src, &mut pool), 8);
+            assert_eq!(pool.free_pages(), 0);
+        }
+        // a live request must still admit: unpinned cached residency is
+        // reclaimed instead of rejecting with KvExhausted forever
+        let (tx, _rx) = channel();
+        r.submit(vec![7; 200], 10, SparsityConfig::dense(), tx)
+            .unwrap();
+        assert_eq!(r.prefix_cache.lock().unwrap().entry_count(), 6);
+        assert!(r.kv_pool.lock().unwrap().free_pages() >= 2);
+    }
+
+    #[test]
+    fn dead_replicas_are_skipped_and_drained() {
+        let r = pooled(16, 2);
+        let (tx, rx) = channel();
+        r.submit(vec![1; 64], 2, SparsityConfig::dense(), tx.clone())
+            .unwrap();
+        assert_eq!(r.replica(0).queue_len(), 1);
+        r.replica(0).mark_dead("engine failed to load");
+        // the queued request got an error response
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.unwrap().contains("failed to load"));
+        // new work routes around the dead replica
+        r.submit(vec![2; 64], 2, SparsityConfig::dense(), tx.clone())
+            .unwrap();
+        assert_eq!(r.replica(1).queue_len(), 1);
+        // with every replica dead, admission rejects
+        r.replica(1).mark_dead("gone");
+        let e = r
+            .submit(vec![3; 64], 2, SparsityConfig::dense(), tx)
+            .unwrap_err();
+        assert_eq!(e, Reject::Unavailable);
     }
 }

@@ -14,12 +14,20 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+// Without the `pjrt` feature the real XLA bindings are replaced by an
+// inert, API-identical stub (see `crate::xla_stub`): the whole crate
+// still typechecks and pure host-side logic stays testable.
+#[cfg(not(feature = "pjrt"))]
+use crate::xla_stub as xla;
+
 use crate::manifest::{ArgKind, Manifest};
 use crate::weights::WeightStore;
 
 /// A runtime input value (host-side view, uploaded per call).
 pub enum Input<'a> {
+    /// f32 tensor data with its shape.
     F32(&'a [f32], Vec<usize>),
+    /// i32 tensor data with its shape.
     I32(&'a [i32], Vec<usize>),
 }
 
@@ -34,16 +42,22 @@ impl<'a> Input<'a> {
 /// One decomposed output tensor.
 #[derive(Debug, Clone)]
 pub struct Output {
+    /// Host f32 data in row-major layout.
     pub data: Vec<f32>,
 }
 
 /// Cumulative dispatch statistics (perf accounting; EXPERIMENTS.md §Perf).
 #[derive(Debug, Default, Clone)]
 pub struct DispatchStats {
+    /// Total executable invocations.
     pub executions: u64,
+    /// Time spent compiling executables (first use only, cached after).
     pub compile_time: Duration,
+    /// Time uploading input buffers.
     pub upload_time: Duration,
+    /// Time inside executions.
     pub execute_time: Duration,
+    /// Time downloading output tuples.
     pub download_time: Duration,
 }
 
@@ -55,8 +69,12 @@ enum PlanArg {
     Input { name: String, arg_idx: usize },
 }
 
+/// The PJRT dispatcher: compiled-executable cache, device-resident
+/// weights, per-(executable, layer) dispatch plans and timing stats.
+/// `!Send` by design — each executor replica owns one.
 pub struct Runtime {
     client: xla::PjRtClient,
+    /// The artifact manifest driving argument resolution.
     pub manifest: Rc<Manifest>,
     weights: Rc<WeightStore>,
     exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
@@ -66,6 +84,8 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Create a CPU PJRT client over loaded artifacts. Fails when built
+    /// without the `pjrt` feature (see [`crate::xla_stub`]).
     pub fn new(manifest: Rc<Manifest>, weights: Rc<WeightStore>) -> Result<Self> {
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
@@ -80,6 +100,7 @@ impl Runtime {
         })
     }
 
+    /// Snapshot of the cumulative dispatch statistics.
     pub fn stats(&self) -> DispatchStats {
         self.stats.borrow().clone()
     }
@@ -117,6 +138,7 @@ impl Runtime {
         Ok(())
     }
 
+    /// Number of executables compiled so far.
     pub fn compiled_count(&self) -> usize {
         self.exes.borrow().len()
     }

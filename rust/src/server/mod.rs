@@ -1,11 +1,20 @@
 //! Minimal HTTP/1.1 JSON API on std::net (the vendored crate set has no
-//! tokio/hyper; a thread-per-connection server is plenty for a CPU
-//! engine whose executor is single-threaded anyway).
+//! tokio/hyper; a thread-per-connection server is plenty: connection
+//! threads only parse/serialize, all model work happens on the executor
+//! pool).
 //!
 //! Endpoints:
 //! * `POST /generate`  — {"prompt": str, "max_tokens": n, "sparsity": s?}
 //! * `GET  /metrics`   — Prometheus text
 //! * `GET  /healthz`   — liveness
+//!
+//! Robustness: request lines that don't parse as `METHOD /path ...`
+//! get a 400 instead of being treated as an empty method/path, bodies
+//! larger than [`MAX_BODY_BYTES`] get a 413 before any allocation,
+//! non-numeric `content-length` values get a 400, and total bytes read
+//! per connection are hard-capped ([`MAX_HEADER_BYTES`] +
+//! [`MAX_BODY_BYTES`]) so endless request lines or header streams
+//! cannot exhaust memory.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -20,10 +29,28 @@ use crate::router::{Reject, Router};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::{self, Json};
 
+/// Upper bound on request bodies (1 MiB). A max-context prompt is a few
+/// hundred KiB of JSON; anything bigger is rejected with 413 before the
+/// body is read into memory.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Upper bound on the request line + headers (16 KiB). Combined with
+/// [`MAX_BODY_BYTES`] this caps total bytes read per connection, so a
+/// client streaming an endless request line (no newline) or endless
+/// headers cannot grow memory without bound.
+pub const MAX_HEADER_BYTES: usize = 16 << 10;
+
+/// The HTTP front-end: owns the listener loop and shares the router /
+/// metrics / tokenizer with every connection thread.
 pub struct Server {
+    /// Admission + dispatch into the executor pool.
     pub router: Arc<Router>,
+    /// Registry served on `/metrics`.
     pub metrics: Arc<Metrics>,
+    /// Byte-level tokenizer for request prompts.
     pub tokenizer: Tokenizer,
+    /// Sparsity applied when a request doesn't specify one
+    /// (None = dense).
     pub default_sparsity: Option<f64>,
 }
 
@@ -34,24 +61,118 @@ struct HttpReq {
     body: String,
 }
 
-fn read_request(stream: &mut TcpStream) -> Result<HttpReq> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
+/// Protocol-level rejection decided while reading the request.
+struct HttpError {
+    status: u16,
+    message: &'static str,
+}
+
+/// Read one `\n`-terminated line, refusing to buffer more than `cap`
+/// bytes: a client streaming an endless line gets a clean 400 after at
+/// most `cap` + one buffer of memory, instead of growing a String
+/// without bound the way `read_line` would.
+fn read_line_capped<R: BufRead>(reader: &mut R, cap: usize)
+                                -> Result<std::result::Result<String, HttpError>> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            return Err(anyhow!("connection closed mid-line"));
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                buf.extend_from_slice(&chunk[..=i]);
+                reader.consume(i + 1);
+                if buf.len() > cap {
+                    return Ok(Err(HttpError {
+                        status: 400,
+                        message: "headers too large",
+                    }));
+                }
+                return Ok(Ok(String::from_utf8_lossy(&buf).into_owned()));
+            }
+            None => {
+                let n = chunk.len();
+                buf.extend_from_slice(chunk);
+                reader.consume(n);
+                if buf.len() > cap {
+                    return Ok(Err(HttpError {
+                        status: 400,
+                        message: "headers too large",
+                    }));
+                }
+            }
+        }
+    }
+}
+
+/// Read one request. Outer `Err` = I/O failure (connection is dead,
+/// nothing can be sent); inner `Err` = protocol violation to answer
+/// with the carried status code.
+fn read_request(stream: &mut TcpStream)
+                -> Result<std::result::Result<HttpReq, HttpError>> {
+    // Hard cap on total bytes read as a backstop; on top of it, the
+    // request line and headers are read through a separate
+    // MAX_HEADER_BYTES budget with per-line caps, so oversized headers
+    // get a clean 400 and can never eat into the body's share.
+    let limit = (MAX_HEADER_BYTES + MAX_BODY_BYTES) as u64;
+    let mut reader = BufReader::new(stream.try_clone()?.take(limit));
+    let mut budget = MAX_HEADER_BYTES;
+    let line = match read_line_capped(&mut reader, budget)? {
+        Ok(l) => l,
+        Err(e) => return Ok(Err(e)),
+    };
+    budget = budget.saturating_sub(line.len());
     let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("/").to_string();
+    let (method, path) = match (parts.next(), parts.next()) {
+        (Some(m), Some(p))
+            if !m.is_empty()
+                && m.chars().all(|c| c.is_ascii_uppercase())
+                && p.starts_with('/') =>
+        {
+            (m.to_string(), p.to_string())
+        }
+        _ => {
+            return Ok(Err(HttpError {
+                status: 400,
+                message: "malformed request line",
+            }))
+        }
+    };
     let mut content_len = 0usize;
     loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
+        if budget == 0 {
+            return Ok(Err(HttpError {
+                status: 400,
+                message: "headers too large",
+            }));
+        }
+        let h = match read_line_capped(&mut reader, budget)? {
+            Ok(l) => l,
+            Err(e) => return Ok(Err(e)),
+        };
+        budget = budget.saturating_sub(h.len());
         let h = h.trim();
         if h.is_empty() {
             break;
         }
         if let Some((k, v)) = h.split_once(':') {
             if k.eq_ignore_ascii_case("content-length") {
-                content_len = v.trim().parse().unwrap_or(0);
+                match v.trim().parse::<usize>() {
+                    Ok(n) if n <= MAX_BODY_BYTES => content_len = n,
+                    Ok(_) => {
+                        return Ok(Err(HttpError {
+                            status: 413,
+                            message: "body exceeds maximum size",
+                        }))
+                    }
+                    Err(_) => {
+                        return Ok(Err(HttpError {
+                            status: 400,
+                            message: "invalid content-length",
+                        }))
+                    }
+                }
             }
         }
     }
@@ -59,11 +180,11 @@ fn read_request(stream: &mut TcpStream) -> Result<HttpReq> {
     if content_len > 0 {
         reader.read_exact(&mut body)?;
     }
-    Ok(HttpReq {
+    Ok(Ok(HttpReq {
         method,
         path,
         body: String::from_utf8_lossy(&body).into_owned(),
-    })
+    }))
 }
 
 fn respond(stream: &mut TcpStream, status: u16, content_type: &str,
@@ -72,7 +193,9 @@ fn respond(stream: &mut TcpStream, status: u16, content_type: &str,
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        413 => "Payload Too Large",
         429 => "Too Many Requests",
+        503 => "Service Unavailable",
         _ => "Internal Server Error",
     };
     write!(
@@ -81,6 +204,10 @@ fn respond(stream: &mut TcpStream, status: u16, content_type: &str,
         body.len()
     )?;
     Ok(())
+}
+
+fn error_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
 }
 
 impl Server {
@@ -98,11 +225,7 @@ impl Server {
                         &mut stream,
                         500,
                         "application/json",
-                        &Json::obj(vec![(
-                            "error",
-                            Json::Str(e.to_string()),
-                        )])
-                        .to_string(),
+                        &error_json(&e.to_string()),
                     );
                 }
             });
@@ -111,7 +234,17 @@ impl Server {
     }
 
     fn handle(&self, stream: &mut TcpStream) -> Result<()> {
-        let req = read_request(stream)?;
+        let req = match read_request(stream)? {
+            Ok(req) => req,
+            Err(e) => {
+                return respond(
+                    stream,
+                    e.status,
+                    "application/json",
+                    &error_json(e.message),
+                )
+            }
+        };
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/healthz") => {
                 respond(stream, 200, "text/plain", "ok")
@@ -132,15 +265,21 @@ impl Server {
                     stream,
                     400,
                     "application/json",
-                    &Json::obj(vec![("error", Json::Str(format!("bad json: {e}")))])
-                        .to_string(),
+                    &error_json(&format!("bad json: {e}")),
                 )
             }
         };
-        let prompt_text = j
-            .get("prompt")
-            .and_then(|p| p.as_str())
-            .ok_or_else(|| anyhow!("missing prompt"))?;
+        let prompt_text = match j.get("prompt").and_then(|p| p.as_str()) {
+            Some(p) => p,
+            None => {
+                return respond(
+                    stream,
+                    400,
+                    "application/json",
+                    &error_json("missing prompt"),
+                )
+            }
+        };
         let max_tokens = j
             .get("max_tokens")
             .and_then(|v| v.as_usize())
@@ -160,16 +299,14 @@ impl Server {
                 let (code, msg) = match reject {
                     Reject::QueueFull => (429, "queue full".to_string()),
                     Reject::KvExhausted => (429, "kv pool exhausted".into()),
+                    Reject::Unavailable => {
+                        (503, "no executor replicas available".into())
+                    }
                     Reject::PromptTooLong { len, max } => {
                         (400, format!("prompt+gen {len} exceeds max {max}"))
                     }
                 };
-                respond(
-                    stream,
-                    code,
-                    "application/json",
-                    &Json::obj(vec![("error", Json::Str(msg))]).to_string(),
-                )
+                respond(stream, code, "application/json", &error_json(&msg))
             }
             Ok(id) => {
                 let resp = rx
@@ -182,6 +319,10 @@ impl Server {
                     ("ttft_ms", Json::Num(resp.ttft_ms)),
                     ("tpot_ms", Json::Num(resp.tpot_ms)),
                     ("e2e_ms", Json::Num(resp.e2e_ms)),
+                    (
+                        "reused_blocks",
+                        Json::Num(resp.reused_blocks as f64),
+                    ),
                     (
                         "error",
                         resp.error.map(Json::Str).unwrap_or(Json::Null),

@@ -5,21 +5,28 @@
 //! matmul shapes — ids ≥ 259 never occur in text and the model learns to
 //! assign them ~zero probability.
 
+/// Padding token id.
 pub const PAD: i32 = 256;
+/// Beginning-of-sequence token id.
 pub const BOS: i32 = 257;
+/// End-of-sequence token id (terminates greedy decoding).
 pub const EOS: i32 = 258;
 
+/// The byte-level tokenizer (ids 0..=255 are raw bytes).
 #[derive(Debug, Clone)]
 pub struct Tokenizer {
+    /// LM-head vocabulary size (>= 259 to cover the specials).
     pub vocab: usize,
 }
 
 impl Tokenizer {
+    /// Tokenizer for a model with the given padded vocabulary.
     pub fn new(vocab: usize) -> Self {
         assert!(vocab > EOS as usize, "vocab must cover specials");
         Tokenizer { vocab }
     }
 
+    /// Encode text as its UTF-8 bytes (one token per byte).
     pub fn encode(&self, text: &str) -> Vec<i32> {
         text.as_bytes().iter().map(|&b| b as i32).collect()
     }

@@ -20,17 +20,25 @@ use crate::util::rng::Rng;
 
 use super::WordBank;
 
+/// The six longbench-sim task categories (see the module table).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TaskGroup {
+    /// Recall one planted `key: value` fact.
     SingleDocQa,
+    /// Recall a fact from the *second* of several documents.
     MultiDocQa,
+    /// Produce the document's dominant (topic) words.
     Summarization,
+    /// Continue an in-context `x -> x!` mapping pattern.
     FewShot,
+    /// Copy a marked passkey from earlier in the prompt.
     Synthetic,
+    /// Close the bracket sequence of a nested "program".
     Code,
 }
 
 impl TaskGroup {
+    /// Every group, in table order.
     pub fn all() -> [TaskGroup; 6] {
         [
             TaskGroup::SingleDocQa,
@@ -42,6 +50,7 @@ impl TaskGroup {
         ]
     }
 
+    /// Stable snake_case name (metrics keys, table columns).
     pub fn name(&self) -> &'static str {
         match self {
             TaskGroup::SingleDocQa => "single_doc_qa",
@@ -54,10 +63,14 @@ impl TaskGroup {
     }
 }
 
+/// One generated task with its programmatically-known answer.
 #[derive(Debug, Clone)]
 pub struct Task {
+    /// Which category the task belongs to.
     pub group: TaskGroup,
+    /// Full prompt text.
     pub prompt: String,
+    /// Gold continuation the model is scored against.
     pub answer: String,
 }
 
@@ -69,12 +82,14 @@ pub struct TaskGen {
 }
 
 impl TaskGen {
+    /// Deterministic generator for a seed.
     pub fn new(seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let bank = WordBank::new(&mut rng, 512);
         TaskGen { rng, bank }
     }
 
+    /// Generate one task of `group` with a ~`target_chars` prompt.
     pub fn generate(&mut self, group: TaskGroup, target_chars: usize) -> Task {
         match group {
             TaskGroup::SingleDocQa => self.single_doc_qa(target_chars),

@@ -11,26 +11,32 @@ use crate::util::rng::Rng;
 
 use super::WordBank;
 
+/// One multiple-choice item.
 #[derive(Debug, Clone)]
 pub struct McItem {
+    /// Context + question, ending right before the answer.
     pub prompt: String,
     /// Four option continuations (appended after the prompt).
     pub options: [String; 4],
+    /// Index of the correct option.
     pub correct: usize,
 }
 
+/// Deterministic multiple-choice item generator.
 pub struct McGen {
     rng: Rng,
     bank: WordBank,
 }
 
 impl McGen {
+    /// Generator for a seed (same seed → same item stream).
     pub fn new(seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let bank = WordBank::new(&mut rng, 512);
         McGen { rng, bank }
     }
 
+    /// Generate one item with ~`context_chars` of planted-fact context.
     pub fn generate(&mut self, context_chars: usize) -> McItem {
         let key = self.bank.uniform_word(&mut self.rng).to_string();
         let val = self.bank.uniform_word(&mut self.rng).to_string();

@@ -18,14 +18,20 @@ use crate::util::rng::Rng;
 /// (matching the mean ± std the paper reports in Table 1).
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
+    /// Workload family name (Table 1 row).
     pub name: &'static str,
+    /// Mean prompt length, tokens.
     pub prompt_mean: f64,
+    /// Prompt length standard deviation.
     pub prompt_std: f64,
+    /// Mean output length, tokens.
     pub output_mean: f64,
+    /// Output length standard deviation.
     pub output_std: f64,
 }
 
 impl WorkloadSpec {
+    /// Code-assistant workload (paper Table 1 row 1).
     pub const PROGRAMMING: WorkloadSpec = WorkloadSpec {
         name: "programming",
         prompt_mean: 3871.0,
@@ -33,6 +39,7 @@ impl WorkloadSpec {
         output_mean: 190.0,
         output_std: 343.0,
     };
+    /// Tool-use / agent workload (paper Table 1 row 2).
     pub const TOOL_USE: WorkloadSpec = WorkloadSpec {
         name: "tool_use",
         prompt_mean: 1835.0,
@@ -40,6 +47,7 @@ impl WorkloadSpec {
         output_mean: 43.0,
         output_std: 16.0,
     };
+    /// Embodied-agent workload (paper Table 1 row 3).
     pub const EMBODIED_AGENT: WorkloadSpec = WorkloadSpec {
         name: "embodied_agent",
         prompt_mean: 2285.0,
@@ -48,14 +56,17 @@ impl WorkloadSpec {
         output_std: 13.0,
     };
 
+    /// The three paper workload families.
     pub fn all() -> [WorkloadSpec; 3] {
         [Self::PROGRAMMING, Self::TOOL_USE, Self::EMBODIED_AGENT]
     }
 
+    /// Sample a prompt length (truncated normal, min 64).
     pub fn sample_prompt_len(&self, rng: &mut Rng) -> usize {
         rng.normal_trunc(self.prompt_mean, self.prompt_std, 64.0) as usize
     }
 
+    /// Sample an output length (truncated normal, min 1).
     pub fn sample_output_len(&self, rng: &mut Rng) -> usize {
         rng.normal_trunc(self.output_mean, self.output_std, 1.0) as usize
     }
@@ -69,9 +80,13 @@ impl WorkloadSpec {
 /// One request in a replayable trace.
 #[derive(Debug, Clone)]
 pub struct TraceRequest {
+    /// Arrival time from trace start, seconds.
     pub arrival_s: f64,
+    /// Prompt length, tokens.
     pub prompt_tokens: usize,
+    /// Output budget, tokens.
     pub output_tokens: usize,
+    /// Originating workload family name.
     pub workload: &'static str,
 }
 
@@ -127,6 +142,7 @@ pub struct WordBank {
 }
 
 impl WordBank {
+    /// Generate a bank of `n_words` random lowercase words.
     pub fn new(rng: &mut Rng, n_words: usize) -> Self {
         let letters = b"abcdefghijklmnopqrstuvwxyz";
         let words = (0..n_words)
@@ -140,14 +156,17 @@ impl WordBank {
         WordBank { words }
     }
 
+    /// A word drawn Zipf-skewed (natural-ish frequency distribution).
     pub fn zipf_word(&self, rng: &mut Rng) -> &str {
         &self.words[rng.zipf(self.words.len().min(256), 1.2)]
     }
 
+    /// A word drawn uniformly (good for planted keys/values).
     pub fn uniform_word(&self, rng: &mut Rng) -> &str {
         &self.words[rng.range(0, self.words.len())]
     }
 
+    /// A random sentence of 4-12 Zipf words.
     pub fn sentence(&self, rng: &mut Rng) -> String {
         let n = rng.range(4, 13);
         let mut s = (0..n)

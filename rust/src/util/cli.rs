@@ -4,19 +4,24 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command-line arguments.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     flags: BTreeMap<String, String>,
+    /// Non-flag arguments in order (subcommand first).
     pub positional: Vec<String>,
 }
 
+/// Sentinel value stored for bare `--flag` switches.
 pub const FLAG_SET: &str = "__set__";
 
 impl Args {
+    /// Parse the process arguments (skipping argv[0]).
     pub fn parse_env() -> Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Parse an explicit argument iterator.
     pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
         let mut args = Args::default();
         let mut it = iter.into_iter().peekable();
@@ -41,10 +46,12 @@ impl Args {
         args
     }
 
+    /// Whether `--key` was passed (with or without a value).
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 
+    /// String flag with default.
     pub fn str(&self, key: &str, default: &str) -> String {
         self.flags
             .get(key)
@@ -52,10 +59,12 @@ impl Args {
             .unwrap_or_else(|| default.to_string())
     }
 
+    /// String flag, None when absent.
     pub fn opt_str(&self, key: &str) -> Option<String> {
         self.flags.get(key).cloned()
     }
 
+    /// usize flag with default (default also on parse failure).
     pub fn usize(&self, key: &str, default: usize) -> usize {
         self.flags
             .get(key)
@@ -63,6 +72,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// f64 flag with default (default also on parse failure).
     pub fn f64(&self, key: &str, default: f64) -> f64 {
         self.flags
             .get(key)
@@ -82,6 +92,7 @@ impl Args {
         }
     }
 
+    /// Comma-separated list of usize ("256,512,1024").
     pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
         match self.flags.get(key) {
             None => default.to_vec(),

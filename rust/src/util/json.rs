@@ -10,18 +10,26 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any number (f64; integers exact below 2^53).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ----- accessors -----------------------------------------------------
+    /// Object member lookup (None for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -35,6 +43,7 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing json key: {key}"))
     }
 
+    /// Number as f64.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -42,10 +51,12 @@ impl Json {
         }
     }
 
+    /// Number truncated to i64.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|n| n as i64)
     }
 
+    /// Non-negative integral number as usize.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
             if n >= 0.0 && n.fract() == 0.0 {
@@ -56,6 +67,7 @@ impl Json {
         })
     }
 
+    /// String contents.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -63,6 +75,7 @@ impl Json {
         }
     }
 
+    /// Boolean value.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -70,6 +83,7 @@ impl Json {
         }
     }
 
+    /// Array elements.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -77,6 +91,7 @@ impl Json {
         }
     }
 
+    /// Object members.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -96,6 +111,7 @@ impl Json {
             .collect()
     }
 
+    /// Convenience: array of f64 (schedules etc).
     pub fn f64_vec(&self) -> anyhow::Result<Vec<f64>> {
         self.as_arr()
             .ok_or_else(|| anyhow::anyhow!("expected array"))?
@@ -105,15 +121,19 @@ impl Json {
     }
 
     // ----- construction helpers ------------------------------------------
+    /// Build an object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a string array.
     pub fn from_str_slice(items: &[&str]) -> Json {
         Json::Arr(items.iter().map(|s| Json::Str(s.to_string())).collect())
     }
 
     // ----- serialization --------------------------------------------------
+    /// Serialize to compact JSON text.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);
@@ -180,6 +200,7 @@ fn write_escaped(s: &str, out: &mut String) {
 // Parser
 // ---------------------------------------------------------------------------
 
+/// Parse a complete JSON document (rejects trailing garbage).
 pub fn parse(input: &str) -> anyhow::Result<Json> {
     let mut p = Parser {
         bytes: input.as_bytes(),

@@ -2,18 +2,21 @@
 //! crate set has no `rand`). SplitMix64 core — statistically solid for
 //! workload generation and property tests, and reproducible across runs.
 
+/// SplitMix64 deterministic PRNG.
 #[derive(Debug, Clone)]
 pub struct Rng {
     state: u64,
 }
 
 impl Rng {
+    /// Seeded generator (same seed → same stream).
     pub fn new(seed: u64) -> Self {
         Rng {
             state: seed.wrapping_add(0x9E3779B97F4A7C15),
         }
     }
 
+    /// Next raw 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -27,6 +30,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
     }
 
+    /// Uniform f32 in [0, 1).
     pub fn f32(&mut self) -> f32 {
         self.f64() as f32
     }
@@ -37,11 +41,13 @@ impl Rng {
         lo + (self.next_u64() % (hi - lo) as u64) as usize
     }
 
+    /// Uniform integer in [lo, hi) — panics if lo >= hi.
     pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
         assert!(lo < hi);
         lo + (self.next_u64() % (hi - lo) as u64) as i64
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }
@@ -91,6 +97,7 @@ impl Rng {
         idx
     }
 
+    /// In-place Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, v: &mut [T]) {
         for i in (1..v.len()).rev() {
             let j = self.range(0, i + 1);

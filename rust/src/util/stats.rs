@@ -9,22 +9,27 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add one sample.
     pub fn add(&mut self, v: f64) {
         self.samples.push(v);
     }
 
+    /// Sample count.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// Whether no samples were recorded.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
 
+    /// Arithmetic mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -32,6 +37,7 @@ impl Summary {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Sample standard deviation (0 below two samples).
     pub fn std(&self) -> f64 {
         if self.samples.len() < 2 {
             return 0.0;
@@ -63,10 +69,12 @@ impl Summary {
         }
     }
 
+    /// Smallest sample (+inf when empty).
     pub fn min(&self) -> f64 {
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample (-inf when empty).
     pub fn max(&self) -> f64 {
         self.samples
             .iter()

@@ -8,6 +8,8 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::manifest::{Manifest, WeightEntry};
 
+/// All model weights resident as one flat host f32 buffer plus the
+/// name → (offset, shape) table from the manifest.
 #[derive(Debug)]
 pub struct WeightStore {
     data: Vec<f32>,
@@ -15,10 +17,12 @@ pub struct WeightStore {
 }
 
 impl WeightStore {
+    /// Load the blob named by a manifest.
     pub fn load(manifest: &Manifest) -> Result<WeightStore> {
         Self::load_from(&manifest.weights_file, manifest.weights.clone())
     }
 
+    /// Load a blob with an explicit weight table (validated on load).
     pub fn load_from(
         path: &Path,
         table: BTreeMap<String, WeightEntry>,
@@ -47,6 +51,7 @@ impl WeightStore {
         Ok(WeightStore { data, table })
     }
 
+    /// Borrow one tensor's data by name.
     pub fn get(&self, name: &str) -> Result<&[f32]> {
         let e = self
             .table
@@ -56,6 +61,7 @@ impl WeightStore {
         Ok(&self.data[start..start + e.numel()])
     }
 
+    /// One tensor's shape by name.
     pub fn shape(&self, name: &str) -> Result<&[usize]> {
         Ok(&self
             .table
@@ -64,10 +70,12 @@ impl WeightStore {
             .shape)
     }
 
+    /// Iterate all weight names (sorted).
     pub fn names(&self) -> impl Iterator<Item = &String> {
         self.table.keys()
     }
 
+    /// Total parameter count across the table.
     pub fn total_params(&self) -> usize {
         self.table.values().map(|e| e.numel()).sum()
     }

@@ -1,0 +1,126 @@
+//! Inert stand-in for the vendored `xla` crate (PJRT bindings).
+//!
+//! The build environment for CI and pure host-side development does not
+//! always ship the XLA extension. When the `pjrt` cargo feature is off,
+//! [`crate::runtime`] compiles against this module instead of the real
+//! bindings: every type checks, but constructing a client fails with a
+//! clear error, so anything that actually needs to execute artifacts
+//! (engine tests, benches) skips — the same behavior those tests already
+//! have when artifacts are absent. All pure host-side logic (router,
+//! executor pool, prefix cache, cost model, schedule, eval plumbing)
+//! remains fully buildable and testable.
+//!
+//! The surface mirrors exactly the subset of the `xla` crate the runtime
+//! dispatcher uses; see `runtime/mod.rs` for the call sites.
+
+use std::path::Path;
+
+/// Error returned by every stub entry point.
+#[derive(Debug)]
+pub struct Error;
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "fastforward was compiled without the `pjrt` feature; \
+             rebuild with `--features pjrt` to execute artifacts"
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias matching the real crate's fallible API.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Parsed HLO module (stub: never constructed).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO-text artifact. Always fails in the stub.
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        Err(Error)
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a proto (stub: trivially constructible, but unreachable in
+    /// practice because [`HloModuleProto::from_text_file`] always fails).
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer handle (stub: never constructed).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Download the buffer to a host literal. Unreachable in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error)
+    }
+}
+
+/// Host-side literal (stub: never constructed).
+#[derive(Debug)]
+pub struct Literal;
+
+impl Literal {
+    /// Split a tuple literal into its elements. Unreachable in the stub.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error)
+    }
+
+    /// Copy out as a typed host vector. Unreachable in the stub.
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        Err(Error)
+    }
+}
+
+/// Compiled executable handle (stub: never constructed).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with device buffers. Unreachable in the stub.
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error)
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] is the stub's single failure
+/// point: it returns [`Error`], so no other stub method ever runs.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create the CPU client. Always fails in the stub.
+    pub fn cpu() -> Result<Self> {
+        Err(Error)
+    }
+
+    /// Compile a computation. Unreachable in the stub.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error)
+    }
+
+    /// Upload a host buffer to the device. Unreachable in the stub.
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error)
+    }
+}

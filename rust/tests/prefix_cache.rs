@@ -1,0 +1,191 @@
+//! Prefix-cache correctness: adoption must be numerically invisible.
+//!
+//! * A session that adopts cached KV blocks produces **bit-identical**
+//!   last-position logits to an uncached prefill of the same prompt
+//!   (same executables, same inputs — XLA-CPU is deterministic).
+//! * Adoption actually skips compute: the engine's block-execution
+//!   counter (`PrefillTiming::blocks`) stays at zero for a fully-cached
+//!   prefix while `adopted_blocks` covers it.
+//! * The full pooled stack reuses a prefix across replicas and reports
+//!   it in `Response::reused_blocks`.
+//!
+//! Skips without artifacts (like every engine-backed test).
+
+use std::rc::Rc;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use fastforward::batcher::BatcherConfig;
+use fastforward::engine::{Engine, PrefillSession, SparsityConfig};
+use fastforward::kvcache::{PagedAllocator, PrefixCache};
+use fastforward::manifest::Manifest;
+use fastforward::metrics::Metrics;
+use fastforward::pool::ExecutorPool;
+use fastforward::router::{LoadEstimator, Response, Router};
+use fastforward::runtime::Runtime;
+use fastforward::weights::WeightStore;
+
+fn engine() -> Option<Engine> {
+    let dir = fastforward::test_artifacts_dir()?;
+    let m = Rc::new(Manifest::load(&dir).unwrap());
+    let w = Rc::new(WeightStore::load(&m).unwrap());
+    let rt = Rc::new(Runtime::new(m, w).unwrap());
+    Some(Engine::new(rt))
+}
+
+fn prompt_tokens(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = fastforward::util::rng::Rng::new(seed);
+    let bank = fastforward::trace::WordBank::new(&mut rng, 64);
+    let mut t = fastforward::tokenizer::Tokenizer::new(384)
+        .encode(&bank.filler(&mut rng, n + 64));
+    t.truncate(n);
+    t
+}
+
+fn assert_adoption_bit_identical(engine: &Engine, cfg: &SparsityConfig) {
+    let block = engine.block();
+    let prompt = prompt_tokens(3 * block + block / 2, 11);
+    let cold = engine.prefill(&prompt, cfg).unwrap();
+    assert_eq!(cold.timing.blocks, 3);
+    assert_eq!(cold.timing.adopted_blocks, 0);
+
+    let mut alloc = PagedAllocator::new(1024, block);
+    let mut pc = PrefixCache::new(block, 256 << 20);
+    let seed = cfg.prefill_fingerprint();
+    let inserted =
+        pc.insert(seed, &prompt, usize::MAX, &cold.cache, &mut alloc);
+    assert_eq!(inserted, 3);
+
+    let mut warm =
+        PrefillSession::new(engine.clone(), prompt.clone(), cfg.clone())
+            .unwrap();
+    let hit = pc.acquire(seed, &prompt).expect("prefix hit");
+    assert_eq!(hit.tokens, 3 * block);
+    warm.adopt_prefix(hit.tokens, |cache| hit.copy_into(cache))
+        .unwrap();
+    pc.release(&hit);
+    while !warm.done() {
+        warm.step().unwrap();
+    }
+    let warm = warm.finish().unwrap();
+
+    // engine block-execution counter: nothing re-prefilled
+    assert_eq!(warm.timing.blocks, 0, "cached blocks must not re-execute");
+    assert_eq!(warm.timing.adopted_blocks, 3);
+    assert_eq!(warm.timing.tail_tokens, cold.timing.tail_tokens);
+
+    // bit-identical logits and hidden state
+    assert_eq!(
+        warm.last_logits, cold.last_logits,
+        "adopted-prefix logits must be bit-identical to uncached prefill"
+    );
+    assert_eq!(warm.last_hidden, cold.last_hidden);
+    // and the KV the decode phase will read matches exactly
+    for l in 0..cold.cache.n_layers {
+        let n = cold.cache.len * cold.cache.row_elems();
+        assert_eq!(warm.cache.k[l][..n], cold.cache.k[l][..n]);
+        assert_eq!(warm.cache.v[l][..n], cold.cache.v[l][..n]);
+    }
+}
+
+#[test]
+fn adoption_is_bit_identical_dense() {
+    let Some(engine) = engine() else { return };
+    assert_adoption_bit_identical(&engine, &SparsityConfig::dense());
+}
+
+#[test]
+fn adoption_is_bit_identical_sparse() {
+    let Some(engine) = engine() else { return };
+    assert_adoption_bit_identical(
+        &engine,
+        &SparsityConfig::fastforward(0.5),
+    );
+}
+
+#[test]
+fn configs_never_share_prefixes() {
+    let Some(engine) = engine() else { return };
+    let block = engine.block();
+    let prompt = prompt_tokens(2 * block + 7, 13);
+    let dense = SparsityConfig::dense();
+    let sparse = SparsityConfig::fastforward(0.5);
+    let cold = engine.prefill(&prompt, &dense).unwrap();
+
+    let mut alloc = PagedAllocator::new(256, block);
+    let mut pc = PrefixCache::new(block, 64 << 20);
+    pc.insert(
+        dense.prefill_fingerprint(),
+        &prompt,
+        usize::MAX,
+        &cold.cache,
+        &mut alloc,
+    );
+    assert!(
+        pc.acquire(sparse.prefill_fingerprint(), &prompt).is_none(),
+        "sparse prefill must not adopt dense KV"
+    );
+    assert!(pc.acquire(dense.prefill_fingerprint(), &prompt).is_some());
+}
+
+/// Full stack: two replicas, shared prefix cache. The second request
+/// (same prompt) adopts the prefix the first one computed — regardless
+/// of which replica each lands on — and produces the same text.
+#[test]
+fn pooled_stack_reuses_prefixes_across_replicas() {
+    let Some(dir) = fastforward::test_artifacts_dir() else { return };
+    let block = Manifest::load(&dir).unwrap().model.block;
+    let metrics = Arc::new(Metrics::new());
+    let router = Arc::new(Router::new_pooled(
+        32,
+        4096,
+        1024,
+        block,
+        metrics.clone(),
+        2,
+        LoadEstimator::new(block),
+        64 << 20,
+    ));
+    let pool = ExecutorPool::spawn_from_artifacts(
+        router.clone(),
+        BatcherConfig::default(),
+        dir,
+    );
+
+    let prompt = prompt_tokens(3 * block + 40, 21);
+    let run = |label: &str| -> Response {
+        let (tx, rx) = channel();
+        router
+            .submit(prompt.clone(), 6, SparsityConfig::fastforward(0.5), tx)
+            .unwrap();
+        let resp = rx
+            .recv_timeout(std::time::Duration::from_secs(300))
+            .expect(label);
+        assert!(resp.error.is_none(), "{label}: {:?}", resp.error);
+        resp
+    };
+
+    let first = run("first request");
+    assert_eq!(first.reused_blocks, 0, "cold request adopts nothing");
+    let second = run("second request");
+    assert_eq!(
+        second.reused_blocks, 3,
+        "identical prompt must adopt all three cached blocks"
+    );
+    assert_eq!(
+        second.text, first.text,
+        "prefix adoption must not change the generation"
+    );
+
+    let (hits, _misses, reused) = metrics.prefix_counters();
+    assert_eq!(hits, 1);
+    assert_eq!(reused, 3);
+    // executed blocks: 3 cold + 0 warm
+    assert_eq!(metrics.blocks_executed(), 3);
+
+    router.close();
+    pool.join().unwrap();
+    assert_eq!(router.kv_pool.lock().unwrap().used_pages(),
+               router.prefix_cache.lock().unwrap().entry_count(),
+               "only prefix-cache residency may remain after drain");
+}

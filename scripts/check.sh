@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Repo check gate: build, tests, docs (missing-docs denied), formatting.
+# Usage: scripts/check.sh [extra cargo args, e.g. --features pjrt]
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+extra=("$@")
+
+echo "==> cargo build --release"
+cargo build --release "${extra[@]}"
+
+echo "==> cargo test -q"
+cargo test -q "${extra[@]}"
+
+echo "==> cargo doc --no-deps (warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet "${extra[@]}"
+
+echo "==> cargo fmt --check"
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "    (rustfmt not installed — skipped)"
+fi
+
+echo "==> all checks passed"
