@@ -17,7 +17,7 @@ use fastforward::engine::{Engine, SparsityConfig};
 use fastforward::eval::{self, EvalSpec};
 use fastforward::manifest::Manifest;
 use fastforward::metrics::Metrics;
-use fastforward::router::{Response, Router};
+use fastforward::router::{Response, Router, TokenEvent};
 use fastforward::runtime::Runtime;
 use fastforward::tokenizer::Tokenizer;
 use fastforward::trace::longbench::{TaskGen, TaskGroup};
@@ -56,6 +56,7 @@ fn main() -> Result<()> {
             BatcherConfig {
                 max_active: 8,
                 prefill_block_budget: 4,
+                ..Default::default()
             },
         )
         .run()
@@ -81,7 +82,7 @@ fn main() -> Result<()> {
         let wait = -(1.0 - rng.f64()).ln() / rate;
         std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(1.0)));
         let task = taskgen.generate(groups[i % groups.len()], prompt_chars);
-        let (tx, rx) = channel::<Response>();
+        let (tx, rx) = channel::<TokenEvent>();
         match router.submit(tok.encode(&task.prompt), 16, cfg.clone(), tx) {
             Ok(id) => pending.push((id, rx)),
             Err(e) => println!("  request {i} rejected: {e:?}"),
@@ -91,7 +92,8 @@ fn main() -> Result<()> {
     let mut tpot = Summary::new();
     let mut total_tokens = 0usize;
     for (id, rx) in pending {
-        let resp = rx.recv()?;
+        let resp = Response::collect(&rx)
+            .ok_or_else(|| anyhow::anyhow!("executor dropped request"))?;
         if let Some(e) = resp.error {
             println!("  request {id} failed: {e}");
             continue;

@@ -1,0 +1,127 @@
+//! Streaming client tour: boot the serving stack in-process, submit an
+//! interactive streamed request and a batch-class request concurrently,
+//! and print tokens as they arrive — the programmatic equivalent of:
+//!
+//!     curl -N localhost:8080/generate -d '{
+//!       "prompt": "the quick brown fox", "max_tokens": 24,
+//!       "stream": true, "class": "interactive"}'
+//!
+//!     make artifacts && cargo run --release --example serve_streaming
+//!
+//! Requires artifacts and the `pjrt` feature (prints a hint otherwise).
+
+use std::io::Write as _;
+use std::rc::Rc;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use anyhow::Result;
+use fastforward::batcher::{Batcher, BatcherConfig};
+use fastforward::engine::{Engine, SparsityConfig};
+use fastforward::manifest::Manifest;
+use fastforward::metrics::Metrics;
+use fastforward::router::{Router, SloClass, SubmitOpts, TokenEvent};
+use fastforward::runtime::Runtime;
+use fastforward::tokenizer::Tokenizer;
+use fastforward::weights::WeightStore;
+
+fn main() -> Result<()> {
+    let Some(dir) = fastforward::test_artifacts_dir() else {
+        eprintln!("run `make artifacts` and build with --features pjrt");
+        return Ok(());
+    };
+
+    // one-replica serving stack, SLO scheduling on (the default)
+    let metrics = Arc::new(Metrics::new());
+    let probe = Manifest::load(&dir)?;
+    let router = Arc::new(Router::new(
+        64,
+        probe.model.max_ctx,
+        16 * probe.model.max_ctx / probe.model.block,
+        probe.model.block,
+        metrics.clone(),
+    ));
+    let r2 = router.clone();
+    let exec = std::thread::spawn(move || -> Result<()> {
+        let m = Rc::new(Manifest::load(&dir)?);
+        let w = Rc::new(WeightStore::load(&m)?);
+        let rt = Rc::new(Runtime::new(m, w)?);
+        Batcher::new(Engine::new(rt), r2, BatcherConfig::default()).run()
+    });
+    let tok = Tokenizer::new(probe.model.vocab);
+
+    // a batch-class request runs alongside; the scheduler preempts its
+    // prefill whenever the interactive stream needs the engine
+    let mut rng = fastforward::util::rng::Rng::new(3);
+    let bank = fastforward::trace::WordBank::new(&mut rng, 128);
+    let (batch_tx, batch_rx) = channel();
+    router
+        .submit_with(
+            tok.encode(&bank.filler(&mut rng, 1200)),
+            8,
+            SparsityConfig::fastforward(0.5),
+            SubmitOpts {
+                class: SloClass::Batch,
+                ..Default::default()
+            },
+            batch_tx,
+        )
+        .expect("batch admission");
+
+    // the interactive stream: print tokens the moment they decode
+    let prompt = format!(
+        "{} the quick brown fox",
+        bank.filler(&mut rng, 200)
+    );
+    let (tx, rx) = channel();
+    router
+        .submit(
+            tok.encode(&prompt),
+            24,
+            SparsityConfig::fastforward(0.5),
+            tx,
+        )
+        .expect("interactive admission");
+    print!("streaming: ");
+    std::io::stdout().flush()?;
+    loop {
+        match rx.recv()? {
+            TokenEvent::First { ttft_ms, reused_blocks } => {
+                print!("[first token after {ttft_ms:.1} ms, \
+                        {reused_blocks} cached blocks] ");
+                std::io::stdout().flush()?;
+            }
+            TokenEvent::Token { text, .. } => {
+                print!("{text}");
+                std::io::stdout().flush()?;
+            }
+            TokenEvent::Done(resp) => {
+                println!();
+                match resp.error {
+                    Some(e) => println!("failed: {e}"),
+                    None => println!(
+                        "done: {} tokens, ttft {:.1} ms, tpot {:.2} ms",
+                        resp.tokens, resp.ttft_ms, resp.tpot_ms
+                    ),
+                }
+                break;
+            }
+        }
+    }
+
+    // the batch request completes afterwards, having yielded the engine
+    if let Some(resp) =
+        fastforward::router::Response::collect(&batch_rx)
+    {
+        println!(
+            "batch request finished too: {} tokens, e2e {:.1} ms \
+             (preemptions observed: {})",
+            resp.tokens,
+            resp.e2e_ms,
+            metrics.preemptions()
+        );
+    }
+    router.close();
+    exec.join().unwrap()?;
+    Ok(())
+}

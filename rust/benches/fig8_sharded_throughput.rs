@@ -24,7 +24,7 @@ use fastforward::engine::SparsityConfig;
 use fastforward::manifest::Manifest;
 use fastforward::metrics::Metrics;
 use fastforward::pool::ExecutorPool;
-use fastforward::router::{LoadEstimator, Router};
+use fastforward::router::{LoadEstimator, Response, Router};
 use fastforward::util::stats::Summary;
 
 struct Outcome {
@@ -64,6 +64,7 @@ fn run(dir: &PathBuf, block: usize, sc: &Scenario) -> Outcome {
         BatcherConfig {
             max_active: 4,
             prefill_block_budget: 4,
+            ..Default::default()
         },
         dir.clone(),
     );
@@ -98,7 +99,8 @@ fn run(dir: &PathBuf, block: usize, sc: &Scenario) -> Outcome {
                             tx,
                         )
                         .expect("admission");
-                    let resp = rx.recv().expect("response");
+                    let resp =
+                        Response::collect(&rx).expect("response");
                     assert!(resp.error.is_none(), "{:?}", resp.error);
                     ttfts.push(resp.ttft_ms);
                 }

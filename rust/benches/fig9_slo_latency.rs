@@ -1,0 +1,214 @@
+//! Figure 9 (repo extension): interactive latency under batch load —
+//! the SLO-aware scheduler's reason to exist.
+//!
+//! A closed-loop batch workload (long prefills, batch class) saturates
+//! the executor while an interactive client submits short requests and
+//! measures TTFT and inter-token latency from its own event stream.
+//! The sweep crosses batch load (0 / N clients) with SLO scheduling on
+//! vs off (`BatcherConfig::slo`), at 0.5 sparsity throughout.
+//!
+//! With SLO scheduling off, a long batch prefill sits between an
+//! interactive arrival and its first token (TTFT inflation ~ one full
+//! prefill) and between consecutive decode rounds (ITL inflation ~ the
+//! whole block budget). With it on, batch prefill is preempted for
+//! interactive prefill and trickles at `decode_first_budget` during
+//! interactive decode — p95 TTFT/ITL should stay near the unloaded
+//! baseline, paid for with batch throughput.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use fastforward::batcher::BatcherConfig;
+use fastforward::engine::SparsityConfig;
+use fastforward::manifest::Manifest;
+use fastforward::metrics::Metrics;
+use fastforward::pool::ExecutorPool;
+use fastforward::router::{LoadEstimator, Response, Router, SloClass,
+                          SubmitOpts, TokenEvent};
+use fastforward::util::stats::Summary;
+
+const INTERACTIVE_REQUESTS: usize = 6;
+const INTERACTIVE_DECODE: usize = 8;
+const BATCH_PREFILL_BLOCKS: usize = 12;
+
+struct Outcome {
+    ttft: Summary,
+    itl: Summary,
+    batch_reqs: usize,
+    preemptions: u64,
+}
+
+fn run(dir: &std::path::PathBuf, block: usize, slo: bool,
+       batch_clients: usize) -> Outcome {
+    let metrics = Arc::new(Metrics::new());
+    let router = Arc::new(Router::new_pooled(
+        256,
+        4096,
+        4096,
+        block,
+        metrics.clone(),
+        1,
+        LoadEstimator::new(block),
+        0, // prefix reuse off: measure scheduling, not caching
+    ));
+    let pool = ExecutorPool::spawn_from_artifacts(
+        router.clone(),
+        BatcherConfig {
+            max_active: 4,
+            prefill_block_budget: 4,
+            decode_first_budget: 1,
+            slo,
+        },
+        dir.clone(),
+    );
+
+    // closed-loop batch load: each client keeps one long prefill in
+    // flight until told to stop
+    let stop = Arc::new(AtomicBool::new(false));
+    let batch_workers: Vec<_> = (0..batch_clients)
+        .map(|c| {
+            let router = router.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut done = 0usize;
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let prompt = common::prompt_tokens(
+                        BATCH_PREFILL_BLOCKS * block,
+                        1 + c as u64 * 7919 + i,
+                    );
+                    let (tx, rx) = channel();
+                    if router
+                        .submit_with(
+                            prompt,
+                            2,
+                            SparsityConfig::fastforward(0.5),
+                            SubmitOpts {
+                                class: SloClass::Batch,
+                                ..Default::default()
+                            },
+                            tx,
+                        )
+                        .is_err()
+                    {
+                        break;
+                    }
+                    match Response::collect(&rx) {
+                        Some(r) if r.error.is_none() => done += 1,
+                        _ => break,
+                    }
+                    i += 1;
+                }
+                done
+            })
+        })
+        .collect();
+
+    // interactive client: short prompts, latency measured off its own
+    // event stream (exactly what an SSE consumer experiences)
+    let mut ttft = Summary::new();
+    let mut itl = Summary::new();
+    for i in 0..INTERACTIVE_REQUESTS {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let prompt =
+            common::prompt_tokens(2 * block + 32, 5000 + i as u64);
+        let (tx, rx) = channel();
+        router
+            .submit(
+                prompt,
+                INTERACTIVE_DECODE,
+                SparsityConfig::fastforward(0.5),
+                tx,
+            )
+            .expect("interactive admission");
+        let mut last: Option<Instant> = None;
+        loop {
+            match rx.recv().expect("event stream") {
+                TokenEvent::First { ttft_ms, .. } => {
+                    ttft.add(ttft_ms);
+                    last = Some(Instant::now());
+                }
+                TokenEvent::Token { .. } => {
+                    let now = Instant::now();
+                    if let Some(prev) = last {
+                        itl.add((now - prev).as_secs_f64() * 1e3);
+                    }
+                    last = Some(now);
+                }
+                TokenEvent::Done(r) => {
+                    assert!(r.error.is_none(), "{:?}", r.error);
+                    break;
+                }
+            }
+        }
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let batch_reqs: usize = batch_workers
+        .into_iter()
+        .map(|w| w.join().unwrap())
+        .sum();
+    router.close();
+    pool.join().expect("pool drains cleanly");
+    Outcome {
+        ttft,
+        itl,
+        batch_reqs,
+        preemptions: metrics.preemptions(),
+    }
+}
+
+fn main() {
+    common::header(
+        "Figure 9",
+        "interactive p95 TTFT/ITL vs batch load, SLO scheduling on/off",
+    );
+    let Some(dir) = fastforward::test_artifacts_dir() else { return };
+    let block = Manifest::load(&dir).expect("manifest").model.block;
+
+    println!(
+        "\n{:>5} {:>7} {:>12} {:>12} {:>12} {:>10} {:>11}",
+        "slo", "batch", "ttft p50", "ttft p95", "itl p95",
+        "batch req", "preemptions"
+    );
+    for batch_clients in [0usize, 2] {
+        for slo in [false, true] {
+            let o = run(&dir, block, slo, batch_clients);
+            println!(
+                "{:>5} {:>7} {:>10.1}ms {:>10.1}ms {:>10.1}ms {:>10} \
+                 {:>11}",
+                if slo { "on" } else { "off" },
+                batch_clients,
+                o.ttft.percentile(50.0),
+                o.ttft.percentile(95.0),
+                o.itl.percentile(95.0),
+                o.batch_reqs,
+                o.preemptions
+            );
+            if slo && batch_clients > 0 {
+                assert!(
+                    o.preemptions >= 1,
+                    "SLO scheduling under batch load must preempt \
+                     (got {} preemptions)",
+                    o.preemptions
+                );
+            }
+            if !slo {
+                assert_eq!(
+                    o.preemptions, 0,
+                    "preemption must be off with --no-slo"
+                );
+            }
+        }
+    }
+    println!(
+        "\n(interactive TTFT/ITL are measured on the client's own event\n\
+         stream; with SLO scheduling on, batch prefill is preempted for\n\
+         interactive prefill and trickles during interactive decode —\n\
+         the batch req column is the throughput cost of that choice)"
+    );
+}

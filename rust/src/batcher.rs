@@ -1,49 +1,81 @@
 //! Dynamic batcher: the per-replica executor loop — continuous batching
-//! with chunked prefill and prefix-aware KV reuse.
+//! with chunked prefill, prefix-aware KV reuse, token streaming and
+//! SLO-aware preemptive scheduling.
 //!
 //! One executor thread owns one (non-Sync) engine and iterates:
 //!
-//! 1. admit new requests from its replica queue (up to `max_active`),
-//!    adopting already-computed KV pages for the longest cached prefix,
-//! 2. schedule up to `prefill_block_budget` prefill *blocks* across
+//! 1. admit new requests from its replica queue (interactive class
+//!    first, up to `max_active`), adopting already-computed KV pages
+//!    for the longest cached prefix,
+//! 2. sweep cancellations (client disconnects release their KV pages
+//!    here, mid-prefill or mid-decode),
+//! 3. plan the iteration (`plan_schedule`): pick the prefill block
+//!    budget and decide whether batch-class prefills are preempted,
+//! 4. schedule up to the planned budget of prefill *blocks* across
 //!    active requests (Sarathi-style chunked prefill — long prompts
-//!    don't monopolize the engine),
-//! 3. run one decode round for every request in the decode phase
+//!    don't monopolize the engine), interactive prefills first,
+//! 5. run one decode round for every request in the decode phase
 //!    (continuous batching semantics; execution is serialized on the
 //!    replica's PJRT stream but scheduling interleaves fairly),
-//! 4. retire finished requests, releasing their KV pages and reporting
+//! 6. retire finished requests, releasing their KV pages and reporting
 //!    their cost back to the replica's load accounting.
+//!
+//! **Streaming:** the executor emits [`TokenEvent`]s as they happen —
+//! `First` at prefill completion (TTFT, the paper's definition), one
+//! `Token` per decoded token (with incremental UTF-8 text from
+//! [`StreamDecoder`]), and a terminal `Done` carrying the full
+//! [`Response`]. Inter-token latency is recorded per SLO class.
+//!
+//! **Preemption:** while an interactive prefill is pending — or an
+//! interactive completion deadline is projected to miss, per the
+//! [`UnitClock`] wall-clock estimate over remaining scheduler steps —
+//! batch-class prefills are paused in place. Pausing costs nothing:
+//! [`PrefillSession`] is a block cursor, so a paused session simply
+//! receives no budget and resumes where it stopped. Under KV pressure
+//! a paused prefill can be *ejected* entirely: its computed blocks are
+//! salvaged into the shared [`crate::kvcache::PrefixCache`], its pages
+//! released, and the request requeued — on re-admission it adopts the
+//! salvaged blocks and resumes from its cursor instead of restarting.
 //!
 //! When a prefill completes, its leading full blocks are offered to the
 //! shared [`crate::kvcache::PrefixCache`], so a later request with the
 //! same prompt prefix — on *any* replica — prefills only the uncached
 //! suffix.
 //!
-//! TTFT is recorded when a request's first decode logits are produced —
-//! matching the paper's definition.
-//!
 //! [`crate::pool::ExecutorPool`] spawns one `Batcher` per replica; the
 //! single-threaded stack (`Batcher::new`) remains for tests and
-//! examples.
+//! examples. See docs/SCHEDULING.md for the scheduling rules and
+//! tuning guidance.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::cost::UnitClock;
 use crate::engine::{argmax, Engine, PrefillSession};
 use crate::kvcache::{PageId, SeqKvCache};
 use crate::metrics::Metrics;
-use crate::router::{Replica, Request, Response, Router};
-use crate::tokenizer::{Tokenizer, EOS};
+use crate::router::{Replica, Request, Response, Router, SloClass,
+                    TokenEvent};
+use crate::tokenizer::{StreamDecoder, Tokenizer, EOS};
 
-/// Executor tuning knobs (see docs/OPERATIONS.md for guidance).
+/// Executor tuning knobs (see docs/SCHEDULING.md for guidance).
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
     /// Max concurrently active (admitted) requests per replica.
     pub max_active: usize,
     /// Prefill blocks processed per scheduler iteration.
     pub prefill_block_budget: usize,
+    /// Prefill block budget while interactive requests are decoding
+    /// and none are prefilling (decode-first mode): batch prefill
+    /// trickles at this rate so streaming inter-token latency stays
+    /// flat. Clamped to `prefill_block_budget`.
+    pub decode_first_budget: usize,
+    /// Master switch for SLO-aware scheduling (priority prefill order,
+    /// decode-first budget capping, batch-prefill preemption). With it
+    /// off every request is scheduled round-robin as one class.
+    pub slo: bool,
 }
 
 impl Default for BatcherConfig {
@@ -51,6 +83,8 @@ impl Default for BatcherConfig {
         BatcherConfig {
             max_active: 8,
             prefill_block_budget: 4,
+            decode_first_budget: 1,
+            slo: true,
         }
     }
 }
@@ -84,6 +118,72 @@ struct Active {
     decode_ms_total: f64,
     reused_blocks: usize,
     ok: bool,
+    /// Batch-class prefill paused by the scheduler (receives no
+    /// prefill budget until interactive pressure clears).
+    preempted: bool,
+    /// Incremental UTF-8 assembly for streamed token text.
+    decoder: StreamDecoder,
+    /// When the last stream event was emitted (ITL measurement).
+    last_emit: Option<Instant>,
+}
+
+/// One active request as the scheduler sees it (inputs to
+/// `plan_schedule`).
+#[derive(Debug, Clone, Copy)]
+struct SchedReq {
+    class: SloClass,
+    /// Still in the prefill phase (false = decoding).
+    prefilling: bool,
+    /// Interactive request whose completion deadline is projected to
+    /// miss.
+    deadline_at_risk: bool,
+}
+
+/// One scheduler iteration's decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct SchedPlan {
+    /// Prefill blocks to spend this iteration.
+    prefill_budget: usize,
+    /// Whether batch-class prefills are paused this iteration.
+    preempt_batch: bool,
+}
+
+/// Pure scheduling decision for one iteration — kept free of engine
+/// state so the preemption rules are unit-testable on the host.
+///
+/// Rules (with `cfg.slo`):
+/// * an interactive prefill pending → full budget (spent on
+///   interactive prefills first) and batch prefills paused;
+/// * otherwise interactive decodes pending → budget capped to
+///   `decode_first_budget` so batch prefill can't stretch the decode
+///   round (inter-token latency protection);
+/// * an interactive completion deadline projected to miss → batch
+///   prefills paused regardless — for an at-risk *decode* this stops
+///   even the decode-first trickle;
+/// * no interactive work → full budget, nothing paused.
+fn plan_schedule(cfg: &BatcherConfig, reqs: &[SchedReq]) -> SchedPlan {
+    if !cfg.slo {
+        return SchedPlan {
+            prefill_budget: cfg.prefill_block_budget,
+            preempt_batch: false,
+        };
+    }
+    let interactive_prefill = reqs
+        .iter()
+        .any(|r| r.class.is_interactive() && r.prefilling);
+    let interactive_decode = reqs
+        .iter()
+        .any(|r| r.class.is_interactive() && !r.prefilling);
+    let at_risk = reqs.iter().any(|r| r.deadline_at_risk);
+    let prefill_budget = if !interactive_prefill && interactive_decode {
+        cfg.decode_first_budget.min(cfg.prefill_block_budget)
+    } else {
+        cfg.prefill_block_budget
+    };
+    SchedPlan {
+        prefill_budget,
+        preempt_batch: interactive_prefill || at_risk,
+    }
 }
 
 /// Runs one replica's scheduling loop until the router closes.
@@ -94,6 +194,9 @@ pub struct Batcher {
     metrics: Arc<Metrics>,
     cfg: BatcherConfig,
     tokenizer: Tokenizer,
+    /// Measured wall-clock per scheduler step (EWMA), for deadline
+    /// projection.
+    clock: UnitClock,
 }
 
 impl Batcher {
@@ -115,6 +218,7 @@ impl Batcher {
             router,
             cfg,
             tokenizer: Tokenizer::new(vocab),
+            clock: UnitClock::new(0.2),
         }
     }
 
@@ -122,27 +226,51 @@ impl Batcher {
     pub fn run(mut self) -> Result<()> {
         let mut active: Vec<Active> = Vec::new();
         loop {
-            // 1. admit
+            // 1. admit (replica pop order is interactive-first)
             let slots = self.cfg.max_active.saturating_sub(active.len());
             if slots > 0 {
                 let mut popped = self.replica.pop_up_to(slots);
-                while !popped.is_empty() {
-                    let req = popped.remove(0);
-                    match self.admit(req) {
-                        Ok(a) => active.push(a),
-                        Err((req, AdmitError::KvPressure)) => {
-                            // transient: retires will free pages. Put
-                            // back EVERYTHING we popped — front-first so
-                            // FIFO order is preserved — and stop
-                            // admitting this round.
-                            for r in popped.drain(..).rev() {
-                                self.replica.requeue(r);
+                'admit: while !popped.is_empty() {
+                    let mut req = popped.remove(0);
+                    if req.cancel.is_cancelled() {
+                        self.drop_cancelled(req);
+                        continue;
+                    }
+                    let mut ejected_once = false;
+                    loop {
+                        match self.admit(req) {
+                            Ok(a) => {
+                                active.push(a);
+                                break;
                             }
-                            self.replica.requeue(req);
-                            break;
-                        }
-                        Err((req, AdmitError::Fatal(e))) => {
-                            self.reject_failed(req, e)
+                            Err((r, AdmitError::KvPressure)) => {
+                                // Interactive work outranks a paused
+                                // batch prefill's residency: eject one
+                                // (salvaging its computed blocks into
+                                // the prefix cache) and retry once.
+                                if !ejected_once
+                                    && r.class.is_interactive()
+                                    && self.eject_preempted(&mut active)
+                                {
+                                    ejected_once = true;
+                                    req = r;
+                                    continue;
+                                }
+                                // transient: retires will free pages.
+                                // Put back EVERYTHING we popped —
+                                // front-first so FIFO order is
+                                // preserved — and stop admitting this
+                                // round.
+                                for p in popped.drain(..).rev() {
+                                    self.replica.requeue(p);
+                                }
+                                self.replica.requeue(r);
+                                break 'admit;
+                            }
+                            Err((r, AdmitError::Fatal(e))) => {
+                                self.reject_failed(r, e);
+                                break;
+                            }
                         }
                     }
                 }
@@ -150,6 +278,9 @@ impl Batcher {
             if active.is_empty() {
                 // park on the replica queue until work (or shutdown)
                 match self.replica.pop_blocking() {
+                    Some(req) if req.cancel.is_cancelled() => {
+                        self.drop_cancelled(req)
+                    }
                     Some(req) => match self.admit(req) {
                         Ok(a) => active.push(a),
                         Err((req, AdmitError::KvPressure)) => {
@@ -169,17 +300,65 @@ impl Batcher {
                 }
             }
 
-            // 2. chunked prefill round-robin
-            let mut budget = self.cfg.prefill_block_budget;
-            'outer: loop {
-                let mut progressed = false;
-                for a in active.iter_mut() {
-                    if budget == 0 {
-                        break 'outer;
+            // 2. cancellation sweep (client disconnects)
+            for a in active.iter_mut() {
+                if !matches!(a.phase, Phase::Finished)
+                    && a.req.cancel.is_cancelled()
+                {
+                    self.cancel_active(a);
+                }
+            }
+
+            // 3. plan the iteration and apply preemption transitions
+            let plan = {
+                let reqs: Vec<SchedReq> = active
+                    .iter()
+                    .filter(|a| !matches!(a.phase, Phase::Finished))
+                    .map(|a| SchedReq {
+                        class: a.req.class,
+                        prefilling: matches!(a.phase, Phase::Prefill(_)),
+                        deadline_at_risk: self.deadline_at_risk(a),
+                    })
+                    .collect();
+                plan_schedule(&self.cfg, &reqs)
+            };
+            for a in active.iter_mut() {
+                let batch_prefilling = !a.req.class.is_interactive()
+                    && matches!(a.phase, Phase::Prefill(_));
+                if batch_prefilling && plan.preempt_batch {
+                    if !a.preempted {
+                        a.preempted = true;
+                        self.metrics.record_preemption();
                     }
-                    if let Err(e) = self.step_prefill(a, &mut budget,
-                                                      &mut progressed) {
-                        self.fail(a, e);
+                } else {
+                    a.preempted = false;
+                }
+            }
+
+            // 4. chunked prefill round-robin: interactive pass first,
+            //    then un-preempted batch
+            let mut budget = plan.prefill_budget;
+            'prefill: loop {
+                let mut progressed = false;
+                for interactive_pass in [true, false] {
+                    for a in active.iter_mut() {
+                        if a.req.class.is_interactive() != interactive_pass
+                        {
+                            continue;
+                        }
+                        if !interactive_pass && a.preempted {
+                            continue;
+                        }
+                        if budget == 0 {
+                            break 'prefill;
+                        }
+                        if let Err(e) = self.step_prefill(
+                            a,
+                            &mut budget,
+                            &mut progressed,
+                        ) {
+                            self.fail(a, e);
+                        }
                     }
                 }
                 if !progressed {
@@ -187,14 +366,14 @@ impl Batcher {
                 }
             }
 
-            // 3. one decode round each
+            // 5. one decode round each
             for a in active.iter_mut() {
                 if let Err(e) = self.step_decode(a) {
                     self.fail(a, e);
                 }
             }
 
-            // 4. retire
+            // 6. retire
             for a in active.iter_mut() {
                 if matches!(a.phase, Phase::Finished) {
                     self.retire(a);
@@ -204,30 +383,164 @@ impl Batcher {
         }
     }
 
+    /// Whether `a` is an interactive request whose completion deadline
+    /// is projected to miss: elapsed time plus the [`UnitClock`]
+    /// projection over its remaining scheduler steps (prefill steps
+    /// left plus the decode budget, or just the decode steps left once
+    /// decoding) exceeds the deadline. The decode-phase case is what
+    /// the projection buys over plain priority: an at-risk decode
+    /// pauses even the batch-prefill trickle, which interactive
+    /// priority alone never does. Requests without a deadline are
+    /// never at risk, and neither is anything before the clock's first
+    /// measurement.
+    fn deadline_at_risk(&self, a: &Active) -> bool {
+        if !a.req.class.is_interactive() {
+            return false;
+        }
+        let Some(deadline_ms) = a.req.deadline_ms else {
+            return false;
+        };
+        let remaining_units = match &a.phase {
+            Phase::Prefill(session) => {
+                session.remaining_steps() + a.req.max_tokens
+            }
+            Phase::Decode { generated, .. } => {
+                a.req.max_tokens.saturating_sub(generated.len())
+            }
+            Phase::Finished => return false,
+        };
+        let Some(projected) =
+            self.clock.project_ms(remaining_units as f64)
+        else {
+            return false;
+        };
+        let elapsed_ms = a.req.submitted.elapsed().as_secs_f64() * 1e3;
+        elapsed_ms + projected > deadline_ms
+    }
+
+    /// A request cancelled while still queued: settle accounting and
+    /// answer the (likely gone) client without running anything.
+    fn drop_cancelled(&mut self, req: Request) {
+        self.metrics.record_cancelled();
+        self.replica.complete(req.prompt.len(), req.max_tokens);
+        self.metrics.record_replica_done(self.replica.id(), false);
+        let mut resp = Response::failed(req.id, "cancelled".to_string());
+        resp.e2e_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+        let _ = req.events.send(TokenEvent::Done(resp));
+    }
+
+    /// An active request whose cancel token flipped: stop it where it
+    /// stands. Pages are released by the retire step; executed-block
+    /// counters stay truthful for the part that ran.
+    fn cancel_active(&mut self, a: &mut Active) {
+        if let Phase::Prefill(session) = &a.phase {
+            self.metrics.record_prefill_timing(session.timing());
+        }
+        self.metrics.record_cancelled();
+        let mut resp = Response::failed(a.req.id, "cancelled".to_string());
+        resp.e2e_ms = a.admitted.elapsed().as_secs_f64() * 1e3;
+        resp.reused_blocks = a.reused_blocks;
+        let _ = a.req.events.send(TokenEvent::Done(resp));
+        a.ok = false;
+        a.phase = Phase::Finished;
+    }
+
+    /// Eject one batch-class prefill (a paused one if any, else any —
+    /// the arriving interactive request that triggered this may be the
+    /// only reason no session is flagged yet) to free its KV pages for
+    /// interactive admission. Whole computed blocks are salvaged into
+    /// the shared prefix cache first, so the re-admitted session
+    /// adopts them and resumes from its block cursor instead of
+    /// re-executing the prefix. A session whose work *cannot* be
+    /// salvaged (prefix cache disabled, or a non-prefix-cacheable
+    /// configuration) is only ejectable while it has computed nothing
+    /// — ejecting it later would discard real work and invite
+    /// restart-starvation under sustained interactive load. Returns
+    /// whether anything was ejected.
+    fn eject_preempted(&mut self, active: &mut Vec<Active>) -> bool {
+        let cache_enabled =
+            self.router.prefix_cache.lock().unwrap().enabled();
+        let ejectable = |a: &Active| -> bool {
+            let Phase::Prefill(session) = &a.phase else {
+                return false;
+            };
+            if a.req.class.is_interactive() {
+                return false;
+            }
+            session.resident_blocks() == 0
+                || (cache_enabled && a.req.cfg.prefix_cacheable())
+        };
+        let Some(i) = active
+            .iter()
+            .position(|a| a.preempted && ejectable(a))
+            .or_else(|| active.iter().position(&ejectable))
+        else {
+            return false;
+        };
+        let mut a = active.swap_remove(i);
+        let Phase::Prefill(session) =
+            std::mem::replace(&mut a.phase, Phase::Finished)
+        else {
+            unreachable!()
+        };
+        // counters first (blocks that ran, ran), then salvage
+        self.metrics.record_prefill_timing(session.timing());
+        self.offer_blocks(&a.req, &session.cache,
+                          session.resident_blocks());
+        {
+            let mut pool = self.router.kv_pool.lock().unwrap();
+            if let Err(e) = pool.release_all(&a.pages) {
+                eprintln!(
+                    "[batcher:{}] page release: {e}",
+                    self.replica.id()
+                );
+            }
+        }
+        a.pages.clear();
+        self.metrics.record_preemption_ejection();
+        self.replica.requeue(a.req);
+        true
+    }
+
     /// A request that failed before becoming active: answer it and
     /// settle its load accounting immediately.
     fn reject_failed(&mut self, req: Request, err: anyhow::Error) {
         eprintln!("[batcher:{}] admit failed: {err}", self.replica.id());
         self.replica.complete(req.prompt.len(), req.max_tokens);
         self.metrics.record_replica_done(self.replica.id(), false);
-        let _ = req
-            .respond
-            .send(Response::failed(req.id, err.to_string()));
+        let _ = req.events.send(TokenEvent::Done(Response::failed(
+            req.id,
+            err.to_string(),
+        )));
     }
 
-    fn admit(&mut self, req: Request)
+    fn admit(&mut self, mut req: Request)
              -> std::result::Result<Active, (Request, AdmitError)> {
         match self.try_admit(&req) {
-            Ok((session, pages, reused_blocks)) => Ok(Active {
-                req,
-                phase: Phase::Prefill(session),
-                pages,
-                admitted: Instant::now(),
-                ttft_ms: None,
-                decode_ms_total: 0.0,
-                reused_blocks,
-                ok: true,
-            }),
+            Ok((session, pages, reused_blocks)) => {
+                // sample queue delay once per request: an ejected and
+                // re-admitted prefill keeps its first-admission sample
+                if !req.delay_sampled {
+                    req.delay_sampled = true;
+                    self.metrics.record_queue_delay(
+                        req.class,
+                        req.submitted.elapsed().as_secs_f64() * 1e3,
+                    );
+                }
+                Ok(Active {
+                    req,
+                    phase: Phase::Prefill(session),
+                    pages,
+                    admitted: Instant::now(),
+                    ttft_ms: None,
+                    decode_ms_total: 0.0,
+                    reused_blocks,
+                    ok: true,
+                    preempted: false,
+                    decoder: StreamDecoder::new(),
+                    last_emit: None,
+                })
+            }
             Err(e) => Err((req, e)),
         }
     }
@@ -335,7 +648,9 @@ impl Batcher {
         if *budget == 0 {
             return Ok(());
         }
+        let t0 = Instant::now();
         session.step()?;
+        self.clock.observe(1.0, t0.elapsed().as_secs_f64() * 1e3);
         *budget -= 1;
         *progressed = true;
         if session.done() {
@@ -353,6 +668,11 @@ impl Batcher {
             let ttft = a.admitted.elapsed().as_secs_f64() * 1e3;
             a.ttft_ms = Some(ttft);
             self.metrics.record_ttft(ttft);
+            let _ = a.req.events.send(TokenEvent::First {
+                ttft_ms: ttft,
+                reused_blocks: a.reused_blocks,
+            });
+            a.last_emit = Some(Instant::now());
             self.offer_prefix(&a.req, &pre.cache);
             a.phase = Phase::Decode {
                 pos: a.req.prompt.len(),
@@ -369,20 +689,28 @@ impl Batcher {
     /// position-special and would be wrong for a longer prompt sharing
     /// the prefix. Never fails the request — caching is best-effort.
     fn offer_prefix(&self, req: &Request, cache: &SeqKvCache) {
-        if !req.cfg.prefix_cacheable() {
-            return;
-        }
         let block = self.engine.block();
         let full_blocks = req.prompt.len() / block;
         let prompt_is_block_aligned = req.prompt.len() % block == 0;
-        let dense_last_applies =
-            !req.cfg.is_dense() && req.cfg.dense_last && prompt_is_block_aligned;
+        let dense_last_applies = !req.cfg.is_dense()
+            && req.cfg.dense_last
+            && prompt_is_block_aligned;
         let max_blocks = if dense_last_applies {
             full_blocks.saturating_sub(1)
         } else {
             full_blocks
         };
-        if max_blocks == 0 {
+        self.offer_blocks(req, cache, max_blocks);
+    }
+
+    /// Offer the leading `max_blocks` full blocks of `cache` to the
+    /// shared prefix cache. Also used by `eject_preempted` to salvage a
+    /// partially-executed prefill (`cache.len` then covers only the
+    /// prompt prefix computed so far; a mid-prompt block is never
+    /// `dense_last`, so no exclusion applies).
+    fn offer_blocks(&self, req: &Request, cache: &SeqKvCache,
+                    max_blocks: usize) {
+        if !req.cfg.prefix_cacheable() || max_blocks == 0 {
             return;
         }
         let seed = req.cfg.prefill_fingerprint();
@@ -429,12 +757,25 @@ impl Batcher {
             return Ok(());
         }
         generated.push(tok);
+        // stream the token before dispatching the next engine step:
+        // the token is already final (argmax of the previous logits)
+        let text = a.decoder.push(tok);
+        let now = Instant::now();
+        if let Some(prev) = a.last_emit {
+            self.metrics.record_itl(
+                a.req.class,
+                (now - prev).as_secs_f64() * 1e3,
+            );
+        }
+        a.last_emit = Some(now);
+        let _ = a.req.events.send(TokenEvent::Token { token: tok, text });
         let t0 = Instant::now();
         let new_logits =
             self.engine.decode_step(tok, *pos, cache, &a.req.cfg)?;
         let ms = t0.elapsed().as_secs_f64() * 1e3;
         a.decode_ms_total += ms;
         self.metrics.record_tpot(ms);
+        self.clock.observe(1.0, ms);
         *logits = new_logits;
         *pos += 1;
         let hit_limit = generated.len() >= a.req.max_tokens;
@@ -454,7 +795,7 @@ impl Batcher {
         let n = generated.len();
         self.metrics
             .record_request(a.req.prompt.len(), n, e2e);
-        let _ = a.req.respond.send(Response {
+        let _ = a.req.events.send(TokenEvent::Done(Response {
             id: a.req.id,
             text: self.tokenizer.decode(&generated),
             tokens: n,
@@ -463,7 +804,7 @@ impl Batcher {
             e2e_ms: e2e,
             reused_blocks: a.reused_blocks,
             error: None,
-        });
+        }));
     }
 
     fn fail(&mut self, a: &mut Active, err: anyhow::Error) {
@@ -475,7 +816,7 @@ impl Batcher {
         let mut resp = Response::failed(a.req.id, err.to_string());
         resp.e2e_ms = a.admitted.elapsed().as_secs_f64() * 1e3;
         resp.reused_blocks = a.reused_blocks;
-        let _ = a.req.respond.send(resp);
+        let _ = a.req.events.send(TokenEvent::Done(resp));
         a.ok = false;
         a.phase = Phase::Finished;
     }
@@ -490,5 +831,108 @@ impl Batcher {
         self.replica
             .complete(a.req.prompt.len(), a.req.max_tokens);
         self.metrics.record_replica_done(self.replica.id(), a.ok);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BatcherConfig {
+        BatcherConfig {
+            max_active: 8,
+            prefill_block_budget: 4,
+            decode_first_budget: 1,
+            slo: true,
+        }
+    }
+
+    fn req(class: SloClass, prefilling: bool, at_risk: bool) -> SchedReq {
+        SchedReq {
+            class,
+            prefilling,
+            deadline_at_risk: at_risk,
+        }
+    }
+
+    #[test]
+    fn batch_only_runs_unconstrained() {
+        let p = plan_schedule(&cfg(), &[
+            req(SloClass::Batch, true, false),
+            req(SloClass::Batch, false, false),
+        ]);
+        assert_eq!(p.prefill_budget, 4);
+        assert!(!p.preempt_batch);
+    }
+
+    #[test]
+    fn interactive_prefill_preempts_batch_at_full_budget() {
+        let p = plan_schedule(&cfg(), &[
+            req(SloClass::Batch, true, false),
+            req(SloClass::Interactive, true, false),
+        ]);
+        assert_eq!(p.prefill_budget, 4, "interactive prefill needs budget");
+        assert!(p.preempt_batch, "batch prefill pauses meanwhile");
+    }
+
+    #[test]
+    fn interactive_decode_caps_budget_without_preempting() {
+        let p = plan_schedule(&cfg(), &[
+            req(SloClass::Batch, true, false),
+            req(SloClass::Interactive, false, false),
+        ]);
+        assert_eq!(p.prefill_budget, 1, "decode-first trickle budget");
+        assert!(!p.preempt_batch, "batch still trickles forward");
+    }
+
+    #[test]
+    fn deadline_risk_preempts_batch() {
+        // the non-vacuous case: an at-risk interactive *decode* pauses
+        // the batch trickle, which interactive priority alone would
+        // let run at decode_first_budget
+        let p = plan_schedule(&cfg(), &[
+            req(SloClass::Batch, true, false),
+            req(SloClass::Interactive, false, true),
+        ]);
+        assert!(p.preempt_batch, "at-risk decode stops the trickle");
+        assert_eq!(p.prefill_budget, 1, "decode-first cap still applies");
+        // without the risk flag, the same shape does NOT preempt
+        let p = plan_schedule(&cfg(), &[
+            req(SloClass::Batch, true, false),
+            req(SloClass::Interactive, false, false),
+        ]);
+        assert!(!p.preempt_batch);
+    }
+
+    #[test]
+    fn slo_off_disables_everything() {
+        let mut c = cfg();
+        c.slo = false;
+        let p = plan_schedule(&c, &[
+            req(SloClass::Interactive, true, true),
+            req(SloClass::Batch, true, false),
+        ]);
+        assert_eq!(p.prefill_budget, 4);
+        assert!(!p.preempt_batch);
+    }
+
+    #[test]
+    fn idle_interactive_only() {
+        // interactive prefill alone: full budget, preempt flag set but
+        // vacuous (no batch prefill to pause)
+        let p = plan_schedule(&cfg(), &[
+            req(SloClass::Interactive, true, false),
+        ]);
+        assert_eq!(p.prefill_budget, 4);
+    }
+
+    #[test]
+    fn decode_first_budget_clamped() {
+        let mut c = cfg();
+        c.decode_first_budget = 9;
+        let p = plan_schedule(&c, &[
+            req(SloClass::Interactive, false, false),
+        ]);
+        assert_eq!(p.prefill_budget, 4, "cap never exceeds base budget");
     }
 }

@@ -269,6 +269,69 @@ impl Roofline {
     }
 }
 
+/// Measured wall-clock per abstract scheduler cost unit, maintained as
+/// an exponentially-weighted moving average.
+///
+/// The scheduler's deadline projection needs milliseconds, but the
+/// [`crate::router::LoadEstimator`] speaks in abstract units (one
+/// prefill block ≈ 1). `UnitClock` bridges the two from *measurement*:
+/// the executor feeds it every (units, elapsed-ms) observation and asks
+/// for projections over a session's remaining steps. Until the first
+/// observation lands, [`UnitClock::project_ms`] returns `None` and the
+/// scheduler stays conservative (no deadline-based preemption).
+///
+/// ```
+/// use fastforward::cost::UnitClock;
+///
+/// let mut clock = UnitClock::new(0.5);
+/// assert!(clock.project_ms(10.0).is_none(), "unprimed: no estimate");
+/// clock.observe(1.0, 8.0); // one block step took 8 ms
+/// clock.observe(1.0, 12.0);
+/// let p = clock.project_ms(10.0).unwrap();
+/// assert!(p > 80.0 && p < 120.0, "projection tracks the EWMA: {p}");
+/// ```
+#[derive(Debug, Clone)]
+pub struct UnitClock {
+    ms_per_unit: Option<f64>,
+    alpha: f64,
+}
+
+impl UnitClock {
+    /// New clock with EWMA smoothing factor `alpha` in (0, 1]; higher
+    /// alpha adapts faster, lower alpha is steadier.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha out of (0, 1]");
+        UnitClock {
+            ms_per_unit: None,
+            alpha,
+        }
+    }
+
+    /// Fold in one measurement: `units` of scheduler cost took `ms`
+    /// milliseconds of wall-clock. Non-positive units are ignored.
+    pub fn observe(&mut self, units: f64, ms: f64) {
+        if units <= 0.0 || !ms.is_finite() || ms < 0.0 {
+            return;
+        }
+        let sample = ms / units;
+        self.ms_per_unit = Some(match self.ms_per_unit {
+            None => sample,
+            Some(prev) => prev + self.alpha * (sample - prev),
+        });
+    }
+
+    /// Projected milliseconds for `units` more scheduler cost, or
+    /// `None` before any observation.
+    pub fn project_ms(&self, units: f64) -> Option<f64> {
+        self.ms_per_unit.map(|m| m * units.max(0.0))
+    }
+
+    /// Current EWMA in ms per unit, if primed.
+    pub fn ms_per_unit(&self) -> Option<f64> {
+        self.ms_per_unit
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -382,5 +445,24 @@ mod tests {
         assert!(c.overhead() < 0.05 * c.total(),
                 "predictor+comp overhead should be <5%: {:.3}%",
                 100.0 * c.overhead() / c.total());
+    }
+
+    #[test]
+    fn unit_clock_ewma_and_projection() {
+        let mut c = UnitClock::new(0.5);
+        assert!(c.project_ms(5.0).is_none());
+        assert!(c.ms_per_unit().is_none());
+        c.observe(2.0, 20.0); // 10 ms/unit seed
+        assert!((c.ms_per_unit().unwrap() - 10.0).abs() < 1e-12);
+        c.observe(1.0, 20.0); // ewma: 10 + 0.5*(20-10) = 15
+        assert!((c.ms_per_unit().unwrap() - 15.0).abs() < 1e-12);
+        assert!((c.project_ms(4.0).unwrap() - 60.0).abs() < 1e-9);
+        // garbage observations are ignored
+        c.observe(0.0, 99.0);
+        c.observe(1.0, f64::NAN);
+        c.observe(1.0, -3.0);
+        assert!((c.ms_per_unit().unwrap() - 15.0).abs() < 1e-12);
+        // negative projections clamp to zero units
+        assert_eq!(c.project_ms(-2.0).unwrap(), 0.0);
     }
 }

@@ -66,6 +66,20 @@ impl SparsityConfig {
     }
 
     /// The paper's full method at a given sparsity.
+    ///
+    /// ```
+    /// use fastforward::engine::SparsityConfig;
+    ///
+    /// let cfg = SparsityConfig::fastforward(0.5);
+    /// assert_eq!(cfg.sparsity, Some(0.5));
+    /// assert!(cfg.layerwise && cfg.dense_first && cfg.dense_last);
+    /// assert!(cfg.compensator && !cfg.sparse_decode);
+    /// assert!(!cfg.is_dense());
+    /// // prefill numerics are fingerprinted so the prefix cache never
+    /// // mixes KV across configurations
+    /// assert_ne!(cfg.prefill_fingerprint(),
+    ///            SparsityConfig::dense().prefill_fingerprint());
+    /// ```
     pub fn fastforward(sparsity: f64) -> Self {
         SparsityConfig {
             sparsity: Some(sparsity),

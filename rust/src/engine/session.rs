@@ -1,6 +1,15 @@
 //! Incremental prefill session: block-level stepping so the dynamic
 //! batcher can interleave chunked prefills across requests (Sarathi-style
 //! chunked prefill, paper §3.1) and with decode rounds.
+//!
+//! The session is a *resumable cursor* over the prompt: `next_pos`
+//! records exactly how far prefill has progressed, so a scheduler can
+//! pause a session for any number of iterations (SLO preemption) at
+//! zero cost and resume by simply granting it budget again. When a
+//! paused session must give up its KV pages entirely, its resident
+//! whole blocks ([`PrefillSession::resident_blocks`]) can be offered to
+//! the shared prefix cache and re-adopted on re-admission — the prefill
+//! then continues from the same block boundary instead of restarting.
 
 use std::time::Instant;
 
@@ -125,6 +134,15 @@ impl PrefillSession {
         self.next_pos = n_tokens;
         self.timing.adopted_blocks = n_tokens / block;
         Ok(())
+    }
+
+    /// Whole blocks of KV currently resident in the session's cache
+    /// (adopted + executed). This is what a scheduler can salvage into
+    /// the prefix cache when ejecting a preempted session: on
+    /// re-admission the blocks are adopted back and the prefill resumes
+    /// from the same block boundary.
+    pub fn resident_blocks(&self) -> usize {
+        self.next_pos / self.engine.block()
     }
 
     /// Number of scheduling units left (full blocks + tail tokens).

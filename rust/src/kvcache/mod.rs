@@ -384,6 +384,39 @@ pub struct PrefixCacheStats {
 /// never be adopted across configurations. Entries hold pages from the
 /// shared [`PagedAllocator`] so cached residency competes with live
 /// sequences under the same admission bound.
+///
+/// The insert → acquire → copy → release cycle in miniature:
+///
+/// ```
+/// use fastforward::kvcache::{PagedAllocator, PrefixCache, SeqKvCache};
+///
+/// let block = 4;
+/// let mut alloc = PagedAllocator::new(16, block);
+/// let mut cache = PrefixCache::new(block, 1 << 20);
+/// // a finished prefill's KV for a 9-token prompt (2 layers, 1 KV
+/// // head, head width 2)
+/// let tokens: Vec<i32> = (0..9).collect();
+/// let mut src = SeqKvCache::new(2, 1, 2, tokens.len());
+/// let row = vec![0.0; src.row_elems()];
+/// for _pos in 0..tokens.len() {
+///     for l in 0..2 {
+///         src.append_layer(l, &row, &row, 1).unwrap();
+///     }
+///     src.advance(1);
+/// }
+/// // cache the two leading full blocks under config seed 7
+/// assert_eq!(cache.insert(7, &tokens, usize::MAX, &src, &mut alloc), 2);
+/// // a later request with the same prefix adopts them (pinned while
+/// // the copy runs, so eviction can't free them mid-adoption)
+/// let hit = cache.acquire(7, &tokens).expect("prefix hit");
+/// assert_eq!(hit.tokens, 2 * block);
+/// let mut dst = SeqKvCache::new(2, 1, 2, tokens.len());
+/// hit.copy_into(&mut dst).unwrap();
+/// cache.release(&hit);
+/// assert_eq!(dst.len, 2 * block, "8 of 9 tokens skip prefill");
+/// // a different configuration seed never adopts this KV
+/// assert!(cache.acquire(8, &tokens).is_none());
+/// ```
 #[derive(Debug)]
 pub struct PrefixCache {
     block: usize,

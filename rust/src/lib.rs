@@ -14,7 +14,9 @@
 //! * **L3** — this crate: the serving coordinator. Block-wise prefill
 //!   engine with predictive FFN sparsity, a replica-sharded executor
 //!   pool with least-loaded dispatch, block-granular prefix-aware KV
-//!   reuse, dynamic batching, request routing, HTTP server, paged KV
+//!   reuse, dynamic batching with SLO-aware preemptive scheduling
+//!   (interactive vs batch classes, deadline projection), SSE token
+//!   streaming end to end, request routing, HTTP server, paged KV
 //!   management, the paper's layerwise sparsity schedule (Algorithm 1),
 //!   cost model, workload generators and the full evaluation/benchmark
 //!   harness.
@@ -36,8 +38,9 @@
 //! ```
 //!
 //! See `docs/ARCHITECTURE.md` for the end-to-end request-path
-//! walkthrough and `docs/OPERATIONS.md` for endpoints, CLI flags,
-//! metrics and tuning.
+//! walkthrough, `docs/OPERATIONS.md` for endpoints (including the SSE
+//! wire format), CLI flags, metrics and tuning, and
+//! `docs/SCHEDULING.md` for the SLO scheduling rules.
 
 pub mod batcher;
 pub mod cost;

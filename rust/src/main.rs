@@ -35,6 +35,9 @@ fn usage() -> ! {
              --replicas N (executor pool size, default 1)
              --prefix-cache-mb MB (shared prefix KV cache, default 64;
               0 disables) --kv-pages N --block-budget N
+             --decode-first-budget N (prefill trickle while interactive
+              decodes run, default 1) --no-slo (disable SLO-aware
+              scheduling: priority, decode-first, preemption)
              --flop-load-model (FLOP-weighted dispatch cost)
   generate:  --prompt TEXT --max-tokens N --sparsity S
   eval:      --sparsity LIST --tasks N --prompt-chars N --ablation NAME
@@ -319,12 +322,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let bcfg = BatcherConfig {
         max_active: args.usize("max-active", 8),
         prefill_block_budget: args.usize("block-budget", 4),
+        decode_first_budget: args.usize("decode-first-budget", 1),
+        slo: !args.has("no-slo"),
     };
+    let slo_on = bcfg.slo;
     let pool = ExecutorPool::spawn_from_artifacts(router.clone(), bcfg, dir);
     eprintln!(
-        "[serve] {replicas} replica(s), {} KV pages, prefix cache {} MiB",
+        "[serve] {replicas} replica(s), {} KV pages, prefix cache {} MiB, \
+         SLO scheduling {}",
         kv_pages,
-        args.usize("prefix-cache-mb", 64)
+        args.usize("prefix-cache-mb", 64),
+        if slo_on { "on" } else { "off" }
     );
 
     let default_sparsity = {

@@ -1,6 +1,8 @@
-//! Serving metrics: TTFT / TPOT / throughput histograms, per-replica
-//! dispatch counters and prefix-cache gauges, with a Prometheus-text
-//! exporter (hand-rolled; substrate for the absent metrics crates).
+//! Serving metrics: TTFT / TPOT / ITL / throughput histograms,
+//! per-class queue-delay histograms, scheduler preemption counters,
+//! per-replica dispatch counters and prefix-cache gauges, with a
+//! Prometheus-text exporter (hand-rolled; substrate for the absent
+//! metrics crates).
 //!
 //! Every series is documented in docs/OPERATIONS.md — keep the two in
 //! sync when adding series.
@@ -9,6 +11,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::kvcache::PrefixCacheStats;
+use crate::router::SloClass;
 use crate::util::stats::Summary;
 
 /// Per-replica dispatch/completion counters.
@@ -24,10 +27,25 @@ struct Inner {
     ttft_ms: Summary,
     tpot_ms: Summary,
     e2e_ms: Summary,
+    /// Inter-token latency (wall-clock between consecutive streamed
+    /// token emissions), per SLO class: [interactive, batch].
+    itl_ms: [Summary; 2],
+    /// Queue delay (submit → executor admission), per SLO class.
+    queue_delay_ms: [Summary; 2],
     prompt_tokens: u64,
     generated_tokens: u64,
     requests_completed: u64,
     requests_rejected: u64,
+    /// Batch-class prefills paused so interactive work runs first.
+    preemptions: u64,
+    /// Preempted prefills ejected back to the queue under KV pressure
+    /// (their computed blocks salvaged into the prefix cache).
+    preemption_ejections: u64,
+    /// Requests cancelled by the executor (client disconnect or
+    /// explicit cancellation).
+    cancelled: u64,
+    /// SSE streams whose client went away mid-stream.
+    stream_disconnects: u64,
     blocks_dense: u64,
     blocks_sparse: u64,
     tail_tokens: u64,
@@ -69,6 +87,70 @@ impl Metrics {
     /// Record one decode step's latency.
     pub fn record_tpot(&self, ms: f64) {
         self.inner.lock().unwrap().tpot_ms.add(ms);
+    }
+
+    fn class_idx(class: SloClass) -> usize {
+        if class.is_interactive() {
+            0
+        } else {
+            1
+        }
+    }
+
+    /// Record one inter-token interval (time between consecutive token
+    /// emissions on a request's stream) for the given SLO class.
+    pub fn record_itl(&self, class: SloClass, ms: f64) {
+        self.inner.lock().unwrap().itl_ms[Self::class_idx(class)].add(ms);
+    }
+
+    /// Record one request's queue delay (submission → executor
+    /// admission) for the given SLO class.
+    pub fn record_queue_delay(&self, class: SloClass, ms: f64) {
+        self.inner.lock().unwrap().queue_delay_ms[Self::class_idx(class)]
+            .add(ms);
+    }
+
+    /// Record a batch-class prefill being paused for interactive work.
+    pub fn record_preemption(&self) {
+        self.inner.lock().unwrap().preemptions += 1;
+    }
+
+    /// Record a preempted prefill ejected back to its queue under KV
+    /// pressure (resumable via the prefix cache).
+    pub fn record_preemption_ejection(&self) {
+        self.inner.lock().unwrap().preemption_ejections += 1;
+    }
+
+    /// Record a request cancelled before completion.
+    pub fn record_cancelled(&self) {
+        self.inner.lock().unwrap().cancelled += 1;
+    }
+
+    /// Record an SSE client that went away mid-stream.
+    pub fn record_stream_disconnect(&self) {
+        self.inner.lock().unwrap().stream_disconnects += 1;
+    }
+
+    /// Batch-prefill preemptions so far.
+    pub fn preemptions(&self) -> u64 {
+        self.inner.lock().unwrap().preemptions
+    }
+
+    /// Requests cancelled by the executor so far.
+    pub fn cancelled(&self) -> u64 {
+        self.inner.lock().unwrap().cancelled
+    }
+
+    /// Mid-stream client disconnects so far.
+    pub fn stream_disconnects(&self) -> u64 {
+        self.inner.lock().unwrap().stream_disconnects
+    }
+
+    /// (p50, p95) of inter-token latency samples for a class.
+    pub fn itl_p50_p95(&self, class: SloClass) -> (f64, f64) {
+        let g = self.inner.lock().unwrap();
+        let s = &g.itl_ms[Self::class_idx(class)];
+        (s.percentile(50.0), s.percentile(95.0))
     }
 
     /// Record a completed request (token counts + end-to-end latency).
@@ -184,6 +266,17 @@ impl Metrics {
               g.requests_completed as f64);
         gauge("ff_requests_rejected", "rejected (backpressure)",
               g.requests_rejected as f64);
+        gauge("ff_preemptions_total",
+              "batch prefills paused for interactive work",
+              g.preemptions as f64);
+        gauge("ff_preemption_ejections_total",
+              "preempted prefills ejected to queue under KV pressure",
+              g.preemption_ejections as f64);
+        gauge("ff_cancelled_total", "requests cancelled before completion",
+              g.cancelled as f64);
+        gauge("ff_stream_disconnects_total",
+              "SSE clients gone mid-stream",
+              g.stream_disconnects as f64);
         gauge("ff_prompt_tokens_total", "prefilled tokens",
               g.prompt_tokens as f64);
         gauge("ff_generated_tokens_total", "decoded tokens",
@@ -220,6 +313,48 @@ impl Metrics {
                 gauge(&format!("{name}_p50"), "median", s.percentile(50.0));
                 gauge(&format!("{name}_p95"), "p95", s.percentile(95.0));
                 gauge(&format!("{name}_p99"), "p99", s.percentile(99.0));
+            }
+        }
+        // Per-class latency summaries use Prometheus labels: one
+        // HELP/TYPE block per metric name, then one labeled sample per
+        // class (duplicate HELP lines are a text-exposition parse
+        // error).
+        for (name, help, pair) in [
+            (
+                "ff_itl_ms",
+                "inter-token latency between streamed emissions",
+                &g.itl_ms,
+            ),
+            (
+                "ff_queue_delay_ms",
+                "submit-to-admission queue delay",
+                &g.queue_delay_ms,
+            ),
+        ] {
+            if pair.iter().all(|s| s.is_empty()) {
+                continue;
+            }
+            for stat in ["mean", "p50", "p95", "p99"] {
+                out.push_str(&format!(
+                    "# HELP {name}_{stat} {help}\n\
+                     # TYPE {name}_{stat} gauge\n"
+                ));
+                for (class, s) in
+                    ["interactive", "batch"].iter().zip(pair)
+                {
+                    if s.is_empty() {
+                        continue;
+                    }
+                    let v = match stat {
+                        "mean" => s.mean(),
+                        "p50" => s.percentile(50.0),
+                        "p95" => s.percentile(95.0),
+                        _ => s.percentile(99.0),
+                    };
+                    out.push_str(&format!(
+                        "{name}_{stat}{{class=\"{class}\"}} {v}\n"
+                    ));
+                }
             }
         }
         // Per-replica series use Prometheus labels so dashboards can
@@ -318,6 +453,46 @@ mod tests {
         assert!(text.contains("ff_prefix_insertions_total 4"));
         assert!(text.contains("ff_prefix_cache_bytes 4096"));
         assert_eq!(m.prefix_counters(), (1, 1, 3));
+    }
+
+    #[test]
+    fn slo_and_streaming_series() {
+        let m = Metrics::new();
+        m.record_itl(SloClass::Interactive, 2.0);
+        m.record_itl(SloClass::Interactive, 4.0);
+        m.record_itl(SloClass::Batch, 9.0);
+        m.record_queue_delay(SloClass::Interactive, 1.0);
+        m.record_queue_delay(SloClass::Batch, 30.0);
+        m.record_preemption();
+        m.record_preemption();
+        m.record_preemption_ejection();
+        m.record_cancelled();
+        m.record_stream_disconnect();
+        assert_eq!(m.preemptions(), 2);
+        assert_eq!(m.cancelled(), 1);
+        assert_eq!(m.stream_disconnects(), 1);
+        let (p50, p95) = m.itl_p50_p95(SloClass::Interactive);
+        assert!((p50 - 3.0).abs() < 1e-9);
+        assert!(p95 > p50);
+        let text = m.export();
+        assert!(text.contains("ff_preemptions_total 2"));
+        assert!(text.contains("ff_preemption_ejections_total 1"));
+        assert!(text.contains("ff_cancelled_total 1"));
+        assert!(text.contains("ff_stream_disconnects_total 1"));
+        assert!(text.contains("ff_itl_ms_p50{class=\"interactive\"} 3"));
+        assert!(text.contains("ff_itl_ms_mean{class=\"batch\"} 9"));
+        assert!(text
+            .contains("ff_queue_delay_ms_p50{class=\"batch\"} 30"));
+        // valid exposition format: one HELP/TYPE block per metric name
+        // even when both classes have samples
+        let helps: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("# HELP"))
+            .collect();
+        let mut dedup = helps.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(helps.len(), dedup.len(), "duplicate HELP lines");
     }
 
     #[test]

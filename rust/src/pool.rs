@@ -144,7 +144,7 @@ mod tests {
     use super::*;
     use crate::engine::SparsityConfig;
     use crate::metrics::Metrics;
-    use crate::router::LoadEstimator;
+    use crate::router::{LoadEstimator, Response};
     use std::sync::mpsc::channel;
 
     #[test]
@@ -168,9 +168,11 @@ mod tests {
             BatcherConfig::default(),
             || Err(anyhow!("no artifacts in unit tests")),
         );
-        let resp = rx
-            .recv_timeout(std::time::Duration::from_secs(10))
-            .expect("queued request must be answered");
+        let resp = Response::collect_timeout(
+            &rx,
+            std::time::Duration::from_secs(10),
+        )
+        .expect("queued request must be answered");
         assert!(resp.error.unwrap().contains("failed to start"));
         router.close();
         assert!(pool.join().is_err(), "factory error surfaces on join");

@@ -1,5 +1,5 @@
-//! Request router: admission control, bounded queueing, backpressure,
-//! and least-loaded dispatch across executor replicas.
+//! Request router: admission control, bounded class-aware queueing,
+//! backpressure, and least-loaded dispatch across executor replicas.
 //!
 //! The router sits between the (multi-threaded) HTTP front-end and the
 //! executor pool. Admission enforces (a) a per-replica queue-depth bound
@@ -11,18 +11,150 @@
 //! steps, from the [`LoadEstimator`] (optionally calibrated against the
 //! FLOP cost model).
 //!
+//! **Streaming-first:** every request carries a [`TokenEvent`] channel,
+//! not a one-shot response slot. The executor emits `First` when prefill
+//! completes, one `Token` per decoded token, and a terminal `Done`
+//! carrying the full [`Response`]. One-shot callers simply drain the
+//! channel with [`Response::collect`]; the HTTP server forwards the same
+//! events as SSE frames. A [`CancelToken`] rides along so a client
+//! disconnect can abort the session and release its KV pages mid-flight.
+//!
+//! **SLO classes:** requests declare an [`SloClass`] (interactive or
+//! batch, optionally with a completion deadline). Each replica keeps one queue
+//! per class and pops interactive work first; the batcher's scheduler
+//! additionally preempts batch prefill while interactive work is pending
+//! (see `batcher.rs` and docs/SCHEDULING.md).
+//!
 //! The router also owns the two resources shared by every replica: the
 //! paged KV allocator and the block-granular [`PrefixCache`], so a
 //! prefix computed on one replica is adoptable by all of them.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::Sender;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use crate::cost::CostModel;
 use crate::engine::SparsityConfig;
 use crate::kvcache::{PagedAllocator, PrefixCache};
 use crate::metrics::Metrics;
+
+/// Service-level objective class of a request.
+///
+/// Interactive requests are latency-sensitive: replicas pop them first
+/// and the scheduler preempts batch prefill on their behalf. Batch
+/// requests are throughput traffic that absorbs the induced delay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SloClass {
+    /// Latency-sensitive traffic (the default): prioritized admission,
+    /// protected TTFT and inter-token latency.
+    #[default]
+    Interactive,
+    /// Throughput traffic: yields the engine to interactive work and is
+    /// preempted mid-prefill when interactive SLOs are at risk.
+    Batch,
+}
+
+impl SloClass {
+    /// Whether this is the interactive (latency-sensitive) class.
+    pub fn is_interactive(self) -> bool {
+        matches!(self, SloClass::Interactive)
+    }
+
+    /// Stable label used in metrics and the HTTP API.
+    pub fn label(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    /// Parse an API string ("interactive" / "batch").
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s {
+            "interactive" => Some(SloClass::Interactive),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// Shared cancellation flag for one request.
+///
+/// Cloned between the submitter (which flips it when the client goes
+/// away) and the executor (which checks it every scheduler iteration
+/// and releases the session's KV pages on cancellation). Purely
+/// advisory — cancelling after completion is a no-op.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// Fresh, un-cancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation (idempotent).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// One event on a request's stream, emitted by the executor in order:
+/// exactly one `First`, zero or more `Token`s, exactly one terminal
+/// `Done` (failed requests may skip straight to `Done`).
+///
+/// The streaming client path in full, with the executor side played by
+/// hand (no engine needed):
+///
+/// ```
+/// use std::sync::mpsc::channel;
+/// use fastforward::router::{Response, TokenEvent};
+///
+/// let (tx, rx) = channel();
+/// // executor side: first-token marker, one token, terminal response
+/// tx.send(TokenEvent::First { ttft_ms: 12.5, reused_blocks: 0 }).unwrap();
+/// tx.send(TokenEvent::Token { token: b'h' as i32, text: "h".into() })
+///     .unwrap();
+/// let mut done = Response::failed(7, String::new());
+/// done.error = None;
+/// done.text = "h".into();
+/// done.tokens = 1;
+/// tx.send(TokenEvent::Done(done)).unwrap();
+///
+/// // client side: stream tokens, then keep the final response
+/// let resp = Response::collect(&rx).expect("terminal Done event");
+/// assert_eq!(resp.text, "h");
+/// assert_eq!(resp.tokens, 1);
+/// ```
+#[derive(Debug, Clone)]
+pub enum TokenEvent {
+    /// Prefill completed; decoding begins. Emitted exactly when TTFT is
+    /// recorded (the paper's definition: first decode logits produced).
+    First {
+        /// Time to first token in milliseconds.
+        ttft_ms: f64,
+        /// Prefill blocks adopted from the prefix cache (0 = cold).
+        reused_blocks: usize,
+    },
+    /// One decoded token.
+    Token {
+        /// Token id (byte-level vocabulary).
+        token: i32,
+        /// UTF-8 text completed by this token. May be empty while a
+        /// multi-byte character is still being assembled.
+        text: String,
+    },
+    /// Terminal event: the complete response (success or failure).
+    /// Always the last event on the channel.
+    Done(Response),
+}
 
 /// A queued generation request.
 pub struct Request {
@@ -34,11 +166,38 @@ pub struct Request {
     pub max_tokens: usize,
     /// Sparsity configuration the request runs under.
     pub cfg: SparsityConfig,
-    /// Channel the finished response is delivered on.
-    pub respond: Sender<Response>,
+    /// SLO class (scheduling priority).
+    pub class: SloClass,
+    /// Optional completion deadline in milliseconds from submission;
+    /// the scheduler preempts batch prefill when the cost model
+    /// projects a miss (interactive requests only).
+    pub deadline_ms: Option<f64>,
+    /// When the request entered the router (queue-delay accounting).
+    pub submitted: Instant,
+    /// Cooperative cancellation (client disconnect).
+    pub cancel: CancelToken,
+    /// Channel the request's [`TokenEvent`] stream is delivered on.
+    pub events: Sender<TokenEvent>,
+    /// Whether the queue-delay histogram already sampled this request
+    /// (set at first admission, so an ejected-and-readmitted request
+    /// is not double-counted).
+    pub(crate) delay_sampled: bool,
 }
 
-/// A finished (or failed) generation delivered back to the submitter.
+/// Submission options beyond the prompt itself (class, deadline,
+/// cancellation). `SubmitOpts::default()` is an interactive request
+/// with no deadline and a fresh cancel token.
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOpts {
+    /// SLO class of the request.
+    pub class: SloClass,
+    /// Optional completion deadline in milliseconds from submission.
+    pub deadline_ms: Option<f64>,
+    /// Cancellation token shared with the submitter.
+    pub cancel: CancelToken,
+}
+
+/// A finished (or failed) generation, carried by [`TokenEvent::Done`].
 #[derive(Debug, Clone)]
 pub struct Response {
     /// The id returned by [`Router::submit`].
@@ -71,6 +230,33 @@ impl Response {
             e2e_ms: 0.0,
             reused_blocks: 0,
             error: Some(error),
+        }
+    }
+
+    /// Drain a request's event stream to its terminal [`Response`] —
+    /// the one-shot adapter over the streaming path. Returns `None`
+    /// when the executor dropped the channel without a `Done` event
+    /// (executor thread died).
+    pub fn collect(rx: &Receiver<TokenEvent>) -> Option<Response> {
+        loop {
+            match rx.recv() {
+                Ok(TokenEvent::Done(resp)) => return Some(resp),
+                Ok(_) => continue,
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// [`Response::collect`] with a per-event timeout: `None` on
+    /// timeout or a dropped channel.
+    pub fn collect_timeout(rx: &Receiver<TokenEvent>,
+                           timeout: std::time::Duration) -> Option<Response> {
+        loop {
+            match rx.recv_timeout(timeout) {
+                Ok(TokenEvent::Done(resp)) => return Some(resp),
+                Ok(_) => continue,
+                Err(_) => return None,
+            }
         }
     }
 }
@@ -146,21 +332,31 @@ impl LoadEstimator {
 }
 
 struct ReplicaInner {
-    queue: VecDeque<Request>,
+    /// Interactive-class FIFO — always popped before `batch`.
+    interactive: VecDeque<Request>,
+    /// Batch-class FIFO.
+    batch: VecDeque<Request>,
     queued_cost: f64,
     inflight_cost: f64,
     closed: bool,
     dead: bool,
 }
 
-/// One executor replica's work queue and load accounting.
+impl ReplicaInner {
+    fn queue_len(&self) -> usize {
+        self.interactive.len() + self.batch.len()
+    }
+}
+
+/// One executor replica's work queues and load accounting.
 ///
 /// Created by the router ([`Router::new_pooled`]); each replica is owned
 /// by exactly one executor thread, which pops work with
 /// [`Replica::pop_blocking`] / [`Replica::pop_up_to`] and reports
-/// completions with [`Replica::complete`]. Cost accounting mirrors the
-/// request lifecycle: submit adds to `queued`, pop moves `queued` →
-/// `inflight`, complete removes from `inflight`.
+/// completions with [`Replica::complete`]. The replica keeps one FIFO
+/// per [`SloClass`] and always pops interactive work first. Cost
+/// accounting mirrors the request lifecycle: submit adds to `queued`,
+/// pop moves `queued` → `inflight`, complete removes from `inflight`.
 pub struct Replica {
     id: usize,
     estimator: LoadEstimator,
@@ -176,7 +372,8 @@ impl Replica {
             estimator,
             max_queue,
             inner: Mutex::new(ReplicaInner {
-                queue: VecDeque::new(),
+                interactive: VecDeque::new(),
+                batch: VecDeque::new(),
                 queued_cost: 0.0,
                 inflight_cost: 0.0,
                 closed: false,
@@ -191,9 +388,9 @@ impl Replica {
         self.id
     }
 
-    /// Requests currently queued (not yet popped by the executor).
+    /// Requests currently queued (both classes, not yet popped).
     pub fn queue_len(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        self.inner.lock().unwrap().queue_len()
     }
 
     /// Outstanding load: queued + in-flight cost estimates.
@@ -219,11 +416,14 @@ impl Replica {
         if g.dead || g.closed {
             return Err((req, Reject::Unavailable));
         }
-        if g.queue.len() >= self.max_queue {
+        if g.queue_len() >= self.max_queue {
             return Err((req, Reject::QueueFull));
         }
         g.queued_cost += cost;
-        g.queue.push_back(req);
+        match req.class {
+            SloClass::Interactive => g.interactive.push_back(req),
+            SloClass::Batch => g.batch.push_back(req),
+        }
         drop(g);
         self.notify.notify_one();
         Ok(())
@@ -231,14 +431,18 @@ impl Replica {
 
     fn take_front(g: &mut ReplicaInner, est: &LoadEstimator)
                   -> Option<Request> {
-        let req = g.queue.pop_front()?;
+        let req = g
+            .interactive
+            .pop_front()
+            .or_else(|| g.batch.pop_front())?;
         let cost = est.cost(req.prompt.len(), req.max_tokens);
         g.queued_cost = (g.queued_cost - cost).max(0.0);
         g.inflight_cost += cost;
         Some(req)
     }
 
-    /// Blocking pop for the executor thread; None once closed and empty.
+    /// Blocking pop for the executor thread (interactive first); None
+    /// once closed and empty.
     pub fn pop_blocking(&self) -> Option<Request> {
         let mut g = self.inner.lock().unwrap();
         loop {
@@ -252,7 +456,8 @@ impl Replica {
         }
     }
 
-    /// Non-blocking drain of up to `n` requests (executor admission).
+    /// Non-blocking drain of up to `n` requests (executor admission),
+    /// interactive class first.
     pub fn pop_up_to(&self, n: usize) -> Vec<Request> {
         let mut g = self.inner.lock().unwrap();
         let mut out = Vec::new();
@@ -265,15 +470,19 @@ impl Replica {
         out
     }
 
-    /// Return a popped request to the *front* of the queue: admission
-    /// hit transient KV pressure and will retry once pages free up.
-    /// Moves the cost estimate back from in-flight to queued.
+    /// Return a popped request to the *front* of its class queue:
+    /// admission hit transient KV pressure (or a preempted prefill was
+    /// ejected) and will retry once pages free up. Moves the cost
+    /// estimate back from in-flight to queued.
     pub fn requeue(&self, req: Request) {
         let cost = self.estimator.cost(req.prompt.len(), req.max_tokens);
         let mut g = self.inner.lock().unwrap();
         g.inflight_cost = (g.inflight_cost - cost).max(0.0);
         g.queued_cost += cost;
-        g.queue.push_front(req);
+        match req.class {
+            SloClass::Interactive => g.interactive.push_front(req),
+            SloClass::Batch => g.batch.push_front(req),
+        }
     }
 
     /// Report a popped request as finished (success or failure),
@@ -298,13 +507,19 @@ impl Replica {
             g.dead = true;
             g.closed = true;
             g.queued_cost = 0.0;
-            g.queue.drain(..).collect()
+            let inner = &mut *g;
+            inner
+                .interactive
+                .drain(..)
+                .chain(inner.batch.drain(..))
+                .collect()
         };
         self.notify.notify_all();
         for req in drained {
-            let _ = req
-                .respond
-                .send(Response::failed(req.id, error.to_string()));
+            let _ = req.events.send(TokenEvent::Done(Response::failed(
+                req.id,
+                error.to_string(),
+            )));
         }
     }
 }
@@ -387,14 +602,25 @@ impl Router {
         self.estimator
     }
 
+    /// Admit an interactive request with default options — see
+    /// [`Router::submit_with`].
+    pub fn submit(&self, prompt: Vec<i32>, max_tokens: usize,
+                  cfg: SparsityConfig, events: Sender<TokenEvent>)
+                  -> Result<u64, Reject> {
+        self.submit_with(prompt, max_tokens, cfg, SubmitOpts::default(),
+                         events)
+    }
+
     /// Admit a request or reject with a reason.
     ///
     /// Admission checks context bound, KV feasibility and the target
     /// replica's queue bound, then dispatches to the least-loaded alive
-    /// replica.
-    pub fn submit(&self, prompt: Vec<i32>, max_tokens: usize,
-                  cfg: SparsityConfig, respond: Sender<Response>)
-                  -> Result<u64, Reject> {
+    /// replica. The executor streams [`TokenEvent`]s on `events`; the
+    /// submitter keeps `opts.cancel` (or a clone) to abort the request
+    /// on client disconnect.
+    pub fn submit_with(&self, prompt: Vec<i32>, max_tokens: usize,
+                       cfg: SparsityConfig, opts: SubmitOpts,
+                       events: Sender<TokenEvent>) -> Result<u64, Reject> {
         let total = prompt.len() + max_tokens;
         if total > self.max_ctx {
             self.metrics.record_rejection();
@@ -439,7 +665,12 @@ impl Router {
             prompt,
             max_tokens,
             cfg,
-            respond,
+            class: opts.class,
+            deadline_ms: opts.deadline_ms,
+            submitted: Instant::now(),
+            cancel: opts.cancel,
+            events,
+            delay_sampled: false,
         }) {
             // the replica died or filled between least_loaded() and
             // push(); the request was never enqueued, so reject instead
@@ -528,6 +759,13 @@ mod tests {
         )
     }
 
+    fn batch_opts() -> SubmitOpts {
+        SubmitOpts {
+            class: SloClass::Batch,
+            ..Default::default()
+        }
+    }
+
     #[test]
     fn admits_and_pops_fifo() {
         let r = router(4);
@@ -542,6 +780,47 @@ mod tests {
         assert_eq!(r.queue_depth(), 2);
         assert_eq!(r.pop_blocking().unwrap().id, id1);
         assert_eq!(r.pop_up_to(5).len(), 1);
+    }
+
+    #[test]
+    fn interactive_outranks_batch_in_pop_order() {
+        let r = router(8);
+        let (tx, _rx) = channel();
+        let b1 = r
+            .submit_with(vec![1; 8], 1, SparsityConfig::dense(),
+                         batch_opts(), tx.clone())
+            .unwrap();
+        let i1 = r
+            .submit(vec![2; 8], 1, SparsityConfig::dense(), tx.clone())
+            .unwrap();
+        let b2 = r
+            .submit_with(vec![3; 8], 1, SparsityConfig::dense(),
+                         batch_opts(), tx)
+            .unwrap();
+        // interactive pops first even though it arrived second
+        assert_eq!(r.pop_blocking().unwrap().id, i1);
+        assert_eq!(r.pop_blocking().unwrap().id, b1);
+        assert_eq!(r.pop_blocking().unwrap().id, b2);
+    }
+
+    #[test]
+    fn requeue_returns_to_front_of_class_queue() {
+        let r = router(8);
+        let (tx, _rx) = channel();
+        r.submit_with(vec![1; 8], 1, SparsityConfig::dense(),
+                      batch_opts(), tx.clone())
+            .unwrap();
+        r.submit_with(vec![2; 8], 1, SparsityConfig::dense(),
+                      batch_opts(), tx)
+            .unwrap();
+        let rep = r.replica(0);
+        let first = rep.pop_blocking().unwrap();
+        let first_id = first.id;
+        let load_before = rep.load();
+        rep.requeue(first);
+        // cost moved back queued; FIFO order preserved
+        assert!((rep.load() - load_before).abs() < 1e-9);
+        assert_eq!(rep.pop_blocking().unwrap().id, first_id);
     }
 
     #[test]
@@ -591,6 +870,20 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         r.close();
         assert!(h.join().unwrap());
+    }
+
+    #[test]
+    fn cancel_token_is_shared() {
+        let opts = SubmitOpts::default();
+        let token = opts.cancel.clone();
+        assert!(!token.is_cancelled());
+        let r = router(4);
+        let (tx, _rx) = channel();
+        r.submit_with(vec![1; 8], 1, SparsityConfig::dense(), opts, tx)
+            .unwrap();
+        let req = r.pop_blocking().unwrap();
+        token.cancel();
+        assert!(req.cancel.is_cancelled(), "cancellation reaches executor");
     }
 
     #[test]
@@ -693,8 +986,8 @@ mod tests {
             .unwrap();
         assert_eq!(r.replica(0).queue_len(), 1);
         r.replica(0).mark_dead("engine failed to load");
-        // the queued request got an error response
-        let resp = rx.recv().unwrap();
+        // the queued request got a terminal error event
+        let resp = Response::collect(&rx).expect("Done event");
         assert!(resp.error.unwrap().contains("failed to load"));
         // new work routes around the dead replica
         r.submit(vec![2; 64], 2, SparsityConfig::dense(), tx.clone())

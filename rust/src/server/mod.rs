@@ -4,9 +4,19 @@
 //! pool).
 //!
 //! Endpoints:
-//! * `POST /generate`  — {"prompt": str, "max_tokens": n, "sparsity": s?}
+//! * `POST /generate`  — {"prompt": str, "max_tokens": n, "sparsity": s?,
+//!   "stream": bool?, "class": "interactive"|"batch"?, "deadline_ms": n?}
 //! * `GET  /metrics`   — Prometheus text
 //! * `GET  /healthz`   — liveness
+//!
+//! **Streaming:** with `"stream": true` the reply is Server-Sent Events
+//! (`Content-Type: text/event-stream`): one `first` event at prefill
+//! completion, one `token` event per decoded token, one terminal `done`
+//! event carrying the same JSON object the one-shot reply would have
+//! had. The wire format is specified in docs/OPERATIONS.md §1. A client
+//! that disconnects mid-stream is detected (failed write, or EOF probe
+//! between events) and its session is cancelled so the executor
+//! releases its KV pages.
 //!
 //! Robustness: request lines that don't parse as `METHOD /path ...`
 //! get a 400 instead of being treated as an empty method/path, bodies
@@ -18,14 +28,16 @@
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::engine::SparsityConfig;
 use crate::metrics::Metrics;
-use crate::router::{Reject, Router};
+use crate::router::{CancelToken, Reject, Response, Router, SloClass,
+                    SubmitOpts, TokenEvent};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::{self, Json};
 
@@ -292,9 +304,39 @@ impl Server {
             Some(s) if s > 0.0 => SparsityConfig::fastforward(s),
             _ => SparsityConfig::dense(),
         };
+        let stream_mode = j
+            .get("stream")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false);
+        let class = match j.get("class").and_then(|v| v.as_str()) {
+            None => SloClass::Interactive,
+            Some(s) => match SloClass::parse(s) {
+                Some(c) => c,
+                None => {
+                    return respond(
+                        stream,
+                        400,
+                        "application/json",
+                        &error_json(
+                            "unknown class (interactive|batch)",
+                        ),
+                    )
+                }
+            },
+        };
+        let deadline_ms = j
+            .get("deadline_ms")
+            .and_then(|v| v.as_f64())
+            .filter(|d| d.is_finite() && *d > 0.0);
+        let cancel = CancelToken::new();
+        let opts = SubmitOpts {
+            class,
+            deadline_ms,
+            cancel: cancel.clone(),
+        };
         let prompt = self.tokenizer.encode(prompt_text);
         let (tx, rx) = channel();
-        match self.router.submit(prompt, max_tokens, cfg, tx) {
+        match self.router.submit_with(prompt, max_tokens, cfg, opts, tx) {
             Err(reject) => {
                 let (code, msg) = match reject {
                     Reject::QueueFull => (429, "queue full".to_string()),
@@ -308,29 +350,129 @@ impl Server {
                 };
                 respond(stream, code, "application/json", &error_json(&msg))
             }
+            Ok(id) if stream_mode => {
+                self.stream_sse(stream, id, &rx, &cancel)
+            }
             Ok(id) => {
-                let resp = rx
-                    .recv()
-                    .map_err(|_| anyhow!("executor dropped request"))?;
-                let payload = Json::obj(vec![
-                    ("id", Json::Num(id as f64)),
-                    ("text", Json::Str(resp.text)),
-                    ("tokens", Json::Num(resp.tokens as f64)),
-                    ("ttft_ms", Json::Num(resp.ttft_ms)),
-                    ("tpot_ms", Json::Num(resp.tpot_ms)),
-                    ("e2e_ms", Json::Num(resp.e2e_ms)),
-                    (
-                        "reused_blocks",
-                        Json::Num(resp.reused_blocks as f64),
-                    ),
-                    (
-                        "error",
-                        resp.error.map(Json::Str).unwrap_or(Json::Null),
-                    ),
-                ]);
+                let resp = Response::collect(&rx)
+                    .ok_or_else(|| anyhow!("executor dropped request"))?;
                 respond(stream, 200, "application/json",
-                        &payload.to_string())
+                        &response_json(id, resp).to_string())
             }
         }
     }
+
+    /// Forward a request's event stream as Server-Sent Events. A failed
+    /// write or an EOF on the connection cancels the session so the
+    /// executor releases its KV pages; either way the connection is
+    /// ours to close (`Connection: close`).
+    fn stream_sse(&self, stream: &mut TcpStream, id: u64,
+                  rx: &Receiver<TokenEvent>, cancel: &CancelToken)
+                  -> Result<()> {
+        let _ = stream.set_nodelay(true);
+        let disconnected = |this: &Self, cancel: &CancelToken| {
+            cancel.cancel();
+            this.metrics.record_stream_disconnect();
+        };
+        if write!(
+            stream,
+            "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+             Cache-Control: no-cache\r\nConnection: close\r\n\r\n"
+        )
+        .is_err()
+        {
+            disconnected(self, cancel);
+            return Ok(());
+        }
+        loop {
+            match rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(ev) => {
+                    let is_done = matches!(ev, TokenEvent::Done(_));
+                    let (name, data) = sse_frame(id, ev);
+                    if write!(stream, "event: {name}\ndata: {data}\n\n")
+                        .is_err()
+                    {
+                        disconnected(self, cancel);
+                        return Ok(());
+                    }
+                    if is_done {
+                        return Ok(());
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    // probe for a client that went away between events
+                    // (a long decode gap would otherwise hide the EOF
+                    // until the next token write)
+                    if peer_gone(stream) {
+                        disconnected(self, cancel);
+                        return Ok(());
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    let resp = Response::failed(
+                        id,
+                        "executor dropped request".to_string(),
+                    );
+                    let (name, data) =
+                        sse_frame(id, TokenEvent::Done(resp));
+                    let _ = write!(stream,
+                                   "event: {name}\ndata: {data}\n\n");
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+/// The one-shot / `done`-event JSON payload for a finished request.
+fn response_json(id: u64, resp: Response) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("text", Json::Str(resp.text)),
+        ("tokens", Json::Num(resp.tokens as f64)),
+        ("ttft_ms", Json::Num(resp.ttft_ms)),
+        ("tpot_ms", Json::Num(resp.tpot_ms)),
+        ("e2e_ms", Json::Num(resp.e2e_ms)),
+        ("reused_blocks", Json::Num(resp.reused_blocks as f64)),
+        ("error", resp.error.map(Json::Str).unwrap_or(Json::Null)),
+    ])
+}
+
+/// Serialize one [`TokenEvent`] as an (event-name, json-data) SSE pair.
+fn sse_frame(id: u64, ev: TokenEvent) -> (&'static str, String) {
+    match ev {
+        TokenEvent::First { ttft_ms, reused_blocks } => (
+            "first",
+            Json::obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("ttft_ms", Json::Num(ttft_ms)),
+                ("reused_blocks", Json::Num(reused_blocks as f64)),
+            ])
+            .to_string(),
+        ),
+        TokenEvent::Token { token, text } => (
+            "token",
+            Json::obj(vec![
+                ("token", Json::Num(token as f64)),
+                ("text", Json::Str(text)),
+            ])
+            .to_string(),
+        ),
+        TokenEvent::Done(resp) => {
+            ("done", response_json(id, resp).to_string())
+        }
+    }
+}
+
+/// Best-effort probe for a peer that closed the connection: a
+/// non-blocking read returning EOF. `WouldBlock` (nothing to read) means
+/// the client is still there; stray pipelined bytes are ignored.
+fn peer_gone(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let mut buf = [0u8; 16];
+    let gone = matches!((&mut &*stream).read(&mut buf), Ok(0));
+    let _ = stream.set_nonblocking(false);
+    gone
 }

@@ -12,12 +12,14 @@ pub fn layerwise_schedule(scores: &[f64], budget: f64) -> Vec<f64> {
     let mut t = budget * n as f64;
     let mut s_total: f64 = scores.iter().sum();
     let mut out = Vec::with_capacity(n);
-    for &s in scores {
+    for (i, &s) in scores.iter().enumerate() {
         let b = if s_total > 0.0 {
             (s / s_total * t).min(1.0)
         } else {
-            // degenerate: spread what's left uniformly
-            (t / 1.0).min(1.0)
+            // degenerate (all remaining scores are zero): spread what's
+            // left uniformly across the *remaining* layers, not dumped
+            // onto the next one
+            (t / (n - i) as f64).min(1.0)
         };
         t -= b;
         s_total -= s;
@@ -75,6 +77,32 @@ mod tests {
         assert!((b[0] - 1.0).abs() < 1e-12);
         let mean: f64 = b.iter().sum::<f64>() / 4.0;
         assert!((mean - 0.7).abs() < 1e-9, "budget conserved, mean={mean}");
+    }
+
+    #[test]
+    fn zero_score_tail_spreads_remainder_uniformly() {
+        // regression: the degenerate branch used to divide by 1.0,
+        // dumping the whole leftover budget on the first zero-score
+        // layer and starving the rest
+        let b = layerwise_schedule(&[2.0, 0.0, 0.0, 0.0], 0.5);
+        assert!((b[0] - 1.0).abs() < 1e-12, "dominant layer clamps at 1");
+        for (i, &x) in b.iter().enumerate().skip(1) {
+            assert!(
+                (x - 1.0 / 3.0).abs() < 1e-12,
+                "zero-score layer {i} gets an equal remainder share, \
+                 got {x}"
+            );
+        }
+        let total: f64 = b.iter().sum();
+        assert!((total - 0.5 * 4.0).abs() < 1e-9, "budget conserved");
+
+        // all-zero scores degenerate to the uniform schedule
+        let u = layerwise_schedule(&[0.0, 0.0, 0.0], 0.4);
+        for &x in &u {
+            assert!((x - 0.4).abs() < 1e-12);
+        }
+        let total: f64 = u.iter().sum();
+        assert!((total - 0.4 * 3.0).abs() < 1e-9);
     }
 
     #[test]

@@ -52,6 +52,92 @@ impl Tokenizer {
     }
 }
 
+/// Incremental UTF-8 assembler for byte-level token streaming.
+///
+/// Each streamed token is one byte; a multi-byte character only becomes
+/// valid text once its last byte arrives. `StreamDecoder` buffers the
+/// bytes of an incomplete character and emits maximal valid UTF-8 as
+/// soon as it completes, so SSE clients always receive well-formed
+/// text. Special/out-of-range ids are skipped, matching
+/// [`Tokenizer::decode`].
+///
+/// ```
+/// use fastforward::tokenizer::StreamDecoder;
+///
+/// let mut d = StreamDecoder::new();
+/// // "é" is two bytes: nothing emitted until the second arrives
+/// let bytes = "é".as_bytes();
+/// assert_eq!(d.push(bytes[0] as i32), "");
+/// assert_eq!(d.push(bytes[1] as i32), "é");
+/// assert_eq!(d.push(b'!' as i32), "!");
+/// assert_eq!(d.finish(), "");
+/// ```
+#[derive(Debug, Default)]
+pub struct StreamDecoder {
+    pending: Vec<u8>,
+}
+
+impl StreamDecoder {
+    /// Fresh decoder with no pending bytes.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one token id; returns whatever text it completes (possibly
+    /// empty mid-character). Ids outside the byte range are skipped.
+    pub fn push(&mut self, token: i32) -> String {
+        if !(0..256).contains(&token) {
+            return String::new();
+        }
+        self.pending.push(token as u8);
+        self.drain_valid()
+    }
+
+    /// Flush any trailing incomplete bytes as replacement characters
+    /// (end of stream).
+    pub fn finish(&mut self) -> String {
+        let out = String::from_utf8_lossy(&self.pending).into_owned();
+        self.pending.clear();
+        out
+    }
+
+    /// Extract the maximal valid UTF-8 prefix of `pending`, replacing
+    /// definitively-invalid sequences and keeping a possibly-incomplete
+    /// trailing character buffered.
+    fn drain_valid(&mut self) -> String {
+        let mut out = String::new();
+        loop {
+            match std::str::from_utf8(&self.pending) {
+                Ok(s) => {
+                    out.push_str(s);
+                    self.pending.clear();
+                    return out;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    out.push_str(
+                        std::str::from_utf8(&self.pending[..valid])
+                            .unwrap(),
+                    );
+                    match e.error_len() {
+                        // invalid bytes in the middle: replace and keep
+                        // scanning the rest
+                        Some(bad) => {
+                            out.push('\u{fffd}');
+                            self.pending.drain(..valid + bad);
+                        }
+                        // incomplete trailing character: keep buffered
+                        None => {
+                            self.pending.drain(..valid);
+                            return out;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,6 +173,35 @@ mod tests {
         assert_eq!(&padded[3..], &[PAD; 5]);
         let truncated = t.pad_to(t.encode("abcdef"), 2);
         assert_eq!(truncated, vec![b'a' as i32, b'b' as i32]);
+    }
+
+    #[test]
+    fn stream_decoder_matches_batch_decode() {
+        let t = Tokenizer::new(384);
+        let s = "héllo → wörld!";
+        let toks = t.encode(s);
+        let mut d = StreamDecoder::new();
+        let mut streamed = String::new();
+        for &tok in &toks {
+            streamed.push_str(&d.push(tok));
+        }
+        streamed.push_str(&d.finish());
+        assert_eq!(streamed, s, "incremental == batch decode");
+    }
+
+    #[test]
+    fn stream_decoder_skips_specials_and_flushes_partials() {
+        let mut d = StreamDecoder::new();
+        assert_eq!(d.push(EOS), "");
+        assert_eq!(d.push(PAD), "");
+        assert_eq!(d.push(b'a' as i32), "a");
+        // lone continuation byte: definitively invalid → replacement
+        assert_eq!(d.push(0x80), "\u{fffd}");
+        // leading byte of a 2-byte char, stream ends before the rest
+        assert_eq!(d.push(0xC3), "");
+        let tail = d.finish();
+        assert_eq!(tail, "\u{fffd}", "incomplete tail flushed lossily");
+        assert_eq!(d.finish(), "", "finish is idempotent");
     }
 
     #[test]

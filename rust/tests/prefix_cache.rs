@@ -158,9 +158,11 @@ fn pooled_stack_reuses_prefixes_across_replicas() {
         router
             .submit(prompt.clone(), 6, SparsityConfig::fastforward(0.5), tx)
             .unwrap();
-        let resp = rx
-            .recv_timeout(std::time::Duration::from_secs(300))
-            .expect(label);
+        let resp = Response::collect_timeout(
+            &rx,
+            std::time::Duration::from_secs(300),
+        )
+        .expect(label);
         assert!(resp.error.is_none(), "{label}: {:?}", resp.error);
         resp
     };

@@ -10,7 +10,7 @@ use fastforward::batcher::{Batcher, BatcherConfig};
 use fastforward::engine::{Engine, SparsityConfig};
 use fastforward::manifest::Manifest;
 use fastforward::metrics::Metrics;
-use fastforward::router::{Response, Router};
+use fastforward::router::{Response, Router, TokenEvent};
 use fastforward::runtime::Runtime;
 use fastforward::tokenizer::Tokenizer;
 use fastforward::weights::WeightStore;
@@ -31,6 +31,7 @@ fn start_stack(max_active: usize) -> Option<(Arc<Router>, std::thread::JoinHandl
             BatcherConfig {
                 max_active,
                 prefill_block_budget: 2,
+                ..Default::default()
             },
         )
         .run()
@@ -51,7 +52,7 @@ fn serves_concurrent_requests_with_ttft() {
     let tok = Tokenizer::new(384);
     let mut rxs = Vec::new();
     for i in 0..5 {
-        let (tx, rx) = channel::<Response>();
+        let (tx, rx) = channel::<TokenEvent>();
         let text = prompt_text(180 + i * 160);
         router
             .submit(
@@ -68,9 +69,11 @@ fn serves_concurrent_requests_with_ttft() {
         rxs.push(rx);
     }
     for rx in rxs {
-        let resp = rx
-            .recv_timeout(std::time::Duration::from_secs(120))
-            .expect("response");
+        let resp = Response::collect_timeout(
+            &rx,
+            std::time::Duration::from_secs(120),
+        )
+        .expect("response");
         assert!(resp.error.is_none(), "{:?}", resp.error);
         assert!(resp.ttft_ms > 0.0);
         assert!(resp.tokens <= 6);
@@ -89,7 +92,7 @@ fn serves_concurrent_requests_with_ttft() {
 #[test]
 fn backpressure_rejects_oversize() {
     let Some((router, handle)) = start_stack(2) else { return };
-    let (tx, _rx) = channel::<Response>();
+    let (tx, _rx) = channel::<TokenEvent>();
     let err = router
         .submit(vec![65; 5000], 10, SparsityConfig::dense(), tx)
         .unwrap_err();

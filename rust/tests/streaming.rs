@@ -1,0 +1,470 @@
+//! Streaming + SLO-scheduling integration tests.
+//!
+//! Host-only (run everywhere):
+//! * SSE wire format: event ordering and framing over a real TCP
+//!   connection, with the executor side played by a stub thread.
+//!
+//! Artifact-backed (skip without artifacts / the `pjrt` feature):
+//! * streamed tokens reassemble to exactly the one-shot response;
+//! * a mid-stream client disconnect cancels the session and the KV
+//!   pool returns to zero used pages;
+//! * a batch-class long prefill is preempted for an interactive
+//!   request (observable via `ff_preemptions_total`), and the
+//!   interactive request finishes first.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::rc::Rc;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastforward::batcher::{Batcher, BatcherConfig};
+use fastforward::engine::{Engine, SparsityConfig};
+use fastforward::manifest::Manifest;
+use fastforward::metrics::Metrics;
+use fastforward::router::{Response, Router, SloClass, SubmitOpts,
+                          TokenEvent};
+use fastforward::runtime::Runtime;
+use fastforward::server::Server;
+use fastforward::tokenizer::Tokenizer;
+use fastforward::util::json;
+use fastforward::weights::WeightStore;
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+/// One parsed SSE frame.
+#[derive(Debug)]
+struct Frame {
+    event: String,
+    data: json::Json,
+}
+
+/// Split an SSE body into (event, data) frames.
+fn parse_sse(body: &str) -> Vec<Frame> {
+    let mut frames = Vec::new();
+    for chunk in body.split("\n\n").filter(|c| !c.trim().is_empty()) {
+        let mut event = String::new();
+        let mut data = String::new();
+        for line in chunk.lines() {
+            if let Some(v) = line.strip_prefix("event: ") {
+                event = v.to_string();
+            } else if let Some(v) = line.strip_prefix("data: ") {
+                data = v.to_string();
+            }
+        }
+        assert!(!event.is_empty(), "frame without event name: {chunk:?}");
+        frames.push(Frame {
+            event,
+            data: json::parse(&data)
+                .unwrap_or_else(|e| panic!("bad frame json {data:?}: {e}")),
+        });
+    }
+    frames
+}
+
+fn post_raw(addr: &str, path: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(
+        format!(
+            "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+/// Bind an ephemeral port, then hand the address to a Server (which
+/// re-binds; the tiny race is acceptable in tests).
+fn spawn_server(server: Arc<Server>) -> String {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    let addr2 = addr.clone();
+    std::thread::spawn(move || {
+        let _ = server.serve(&addr2);
+    });
+    std::thread::sleep(Duration::from_millis(200));
+    addr
+}
+
+fn start_stack(cfg: BatcherConfig)
+               -> Option<(Arc<Router>, std::thread::JoinHandle<()>)> {
+    let dir = fastforward::test_artifacts_dir()?;
+    let metrics = Arc::new(Metrics::new());
+    let router = Arc::new(Router::new(64, 4096, 512, 128, metrics));
+    let r2 = router.clone();
+    let handle = std::thread::spawn(move || {
+        let m = Rc::new(Manifest::load(&dir).unwrap());
+        let w = Rc::new(WeightStore::load(&m).unwrap());
+        let rt = Rc::new(Runtime::new(m, w).unwrap());
+        Batcher::new(Engine::new(rt), r2, cfg).run().unwrap();
+    });
+    Some((router, handle))
+}
+
+fn prompt_text(n: usize) -> String {
+    let mut rng = fastforward::util::rng::Rng::new(5);
+    let bank = fastforward::trace::WordBank::new(&mut rng, 64);
+    bank.filler(&mut rng, n)
+}
+
+// ---------------------------------------------------------------------------
+// host-only: SSE wire format
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sse_event_ordering_and_framing() {
+    let metrics = Arc::new(Metrics::new());
+    let router =
+        Arc::new(Router::new(16, 4096, 256, 128, metrics.clone()));
+
+    // Stub executor: echoes each prompt token back as one Token event,
+    // exercising the full event protocol without an engine.
+    let r2 = router.clone();
+    let exec = std::thread::spawn(move || {
+        while let Some(req) = r2.pop_blocking() {
+            let _ = req.events.send(TokenEvent::First {
+                ttft_ms: 1.5,
+                reused_blocks: 0,
+            });
+            let mut text = String::new();
+            for &t in &req.prompt {
+                let piece = ((t as u8) as char).to_string();
+                text.push_str(&piece);
+                let _ = req.events.send(TokenEvent::Token {
+                    token: t,
+                    text: piece,
+                });
+            }
+            let mut done = Response::failed(req.id, String::new());
+            done.error = None;
+            done.text = text;
+            done.tokens = req.prompt.len();
+            done.ttft_ms = 1.5;
+            let _ = req.events.send(TokenEvent::Done(done));
+        }
+    });
+
+    let server = Arc::new(Server {
+        router: router.clone(),
+        metrics,
+        tokenizer: Tokenizer::new(384),
+        default_sparsity: None,
+    });
+    let addr = spawn_server(server);
+
+    let raw = post_raw(
+        &addr,
+        "/generate",
+        r#"{"prompt": "abc", "max_tokens": 4, "stream": true}"#,
+    );
+    let (head, body) = raw.split_once("\r\n\r\n").expect("header split");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(
+        head.contains("Content-Type: text/event-stream"),
+        "SSE content type: {head}"
+    );
+
+    let frames = parse_sse(body);
+    assert_eq!(frames.len(), 2 + 3, "first + 3 tokens + done");
+    assert_eq!(frames[0].event, "first");
+    assert!(frames[0].data.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(
+        frames[0].data.get("reused_blocks").unwrap().as_usize(),
+        Some(0)
+    );
+    let mut streamed = String::new();
+    for f in &frames[1..4] {
+        assert_eq!(f.event, "token");
+        assert!(f.data.get("token").unwrap().as_usize().is_some());
+        streamed.push_str(f.data.get("text").unwrap().as_str().unwrap());
+    }
+    let done = frames.last().unwrap();
+    assert_eq!(done.event, "done");
+    assert_eq!(done.data.get("text").unwrap().as_str(), Some("abc"));
+    assert_eq!(
+        streamed, "abc",
+        "token texts concatenate to the final text"
+    );
+    assert_eq!(done.data.get("error").unwrap(), &json::Json::Null);
+
+    // non-streaming requests on the same server still get plain JSON
+    let raw = post_raw(&addr, "/generate", r#"{"prompt": "xy"}"#);
+    let (head, body) = raw.split_once("\r\n\r\n").unwrap();
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(head.contains("application/json"), "{head}");
+    let j = json::parse(body).unwrap();
+    assert_eq!(j.get("text").unwrap().as_str(), Some("xy"));
+
+    // unknown SLO class is a 400, not a silent default
+    let raw = post_raw(
+        &addr,
+        "/generate",
+        r#"{"prompt": "x", "class": "warp-speed"}"#,
+    );
+    assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+
+    router.close();
+    exec.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// artifact-backed
+// ---------------------------------------------------------------------------
+
+#[test]
+fn streamed_tokens_match_oneshot_exactly() {
+    let Some((router, handle)) = start_stack(BatcherConfig {
+        max_active: 4,
+        prefill_block_budget: 2,
+        ..Default::default()
+    }) else {
+        return;
+    };
+    let tok = Tokenizer::new(384);
+    let prompt = tok.encode(&prompt_text(400));
+    let cfg = SparsityConfig::fastforward(0.5);
+
+    // one-shot: drain the stream to the terminal response only
+    let (tx, rx) = channel();
+    router
+        .submit(prompt.clone(), 8, cfg.clone(), tx)
+        .expect("admit");
+    let oneshot = Response::collect_timeout(&rx, Duration::from_secs(120))
+        .expect("one-shot response");
+    assert!(oneshot.error.is_none(), "{:?}", oneshot.error);
+
+    // streamed: same prompt, same config — collect every event
+    let (tx, rx) = channel();
+    router.submit(prompt, 8, cfg, tx).expect("admit");
+    let mut saw_first = false;
+    let mut ids = Vec::new();
+    let mut text_pieces = String::new();
+    let streamed_done = loop {
+        match rx.recv_timeout(Duration::from_secs(120)).expect("event") {
+            TokenEvent::First { ttft_ms, .. } => {
+                assert!(!saw_first, "exactly one First event");
+                assert!(ttft_ms > 0.0);
+                saw_first = true;
+            }
+            TokenEvent::Token { token, text } => {
+                assert!(saw_first, "tokens only after First");
+                ids.push(token);
+                text_pieces.push_str(&text);
+            }
+            TokenEvent::Done(resp) => break resp,
+        }
+    };
+    assert!(streamed_done.error.is_none(), "{:?}", streamed_done.error);
+
+    // bit-identical: same token count, same final text, and the
+    // streamed ids decode to exactly the one-shot text
+    assert_eq!(streamed_done.tokens, oneshot.tokens);
+    assert_eq!(streamed_done.text, oneshot.text);
+    assert_eq!(ids.len(), streamed_done.tokens);
+    assert_eq!(tok.decode(&ids), oneshot.text);
+    // incremental pieces reassemble the text (a trailing *incomplete*
+    // multi-byte character may legitimately stay buffered)
+    assert!(
+        oneshot.text.starts_with(&text_pieces)
+            && oneshot.text.len() - text_pieces.len() < 4,
+        "pieces {text_pieces:?} vs {:?}",
+        oneshot.text
+    );
+
+    // ITL samples were recorded for the interactive class
+    if streamed_done.tokens > 1 {
+        let (p50, _) = router.metrics.itl_p50_p95(SloClass::Interactive);
+        assert!(p50 > 0.0, "ITL histogram populated");
+        assert!(router.metrics.export().contains(
+            "ff_itl_ms_p50{class=\"interactive\"}"
+        ));
+    }
+
+    router.close();
+    handle.join().unwrap();
+    assert_eq!(router.kv_pool.lock().unwrap().used_pages(), 0);
+}
+
+#[test]
+fn disconnect_mid_stream_releases_kv_pages() {
+    let Some((router, handle)) = start_stack(BatcherConfig {
+        max_active: 4,
+        prefill_block_budget: 2,
+        ..Default::default()
+    }) else {
+        return;
+    };
+    let server = Arc::new(Server {
+        router: router.clone(),
+        metrics: router.metrics.clone(),
+        tokenizer: Tokenizer::new(384),
+        default_sparsity: Some(0.5),
+    });
+    let addr = spawn_server(server);
+
+    // start a long streamed generation, then vanish after the first
+    // token frame
+    let body = format!(
+        r#"{{"prompt": "{}", "max_tokens": 400, "stream": true}}"#,
+        prompt_text(150).replace('"', " ")
+    );
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(
+            format!(
+                "POST /generate HTTP/1.1\r\nHost: x\r\n\
+                 Content-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut seen = String::new();
+        let mut buf = [0u8; 1024];
+        let deadline = Instant::now() + Duration::from_secs(120);
+        loop {
+            let n = s.read(&mut buf).expect("read stream");
+            assert!(n > 0, "server closed before first token");
+            seen.push_str(&String::from_utf8_lossy(&buf[..n]));
+            if seen.contains("event: token") {
+                break;
+            }
+            assert!(Instant::now() < deadline, "no token frame");
+        }
+        // drop the connection mid-stream
+    }
+
+    // the executor must notice, cancel the session and release its KV
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let used = router.kv_pool.lock().unwrap().used_pages();
+        if used == 0 && router.metrics.cancelled() >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "KV not reclaimed after disconnect: {used} pages used, \
+             {} cancelled",
+            router.metrics.cancelled()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(
+        router.metrics.stream_disconnects() >= 1,
+        "disconnect was observed by the server"
+    );
+
+    router.close();
+    handle.join().unwrap();
+}
+
+#[test]
+fn interactive_preempts_batch_prefill() {
+    let Some((router, handle)) = start_stack(BatcherConfig {
+        max_active: 4,
+        prefill_block_budget: 2,
+        decode_first_budget: 1,
+        slo: true,
+    }) else {
+        return;
+    };
+    let tok = Tokenizer::new(384);
+
+    // batch-class long prefill: as long as the context bound allows
+    // (the acceptance scenario's "16K-token" prefill scaled to the
+    // test model's max_ctx)
+    let max_ctx = Manifest::load(&fastforward::test_artifacts_dir().unwrap())
+        .unwrap()
+        .model
+        .max_ctx;
+    let batch_len = max_ctx.saturating_sub(64).min(3400);
+    let mut batch_prompt = tok.encode(&prompt_text(batch_len));
+    batch_prompt.truncate(batch_len);
+    let (btx, brx) = channel();
+    router
+        .submit_with(
+            batch_prompt,
+            4,
+            SparsityConfig::fastforward(0.5),
+            SubmitOpts {
+                class: SloClass::Batch,
+                ..Default::default()
+            },
+            btx,
+        )
+        .expect("admit batch");
+
+    // give the executor a moment to admit it and start prefilling
+    std::thread::sleep(Duration::from_millis(100));
+
+    // interactive short request arrives mid-prefill
+    let (itx, irx) = channel();
+    let t0 = Instant::now();
+    router
+        .submit(
+            tok.encode(&prompt_text(180)),
+            6,
+            SparsityConfig::fastforward(0.5),
+            itx,
+        )
+        .expect("admit interactive");
+    let interactive = Response::collect_timeout(
+        &irx,
+        Duration::from_secs(300),
+    )
+    .expect("interactive response");
+    let interactive_wall = t0.elapsed();
+    assert!(interactive.error.is_none(), "{:?}", interactive.error);
+
+    // the batch request must still be running when the interactive one
+    // finished (it was preempted, not merely outrun)
+    let mut batch_done_already = false;
+    while let Ok(ev) = brx.try_recv() {
+        if matches!(ev, TokenEvent::Done(_)) {
+            batch_done_already = true;
+        }
+    }
+    assert!(
+        !batch_done_already,
+        "batch prefill should still be in flight"
+    );
+    assert!(
+        router.metrics.preemptions() >= 1,
+        "preemption must be observable via ff_preemptions_total"
+    );
+    assert!(
+        router.metrics.export().contains("ff_preemptions_total"),
+        "metric exported"
+    );
+
+    // and the batch request still completes afterwards
+    let batch = Response::collect_timeout(&brx, Duration::from_secs(600))
+        .expect("batch response");
+    assert!(batch.error.is_none(), "{:?}", batch.error);
+    assert!(
+        interactive.ttft_ms < batch.e2e_ms,
+        "interactive TTFT {} must beat the batch request's e2e {}",
+        interactive.ttft_ms,
+        batch.e2e_ms
+    );
+    eprintln!(
+        "[slo] interactive ttft {:.1} ms (wall {:.1} ms) vs batch e2e \
+         {:.1} ms, {} preemptions",
+        interactive.ttft_ms,
+        interactive_wall.as_secs_f64() * 1e3,
+        batch.e2e_ms,
+        router.metrics.preemptions()
+    );
+
+    router.close();
+    handle.join().unwrap();
+    assert_eq!(router.kv_pool.lock().unwrap().used_pages(), 0);
+}

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Repo check gate: build, tests, docs (missing-docs denied), formatting.
+# Repo check gate: build, tests, doctests, examples, docs
+# (missing-docs denied), markdown link lint, formatting.
 # Usage: scripts/check.sh [extra cargo args, e.g. --features pjrt]
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -12,8 +13,21 @@ cargo build --release "${extra[@]}"
 echo "==> cargo test -q"
 cargo test -q "${extra[@]}"
 
+echo "==> cargo test --doc"
+cargo test --doc -q "${extra[@]}"
+
+echo "==> cargo build --examples"
+cargo build --release --examples "${extra[@]}"
+
 echo "==> cargo doc --no-deps (warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet "${extra[@]}"
+
+echo "==> markdown link lint (README.md, docs/*.md)"
+if command -v python3 >/dev/null 2>&1; then
+    python3 ../scripts/lint_links.py
+else
+    echo "    (python3 not installed — skipped)"
+fi
 
 echo "==> cargo fmt --check"
 if cargo fmt --version >/dev/null 2>&1; then

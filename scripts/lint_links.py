@@ -1,0 +1,46 @@
+#!/usr/bin/env python3
+"""Dead-relative-link lint for the repo's markdown.
+
+Scans README.md and docs/*.md for [text](target) links and verifies
+that every relative target (optionally with a #fragment) exists on
+disk, resolved against the file containing the link. External links
+(http/https/mailto) are skipped. Exits non-zero listing every dead
+link.
+"""
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+def links_in(path: Path):
+    text = path.read_text(encoding="utf-8")
+    # strip fenced code blocks so example snippets aren't linted
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in LINK_RE.finditer(text):
+        yield m.group(1)
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    dead = []
+    for f in files:
+        if not f.exists():
+            continue
+        for target in links_in(f):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (f.parent / rel).exists():
+                dead.append(f"{f.relative_to(root)}: dead link -> {target}")
+    if dead:
+        print("\n".join(dead))
+        return 1
+    print(f"link lint: {len(files)} files OK")
+    return 0
+
+if __name__ == "__main__":
+    sys.exit(main())
