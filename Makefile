@@ -3,11 +3,13 @@
 #   make artifacts   train + AOT-lower the L2 model into rust/artifacts
 #   make check       build, test, doc (missing-docs denied), fmt --check
 #   make serve       run the server against the built artifacts
+#   make serve-cpu   run the server on the pure-Rust CPU backend
+#                    (no artifacts, no XLA bindings needed)
 
 ARTIFACTS ?= rust/artifacts
 REPLICAS  ?= 1
 
-.PHONY: check artifacts serve clean
+.PHONY: check artifacts serve serve-cpu clean
 
 check:
 	scripts/check.sh
@@ -18,6 +20,10 @@ artifacts:
 serve:
 	cd rust && cargo run --release --features pjrt -- serve \
 		--artifacts artifacts --replicas $(REPLICAS)
+
+serve-cpu:
+	cd rust && cargo run --release -- serve \
+		--backend cpu --replicas $(REPLICAS)
 
 clean:
 	cd rust && cargo clean

@@ -1,26 +1,52 @@
-//! Quickstart: load the AOT artifacts, prefill a prompt dense vs sparse,
-//! and generate a short continuation — the 60-second tour of the API.
+//! Quickstart: load a model, prefill a prompt dense vs sparse, and
+//! generate a short continuation — the 60-second tour of the API.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//! Works on any machine: with AOT artifacts (`make artifacts`) and the
+//! `pjrt` feature it runs them on PJRT; with `FF_BACKEND=cpu` (or
+//! without artifacts) it runs the deterministic synthetic reference
+//! model on the pure-Rust CPU backend — no setup at all.
+//!
+//!     cargo run --release --example quickstart                # auto
+//!     FF_BACKEND=cpu cargo run --release --example quickstart # forced
+//!     make artifacts && cargo run --release --features pjrt \
+//!         --example quickstart
 
 use std::rc::Rc;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use fastforward::engine::{Engine, SparsityConfig};
-use fastforward::manifest::Manifest;
-use fastforward::runtime::Runtime;
+use fastforward::manifest::{Manifest, SyntheticSpec};
+use fastforward::runtime::{BackendKind, Runtime};
 use fastforward::tokenizer::Tokenizer;
 use fastforward::weights::WeightStore;
 
-fn main() -> Result<()> {
-    // 1. Load the artifact bundle produced by `make artifacts`.
+fn load_engine() -> Result<Engine> {
     let dir = std::path::PathBuf::from(
         std::env::var("FF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );
+    let kind = match std::env::var("FF_BACKEND") {
+        Ok(s) => BackendKind::parse(&s)
+            .ok_or_else(|| anyhow!("unknown FF_BACKEND {s:?}"))?,
+        Err(_) => BackendKind::default_for_build(),
+    };
+    // The CPU backend serves the synthetic reference model (artifact
+    // bundles are PJRT-only); pjrt without a bundle falls back to it
+    // so the example runs everywhere.
+    if kind == BackendKind::Cpu || !dir.join("manifest.json").exists() {
+        println!("backend: cpu (synthetic reference model, no artifacts)");
+        return Engine::synthetic_cpu(&SyntheticSpec::default());
+    }
+    println!("backend: {} over artifacts at {dir:?}", kind.label());
     let manifest = Rc::new(Manifest::load(&dir)?);
     let weights = Rc::new(WeightStore::load(&manifest)?);
-    let runtime = Rc::new(Runtime::new(manifest, weights)?);
-    let engine = Engine::new(runtime);
+    Ok(Engine::new(Rc::new(Runtime::with_backend(
+        kind, manifest, weights,
+    )?)))
+}
+
+fn main() -> Result<()> {
+    // 1. Load the model (artifact bundle or synthetic reference).
+    let engine = load_engine()?;
     let tok = Tokenizer::new(engine.manifest().model.vocab);
     println!(
         "loaded {} ({} executables, {} weights)",
@@ -29,13 +55,15 @@ fn main() -> Result<()> {
         engine.manifest().weights.len(),
     );
 
-    // 2. Build a long-ish prompt ending in a QA-style question.
+    // 2. Build a long-ish prompt ending in a QA-style question, sized
+    //    to the model's context window.
+    let max_ctx = engine.manifest().model.max_ctx;
     let mut rng = fastforward::util::rng::Rng::new(7);
     let bank = fastforward::trace::WordBank::new(&mut rng, 128);
     let prompt_text = format!(
         "{} the passkey is kwxqzj. remember it. {}\nthe passkey is",
-        bank.filler(&mut rng, 400),
-        bank.filler(&mut rng, 500),
+        bank.filler(&mut rng, (max_ctx / 4).min(400)),
+        bank.filler(&mut rng, (max_ctx / 3).min(500)),
     );
     let prompt = tok.encode(&prompt_text);
     println!("prompt: {} tokens", prompt.len());

@@ -596,7 +596,8 @@ impl Batcher {
         // resident until released.
         let mut reused_blocks = 0;
         if req.cfg.prefix_cacheable() {
-            let seed = req.cfg.prefill_fingerprint();
+            // config ⊕ model ⊕ backend: KV is only shared when all match
+            let seed = self.engine.prefix_seed(&req.cfg);
             let hit = {
                 let mut pc = self.router.prefix_cache.lock().unwrap();
                 if !pc.enabled() {
@@ -713,7 +714,7 @@ impl Batcher {
         if !req.cfg.prefix_cacheable() || max_blocks == 0 {
             return;
         }
-        let seed = req.cfg.prefill_fingerprint();
+        let seed = self.engine.prefix_seed(&req.cfg);
         // cheap probe under the lock: which blocks are actually new
         let missing = {
             let pc = self.router.prefix_cache.lock().unwrap();

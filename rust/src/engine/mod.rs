@@ -109,9 +109,12 @@ impl SparsityConfig {
     }
 
     /// Stable 64-bit fingerprint of every field that influences prefill
-    /// numerics. Seeds the prefix-cache hash chain so KV rows are only
-    /// ever adopted by sessions running the *same* configuration (sparse
-    /// KV differs numerically from dense KV). `sparse_decode` is
+    /// numerics. Combined with the runtime's model + backend
+    /// fingerprint in [`Engine::prefix_seed`], it seeds the
+    /// prefix-cache hash chain so KV rows are only ever adopted by
+    /// sessions running the *same* configuration (sparse KV differs
+    /// numerically from dense KV, and CPU-interpreter KV differs from
+    /// PJRT KV). `sparse_decode` is
     /// deliberately excluded: it only affects decode steps, never the
     /// full blocks the cache stores, so including it would pointlessly
     /// fragment the cache across otherwise-identical configurations.
@@ -204,9 +207,31 @@ impl Engine {
         }
     }
 
+    /// Build a fully self-contained engine: synthetic manifest, seeded
+    /// deterministic weights, pure-Rust CPU backend. No artifacts, no
+    /// `pjrt` feature — this is what the always-on numeric test tier
+    /// and `--backend cpu` serving run on.
+    pub fn synthetic_cpu(
+        spec: &crate::manifest::SyntheticSpec,
+    ) -> Result<Engine> {
+        let manifest = Rc::new(Manifest::synthetic(spec));
+        let weights = Rc::new(crate::weights::WeightStore::seeded(
+            &manifest, spec.seed,
+        ));
+        Ok(Engine::new(Rc::new(Runtime::cpu(manifest, weights)?)))
+    }
+
     /// The artifact manifest this engine dispatches against.
     pub fn manifest(&self) -> &Manifest {
         &self.rt.manifest
+    }
+
+    /// Seed for the prefix-cache hash chain: the sparsity
+    /// configuration's prefill fingerprint mixed with the runtime's
+    /// model + backend fingerprint. Two sessions may share cached KV
+    /// only when *all three* match — config, model, and backend.
+    pub fn prefix_seed(&self, cfg: &SparsityConfig) -> u64 {
+        cfg.prefill_fingerprint() ^ self.rt.numeric_fingerprint()
     }
 
     /// Prefill block size in tokens (paper §3.1: 128).

@@ -33,9 +33,17 @@
 //!   └─ shared: PagedAllocator · PrefixCache · Metrics
 //!
 //! engine, per prompt block ─┬─ cached prefix → adopt KV rows (no compute)
-//!                           ├─ dense block   → layer_dense_*    (PJRT)
-//!                           └─ sparse block  → layer_sparse_K_* (PJRT)
+//!                           ├─ dense block   → layer_dense_*    (backend)
+//!                           └─ sparse block  → layer_sparse_K_* (backend)
 //! ```
+//!
+//! Execution is backend-pluggable (`--backend cpu|pjrt`): the PJRT
+//! backend compiles the AOT HLO artifacts, while the pure-Rust
+//! [`runtime::CpuBackend`] interprets the same ABI deterministically on
+//! any machine over the synthetic reference model
+//! ([`manifest::Manifest::synthetic`] +
+//! [`weights::WeightStore::seeded`]) — no artifacts, no setup. That is
+//! what un-gates the end-to-end numeric test tier (docs/TESTING.md).
 //!
 //! See `docs/ARCHITECTURE.md` for the end-to-end request-path
 //! walkthrough, `docs/OPERATIONS.md` for endpoints (including the SSE
@@ -54,6 +62,7 @@ pub mod router;
 pub mod runtime;
 pub mod server;
 pub mod sparsity;
+pub mod testing;
 pub mod tokenizer;
 pub mod trace;
 pub mod util;
@@ -66,8 +75,11 @@ use std::path::PathBuf;
 
 /// Locate the artifacts directory for tests/benches: `FF_ARTIFACTS` env
 /// var, else `<crate>/artifacts` if it holds a manifest. Returns None
-/// (tests skip) when artifacts have not been built, or when the crate
-/// was built without the `pjrt` feature (artifacts cannot execute).
+/// when artifacts have not been built, or when the crate was built
+/// without the `pjrt` feature (artifacts cannot execute). Callers that
+/// only need *an* engine should use [`testing::test_engine`], which
+/// falls back to the deterministic CPU backend instead of skipping —
+/// see docs/TESTING.md for the test-tier layout.
 pub fn test_artifacts_dir() -> Option<PathBuf> {
     if cfg!(not(feature = "pjrt")) {
         eprintln!(

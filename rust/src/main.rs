@@ -11,16 +11,16 @@
 use std::rc::Rc;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use fastforward::batcher::BatcherConfig;
 use fastforward::cost::CostModel;
 use fastforward::engine::{Engine, SparsityConfig};
 use fastforward::eval::{self, EvalSpec};
-use fastforward::manifest::Manifest;
+use fastforward::manifest::{Manifest, SyntheticSpec};
 use fastforward::metrics::Metrics;
 use fastforward::pool::ExecutorPool;
 use fastforward::router::{LoadEstimator, Router};
-use fastforward::runtime::Runtime;
+use fastforward::runtime::{BackendKind, Runtime};
 use fastforward::server::Server;
 use fastforward::sparsity::masks::ExpertSource;
 use fastforward::tokenizer::Tokenizer;
@@ -31,6 +31,10 @@ fn usage() -> ! {
     eprintln!(
         "fastforward <serve|generate|eval|schedule|cost|info> [flags]
   common:    --artifacts DIR (default ./artifacts)
+             --backend cpu|pjrt (execution backend; default pjrt when
+              compiled with the pjrt feature, cpu otherwise. cpu needs
+              no artifacts: it serves the deterministic synthetic
+              reference model, and is incompatible with --artifacts)
   serve:     --addr HOST:PORT --sparsity S --max-active N --queue N
              --replicas N (executor pool size, default 1)
              --prefix-cache-mb MB (shared prefix KV cache, default 64;
@@ -49,12 +53,56 @@ fn usage() -> ! {
     std::process::exit(2);
 }
 
-fn load_engine(args: &Args) -> Result<Engine> {
+fn backend_kind(args: &Args) -> Result<BackendKind> {
+    let s = args.str("backend", BackendKind::default_for_build().label());
+    BackendKind::parse(&s)
+        .ok_or_else(|| anyhow!("unknown backend {s:?} (expected cpu|pjrt)"))
+}
+
+/// Resolve `--backend`/`--artifacts` into (backend, artifact dir).
+///
+/// The CPU backend serves the deterministic synthetic reference model
+/// — it cannot execute artifact bundles (their fused low-rank
+/// predictor/compensator networks are PJRT-only). Combining it with an
+/// explicit `--artifacts` is therefore an error, never a silent
+/// substitution; an artifact bundle sitting at the *default* path is
+/// ignored with a notice.
+fn resolve_backend(args: &Args)
+                   -> Result<(BackendKind, Option<std::path::PathBuf>)> {
+    let kind = backend_kind(args)?;
     let dir = std::path::PathBuf::from(args.str("artifacts", "artifacts"));
-    let manifest = Rc::new(Manifest::load(&dir)?);
-    let weights = Rc::new(WeightStore::load(&manifest)?);
-    let rt = Rc::new(Runtime::new(manifest, weights)?);
-    Ok(Engine::new(rt))
+    match kind {
+        BackendKind::Pjrt => Ok((kind, Some(dir))),
+        BackendKind::Cpu => {
+            anyhow::ensure!(
+                !args.has("artifacts"),
+                "--backend cpu serves the synthetic reference model and \
+                 cannot execute the artifact bundle at {dir:?}; drop \
+                 --artifacts or use --backend pjrt"
+            );
+            if dir.join("manifest.json").exists() {
+                eprintln!(
+                    "[backend] cpu: ignoring artifact bundle at {dir:?} \
+                     (synthetic reference model; use --backend pjrt to \
+                     execute artifacts)"
+                );
+            }
+            Ok((kind, None))
+        }
+    }
+}
+
+fn load_engine(args: &Args) -> Result<Engine> {
+    match resolve_backend(args)? {
+        (_, None) => Engine::synthetic_cpu(&SyntheticSpec::default()),
+        (kind, Some(dir)) => {
+            let manifest = Rc::new(Manifest::load(&dir)?);
+            let weights = Rc::new(WeightStore::load(&manifest)?);
+            let rt =
+                Rc::new(Runtime::with_backend(kind, manifest, weights)?);
+            Ok(Engine::new(rt))
+        }
+    }
 }
 
 fn cfg_from_args(args: &Args) -> SparsityConfig {
@@ -288,9 +336,13 @@ fn cmd_analyze(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.str("addr", "127.0.0.1:8080");
     let metrics = Arc::new(Metrics::new());
-    let dir = std::path::PathBuf::from(args.str("artifacts", "artifacts"));
-    // Probe the manifest on the main thread for fail-fast UX.
-    let probe = Manifest::load(&dir)?;
+    let (kind, dir) = resolve_backend(args)?;
+    // Probe the manifest on the main thread for fail-fast UX; the CPU
+    // backend serves the synthetic reference model.
+    let probe = match &dir {
+        Some(d) => Manifest::load(d)?,
+        None => Manifest::synthetic(&SyntheticSpec::default()),
+    };
     let max_ctx = probe.model.max_ctx;
     let vocab = probe.model.vocab;
     let block = probe.model.block;
@@ -326,10 +378,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         slo: !args.has("no-slo"),
     };
     let slo_on = bcfg.slo;
-    let pool = ExecutorPool::spawn_from_artifacts(router.clone(), bcfg, dir);
+    let pool = ExecutorPool::spawn_backend(router.clone(), bcfg, kind, dir);
     eprintln!(
-        "[serve] {replicas} replica(s), {} KV pages, prefix cache {} MiB, \
-         SLO scheduling {}",
+        "[serve] {} backend, {replicas} replica(s), {} KV pages, prefix \
+         cache {} MiB, SLO scheduling {}",
+        kind.label(),
         kv_pages,
         args.usize("prefix-cache-mb", 64),
         if slo_on { "on" } else { "off" }

@@ -136,6 +136,63 @@ pub struct Manifest {
     pub schedule: Schedule,
 }
 
+/// Parameters of the synthetic, artifact-free model description built
+/// by [`Manifest::synthetic`] — the manifest the deterministic
+/// [`crate::runtime::CpuBackend`] runs against when no AOT bundle is on
+/// disk (always-on numeric tests, `--backend cpu` serving).
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    /// Model name (feeds [`Manifest::fingerprint`]).
+    pub name: String,
+    /// LM-head vocabulary (≥ 259 to cover the byte tokenizer specials).
+    pub vocab: usize,
+    /// Residual stream width (must equal `n_heads * d_head`).
+    pub d_model: usize,
+    /// Transformer layer count.
+    pub n_layers: usize,
+    /// Attention query heads.
+    pub n_heads: usize,
+    /// KV heads (GQA; must divide `n_heads`).
+    pub n_kv_heads: usize,
+    /// Per-head dimension (even, for RoPE pairs).
+    pub d_head: usize,
+    /// FFN hidden width (the dimension sparsity selects over).
+    pub d_ffn: usize,
+    /// Prefill block size in tokens.
+    pub block: usize,
+    /// FFN kernel tile: every K in the grid is a multiple of this.
+    pub ftile: usize,
+    /// Maximum context length (== the largest bucket).
+    pub max_ctx: usize,
+    /// KV bucket sizes, ascending.
+    pub buckets: Vec<usize>,
+    /// Seed for [`crate::weights::WeightStore::seeded`].
+    pub seed: u64,
+}
+
+impl Default for SyntheticSpec {
+    /// The reference test model: small enough that a full prefill is
+    /// fast on the interpreter, structured exactly like the paper's
+    /// models (GQA, 128-token blocks, tiled K grid).
+    fn default() -> Self {
+        SyntheticSpec {
+            name: "ff-ref-64".to_string(),
+            vocab: 384,
+            d_model: 64,
+            n_layers: 4,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_head: 16,
+            d_ffn: 256,
+            block: 128,
+            ftile: 32,
+            max_ctx: 2048,
+            buckets: vec![256, 512, 1024, 2048],
+            seed: 0xF057_F0A4,
+        }
+    }
+}
+
 impl Manifest {
     /// Parse manifest.json + schedule.json from an artifact directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
@@ -231,6 +288,271 @@ impl Manifest {
         })
     }
 
+    /// Build a complete in-memory manifest for the synthetic reference
+    /// model: weight table (sequential offsets), executable specs for
+    /// every name the engine can dispatch, the tiled K grids, and a
+    /// sparsity schedule computed by the same Algorithm-1 twin the
+    /// engine uses (`0.30` / `0.40` / `0.50` budgets).
+    ///
+    /// The result has no backing files: pair it with
+    /// [`crate::weights::WeightStore::seeded`] and the `cpu` backend.
+    pub fn synthetic(spec: &SyntheticSpec) -> Manifest {
+        use crate::sparsity::schedule::{layerwise_schedule,
+                                        quantize_densities};
+        assert_eq!(spec.d_model, spec.n_heads * spec.d_head,
+                   "d_model must equal n_heads * d_head");
+        assert_eq!(spec.n_heads % spec.n_kv_heads, 0,
+                   "n_kv_heads must divide n_heads");
+        assert_eq!(spec.d_head % 2, 0, "d_head must be even (RoPE)");
+        assert_eq!(spec.d_ffn % spec.ftile, 0,
+                   "d_ffn must be a multiple of ftile");
+        assert!(spec.vocab >= 259,
+                "vocab must cover the byte-tokenizer specials (>= 259)");
+        let (d, f) = (spec.d_model, spec.d_ffn);
+        let (nh, nkv, dh) = (spec.n_heads, spec.n_kv_heads, spec.d_head);
+
+        // --- weight table (offsets assigned in insertion order) ---
+        let mut weights = BTreeMap::new();
+        let mut off = 0usize;
+        let mut add_w = |weights: &mut BTreeMap<String, WeightEntry>,
+                         name: String, shape: Vec<usize>| {
+            let numel = shape.iter().product::<usize>().max(1);
+            weights.insert(name, WeightEntry { offset: off, shape });
+            off += numel * 4;
+        };
+        add_w(&mut weights, "embed".into(), vec![spec.vocab, d]);
+        add_w(&mut weights, "final_rms".into(), vec![d]);
+        add_w(&mut weights, "lm_head".into(), vec![d, spec.vocab]);
+        for l in 0..spec.n_layers {
+            add_w(&mut weights, format!("layers.{l}.rms1"), vec![d]);
+            add_w(&mut weights, format!("layers.{l}.wq"),
+                  vec![d, nh * dh]);
+            add_w(&mut weights, format!("layers.{l}.wk"),
+                  vec![d, nkv * dh]);
+            add_w(&mut weights, format!("layers.{l}.wv"),
+                  vec![d, nkv * dh]);
+            add_w(&mut weights, format!("layers.{l}.wo"),
+                  vec![nh * dh, d]);
+            add_w(&mut weights, format!("layers.{l}.rms2"), vec![d]);
+            add_w(&mut weights, format!("layers.{l}.w_gate"), vec![d, f]);
+            add_w(&mut weights, format!("layers.{l}.w_up"), vec![d, f]);
+            add_w(&mut weights, format!("layers.{l}.w_down"), vec![f, d]);
+            add_w(&mut weights, format!("pred.{l}.w"), vec![d, f]);
+            add_w(&mut weights, format!("comp.{l}.alpha"), vec![f]);
+        }
+
+        // --- K grids: every tile multiple up to and including d_ffn ---
+        let k_grid: Vec<usize> =
+            (1..=f / spec.ftile).map(|i| i * spec.ftile).collect();
+        let decode_k = k_grid.clone();
+
+        // --- executable specs for every dispatchable name ---
+        let lay = |role: &str| ArgKind::LayerWeight(role.to_string());
+        let farg = |kind: ArgKind, shape: Vec<usize>| ArgSpec {
+            kind,
+            shape,
+            is_i32: false,
+        };
+        let iarg = |name: &str, shape: Vec<usize>| ArgSpec {
+            kind: ArgKind::Input(name.to_string()),
+            shape,
+            is_i32: true,
+        };
+        let xarg = |name: &str, shape: Vec<usize>| ArgSpec {
+            kind: ArgKind::Input(name.to_string()),
+            shape,
+            is_i32: false,
+        };
+        let attn_weights = |args: &mut Vec<ArgSpec>| {
+            args.push(farg(lay("rms1"), vec![d]));
+            args.push(farg(lay("wq"), vec![d, nh * dh]));
+            args.push(farg(lay("wk"), vec![d, nkv * dh]));
+            args.push(farg(lay("wv"), vec![d, nkv * dh]));
+            args.push(farg(lay("wo"), vec![nh * dh, d]));
+        };
+        let ffn_weights = |args: &mut Vec<ArgSpec>| {
+            args.push(farg(lay("rms2"), vec![d]));
+            args.push(farg(lay("w_gate"), vec![d, f]));
+            args.push(farg(lay("w_up"), vec![d, f]));
+            args.push(farg(lay("w_down"), vec![f, d]));
+        };
+        let layer_inputs = |args: &mut Vec<ArgSpec>, t: usize, s: usize| {
+            args.push(xarg("x", vec![t, d]));
+            args.push(xarg("k_cache", vec![s, nkv, dh]));
+            args.push(xarg("v_cache", vec![s, nkv, dh]));
+            args.push(iarg("pos", vec![]));
+        };
+
+        let mut executables = BTreeMap::new();
+        let mut add_x = |name: String, args: Vec<ArgSpec>| {
+            executables.insert(
+                name.clone(),
+                ExecutableSpec {
+                    file: format!("{name}.hlo"),
+                    name,
+                    args,
+                },
+            );
+        };
+        for t in [spec.block, 1] {
+            add_x(
+                format!("embed_t{t}"),
+                vec![
+                    farg(ArgKind::Weight("embed".into()),
+                         vec![spec.vocab, d]),
+                    iarg("tokens", vec![t]),
+                ],
+            );
+            add_x(
+                format!("lm_head_t{t}"),
+                vec![
+                    farg(ArgKind::Weight("final_rms".into()), vec![d]),
+                    farg(ArgKind::Weight("lm_head".into()),
+                         vec![d, spec.vocab]),
+                    xarg("x", vec![t, d]),
+                ],
+            );
+        }
+        for &s in &spec.buckets {
+            for t in [spec.block, 1] {
+                let mut args = Vec::new();
+                attn_weights(&mut args);
+                ffn_weights(&mut args);
+                layer_inputs(&mut args, t, s);
+                add_x(format!("layer_dense_t{t}_s{s}"), args);
+                for &k in &k_grid {
+                    let mut args = Vec::new();
+                    attn_weights(&mut args);
+                    ffn_weights(&mut args);
+                    args.push(farg(
+                        ArgKind::PredWeight("w".into()),
+                        vec![d, f],
+                    ));
+                    args.push(farg(
+                        ArgKind::CompWeight("alpha".into()),
+                        vec![f],
+                    ));
+                    layer_inputs(&mut args, t, s);
+                    add_x(format!("layer_sparse_k{k}_t{t}_s{s}"), args);
+                }
+            }
+            let mut args = Vec::new();
+            attn_weights(&mut args);
+            layer_inputs(&mut args, spec.block, s);
+            add_x(format!("layer_attn_t{}_s{s}", spec.block), args);
+        }
+        let t = spec.block;
+        add_x(
+            format!("predictor_t{t}"),
+            vec![
+                farg(lay("rms2"), vec![d]),
+                farg(ArgKind::PredWeight("w".into()), vec![d, f]),
+                xarg("h", vec![t, d]),
+            ],
+        );
+        add_x(
+            format!("ffn_acts_t{t}"),
+            vec![
+                farg(lay("rms2"), vec![d]),
+                farg(lay("w_gate"), vec![d, f]),
+                farg(lay("w_up"), vec![d, f]),
+                xarg("h", vec![t, d]),
+            ],
+        );
+        {
+            let mut args = Vec::new();
+            ffn_weights(&mut args);
+            args.push(xarg("h", vec![t, d]));
+            add_x(format!("ffn_dense_t{t}"), args);
+        }
+        for &k in &k_grid {
+            let mut args = Vec::new();
+            ffn_weights(&mut args);
+            args.push(farg(ArgKind::CompWeight("alpha".into()), vec![f]));
+            args.push(xarg("h", vec![t, d]));
+            args.push(iarg("idx", vec![k]));
+            add_x(format!("ffn_sparse_ext_k{k}_t{t}"), args);
+        }
+
+        // --- calibrated schedule via the Algorithm-1 twin ---
+        let masses: Vec<f64> = (0..spec.n_layers)
+            .map(|l| 1.0 / (1.0 + 0.35 * l as f64))
+            .collect();
+        let mut budgets = BTreeMap::new();
+        for sp in [0.3f64, 0.4, 0.5] {
+            let dens = layerwise_schedule(&masses, 1.0 - sp);
+            let layer_k = quantize_densities(&dens, f, spec.ftile);
+            let uniform = layerwise_schedule(
+                &vec![1.0; spec.n_layers],
+                1.0 - sp,
+            );
+            let uniform_k = quantize_densities(&uniform, f, spec.ftile);
+            budgets.insert(
+                format!("{sp:.2}"),
+                BudgetSchedule {
+                    sparsity: sp,
+                    layer_densities: dens,
+                    layer_k,
+                    uniform_k,
+                },
+            );
+        }
+
+        Manifest {
+            dir: PathBuf::new(),
+            model: ModelCfg {
+                name: spec.name.clone(),
+                vocab: spec.vocab,
+                d_model: d,
+                n_layers: spec.n_layers,
+                n_heads: nh,
+                n_kv_heads: nkv,
+                d_head: dh,
+                d_ffn: f,
+                block: spec.block,
+                ftile: spec.ftile,
+                max_ctx: spec.max_ctx,
+                buckets: spec.buckets.clone(),
+            },
+            weights_file: PathBuf::new(),
+            weights,
+            executables,
+            k_grid,
+            decode_k,
+            schedule: Schedule {
+                attention_masses: masses,
+                budgets,
+            },
+        }
+    }
+
+    /// Stable 64-bit fingerprint of the model identity (name + every
+    /// dimension that shapes the numerics). Combined with the
+    /// weight-value fingerprint and the backend label in
+    /// [`crate::runtime::Runtime::numeric_fingerprint`] so the prefix
+    /// cache never mixes KV across models, weight sets, or backends.
+    pub fn fingerprint(&self) -> u64 {
+        use crate::util::hash;
+        let mut h = hash::mix(
+            hash::BASIS,
+            hash::fnv1a(self.model.name.as_bytes()),
+        );
+        for v in [
+            self.model.vocab,
+            self.model.d_model,
+            self.model.n_layers,
+            self.model.n_heads,
+            self.model.n_kv_heads,
+            self.model.d_head,
+            self.model.d_ffn,
+            self.model.block,
+            self.model.ftile,
+        ] {
+            h = hash::mix(h, v as u64);
+        }
+        h
+    }
+
     /// Resolve a weight-arg to a concrete weight name for `layer`.
     pub fn resolve_weight_name(&self, kind: &ArgKind, layer: usize) -> Option<String> {
         match kind {
@@ -323,6 +645,93 @@ mod tests {
             assert_eq!(b.layer_k.len(), m.model.n_layers);
             assert!(b.layer_k.iter().all(|&k| k <= m.model.d_ffn));
         }
+    }
+
+    /// The synthetic manifest is self-consistent: every executable the
+    /// engine can name exists, every weight arg resolves into the
+    /// weight table, and the schedule covers the paper's budgets.
+    #[test]
+    fn synthetic_manifest_is_self_consistent() {
+        let spec = SyntheticSpec::default();
+        let m = Manifest::synthetic(&spec);
+        assert_eq!(m.model.d_head * m.model.n_heads, m.model.d_model);
+        assert!(m.weights.contains_key("embed"));
+        assert!(m.weights.contains_key("layers.0.wq"));
+        let block = m.model.block;
+        for name in [
+            format!("embed_t{block}"),
+            "embed_t1".to_string(),
+            format!("lm_head_t{block}"),
+            format!("layer_dense_t{block}_s{}", m.model.buckets[0]),
+            format!("layer_dense_t1_s{}", m.model.buckets[0]),
+            format!(
+                "layer_sparse_k{}_t{block}_s{}",
+                m.k_grid[0], m.model.buckets[0]
+            ),
+            format!("layer_attn_t{block}_s{}", m.model.buckets[0]),
+            format!("predictor_t{block}"),
+            format!("ffn_acts_t{block}"),
+            format!("ffn_dense_t{block}"),
+            format!("ffn_sparse_ext_k{}_t{block}", m.k_grid[0]),
+        ] {
+            assert!(m.executables.contains_key(&name), "{name} missing");
+        }
+        // every weight argument of every executable resolves to a
+        // weight-table entry of the same shape, for every layer
+        for e in m.executables.values() {
+            for a in &e.args {
+                if matches!(a.kind, ArgKind::Input(_)) {
+                    continue;
+                }
+                for l in 0..m.model.n_layers {
+                    let wname =
+                        m.resolve_weight_name(&a.kind, l).unwrap();
+                    let w = m
+                        .weights
+                        .get(&wname)
+                        .unwrap_or_else(|| panic!("{wname} missing"));
+                    assert_eq!(w.shape, a.shape, "{}: {wname}", e.name);
+                }
+            }
+        }
+        // weight offsets are disjoint and 4-byte aligned
+        let mut spans: Vec<(usize, usize)> = m
+            .weights
+            .values()
+            .map(|w| (w.offset, w.offset + w.numel() * 4))
+            .collect();
+        spans.sort_unstable();
+        for pair in spans.windows(2) {
+            assert!(pair[0].1 <= pair[1].0, "overlapping weights");
+        }
+        // the K grid is tiled and the schedule covers the paper budgets
+        assert!(m.k_grid.iter().all(|k| k % m.model.ftile == 0));
+        assert!(m.k_grid.contains(&m.model.d_ffn));
+        for sp in [0.3, 0.4, 0.5] {
+            let b = m.budget(sp).unwrap();
+            assert_eq!(b.layer_k.len(), m.model.n_layers);
+            assert!(b.layer_k.iter().all(|&k| m.k_grid.contains(&k)));
+        }
+        // synthetic bucket selection behaves like the real one
+        assert_eq!(m.bucket_for(1).unwrap(), m.model.buckets[0]);
+        assert!(m.bucket_for(m.model.max_ctx).is_ok());
+        assert!(m.bucket_for(m.model.max_ctx + 1).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_model_identity() {
+        let spec = SyntheticSpec::default();
+        let a = Manifest::synthetic(&spec);
+        let b = Manifest::synthetic(&spec);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let other = SyntheticSpec {
+            d_ffn: 512,
+            ..SyntheticSpec::default()
+        };
+        assert_ne!(
+            a.fingerprint(),
+            Manifest::synthetic(&other).fingerprint()
+        );
     }
 
     #[test]

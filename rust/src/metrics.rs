@@ -110,6 +110,15 @@ impl Metrics {
             .add(ms);
     }
 
+    /// Number of queue-delay samples recorded for a class so far — one
+    /// per first admission (an ejected-and-readmitted request is not
+    /// re-sampled). Monotonically nondecreasing; the randomized
+    /// concurrency suite asserts exactly that.
+    pub fn queue_delay_samples(&self, class: SloClass) -> usize {
+        self.inner.lock().unwrap().queue_delay_ms[Self::class_idx(class)]
+            .len()
+    }
+
     /// Record a batch-class prefill being paused for interactive work.
     pub fn record_preemption(&self) {
         self.inner.lock().unwrap().preemptions += 1;

@@ -99,15 +99,57 @@ impl ExecutorPool {
     }
 
     /// Spawn a pool whose workers each load the artifact bundle at
-    /// `dir` — the standard production factory.
+    /// `dir` — the standard production factory (PJRT backend).
     pub fn spawn_from_artifacts(router: Arc<Router>, cfg: BatcherConfig,
                                 dir: std::path::PathBuf) -> ExecutorPool {
+        Self::spawn_backend(router, cfg, crate::runtime::BackendKind::Pjrt,
+                            Some(dir))
+    }
+
+    /// Spawn a pool on an explicit execution backend.
+    ///
+    /// * `Pjrt` + `Some(dir)` — compile the AOT bundle at `dir` (the
+    ///   production path; requires the `pjrt` cargo feature).
+    /// * `Cpu` + `None` — fully self-contained: the deterministic
+    ///   pure-Rust interpreter over the synthetic reference model
+    ///   ([`crate::manifest::SyntheticSpec::default`]).
+    /// * `Cpu` + `Some(dir)` / `Pjrt` + `None` — every replica fails
+    ///   fast with a clear error instead of hanging: the CPU backend
+    ///   cannot execute artifact bundles (their fused low-rank
+    ///   predictor/compensator networks are PJRT-only), and PJRT needs
+    ///   artifacts.
+    pub fn spawn_backend(router: Arc<Router>, cfg: BatcherConfig,
+                         kind: crate::runtime::BackendKind,
+                         dir: Option<std::path::PathBuf>) -> ExecutorPool {
+        use crate::runtime::BackendKind;
         Self::spawn(router, cfg, move || {
             use std::rc::Rc;
-            let manifest = Rc::new(crate::manifest::Manifest::load(&dir)?);
-            let weights = Rc::new(crate::weights::WeightStore::load(&manifest)?);
-            let rt = Rc::new(crate::runtime::Runtime::new(manifest, weights)?);
-            Ok(Engine::new(rt))
+            match (kind, &dir) {
+                (BackendKind::Pjrt, Some(d)) => {
+                    let manifest =
+                        Rc::new(crate::manifest::Manifest::load(d)?);
+                    let weights = Rc::new(
+                        crate::weights::WeightStore::load(&manifest)?,
+                    );
+                    let rt = Rc::new(crate::runtime::Runtime::with_backend(
+                        kind, manifest, weights,
+                    )?);
+                    Ok(Engine::new(rt))
+                }
+                (BackendKind::Cpu, None) => Engine::synthetic_cpu(
+                    &crate::manifest::SyntheticSpec::default(),
+                ),
+                (BackendKind::Cpu, Some(d)) => Err(anyhow!(
+                    "the cpu backend serves the synthetic reference \
+                     model and cannot execute the artifact bundle at \
+                     {d:?} (its fused low-rank predictor/compensator \
+                     networks are PJRT-only); use the pjrt backend"
+                )),
+                (BackendKind::Pjrt, None) => Err(anyhow!(
+                    "the pjrt backend requires an artifact directory \
+                     (run `make artifacts` or pass --artifacts DIR)"
+                )),
+            }
         })
     }
 
@@ -146,6 +188,41 @@ mod tests {
     use crate::metrics::Metrics;
     use crate::router::{LoadEstimator, Response};
     use std::sync::mpsc::channel;
+
+    /// The artifact-free pool path: CPU backend + synthetic manifest
+    /// serves a real generation end to end.
+    #[test]
+    fn cpu_pool_serves_requests_without_artifacts() {
+        let router = Arc::new(Router::new_pooled(
+            8,
+            2048,
+            256,
+            128,
+            Arc::new(Metrics::new()),
+            1,
+            LoadEstimator::new(128),
+            0,
+        ));
+        let (tx, rx) = channel();
+        router
+            .submit(vec![b'a' as i32; 40], 4, SparsityConfig::dense(), tx)
+            .unwrap();
+        let pool = ExecutorPool::spawn_backend(
+            router.clone(),
+            BatcherConfig::default(),
+            crate::runtime::BackendKind::Cpu,
+            None,
+        );
+        let resp = Response::collect_timeout(
+            &rx,
+            std::time::Duration::from_secs(120),
+        )
+        .expect("cpu pool answers");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        router.close();
+        pool.join().unwrap();
+        assert_eq!(router.kv_pool.lock().unwrap().used_pages(), 0);
+    }
 
     #[test]
     fn failed_factory_fails_requests_instead_of_hanging() {

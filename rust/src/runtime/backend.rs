@@ -1,0 +1,104 @@
+//! The execution-backend abstraction behind [`crate::runtime::Runtime`].
+//!
+//! A [`Backend`] turns one manifest executable plus resolved inputs into
+//! host f32 outputs. Two implementations exist:
+//!
+//! * [`crate::runtime::PjrtBackend`] — compiles the AOT HLO-text
+//!   artifacts on the PJRT CPU client and dispatches device buffers
+//!   (the production path; inert without the `pjrt` cargo feature).
+//! * [`crate::runtime::CpuBackend`] — a dependency-free pure-Rust
+//!   interpreter for the small op set the artifact ABI names (embed,
+//!   rmsnorm + attention, gather-indexed sparse FFN, dense FFN,
+//!   lm_head). Deterministic on any machine, which is what un-gates the
+//!   end-to-end numeric test suites in CI.
+//!
+//! The [`crate::runtime::Runtime`] wrapper owns the manifest, performs
+//! ABI-level input validation common to every backend (missing inputs,
+//! shape mismatches), and delegates execution here.
+
+use anyhow::Result;
+
+use crate::manifest::ExecutableSpec;
+
+use super::{DispatchStats, Input, Output};
+
+/// One execution backend: prepares executables and runs dispatches.
+///
+/// Implementations are `!Send` by design (like the engine that drives
+/// them): every executor-pool replica constructs its own backend on its
+/// own thread.
+pub trait Backend {
+    /// Stable backend label ("cpu" / "pjrt"); feeds the runtime's
+    /// numeric fingerprint so KV computed by one backend is never
+    /// adopted by another.
+    fn name(&self) -> &'static str;
+
+    /// Prepare an executable for dispatch (compile it, or validate that
+    /// the interpreter understands it). Idempotent and cached.
+    fn prepare(&self, spec: &ExecutableSpec) -> Result<()>;
+
+    /// Number of distinct executables prepared so far.
+    fn prepared_count(&self) -> usize;
+
+    /// Execute `spec` for transformer layer `layer` over ABI-validated
+    /// inputs, returning the decomposed output tuple as host f32
+    /// tensors.
+    fn execute(&self, spec: &ExecutableSpec, layer: usize,
+               inputs: &[(&str, Input<'_>)]) -> Result<Vec<Output>>;
+
+    /// Snapshot of cumulative dispatch statistics.
+    fn stats(&self) -> DispatchStats;
+}
+
+/// Which [`Backend`] implementation a [`crate::runtime::Runtime`] uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust deterministic interpreter over the synthetic
+    /// reference model (synthetic manifest + seeded weights; artifact
+    /// bundles are PJRT-only).
+    Cpu,
+    /// PJRT over AOT HLO artifacts (requires the `pjrt` cargo feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Parse a CLI string ("cpu" / "pjrt").
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "cpu" => Some(BackendKind::Cpu),
+            "pjrt" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// Stable label, the inverse of [`BackendKind::parse`].
+    pub fn label(self) -> &'static str {
+        match self {
+            BackendKind::Cpu => "cpu",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// The default backend for this build: `pjrt` when the feature is
+    /// compiled in, `cpu` otherwise.
+    pub fn default_for_build() -> BackendKind {
+        if cfg!(feature = "pjrt") {
+            BackendKind::Pjrt
+        } else {
+            BackendKind::Cpu
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [BackendKind::Cpu, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("tpu"), None);
+    }
+}

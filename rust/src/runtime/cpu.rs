@@ -1,0 +1,684 @@
+//! Pure-Rust reference backend: a dependency-free, deterministic
+//! interpreter for the small op set the artifact ABI names.
+//!
+//! Every executable the engine can dispatch —
+//!
+//! * `embed_t{T}` / `lm_head_t{T}` — token embedding and LM head,
+//! * `layer_dense_t{T}_s{S}` — RMSNorm → GQA causal attention (RoPE) →
+//!   RMSNorm → dense SwiGLU FFN, with residual adds,
+//! * `layer_sparse_k{K}_t{T}_s{S}` — the fused sparse layer: predictor
+//!   scores → host top-K → gather-indexed sparse FFN → compensator,
+//! * `layer_attn_t{T}_s{S}` / `predictor_t{T}` / `ffn_acts_t{T}` /
+//!   `ffn_dense_t{T}` / `ffn_sparse_ext_k{K}_t{T}` — the split ablation
+//!   pipeline
+//!
+//! — is interpreted directly over the [`WeightStore`], with no PJRT, no
+//! artifacts on disk, and no floating-point reordering: plain sequential
+//! f32 accumulation, so two runs of the same trace produce **byte-
+//! identical** logits. That determinism is the foundation of the
+//! always-on numeric test tier (see docs/TESTING.md).
+//!
+//! Reference-semantics notes:
+//!
+//! * The sparse FFN iterates its (ascending) expert indices with the
+//!   same accumulation loop as the dense FFN, so `K == d_ffn` sparse
+//!   output is *bit-identical* to dense output — the strongest form of
+//!   the paper's "sparsity is exact at full K" sanity invariant.
+//! * The compensator is modeled as a per-layer learned gate `alpha`
+//!   applied to the *dropped* neurons' true contributions: zero when
+//!   nothing is dropped, and (with seeded `alpha` strictly inside
+//!   (0, 1)) it strictly shrinks the sparse FFN error — both properties
+//!   hold by construction and are asserted by the test suite. The AOT
+//!   compensator is a trained low-rank net; the reference keeps its
+//!   *contract* in an exactly-testable form.
+
+#![allow(clippy::needless_range_loop)]
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::{ExecutableSpec, Manifest};
+use crate::sparsity::masks::top_k_indices;
+use crate::weights::WeightStore;
+
+use super::backend::Backend;
+use super::{DispatchStats, Input, Output};
+
+/// RMSNorm epsilon (matches python/compile's model).
+const RMS_EPS: f32 = 1e-5;
+/// RoPE base frequency.
+const ROPE_THETA: f64 = 10000.0;
+
+/// One parsed executable name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Op {
+    Embed { t: usize },
+    LmHead { t: usize },
+    LayerDense { t: usize, s: usize },
+    LayerSparse { k: usize, t: usize, s: usize },
+    LayerAttn { t: usize, s: usize },
+    Predictor { t: usize },
+    FfnActs { t: usize },
+    FfnDense { t: usize },
+    FfnSparseExt { k: usize, t: usize },
+}
+
+/// Split `name` into its base and its `t`/`s`/`k` parameters
+/// (`layer_sparse_k64_t128_s512` → ("layer_sparse", k=64, t=128, s=512)).
+fn parse_name(name: &str) -> Option<(String, [Option<usize>; 3])> {
+    let mut base: Vec<&str> = Vec::new();
+    let mut tsk: [Option<usize>; 3] = [None, None, None];
+    for seg in name.split('_') {
+        let mut chars = seg.chars();
+        let head = chars.next()?;
+        let rest: &str = &seg[head.len_utf8()..];
+        let slot = match head {
+            't' => 0,
+            's' => 1,
+            'k' => 2,
+            _ => 3,
+        };
+        if slot < 3
+            && !rest.is_empty()
+            && rest.bytes().all(|b| b.is_ascii_digit())
+        {
+            tsk[slot] = rest.parse().ok();
+        } else {
+            base.push(seg);
+        }
+    }
+    Some((base.join("_"), tsk))
+}
+
+fn parse_op(name: &str) -> Result<Op> {
+    let (base, [t, s, k]) =
+        parse_name(name).ok_or_else(|| anyhow!("bad exe name {name}"))?;
+    let need = |v: Option<usize>, what: &str| {
+        v.ok_or_else(|| anyhow!("{name}: missing {what} parameter"))
+    };
+    Ok(match base.as_str() {
+        "embed" => Op::Embed { t: need(t, "t")? },
+        "lm_head" => Op::LmHead { t: need(t, "t")? },
+        "layer_dense" => Op::LayerDense {
+            t: need(t, "t")?,
+            s: need(s, "s")?,
+        },
+        "layer_sparse" => Op::LayerSparse {
+            k: need(k, "k")?,
+            t: need(t, "t")?,
+            s: need(s, "s")?,
+        },
+        "layer_attn" => Op::LayerAttn {
+            t: need(t, "t")?,
+            s: need(s, "s")?,
+        },
+        "predictor" => Op::Predictor { t: need(t, "t")? },
+        "ffn_acts" => Op::FfnActs { t: need(t, "t")? },
+        "ffn_dense" => Op::FfnDense { t: need(t, "t")? },
+        "ffn_sparse_ext" => Op::FfnSparseExt {
+            k: need(k, "k")?,
+            t: need(t, "t")?,
+        },
+        other => {
+            return Err(anyhow!("cpu backend: unknown executable {other}"))
+        }
+    })
+}
+
+fn f32_input<'a>(inputs: &[(&str, Input<'a>)], exe: &str, name: &str)
+                 -> Result<&'a [f32]> {
+    for (n, v) in inputs {
+        if *n == name {
+            if let Input::F32(d, _) = v {
+                return Ok(*d);
+            }
+            return Err(anyhow!("{exe}: input '{name}' must be f32"));
+        }
+    }
+    Err(anyhow!("{exe}: missing input '{name}'"))
+}
+
+fn i32_input<'a>(inputs: &[(&str, Input<'a>)], exe: &str, name: &str)
+                 -> Result<&'a [i32]> {
+    for (n, v) in inputs {
+        if *n == name {
+            if let Input::I32(d, _) = v {
+                return Ok(*d);
+            }
+            return Err(anyhow!("{exe}: input '{name}' must be i32"));
+        }
+    }
+    Err(anyhow!("{exe}: missing input '{name}'"))
+}
+
+/// Row-wise RMSNorm: `y[r,c] = x[r,c] * inv_rms(row r) * gain[c]`.
+fn rmsnorm_rows(x: &[f32], gain: &[f32], t: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; t * d];
+    for r in 0..t {
+        let row = &x[r * d..(r + 1) * d];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        for c in 0..d {
+            out[r * d + c] = row[c] * inv * gain[c];
+        }
+    }
+    out
+}
+
+/// `x [t, m] @ w [m, n] -> [t, n]`, plain sequential accumulation.
+fn matmul(x: &[f32], w: &[f32], t: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), t * m);
+    debug_assert_eq!(w.len(), m * n);
+    let mut out = vec![0.0f32; t * n];
+    for r in 0..t {
+        let xr = &x[r * m..(r + 1) * m];
+        let or = &mut out[r * n..(r + 1) * n];
+        for (i, &xv) in xr.iter().enumerate() {
+            let wr = &w[i * n..(i + 1) * n];
+            for (o, &wv) in or.iter_mut().zip(wr.iter()) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Element-wise `a + b`.
+fn add(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(x, y)| x + y).collect()
+}
+
+fn add_assign(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b.iter()) {
+        *x += y;
+    }
+}
+
+fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+/// Rotary position embedding applied in place to one `[heads * dh]` row
+/// at absolute position `p`.
+fn rope_row(row: &mut [f32], heads: usize, dh: usize, p: usize) {
+    for h in 0..heads {
+        let base = h * dh;
+        for i in 0..dh / 2 {
+            let freq =
+                1.0 / ROPE_THETA.powf(2.0 * i as f64 / dh as f64);
+            let angle = p as f64 * freq;
+            let (sin, cos) = angle.sin_cos();
+            let a = row[base + 2 * i] as f64;
+            let b = row[base + 2 * i + 1] as f64;
+            row[base + 2 * i] = (a * cos - b * sin) as f32;
+            row[base + 2 * i + 1] = (a * sin + b * cos) as f32;
+        }
+    }
+}
+
+/// Expert indices *not* selected, ascending (the compensator's domain).
+fn complement(idx: &[i32], f: usize) -> Vec<i32> {
+    let mut present = vec![false; f];
+    for &ji in idx {
+        if ji >= 0 && (ji as usize) < f {
+            present[ji as usize] = true;
+        }
+    }
+    (0..f as i32)
+        .filter(|&j| !present[j as usize])
+        .collect()
+}
+
+/// The pure-Rust deterministic backend. See the module docs for the
+/// op-set and reference-semantics contract.
+pub struct CpuBackend {
+    manifest: Rc<Manifest>,
+    weights: Rc<WeightStore>,
+    /// Parsed-op cache (name → [`Op`]): names parse once, and the map
+    /// doubles as the "prepared executables" set.
+    ops: RefCell<HashMap<String, Op>>,
+    stats: RefCell<DispatchStats>,
+}
+
+impl CpuBackend {
+    /// Build the interpreter over a manifest + weight store — in
+    /// practice [`Manifest::synthetic`] +
+    /// [`WeightStore::seeded`]. Validates that the weight table
+    /// follows the reference naming convention the interpreter
+    /// dispatches against (AOT artifact bundles do *not*: their fused
+    /// low-rank predictor/compensator networks are PJRT-only, and
+    /// construction fails fast here with a clear error).
+    pub fn new(manifest: Rc<Manifest>, weights: Rc<WeightStore>)
+               -> Result<Self> {
+        for name in ["embed", "final_rms", "lm_head", "layers.0.wq",
+                     "layers.0.rms1"] {
+            weights.get(name).map_err(|_| {
+                anyhow!(
+                    "cpu backend: weight table missing '{name}' — the \
+                     interpreter requires the ff weight naming convention"
+                )
+            })?;
+        }
+        Ok(CpuBackend {
+            manifest,
+            weights,
+            ops: RefCell::new(HashMap::new()),
+            stats: RefCell::new(DispatchStats::default()),
+        })
+    }
+
+    /// Parse (and cache) the op an executable name denotes. Steady-state
+    /// dispatch is a single map lookup — no re-parse, no allocation.
+    fn op_for(&self, name: &str) -> Result<Op> {
+        if let Some(op) = self.ops.borrow().get(name) {
+            return Ok(*op);
+        }
+        let op = parse_op(name)?;
+        self.ops.borrow_mut().insert(name.to_string(), op);
+        Ok(op)
+    }
+
+    /// Fetch a weight slice, validating its element count.
+    fn w(&self, name: &str, expect: usize) -> Result<&[f32]> {
+        let data = self.weights.get(name)?;
+        anyhow::ensure!(
+            data.len() == expect,
+            "weight {name}: {} elements, interpreter expects {expect}",
+            data.len()
+        );
+        Ok(data)
+    }
+
+    fn lw(&self, l: usize, role: &str, expect: usize) -> Result<&[f32]> {
+        self.w(&format!("layers.{l}.{role}"), expect)
+    }
+
+    /// RMSNorm(x, rms1) → QKV (+ RoPE) → causal GQA attention → output
+    /// projection → residual. Returns `(h, k_new, v_new)` where `h` is
+    /// the post-attention residual stream `x + attn_out @ wo`.
+    #[allow(clippy::too_many_arguments)]
+    fn attention_block(&self, l: usize, x: &[f32], t: usize, s: usize,
+                       pos: usize, k_cache: &[f32], v_cache: &[f32])
+                       -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let m = &self.manifest.model;
+        let (d, nh, nkv, dh) =
+            (m.d_model, m.n_heads, m.n_kv_heads, m.d_head);
+        anyhow::ensure!(nh % nkv == 0, "n_heads must be divisible by n_kv");
+        anyhow::ensure!(
+            pos + t <= s,
+            "attention: pos {pos} + t {t} exceeds bucket {s}"
+        );
+        let group = nh / nkv;
+
+        let h1 = rmsnorm_rows(x, self.lw(l, "rms1", d)?, t, d);
+        let mut q = matmul(&h1, self.lw(l, "wq", d * nh * dh)?, t, d,
+                           nh * dh);
+        let mut k_new =
+            matmul(&h1, self.lw(l, "wk", d * nkv * dh)?, t, d, nkv * dh);
+        let v_new =
+            matmul(&h1, self.lw(l, "wv", d * nkv * dh)?, t, d, nkv * dh);
+        for r in 0..t {
+            rope_row(&mut q[r * nh * dh..(r + 1) * nh * dh], nh, dh,
+                     pos + r);
+            rope_row(&mut k_new[r * nkv * dh..(r + 1) * nkv * dh], nkv, dh,
+                     pos + r);
+        }
+
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut attn = vec![0.0f32; t * nh * dh];
+        let mut scores: Vec<f32> = Vec::new();
+        for r in 0..t {
+            let p = pos + r; // absolute position of this query
+            for h in 0..nh {
+                let g = h / group; // the KV head this query head reads
+                let qv = &q[(r * nh + h) * dh..(r * nh + h + 1) * dh];
+                scores.clear();
+                let mut max = f32::NEG_INFINITY;
+                for j in 0..=p {
+                    let kv = if j < pos {
+                        &k_cache[(j * nkv + g) * dh..(j * nkv + g + 1) * dh]
+                    } else {
+                        let jr = j - pos;
+                        &k_new[(jr * nkv + g) * dh..(jr * nkv + g + 1) * dh]
+                    };
+                    let dot: f32 =
+                        qv.iter().zip(kv.iter()).map(|(a, b)| a * b).sum();
+                    let sc = dot * scale;
+                    max = max.max(sc);
+                    scores.push(sc);
+                }
+                let mut denom = 0.0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - max).exp();
+                    denom += *sc;
+                }
+                let out =
+                    &mut attn[(r * nh + h) * dh..(r * nh + h + 1) * dh];
+                for (j, &wgt) in scores.iter().enumerate() {
+                    let vv = if j < pos {
+                        &v_cache[(j * nkv + g) * dh..(j * nkv + g + 1) * dh]
+                    } else {
+                        let jr = j - pos;
+                        &v_new[(jr * nkv + g) * dh..(jr * nkv + g + 1) * dh]
+                    };
+                    let wn = wgt / denom;
+                    for (o, &v) in out.iter_mut().zip(vv.iter()) {
+                        *o += wn * v;
+                    }
+                }
+            }
+        }
+        let proj = matmul(&attn, self.lw(l, "wo", nh * dh * d)?, t,
+                          nh * dh, d);
+        Ok((add(x, &proj), k_new, v_new))
+    }
+
+    /// SwiGLU activations of the normalized post-attention state:
+    /// `silu(h2 @ w_gate) * (h2 @ w_up)`, shape `[t, d_ffn]`.
+    fn ffn_activations(&self, l: usize, h: &[f32], t: usize)
+                       -> Result<Vec<f32>> {
+        let m = &self.manifest.model;
+        let (d, f) = (m.d_model, m.d_ffn);
+        let h2 = rmsnorm_rows(h, self.lw(l, "rms2", d)?, t, d);
+        let gate = matmul(&h2, self.lw(l, "w_gate", d * f)?, t, d, f);
+        let up = matmul(&h2, self.lw(l, "w_up", d * f)?, t, d, f);
+        Ok(gate
+            .iter()
+            .zip(up.iter())
+            .map(|(&g, &u)| silu(g) * u)
+            .collect())
+    }
+
+    /// Down-projection restricted to the experts in `idx` (ascending),
+    /// optionally gated per neuron by `alpha`:
+    /// `y[r] = Σ_{j ∈ idx} alpha[j] * acts[r,j] * w_down[j]`.
+    ///
+    /// The dense FFN calls this with `idx == [0, d_ffn)` so the sparse
+    /// and dense paths share one accumulation order — that is what makes
+    /// `K == d_ffn` sparse output bit-identical to dense output.
+    fn down_proj(&self, l: usize, acts: &[f32], t: usize, idx: &[i32],
+                 alpha: Option<&[f32]>) -> Result<Vec<f32>> {
+        let m = &self.manifest.model;
+        let (d, f) = (m.d_model, m.d_ffn);
+        let w_down = self.lw(l, "w_down", f * d)?;
+        for &ji in idx {
+            anyhow::ensure!(
+                ji >= 0 && (ji as usize) < f,
+                "expert index {ji} out of range [0, {f})"
+            );
+        }
+        let mut out = vec![0.0f32; t * d];
+        for r in 0..t {
+            for &ji in idx {
+                let j = ji as usize;
+                let a = acts[r * f + j]
+                    * alpha.map_or(1.0, |al| al[j]);
+                let wr = &w_down[j * d..(j + 1) * d];
+                let or = &mut out[r * d..(r + 1) * d];
+                for (o, &wv) in or.iter_mut().zip(wr.iter()) {
+                    *o += a * wv;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Block-aggregated predictor scores `[d_ffn]` (the trained expert
+    /// predictor's output the engine top-Ks on the host).
+    fn predictor_scores(&self, l: usize, h: &[f32], t: usize)
+                        -> Result<Vec<f32>> {
+        let m = &self.manifest.model;
+        let (d, f) = (m.d_model, m.d_ffn);
+        let h2 = rmsnorm_rows(h, self.lw(l, "rms2", d)?, t, d);
+        let p = matmul(&h2, self.w(&format!("pred.{l}.w"), d * f)?, t, d, f);
+        let mut scores = vec![0.0f32; f];
+        for r in 0..t {
+            for j in 0..f {
+                scores[j] += p[r * f + j].abs();
+            }
+        }
+        Ok(scores)
+    }
+
+    /// Block-aggregated |activation| scores `[d_ffn]` (the GRIFFIN-style
+    /// oracle statistic used by the ablation sources).
+    fn activation_scores(&self, l: usize, h: &[f32], t: usize)
+                         -> Result<Vec<f32>> {
+        let f = self.manifest.model.d_ffn;
+        let acts = self.ffn_activations(l, h, t)?;
+        let mut scores = vec![0.0f32; f];
+        for r in 0..t {
+            for j in 0..f {
+                scores[j] += acts[r * f + j].abs();
+            }
+        }
+        Ok(scores)
+    }
+
+    fn alpha(&self, l: usize) -> Result<&[f32]> {
+        self.w(&format!("comp.{l}.alpha"), self.manifest.model.d_ffn)
+    }
+
+    fn run_op(&self, op: Op, spec: &ExecutableSpec, layer: usize,
+              inputs: &[(&str, Input<'_>)]) -> Result<Vec<Output>> {
+        let m = &self.manifest.model;
+        let (d, f, vocab) = (m.d_model, m.d_ffn, m.vocab);
+        let exe = spec.name.as_str();
+        match op {
+            Op::Embed { t } => {
+                let tokens = i32_input(inputs, exe, "tokens")?;
+                anyhow::ensure!(tokens.len() == t, "{exe}: token count");
+                let table = self.w("embed", vocab * d)?;
+                let mut out = vec![0.0f32; t * d];
+                for (r, &tok) in tokens.iter().enumerate() {
+                    let id = (tok.max(0) as usize).min(vocab - 1);
+                    out[r * d..(r + 1) * d]
+                        .copy_from_slice(&table[id * d..(id + 1) * d]);
+                }
+                Ok(vec![Output { data: out }])
+            }
+            Op::LmHead { t } => {
+                let x = f32_input(inputs, exe, "x")?;
+                let xr = rmsnorm_rows(x, self.w("final_rms", d)?, t, d);
+                let logits =
+                    matmul(&xr, self.w("lm_head", d * vocab)?, t, d, vocab);
+                Ok(vec![Output { data: logits }])
+            }
+            Op::LayerDense { t, s } => {
+                let x = f32_input(inputs, exe, "x")?;
+                let kc = f32_input(inputs, exe, "k_cache")?;
+                let vc = f32_input(inputs, exe, "v_cache")?;
+                let pos = i32_input(inputs, exe, "pos")?[0] as usize;
+                let (h, k_new, v_new) =
+                    self.attention_block(layer, x, t, s, pos, kc, vc)?;
+                let acts = self.ffn_activations(layer, &h, t)?;
+                let all: Vec<i32> = (0..f as i32).collect();
+                let y = self.down_proj(layer, &acts, t, &all, None)?;
+                Ok(vec![
+                    Output { data: add(&h, &y) },
+                    Output { data: k_new },
+                    Output { data: v_new },
+                ])
+            }
+            Op::LayerSparse { k, t, s } => {
+                let x = f32_input(inputs, exe, "x")?;
+                let kc = f32_input(inputs, exe, "k_cache")?;
+                let vc = f32_input(inputs, exe, "v_cache")?;
+                let pos = i32_input(inputs, exe, "pos")?[0] as usize;
+                let (h, k_new, v_new) =
+                    self.attention_block(layer, x, t, s, pos, kc, vc)?;
+                let scores = self.predictor_scores(layer, &h, t)?;
+                let idx = top_k_indices(&scores, k.min(f));
+                let acts = self.ffn_activations(layer, &h, t)?;
+                let y = self.down_proj(layer, &acts, t, &idx, None)?;
+                let comp = self.down_proj(
+                    layer,
+                    &acts,
+                    t,
+                    &complement(&idx, f),
+                    Some(self.alpha(layer)?),
+                )?;
+                let mut out = add(&h, &y);
+                add_assign(&mut out, &comp);
+                Ok(vec![
+                    Output { data: out },
+                    Output { data: k_new },
+                    Output { data: v_new },
+                ])
+            }
+            Op::LayerAttn { t, s } => {
+                let x = f32_input(inputs, exe, "x")?;
+                let kc = f32_input(inputs, exe, "k_cache")?;
+                let vc = f32_input(inputs, exe, "v_cache")?;
+                let pos = i32_input(inputs, exe, "pos")?[0] as usize;
+                let (h, k_new, v_new) =
+                    self.attention_block(layer, x, t, s, pos, kc, vc)?;
+                Ok(vec![
+                    Output { data: h },
+                    Output { data: k_new },
+                    Output { data: v_new },
+                ])
+            }
+            Op::Predictor { t } => {
+                let h = f32_input(inputs, exe, "h")?;
+                let scores = self.predictor_scores(layer, h, t)?;
+                Ok(vec![Output { data: scores }])
+            }
+            Op::FfnActs { t } => {
+                let h = f32_input(inputs, exe, "h")?;
+                let scores = self.activation_scores(layer, h, t)?;
+                Ok(vec![Output { data: scores }])
+            }
+            Op::FfnDense { t } => {
+                let h = f32_input(inputs, exe, "h")?;
+                let acts = self.ffn_activations(layer, h, t)?;
+                let all: Vec<i32> = (0..f as i32).collect();
+                let y = self.down_proj(layer, &acts, t, &all, None)?;
+                Ok(vec![Output { data: add(h, &y) }])
+            }
+            Op::FfnSparseExt { k, t } => {
+                let h = f32_input(inputs, exe, "h")?;
+                let idx = i32_input(inputs, exe, "idx")?;
+                anyhow::ensure!(
+                    idx.len() == k,
+                    "{exe}: idx has {} entries, compiled K is {k}",
+                    idx.len()
+                );
+                let acts = self.ffn_activations(layer, h, t)?;
+                let y = self.down_proj(layer, &acts, t, idx, None)?;
+                let comp = self.down_proj(
+                    layer,
+                    &acts,
+                    t,
+                    &complement(idx, f),
+                    Some(self.alpha(layer)?),
+                )?;
+                Ok(vec![Output { data: add(h, &y) }, Output { data: comp }])
+            }
+        }
+    }
+}
+
+impl Backend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn prepare(&self, spec: &ExecutableSpec) -> Result<()> {
+        self.op_for(&spec.name).map(|_| ())
+    }
+
+    fn prepared_count(&self) -> usize {
+        self.ops.borrow().len()
+    }
+
+    fn execute(&self, spec: &ExecutableSpec, layer: usize,
+               inputs: &[(&str, Input<'_>)]) -> Result<Vec<Output>> {
+        let op = self.op_for(&spec.name)?;
+        let t0 = Instant::now();
+        let out = self.run_op(op, spec, layer, inputs)?;
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_time += t0.elapsed();
+        Ok(out)
+    }
+
+    fn stats(&self) -> DispatchStats {
+        self.stats.borrow().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_parsing() {
+        assert_eq!(parse_op("embed_t128").unwrap(), Op::Embed { t: 128 });
+        assert_eq!(parse_op("lm_head_t1").unwrap(), Op::LmHead { t: 1 });
+        assert_eq!(
+            parse_op("layer_dense_t128_s512").unwrap(),
+            Op::LayerDense { t: 128, s: 512 }
+        );
+        assert_eq!(
+            parse_op("layer_sparse_k64_t1_s256").unwrap(),
+            Op::LayerSparse { k: 64, t: 1, s: 256 }
+        );
+        assert_eq!(
+            parse_op("ffn_sparse_ext_k96_t128").unwrap(),
+            Op::FfnSparseExt { k: 96, t: 128 }
+        );
+        assert_eq!(
+            parse_op("ffn_acts_t128").unwrap(),
+            Op::FfnActs { t: 128 }
+        );
+        assert!(parse_op("warp_drive_t4").is_err());
+        assert!(parse_op("layer_dense_t128").is_err(), "missing s");
+    }
+
+    #[test]
+    fn complement_partitions_the_expert_set() {
+        let idx = vec![0, 3, 4];
+        let rest = complement(&idx, 6);
+        assert_eq!(rest, vec![1, 2, 5]);
+        assert_eq!(complement(&[], 3), vec![0, 1, 2]);
+        assert_eq!(complement(&[0, 1, 2], 3), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn matmul_matches_hand_computed() {
+        // [2,3] @ [3,2]
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let w = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let y = matmul(&x, &w, 2, 3, 2);
+        assert_eq!(y, vec![4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_gain_normalizes() {
+        let x = [3.0f32, 4.0, 0.0, 0.0];
+        let gain = [1.0f32; 4];
+        let y = rmsnorm_rows(&x, &gain, 1, 4);
+        let ms: f32 = y.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((ms - 1.0).abs() < 1e-3, "normalized mean square: {ms}");
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut row = vec![1.0f32, 0.0, 0.5, -0.5];
+        let before: f32 = row.iter().map(|v| v * v).sum();
+        rope_row(&mut row, 1, 4, 37);
+        let after: f32 = row.iter().map(|v| v * v).sum();
+        assert!((before - after).abs() < 1e-5);
+        // position 0 is the identity rotation
+        let mut row0 = vec![1.0f32, 2.0, 3.0, 4.0];
+        rope_row(&mut row0, 1, 4, 0);
+        assert_eq!(row0, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

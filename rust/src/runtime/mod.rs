@@ -1,26 +1,36 @@
-//! PJRT runtime: loads AOT HLO-text artifacts, compiles them on the CPU
-//! PJRT client (lazily, cached), keeps every model weight resident as a
-//! device buffer, and dispatches executions with manifest-driven argument
-//! resolution (the per-layer weight substitution of the artifact ABI).
+//! Runtime dispatch: executable lookup, ABI input validation, and
+//! execution through a pluggable [`Backend`].
 //!
-//! Interchange gotcha (see /opt/xla-example/README.md): artifacts are HLO
-//! *text*; `HloModuleProto::from_text_file` reassigns instruction ids,
-//! which is what makes jax≥0.5 output loadable on xla_extension 0.5.1.
+//! The [`Runtime`] owns the manifest (the ABI contract) and delegates
+//! actual execution to one of two backends:
+//!
+//! * [`PjrtBackend`] — compiles the AOT HLO-text artifacts on the PJRT
+//!   CPU client (the production path; an inert stub without the `pjrt`
+//!   cargo feature, see [`crate::xla_stub`]).
+//! * [`CpuBackend`] — a pure-Rust deterministic interpreter over the
+//!   [`crate::weights::WeightStore`], which needs no artifacts at all
+//!   when paired with [`crate::manifest::Manifest::synthetic`] — this
+//!   is what makes the end-to-end numeric test tier run everywhere
+//!   (docs/TESTING.md).
+//!
+//! Every dispatch validates inputs against the manifest's argument
+//! specs (missing inputs, shape mismatches) *before* reaching the
+//! backend, so both backends fail identically on ABI misuse.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
+mod backend;
+mod cpu;
+mod pjrt;
+
+pub use backend::{Backend, BackendKind};
+pub use cpu::CpuBackend;
+pub use pjrt::PjrtBackend;
+
 use std::rc::Rc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-// Without the `pjrt` feature the real XLA bindings are replaced by an
-// inert, API-identical stub (see `crate::xla_stub`): the whole crate
-// still typechecks and pure host-side logic stays testable.
-#[cfg(not(feature = "pjrt"))]
-use crate::xla_stub as xla;
-
-use crate::manifest::{ArgKind, Manifest};
+use crate::manifest::Manifest;
 use crate::weights::WeightStore;
 
 /// A runtime input value (host-side view, uploaded per call).
@@ -51,261 +61,173 @@ pub struct Output {
 pub struct DispatchStats {
     /// Total executable invocations.
     pub executions: u64,
-    /// Time spent compiling executables (first use only, cached after).
+    /// Time spent compiling executables (first use only, cached after;
+    /// zero for the interpreter backend).
     pub compile_time: Duration,
-    /// Time uploading input buffers.
+    /// Time uploading input buffers (zero for the interpreter backend).
     pub upload_time: Duration,
     /// Time inside executions.
     pub execute_time: Duration,
-    /// Time downloading output tuples.
+    /// Time downloading output tuples (zero for the interpreter).
     pub download_time: Duration,
 }
 
-/// Pre-resolved argument slot for one (executable, layer) pair: weight
-/// slots hold the device buffer directly; input slots remember which
-/// ABI arg they validate against.
-enum PlanArg {
-    Weight(Rc<xla::PjRtBuffer>),
-    Input { name: String, arg_idx: usize },
-}
-
-/// The PJRT dispatcher: compiled-executable cache, device-resident
-/// weights, per-(executable, layer) dispatch plans and timing stats.
-/// `!Send` by design — each executor replica owns one.
+/// Manifest-driven dispatcher bound to one [`Backend`]. `!Send` by
+/// design — each executor replica owns one.
 pub struct Runtime {
-    client: xla::PjRtClient,
     /// The artifact manifest driving argument resolution.
     pub manifest: Rc<Manifest>,
-    weights: Rc<WeightStore>,
-    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    wbufs: RefCell<HashMap<String, Rc<xla::PjRtBuffer>>>,
-    plans: RefCell<HashMap<(String, usize), Rc<Vec<PlanArg>>>>,
-    stats: RefCell<DispatchStats>,
+    backend: Box<dyn Backend>,
+    /// Combined numeric identity (manifest ⊕ weight values ⊕ backend),
+    /// computed once at construction.
+    numeric_fp: u64,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client over loaded artifacts. Fails when built
-    /// without the `pjrt` feature (see [`crate::xla_stub`]).
-    pub fn new(manifest: Rc<Manifest>, weights: Rc<WeightStore>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+    /// PJRT runtime over loaded artifacts (the historical constructor).
+    /// Fails when built without the `pjrt` feature.
+    pub fn new(manifest: Rc<Manifest>, weights: Rc<WeightStore>)
+               -> Result<Self> {
+        Self::with_backend(BackendKind::Pjrt, manifest, weights)
+    }
+
+    /// Pure-Rust deterministic runtime — works in every build; pair it
+    /// with [`crate::manifest::Manifest::synthetic`] +
+    /// [`WeightStore::seeded`] (artifact bundles are PJRT-only).
+    pub fn cpu(manifest: Rc<Manifest>, weights: Rc<WeightStore>)
+               -> Result<Self> {
+        Self::with_backend(BackendKind::Cpu, manifest, weights)
+    }
+
+    /// Construct a runtime with an explicit backend choice.
+    pub fn with_backend(kind: BackendKind, manifest: Rc<Manifest>,
+                        weights: Rc<WeightStore>) -> Result<Self> {
+        use crate::util::hash;
+        let fp = hash::mix(
+            hash::mix(manifest.fingerprint(), weights.fingerprint()),
+            hash::fnv1a(kind.label().as_bytes()),
+        );
+        let backend: Box<dyn Backend> = match kind {
+            BackendKind::Cpu => {
+                Box::new(CpuBackend::new(manifest.clone(), weights)?)
+            }
+            BackendKind::Pjrt => {
+                Box::new(PjrtBackend::new(manifest.clone(), weights)?)
+            }
+        };
         Ok(Runtime {
-            client,
             manifest,
-            weights,
-            exes: RefCell::new(HashMap::new()),
-            wbufs: RefCell::new(HashMap::new()),
-            plans: RefCell::new(HashMap::new()),
-            stats: RefCell::new(DispatchStats::default()),
+            backend,
+            numeric_fp: fp,
         })
+    }
+
+    /// The active backend's stable label ("cpu" / "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// 64-bit fingerprint of everything that determines this runtime's
+    /// numerics besides the sparsity configuration: the manifest's
+    /// model identity ([`Manifest::fingerprint`]), the actual weight
+    /// values ([`WeightStore::fingerprint`] — different seeds or
+    /// retrained artifacts never collide), and the backend. Mixed into
+    /// the prefix cache's hash-chain seed (see
+    /// [`crate::engine::Engine::prefix_seed`]) so KV computed by one
+    /// backend, model, or weight set is never adopted by another.
+    pub fn numeric_fingerprint(&self) -> u64 {
+        self.numeric_fp
     }
 
     /// Snapshot of the cumulative dispatch statistics.
     pub fn stats(&self) -> DispatchStats {
-        self.stats.borrow().clone()
+        self.backend.stats()
     }
 
-    /// Compile (or fetch cached) an executable by manifest name.
-    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.exes.borrow().get(name) {
-            return Ok(e.clone());
-        }
-        let spec = self
-            .manifest
-            .executables
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown executable {name}"))?;
-        let path = self.manifest.dir.join(&spec.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
-        self.stats.borrow_mut().compile_time += t0.elapsed();
-        let exe = Rc::new(exe);
-        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Pre-compile a set of executables (startup warmup).
+    /// Pre-prepare a set of executables (startup warmup: compilation on
+    /// PJRT, name validation on the interpreter).
     pub fn warm(&self, names: &[&str]) -> Result<()> {
         for n in names {
-            self.executable(n)?;
+            let spec = self
+                .manifest
+                .executables
+                .get(*n)
+                .ok_or_else(|| anyhow!("unknown executable {n}"))?;
+            self.backend.prepare(spec)?;
         }
         Ok(())
     }
 
-    /// Number of executables compiled so far.
+    /// Number of distinct executables prepared/compiled so far.
     pub fn compiled_count(&self) -> usize {
-        self.exes.borrow().len()
-    }
-
-    /// Device-resident weight buffer (uploaded once, cached).
-    fn weight_buffer(&self, name: &str) -> Result<Rc<xla::PjRtBuffer>> {
-        if let Some(b) = self.wbufs.borrow().get(name) {
-            return Ok(b.clone());
-        }
-        let data = self.weights.get(name)?;
-        let dims = self.weights.shape(name)?.to_vec();
-        let buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(data, &dims, None)
-            .map_err(|e| anyhow!("uploading weight {name}: {e}"))?;
-        let buf = Rc::new(buf);
-        self.wbufs
-            .borrow_mut()
-            .insert(name.to_string(), buf.clone());
-        Ok(buf)
-    }
-
-    /// Build (or fetch) the cached dispatch plan for (exe, layer).
-    fn plan(&self, exe_name: &str, layer: usize)
-            -> Result<Rc<Vec<PlanArg>>> {
-        let key = (exe_name.to_string(), layer);
-        if let Some(p) = self.plans.borrow().get(&key) {
-            return Ok(p.clone());
-        }
-        let spec = self
-            .manifest
-            .executables
-            .get(exe_name)
-            .ok_or_else(|| anyhow!("unknown executable {exe_name}"))?;
-        let mut plan = Vec::with_capacity(spec.args.len());
-        for (arg_idx, arg) in spec.args.iter().enumerate() {
-            match &arg.kind {
-                ArgKind::Input(name) => plan.push(PlanArg::Input {
-                    name: name.clone(),
-                    arg_idx,
-                }),
-                kind => {
-                    let wname = self
-                        .manifest
-                        .resolve_weight_name(kind, layer)
-                        .unwrap();
-                    plan.push(PlanArg::Weight(self.weight_buffer(&wname)?));
-                }
-            }
-        }
-        let plan = Rc::new(plan);
-        self.plans.borrow_mut().insert(key, plan.clone());
-        Ok(plan)
-    }
-
-    fn upload(&self, input: &Input) -> Result<xla::PjRtBuffer> {
-        let r = match input {
-            Input::F32(data, dims) => {
-                self.client.buffer_from_host_buffer::<f32>(data, dims, None)
-            }
-            Input::I32(data, dims) => {
-                self.client.buffer_from_host_buffer::<i32>(data, dims, None)
-            }
-        };
-        r.map_err(|e| anyhow!("uploading input: {e}"))
+        self.backend.prepared_count()
     }
 
     /// Execute `exe_name` for transformer layer `layer` (ignored by
-    /// layer-independent entry points). `inputs` are matched by ABI name;
-    /// weight arguments resolve through the manifest + weight store.
+    /// layer-independent entry points). `inputs` are matched by ABI name
+    /// and shape-checked against the manifest spec; weight arguments
+    /// resolve through the manifest + weight store inside the backend.
     /// Returns the decomposed output tuple as host f32 tensors.
     pub fn run(&self, exe_name: &str, layer: usize,
                inputs: &[(&str, Input)]) -> Result<Vec<Output>> {
-        // Perf (EXPERIMENTS.md §Perf, L3 iters 1+2): the per-(executable,
-        // layer) dispatch plan — weight-name resolution, weight-buffer
-        // lookup, spec clone — is computed once and cached; steady-state
-        // dispatch only uploads the true inputs.
         let manifest = self.manifest.clone();
-        let plan = self.plan(exe_name, layer)?;
         let spec = manifest
             .executables
             .get(exe_name)
             .ok_or_else(|| anyhow!("unknown executable {exe_name}"))?;
-        let exe = self.executable(exe_name)?;
-
-        let t0 = Instant::now();
-        let mut owned: Vec<(usize, xla::PjRtBuffer)> = Vec::new();
-        for (slot, pa) in plan.iter().enumerate() {
-            if let PlanArg::Input { name, arg_idx } = pa {
+        // ABI validation common to every backend: each declared input
+        // must be present with the declared shape.
+        for arg in &spec.args {
+            if let crate::manifest::ArgKind::Input(name) = &arg.kind {
                 let (_, input) = inputs
                     .iter()
                     .find(|(n, _)| n == name)
                     .ok_or_else(|| {
                         anyhow!("{exe_name}: missing input '{name}'")
                     })?;
-                let arg = &spec.args[*arg_idx];
                 anyhow::ensure!(
                     input.dims() == arg.shape.as_slice(),
                     "{exe_name}: input '{name}' shape {:?} != ABI {:?}",
                     input.dims(),
                     arg.shape
                 );
-                owned.push((slot, self.upload(input)?));
+                let got_i32 = matches!(input, Input::I32(..));
+                anyhow::ensure!(
+                    got_i32 == arg.is_i32,
+                    "{exe_name}: input '{name}' dtype {} != ABI {}",
+                    if got_i32 { "i32" } else { "f32" },
+                    if arg.is_i32 { "i32" } else { "f32" }
+                );
             }
         }
-        let mut owned_it = owned.iter().peekable();
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(plan.len());
-        for (slot, pa) in plan.iter().enumerate() {
-            match pa {
-                PlanArg::Weight(b) => args.push(b.as_ref()),
-                PlanArg::Input { .. } => {
-                    let (s, b) = owned_it.next().unwrap();
-                    debug_assert_eq!(*s, slot);
-                    args.push(b);
-                }
-            }
-        }
-        let upload_t = t0.elapsed();
-
-        let t1 = Instant::now();
-        let result = exe
-            .execute_b(&args)
-            .map_err(|e| anyhow!("executing {exe_name}: {e}"))?;
-        let execute_t = t1.elapsed();
-
-        let t2 = Instant::now();
-        let mut lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("downloading {exe_name} output: {e}"))?;
-        let parts = lit
-            .decompose_tuple()
-            .map_err(|e| anyhow!("untupling {exe_name}: {e}"))?;
-        let mut outputs = Vec::with_capacity(parts.len());
-        for p in parts {
-            outputs.push(Output {
-                data: p
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow!("output to_vec: {e}"))?,
-            });
-        }
-        let download_t = t2.elapsed();
-
-        let mut s = self.stats.borrow_mut();
-        s.executions += 1;
-        s.upload_time += upload_t;
-        s.execute_time += execute_t;
-        s.download_time += download_t;
-        Ok(outputs)
+        self.backend.execute(spec, layer, inputs)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::manifest::Manifest;
+    use crate::manifest::{Manifest, SyntheticSpec};
     use crate::weights::WeightStore;
 
-    fn runtime() -> Option<Runtime> {
+    /// Always-available runtime: the deterministic CPU backend over a
+    /// synthetic manifest + seeded weights.
+    fn cpu_runtime() -> Runtime {
+        let spec = SyntheticSpec::default();
+        let m = Rc::new(Manifest::synthetic(&spec));
+        let w = Rc::new(WeightStore::seeded(&m, spec.seed));
+        Runtime::cpu(m, w).unwrap()
+    }
+
+    /// PJRT runtime over real artifacts (None → caller skips).
+    fn pjrt_runtime() -> Option<Runtime> {
         let dir = crate::test_artifacts_dir()?;
         let m = Rc::new(Manifest::load(&dir).unwrap());
         let w = Rc::new(WeightStore::load(&m).unwrap());
         Some(Runtime::new(m, w).unwrap())
     }
 
-    #[test]
-    fn embed_executes() {
-        let Some(rt) = runtime() else { return };
+    fn embed_roundtrip(rt: &Runtime) {
         let block = rt.manifest.model.block;
         let d = rt.manifest.model.d_model;
         let tokens: Vec<i32> = (0..block as i32).map(|i| i % 250).collect();
@@ -322,11 +244,23 @@ mod tests {
     }
 
     #[test]
+    fn embed_executes_cpu() {
+        embed_roundtrip(&cpu_runtime());
+    }
+
+    #[test]
+    fn embed_executes_pjrt() {
+        let Some(rt) = pjrt_runtime() else { return };
+        embed_roundtrip(&rt);
+    }
+
+    #[test]
     fn layer_dense_roundtrip_shapes() {
-        let Some(rt) = runtime() else { return };
+        let rt = cpu_runtime();
         let m = &rt.manifest.model;
         let s = m.buckets[0];
-        let (block, d, nkv, dh) = (m.block, m.d_model, m.n_kv_heads, m.d_head);
+        let (block, d, nkv, dh) =
+            (m.block, m.d_model, m.n_kv_heads, m.d_head);
         let x = vec![0.05f32; block * d];
         let kc = vec![0f32; s * nkv * dh];
         let pos = [0i32];
@@ -351,7 +285,7 @@ mod tests {
 
     #[test]
     fn missing_input_is_reported() {
-        let Some(rt) = runtime() else { return };
+        let rt = cpu_runtime();
         let block = rt.manifest.model.block;
         let err = rt
             .run(&format!("embed_t{block}"), 0, &[])
@@ -362,7 +296,7 @@ mod tests {
 
     #[test]
     fn shape_mismatch_is_reported() {
-        let Some(rt) = runtime() else { return };
+        let rt = cpu_runtime();
         let block = rt.manifest.model.block;
         let tokens = vec![0i32; 3];
         let err = rt
@@ -378,12 +312,63 @@ mod tests {
 
     #[test]
     fn executables_are_cached() {
-        let Some(rt) = runtime() else { return };
+        let rt = cpu_runtime();
         let block = rt.manifest.model.block;
         let name = format!("embed_t{block}");
-        rt.executable(&name).unwrap();
+        rt.warm(&[&name]).unwrap();
         let n = rt.compiled_count();
-        rt.executable(&name).unwrap();
+        rt.warm(&[&name]).unwrap();
         assert_eq!(rt.compiled_count(), n);
+        assert!(rt.warm(&["no_such_exe_t1"]).is_err());
+    }
+
+    #[test]
+    fn backend_fingerprints_differ_per_backend_and_model() {
+        let a = cpu_runtime();
+        assert_eq!(a.backend_name(), "cpu");
+        let b = cpu_runtime();
+        assert_eq!(
+            a.numeric_fingerprint(),
+            b.numeric_fingerprint(),
+            "same model + backend → same fingerprint"
+        );
+        let spec = SyntheticSpec {
+            name: "ff-other".to_string(),
+            ..SyntheticSpec::default()
+        };
+        let m = Rc::new(Manifest::synthetic(&spec));
+        let w = Rc::new(WeightStore::seeded(&m, spec.seed));
+        let c = Runtime::cpu(m, w).unwrap();
+        assert_ne!(
+            a.numeric_fingerprint(),
+            c.numeric_fingerprint(),
+            "different model → different fingerprint"
+        );
+        // same model, different weight *values*: must also differ, or
+        // the prefix cache could adopt KV computed under other weights
+        let spec = SyntheticSpec::default();
+        let m = Rc::new(Manifest::synthetic(&spec));
+        let w = Rc::new(WeightStore::seeded(&m, spec.seed ^ 0xDEAD));
+        let d = Runtime::cpu(m, w).unwrap();
+        assert_ne!(
+            a.numeric_fingerprint(),
+            d.numeric_fingerprint(),
+            "different weights → different fingerprint"
+        );
+    }
+
+    #[test]
+    fn stats_count_executions() {
+        let rt = cpu_runtime();
+        let block = rt.manifest.model.block;
+        let tokens: Vec<i32> = vec![7; block];
+        assert_eq!(rt.stats().executions, 0);
+        rt.run(
+            &format!("embed_t{block}"),
+            0,
+            &[("tokens", Input::I32(&tokens, vec![block]))],
+        )
+        .unwrap();
+        assert_eq!(rt.stats().executions, 1);
     }
 }

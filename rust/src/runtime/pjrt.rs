@@ -1,0 +1,235 @@
+//! PJRT execution backend: loads AOT HLO-text artifacts, compiles them
+//! on the CPU PJRT client (lazily, cached), keeps every model weight
+//! resident as a device buffer, and dispatches executions with
+//! manifest-driven argument resolution (the per-layer weight
+//! substitution of the artifact ABI).
+//!
+//! Interchange gotcha (see /opt/xla-example/README.md): artifacts are HLO
+//! *text*; `HloModuleProto::from_text_file` reassigns instruction ids,
+//! which is what makes jax≥0.5 output loadable on xla_extension 0.5.1.
+//!
+//! Without the `pjrt` cargo feature the real XLA bindings are replaced
+//! by an inert, API-identical stub (see [`crate::xla_stub`]): the whole
+//! crate still typechecks and constructing this backend fails with a
+//! clear error — use [`crate::runtime::CpuBackend`] instead.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+#[cfg(not(feature = "pjrt"))]
+use crate::xla_stub as xla;
+
+use crate::manifest::{ArgKind, ExecutableSpec, Manifest};
+use crate::weights::WeightStore;
+
+use super::backend::Backend;
+use super::{DispatchStats, Input, Output};
+
+/// Pre-resolved argument slot for one (executable, layer) pair: weight
+/// slots hold the device buffer directly; input slots remember which
+/// ABI arg they validate against.
+enum PlanArg {
+    Weight(Rc<xla::PjRtBuffer>),
+    Input { name: String },
+}
+
+/// The PJRT dispatcher: compiled-executable cache, device-resident
+/// weights, per-(executable, layer) dispatch plans and timing stats.
+/// `!Send` by design — each executor replica owns one.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    manifest: Rc<Manifest>,
+    weights: Rc<WeightStore>,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    wbufs: RefCell<HashMap<String, Rc<xla::PjRtBuffer>>>,
+    plans: RefCell<HashMap<(String, usize), Rc<Vec<PlanArg>>>>,
+    stats: RefCell<DispatchStats>,
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client over loaded artifacts. Fails when built
+    /// without the `pjrt` feature (see [`crate::xla_stub`]).
+    pub fn new(manifest: Rc<Manifest>, weights: Rc<WeightStore>)
+               -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(PjrtBackend {
+            client,
+            manifest,
+            weights,
+            exes: RefCell::new(HashMap::new()),
+            wbufs: RefCell::new(HashMap::new()),
+            plans: RefCell::new(HashMap::new()),
+            stats: RefCell::new(DispatchStats::default()),
+        })
+    }
+
+    /// Compile (or fetch cached) an executable.
+    fn executable(&self, spec: &ExecutableSpec)
+                  -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(&spec.name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", spec.name))?;
+        self.stats.borrow_mut().compile_time += t0.elapsed();
+        let exe = Rc::new(exe);
+        self.exes
+            .borrow_mut()
+            .insert(spec.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Device-resident weight buffer (uploaded once, cached).
+    fn weight_buffer(&self, name: &str) -> Result<Rc<xla::PjRtBuffer>> {
+        if let Some(b) = self.wbufs.borrow().get(name) {
+            return Ok(b.clone());
+        }
+        let data = self.weights.get(name)?;
+        let dims = self.weights.shape(name)?.to_vec();
+        let buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(data, &dims, None)
+            .map_err(|e| anyhow!("uploading weight {name}: {e}"))?;
+        let buf = Rc::new(buf);
+        self.wbufs
+            .borrow_mut()
+            .insert(name.to_string(), buf.clone());
+        Ok(buf)
+    }
+
+    /// Build (or fetch) the cached dispatch plan for (exe, layer).
+    fn plan(&self, spec: &ExecutableSpec, layer: usize)
+            -> Result<Rc<Vec<PlanArg>>> {
+        let key = (spec.name.clone(), layer);
+        if let Some(p) = self.plans.borrow().get(&key) {
+            return Ok(p.clone());
+        }
+        let mut plan = Vec::with_capacity(spec.args.len());
+        for arg in spec.args.iter() {
+            match &arg.kind {
+                ArgKind::Input(name) => plan.push(PlanArg::Input {
+                    name: name.clone(),
+                }),
+                kind => {
+                    let wname = self
+                        .manifest
+                        .resolve_weight_name(kind, layer)
+                        .unwrap();
+                    plan.push(PlanArg::Weight(self.weight_buffer(&wname)?));
+                }
+            }
+        }
+        let plan = Rc::new(plan);
+        self.plans.borrow_mut().insert(key, plan.clone());
+        Ok(plan)
+    }
+
+    fn upload(&self, input: &Input) -> Result<xla::PjRtBuffer> {
+        let r = match input {
+            Input::F32(data, dims) => {
+                self.client.buffer_from_host_buffer::<f32>(data, dims, None)
+            }
+            Input::I32(data, dims) => {
+                self.client.buffer_from_host_buffer::<i32>(data, dims, None)
+            }
+        };
+        r.map_err(|e| anyhow!("uploading input: {e}"))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prepare(&self, spec: &ExecutableSpec) -> Result<()> {
+        self.executable(spec).map(|_| ())
+    }
+
+    fn prepared_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+
+    fn execute(&self, spec: &ExecutableSpec, layer: usize,
+               inputs: &[(&str, Input<'_>)]) -> Result<Vec<Output>> {
+        // Perf (EXPERIMENTS.md §Perf, L3 iters 1+2): the per-(executable,
+        // layer) dispatch plan — weight-name resolution, weight-buffer
+        // lookup — is computed once and cached; steady-state dispatch
+        // only uploads the true inputs.
+        let plan = self.plan(spec, layer)?;
+        let exe = self.executable(spec)?;
+
+        let t0 = Instant::now();
+        let mut owned: Vec<(usize, xla::PjRtBuffer)> = Vec::new();
+        for (slot, pa) in plan.iter().enumerate() {
+            if let PlanArg::Input { name } = pa {
+                let (_, input) = inputs
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .ok_or_else(|| {
+                        anyhow!("{}: missing input '{name}'", spec.name)
+                    })?;
+                owned.push((slot, self.upload(input)?));
+            }
+        }
+        let mut owned_it = owned.iter().peekable();
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(plan.len());
+        for (slot, pa) in plan.iter().enumerate() {
+            match pa {
+                PlanArg::Weight(b) => args.push(b.as_ref()),
+                PlanArg::Input { .. } => {
+                    let (s, b) = owned_it.next().unwrap();
+                    debug_assert_eq!(*s, slot);
+                    args.push(b);
+                }
+            }
+        }
+        let upload_t = t0.elapsed();
+
+        let t1 = Instant::now();
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("executing {}: {e}", spec.name))?;
+        let execute_t = t1.elapsed();
+
+        let t2 = Instant::now();
+        let mut lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("downloading {} output: {e}", spec.name))?;
+        let parts = lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("untupling {}: {e}", spec.name))?;
+        let mut outputs = Vec::with_capacity(parts.len());
+        for p in parts {
+            outputs.push(Output {
+                data: p
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output to_vec: {e}"))?,
+            });
+        }
+        let download_t = t2.elapsed();
+
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.upload_time += upload_t;
+        s.execute_time += execute_t;
+        s.download_time += download_t;
+        Ok(outputs)
+    }
+
+    fn stats(&self) -> DispatchStats {
+        self.stats.borrow().clone()
+    }
+}

@@ -72,23 +72,35 @@ pub fn cats_calibrate_threshold(scores: &[f32], density: f64) -> f32 {
 }
 
 /// Pad or trim an index set to exactly `k` entries (engine requirement:
-/// artifact shapes are static). Pads with distinct unused indices —
-/// never duplicates, which would double-count neurons through W_down.
+/// artifact shapes are static). Pads with distinct unused indices from
+/// `[0, f)` — never duplicates, which would double-count neurons
+/// through W_down. Duplicate *input* indices are collapsed first for
+/// the same reason (a regression found by the property suite: the old
+/// implementation preserved input duplicates, so a duplicated CATS
+/// index would have been double-counted). When fewer than `k` distinct
+/// candidates exist in `[0, f)` the result is clamped to all `f` of
+/// them — shorter than `k`, which the caller must treat as "run
+/// dense".
 pub fn pad_indices_to_k(mut idx: Vec<i32>, k: usize, f: usize) -> Vec<i32> {
+    idx.retain(|&j| j >= 0 && (j as usize) < f);
+    idx.sort_unstable();
+    idx.dedup();
     idx.truncate(k);
     if idx.len() < k {
-        let present: std::collections::HashSet<i32> =
-            idx.iter().copied().collect();
+        let mut present = vec![false; f];
+        for &j in &idx {
+            present[j as usize] = true;
+        }
         for cand in 0..f as i32 {
             if idx.len() == k {
                 break;
             }
-            if !present.contains(&cand) {
+            if !present[cand as usize] {
                 idx.push(cand);
             }
         }
+        idx.sort_unstable();
     }
-    idx.sort_unstable();
     idx
 }
 
@@ -163,5 +175,149 @@ mod tests {
         d.dedup();
         assert_eq!(d.len(), 5);
         assert!(idx.contains(&3) && idx.contains(&7));
+    }
+
+    /// Regression: duplicate input indices must collapse (a duplicated
+    /// neuron would be double-counted through W_down), and out-of-range
+    /// input indices must be dropped, not gathered out of bounds.
+    #[test]
+    fn pad_indices_edge_cases() {
+        // duplicates in the input collapse, then pad back to k
+        let idx = pad_indices_to_k(vec![5, 5, 5, 9], 4, 16);
+        assert_eq!(idx.len(), 4);
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1], "strictly sorted, no dups: {idx:?}");
+        }
+        assert!(idx.contains(&5) && idx.contains(&9));
+        // out-of-range entries dropped before padding
+        let idx = pad_indices_to_k(vec![-3, 100], 3, 8);
+        assert_eq!(idx.len(), 3);
+        assert!(idx.iter().all(|&j| (0..8).contains(&j)));
+        // k larger than the candidate space clamps to all f indices
+        let idx = pad_indices_to_k(vec![1], 10, 4);
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+        // k == 0 empties
+        assert_eq!(pad_indices_to_k(vec![2, 3], 0, 8), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn prop_top_k_indices_invariants() {
+        check("topk-invariants", 300, |r| {
+            let n = r.range(1, 400);
+            let k = r.range(0, n + 8); // k may exceed n
+            let scores: Vec<f32> =
+                (0..n).map(|_| (r.f64() * 4.0 - 2.0) as f32).collect();
+            let idx = top_k_indices(&scores, k);
+            crate::prop_assert!(
+                idx.len() == k.min(n),
+                "len {} != min(k={k}, n={n})",
+                idx.len()
+            );
+            for w in idx.windows(2) {
+                crate::prop_assert!(
+                    w[0] < w[1],
+                    "not strictly sorted (dup or disorder): {idx:?}"
+                );
+            }
+            crate::prop_assert!(
+                idx.iter().all(|&j| (0..n as i32).contains(&j)),
+                "index out of range"
+            );
+            // selection property: every selected score >= every
+            // unselected score
+            if !idx.is_empty() && idx.len() < n {
+                let sel: Vec<bool> = {
+                    let mut v = vec![false; n];
+                    for &j in &idx {
+                        v[j as usize] = true;
+                    }
+                    v
+                };
+                let min_sel = idx
+                    .iter()
+                    .map(|&j| scores[j as usize])
+                    .fold(f32::INFINITY, f32::min);
+                let max_unsel = (0..n)
+                    .filter(|&j| !sel[j])
+                    .map(|j| scores[j])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                crate::prop_assert!(
+                    min_sel >= max_unsel,
+                    "top-k violated: min selected {min_sel} < max \
+                     unselected {max_unsel}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_cats_indices_invariants() {
+        check("cats-invariants", 200, |r| {
+            let n = r.range(1, 400);
+            let scores: Vec<f32> =
+                (0..n).map(|_| (r.normal()) as f32).collect();
+            let th = (r.f64() * 1.5) as f32;
+            let idx = cats_threshold_indices(&scores, th);
+            for w in idx.windows(2) {
+                crate::prop_assert!(w[0] < w[1], "sorted + distinct");
+            }
+            crate::prop_assert!(
+                idx.iter()
+                    .all(|&j| scores[j as usize].abs() > th),
+                "kept a below-threshold neuron"
+            );
+            let kept = idx.len();
+            let expect =
+                scores.iter().filter(|s| s.abs() > th).count();
+            crate::prop_assert!(kept == expect, "cardinality");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_pad_indices_invariants() {
+        check("pad-invariants", 300, |r| {
+            let f = r.range(1, 300);
+            let k = r.range(0, f + 8);
+            let n_in = r.range(0, f + 4);
+            // inputs may contain duplicates and out-of-range entries
+            let input: Vec<i32> = (0..n_in)
+                .map(|_| r.range_i64(-2, f as i64 + 2) as i32)
+                .collect();
+            let out = pad_indices_to_k(input.clone(), k, f);
+            crate::prop_assert!(
+                out.len() == k.min(f),
+                "len {} != min(k={k}, f={f})",
+                out.len()
+            );
+            for w in out.windows(2) {
+                crate::prop_assert!(
+                    w[0] < w[1],
+                    "not strictly sorted / duplicate: {out:?}"
+                );
+            }
+            crate::prop_assert!(
+                out.iter().all(|&j| (0..f as i32).contains(&j)),
+                "padded index out of range"
+            );
+            // in-range input indices survive unless trimmed by k
+            let mut distinct: Vec<i32> = input
+                .iter()
+                .copied()
+                .filter(|&j| (0..f as i32).contains(&j))
+                .collect();
+            distinct.sort_unstable();
+            distinct.dedup();
+            if distinct.len() <= k {
+                for j in &distinct {
+                    crate::prop_assert!(
+                        out.contains(j),
+                        "dropped a valid input index {j}"
+                    );
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -205,4 +205,84 @@ mod tests {
         assert!((achieved_density(&[256, 256], 512) - 0.5).abs() < 1e-12);
         assert_eq!(achieved_density(&[], 512), 0.0);
     }
+
+    /// The budget contract of the full Algorithm-1 → quantizer pipeline:
+    /// the quantized schedule's achieved mean density never exceeds the
+    /// requested budget by more than one ftile's worth of density, and
+    /// no single layer drifts more than one ftile from its unquantized
+    /// allocation.
+    #[test]
+    fn prop_quantized_schedule_respects_budget() {
+        check("quantize-budget", 300, |r| {
+            let d_ffn = [256usize, 512, 1024][r.range(0, 3)];
+            let ftile = [32usize, 64, 128][r.range(0, 3)];
+            let n = r.range(1, 33);
+            // scores with a zero tail in ~1/3 of cases, to route through
+            // the degenerate uniform-spread branch fixed in PR 2
+            let zero_tail = r.bool(0.33);
+            let scores: Vec<f64> = (0..n)
+                .map(|l| {
+                    if zero_tail && l >= n / 2 {
+                        0.0
+                    } else {
+                        r.f64() * 10.0
+                    }
+                })
+                .collect();
+            let budget = 0.05 + r.f64() * 0.9;
+            let dens = layerwise_schedule(&scores, budget);
+            let ks = quantize_densities(&dens, d_ffn, ftile);
+            crate::prop_assert!(ks.len() == n, "len");
+            // per-layer: within one ftile of the unquantized density
+            for (i, (&k, &b)) in ks.iter().zip(dens.iter()).enumerate() {
+                let want = b * d_ffn as f64;
+                crate::prop_assert!(
+                    (k as f64 - want).abs() <= ftile as f64 + 1e-9,
+                    "layer {i}: K={k} drifts more than one ftile from \
+                     unquantized {want}"
+                );
+            }
+            // mean: achieved ≤ budget + one tile of density
+            let achieved = achieved_density(&ks, d_ffn);
+            let slack = ftile as f64 / d_ffn as f64;
+            crate::prop_assert!(
+                achieved <= budget + slack + 1e-9,
+                "achieved {achieved} exceeds budget {budget} by more \
+                 than one ftile ({slack})"
+            );
+            Ok(())
+        });
+    }
+
+    /// Round-trip regression through the zero-score branch: the spread
+    /// remainder must quantize onto the grid and stay within budget,
+    /// exactly as the all-positive path does.
+    #[test]
+    fn zero_score_schedule_roundtrips_through_quantizer() {
+        let (d_ffn, ftile) = (256usize, 32usize);
+        for scores in [
+            vec![2.0, 0.0, 0.0, 0.0],
+            vec![0.0, 0.0, 0.0],
+            vec![0.0, 5.0, 0.0, 0.0, 0.0, 0.0],
+        ] {
+            for budget in [0.3, 0.5, 0.7] {
+                let dens = layerwise_schedule(&scores, budget);
+                let total: f64 = dens.iter().sum();
+                assert!(
+                    total <= budget * scores.len() as f64 + 1e-9,
+                    "overspent: {total}"
+                );
+                let ks = quantize_densities(&dens, d_ffn, ftile);
+                for &k in &ks {
+                    assert!(k % ftile == 0 && (ftile..=d_ffn).contains(&k));
+                }
+                let achieved = achieved_density(&ks, d_ffn);
+                assert!(
+                    achieved <= budget + ftile as f64 / d_ffn as f64 + 1e-9,
+                    "achieved {achieved} vs budget {budget} \
+                     (scores {scores:?})"
+                );
+            }
+        }
+    }
 }

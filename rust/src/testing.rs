@@ -1,0 +1,85 @@
+//! Engine construction shared by the integration tests, benches and
+//! examples — the switchboard of the two test tiers (docs/TESTING.md):
+//!
+//! * **Always-on tier** — [`test_engine`] returns a working engine on
+//!   every machine: the real PJRT artifact engine when `make artifacts`
+//!   output is present *and* the `pjrt` feature is compiled in,
+//!   otherwise the deterministic pure-Rust CPU engine over a synthetic
+//!   manifest + seeded weights. Weight-agnostic invariants (stepping ==
+//!   one-shot, prefix adoption bit-identity, streamed == one-shot,
+//!   determinism, schedule budgets) run against whichever engine comes
+//!   back.
+//! * **Artifact tier** — [`artifact_engine`] returns `Some` only with
+//!   real trained artifacts; assertions about *trained-weight quality*
+//!   (cos-sim fidelity bounds, python parity fixtures, ablation
+//!   orderings) live behind it and skip cleanly elsewhere.
+
+use std::sync::Arc;
+
+use crate::batcher::BatcherConfig;
+use crate::engine::Engine;
+use crate::manifest::SyntheticSpec;
+use crate::pool::ExecutorPool;
+use crate::router::Router;
+use crate::runtime::BackendKind;
+
+/// The deterministic CPU engine over the default synthetic model.
+/// Infallible by construction (panics only on an internal bug).
+pub fn cpu_engine() -> Engine {
+    Engine::synthetic_cpu(&SyntheticSpec::default())
+        .expect("synthetic CPU engine")
+}
+
+/// The PJRT engine over real artifacts, or `None` when artifacts are
+/// absent or the `pjrt` feature is off (caller skips trained-weight
+/// assertions).
+pub fn artifact_engine() -> Option<Engine> {
+    let dir = crate::test_artifacts_dir()?;
+    use std::rc::Rc;
+    let manifest = Rc::new(
+        crate::manifest::Manifest::load(&dir).expect("artifact manifest"),
+    );
+    let weights = Rc::new(
+        crate::weights::WeightStore::load(&manifest)
+            .expect("artifact weights"),
+    );
+    let rt = Rc::new(
+        crate::runtime::Runtime::new(manifest, weights)
+            .expect("pjrt runtime"),
+    );
+    Some(Engine::new(rt))
+}
+
+/// An engine on *this* machine, whatever it has: artifacts + PJRT when
+/// available, the deterministic CPU reference otherwise. Never skips.
+pub fn test_engine() -> Engine {
+    artifact_engine().unwrap_or_else(cpu_engine)
+}
+
+/// Spawn an executor pool matching [`test_engine`]'s choice: artifact
+/// replicas when artifacts + `pjrt` are available, synthetic CPU
+/// replicas otherwise.
+pub fn spawn_test_pool(router: Arc<Router>, cfg: BatcherConfig)
+                       -> ExecutorPool {
+    match crate::test_artifacts_dir() {
+        Some(dir) => ExecutorPool::spawn_from_artifacts(router, cfg, dir),
+        None => ExecutorPool::spawn_backend(
+            router,
+            cfg,
+            BackendKind::Cpu,
+            None,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_engine_always_available() {
+        let e = test_engine();
+        assert!(e.block() > 0);
+        assert!(e.manifest().model.n_layers > 0);
+    }
+}

@@ -204,6 +204,69 @@ mod tests {
         assert_eq!(d.finish(), "", "finish is idempotent");
     }
 
+    /// Fuzz the incremental decoder: random UTF-8 strings mixing 1- to
+    /// 4-byte codepoints, fed one byte-token at a time (the finest
+    /// possible chunking, so every multi-byte character straddles a
+    /// boundary), with specials interleaved at random. The reassembled
+    /// stream must equal the original string exactly, and the decoder
+    /// must agree with the batch decoder.
+    #[test]
+    fn prop_stream_decoder_reassembles_any_utf8() {
+        let t = Tokenizer::new(384);
+        crate::util::proptest::check("stream-utf8", 300, |r| {
+            let n = r.range(0, 64);
+            let s: String = (0..n)
+                .map(|_| {
+                    // sample across UTF-8 widths: ascii, latin, CJK,
+                    // and astral (4-byte) planes
+                    let c = match r.range(0, 4) {
+                        0 => r.range(0x20, 0x7F) as u32,
+                        1 => r.range(0xA1, 0x250) as u32,
+                        2 => r.range(0x4E00, 0x9FFF) as u32,
+                        _ => r.range(0x1F300, 0x1F600) as u32,
+                    };
+                    char::from_u32(c).unwrap()
+                })
+                .collect();
+            let mut tokens = t.encode(&s);
+            // interleave specials at random positions: they must be
+            // invisible to the stream
+            for _ in 0..r.range(0, 4) {
+                let at = r.range(0, tokens.len() + 1);
+                tokens.insert(at, [PAD, BOS, EOS][r.range(0, 3)]);
+            }
+            let mut d = StreamDecoder::new();
+            let mut streamed = String::new();
+            for &tok in &tokens {
+                streamed.push_str(&d.push(tok));
+            }
+            streamed.push_str(&d.finish());
+            if streamed != s {
+                return Err(format!(
+                    "stream reassembly diverged: {streamed:?} != {s:?}"
+                ));
+            }
+            if t.decode(&tokens) != streamed {
+                return Err("stream != batch decode".to_string());
+            }
+            Ok(())
+        });
+    }
+
+    /// A multi-byte character interrupted by a special token is two
+    /// invalid fragments, not a character — the decoder must replace,
+    /// never panic, and keep byte counts consistent.
+    #[test]
+    fn stream_decoder_split_by_special_is_replaced() {
+        let bytes = "é".as_bytes(); // 2 bytes: 0xC3 0xA9
+        let mut d = StreamDecoder::new();
+        assert_eq!(d.push(bytes[0] as i32), "");
+        // the special does not flush or corrupt the pending byte
+        assert_eq!(d.push(EOS), "");
+        assert_eq!(d.push(bytes[1] as i32), "é", "specials are invisible");
+        assert_eq!(d.finish(), "");
+    }
+
     #[test]
     fn property_roundtrip_random_bytes() {
         let t = Tokenizer::new(384);

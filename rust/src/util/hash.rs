@@ -1,0 +1,46 @@
+//! FNV-1a hashing substrate shared by the numeric-identity
+//! fingerprints (weight values, model identity, runtime fingerprint —
+//! the inputs to [`crate::engine::Engine::prefix_seed`]). One
+//! implementation, one finalization, so the prefix-cache safety chain
+//! stays auditable. Process-local only: these values are never
+//! persisted, so the scheme may evolve freely.
+
+/// FNV-1a offset basis — the initial state for [`mix`] chains.
+pub const BASIS: u64 = 0xcbf29ce484222325;
+
+/// FNV-1a prime.
+const PRIME: u64 = 0x100000001b3;
+
+/// FNV-1a over a byte string.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    bytes
+        .iter()
+        .fold(BASIS, |h, &b| (h ^ b as u64).wrapping_mul(PRIME))
+}
+
+/// Fold one 64-bit value into a running hash: FNV-style multiply plus
+/// an avalanche shift so small integer inputs still diffuse.
+pub fn mix(h: u64, v: u64) -> u64 {
+    let x = (h ^ v).wrapping_mul(PRIME);
+    x ^ (x >> 29)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_distinguishes_and_is_stable() {
+        assert_eq!(fnv1a(b"abc"), fnv1a(b"abc"));
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"abd"));
+        assert_ne!(fnv1a(b""), 0);
+    }
+
+    #[test]
+    fn mix_is_order_sensitive() {
+        let a = mix(mix(BASIS, 1), 2);
+        let b = mix(mix(BASIS, 2), 1);
+        assert_ne!(a, b);
+        assert_ne!(mix(BASIS, 0), BASIS);
+    }
+}

@@ -2,6 +2,7 @@
 //! clap / rand / criterion / proptest in the vendored crate set).
 
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod proptest;
 pub mod rng;

@@ -1,5 +1,9 @@
 //! Weight store: loads weights.bin (flat little-endian f32, offsets from
 //! the manifest) and serves per-tensor slices to the runtime dispatcher.
+//! [`WeightStore::seeded`] instead *generates* deterministic synthetic
+//! weights from a manifest's table — the artifact-free substrate the
+//! pure-Rust [`crate::runtime::CpuBackend`] runs the always-on numeric
+//! test tier against.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -7,6 +11,8 @@ use std::path::Path;
 use anyhow::{anyhow, Context, Result};
 
 use crate::manifest::{Manifest, WeightEntry};
+use crate::util::hash;
+use crate::util::rng::Rng;
 
 /// All model weights resident as one flat host f32 buffer plus the
 /// name → (offset, shape) table from the manifest.
@@ -49,6 +55,93 @@ impl WeightStore {
             );
         }
         Ok(WeightStore { data, table })
+    }
+
+    /// Build a store from an in-memory buffer + table (bounds-validated
+    /// like [`WeightStore::load_from`]).
+    pub fn from_data(
+        data: Vec<f32>,
+        table: BTreeMap<String, WeightEntry>,
+    ) -> Result<WeightStore> {
+        for (name, e) in &table {
+            let end = e.offset / 4 + e.numel();
+            anyhow::ensure!(
+                e.offset % 4 == 0 && end <= data.len(),
+                "weight {name} out of bounds (offset {} numel {})",
+                e.offset,
+                e.numel()
+            );
+        }
+        Ok(WeightStore { data, table })
+    }
+
+    /// Generate deterministic synthetic weights for every entry in the
+    /// manifest's table. Each tensor draws from its own RNG stream
+    /// (seeded by `seed` and the tensor *name*, so table iteration
+    /// order is irrelevant): every run, on every machine, produces
+    /// bit-identical weights — the foundation of the reproducible
+    /// CPU-backend test tier.
+    ///
+    /// Initialization policy (shapes from [`Manifest::synthetic`]):
+    /// * RMSNorm gains (`rms1`/`rms2`/`final_rms`) — near 1.
+    /// * Compensator gates (`comp.*.alpha`) — one constant per layer,
+    ///   strictly inside (0, 1): the reference compensator then
+    ///   *provably* shrinks the sparse-FFN error (see
+    ///   `runtime::cpu`).
+    /// * Matrices — normal, scaled by `1/sqrt(fan_in)` (first dim).
+    pub fn seeded(manifest: &Manifest, seed: u64) -> WeightStore {
+        let total = manifest
+            .weights
+            .values()
+            .map(|e| e.offset / 4 + e.numel())
+            .max()
+            .unwrap_or(0);
+        let mut data = vec![0f32; total];
+        for (name, e) in &manifest.weights {
+            let mut rng = Rng::new(seed ^ hash::fnv1a(name.as_bytes()));
+            let start = e.offset / 4;
+            let out = &mut data[start..start + e.numel()];
+            if name.ends_with("rms1")
+                || name.ends_with("rms2")
+                || name == "final_rms"
+            {
+                for v in out.iter_mut() {
+                    *v = 1.0 + 0.05 * rng.normal() as f32;
+                }
+            } else if name.ends_with(".alpha") {
+                let gate = (0.4 + 0.2 * rng.f64()) as f32;
+                for v in out.iter_mut() {
+                    *v = gate;
+                }
+            } else {
+                let fan_in = e.shape.first().copied().unwrap_or(1).max(1);
+                let scale = 1.0 / (fan_in as f64).sqrt();
+                for v in out.iter_mut() {
+                    *v = (rng.normal() * scale) as f32;
+                }
+            }
+        }
+        Self::from_data(data, manifest.weights.clone())
+            .expect("seeded data is sized to the manifest table")
+    }
+
+    /// Stable 64-bit fingerprint of the *weight values* (table layout +
+    /// every f32 bit pattern). Computed once at runtime construction
+    /// and mixed into [`crate::runtime::Runtime::numeric_fingerprint`]:
+    /// two stores with the same shapes but different values (a
+    /// different seed, retrained artifacts) must never share
+    /// prefix-cache KV.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = hash::BASIS;
+        for (name, e) in &self.table {
+            h = hash::mix(h, hash::fnv1a(name.as_bytes()));
+            h = hash::mix(h, e.offset as u64);
+            let start = e.offset / 4;
+            for &v in &self.data[start..start + e.numel()] {
+                h = hash::mix(h, v.to_bits() as u64);
+            }
+        }
+        h
     }
 
     /// Borrow one tensor's data by name.
@@ -100,6 +193,59 @@ mod tests {
         let rms = w.get("layers.0.rms1").unwrap();
         let mean: f32 = rms.iter().sum::<f32>() / rms.len() as f32;
         assert!((0.2..5.0).contains(&mean), "rms1 mean {mean}");
+    }
+
+    #[test]
+    fn seeded_weights_are_deterministic_and_sane() {
+        let spec = crate::manifest::SyntheticSpec::default();
+        let m = Manifest::synthetic(&spec);
+        let a = WeightStore::seeded(&m, spec.seed);
+        let b = WeightStore::seeded(&m, spec.seed);
+        for name in a.names() {
+            let (wa, wb) = (a.get(name).unwrap(), b.get(name).unwrap());
+            assert_eq!(wa.len(), wb.len());
+            assert!(
+                wa.iter()
+                    .zip(wb.iter())
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{name}: seeded weights must be bit-identical"
+            );
+            assert!(wa.iter().all(|x| x.is_finite()), "{name} non-finite");
+        }
+        // a different seed changes the weights
+        let c = WeightStore::seeded(&m, spec.seed ^ 1);
+        assert!(a
+            .get("embed")
+            .unwrap()
+            .iter()
+            .zip(c.get("embed").unwrap())
+            .any(|(x, y)| x != y));
+        // policy spot checks
+        let rms = a.get("layers.0.rms1").unwrap();
+        let mean: f32 = rms.iter().sum::<f32>() / rms.len() as f32;
+        assert!((0.5..1.5).contains(&mean), "rms gain mean {mean}");
+        let alpha = a.get("comp.0.alpha").unwrap();
+        assert!(alpha.iter().all(|&x| x > 0.0 && x < 1.0));
+        assert!(
+            alpha.windows(2).all(|w| w[0] == w[1]),
+            "alpha is one gate per layer"
+        );
+        assert!(
+            alpha[0] != a.get("comp.1.alpha").unwrap()[0],
+            "distinct gates across layers"
+        );
+        assert_eq!(a.total_params(), b.total_params());
+    }
+
+    #[test]
+    fn from_data_validates_bounds() {
+        let mut table = BTreeMap::new();
+        table.insert(
+            "w".to_string(),
+            WeightEntry { offset: 0, shape: vec![4] },
+        );
+        assert!(WeightStore::from_data(vec![0.0; 4], table.clone()).is_ok());
+        assert!(WeightStore::from_data(vec![0.0; 3], table).is_err());
     }
 
     #[test]

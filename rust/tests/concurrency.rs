@@ -1,0 +1,183 @@
+//! Seeded-RNG randomized traffic through the CpuBackend executor pool
+//! (always-on: no artifacts, no `pjrt` feature — docs/TESTING.md).
+//!
+//! Four waves of randomized interactive/batch requests — mixed prompt
+//! lengths, dense and sparse configs, shared prefixes, and random
+//! client disconnects — against a two-replica pool. Invariants:
+//!
+//! * **No lost terminals:** every submitted request receives exactly
+//!   one `TokenEvent::Done` (success or "cancelled"), never a hang.
+//! * **No KV leaks:** after drain, the only resident pages are the
+//!   prefix cache's own accounted entries.
+//! * **Queue-metric monotonicity:** per-class queue-delay sample counts
+//!   never decrease, and end between the number of successful requests
+//!   and the number submitted (each request is sampled at most once,
+//!   at first admission).
+
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastforward::batcher::BatcherConfig;
+use fastforward::engine::SparsityConfig;
+use fastforward::metrics::Metrics;
+use fastforward::pool::ExecutorPool;
+use fastforward::router::{CancelToken, LoadEstimator, Response, Router,
+                          SloClass, SubmitOpts, TokenEvent};
+use fastforward::runtime::BackendKind;
+use fastforward::util::rng::Rng;
+
+struct Pending {
+    id: u64,
+    rx: Receiver<TokenEvent>,
+    cancel: CancelToken,
+}
+
+#[test]
+fn randomized_traffic_loses_no_done_events_and_leaks_no_kv() {
+    let probe = fastforward::testing::cpu_engine();
+    let block = probe.block();
+    let max_ctx = probe.manifest().model.max_ctx;
+    drop(probe);
+
+    let metrics = Arc::new(Metrics::new());
+    let router = Arc::new(Router::new_pooled(
+        64,
+        max_ctx,
+        512,
+        block,
+        metrics.clone(),
+        2,
+        LoadEstimator::new(block),
+        8 << 20,
+    ));
+    let pool = ExecutorPool::spawn_backend(
+        router.clone(),
+        BatcherConfig {
+            max_active: 4,
+            prefill_block_budget: 2,
+            decode_first_budget: 1,
+            slo: true,
+        },
+        BackendKind::Cpu,
+        None,
+    );
+
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut pending: Vec<Pending> = Vec::new();
+    let mut submitted = 0usize;
+    let mut rejected = 0usize;
+    let mut prev = (0usize, 0usize);
+    for _wave in 0..4 {
+        for _ in 0..6 {
+            let len = 1 + rng.range(0, 3 * block);
+            // ~1/3 of prompts share a deterministic prefix family so
+            // the prefix cache sees hits, inserts and evictions while
+            // cancellations fire around it
+            let prompt: Vec<i32> = if rng.bool(0.33) {
+                (0..len).map(|i| ((i * 7) % 250) as i32).collect()
+            } else {
+                (0..len).map(|_| rng.range(0, 250) as i32).collect()
+            };
+            let cancel = CancelToken::new();
+            let opts = SubmitOpts {
+                class: if rng.bool(0.5) {
+                    SloClass::Interactive
+                } else {
+                    SloClass::Batch
+                },
+                deadline_ms: None,
+                cancel: cancel.clone(),
+            };
+            let cfg = if rng.bool(0.5) {
+                SparsityConfig::fastforward(0.5)
+            } else {
+                SparsityConfig::dense()
+            };
+            let (tx, rx) = channel();
+            match router.submit_with(prompt, rng.range(0, 5), cfg, opts, tx)
+            {
+                Ok(id) => {
+                    submitted += 1;
+                    pending.push(Pending { id, rx, cancel });
+                }
+                Err(_) => rejected += 1, // backpressure is a valid outcome
+            }
+        }
+        // random client disconnects: queued, active, or already-finished
+        // requests alike (cancel-after-done must be a harmless no-op)
+        for p in &pending {
+            if rng.bool(0.2) {
+                p.cancel.cancel();
+            }
+        }
+        std::thread::sleep(Duration::from_millis(
+            rng.range(5, 40) as u64
+        ));
+        // per-class queue metrics are monotone while traffic flows
+        let now = (
+            metrics.queue_delay_samples(SloClass::Interactive),
+            metrics.queue_delay_samples(SloClass::Batch),
+        );
+        assert!(
+            now.0 >= prev.0 && now.1 >= prev.1,
+            "queue-delay sample counts went backwards: {now:?} < {prev:?}"
+        );
+        prev = now;
+    }
+
+    // every submitted request terminates with exactly one Done
+    let mut ok = 0usize;
+    let mut cancelled = 0usize;
+    for p in pending {
+        let resp =
+            Response::collect_timeout(&p.rx, Duration::from_secs(300))
+                .expect("every request must receive a terminal Done");
+        assert_eq!(resp.id, p.id, "response routed to the wrong request");
+        match &resp.error {
+            None => ok += 1,
+            Some(e) if e.contains("cancelled") => cancelled += 1,
+            Some(e) => panic!("unexpected failure: {e}"),
+        }
+        // and the channel carries nothing after Done
+        assert!(
+            p.rx.try_recv().is_err(),
+            "events after the terminal Done"
+        );
+    }
+    assert_eq!(ok + cancelled, submitted);
+    assert!(ok > 0, "the randomized run completed no requests at all");
+    eprintln!(
+        "[concurrency] submitted {submitted}, ok {ok}, cancelled \
+         {cancelled}, rejected {rejected}"
+    );
+
+    router.close();
+    pool.join().unwrap();
+
+    // KV accounting: only prefix-cache residency may remain (page_size
+    // == block, so each cached block entry accounts for exactly one
+    // page)
+    assert_eq!(
+        router.kv_pool.lock().unwrap().used_pages(),
+        router.prefix_cache.lock().unwrap().entry_count(),
+        "KV pages leaked after drain"
+    );
+
+    // sample-count bookends: every successful request was admitted
+    // (sampled once); nothing is sampled more than once per request
+    let total = metrics.queue_delay_samples(SloClass::Interactive)
+        + metrics.queue_delay_samples(SloClass::Batch);
+    assert!(
+        total >= ok,
+        "successful requests must have been sampled: {total} < {ok}"
+    );
+    assert!(
+        total <= submitted,
+        "requests sampled more than once: {total} > {submitted}"
+    );
+    assert!(
+        metrics.cancelled() >= cancelled as u64,
+        "cancellations must be visible in metrics"
+    );
+}

@@ -2,36 +2,25 @@
 //!
 //! * A session that adopts cached KV blocks produces **bit-identical**
 //!   last-position logits to an uncached prefill of the same prompt
-//!   (same executables, same inputs — XLA-CPU is deterministic).
+//!   (same executables, same inputs — both backends are deterministic).
 //! * Adoption actually skips compute: the engine's block-execution
 //!   counter (`PrefillTiming::blocks`) stays at zero for a fully-cached
 //!   prefix while `adopted_blocks` covers it.
 //! * The full pooled stack reuses a prefix across replicas and reports
 //!   it in `Response::reused_blocks`.
 //!
-//! Skips without artifacts (like every engine-backed test).
+//! Always-on (docs/TESTING.md): runs against real artifacts + PJRT when
+//! present, the deterministic CpuBackend otherwise.
 
-use std::rc::Rc;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 
 use fastforward::batcher::BatcherConfig;
 use fastforward::engine::{Engine, PrefillSession, SparsityConfig};
 use fastforward::kvcache::{PagedAllocator, PrefixCache};
-use fastforward::manifest::Manifest;
 use fastforward::metrics::Metrics;
-use fastforward::pool::ExecutorPool;
 use fastforward::router::{LoadEstimator, Response, Router};
-use fastforward::runtime::Runtime;
-use fastforward::weights::WeightStore;
-
-fn engine() -> Option<Engine> {
-    let dir = fastforward::test_artifacts_dir()?;
-    let m = Rc::new(Manifest::load(&dir).unwrap());
-    let w = Rc::new(WeightStore::load(&m).unwrap());
-    let rt = Rc::new(Runtime::new(m, w).unwrap());
-    Some(Engine::new(rt))
-}
+use fastforward::testing;
 
 fn prompt_tokens(n: usize, seed: u64) -> Vec<i32> {
     let mut rng = fastforward::util::rng::Rng::new(seed);
@@ -51,7 +40,8 @@ fn assert_adoption_bit_identical(engine: &Engine, cfg: &SparsityConfig) {
 
     let mut alloc = PagedAllocator::new(1024, block);
     let mut pc = PrefixCache::new(block, 256 << 20);
-    let seed = cfg.prefill_fingerprint();
+    // the production seed: config ⊕ model ⊕ backend
+    let seed = engine.prefix_seed(cfg);
     let inserted =
         pc.insert(seed, &prompt, usize::MAX, &cold.cache, &mut alloc);
     assert_eq!(inserted, 3);
@@ -90,13 +80,13 @@ fn assert_adoption_bit_identical(engine: &Engine, cfg: &SparsityConfig) {
 
 #[test]
 fn adoption_is_bit_identical_dense() {
-    let Some(engine) = engine() else { return };
+    let engine = testing::test_engine();
     assert_adoption_bit_identical(&engine, &SparsityConfig::dense());
 }
 
 #[test]
 fn adoption_is_bit_identical_sparse() {
-    let Some(engine) = engine() else { return };
+    let engine = testing::test_engine();
     assert_adoption_bit_identical(
         &engine,
         &SparsityConfig::fastforward(0.5),
@@ -105,7 +95,7 @@ fn adoption_is_bit_identical_sparse() {
 
 #[test]
 fn configs_never_share_prefixes() {
-    let Some(engine) = engine() else { return };
+    let engine = testing::test_engine();
     let block = engine.block();
     let prompt = prompt_tokens(2 * block + 7, 13);
     let dense = SparsityConfig::dense();
@@ -115,17 +105,44 @@ fn configs_never_share_prefixes() {
     let mut alloc = PagedAllocator::new(256, block);
     let mut pc = PrefixCache::new(block, 64 << 20);
     pc.insert(
-        dense.prefill_fingerprint(),
+        engine.prefix_seed(&dense),
         &prompt,
         usize::MAX,
         &cold.cache,
         &mut alloc,
     );
     assert!(
-        pc.acquire(sparse.prefill_fingerprint(), &prompt).is_none(),
+        pc.acquire(engine.prefix_seed(&sparse), &prompt).is_none(),
         "sparse prefill must not adopt dense KV"
     );
-    assert!(pc.acquire(dense.prefill_fingerprint(), &prompt).is_some());
+    assert!(pc
+        .acquire(engine.prefix_seed(&dense), &prompt)
+        .is_some());
+}
+
+/// The prefix seed commits to the *backend and model*, not just the
+/// sparsity configuration: KV computed by a different model/backend
+/// combination is invisible, even under an identical config.
+#[test]
+fn prefix_seed_is_backend_and_model_aware() {
+    let engine = testing::cpu_engine();
+    let other = Engine::synthetic_cpu(&fastforward::manifest::SyntheticSpec {
+        name: "ff-ref-other".to_string(),
+        ..Default::default()
+    })
+    .unwrap();
+    let cfg = SparsityConfig::fastforward(0.5);
+    assert_eq!(engine.prefix_seed(&cfg), testing::cpu_engine().prefix_seed(&cfg));
+    assert_ne!(
+        engine.prefix_seed(&cfg),
+        other.prefix_seed(&cfg),
+        "different model identity must produce a different seed"
+    );
+    assert_ne!(
+        engine.prefix_seed(&cfg),
+        engine.prefix_seed(&SparsityConfig::dense()),
+        "different config must produce a different seed"
+    );
 }
 
 /// Full stack: two replicas, shared prefix cache. The second request
@@ -133,12 +150,14 @@ fn configs_never_share_prefixes() {
 /// of which replica each lands on — and produces the same text.
 #[test]
 fn pooled_stack_reuses_prefixes_across_replicas() {
-    let Some(dir) = fastforward::test_artifacts_dir() else { return };
-    let block = Manifest::load(&dir).unwrap().model.block;
+    let probe = testing::test_engine();
+    let block = probe.block();
+    let max_ctx = probe.manifest().model.max_ctx;
+    drop(probe);
     let metrics = Arc::new(Metrics::new());
     let router = Arc::new(Router::new_pooled(
         32,
-        4096,
+        max_ctx,
         1024,
         block,
         metrics.clone(),
@@ -146,10 +165,9 @@ fn pooled_stack_reuses_prefixes_across_replicas() {
         LoadEstimator::new(block),
         64 << 20,
     ));
-    let pool = ExecutorPool::spawn_from_artifacts(
+    let pool = testing::spawn_test_pool(
         router.clone(),
         BatcherConfig::default(),
-        dir,
     );
 
     let prompt = prompt_tokens(3 * block + 40, 21);

@@ -1,10 +1,12 @@
 //! Streaming + SLO-scheduling integration tests.
 //!
-//! Host-only (run everywhere):
+//! Host-only:
 //! * SSE wire format: event ordering and framing over a real TCP
 //!   connection, with the executor side played by a stub thread.
 //!
-//! Artifact-backed (skip without artifacts / the `pjrt` feature):
+//! Engine-backed — always-on (docs/TESTING.md): the stack runs on real
+//! artifacts + PJRT when present, the deterministic CpuBackend
+//! otherwise:
 //! * streamed tokens reassemble to exactly the one-shot response;
 //! * a mid-stream client disconnect cancels the session and the KV
 //!   pool returns to zero used pages;
@@ -14,22 +16,19 @@
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
-use std::rc::Rc;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use fastforward::batcher::{Batcher, BatcherConfig};
-use fastforward::engine::{Engine, SparsityConfig};
-use fastforward::manifest::Manifest;
+use fastforward::engine::SparsityConfig;
 use fastforward::metrics::Metrics;
 use fastforward::router::{Response, Router, SloClass, SubmitOpts,
                           TokenEvent};
-use fastforward::runtime::Runtime;
 use fastforward::server::Server;
+use fastforward::testing;
 use fastforward::tokenizer::Tokenizer;
 use fastforward::util::json;
-use fastforward::weights::WeightStore;
 
 // ---------------------------------------------------------------------------
 // helpers
@@ -94,19 +93,30 @@ fn spawn_server(server: Arc<Server>) -> String {
     addr
 }
 
-fn start_stack(cfg: BatcherConfig)
-               -> Option<(Arc<Router>, std::thread::JoinHandle<()>)> {
-    let dir = fastforward::test_artifacts_dir()?;
+/// The single-replica engine stack over whichever backend this machine
+/// supports, plus the model limits tests need for sizing prompts.
+struct Stack {
+    router: Arc<Router>,
+    handle: std::thread::JoinHandle<()>,
+    max_ctx: usize,
+}
+
+fn start_stack(cfg: BatcherConfig) -> Stack {
+    let probe = testing::test_engine();
+    let block = probe.block();
+    let max_ctx = probe.manifest().model.max_ctx;
+    drop(probe);
     let metrics = Arc::new(Metrics::new());
-    let router = Arc::new(Router::new(64, 4096, 512, 128, metrics));
+    let router = Arc::new(Router::new(64, max_ctx, 512, block, metrics));
     let r2 = router.clone();
     let handle = std::thread::spawn(move || {
-        let m = Rc::new(Manifest::load(&dir).unwrap());
-        let w = Rc::new(WeightStore::load(&m).unwrap());
-        let rt = Rc::new(Runtime::new(m, w).unwrap());
-        Batcher::new(Engine::new(rt), r2, cfg).run().unwrap();
+        Batcher::new(testing::test_engine(), r2, cfg).run().unwrap();
     });
-    Some((router, handle))
+    Stack {
+        router,
+        handle,
+        max_ctx,
+    }
 }
 
 fn prompt_text(n: usize) -> String {
@@ -216,18 +226,17 @@ fn sse_event_ordering_and_framing() {
 }
 
 // ---------------------------------------------------------------------------
-// artifact-backed
+// engine-backed (always-on)
 // ---------------------------------------------------------------------------
 
 #[test]
 fn streamed_tokens_match_oneshot_exactly() {
-    let Some((router, handle)) = start_stack(BatcherConfig {
+    let stack = start_stack(BatcherConfig {
         max_active: 4,
         prefill_block_budget: 2,
         ..Default::default()
-    }) else {
-        return;
-    };
+    });
+    let router = stack.router.clone();
     let tok = Tokenizer::new(384);
     let prompt = tok.encode(&prompt_text(400));
     let cfg = SparsityConfig::fastforward(0.5);
@@ -289,19 +298,18 @@ fn streamed_tokens_match_oneshot_exactly() {
     }
 
     router.close();
-    handle.join().unwrap();
+    stack.handle.join().unwrap();
     assert_eq!(router.kv_pool.lock().unwrap().used_pages(), 0);
 }
 
 #[test]
 fn disconnect_mid_stream_releases_kv_pages() {
-    let Some((router, handle)) = start_stack(BatcherConfig {
+    let stack = start_stack(BatcherConfig {
         max_active: 4,
         prefill_block_budget: 2,
         ..Default::default()
-    }) else {
-        return;
-    };
+    });
+    let router = stack.router.clone();
     let server = Arc::new(Server {
         router: router.clone(),
         metrics: router.metrics.clone(),
@@ -363,29 +371,24 @@ fn disconnect_mid_stream_releases_kv_pages() {
     );
 
     router.close();
-    handle.join().unwrap();
+    stack.handle.join().unwrap();
 }
 
 #[test]
 fn interactive_preempts_batch_prefill() {
-    let Some((router, handle)) = start_stack(BatcherConfig {
+    let stack = start_stack(BatcherConfig {
         max_active: 4,
         prefill_block_budget: 2,
         decode_first_budget: 1,
         slo: true,
-    }) else {
-        return;
-    };
+    });
+    let router = stack.router.clone();
     let tok = Tokenizer::new(384);
 
     // batch-class long prefill: as long as the context bound allows
     // (the acceptance scenario's "16K-token" prefill scaled to the
     // test model's max_ctx)
-    let max_ctx = Manifest::load(&fastforward::test_artifacts_dir().unwrap())
-        .unwrap()
-        .model
-        .max_ctx;
-    let batch_len = max_ctx.saturating_sub(64).min(3400);
+    let batch_len = stack.max_ctx.saturating_sub(64).min(3400);
     let mut batch_prompt = tok.encode(&prompt_text(batch_len));
     batch_prompt.truncate(batch_len);
     let (btx, brx) = channel();
@@ -403,7 +406,9 @@ fn interactive_preempts_batch_prefill() {
         .expect("admit batch");
 
     // give the executor a moment to admit it and start prefilling
-    std::thread::sleep(Duration::from_millis(100));
+    // (short enough that the CPU reference backend cannot race through
+    // the whole batch prefill before the interactive request lands)
+    std::thread::sleep(Duration::from_millis(50));
 
     // interactive short request arrives mid-prefill
     let (itx, irx) = channel();
@@ -465,6 +470,6 @@ fn interactive_preempts_batch_prefill() {
     );
 
     router.close();
-    handle.join().unwrap();
+    stack.handle.join().unwrap();
     assert_eq!(router.kv_pool.lock().unwrap().used_pages(), 0);
 }

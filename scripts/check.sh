@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# Repo check gate: build, tests, doctests, examples, docs
-# (missing-docs denied), markdown link lint, formatting.
+# Repo check gate: build, tests, doctests, clippy, examples, docs
+# (missing-docs denied), CPU-backend smoke run, markdown link lint,
+# formatting.
 # Usage: scripts/check.sh [extra cargo args, e.g. --features pjrt]
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -16,8 +17,19 @@ cargo test -q "${extra[@]}"
 echo "==> cargo test --doc"
 cargo test --doc -q "${extra[@]}"
 
+echo "==> cargo clippy --all-targets (warnings denied)"
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets --quiet "${extra[@]}" -- -D warnings
+else
+    echo "    (clippy not installed — skipped)"
+fi
+
 echo "==> cargo build --examples"
 cargo build --release --examples "${extra[@]}"
+
+echo "==> quickstart smoke run (--backend cpu: no artifacts needed)"
+FF_BACKEND=cpu cargo run --release --quiet "${extra[@]}" \
+    --example quickstart
 
 echo "==> cargo doc --no-deps (warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet "${extra[@]}"
