@@ -5,11 +5,14 @@
 #   make serve       run the server against the built artifacts
 #   make serve-cpu   run the server on the pure-Rust CPU backend
 #                    (no artifacts, no XLA bindings needed)
+#   make bench-cpu   fig6/fig7 wall-clock speedup benches on the CPU
+#                    backend; writes rust/BENCH_fig6_cpu.json and
+#                    rust/BENCH_fig7_cpu.json
 
 ARTIFACTS ?= rust/artifacts
 REPLICAS  ?= 1
 
-.PHONY: check artifacts serve serve-cpu clean
+.PHONY: check artifacts serve serve-cpu bench-cpu clean
 
 check:
 	scripts/check.sh
@@ -24,6 +27,10 @@ serve:
 serve-cpu:
 	cd rust && cargo run --release -- serve \
 		--backend cpu --replicas $(REPLICAS)
+
+bench-cpu:
+	cd rust && cargo bench --bench fig6_ffn_speedup -- --backend cpu
+	cd rust && cargo bench --bench fig7_e2e_speedup -- --backend cpu
 
 clean:
 	cd rust && cargo clean

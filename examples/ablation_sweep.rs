@@ -6,6 +6,7 @@
 //!         (schedule | dense-blocks | compensator | predictor | all)
 
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 use fastforward::engine::{Engine, SparsityConfig};
@@ -28,8 +29,8 @@ fn main() -> Result<()> {
         max_gen_tokens: 16,
     };
 
-    let m = Rc::new(Manifest::load(&dir)?);
-    let w = Rc::new(WeightStore::load(&m)?);
+    let m = Arc::new(Manifest::load(&dir)?);
+    let w = Arc::new(WeightStore::load(&m)?);
     let engine = Engine::new(Rc::new(Runtime::new(m, w)?));
     let tasks = eval::build_tasks(&spec);
 

@@ -12,6 +12,7 @@
 //!         --example quickstart
 
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 use fastforward::engine::{Engine, SparsityConfig};
@@ -37,8 +38,8 @@ fn load_engine() -> Result<Engine> {
         return Engine::synthetic_cpu(&SyntheticSpec::default());
     }
     println!("backend: {} over artifacts at {dir:?}", kind.label());
-    let manifest = Rc::new(Manifest::load(&dir)?);
-    let weights = Rc::new(WeightStore::load(&manifest)?);
+    let manifest = Arc::new(Manifest::load(&dir)?);
+    let weights = Arc::new(WeightStore::load(&manifest)?);
     Ok(Engine::new(Rc::new(Runtime::with_backend(
         kind, manifest, weights,
     )?)))

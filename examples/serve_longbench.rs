@@ -47,8 +47,8 @@ fn main() -> Result<()> {
     let r2 = router.clone();
     let dir2 = dir.clone();
     let exec = std::thread::spawn(move || -> Result<()> {
-        let m = Rc::new(Manifest::load(&dir2)?);
-        let w = Rc::new(WeightStore::load(&m)?);
+        let m = Arc::new(Manifest::load(&dir2)?);
+        let w = Arc::new(WeightStore::load(&m)?);
         let rt = Rc::new(Runtime::new(m, w)?);
         Batcher::new(
             Engine::new(rt),
@@ -133,8 +133,8 @@ fn main() -> Result<()> {
 
     // ---- offline accuracy summary on the same task family ---------------
     println!("\n== accuracy (offline, same engine artifacts) ==");
-    let m = Rc::new(Manifest::load(&dir)?);
-    let w = Rc::new(WeightStore::load(&m)?);
+    let m = Arc::new(Manifest::load(&dir)?);
+    let w = Arc::new(WeightStore::load(&m)?);
     let engine = Engine::new(Rc::new(Runtime::new(m, w)?));
     let spec = EvalSpec {
         tasks_per_group: 2,

@@ -43,8 +43,8 @@ fn main() -> Result<()> {
     ));
     let r2 = router.clone();
     let exec = std::thread::spawn(move || -> Result<()> {
-        let m = Rc::new(Manifest::load(&dir)?);
-        let w = Rc::new(WeightStore::load(&m)?);
+        let m = Arc::new(Manifest::load(&dir)?);
+        let w = Arc::new(WeightStore::load(&m)?);
         let rt = Rc::new(Runtime::new(m, w)?);
         Batcher::new(Engine::new(rt), r2, BatcherConfig::default()).run()
     });

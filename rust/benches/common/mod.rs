@@ -5,6 +5,7 @@
 //! with mean/σ/percentile reporting).
 
 use std::rc::Rc;
+use std::sync::Arc;
 
 use fastforward::engine::Engine;
 use fastforward::manifest::Manifest;
@@ -16,10 +17,26 @@ use fastforward::weights::WeightStore;
 
 pub fn engine() -> Option<Engine> {
     let dir = fastforward::test_artifacts_dir()?;
-    let m = Rc::new(Manifest::load(&dir).unwrap());
-    let w = Rc::new(WeightStore::load(&m).unwrap());
+    let m = Arc::new(Manifest::load(&dir).unwrap());
+    let w = Arc::new(WeightStore::load(&m).unwrap());
     let rt = Rc::new(Runtime::new(m, w).unwrap());
     Some(Engine::new(rt))
+}
+
+/// Whether `--backend cpu` was passed: the bench then runs the
+/// deterministic synthetic reference model on the fast CPU backend
+/// (no artifacts needed) and emits a `BENCH_*_cpu.json` artifact.
+pub fn cpu_mode() -> bool {
+    fastforward::util::cli::Args::parse_env().str("backend", "") == "cpu"
+}
+
+/// Write a machine-readable bench artifact next to the bench's stdout
+/// report (`make bench-cpu` collects these).
+pub fn write_bench_json(path: &str, body: &str) {
+    match std::fs::write(path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("[bench] failed to write {path}: {e}"),
+    }
 }
 
 pub fn prompt_tokens(len_tokens: usize, seed: u64) -> Vec<i32> {

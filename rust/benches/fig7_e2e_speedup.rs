@@ -2,8 +2,15 @@
 //! function of context size for sparsity ∈ {30, 40, 50}%.
 //!
 //! Two reproductions:
-//!  (a) measured wall-clock speedup of the real engine on the ff-mini
-//!      artifacts (contexts up to the artifact max), and
+//!  (a) measured wall-clock speedup of the real engine — on the
+//!      ff-mini artifacts by default, or with `--backend cpu` on the
+//!      synthetic reference model over the fast tiled/parallel CPU
+//!      backend (no artifacts needed; emits `BENCH_fig7_cpu.json`).
+//!      The CPU mode disables the compensator: the reference
+//!      compensator recomputes every dropped neuron exactly (dense
+//!      cost by construction, see runtime/cpu.rs), while the paper's
+//!      trained low-rank compensator is a negligible overhead — the
+//!      nc path is the faithful compute profile.
 //!  (b) the compute-bound (FLOP-ratio) curves for the paper's LLaMA
 //!      1B/3B/8B shapes across 256–64K tokens — the exact quantity the
 //!      paper plots, including the dense first/last blocks and the
@@ -17,11 +24,30 @@ use fastforward::util::stats;
 
 fn main() {
     common::header("Figure 7", "e2e compute-bound prefill speedup vs context");
-    let Some(engine) = common::engine() else { return };
+    let cpu = common::cpu_mode();
+    let engine = if cpu {
+        println!("backend: cpu (synthetic reference model)");
+        Some(fastforward::testing::cpu_engine())
+    } else {
+        common::engine()
+    };
+    let Some(engine) = engine else { return };
     let max_ctx = engine.manifest().model.max_ctx;
 
-    println!("\n-- measured wall-clock speedup (ff-mini artifacts) --");
+    let sparse_cfg = |sp: f64| {
+        let mut cfg = SparsityConfig::fastforward(sp);
+        if cpu {
+            cfg.compensator = false; // see module docs
+        }
+        cfg
+    };
+
+    println!(
+        "\n-- measured wall-clock speedup ({}) --",
+        if cpu { "synthetic model, cpu backend" } else { "ff-mini artifacts" }
+    );
     println!("{:>8} {:>10} {:>10} {:>10}", "ctx", "30%", "40%", "50%");
+    let mut json_rows: Vec<(usize, Vec<f64>)> = Vec::new();
     for ctx in [512usize, 1024, 2048, 4096] {
         if ctx > max_ctx {
             break;
@@ -36,8 +62,9 @@ fn main() {
             },
         );
         print!("{ctx:>8}");
+        let mut speedups = Vec::new();
         for sp in [0.3, 0.4, 0.5] {
-            let cfg = SparsityConfig::fastforward(sp);
+            let cfg = sparse_cfg(sp);
             let s = stats::bench(
                 &format!("fig7/sp{:.0}/ctx{ctx}", sp * 100.0),
                 1,
@@ -46,9 +73,32 @@ fn main() {
                     engine.prefill(&prompt, &cfg).unwrap();
                 },
             );
+            speedups.push(dense / s);
             print!(" {:>9.2}x", dense / s);
         }
         println!();
+        json_rows.push((ctx, speedups));
+    }
+    if cpu {
+        let mut body = String::from("{\n  \"figure\": \"fig7\",\n");
+        body += "  \"backend\": \"cpu\",\n";
+        body += &format!(
+            "  \"model\": \"{}\",\n",
+            engine.manifest().model.name
+        );
+        body += "  \"sparsities\": [0.3, 0.4, 0.5],\n  \"rows\": [\n";
+        for (i, (ctx, sp)) in json_rows.iter().enumerate() {
+            body += &format!(
+                "    {{\"ctx\": {ctx}, \"speedups\": \
+                 [{:.4}, {:.4}, {:.4}]}}{}\n",
+                sp[0],
+                sp[1],
+                sp[2],
+                if i + 1 == json_rows.len() { "" } else { "," }
+            );
+        }
+        body += "  ]\n}\n";
+        common::write_bench_json("BENCH_fig7_cpu.json", &body);
     }
 
     println!("\n-- compute-bound speedup, paper model shapes --");

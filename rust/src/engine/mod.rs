@@ -208,17 +208,34 @@ impl Engine {
     }
 
     /// Build a fully self-contained engine: synthetic manifest, seeded
-    /// deterministic weights, pure-Rust CPU backend. No artifacts, no
-    /// `pjrt` feature — this is what the always-on numeric test tier
-    /// and `--backend cpu` serving run on.
+    /// deterministic weights, pure-Rust CPU backend (fast tiled
+    /// kernels; thread count from `FF_CPU_THREADS` / available
+    /// parallelism). No artifacts, no `pjrt` feature — this is what the
+    /// always-on numeric test tier and `--backend cpu` serving run on.
     pub fn synthetic_cpu(
         spec: &crate::manifest::SyntheticSpec,
     ) -> Result<Engine> {
-        let manifest = Rc::new(Manifest::synthetic(spec));
-        let weights = Rc::new(crate::weights::WeightStore::seeded(
-            &manifest, spec.seed,
-        ));
-        Ok(Engine::new(Rc::new(Runtime::cpu(manifest, weights)?)))
+        Self::synthetic_cpu_with(
+            spec,
+            crate::runtime::CpuOptions::default(),
+        )
+    }
+
+    /// [`Engine::synthetic_cpu`] with explicit CPU backend options —
+    /// how the conformance suite builds reference (sequential oracle)
+    /// and fast (`threads ∈ {1, 4, …}`) engines over the *same* seeded
+    /// weights.
+    pub fn synthetic_cpu_with(
+        spec: &crate::manifest::SyntheticSpec,
+        opts: crate::runtime::CpuOptions,
+    ) -> Result<Engine> {
+        let manifest = std::sync::Arc::new(Manifest::synthetic(spec));
+        let weights = std::sync::Arc::new(
+            crate::weights::WeightStore::seeded(&manifest, spec.seed),
+        );
+        Ok(Engine::new(Rc::new(Runtime::cpu_with_options(
+            manifest, weights, opts,
+        )?)))
     }
 
     /// The artifact manifest this engine dispatches against.
@@ -309,14 +326,34 @@ impl Engine {
         Ok(y)
     }
 
-    /// One fused sparse layer (trained predictor + compensator inside).
-    fn layer_sparse_fused(&self, l: usize, k: usize, x: &[f32], t: usize,
+    /// The fused sparse executable the manifest offers for this config,
+    /// or `None` → split pipeline. Trained-predictor configs fuse; with
+    /// the compensator the classic `layer_sparse_*` is used, without it
+    /// the sub-dense `layer_sparse_nc_*` — but only where the manifest
+    /// ships it (synthetic manifests do; AOT bundles do not, and fall
+    /// back to the split path exactly as before).
+    fn fused_sparse_exe(&self, cfg: &SparsityConfig, k: usize, t: usize,
+                        s: usize) -> Option<String> {
+        if cfg.source != ExpertSource::Trained {
+            return None;
+        }
+        let name = if cfg.compensator {
+            self.exe_name_sparse(k, t, s)
+        } else {
+            format!("layer_sparse_nc_k{k}_t{t}_s{s}")
+        };
+        self.rt.manifest.has_executable(&name).then_some(name)
+    }
+
+    /// One fused sparse layer (trained predictor inside; `exe` selects
+    /// the compensated or the no-compensator variant).
+    fn layer_sparse_fused(&self, exe: &str, l: usize, x: &[f32], t: usize,
                           cache: &mut SeqKvCache, pos: usize)
                           -> Result<Vec<f32>> {
         let s = cache.bucket;
         let pos_i = [pos as i32];
         let out = self.rt.run(
-            &self.exe_name_sparse(k, t, s),
+            exe,
             l,
             &[
                 ("x", Input::F32(x, vec![t, self.d])),
@@ -376,16 +413,29 @@ impl Engine {
 
     /// Split path, FFN half at external indices. Returns the sparse
     /// residual output with (optionally) the compensator term added.
+    /// When no compensation is requested and the manifest ships the
+    /// `ffn_sparse_nc_*` variant (synthetic manifests), dispatches it
+    /// instead: same output values, but the backend never touches
+    /// dropped neurons — the sub-dense module the fig6 CPU bench
+    /// measures.
     fn ffn_sparse_ext(&self, l: usize, k: usize, h: &[f32], idx: &[i32],
                       compensate: bool) -> Result<Vec<f32>> {
         let t = self.block;
+        let inputs = [
+            ("h", Input::F32(h, vec![t, self.d])),
+            ("idx", Input::I32(idx, vec![idx.len()])),
+        ];
+        if !compensate {
+            let nc = format!("ffn_sparse_nc_k{k}_t{t}");
+            if self.rt.manifest.has_executable(&nc) {
+                let out = self.rt.run(&nc, l, &inputs)?;
+                return Ok(out.into_iter().next().unwrap().data);
+            }
+        }
         let out = self.rt.run(
             &format!("ffn_sparse_ext_k{k}_t{t}"),
             l,
-            &[
-                ("h", Input::F32(h, vec![t, self.d])),
-                ("idx", Input::I32(idx, vec![idx.len()])),
-            ],
+            &inputs,
         )?;
         let mut it = out.into_iter();
         let mut y = it.next().unwrap().data;
@@ -418,12 +468,6 @@ impl Engine {
         Ok(())
     }
 
-    /// Whether the fused sparse executable covers this config (fast path:
-    /// trained predictor with compensation — the production setting).
-    fn fused_ok(&self, cfg: &SparsityConfig) -> bool {
-        cfg.source == ExpertSource::Trained && cfg.compensator
-    }
-
     /// Process one full 128-token block through all layers.
     /// `static_idx`: per-layer expert indices captured on the first block
     /// (FirstBlockStatic source); filled in when `capture_static`.
@@ -437,10 +481,16 @@ impl Engine {
         for l in 0..self.n_layers {
             let k = layer_ks[l];
             let layer_dense = dense || k >= d_ffn;
+            let fused = if layer_dense || capture_static {
+                None
+            } else {
+                self.fused_sparse_exe(cfg, k, self.block, cache.bucket)
+            };
             if layer_dense && !capture_static {
                 x = self.layer_dense(l, &x, self.block, cache, pos)?;
-            } else if !layer_dense && self.fused_ok(cfg) {
-                x = self.layer_sparse_fused(l, k, &x, self.block, cache, pos)?;
+            } else if let Some(exe) = &fused {
+                x = self.layer_sparse_fused(exe, l, &x, self.block,
+                                            cache, pos)?;
             } else {
                 // split path (ablations, and static capture on block 0)
                 let h = self.layer_attn(l, &x, cache, pos)?;
@@ -484,14 +534,23 @@ impl Engine {
     }
 
     /// One T=1 step through all layers (prompt tail / decode).
-    pub(crate) fn run_token(&self, x0: Vec<f32>, cache: &mut SeqKvCache, pos: usize,
-                 sparse: bool, layer_ks: &[usize]) -> Result<Vec<f32>> {
+    pub(crate) fn run_token(&self, x0: Vec<f32>, cache: &mut SeqKvCache,
+                 pos: usize, sparse: bool, cfg: &SparsityConfig,
+                 layer_ks: &[usize]) -> Result<Vec<f32>> {
         let d_ffn = self.rt.manifest.model.d_ffn;
         let mut x = x0;
         for l in 0..self.n_layers {
             let k = layer_ks[l];
             if sparse && k < d_ffn {
-                x = self.layer_sparse_fused(l, k, &x, 1, cache, pos)?;
+                // T=1 steps always run the fused trained-predictor op;
+                // without the compensator the sub-dense nc variant is
+                // preferred where the manifest ships it.
+                let exe = self
+                    .fused_sparse_exe(cfg, k, 1, cache.bucket)
+                    .unwrap_or_else(|| {
+                        self.exe_name_sparse(k, 1, cache.bucket)
+                    });
+                x = self.layer_sparse_fused(&exe, l, &x, 1, cache, pos)?;
             } else {
                 x = self.layer_dense(l, &x, 1, cache, pos)?;
             }
@@ -527,7 +586,7 @@ impl Engine {
             .collect();
         let x = self.embed(&[token])?;
         let sparse = !cfg.is_dense() && cfg.sparse_decode;
-        let x = self.run_token(x, cache, pos, sparse, &decode_ks)?;
+        let x = self.run_token(x, cache, pos, sparse, cfg, &decode_ks)?;
         cache.advance(1);
         self.lm_head(&x, 1)
     }

@@ -200,7 +200,8 @@ impl PrefillSession {
             let sparse_tail = !self.cfg.is_dense() && !self.cfg.dense_last;
             let t1 = Instant::now();
             self.x_last = engine.run_token(
-                x, &mut self.cache, pos, sparse_tail, &self.decode_ks,
+                x, &mut self.cache, pos, sparse_tail, &self.cfg,
+                &self.decode_ks,
             )?;
             self.timing.layers += t1.elapsed();
             self.x_last_is_t1 = true;

@@ -35,6 +35,9 @@ fn usage() -> ! {
               compiled with the pjrt feature, cpu otherwise. cpu needs
               no artifacts: it serves the deterministic synthetic
               reference model, and is incompatible with --artifacts)
+             --cpu-threads N (cpu backend worker lanes per engine;
+              default FF_CPU_THREADS, else available cores capped at 8.
+              thread count never changes a single output bit)
   serve:     --addr HOST:PORT --sparsity S --max-active N --queue N
              --replicas N (executor pool size, default 1)
              --prefix-cache-mb MB (shared prefix KV cache, default 64;
@@ -96,8 +99,8 @@ fn load_engine(args: &Args) -> Result<Engine> {
     match resolve_backend(args)? {
         (_, None) => Engine::synthetic_cpu(&SyntheticSpec::default()),
         (kind, Some(dir)) => {
-            let manifest = Rc::new(Manifest::load(&dir)?);
-            let weights = Rc::new(WeightStore::load(&manifest)?);
+            let manifest = Arc::new(Manifest::load(&dir)?);
+            let weights = Arc::new(WeightStore::load(&manifest)?);
             let rt =
                 Rc::new(Runtime::with_backend(kind, manifest, weights)?);
             Ok(Engine::new(rt))
@@ -406,6 +409,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn main() -> Result<()> {
     let args = Args::parse_env();
+    // `--cpu-threads N` is forwarded through the FF_CPU_THREADS env var
+    // so every construction site (serve replicas, one-shot engines)
+    // resolves the same count; done before any thread spawns.
+    if let Some(n) = args.opt_str("cpu-threads") {
+        std::env::set_var(
+            fastforward::util::threadpool::THREADS_ENV,
+            n,
+        );
+    }
     match args.positional.first().map(|s| s.as_str()) {
         Some("serve") => cmd_serve(&args),
         Some("generate") => cmd_generate(&args),

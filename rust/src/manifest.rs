@@ -166,6 +166,13 @@ pub struct SyntheticSpec {
     pub max_ctx: usize,
     /// KV bucket sizes, ascending.
     pub buckets: Vec<usize>,
+    /// Rank of the low-rank expert predictor (`pred.{l}.wd` is
+    /// `[d_model, pred_rank]`, `pred.{l}.wu` is `[pred_rank, d_ffn]`).
+    /// The paper's predictors are small networks whose overhead is a
+    /// fraction of one FFN matmul — modelling them full-rank would make
+    /// the predictor as expensive as the FFN it prunes and hide the
+    /// sparse speedup entirely.
+    pub pred_rank: usize,
     /// Seed for [`crate::weights::WeightStore::seeded`].
     pub seed: u64,
 }
@@ -188,6 +195,7 @@ impl Default for SyntheticSpec {
             ftile: 32,
             max_ctx: 2048,
             buckets: vec![256, 512, 1024, 2048],
+            pred_rank: 16,
             seed: 0xF057_F0A4,
         }
     }
@@ -308,6 +316,8 @@ impl Manifest {
                    "d_ffn must be a multiple of ftile");
         assert!(spec.vocab >= 259,
                 "vocab must cover the byte-tokenizer specials (>= 259)");
+        assert!(spec.pred_rank > 0 && spec.pred_rank <= spec.d_ffn,
+                "pred_rank must be in [1, d_ffn]");
         let (d, f) = (spec.d_model, spec.d_ffn);
         let (nh, nkv, dh) = (spec.n_heads, spec.n_kv_heads, spec.d_head);
 
@@ -337,7 +347,10 @@ impl Manifest {
             add_w(&mut weights, format!("layers.{l}.w_gate"), vec![d, f]);
             add_w(&mut weights, format!("layers.{l}.w_up"), vec![d, f]);
             add_w(&mut weights, format!("layers.{l}.w_down"), vec![f, d]);
-            add_w(&mut weights, format!("pred.{l}.w"), vec![d, f]);
+            add_w(&mut weights, format!("pred.{l}.wd"),
+                  vec![d, spec.pred_rank]);
+            add_w(&mut weights, format!("pred.{l}.wu"),
+                  vec![spec.pred_rank, f]);
             add_w(&mut weights, format!("comp.{l}.alpha"), vec![f]);
         }
 
@@ -375,6 +388,11 @@ impl Manifest {
             args.push(farg(lay("w_gate"), vec![d, f]));
             args.push(farg(lay("w_up"), vec![d, f]));
             args.push(farg(lay("w_down"), vec![f, d]));
+        };
+        let r = spec.pred_rank;
+        let pred_weights = |args: &mut Vec<ArgSpec>| {
+            args.push(farg(ArgKind::PredWeight("wd".into()), vec![d, r]));
+            args.push(farg(ArgKind::PredWeight("wu".into()), vec![r, f]));
         };
         let layer_inputs = |args: &mut Vec<ArgSpec>, t: usize, s: usize| {
             args.push(xarg("x", vec![t, d]));
@@ -421,19 +439,29 @@ impl Manifest {
                 layer_inputs(&mut args, t, s);
                 add_x(format!("layer_dense_t{t}_s{s}"), args);
                 for &k in &k_grid {
+                    // fused sparse layer, exact compensator inside
                     let mut args = Vec::new();
                     attn_weights(&mut args);
                     ffn_weights(&mut args);
-                    args.push(farg(
-                        ArgKind::PredWeight("w".into()),
-                        vec![d, f],
-                    ));
+                    pred_weights(&mut args);
                     args.push(farg(
                         ArgKind::CompWeight("alpha".into()),
                         vec![f],
                     ));
                     layer_inputs(&mut args, t, s);
                     add_x(format!("layer_sparse_k{k}_t{t}_s{s}"), args);
+                    // fused sparse layer, no compensator: the backend
+                    // may skip dropped-neuron activations entirely —
+                    // the genuinely-sub-dense compute profile of the
+                    // paper's kernels (synthetic manifests only; AOT
+                    // bundles do not ship this variant and the engine
+                    // falls back to the split pipeline)
+                    let mut args = Vec::new();
+                    attn_weights(&mut args);
+                    ffn_weights(&mut args);
+                    pred_weights(&mut args);
+                    layer_inputs(&mut args, t, s);
+                    add_x(format!("layer_sparse_nc_k{k}_t{t}_s{s}"), args);
                 }
             }
             let mut args = Vec::new();
@@ -442,14 +470,12 @@ impl Manifest {
             add_x(format!("layer_attn_t{}_s{s}", spec.block), args);
         }
         let t = spec.block;
-        add_x(
-            format!("predictor_t{t}"),
-            vec![
-                farg(lay("rms2"), vec![d]),
-                farg(ArgKind::PredWeight("w".into()), vec![d, f]),
-                xarg("h", vec![t, d]),
-            ],
-        );
+        {
+            let mut args = vec![farg(lay("rms2"), vec![d])];
+            pred_weights(&mut args);
+            args.push(xarg("h", vec![t, d]));
+            add_x(format!("predictor_t{t}"), args);
+        }
         add_x(
             format!("ffn_acts_t{t}"),
             vec![
@@ -472,6 +498,13 @@ impl Manifest {
             args.push(xarg("h", vec![t, d]));
             args.push(iarg("idx", vec![k]));
             add_x(format!("ffn_sparse_ext_k{k}_t{t}"), args);
+            // external-index sparse FFN without the compensator output
+            // (only selected neurons are ever touched)
+            let mut args = Vec::new();
+            ffn_weights(&mut args);
+            args.push(xarg("h", vec![t, d]));
+            args.push(iarg("idx", vec![k]));
+            add_x(format!("ffn_sparse_nc_k{k}_t{t}"), args);
         }
 
         // --- calibrated schedule via the Algorithm-1 twin ---
@@ -551,6 +584,13 @@ impl Manifest {
             h = hash::mix(h, v as u64);
         }
         h
+    }
+
+    /// Whether the manifest ships an executable named `name` — the
+    /// capability probe the engine uses to pick fused fast paths that
+    /// only synthetic manifests provide (e.g. `layer_sparse_nc_*`).
+    pub fn has_executable(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
     }
 
     /// Resolve a weight-arg to a concrete weight name for `layer`.
@@ -668,11 +708,18 @@ mod tests {
                 "layer_sparse_k{}_t{block}_s{}",
                 m.k_grid[0], m.model.buckets[0]
             ),
+            format!(
+                "layer_sparse_nc_k{}_t{block}_s{}",
+                m.k_grid[0], m.model.buckets[0]
+            ),
+            format!("layer_sparse_nc_k{}_t1_s{}",
+                    m.k_grid[0], m.model.buckets[0]),
             format!("layer_attn_t{block}_s{}", m.model.buckets[0]),
             format!("predictor_t{block}"),
             format!("ffn_acts_t{block}"),
             format!("ffn_dense_t{block}"),
             format!("ffn_sparse_ext_k{}_t{block}", m.k_grid[0]),
+            format!("ffn_sparse_nc_k{}_t{block}", m.k_grid[0]),
         ] {
             assert!(m.executables.contains_key(&name), "{name} missing");
         }

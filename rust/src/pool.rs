@@ -35,6 +35,12 @@ pub struct ExecutorPool {
     workers: Vec<JoinHandle<Result<()>>>,
 }
 
+/// A per-replica engine factory over shared model state, as built by
+/// [`ExecutorPool::shared_backend_factory`]: each call constructs one
+/// replica's engine from the same `Arc<Manifest>` / `Arc<WeightStore>`.
+pub type BackendFactory =
+    Box<dyn Fn() -> Result<Engine> + Send + Sync + 'static>;
+
 /// Drop guard that marks a replica dead when its executor thread
 /// terminates for *any* reason — normal drain, error return, or panic
 /// (unwinding runs destructors). Without it, a panicking executor
@@ -118,39 +124,84 @@ impl ExecutorPool {
     ///   cannot execute artifact bundles (their fused low-rank
     ///   predictor/compensator networks are PJRT-only), and PJRT needs
     ///   artifacts.
+    ///
+    /// The manifest and weights are loaded (or seeded) **once**, on the
+    /// caller's thread, and shared across every replica through `Arc`s
+    /// — replicas must never re-seed or re-load their own copy, or a
+    /// torn deployment could serve different weights per replica (see
+    /// [`ExecutorPool::shared_backend_factory`] and the fingerprint
+    /// regression test in `tests/backend_conformance.rs`). A load
+    /// failure degrades to an error factory, so queued requests are
+    /// answered with the error instead of hanging.
     pub fn spawn_backend(router: Arc<Router>, cfg: BatcherConfig,
                          kind: crate::runtime::BackendKind,
                          dir: Option<std::path::PathBuf>) -> ExecutorPool {
+        match Self::shared_backend_factory(kind, dir) {
+            Ok(factory) => Self::spawn(router, cfg, factory),
+            Err(e) => {
+                let msg = e.to_string();
+                Self::spawn(router, cfg, move || Err(anyhow!("{msg}")))
+            }
+        }
+    }
+
+    /// Build the per-replica engine factory for
+    /// [`ExecutorPool::spawn_backend`]: resolves the backend/artifact
+    /// combination, loads (PJRT) or seeds (CPU) the manifest + weight
+    /// store exactly once, and returns a `Send + Sync` closure every
+    /// replica thread calls to construct its own engine over the
+    /// *shared* `Arc`s. Exposed so tests can assert the sharing
+    /// invariant (same allocation, equal numeric fingerprints across
+    /// replicas).
+    pub fn shared_backend_factory(
+        kind: crate::runtime::BackendKind,
+        dir: Option<std::path::PathBuf>,
+    ) -> Result<BackendFactory> {
         use crate::runtime::BackendKind;
-        Self::spawn(router, cfg, move || {
-            use std::rc::Rc;
-            match (kind, &dir) {
-                (BackendKind::Pjrt, Some(d)) => {
-                    let manifest =
-                        Rc::new(crate::manifest::Manifest::load(d)?);
-                    let weights = Rc::new(
-                        crate::weights::WeightStore::load(&manifest)?,
-                    );
-                    let rt = Rc::new(crate::runtime::Runtime::with_backend(
-                        kind, manifest, weights,
-                    )?);
-                    Ok(Engine::new(rt))
-                }
-                (BackendKind::Cpu, None) => Engine::synthetic_cpu(
-                    &crate::manifest::SyntheticSpec::default(),
-                ),
-                (BackendKind::Cpu, Some(d)) => Err(anyhow!(
+        let (manifest, weights) = match (kind, dir) {
+            (BackendKind::Pjrt, Some(d)) => {
+                let manifest =
+                    Arc::new(crate::manifest::Manifest::load(&d)?);
+                let weights = Arc::new(
+                    crate::weights::WeightStore::load(&manifest)?,
+                );
+                (manifest, weights)
+            }
+            (BackendKind::Cpu, None) => {
+                let spec = crate::manifest::SyntheticSpec::default();
+                let manifest =
+                    Arc::new(crate::manifest::Manifest::synthetic(&spec));
+                let weights = Arc::new(
+                    crate::weights::WeightStore::seeded(
+                        &manifest, spec.seed,
+                    ),
+                );
+                (manifest, weights)
+            }
+            (BackendKind::Cpu, Some(d)) => {
+                return Err(anyhow!(
                     "the cpu backend serves the synthetic reference \
                      model and cannot execute the artifact bundle at \
                      {d:?} (its fused low-rank predictor/compensator \
                      networks are PJRT-only); use the pjrt backend"
-                )),
-                (BackendKind::Pjrt, None) => Err(anyhow!(
+                ))
+            }
+            (BackendKind::Pjrt, None) => {
+                return Err(anyhow!(
                     "the pjrt backend requires an artifact directory \
                      (run `make artifacts` or pass --artifacts DIR)"
-                )),
+                ))
             }
-        })
+        };
+        Ok(Box::new(move || -> Result<Engine> {
+            use std::rc::Rc;
+            let rt = Rc::new(crate::runtime::Runtime::with_backend(
+                kind,
+                manifest.clone(),
+                weights.clone(),
+            )?);
+            Ok(Engine::new(rt))
+        }))
     }
 
     /// Number of worker threads (== router replicas at spawn time).

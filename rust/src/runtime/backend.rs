@@ -9,8 +9,13 @@
 //! * [`crate::runtime::CpuBackend`] — a dependency-free pure-Rust
 //!   interpreter for the small op set the artifact ABI names (embed,
 //!   rmsnorm + attention, gather-indexed sparse FFN, dense FFN,
-//!   lm_head). Deterministic on any machine, which is what un-gates the
-//!   end-to-end numeric test suites in CI.
+//!   lm_head). Two flavours sharing one bit-exact numeric contract:
+//!   the fast tiled/parallel default (worker pool sized by
+//!   `--cpu-threads` / `FF_CPU_THREADS`) and the sequential scalar
+//!   [`crate::runtime::CpuBackend::reference`] oracle it is
+//!   conformance-tested against. Deterministic on any machine and at
+//!   any thread count, which is what un-gates the end-to-end numeric
+//!   test suites in CI.
 //!
 //! The [`crate::runtime::Runtime`] wrapper owns the manifest, performs
 //! ABI-level input validation common to every backend (missing inputs,
@@ -26,7 +31,10 @@ use super::{DispatchStats, Input, Output};
 ///
 /// Implementations are `!Send` by design (like the engine that drives
 /// them): every executor-pool replica constructs its own backend on its
-/// own thread.
+/// own thread — over *shared* `Arc<Manifest>` / `Arc<WeightStore>`
+/// state, so N replicas share one weight store (per-backend derived
+/// state — PJRT device buffers, the CPU fast path's transposed gate/up
+/// panels — stays per replica).
 pub trait Backend {
     /// Stable backend label ("cpu" / "pjrt"); feeds the runtime's
     /// numeric fingerprint so KV computed by one backend is never

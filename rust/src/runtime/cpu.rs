@@ -1,5 +1,26 @@
-//! Pure-Rust reference backend: a dependency-free, deterministic
-//! interpreter for the small op set the artifact ABI names.
+//! Pure-Rust CPU backend: a dependency-free, deterministic interpreter
+//! for the small op set the artifact ABI names — now in two flavours
+//! sharing one numeric contract:
+//!
+//! * **Fast** ([`CpuBackend::new`] / [`CpuBackend::with_options`]) —
+//!   cache-blocked/tiled matmuls, a gathered per-row sparse FFN path
+//!   over pre-transposed gate/up weights, and a worker-thread pool
+//!   ([`crate::util::threadpool::ThreadPool`], sized by
+//!   `--cpu-threads` / `FF_CPU_THREADS`) that parallelizes work across
+//!   token rows and neuron/output tiles.
+//! * **Reference** ([`CpuBackend::reference`]) — the original
+//!   sequential scalar interpreter, kept verbatim as the oracle the
+//!   fast path is tested against (`tests/backend_conformance.rs`).
+//!
+//! **Determinism across tiles and threads.** Every fast kernel
+//! partitions *output elements* across tasks and accumulates each
+//! element's reduction in exactly the order the naive loops use
+//! (ascending reduction index). Parallelism and tiling only change
+//! *which lane* computes an element, never the sequence of f32
+//! additions behind it — so the fast backend is **bit-identical** to
+//! the sequential reference for every op, at every thread count. Two
+//! runs of the same trace produce byte-identical logits, which is the
+//! foundation of the always-on numeric test tier (docs/TESTING.md).
 //!
 //! Every executable the engine can dispatch —
 //!
@@ -8,20 +29,20 @@
 //!   RMSNorm → dense SwiGLU FFN, with residual adds,
 //! * `layer_sparse_k{K}_t{T}_s{S}` — the fused sparse layer: predictor
 //!   scores → host top-K → gather-indexed sparse FFN → compensator,
+//! * `layer_sparse_nc_k{K}_t{T}_s{S}` — the fused sparse layer without
+//!   the compensator: the only variant whose compute is genuinely
+//!   *sub-dense* (only selected neurons are ever touched; see below),
 //! * `layer_attn_t{T}_s{S}` / `predictor_t{T}` / `ffn_acts_t{T}` /
-//!   `ffn_dense_t{T}` / `ffn_sparse_ext_k{K}_t{T}` — the split ablation
-//!   pipeline
+//!   `ffn_dense_t{T}` / `ffn_sparse_ext_k{K}_t{T}` /
+//!   `ffn_sparse_nc_k{K}_t{T}` — the split ablation pipeline
 //!
-//! — is interpreted directly over the [`WeightStore`], with no PJRT, no
-//! artifacts on disk, and no floating-point reordering: plain sequential
-//! f32 accumulation, so two runs of the same trace produce **byte-
-//! identical** logits. That determinism is the foundation of the
-//! always-on numeric test tier (see docs/TESTING.md).
+//! — is interpreted directly over the [`WeightStore`], with no PJRT and
+//! no artifacts on disk.
 //!
 //! Reference-semantics notes:
 //!
 //! * The sparse FFN iterates its (ascending) expert indices with the
-//!   same accumulation loop as the dense FFN, so `K == d_ffn` sparse
+//!   same accumulation order as the dense FFN, so `K == d_ffn` sparse
 //!   output is *bit-identical* to dense output — the strongest form of
 //!   the paper's "sparsity is exact at full K" sanity invariant.
 //! * The compensator is modeled as a per-layer learned gate `alpha`
@@ -30,19 +51,28 @@
 //!   (0, 1)) it strictly shrinks the sparse FFN error — both properties
 //!   hold by construction and are asserted by the test suite. The AOT
 //!   compensator is a trained low-rank net; the reference keeps its
-//!   *contract* in an exactly-testable form.
+//!   *contract* in an exactly-testable form. The price of exactness is
+//!   that compensated ops must compute every dropped neuron's true
+//!   activation — dense cost — which is why the wall-clock speedup
+//!   claims (fig6/fig7 `--backend cpu`, `tests/perf_smoke.rs`) are
+//!   measured on the `*_nc` variants, whose cost scales with `K`.
+//! * The expert predictor is low-rank (`pred.{l}.wd [d, r]` →
+//!   `pred.{l}.wu [r, f]`, r ≪ f), matching the paper's small
+//!   predictor networks: its overhead is a fraction of one FFN matmul
+//!   instead of a full one.
 
 #![allow(clippy::needless_range_loop)]
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::manifest::{ExecutableSpec, Manifest};
 use crate::sparsity::masks::top_k_indices;
+use crate::util::threadpool::{self, ThreadPool};
 use crate::weights::WeightStore;
 
 use super::backend::Backend;
@@ -60,11 +90,13 @@ enum Op {
     LmHead { t: usize },
     LayerDense { t: usize, s: usize },
     LayerSparse { k: usize, t: usize, s: usize },
+    LayerSparseNc { k: usize, t: usize, s: usize },
     LayerAttn { t: usize, s: usize },
     Predictor { t: usize },
     FfnActs { t: usize },
     FfnDense { t: usize },
     FfnSparseExt { k: usize, t: usize },
+    FfnSparseNc { k: usize, t: usize },
 }
 
 /// Split `name` into its base and its `t`/`s`/`k` parameters
@@ -112,6 +144,11 @@ fn parse_op(name: &str) -> Result<Op> {
             t: need(t, "t")?,
             s: need(s, "s")?,
         },
+        "layer_sparse_nc" => Op::LayerSparseNc {
+            k: need(k, "k")?,
+            t: need(t, "t")?,
+            s: need(s, "s")?,
+        },
         "layer_attn" => Op::LayerAttn {
             t: need(t, "t")?,
             s: need(s, "s")?,
@@ -120,6 +157,10 @@ fn parse_op(name: &str) -> Result<Op> {
         "ffn_acts" => Op::FfnActs { t: need(t, "t")? },
         "ffn_dense" => Op::FfnDense { t: need(t, "t")? },
         "ffn_sparse_ext" => Op::FfnSparseExt {
+            k: need(k, "k")?,
+            t: need(t, "t")?,
+        },
+        "ffn_sparse_nc" => Op::FfnSparseNc {
             k: need(k, "k")?,
             t: need(t, "t")?,
         },
@@ -169,7 +210,9 @@ fn rmsnorm_rows(x: &[f32], gain: &[f32], t: usize, d: usize) -> Vec<f32> {
     out
 }
 
-/// `x [t, m] @ w [m, n] -> [t, n]`, plain sequential accumulation.
+/// `x [t, m] @ w [m, n] -> [t, n]`, plain sequential accumulation (the
+/// naive reference kernel; [`kernels::matmul_tiled`] must match it
+/// bit-for-bit — see the kernel property suite below).
 fn matmul(x: &[f32], w: &[f32], t: usize, m: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(x.len(), t * m);
     debug_assert_eq!(w.len(), m * n);
@@ -182,6 +225,18 @@ fn matmul(x: &[f32], w: &[f32], t: usize, m: usize, n: usize) -> Vec<f32> {
             for (o, &wv) in or.iter_mut().zip(wr.iter()) {
                 *o += xv * wv;
             }
+        }
+    }
+    out
+}
+
+/// `w [rows, cols]` → `[cols, rows]` (row-major both ways).
+fn transpose(w: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(w.len(), rows * cols);
+    let mut out = vec![0.0f32; w.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = w[r * cols + c];
         }
     }
     out
@@ -235,29 +290,272 @@ fn complement(idx: &[i32], f: usize) -> Vec<i32> {
         .collect()
 }
 
+/// Cache-blocked kernels behind the fast path. Shared invariant: every
+/// kernel writes each output element from exactly one task, and
+/// accumulates its reduction in ascending reduction-index order — the
+/// same order as the naive reference loops — so tiling and threading
+/// never change a single output bit.
+mod kernels {
+    use crate::util::threadpool::ThreadPool;
+
+    /// Rows (tokens) per parallel task.
+    pub(super) const ROW_CHUNK: usize = 16;
+    /// Output-column tile width per task: 128 f32 = 512 B of
+    /// accumulator slab, small enough to stay in L1 while a weight
+    /// panel streams through.
+    pub(super) const COL_TILE: usize = 128;
+    /// Register-blocked row micro-tile: each loaded weight panel row is
+    /// reused across this many token rows.
+    const ROW_BLOCK: usize = 4;
+
+    /// Raw output pointer shareable across pool lanes.
+    ///
+    /// SAFETY: every call site partitions the output into disjoint
+    /// (row-range × column-range) regions, one task each, and the pool
+    /// joins all tasks before the owning `Vec` is touched again.
+    #[derive(Clone, Copy)]
+    struct OutPtr(*mut f32);
+    unsafe impl Send for OutPtr {}
+    unsafe impl Sync for OutPtr {}
+
+    /// The (row, column) block grid for a `[t, n]` output.
+    fn grid(t: usize, n: usize) -> (usize, usize) {
+        (t.div_ceil(ROW_CHUNK).max(1), n.div_ceil(COL_TILE).max(1))
+    }
+
+    /// Tiled `x [t, m] @ w [m, n] -> [t, n]`, bit-identical to the
+    /// naive `matmul` (per output element the `m` reduction ascends).
+    pub(super) fn matmul_tiled(x: &[f32], w: &[f32], t: usize, m: usize,
+                               n: usize, pool: &ThreadPool) -> Vec<f32> {
+        debug_assert_eq!(x.len(), t * m);
+        debug_assert_eq!(w.len(), m * n);
+        let mut out = vec![0.0f32; t * n];
+        let (rows, cols) = grid(t, n);
+        let optr = OutPtr(out.as_mut_ptr());
+        pool.run(rows * cols, |task| {
+            let (ri, ci) = (task / cols, task % cols);
+            let (r0, r1) = (ri * ROW_CHUNK, (ri * ROW_CHUNK + ROW_CHUNK).min(t));
+            let (c0, c1) = (ci * COL_TILE, (ci * COL_TILE + COL_TILE).min(n));
+            let p = optr;
+            // SAFETY: tasks cover disjoint [r0,r1) × [c0,c1) regions.
+            unsafe { matmul_block(x, w, m, n, r0, r1, c0, c1, p.0) };
+        });
+        out
+    }
+
+    /// Accumulate `out[r, c] += Σ_i x[r, i] · w[i, c]` over one block.
+    ///
+    /// SAFETY: caller guarantees `out` points at a `[t, n]` buffer and
+    /// no other thread touches rows `[r0, r1)` columns `[c0, c1)`.
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn matmul_block(x: &[f32], w: &[f32], m: usize, n: usize,
+                           r0: usize, r1: usize, c0: usize, c1: usize,
+                           out: *mut f32) {
+        let width = c1 - c0;
+        let mut rb = r0;
+        while rb < r1 {
+            let rend = (rb + ROW_BLOCK).min(r1);
+            for i in 0..m {
+                let wrow = &w[i * n + c0..i * n + c1];
+                for r in rb..rend {
+                    let xv = x[r * m + i];
+                    let orow = out.add(r * n + c0);
+                    for c in 0..width {
+                        *orow.add(c) += xv * wrow[c];
+                    }
+                }
+            }
+            rb = rend;
+        }
+    }
+
+    /// Gathered SwiGLU activations restricted to `idx`, compact layout:
+    /// `out[r, j'] = silu(h2[r]·gate_t[idx[j']]) * (h2[r]·up_t[idx[j']])`
+    /// over pre-transposed `[f, d]` gate/up weights, so each selected
+    /// neuron is one pair of contiguous row dots. Dots ascend the `d`
+    /// axis — bit-identical to the corresponding columns of the dense
+    /// `h2 @ w_gate` / `h2 @ w_up` matmuls. Cost scales with `idx.len()`
+    /// instead of `d_ffn`: this is the sub-dense sparse hot path.
+    pub(super) fn gather_acts(h2: &[f32], gate_t: &[f32], up_t: &[f32],
+                              t: usize, d: usize, idx: &[i32],
+                              pool: &ThreadPool) -> Vec<f32> {
+        let k = idx.len();
+        debug_assert_eq!(h2.len(), t * d);
+        let mut out = vec![0.0f32; t * k];
+        let (rows, cols) = grid(t, k);
+        let optr = OutPtr(out.as_mut_ptr());
+        pool.run(rows * cols, |task| {
+            let (ri, ci) = (task / cols, task % cols);
+            let (r0, r1) = (ri * ROW_CHUNK, (ri * ROW_CHUNK + ROW_CHUNK).min(t));
+            let (c0, c1) = (ci * COL_TILE, (ci * COL_TILE + COL_TILE).min(k));
+            let p = optr;
+            for r in r0..r1 {
+                let hr = &h2[r * d..(r + 1) * d];
+                for jj in c0..c1 {
+                    let j = idx[jj] as usize;
+                    let g: f32 = hr
+                        .iter()
+                        .zip(gate_t[j * d..(j + 1) * d].iter())
+                        .map(|(a, b)| a * b)
+                        .sum();
+                    let u: f32 = hr
+                        .iter()
+                        .zip(up_t[j * d..(j + 1) * d].iter())
+                        .map(|(a, b)| a * b)
+                        .sum();
+                    // SAFETY: element (r, jj) belongs to this task only.
+                    unsafe {
+                        *p.0.add(r * k + jj) = super::silu(g) * u;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// Tiled down-projection over full-width activations `[t, f]`:
+    /// `out[r, c] += Σ_{j ∈ idx} alpha?[j] · acts[r, j] · w_down[j, c]`,
+    /// `j` in `idx` order per element — bit-identical to the reference
+    /// `down_proj` loop.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn down_proj_tiled(acts: &[f32], w_down: &[f32],
+                                  alpha: Option<&[f32]>, t: usize,
+                                  f: usize, d: usize, idx: &[i32],
+                                  pool: &ThreadPool) -> Vec<f32> {
+        debug_assert_eq!(acts.len(), t * f);
+        debug_assert_eq!(w_down.len(), f * d);
+        let mut out = vec![0.0f32; t * d];
+        let (rows, cols) = grid(t, d);
+        let optr = OutPtr(out.as_mut_ptr());
+        pool.run(rows * cols, |task| {
+            let (ri, ci) = (task / cols, task % cols);
+            let (r0, r1) = (ri * ROW_CHUNK, (ri * ROW_CHUNK + ROW_CHUNK).min(t));
+            let (c0, c1) = (ci * COL_TILE, (ci * COL_TILE + COL_TILE).min(d));
+            let width = c1 - c0;
+            let p = optr;
+            for r in r0..r1 {
+                // SAFETY: rows/cols of this region belong to this task.
+                let orow = unsafe { p.0.add(r * d + c0) };
+                for &ji in idx {
+                    let j = ji as usize;
+                    let a = acts[r * f + j]
+                        * alpha.map_or(1.0, |al| al[j]);
+                    let wrow = &w_down[j * d + c0..j * d + c1];
+                    for c in 0..width {
+                        unsafe { *orow.add(c) += a * wrow[c] };
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// Tiled down-projection over *compact* activations `[t, K]`
+    /// (column `j'` holds neuron `idx[j']`):
+    /// `out[r, c] += Σ_{j'} acts[r, j'] · w_down[idx[j'], c]`.
+    /// Same per-element accumulation order as `down_proj_tiled` /
+    /// the reference loop over the same `idx`.
+    pub(super) fn down_proj_compact(acts: &[f32], w_down: &[f32],
+                                    t: usize, d: usize, idx: &[i32],
+                                    pool: &ThreadPool) -> Vec<f32> {
+        let k = idx.len();
+        debug_assert_eq!(acts.len(), t * k);
+        let mut out = vec![0.0f32; t * d];
+        let (rows, cols) = grid(t, d);
+        let optr = OutPtr(out.as_mut_ptr());
+        pool.run(rows * cols, |task| {
+            let (ri, ci) = (task / cols, task % cols);
+            let (r0, r1) = (ri * ROW_CHUNK, (ri * ROW_CHUNK + ROW_CHUNK).min(t));
+            let (c0, c1) = (ci * COL_TILE, (ci * COL_TILE + COL_TILE).min(d));
+            let width = c1 - c0;
+            let p = optr;
+            for r in r0..r1 {
+                // SAFETY: rows/cols of this region belong to this task.
+                let orow = unsafe { p.0.add(r * d + c0) };
+                for (jj, &ji) in idx.iter().enumerate() {
+                    let j = ji as usize;
+                    let a = acts[r * k + jj];
+                    let wrow = &w_down[j * d + c0..j * d + c1];
+                    for c in 0..width {
+                        unsafe { *orow.add(c) += a * wrow[c] };
+                    }
+                }
+            }
+        });
+        out
+    }
+}
+
+/// Construction options for [`CpuBackend::with_options`].
+#[derive(Debug, Clone, Default)]
+pub struct CpuOptions {
+    /// Worker lanes (caller included). `0` resolves via
+    /// [`crate::util::threadpool::resolve_threads`]: `FF_CPU_THREADS`,
+    /// else available parallelism (capped).
+    pub threads: usize,
+    /// Force the sequential scalar reference interpreter (implies one
+    /// thread, naive kernels). This is the conformance oracle.
+    pub reference: bool,
+}
+
 /// The pure-Rust deterministic backend. See the module docs for the
-/// op-set and reference-semantics contract.
+/// op-set, the fast/reference split and the determinism contract.
 pub struct CpuBackend {
-    manifest: Rc<Manifest>,
-    weights: Rc<WeightStore>,
+    manifest: Arc<Manifest>,
+    weights: Arc<WeightStore>,
     /// Parsed-op cache (name → [`Op`]): names parse once, and the map
     /// doubles as the "prepared executables" set.
     ops: RefCell<HashMap<String, Op>>,
     stats: RefCell<DispatchStats>,
+    /// Sequential scalar oracle mode (naive kernels, no pool).
+    reference: bool,
+    /// Worker pool for the fast kernels (1 lane → inline execution).
+    pool: ThreadPool,
+    /// Fast path only: per-layer transposed `w_gate` (`[f, d]`) for the
+    /// gathered sparse activation kernel. Empty in reference mode.
+    /// Materialized per backend (so per pool replica) — the shared
+    /// `Arc<WeightStore>` stays untransposed; sharing these panels
+    /// through the pool factory is a known follow-up
+    /// (docs/ARCHITECTURE.md §2.4).
+    gate_t: Vec<Vec<f32>>,
+    /// Fast path only: per-layer transposed `w_up` (`[f, d]`).
+    up_t: Vec<Vec<f32>>,
 }
 
 impl CpuBackend {
-    /// Build the interpreter over a manifest + weight store — in
-    /// practice [`Manifest::synthetic`] +
-    /// [`WeightStore::seeded`]. Validates that the weight table
-    /// follows the reference naming convention the interpreter
-    /// dispatches against (AOT artifact bundles do *not*: their fused
-    /// low-rank predictor/compensator networks are PJRT-only, and
-    /// construction fails fast here with a clear error).
-    pub fn new(manifest: Rc<Manifest>, weights: Rc<WeightStore>)
+    /// The fast tiled/parallel interpreter with default options
+    /// (thread count from `FF_CPU_THREADS`, else available
+    /// parallelism). Validates that the weight table follows the
+    /// reference naming convention the interpreter dispatches against
+    /// (AOT artifact bundles do *not*: their fused low-rank
+    /// predictor/compensator networks are PJRT-only, and construction
+    /// fails fast here with a clear error).
+    pub fn new(manifest: Arc<Manifest>, weights: Arc<WeightStore>)
                -> Result<Self> {
+        Self::with_options(manifest, weights, CpuOptions::default())
+    }
+
+    /// The sequential scalar reference interpreter — the oracle the
+    /// fast path is conformance-tested against. Numerically
+    /// bit-identical to [`CpuBackend::new`] (that is the tested
+    /// contract), just slow.
+    pub fn reference(manifest: Arc<Manifest>, weights: Arc<WeightStore>)
+                     -> Result<Self> {
+        Self::with_options(
+            manifest,
+            weights,
+            CpuOptions { threads: 1, reference: true },
+        )
+    }
+
+    /// Build the interpreter over a manifest + weight store — in
+    /// practice [`Manifest::synthetic`] + [`WeightStore::seeded`] —
+    /// with explicit [`CpuOptions`].
+    pub fn with_options(manifest: Arc<Manifest>,
+                        weights: Arc<WeightStore>, opts: CpuOptions)
+                        -> Result<Self> {
         for name in ["embed", "final_rms", "lm_head", "layers.0.wq",
-                     "layers.0.rms1"] {
+                     "layers.0.rms1", "pred.0.wd", "comp.0.alpha"] {
             weights.get(name).map_err(|_| {
                 anyhow!(
                     "cpu backend: weight table missing '{name}' — the \
@@ -265,12 +563,47 @@ impl CpuBackend {
                 )
             })?;
         }
+        let threads = if opts.reference {
+            1
+        } else {
+            threadpool::resolve_threads(
+                (opts.threads > 0).then_some(opts.threads),
+            )
+        };
+        let (mut gate_t, mut up_t) = (Vec::new(), Vec::new());
+        if !opts.reference {
+            let (d, f) = (manifest.model.d_model, manifest.model.d_ffn);
+            for l in 0..manifest.model.n_layers {
+                let g = weights.get(&format!("layers.{l}.w_gate"))?;
+                let u = weights.get(&format!("layers.{l}.w_up"))?;
+                anyhow::ensure!(
+                    g.len() == d * f && u.len() == d * f,
+                    "layer {l}: gate/up shape mismatch"
+                );
+                gate_t.push(transpose(g, d, f));
+                up_t.push(transpose(u, d, f));
+            }
+        }
         Ok(CpuBackend {
             manifest,
             weights,
             ops: RefCell::new(HashMap::new()),
             stats: RefCell::new(DispatchStats::default()),
+            reference: opts.reference,
+            pool: ThreadPool::new(threads),
+            gate_t,
+            up_t,
         })
+    }
+
+    /// Worker lanes in use (1 in reference mode).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Whether this is the sequential reference oracle.
+    pub fn is_reference(&self) -> bool {
+        self.reference
     }
 
     /// Parse (and cache) the op an executable name denotes. Steady-state
@@ -299,9 +632,23 @@ impl CpuBackend {
         self.w(&format!("layers.{l}.{role}"), expect)
     }
 
+    /// Matmul through the active kernel set (naive in reference mode,
+    /// tiled + pooled otherwise; bit-identical either way).
+    fn mm(&self, x: &[f32], w: &[f32], t: usize, m: usize, n: usize)
+          -> Vec<f32> {
+        if self.reference {
+            matmul(x, w, t, m, n)
+        } else {
+            kernels::matmul_tiled(x, w, t, m, n, &self.pool)
+        }
+    }
+
     /// RMSNorm(x, rms1) → QKV (+ RoPE) → causal GQA attention → output
     /// projection → residual. Returns `(h, k_new, v_new)` where `h` is
-    /// the post-attention residual stream `x + attn_out @ wo`.
+    /// the post-attention residual stream `x + attn_out @ wo`. The
+    /// score/softmax/weighted-sum loop parallelizes across query rows
+    /// (each row's computation is untouched, so thread count never
+    /// changes a bit).
     #[allow(clippy::too_many_arguments)]
     fn attention_block(&self, l: usize, x: &[f32], t: usize, s: usize,
                        pos: usize, k_cache: &[f32], v_cache: &[f32])
@@ -317,12 +664,12 @@ impl CpuBackend {
         let group = nh / nkv;
 
         let h1 = rmsnorm_rows(x, self.lw(l, "rms1", d)?, t, d);
-        let mut q = matmul(&h1, self.lw(l, "wq", d * nh * dh)?, t, d,
-                           nh * dh);
+        let mut q = self.mm(&h1, self.lw(l, "wq", d * nh * dh)?, t, d,
+                            nh * dh);
         let mut k_new =
-            matmul(&h1, self.lw(l, "wk", d * nkv * dh)?, t, d, nkv * dh);
+            self.mm(&h1, self.lw(l, "wk", d * nkv * dh)?, t, d, nkv * dh);
         let v_new =
-            matmul(&h1, self.lw(l, "wv", d * nkv * dh)?, t, d, nkv * dh);
+            self.mm(&h1, self.lw(l, "wv", d * nkv * dh)?, t, d, nkv * dh);
         for r in 0..t {
             rope_row(&mut q[r * nh * dh..(r + 1) * nh * dh], nh, dh,
                      pos + r);
@@ -332,8 +679,11 @@ impl CpuBackend {
 
         let scale = 1.0 / (dh as f32).sqrt();
         let mut attn = vec![0.0f32; t * nh * dh];
-        let mut scores: Vec<f32> = Vec::new();
-        for r in 0..t {
+        // One query row of attention output; identical code runs for
+        // every row whether executed inline (reference / 1 thread) or
+        // on a pool lane.
+        let attn_row = |r: usize, out_row: &mut [f32],
+                        scores: &mut Vec<f32>| {
             let p = pos + r; // absolute position of this query
             for h in 0..nh {
                 let g = h / group; // the KV head this query head reads
@@ -358,8 +708,7 @@ impl CpuBackend {
                     *sc = (*sc - max).exp();
                     denom += *sc;
                 }
-                let out =
-                    &mut attn[(r * nh + h) * dh..(r * nh + h + 1) * dh];
+                let out = &mut out_row[h * dh..(h + 1) * dh];
                 for (j, &wgt) in scores.iter().enumerate() {
                     let vv = if j < pos {
                         &v_cache[(j * nkv + g) * dh..(j * nkv + g + 1) * dh]
@@ -373,9 +722,34 @@ impl CpuBackend {
                     }
                 }
             }
+        };
+        if self.reference || t == 1 {
+            let mut scores: Vec<f32> = Vec::new();
+            for (r, out_row) in attn.chunks_mut(nh * dh).enumerate() {
+                attn_row(r, out_row, &mut scores);
+            }
+        } else {
+            struct RowPtr(*mut f32);
+            unsafe impl Send for RowPtr {}
+            unsafe impl Sync for RowPtr {}
+            let aptr = RowPtr(attn.as_mut_ptr());
+            let row_elems = nh * dh;
+            self.pool.run(t, |r| {
+                let p = &aptr;
+                // SAFETY: each task owns exactly row `r` of `attn`,
+                // and the pool joins before `attn` is read.
+                let out_row = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        p.0.add(r * row_elems),
+                        row_elems,
+                    )
+                };
+                let mut scores: Vec<f32> = Vec::new();
+                attn_row(r, out_row, &mut scores);
+            });
         }
-        let proj = matmul(&attn, self.lw(l, "wo", nh * dh * d)?, t,
-                          nh * dh, d);
+        let proj = self.mm(&attn, self.lw(l, "wo", nh * dh * d)?, t,
+                           nh * dh, d);
         Ok((add(x, &proj), k_new, v_new))
     }
 
@@ -386,8 +760,8 @@ impl CpuBackend {
         let m = &self.manifest.model;
         let (d, f) = (m.d_model, m.d_ffn);
         let h2 = rmsnorm_rows(h, self.lw(l, "rms2", d)?, t, d);
-        let gate = matmul(&h2, self.lw(l, "w_gate", d * f)?, t, d, f);
-        let up = matmul(&h2, self.lw(l, "w_up", d * f)?, t, d, f);
+        let gate = self.mm(&h2, self.lw(l, "w_gate", d * f)?, t, d, f);
+        let up = self.mm(&h2, self.lw(l, "w_up", d * f)?, t, d, f);
         Ok(gate
             .iter()
             .zip(up.iter())
@@ -413,6 +787,11 @@ impl CpuBackend {
                 "expert index {ji} out of range [0, {f})"
             );
         }
+        if !self.reference {
+            return Ok(kernels::down_proj_tiled(
+                acts, w_down, alpha, t, f, d, idx, &self.pool,
+            ));
+        }
         let mut out = vec![0.0f32; t * d];
         for r in 0..t {
             for &ji in idx {
@@ -429,14 +808,57 @@ impl CpuBackend {
         Ok(out)
     }
 
-    /// Block-aggregated predictor scores `[d_ffn]` (the trained expert
-    /// predictor's output the engine top-Ks on the host).
+    /// Sparse FFN restricted to `idx`, *no compensator* — the only FFN
+    /// variant whose compute is sub-dense. The fast path gathers
+    /// activations for selected neurons only (cost ∝ K); the reference
+    /// path computes full activations and projects the same selection —
+    /// identical values at dense cost.
+    fn ffn_sparse_only(&self, l: usize, h: &[f32], t: usize, idx: &[i32])
+                       -> Result<Vec<f32>> {
+        let m = &self.manifest.model;
+        let (d, f) = (m.d_model, m.d_ffn);
+        for &ji in idx {
+            anyhow::ensure!(
+                ji >= 0 && (ji as usize) < f,
+                "expert index {ji} out of range [0, {f})"
+            );
+        }
+        if self.reference {
+            let acts = self.ffn_activations(l, h, t)?;
+            return self.down_proj(l, &acts, t, idx, None);
+        }
+        anyhow::ensure!(
+            l < self.gate_t.len(),
+            "layer {l} out of range for transposed weight cache"
+        );
+        let h2 = rmsnorm_rows(h, self.lw(l, "rms2", d)?, t, d);
+        let acts = kernels::gather_acts(
+            &h2, &self.gate_t[l], &self.up_t[l], t, d, idx, &self.pool,
+        );
+        let w_down = self.lw(l, "w_down", f * d)?;
+        Ok(kernels::down_proj_compact(
+            &acts, w_down, t, d, idx, &self.pool,
+        ))
+    }
+
+    /// Block-aggregated predictor scores `[d_ffn]` from the low-rank
+    /// expert predictor (`h2 @ wd @ wu`, then column-wise |·| sums —
+    /// the trained predictor output the engine top-Ks on the host).
     fn predictor_scores(&self, l: usize, h: &[f32], t: usize)
                         -> Result<Vec<f32>> {
         let m = &self.manifest.model;
         let (d, f) = (m.d_model, m.d_ffn);
         let h2 = rmsnorm_rows(h, self.lw(l, "rms2", d)?, t, d);
-        let p = matmul(&h2, self.w(&format!("pred.{l}.w"), d * f)?, t, d, f);
+        let wd = self.weights.get(&format!("pred.{l}.wd"))?;
+        anyhow::ensure!(
+            !wd.is_empty() && wd.len() % d == 0,
+            "pred.{l}.wd: {} elements not a multiple of d_model {d}",
+            wd.len()
+        );
+        let rank = wd.len() / d;
+        let wu = self.w(&format!("pred.{l}.wu"), rank * f)?;
+        let z = self.mm(&h2, wd, t, d, rank);
+        let p = self.mm(&z, wu, t, rank, f);
         let mut scores = vec![0.0f32; f];
         for r in 0..t {
             for j in 0..f {
@@ -487,7 +909,7 @@ impl CpuBackend {
                 let x = f32_input(inputs, exe, "x")?;
                 let xr = rmsnorm_rows(x, self.w("final_rms", d)?, t, d);
                 let logits =
-                    matmul(&xr, self.w("lm_head", d * vocab)?, t, d, vocab);
+                    self.mm(&xr, self.w("lm_head", d * vocab)?, t, d, vocab);
                 Ok(vec![Output { data: logits }])
             }
             Op::LayerDense { t, s } => {
@@ -528,6 +950,22 @@ impl CpuBackend {
                 add_assign(&mut out, &comp);
                 Ok(vec![
                     Output { data: out },
+                    Output { data: k_new },
+                    Output { data: v_new },
+                ])
+            }
+            Op::LayerSparseNc { k, t, s } => {
+                let x = f32_input(inputs, exe, "x")?;
+                let kc = f32_input(inputs, exe, "k_cache")?;
+                let vc = f32_input(inputs, exe, "v_cache")?;
+                let pos = i32_input(inputs, exe, "pos")?[0] as usize;
+                let (h, k_new, v_new) =
+                    self.attention_block(layer, x, t, s, pos, kc, vc)?;
+                let scores = self.predictor_scores(layer, &h, t)?;
+                let idx = top_k_indices(&scores, k.min(f));
+                let y = self.ffn_sparse_only(layer, &h, t, &idx)?;
+                Ok(vec![
+                    Output { data: add(&h, &y) },
                     Output { data: k_new },
                     Output { data: v_new },
                 ])
@@ -581,6 +1019,17 @@ impl CpuBackend {
                 )?;
                 Ok(vec![Output { data: add(h, &y) }, Output { data: comp }])
             }
+            Op::FfnSparseNc { k, t } => {
+                let h = f32_input(inputs, exe, "h")?;
+                let idx = i32_input(inputs, exe, "idx")?;
+                anyhow::ensure!(
+                    idx.len() == k,
+                    "{exe}: idx has {} entries, compiled K is {k}",
+                    idx.len()
+                );
+                let y = self.ffn_sparse_only(layer, h, t, idx)?;
+                Ok(vec![Output { data: add(h, &y) }])
+            }
         }
     }
 }
@@ -617,6 +1066,8 @@ impl Backend for CpuBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
 
     #[test]
     fn name_parsing() {
@@ -631,8 +1082,16 @@ mod tests {
             Op::LayerSparse { k: 64, t: 1, s: 256 }
         );
         assert_eq!(
+            parse_op("layer_sparse_nc_k64_t128_s256").unwrap(),
+            Op::LayerSparseNc { k: 64, t: 128, s: 256 }
+        );
+        assert_eq!(
             parse_op("ffn_sparse_ext_k96_t128").unwrap(),
             Op::FfnSparseExt { k: 96, t: 128 }
+        );
+        assert_eq!(
+            parse_op("ffn_sparse_nc_k96_t128").unwrap(),
+            Op::FfnSparseNc { k: 96, t: 128 }
         );
         assert_eq!(
             parse_op("ffn_acts_t128").unwrap(),
@@ -661,6 +1120,14 @@ mod tests {
     }
 
     #[test]
+    fn transpose_roundtrips() {
+        let w: Vec<f32> = (0..6).map(|v| v as f32).collect(); // [2,3]
+        let wt = transpose(&w, 2, 3); // [3,2]
+        assert_eq!(wt, vec![0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+        assert_eq!(transpose(&wt, 3, 2), w);
+    }
+
+    #[test]
     fn rmsnorm_unit_gain_normalizes() {
         let x = [3.0f32, 4.0, 0.0, 0.0];
         let gain = [1.0f32; 4];
@@ -680,5 +1147,164 @@ mod tests {
         let mut row0 = vec![1.0f32, 2.0, 3.0, 4.0];
         rope_row(&mut row0, 1, 4, 0);
         assert_eq!(row0, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    // -----------------------------------------------------------------
+    // kernel property suite: tiled/gathered kernels vs the naive loops,
+    // asserted *bit-identical* (same per-element accumulation order)
+    // -----------------------------------------------------------------
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * 0.5) as f32).collect()
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str)
+                      -> Result<(), String> {
+        if a.len() != b.len() {
+            return Err(format!("{what}: length {} vs {}", a.len(),
+                               b.len()));
+        }
+        for i in 0..a.len() {
+            if a[i].to_bits() != b[i].to_bits() {
+                return Err(format!(
+                    "{what}: element {i} differs ({} vs {})", a[i], b[i]
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Random distinct ascending indices from [0, f), length k.
+    fn rand_idx(rng: &mut Rng, f: usize, k: usize) -> Vec<i32> {
+        let mut idx: Vec<usize> = rng.choose_k(f, k);
+        idx.sort_unstable();
+        idx.into_iter().map(|j| j as i32).collect()
+    }
+
+    #[test]
+    fn prop_tiled_matmul_is_bit_identical_to_naive() {
+        for threads in [1, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            proptest::check("tiled-matmul", 40, |rng| {
+                // shapes straddling tile boundaries, incl. T=1 and
+                // ragged tails not divisible by ROW_CHUNK/COL_TILE
+                let t = [1, 2, 7, 16, 17, 33][rng.range(0, 6)];
+                let m = rng.range(1, 70);
+                let n = [1, 3, 31, 64, 127, 128, 129, 200]
+                    [rng.range(0, 8)];
+                let x = rand_vec(rng, t * m);
+                let w = rand_vec(rng, m * n);
+                let naive = matmul(&x, &w, t, m, n);
+                let tiled =
+                    kernels::matmul_tiled(&x, &w, t, m, n, &pool);
+                assert_bits_eq(&naive, &tiled,
+                               &format!("t={t} m={m} n={n}"))
+            });
+        }
+    }
+
+    #[test]
+    fn prop_gather_kernels_match_full_activation_path() {
+        let pool = ThreadPool::new(3);
+        proptest::check("gather-ffn", 30, |rng| {
+            let t = [1, 2, 5, 17][rng.range(0, 4)];
+            let d = rng.range(4, 24);
+            let f = rng.range(8, 80);
+            let k = match rng.range(0, 4) {
+                0 => 0,           // K = 0 edge
+                1 => f,           // K = d_ffn edge
+                _ => rng.range(1, f + 1),
+            };
+            let h2 = rand_vec(rng, t * d);
+            let gate = rand_vec(rng, d * f);
+            let up = rand_vec(rng, d * f);
+            let w_down = rand_vec(rng, f * d);
+            let idx = rand_idx(rng, f, k);
+
+            // naive path: full dense activations → naive down_proj
+            let g_full = matmul(&h2, &gate, t, d, f);
+            let u_full = matmul(&h2, &up, t, d, f);
+            let acts_full: Vec<f32> = g_full
+                .iter()
+                .zip(u_full.iter())
+                .map(|(&g, &u)| silu(g) * u)
+                .collect();
+            let mut naive = vec![0.0f32; t * d];
+            for r in 0..t {
+                for &ji in &idx {
+                    let j = ji as usize;
+                    let a = acts_full[r * f + j];
+                    for c in 0..d {
+                        naive[r * d + c] += a * w_down[j * d + c];
+                    }
+                }
+            }
+
+            // gathered path over transposed weights
+            let gate_t = transpose(&gate, d, f);
+            let up_t = transpose(&up, d, f);
+            let acts = kernels::gather_acts(&h2, &gate_t, &up_t, t, d,
+                                            &idx, &pool);
+            // gathered compact activations == the selected columns
+            for r in 0..t {
+                for (jj, &ji) in idx.iter().enumerate() {
+                    let want = acts_full[r * f + ji as usize];
+                    let got = acts[r * idx.len() + jj];
+                    if want.to_bits() != got.to_bits() {
+                        return Err(format!(
+                            "acts[{r},{jj}] {got} != {want}"
+                        ));
+                    }
+                }
+            }
+            let got = kernels::down_proj_compact(&acts, &w_down, t, d,
+                                                 &idx, &pool);
+            assert_bits_eq(&naive, &got,
+                           &format!("t={t} d={d} f={f} k={k}"))?;
+
+            // the full-width tiled down_proj agrees too (with alpha)
+            let alpha = rand_vec(rng, f);
+            let mut naive_a = vec![0.0f32; t * d];
+            for r in 0..t {
+                for &ji in &idx {
+                    let j = ji as usize;
+                    let a = acts_full[r * f + j] * alpha[j];
+                    for c in 0..d {
+                        naive_a[r * d + c] += a * w_down[j * d + c];
+                    }
+                }
+            }
+            let got_a = kernels::down_proj_tiled(
+                &acts_full, &w_down, Some(&alpha), t, f, d, &idx, &pool,
+            );
+            assert_bits_eq(&naive_a, &got_a, "down_proj_tiled+alpha")
+        });
+    }
+
+    #[test]
+    fn fast_and_reference_backends_agree_on_one_dispatch() {
+        use crate::manifest::SyntheticSpec;
+        let spec = SyntheticSpec::default();
+        let manifest = Arc::new(Manifest::synthetic(&spec));
+        let weights =
+            Arc::new(WeightStore::seeded(&manifest, spec.seed));
+        let fast = CpuBackend::with_options(
+            manifest.clone(),
+            weights.clone(),
+            CpuOptions { threads: 4, reference: false },
+        )
+        .unwrap();
+        let refr =
+            CpuBackend::reference(manifest.clone(), weights).unwrap();
+        assert!(refr.is_reference() && !fast.is_reference());
+        assert_eq!(refr.threads(), 1);
+        let block = manifest.model.block;
+        let name = format!("embed_t{block}");
+        let spec_e = manifest.executables.get(&name).unwrap();
+        let tokens: Vec<i32> = (0..block as i32).collect();
+        let inputs = [("tokens", Input::I32(&tokens, vec![block]))];
+        let a = fast.execute(spec_e, 0, &inputs).unwrap();
+        let b = refr.execute(spec_e, 0, &inputs).unwrap();
+        assert_eq!(a[0].data, b[0].data);
     }
 }

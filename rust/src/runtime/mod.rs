@@ -22,10 +22,10 @@ mod cpu;
 mod pjrt;
 
 pub use backend::{Backend, BackendKind};
-pub use cpu::CpuBackend;
+pub use cpu::{CpuBackend, CpuOptions};
 pub use pjrt::PjrtBackend;
 
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
@@ -73,10 +73,12 @@ pub struct DispatchStats {
 }
 
 /// Manifest-driven dispatcher bound to one [`Backend`]. `!Send` by
-/// design — each executor replica owns one.
+/// design — each executor replica owns one. The manifest and weight
+/// store themselves are plain data behind `Arc`s, so replicas *share*
+/// one loaded/seeded copy instead of cloning it per thread.
 pub struct Runtime {
     /// The artifact manifest driving argument resolution.
-    pub manifest: Rc<Manifest>,
+    pub manifest: Arc<Manifest>,
     backend: Box<dyn Backend>,
     /// Combined numeric identity (manifest ⊕ weight values ⊕ backend),
     /// computed once at construction.
@@ -86,27 +88,54 @@ pub struct Runtime {
 impl Runtime {
     /// PJRT runtime over loaded artifacts (the historical constructor).
     /// Fails when built without the `pjrt` feature.
-    pub fn new(manifest: Rc<Manifest>, weights: Rc<WeightStore>)
+    pub fn new(manifest: Arc<Manifest>, weights: Arc<WeightStore>)
                -> Result<Self> {
         Self::with_backend(BackendKind::Pjrt, manifest, weights)
     }
 
-    /// Pure-Rust deterministic runtime — works in every build; pair it
-    /// with [`crate::manifest::Manifest::synthetic`] +
+    /// Pure-Rust deterministic runtime (fast tiled/parallel kernels) —
+    /// works in every build; pair it with
+    /// [`crate::manifest::Manifest::synthetic`] +
     /// [`WeightStore::seeded`] (artifact bundles are PJRT-only).
-    pub fn cpu(manifest: Rc<Manifest>, weights: Rc<WeightStore>)
+    pub fn cpu(manifest: Arc<Manifest>, weights: Arc<WeightStore>)
                -> Result<Self> {
         Self::with_backend(BackendKind::Cpu, manifest, weights)
     }
 
-    /// Construct a runtime with an explicit backend choice.
-    pub fn with_backend(kind: BackendKind, manifest: Rc<Manifest>,
-                        weights: Rc<WeightStore>) -> Result<Self> {
-        use crate::util::hash;
-        let fp = hash::mix(
-            hash::mix(manifest.fingerprint(), weights.fingerprint()),
-            hash::fnv1a(kind.label().as_bytes()),
+    /// The sequential scalar CPU reference interpreter — the oracle of
+    /// the backend-conformance suite. Bit-identical to [`Runtime::cpu`]
+    /// by contract (`tests/backend_conformance.rs`), including its
+    /// numeric fingerprint, just slow.
+    pub fn cpu_reference(manifest: Arc<Manifest>,
+                         weights: Arc<WeightStore>) -> Result<Self> {
+        Self::cpu_with_options(
+            manifest,
+            weights,
+            CpuOptions { threads: 1, reference: true },
+        )
+    }
+
+    /// CPU runtime with explicit [`CpuOptions`] (thread count /
+    /// reference mode).
+    pub fn cpu_with_options(manifest: Arc<Manifest>,
+                            weights: Arc<WeightStore>, opts: CpuOptions)
+                            -> Result<Self> {
+        let fp = Self::fingerprint_for(BackendKind::Cpu, &manifest,
+                                       &weights);
+        let backend: Box<dyn Backend> = Box::new(
+            CpuBackend::with_options(manifest.clone(), weights, opts)?,
         );
+        Ok(Runtime {
+            manifest,
+            backend,
+            numeric_fp: fp,
+        })
+    }
+
+    /// Construct a runtime with an explicit backend choice.
+    pub fn with_backend(kind: BackendKind, manifest: Arc<Manifest>,
+                        weights: Arc<WeightStore>) -> Result<Self> {
+        let fp = Self::fingerprint_for(kind, &manifest, &weights);
         let backend: Box<dyn Backend> = match kind {
             BackendKind::Cpu => {
                 Box::new(CpuBackend::new(manifest.clone(), weights)?)
@@ -120,6 +149,19 @@ impl Runtime {
             backend,
             numeric_fp: fp,
         })
+    }
+
+    /// The combined numeric identity of (backend kind, model, weight
+    /// values). Deliberately *not* a function of thread count or
+    /// fast-vs-reference mode: those are bit-identical by the
+    /// determinism contract, so their KV is interchangeable.
+    fn fingerprint_for(kind: BackendKind, manifest: &Manifest,
+                       weights: &WeightStore) -> u64 {
+        use crate::util::hash;
+        hash::mix(
+            hash::mix(manifest.fingerprint(), weights.fingerprint()),
+            hash::fnv1a(kind.label().as_bytes()),
+        )
     }
 
     /// The active backend's stable label ("cpu" / "pjrt").
@@ -214,16 +256,16 @@ mod tests {
     /// synthetic manifest + seeded weights.
     fn cpu_runtime() -> Runtime {
         let spec = SyntheticSpec::default();
-        let m = Rc::new(Manifest::synthetic(&spec));
-        let w = Rc::new(WeightStore::seeded(&m, spec.seed));
+        let m = Arc::new(Manifest::synthetic(&spec));
+        let w = Arc::new(WeightStore::seeded(&m, spec.seed));
         Runtime::cpu(m, w).unwrap()
     }
 
     /// PJRT runtime over real artifacts (None → caller skips).
     fn pjrt_runtime() -> Option<Runtime> {
         let dir = crate::test_artifacts_dir()?;
-        let m = Rc::new(Manifest::load(&dir).unwrap());
-        let w = Rc::new(WeightStore::load(&m).unwrap());
+        let m = Arc::new(Manifest::load(&dir).unwrap());
+        let w = Arc::new(WeightStore::load(&m).unwrap());
         Some(Runtime::new(m, w).unwrap())
     }
 
@@ -336,8 +378,8 @@ mod tests {
             name: "ff-other".to_string(),
             ..SyntheticSpec::default()
         };
-        let m = Rc::new(Manifest::synthetic(&spec));
-        let w = Rc::new(WeightStore::seeded(&m, spec.seed));
+        let m = Arc::new(Manifest::synthetic(&spec));
+        let w = Arc::new(WeightStore::seeded(&m, spec.seed));
         let c = Runtime::cpu(m, w).unwrap();
         assert_ne!(
             a.numeric_fingerprint(),
@@ -347,13 +389,24 @@ mod tests {
         // same model, different weight *values*: must also differ, or
         // the prefix cache could adopt KV computed under other weights
         let spec = SyntheticSpec::default();
-        let m = Rc::new(Manifest::synthetic(&spec));
-        let w = Rc::new(WeightStore::seeded(&m, spec.seed ^ 0xDEAD));
+        let m = Arc::new(Manifest::synthetic(&spec));
+        let w = Arc::new(WeightStore::seeded(&m, spec.seed ^ 0xDEAD));
         let d = Runtime::cpu(m, w).unwrap();
         assert_ne!(
             a.numeric_fingerprint(),
             d.numeric_fingerprint(),
             "different weights → different fingerprint"
+        );
+        // fast and reference CPU runtimes are numerically the same
+        // runtime (bit-identical outputs) and must share a fingerprint
+        let spec = SyntheticSpec::default();
+        let m = Arc::new(Manifest::synthetic(&spec));
+        let w = Arc::new(WeightStore::seeded(&m, spec.seed));
+        let r = Runtime::cpu_reference(m, w).unwrap();
+        assert_eq!(
+            a.numeric_fingerprint(),
+            r.numeric_fingerprint(),
+            "reference oracle must share the fast backend's fingerprint"
         );
     }
 

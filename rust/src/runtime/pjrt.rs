@@ -16,6 +16,7 @@
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -42,8 +43,8 @@ enum PlanArg {
 /// `!Send` by design — each executor replica owns one.
 pub struct PjrtBackend {
     client: xla::PjRtClient,
-    manifest: Rc<Manifest>,
-    weights: Rc<WeightStore>,
+    manifest: Arc<Manifest>,
+    weights: Arc<WeightStore>,
     exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     wbufs: RefCell<HashMap<String, Rc<xla::PjRtBuffer>>>,
     plans: RefCell<HashMap<(String, usize), Rc<Vec<PlanArg>>>>,
@@ -51,9 +52,10 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
-    /// Create a CPU PJRT client over loaded artifacts. Fails when built
-    /// without the `pjrt` feature (see [`crate::xla_stub`]).
-    pub fn new(manifest: Rc<Manifest>, weights: Rc<WeightStore>)
+    /// Create a CPU PJRT client over loaded artifacts (shared `Arc`s:
+    /// replicas reuse one loaded manifest + weight blob). Fails when
+    /// built without the `pjrt` feature (see [`crate::xla_stub`]).
+    pub fn new(manifest: Arc<Manifest>, weights: Arc<WeightStore>)
                -> Result<Self> {
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow!("pjrt cpu client: {e}"))?;

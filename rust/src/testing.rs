@@ -23,11 +23,32 @@ use crate::pool::ExecutorPool;
 use crate::router::Router;
 use crate::runtime::BackendKind;
 
-/// The deterministic CPU engine over the default synthetic model.
+/// The deterministic CPU engine over the default synthetic model
+/// (fast tiled/parallel backend; threads from `FF_CPU_THREADS`).
 /// Infallible by construction (panics only on an internal bug).
 pub fn cpu_engine() -> Engine {
     Engine::synthetic_cpu(&SyntheticSpec::default())
         .expect("synthetic CPU engine")
+}
+
+/// [`cpu_engine`] pinned to an explicit worker-lane count — the
+/// conformance suite sweeps `threads ∈ {1, 4}` with it.
+pub fn cpu_engine_threads(threads: usize) -> Engine {
+    Engine::synthetic_cpu_with(
+        &SyntheticSpec::default(),
+        crate::runtime::CpuOptions { threads, reference: false },
+    )
+    .expect("synthetic CPU engine")
+}
+
+/// The sequential scalar CPU *reference* engine — the oracle the fast
+/// backend is conformance-tested against (bit-identical by contract).
+pub fn cpu_engine_reference() -> Engine {
+    Engine::synthetic_cpu_with(
+        &SyntheticSpec::default(),
+        crate::runtime::CpuOptions { threads: 1, reference: true },
+    )
+    .expect("synthetic CPU reference engine")
 }
 
 /// The PJRT engine over real artifacts, or `None` when artifacts are
@@ -36,10 +57,10 @@ pub fn cpu_engine() -> Engine {
 pub fn artifact_engine() -> Option<Engine> {
     let dir = crate::test_artifacts_dir()?;
     use std::rc::Rc;
-    let manifest = Rc::new(
+    let manifest = Arc::new(
         crate::manifest::Manifest::load(&dir).expect("artifact manifest"),
     );
-    let weights = Rc::new(
+    let weights = Arc::new(
         crate::weights::WeightStore::load(&manifest)
             .expect("artifact weights"),
     );

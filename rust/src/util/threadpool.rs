@@ -1,0 +1,387 @@
+//! Dependency-free worker-thread pool for the CPU backend's data
+//! parallelism (std-only substrate; the vendored crate set has no rayon
+//! or crossbeam).
+//!
+//! The pool executes *index-parallel* jobs: [`ThreadPool::run`] takes a
+//! task count `n` and a closure `f`, and guarantees `f(i)` is called
+//! exactly once for every `i in 0..n` before `run` returns. The calling
+//! thread participates in the work (a pool of `threads == N` means `N`
+//! lanes total: the caller plus `N - 1` workers), so `threads == 1`
+//! degenerates to a plain inline loop with zero synchronization.
+//!
+//! Determinism contract: the pool only decides *which lane* executes a
+//! task index, never the work done for it. Callers partition output
+//! elements so each element is computed by exactly one task with a
+//! fixed sequential accumulation order — which is what makes the fast
+//! CPU backend bit-identical across `threads ∈ {1, 4, …}` and against
+//! the sequential reference (see `runtime/cpu.rs` and
+//! `tests/backend_conformance.rs`).
+//!
+//! Thread-count resolution (see [`resolve_threads`]): explicit request
+//! (`--cpu-threads`) → `FF_CPU_THREADS` env var → available
+//! parallelism, capped at [`MAX_AUTO_THREADS`].
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Environment variable overriding the default worker count.
+pub const THREADS_ENV: &str = "FF_CPU_THREADS";
+
+/// Cap applied when the thread count is *derived* from the machine's
+/// available parallelism (explicit requests are honored as-is): beyond
+/// this, the small GEMMs of the reference models stop scaling and pool
+/// replicas multiply thread counts.
+pub const MAX_AUTO_THREADS: usize = 8;
+
+/// Resolve the lane count for a new pool: `explicit` (when `Some` and
+/// non-zero) → `FF_CPU_THREADS` (when set, parseable and non-zero) →
+/// `std::thread::available_parallelism()` capped at
+/// [`MAX_AUTO_THREADS`].
+pub fn resolve_threads(explicit: Option<usize>) -> usize {
+    if let Some(n) = explicit {
+        if n > 0 {
+            return n;
+        }
+    }
+    if let Ok(v) = std::env::var(THREADS_ENV) {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, MAX_AUTO_THREADS)
+}
+
+/// Type-erased pointer to the job closure of the batch in flight.
+///
+/// Stored as a raw pointer (not a reference) because worker threads may
+/// still *hold* a `Task` handle briefly after [`ThreadPool::run`]
+/// returns; they never dereference it once every index is claimed —
+/// see the safety argument on [`ThreadPool::run`].
+type RawJob = *const (dyn Fn(usize) + Sync + 'static);
+
+/// One batch of `total` task indices being drained by the lanes.
+struct Task {
+    job: RawJob,
+    total: usize,
+    /// Next index to claim (fetch_add dispenser).
+    cursor: AtomicUsize,
+    /// Indices fully executed so far; completion == `total`.
+    done: AtomicUsize,
+    /// Set when any task index panicked (re-raised by the caller).
+    panicked: AtomicBool,
+    /// Mutex + condvar the caller blocks on until `done == total`.
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+}
+
+// SAFETY: `Task` is shared across threads only between the moment
+// `ThreadPool::run` publishes it and the moment `run` observes
+// `done == total`; within that window the closure behind `job` is alive
+// (it is a stack borrow of `run`'s argument) and `Fn + Sync`, so calling
+// it concurrently is sound. After the window the pointer may dangle but
+// is never dereferenced (the cursor is exhausted).
+unsafe impl Send for Task {}
+unsafe impl Sync for Task {}
+
+impl Task {
+    /// Claim and execute indices until the cursor is exhausted.
+    fn work(&self) {
+        loop {
+            let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= self.total {
+                break;
+            }
+            // SAFETY: `i < total`, so the batch is still in its live
+            // window (the caller cannot have returned: it waits for
+            // `done == total` and we have not counted `i` yet).
+            let job = unsafe { &*self.job };
+            if catch_unwind(AssertUnwindSafe(|| job(i))).is_err() {
+                self.panicked.store(true, Ordering::Release);
+            }
+            let d = self.done.fetch_add(1, Ordering::AcqRel) + 1;
+            if d == self.total {
+                // Take the lock before notifying so the caller can't
+                // miss the wakeup between its check and its wait.
+                let _g = self.done_mx.lock().unwrap();
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Shared worker state: a single-slot inbox of the batch in flight.
+struct Shared {
+    inbox: Mutex<Inbox>,
+    work_cv: Condvar,
+}
+
+struct Inbox {
+    /// Batch workers should help drain, if any.
+    task: Option<Arc<Task>>,
+    shutdown: bool,
+}
+
+/// A fixed-size worker pool executing index-parallel jobs. See the
+/// module docs for the determinism contract.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `threads` lanes (min 1). The caller is one lane, so
+    /// `threads - 1` OS threads are spawned; `new(1)` spawns none and
+    /// [`ThreadPool::run`] becomes an inline loop.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            inbox: Mutex::new(Inbox {
+                task: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("ff-cpu-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn cpu pool worker")
+            })
+            .collect();
+        ThreadPool {
+            shared,
+            workers,
+            threads,
+        }
+    }
+
+    /// Pool sized by [`resolve_threads`] (no explicit request).
+    pub fn from_env() -> ThreadPool {
+        ThreadPool::new(resolve_threads(None))
+    }
+
+    /// Total lanes (caller + workers).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `f(i)` exactly once for every `i in 0..tasks`, using all
+    /// lanes, returning when every index has completed. Panics (after
+    /// all indices finish) if any index panicked.
+    ///
+    /// The closure only needs to borrow its environment for the
+    /// duration of the call: internally it is published to the workers
+    /// through a raw pointer, which is sound because this method does
+    /// not return until every index has executed (`done == total`) and
+    /// no worker dereferences the pointer after the cursor is
+    /// exhausted.
+    pub fn run<F>(&self, tasks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if tasks == 0 {
+            return;
+        }
+        if self.workers.is_empty() || tasks == 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        let job_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: erase the stack lifetime; validity is guaranteed by
+        // the completion barrier below (see method docs). A transmute
+        // (not an `as` cast) because the trait-object *lifetime bound*
+        // changes, which pointer casts cannot express on all toolchains.
+        #[allow(clippy::useless_transmute,
+                clippy::transmutes_expressible_as_ptr_casts)]
+        let job: RawJob = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), RawJob>(job_ref)
+        };
+        let task = Arc::new(Task {
+            job,
+            total: tasks,
+            cursor: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            done_mx: Mutex::new(()),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut inbox = self.shared.inbox.lock().unwrap();
+            // Single-slot inbox: if a batch is already in flight (a
+            // nested `run` from inside a job), drain inline instead —
+            // correctness never depends on extra lanes.
+            if inbox.task.is_some() {
+                drop(inbox);
+                for i in 0..tasks {
+                    f(i);
+                }
+                return;
+            }
+            inbox.task = Some(task.clone());
+        }
+        self.shared.work_cv.notify_all();
+        // The caller is a lane too: claim indices until exhausted.
+        task.work();
+        // Completion barrier: wait until every claimed index finished.
+        {
+            let mut g = task.done_mx.lock().unwrap();
+            while task.done.load(Ordering::Acquire) < task.total {
+                g = task.done_cv.wait(g).unwrap();
+            }
+        }
+        // Retire the batch so the next `run` can publish.
+        {
+            let mut inbox = self.shared.inbox.lock().unwrap();
+            inbox.task = None;
+        }
+        if task.panicked.load(Ordering::Acquire) {
+            panic!("cpu thread pool: a parallel task panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut inbox = self.shared.inbox.lock().unwrap();
+            inbox.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let task = {
+            let mut inbox = shared.inbox.lock().unwrap();
+            loop {
+                if let Some(t) = inbox.task.clone() {
+                    // Leave the slot occupied: the publishing `run`
+                    // retires it after completion. Exhausted batches
+                    // (cursor >= total) are no-ops in `work`.
+                    if t.cursor.load(Ordering::Relaxed) < t.total {
+                        break Some(t);
+                    }
+                }
+                if inbox.shutdown {
+                    break None;
+                }
+                inbox = shared.work_cv.wait(inbox).unwrap();
+            }
+        };
+        match task {
+            Some(t) => t.work(),
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        for threads in [1, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let n = 257;
+            let hits: Vec<AtomicUsize> =
+                (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "threads={threads}: some index not run exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let n = 1000usize;
+        let total = AtomicU64::new(0);
+        pool.run(n, |i| {
+            total.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(
+            total.load(Ordering::Relaxed),
+            (n as u64 - 1) * n as u64 / 2
+        );
+    }
+
+    #[test]
+    fn zero_tasks_is_a_noop() {
+        let pool = ThreadPool::new(3);
+        pool.run(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn nested_run_does_not_deadlock() {
+        let pool = ThreadPool::new(4);
+        let total = AtomicU64::new(0);
+        pool.run(8, |_| {
+            // nested batch: drained inline by the single-slot rule
+            pool.run(8, |j| {
+                total.fetch_add(j as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8 * 28);
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel task panicked")]
+    fn task_panic_propagates_to_caller() {
+        let pool = ThreadPool::new(2);
+        pool.run(16, |i| {
+            if i == 7 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_batch() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, |i| {
+                if i == 0 {
+                    panic!("first batch dies");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        let total = AtomicU64::new(0);
+        pool.run(4, |i| {
+            total.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn resolve_threads_precedence() {
+        // explicit wins regardless of env
+        assert_eq!(resolve_threads(Some(3)), 3);
+        // zero is "unset"
+        assert!(resolve_threads(Some(0)) >= 1);
+        assert!(resolve_threads(None) >= 1);
+        assert!(resolve_threads(None) <= MAX_AUTO_THREADS.max(1));
+    }
+}

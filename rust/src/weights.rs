@@ -16,6 +16,13 @@ use crate::util::rng::Rng;
 
 /// All model weights resident as one flat host f32 buffer plus the
 /// name → (offset, shape) table from the manifest.
+///
+/// Plain immutable data, hence `Send + Sync`: the executor pool loads
+/// or seeds **one** store and shares it across every replica thread
+/// through an `Arc` (see
+/// [`crate::pool::ExecutorPool::shared_backend_factory`]) — replicas
+/// must never re-seed their own copy, which is asserted by the
+/// fingerprint regression in `tests/backend_conformance.rs`.
 #[derive(Debug)]
 pub struct WeightStore {
     data: Vec<f32>,
@@ -235,6 +242,28 @@ mod tests {
             "distinct gates across layers"
         );
         assert_eq!(a.total_params(), b.total_params());
+    }
+
+    /// The synthetic table carries the low-rank expert predictor
+    /// (`pred.{l}.wd` / `pred.{l}.wu`) with consistent shapes — the
+    /// CPU backend derives the rank from these at dispatch time.
+    #[test]
+    fn seeded_low_rank_predictor_shapes_are_consistent() {
+        let spec = crate::manifest::SyntheticSpec::default();
+        let m = Manifest::synthetic(&spec);
+        let w = WeightStore::seeded(&m, spec.seed);
+        for l in 0..m.model.n_layers {
+            let wd = w.get(&format!("pred.{l}.wd")).unwrap();
+            let wu = w.get(&format!("pred.{l}.wu")).unwrap();
+            assert_eq!(wd.len(), m.model.d_model * spec.pred_rank);
+            assert_eq!(wu.len(), spec.pred_rank * m.model.d_ffn);
+            assert_eq!(
+                w.shape(&format!("pred.{l}.wd")).unwrap(),
+                &[m.model.d_model, spec.pred_rank]
+            );
+            assert!(wd.iter().chain(wu.iter()).all(|x| x.is_finite()));
+            assert!(wd.iter().any(|&x| x != 0.0));
+        }
     }
 
     #[test]

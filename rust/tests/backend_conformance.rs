@@ -1,0 +1,261 @@
+//! Backend-equivalence conformance suite: the fast tiled/parallel
+//! `CpuBackend` against the sequential scalar
+//! `CpuBackend::reference()` oracle.
+//!
+//! **Why bit-identical and not ≤1e-6:** every fast kernel partitions
+//! *output elements* across tiles/threads and accumulates each
+//! element's reduction in exactly the naive order (ascending reduction
+//! index) — parallelism decides *who* computes an element, never the
+//! sequence of f32 additions behind it. A ≤1e-6 tolerance would be the
+//! right bound if tiling split reductions (it does not, by design), so
+//! this suite asserts the stronger property: logits and KV rows are
+//! **bit-identical** across `threads ∈ {1, 4}` and against the
+//! reference, for dense, 50% and 87.5% sparsity, with and without the
+//! compensator, across prefill block boundaries (tail-only prompts,
+//! exact-block prompts, block+1, multi-block + ragged tail).
+//!
+//! Also hosts the `Rc → Arc` migration regressions: `Manifest` /
+//! `WeightStore` are `Send + Sync`, and `ExecutorPool`'s backend
+//! factory shares one weight-store allocation across replicas instead
+//! of re-seeding per replica.
+
+use fastforward::engine::{Engine, SparsityConfig};
+use fastforward::manifest::SyntheticSpec;
+use fastforward::pool::ExecutorPool;
+use fastforward::runtime::BackendKind;
+use fastforward::sparsity::masks::ExpertSource;
+use fastforward::testing;
+use fastforward::tokenizer::Tokenizer;
+
+fn corpus_prompt(len: usize) -> Vec<i32> {
+    let mut rng = fastforward::util::rng::Rng::new(4242);
+    let bank = fastforward::trace::WordBank::new(&mut rng, 128);
+    let text = bank.filler(&mut rng, len);
+    let mut toks = Tokenizer::new(384).encode(&text);
+    toks.truncate(len);
+    while toks.len() < len {
+        toks.push(b' ' as i32);
+    }
+    toks
+}
+
+/// Uniform-allocation sparse config at arbitrary sparsity (the
+/// layerwise schedule only ships 0.30/0.40/0.50 budgets), with every
+/// block sparse so the sparse kernels are actually exercised.
+fn uniform_cfg(sparsity: f64, compensator: bool) -> SparsityConfig {
+    SparsityConfig {
+        sparsity: Some(sparsity),
+        layerwise: false,
+        dense_first: false,
+        dense_last: false,
+        compensator,
+        source: ExpertSource::Trained,
+        sparse_decode: false,
+    }
+}
+
+fn configs() -> Vec<(&'static str, SparsityConfig)> {
+    vec![
+        ("dense", SparsityConfig::dense()),
+        // the paper's full method: layerwise schedule + compensator
+        ("fastforward-50", SparsityConfig::fastforward(0.5)),
+        // 50% through the sub-dense nc fast path (no compensator)
+        ("uniform-50-nc", uniform_cfg(0.5, false)),
+        // 87.5% sparsity (K = d_ffn/8), nc fast path
+        ("uniform-87.5-nc", uniform_cfg(0.875, false)),
+    ]
+}
+
+fn assert_prefill_bit_identical(want: &fastforward::engine::PrefillResult,
+                                got: &fastforward::engine::PrefillResult,
+                                what: &str) {
+    assert_eq!(want.last_logits.len(), got.last_logits.len(), "{what}");
+    for i in 0..want.last_logits.len() {
+        assert_eq!(
+            want.last_logits[i].to_bits(),
+            got.last_logits[i].to_bits(),
+            "{what}: logit {i} differs ({} vs {})",
+            want.last_logits[i],
+            got.last_logits[i]
+        );
+    }
+    let n = want.cache.len * want.cache.row_elems();
+    assert_eq!(want.cache.len, got.cache.len, "{what}: KV length");
+    for l in 0..want.cache.n_layers {
+        assert_eq!(
+            want.cache.k[l][..n],
+            got.cache.k[l][..n],
+            "{what}: layer {l} K rows differ"
+        );
+        assert_eq!(
+            want.cache.v[l][..n],
+            got.cache.v[l][..n],
+            "{what}: layer {l} V rows differ"
+        );
+    }
+}
+
+/// The conformance matrix: fast backend at `threads ∈ {1, 4}` vs the
+/// sequential reference, across sparsity levels and prompt lengths
+/// straddling the 128-token prefill block boundaries.
+#[test]
+fn fast_backend_matches_reference_bit_identically() {
+    let reference = testing::cpu_engine_reference();
+    // Explicitly-pinned thread counts, plus the env-resolved default —
+    // scripts/check.sh runs this suite under FF_CPU_THREADS=1 and =4,
+    // and the "env" engine is what makes those two runs exercise the
+    // production thread-resolution path (`--cpu-threads` serving goes
+    // through the same resolver).
+    let fasts: Vec<(String, Engine)> = vec![
+        ("threads=1".to_string(), testing::cpu_engine_threads(1)),
+        ("threads=4".to_string(), testing::cpu_engine_threads(4)),
+        ("threads=env".to_string(), testing::cpu_engine()),
+    ];
+    let block = reference.block();
+    // tail-only, block+1, and 2 blocks + ragged tail
+    let lens = [40, block + 1, 2 * block + 44];
+    for (name, cfg) in configs() {
+        for &len in &lens {
+            let prompt = corpus_prompt(len);
+            let want = reference.prefill(&prompt, &cfg).unwrap();
+            for (threads, fast) in &fasts {
+                let got = fast.prefill(&prompt, &cfg).unwrap();
+                assert_prefill_bit_identical(
+                    &want,
+                    &got,
+                    &format!("{name} len={len} {threads}"),
+                );
+            }
+        }
+    }
+}
+
+/// Exact-block-boundary prompt (no ragged tail) under the full method.
+#[test]
+fn exact_block_boundary_matches_reference() {
+    let reference = testing::cpu_engine_reference();
+    let fast = testing::cpu_engine_threads(4);
+    let prompt = corpus_prompt(2 * reference.block());
+    for (name, cfg) in configs() {
+        let want = reference.prefill(&prompt, &cfg).unwrap();
+        let got = fast.prefill(&prompt, &cfg).unwrap();
+        assert_prefill_bit_identical(&want, &got,
+                                     &format!("{name} exact-2-blocks"));
+    }
+}
+
+/// Decode steps (T=1 dispatch shapes, incl. the sparse nc decode path)
+/// agree bit-for-bit too.
+#[test]
+fn decode_matches_reference_bit_identically() {
+    let reference = testing::cpu_engine_reference();
+    let fast = testing::cpu_engine_threads(4);
+    let mut cfg = uniform_cfg(0.5, false);
+    cfg.sparse_decode = true;
+    let prompt = corpus_prompt(150);
+    let mut a = reference.prefill(&prompt, &cfg).unwrap();
+    let mut b = fast.prefill(&prompt, &cfg).unwrap();
+    let mut la = a.last_logits.clone();
+    let mut lb = b.last_logits.clone();
+    let mut pos = prompt.len();
+    for step in 0..4 {
+        let ta = fastforward::engine::argmax(&la) as i32;
+        let tb = fastforward::engine::argmax(&lb) as i32;
+        assert_eq!(ta, tb, "decode step {step}: argmax diverged");
+        la = reference.decode_step(ta, pos, &mut a.cache, &cfg).unwrap();
+        lb = fast.decode_step(tb, pos, &mut b.cache, &cfg).unwrap();
+        for i in 0..la.len() {
+            assert_eq!(
+                la[i].to_bits(),
+                lb[i].to_bits(),
+                "decode step {step}: logit {i} differs"
+            );
+        }
+        pos += 1;
+    }
+}
+
+/// Fast and reference runtimes share one numeric fingerprint: they are
+/// the *same* numeric backend (bit-identical), so prefix-cache KV is
+/// interchangeable between them and across thread counts.
+#[test]
+fn fast_and_reference_share_numeric_fingerprint() {
+    let reference = testing::cpu_engine_reference();
+    let f1 = testing::cpu_engine_threads(1);
+    let f4 = testing::cpu_engine_threads(4);
+    assert_eq!(
+        reference.rt.numeric_fingerprint(),
+        f1.rt.numeric_fingerprint()
+    );
+    assert_eq!(
+        f1.rt.numeric_fingerprint(),
+        f4.rt.numeric_fingerprint()
+    );
+    let cfg = SparsityConfig::fastforward(0.5);
+    assert_eq!(reference.prefix_seed(&cfg), f4.prefix_seed(&cfg));
+}
+
+// ---------------------------------------------------------------------------
+// Rc→Arc migration regressions
+// ---------------------------------------------------------------------------
+
+fn assert_send_sync<T: Send + Sync>() {}
+
+/// The types the executor pool now shares across replica threads must
+/// stay `Send + Sync` (this is a compile-time assertion).
+#[test]
+fn shared_model_state_is_send_sync() {
+    assert_send_sync::<fastforward::manifest::Manifest>();
+    assert_send_sync::<fastforward::weights::WeightStore>();
+}
+
+/// Regression for the per-replica re-seeding `spawn_backend` used to
+/// do: every engine the factory builds must share the *same*
+/// manifest/weight allocation (no re-seed, no re-load) and therefore
+/// the same numeric fingerprint.
+#[test]
+fn pool_factory_shares_one_weight_set_across_replicas() {
+    let factory =
+        ExecutorPool::shared_backend_factory(BackendKind::Cpu, None)
+            .unwrap();
+    let a = factory().unwrap();
+    let b = factory().unwrap();
+    assert_eq!(
+        a.rt.numeric_fingerprint(),
+        b.rt.numeric_fingerprint(),
+        "replicas must serve identical numerics"
+    );
+    assert!(
+        std::sync::Arc::ptr_eq(&a.rt.manifest, &b.rt.manifest),
+        "replicas must share one manifest allocation, not re-seed"
+    );
+    // and the factory-built engine matches a hand-built one numerically
+    let hand = Engine::synthetic_cpu(&SyntheticSpec::default()).unwrap();
+    assert_eq!(
+        a.rt.numeric_fingerprint(),
+        hand.rt.numeric_fingerprint()
+    );
+}
+
+/// Invalid backend/artifact combinations fail at factory construction
+/// with a clear error (spawn_backend then degrades every replica to an
+/// answered error instead of hanging).
+#[test]
+fn factory_rejects_invalid_backend_combinations() {
+    let err = match ExecutorPool::shared_backend_factory(
+        BackendKind::Cpu,
+        Some(std::path::PathBuf::from("/no/such/bundle")),
+    ) {
+        Ok(_) => panic!("cpu + artifacts must be rejected"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("synthetic reference model"), "{err}");
+    let err = match ExecutorPool::shared_backend_factory(
+        BackendKind::Pjrt,
+        None,
+    ) {
+        Ok(_) => panic!("pjrt without artifacts must be rejected"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("artifact directory"), "{err}");
+}

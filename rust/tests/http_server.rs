@@ -50,8 +50,8 @@ fn full_http_stack() {
     let r2 = router.clone();
     let d2 = dir.clone();
     let exec = std::thread::spawn(move || {
-        let m = Rc::new(Manifest::load(&d2).unwrap());
-        let w = Rc::new(WeightStore::load(&m).unwrap());
+        let m = Arc::new(Manifest::load(&d2).unwrap());
+        let w = Arc::new(WeightStore::load(&m).unwrap());
         let rt = Rc::new(Runtime::new(m, w).unwrap());
         Batcher::new(Engine::new(rt), r2, BatcherConfig::default())
             .run()

@@ -21,8 +21,8 @@ fn start_stack(max_active: usize) -> Option<(Arc<Router>, std::thread::JoinHandl
     let router = Arc::new(Router::new(64, 4096, 512, 128, metrics));
     let r2 = router.clone();
     let handle = std::thread::spawn(move || {
-        let m = Rc::new(Manifest::load(&dir).unwrap());
-        let w = Rc::new(WeightStore::load(&m).unwrap());
+        let m = Arc::new(Manifest::load(&dir).unwrap());
+        let w = Arc::new(WeightStore::load(&m).unwrap());
         let rt = Rc::new(Runtime::new(m, w).unwrap());
         let engine = Engine::new(rt);
         Batcher::new(

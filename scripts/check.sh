@@ -14,6 +14,15 @@ cargo build --release "${extra[@]}"
 echo "==> cargo test -q"
 cargo test -q "${extra[@]}"
 
+echo "==> backend conformance suite (FF_CPU_THREADS=1)"
+FF_CPU_THREADS=1 cargo test -q --test backend_conformance "${extra[@]}"
+
+echo "==> backend conformance suite (FF_CPU_THREADS=4)"
+FF_CPU_THREADS=4 cargo test -q --test backend_conformance "${extra[@]}"
+
+echo "==> one-block CPU perf smoke (sparse beats dense)"
+cargo test -q --test perf_smoke one_block_sparse_beats_dense "${extra[@]}"
+
 echo "==> cargo test --doc"
 cargo test --doc -q "${extra[@]}"
 
