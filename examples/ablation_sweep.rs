@@ -5,7 +5,6 @@
 //!     cargo run --release --example ablation_sweep -- --ablation schedule
 //!         (schedule | dense-blocks | compensator | predictor | all)
 
-use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -31,7 +30,7 @@ fn main() -> Result<()> {
 
     let m = Arc::new(Manifest::load(&dir)?);
     let w = Arc::new(WeightStore::load(&m)?);
-    let engine = Engine::new(Rc::new(Runtime::new(m, w)?));
+    let engine = Engine::new(Arc::new(Runtime::new(m, w)?));
     let tasks = eval::build_tasks(&spec);
 
     let dense = eval::evaluate(&engine, &tasks, &SparsityConfig::dense(),

@@ -11,7 +11,6 @@
 //!     make artifacts && cargo run --release --features pjrt \
 //!         --example quickstart
 
-use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -40,7 +39,7 @@ fn load_engine() -> Result<Engine> {
     println!("backend: {} over artifacts at {dir:?}", kind.label());
     let manifest = Arc::new(Manifest::load(&dir)?);
     let weights = Arc::new(WeightStore::load(&manifest)?);
-    Ok(Engine::new(Rc::new(Runtime::with_backend(
+    Ok(Engine::new(Arc::new(Runtime::with_backend(
         kind, manifest, weights,
     )?)))
 }

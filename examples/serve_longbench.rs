@@ -7,7 +7,6 @@
 //!     cargo run --release --example serve_longbench -- \
 //!         --requests 12 --prompt-chars 1024 --sparsity 0.5
 
-use std::rc::Rc;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 
@@ -49,7 +48,7 @@ fn main() -> Result<()> {
     let exec = std::thread::spawn(move || -> Result<()> {
         let m = Arc::new(Manifest::load(&dir2)?);
         let w = Arc::new(WeightStore::load(&m)?);
-        let rt = Rc::new(Runtime::new(m, w)?);
+        let rt = Arc::new(Runtime::new(m, w)?);
         Batcher::new(
             Engine::new(rt),
             r2,
@@ -135,7 +134,7 @@ fn main() -> Result<()> {
     println!("\n== accuracy (offline, same engine artifacts) ==");
     let m = Arc::new(Manifest::load(&dir)?);
     let w = Arc::new(WeightStore::load(&m)?);
-    let engine = Engine::new(Rc::new(Runtime::new(m, w)?));
+    let engine = Engine::new(Arc::new(Runtime::new(m, w)?));
     let spec = EvalSpec {
         tasks_per_group: 2,
         prompt_chars,

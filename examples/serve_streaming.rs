@@ -11,7 +11,7 @@
 //! Requires artifacts and the `pjrt` feature (prints a hint otherwise).
 
 use std::io::Write as _;
-use std::rc::Rc;
+
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 
@@ -45,7 +45,7 @@ fn main() -> Result<()> {
     let exec = std::thread::spawn(move || -> Result<()> {
         let m = Arc::new(Manifest::load(&dir)?);
         let w = Arc::new(WeightStore::load(&m)?);
-        let rt = Rc::new(Runtime::new(m, w)?);
+        let rt = Arc::new(Runtime::new(m, w)?);
         Batcher::new(Engine::new(rt), r2, BatcherConfig::default()).run()
     });
     let tok = Tokenizer::new(probe.model.vocab);

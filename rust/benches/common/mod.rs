@@ -4,7 +4,6 @@
 //! crate set has no criterion; util::stats::bench provides warmup + reps
 //! with mean/σ/percentile reporting).
 
-use std::rc::Rc;
 use std::sync::Arc;
 
 use fastforward::engine::Engine;
@@ -19,7 +18,7 @@ pub fn engine() -> Option<Engine> {
     let dir = fastforward::test_artifacts_dir()?;
     let m = Arc::new(Manifest::load(&dir).unwrap());
     let w = Arc::new(WeightStore::load(&m).unwrap());
-    let rt = Rc::new(Runtime::new(m, w).unwrap());
+    let rt = Arc::new(Runtime::new(m, w).unwrap());
     Some(Engine::new(rt))
 }
 

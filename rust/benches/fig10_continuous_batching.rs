@@ -1,0 +1,130 @@
+//! Figure 10: continuous batching — batched decode throughput vs
+//! batch size on the CPU backend.
+//!
+//! For each batch size B, the bench prefills B short sequences on the
+//! FFN-heavy synthetic model, then decodes them two ways:
+//!
+//! * **sequential** — one `Engine::decode_step` per sequence per token
+//!   (the pre-batching execution path: B passes over the layer
+//!   weights per decode round), and
+//! * **batched** — one `DecodeBatch::step` per round (all B rows fold
+//!   into one shared pass over the weights).
+//!
+//! Both paths produce bit-identical logits (the backend conformance
+//! suite pins that), so the comparison is purely wall-clock: aggregate
+//! decoded tokens per second. The model and both decode drivers are
+//! shared with the tier-1 perf gate (`fastforward::testing::
+//! decode_bench_*`), so the gate and this bench always measure the
+//! same thing. Needs no artifacts and emits `BENCH_fig10_cpu.json`.
+//!
+//! Flags: `--steps N` decode rounds per measurement (default 24),
+//! `--smoke` for the quick check.sh gate (B ∈ {1, 4}, 6 rounds).
+//! Acceptance (full run): B=4 aggregate throughput ≥ 1.3× B=1
+//! sequential — the same bar `tests/perf_smoke.rs` gates in tier-1.
+
+mod common;
+
+use std::time::Instant;
+
+use fastforward::engine::Engine;
+use fastforward::testing;
+use fastforward::util::cli::Args;
+
+struct Point {
+    b: usize,
+    seq_tps: f64,
+    batch_tps: f64,
+}
+
+fn measure(engine: &Engine, b: usize, steps: usize) -> Point {
+    let seqs = testing::decode_bench_seqs(engine, b);
+    let tokens = (b * steps) as f64;
+    let seq_run = || testing::decode_bench_sequential(engine, &seqs,
+                                                      steps);
+    let batch_run =
+        || testing::decode_bench_batched(engine, &seqs, steps, b);
+
+    // warmup, then best-of-2 wall clock per path
+    seq_run();
+    batch_run();
+    let best = |f: &dyn Fn()| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..2 {
+            let t0 = Instant::now();
+            f();
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    Point {
+        b,
+        seq_tps: tokens / best(&seq_run),
+        batch_tps: tokens / best(&batch_run),
+    }
+}
+
+fn main() {
+    common::header(
+        "Figure 10",
+        "continuous batching: batched decode throughput vs batch size",
+    );
+    let args = Args::parse_env();
+    let smoke = args.has("smoke");
+    let steps = args.usize("steps", if smoke { 6 } else { 24 });
+    let batch_sizes: &[usize] =
+        if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    println!(
+        "backend: cpu (synthetic FFN-heavy model), {steps} decode \
+         rounds per point{}",
+        if smoke { ", smoke mode" } else { "" }
+    );
+
+    let engine =
+        Engine::synthetic_cpu(&testing::decode_bench_spec()).unwrap();
+    let mut points = Vec::new();
+    println!("{:>4} {:>14} {:>14} {:>10}", "B", "seq tok/s",
+             "batched tok/s", "speedup");
+    for &b in batch_sizes {
+        let p = measure(&engine, b, steps);
+        println!(
+            "{:>4} {:>14.1} {:>14.1} {:>9.2}x",
+            p.b,
+            p.seq_tps,
+            p.batch_tps,
+            p.batch_tps / p.seq_tps
+        );
+        points.push(p);
+    }
+
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"b\":{},\"seq_tps\":{:.2},\"batch_tps\":{:.2},\
+                 \"speedup\":{:.4}}}",
+                p.b,
+                p.seq_tps,
+                p.batch_tps,
+                p.batch_tps / p.seq_tps
+            )
+        })
+        .collect();
+    common::write_bench_json(
+        "BENCH_fig10_cpu.json",
+        &format!(
+            "{{\"figure\":\"fig10_continuous_batching\",\
+             \"backend\":\"cpu\",\"steps\":{steps},\"smoke\":{smoke},\
+             \"points\":[{}]}}\n",
+            rows.join(",")
+        ),
+    );
+
+    if let Some(p4) = points.iter().find(|p| p.b == 4) {
+        let speedup = p4.batch_tps / p4.seq_tps;
+        println!(
+            "acceptance: B=4 batched ≥ 1.3x sequential → {:.2}x {}",
+            speedup,
+            if speedup >= 1.3 { "PASS" } else { "MISS" }
+        );
+    }
+}

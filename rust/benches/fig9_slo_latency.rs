@@ -61,6 +61,7 @@ fn run(dir: &std::path::PathBuf, block: usize, slo: bool,
             max_active: 4,
             prefill_block_budget: 4,
             decode_first_budget: 1,
+            max_batch: 8,
             slo,
         },
         dir.clone(),

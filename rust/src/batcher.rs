@@ -11,12 +11,18 @@
 //!    here, mid-prefill or mid-decode),
 //! 3. plan the iteration (`plan_schedule`): pick the prefill block
 //!    budget and decide whether batch-class prefills are preempted,
-//! 4. schedule up to the planned budget of prefill *blocks* across
-//!    active requests (Sarathi-style chunked prefill — long prompts
-//!    don't monopolize the engine), interactive prefills first,
-//! 5. run one decode round for every request in the decode phase
-//!    (continuous batching semantics; execution is serialized on the
-//!    replica's PJRT stream but scheduling interleaves fairly),
+//! 4. stage one decode token per decoding request (sampled from the
+//!    logits the previous tick produced; EOS / budget-hit requests
+//!    finish here), streaming each token as it is staged,
+//! 5. run the **mixed step**: every staged decode row plus at most
+//!    one preemptible prefill chunk (interactive prefills first) are
+//!    folded into shared forward passes of at most `max_batch` rows
+//!    each ([`crate::engine::DecodeBatch::step`] →
+//!    [`crate::engine::Engine::step_batch`]) — B decode tokens cost
+//!    one pass over the layer weights instead of B; any remaining
+//!    prefill budget is then spent on standalone chunked-prefill
+//!    steps, interactive first (Sarathi-style — long prompts still
+//!    don't monopolize the engine),
 //! 6. retire finished requests, releasing their KV pages and reporting
 //!    their cost back to the replica's load accounting.
 //!
@@ -53,7 +59,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::cost::UnitClock;
-use crate::engine::{argmax, Engine, PrefillSession};
+use crate::engine::{argmax, DecodeBatch, Engine, PrefillSession};
 use crate::kvcache::{PageId, SeqKvCache};
 use crate::metrics::Metrics;
 use crate::router::{Replica, Request, Response, Router, SloClass,
@@ -72,6 +78,12 @@ pub struct BatcherConfig {
     /// trickles at this rate so streaming inter-token latency stays
     /// flat. Clamped to `prefill_block_budget`.
     pub decode_first_budget: usize,
+    /// Maximum sequence rows per batched forward pass (decode rows
+    /// plus the prefill chunk that rides along). More staged rows than
+    /// this split into several passes within the same tick; `1`
+    /// degenerates to sequential per-sequence execution. Served as
+    /// `--max-batch`.
+    pub max_batch: usize,
     /// Master switch for SLO-aware scheduling (priority prefill order,
     /// decode-first budget capping, batch-prefill preemption). With it
     /// off every request is scheduled round-robin as one class.
@@ -84,6 +96,7 @@ impl Default for BatcherConfig {
             max_active: 8,
             prefill_block_budget: 4,
             decode_first_budget: 1,
+            max_batch: 8,
             slo: true,
         }
     }
@@ -101,9 +114,10 @@ enum AdmitError {
 enum Phase {
     Prefill(PrefillSession),
     Decode {
-        cache: SeqKvCache,
-        logits: Vec<f32>,
-        pos: usize,
+        /// Member id in the replica's shared [`DecodeBatch`] (the
+        /// batch owns the sequence's KV cache and logits while it
+        /// decodes).
+        seq: usize,
         generated: Vec<i32>,
     },
     Finished,
@@ -194,6 +208,10 @@ pub struct Batcher {
     metrics: Arc<Metrics>,
     cfg: BatcherConfig,
     tokenizer: Tokenizer,
+    /// The replica's lockstep decode batch: requests join it as their
+    /// prefill finishes and leave as they complete, and every tick
+    /// advances all members through shared forward passes.
+    decode: DecodeBatch,
     /// Measured wall-clock per scheduler step (EWMA), for deadline
     /// projection.
     clock: UnitClock,
@@ -214,6 +232,7 @@ impl Batcher {
         Batcher {
             replica: router.replica(replica_id),
             metrics: router.metrics.clone(),
+            decode: DecodeBatch::new(engine.clone()),
             engine,
             router,
             cfg,
@@ -335,9 +354,34 @@ impl Batcher {
                 }
             }
 
-            // 4. chunked prefill round-robin: interactive pass first,
-            //    then un-preempted batch
+            // 4. stage decode tokens: sample each member's next token
+            //    from its resident logits (finishing EOS / budget-hit
+            //    requests), stream it, and stage it for the batched
+            //    step — no engine work yet
+            for a in active.iter_mut() {
+                self.stage_decode(a);
+            }
+
+            // 5. the mixed step: every staged decode row plus at most
+            //    one preemptible prefill chunk (interactive prefills
+            //    first) share batched forward passes of at most
+            //    `max_batch` rows
             let mut budget = plan.prefill_budget;
+            let chunk_idx = if budget > 0 {
+                Self::pick_chunk(&active)
+            } else {
+                None
+            };
+            if self.decode.staged() > 0 || chunk_idx.is_some() {
+                if chunk_idx.is_some() {
+                    budget -= 1;
+                }
+                self.run_mixed_step(&mut active, chunk_idx);
+            }
+
+            // 5b. spillover chunked prefill round-robin (standalone
+            //     steps): interactive pass first, then un-preempted
+            //     batch
             'prefill: loop {
                 let mut progressed = false;
                 for interactive_pass in [true, false] {
@@ -363,13 +407,6 @@ impl Batcher {
                 }
                 if !progressed {
                     break;
-                }
-            }
-
-            // 5. one decode round each
-            for a in active.iter_mut() {
-                if let Err(e) = self.step_decode(a) {
-                    self.fail(a, e);
                 }
             }
 
@@ -431,10 +468,18 @@ impl Batcher {
 
     /// An active request whose cancel token flipped: stop it where it
     /// stands. Pages are released by the retire step; executed-block
-    /// counters stay truthful for the part that ran.
+    /// counters stay truthful for the part that ran, and a decoding
+    /// request leaves the decode batch so the next tick's passes no
+    /// longer carry it.
     fn cancel_active(&mut self, a: &mut Active) {
-        if let Phase::Prefill(session) = &a.phase {
-            self.metrics.record_prefill_timing(session.timing());
+        match std::mem::replace(&mut a.phase, Phase::Finished) {
+            Phase::Prefill(session) => {
+                self.metrics.record_prefill_timing(session.timing());
+            }
+            Phase::Decode { seq, .. } => {
+                let _ = self.decode.leave(seq);
+            }
+            Phase::Finished => {}
         }
         self.metrics.record_cancelled();
         let mut resp = Response::failed(a.req.id, "cancelled".to_string());
@@ -442,7 +487,6 @@ impl Batcher {
         resp.reused_blocks = a.reused_blocks;
         let _ = a.req.events.send(TokenEvent::Done(resp));
         a.ok = false;
-        a.phase = Phase::Finished;
     }
 
     /// Eject one batch-class prefill (a paused one if any, else any —
@@ -654,34 +698,50 @@ impl Batcher {
         self.clock.observe(1.0, t0.elapsed().as_secs_f64() * 1e3);
         *budget -= 1;
         *progressed = true;
-        if session.done() {
-            let Phase::Prefill(session) =
-                std::mem::replace(&mut a.phase, Phase::Finished)
-            else {
-                unreachable!()
-            };
-            // accurate executed-block accounting (adopted blocks and
-            // tail tokens never count as executed blocks) — recorded
-            // before finish() so a finish-time error can't lose the
-            // blocks that genuinely ran
-            self.metrics.record_prefill_timing(session.timing());
-            let pre = session.finish()?;
-            let ttft = a.admitted.elapsed().as_secs_f64() * 1e3;
-            a.ttft_ms = Some(ttft);
-            self.metrics.record_ttft(ttft);
-            let _ = a.req.events.send(TokenEvent::First {
-                ttft_ms: ttft,
-                reused_blocks: a.reused_blocks,
-            });
-            a.last_emit = Some(Instant::now());
-            self.offer_prefix(&a.req, &pre.cache);
-            a.phase = Phase::Decode {
-                pos: a.req.prompt.len(),
-                logits: pre.last_logits,
-                cache: pre.cache,
-                generated: Vec::new(),
-            };
+        self.finish_prefill_if_done(a)
+    }
+
+    /// If `a`'s prefill session consumed its whole prompt, finish it:
+    /// record timing, emit `First` (TTFT), offer the prefix blocks to
+    /// the shared cache, and join the replica's decode batch.
+    fn finish_prefill_if_done(&mut self, a: &mut Active) -> Result<()> {
+        let done = match &a.phase {
+            Phase::Prefill(session) => session.done(),
+            _ => false,
+        };
+        if !done {
+            return Ok(());
         }
+        let Phase::Prefill(session) =
+            std::mem::replace(&mut a.phase, Phase::Finished)
+        else {
+            unreachable!()
+        };
+        // accurate executed-block accounting (adopted blocks and
+        // tail tokens never count as executed blocks) — recorded
+        // before finish() so a finish-time error can't lose the
+        // blocks that genuinely ran
+        self.metrics.record_prefill_timing(session.timing());
+        let pre = session.finish()?;
+        let ttft = a.admitted.elapsed().as_secs_f64() * 1e3;
+        a.ttft_ms = Some(ttft);
+        self.metrics.record_ttft(ttft);
+        let _ = a.req.events.send(TokenEvent::First {
+            ttft_ms: ttft,
+            reused_blocks: a.reused_blocks,
+        });
+        a.last_emit = Some(Instant::now());
+        self.offer_prefix(&a.req, &pre.cache);
+        let seq = self.decode.join(
+            pre.cache,
+            a.req.prompt.len(),
+            pre.last_logits,
+            a.req.cfg.clone(),
+        );
+        a.phase = Phase::Decode {
+            seq,
+            generated: Vec::new(),
+        };
         Ok(())
     }
 
@@ -747,19 +807,25 @@ impl Batcher {
         );
     }
 
-    fn step_decode(&mut self, a: &mut Active) -> Result<()> {
-        let Phase::Decode { cache, logits, pos, generated } = &mut a.phase
-        else {
-            return Ok(());
+    /// Sample one token for an active decode member from its resident
+    /// logits: finish the request (EOS / token budget), or stream the
+    /// token and stage it for this tick's batched step. No engine work
+    /// happens here — that is what lets every staged row share one
+    /// forward pass.
+    fn stage_decode(&mut self, a: &mut Active) {
+        let Phase::Decode { seq, generated } = &mut a.phase else {
+            return;
         };
-        let tok = argmax(logits) as i32;
+        let seq = *seq;
+        let tok = argmax(self.decode.logits(seq)) as i32;
         if tok == EOS || generated.len() >= a.req.max_tokens {
             self.finish_ok(a);
-            return Ok(());
+            return;
         }
         generated.push(tok);
-        // stream the token before dispatching the next engine step:
-        // the token is already final (argmax of the previous logits)
+        let hit_limit = generated.len() >= a.req.max_tokens;
+        // stream the token before the next engine step: it is already
+        // final (argmax of the previous logits)
         let text = a.decoder.push(tok);
         let now = Instant::now();
         if let Some(prev) = a.last_emit {
@@ -770,28 +836,124 @@ impl Batcher {
         }
         a.last_emit = Some(now);
         let _ = a.req.events.send(TokenEvent::Token { token: tok, text });
-        let t0 = Instant::now();
-        let new_logits =
-            self.engine.decode_step(tok, *pos, cache, &a.req.cfg)?;
-        let ms = t0.elapsed().as_secs_f64() * 1e3;
-        a.decode_ms_total += ms;
-        self.metrics.record_tpot(ms);
-        self.clock.observe(1.0, ms);
-        *logits = new_logits;
-        *pos += 1;
-        let hit_limit = generated.len() >= a.req.max_tokens;
         if hit_limit {
+            // the budget-hitting token needs no further logits: finish
+            // without spending a batch row on it
             self.finish_ok(a);
+        } else {
+            self.decode.feed(seq, tok);
         }
-        Ok(())
+    }
+
+    /// The tick's prefill-chunk candidate: the first prefilling
+    /// request in priority order (interactive first; preempted batch
+    /// prefills excluded).
+    fn pick_chunk(active: &[Active]) -> Option<usize> {
+        for interactive_pass in [true, false] {
+            for (i, a) in active.iter().enumerate() {
+                if a.req.class.is_interactive() != interactive_pass {
+                    continue;
+                }
+                if !interactive_pass && a.preempted {
+                    continue;
+                }
+                if matches!(a.phase, Phase::Prefill(_)) {
+                    return Some(i);
+                }
+            }
+        }
+        None
+    }
+
+    /// Run the tick's shared forward pass(es): every staged decode row
+    /// plus — when `chunk_idx` names a prefilling request — one prefill
+    /// chunk riding the first pass. A pass that errors fails exactly
+    /// the requests whose rows it carried; the scheduling loop itself
+    /// never dies.
+    fn run_mixed_step(&mut self, active: &mut [Active],
+                      chunk_idx: Option<usize>) {
+        let stats = {
+            let chunk = match chunk_idx {
+                Some(i) => match &mut active[i].phase {
+                    Phase::Prefill(session) => Some(session),
+                    _ => unreachable!(
+                        "chunk candidate must be prefilling"
+                    ),
+                },
+                None => None,
+            };
+            self.decode.step(chunk, self.cfg.max_batch)
+        };
+        // occupancy metrics + the scheduler-unit clock, per pass (each
+        // pass row — decode token or prefill chunk — is one unit)
+        for p in &stats.passes {
+            self.metrics.record_batch_step(p.rows);
+            self.clock.observe(p.rows as f64, p.ms);
+        }
+        // Per-token decode latency from chunk-free passes only: a pass
+        // carrying a (block-sized) prefill chunk says nothing about
+        // the cost of one decode token. When every pass carried the
+        // chunk, fall back to even amortization — the only estimate
+        // available.
+        let (pure_ms, pure_rows) = stats
+            .passes
+            .iter()
+            .filter(|p| !p.chunk)
+            .fold((0.0, 0usize), |(ms, rows), p| (ms + p.ms, rows + p.rows));
+        let per_row = if pure_rows > 0 {
+            pure_ms / pure_rows as f64
+        } else {
+            let (ms, rows) = stats
+                .passes
+                .iter()
+                .fold((0.0, 0usize), |(ms, rows), p| {
+                    (ms + p.ms, rows + p.rows)
+                });
+            if rows > 0 { ms / rows as f64 } else { 0.0 }
+        };
+        if per_row > 0.0 {
+            for a in active.iter_mut() {
+                if matches!(a.phase, Phase::Decode { .. }) {
+                    a.decode_ms_total += per_row;
+                    self.metrics.record_tpot(per_row);
+                }
+            }
+        }
+        // fail exactly the rows of failed passes
+        for failure in &stats.failures {
+            for (i, a) in active.iter_mut().enumerate() {
+                let hit = match &a.phase {
+                    Phase::Decode { seq, .. } => {
+                        failure.members.contains(seq)
+                    }
+                    Phase::Prefill(_) => {
+                        failure.chunk && chunk_idx == Some(i)
+                    }
+                    Phase::Finished => false,
+                };
+                if hit {
+                    self.fail(a, anyhow::anyhow!("{}", failure.error));
+                }
+            }
+        }
+        if let Some(i) = chunk_idx {
+            // no-op unless the chunk's session just consumed its
+            // whole prompt (and it survived any pass failure)
+            if let Err(e) = self.finish_prefill_if_done(&mut active[i]) {
+                self.fail(&mut active[i], e);
+            }
+        }
     }
 
     fn finish_ok(&mut self, a: &mut Active) {
-        let Phase::Decode { generated, .. } =
+        let Phase::Decode { seq, generated } =
             std::mem::replace(&mut a.phase, Phase::Finished)
         else {
             return;
         };
+        // the decode batch owns the cache while decoding; reclaim (and
+        // drop) it now that the sequence is done
+        let _cache = self.decode.leave(seq);
         let e2e = a.admitted.elapsed().as_secs_f64() * 1e3;
         let n = generated.len();
         self.metrics
@@ -809,17 +971,24 @@ impl Batcher {
     }
 
     fn fail(&mut self, a: &mut Active, err: anyhow::Error) {
-        // a request failing mid-prefill still executed blocks: keep the
-        // engine's block-execution counters truthful
-        if let Phase::Prefill(session) = &a.phase {
-            self.metrics.record_prefill_timing(session.timing());
+        match std::mem::replace(&mut a.phase, Phase::Finished) {
+            // a request failing mid-prefill still executed blocks:
+            // keep the engine's block-execution counters truthful
+            Phase::Prefill(session) => {
+                self.metrics.record_prefill_timing(session.timing());
+            }
+            // a decoding request must leave the batch, or the next
+            // tick would step a retired sequence
+            Phase::Decode { seq, .. } => {
+                let _ = self.decode.leave(seq);
+            }
+            Phase::Finished => {}
         }
         let mut resp = Response::failed(a.req.id, err.to_string());
         resp.e2e_ms = a.admitted.elapsed().as_secs_f64() * 1e3;
         resp.reused_blocks = a.reused_blocks;
         let _ = a.req.events.send(TokenEvent::Done(resp));
         a.ok = false;
-        a.phase = Phase::Finished;
     }
 
     fn retire(&mut self, a: &mut Active) {
@@ -844,6 +1013,7 @@ mod tests {
             max_active: 8,
             prefill_block_budget: 4,
             decode_first_budget: 1,
+            max_batch: 8,
             slo: true,
         }
     }

@@ -1,0 +1,433 @@
+//! Continuous batching: batched decode and mixed prefill-chunk/decode
+//! steps through one shared forward pass.
+//!
+//! The sequential engine carries exactly one sequence per forward
+//! pass, so B decoding requests re-stream every weight panel B times
+//! per token. [`Engine::step_batch`] folds B decode rows — plus at
+//! most one prefill chunk from another request — into **one** pass
+//! over the layer weights: per layer, every row's executable is
+//! resolved exactly as the sequential path would resolve it, the row
+//! set is handed to the backend in one batched dispatch
+//! ([`crate::runtime::Runtime::run_layer_batch`]), and each row's
+//! fresh KV rows scatter into that sequence's own cache through a
+//! disjoint [`crate::kvcache::StepKv`] view.
+//!
+//! **Bit-identity.** A batched step produces logits and KV
+//! bit-identical to running the same sequences one at a time: every
+//! kernel behind the fused CPU path is row-independent with an
+//! unchanged per-element accumulation order, and the sequential
+//! fallback (PJRT, the reference oracle, split-pipeline chunks) *is*
+//! the one-at-a-time dispatch. `tests/backend_conformance.rs` pins
+//! this against [`crate::runtime::CpuBackend::reference`].
+//!
+//! [`DecodeBatch`] is the scheduler-facing lockstep container:
+//! sequences join as their prefill finishes, leave as they hit EOS or
+//! their token budget, and every [`DecodeBatch::step`] folds the
+//! staged members (split into passes of at most `max_batch` rows)
+//! into shared forward passes.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::session::ChunkPlan;
+use super::{Engine, PrefillSession, SparsityConfig};
+use crate::kvcache::{SeqKvCache, StepKv};
+use crate::runtime::StepRow;
+
+/// One decode row of a mixed step: feed `token` at `pos` into the
+/// sequence behind `cache`, under that request's `cfg`.
+pub struct DecodeSlot<'a> {
+    /// The token fed at this step (the previous step's sampled token).
+    pub token: i32,
+    /// Absolute position the token is fed at.
+    pub pos: usize,
+    /// The sequence's KV cache (fresh rows scatter into it).
+    pub cache: &'a mut SeqKvCache,
+    /// The request's sparsity configuration.
+    pub cfg: &'a SparsityConfig,
+}
+
+/// What one [`Engine::step_batch`] call produced.
+pub struct StepBatchResult {
+    /// Next-token logits per decode slot, in slot order.
+    pub logits: Vec<Vec<f32>>,
+    /// Prompt tokens the prefill chunk consumed (0 when none rode
+    /// along).
+    pub chunk_tokens: usize,
+}
+
+impl Engine {
+    /// Run one continuous-batching step: every decode slot plus at
+    /// most one prefill chunk through a single shared pass over the
+    /// layer weights.
+    ///
+    /// The chunk is the next scheduling unit of `prefill` (one full
+    /// block, or one ragged-tail token); a unit that needs the split
+    /// sequential pipeline (ablation expert sources, first-block
+    /// static capture) runs through [`PrefillSession::step`] instead,
+    /// and only the decode rows share the batched pass. Each decode
+    /// slot's per-layer executables are exactly the ones
+    /// [`Engine::decode_step`] would dispatch, so a batch of size one
+    /// is the sequential path under a different entry point — and any
+    /// batch is bit-identical to it.
+    pub fn step_batch(&self, mut prefill: Option<&mut PrefillSession>,
+                      decodes: &mut [DecodeSlot<'_>])
+                      -> Result<StepBatchResult> {
+        let n_layers = self.n_layers;
+
+        // ---- plan the prefill chunk -------------------------------
+        let mut chunk_tokens = 0usize;
+        let chunk_plan: Option<ChunkPlan> = match prefill.as_deref_mut() {
+            Some(session) => match session.plan_batch_step()? {
+                Some(plan) => Some(plan),
+                None => {
+                    // split pipeline required: run the unit through
+                    // the sequential session step; the decode rows
+                    // still share one batched pass below.
+                    chunk_tokens = session.step()?;
+                    None
+                }
+            },
+            None => None,
+        };
+
+        // ---- plan the rows (chunk first, then decode slots) -------
+        let chunk_rows = chunk_plan.is_some() as usize;
+        let n_rows = chunk_rows + decodes.len();
+        let mut xs: Vec<Vec<f32>> = Vec::with_capacity(n_rows);
+        let mut ts: Vec<usize> = Vec::with_capacity(n_rows);
+        let mut poss: Vec<usize> = Vec::with_capacity(n_rows);
+        let mut exes: Vec<Vec<String>> = Vec::with_capacity(n_rows);
+        if let Some(plan) = &chunk_plan {
+            xs.push(plan.x.clone());
+            ts.push(plan.t);
+            poss.push(plan.pos);
+            exes.push(plan.exes.clone());
+        }
+        for slot in decodes.iter_mut() {
+            self.ensure_bucket(slot.cache, slot.pos + 1)?;
+            let layer_ks = self.layer_ks(slot.cfg)?;
+            let decode_ks = self.decode_ks_for(&layer_ks);
+            let sparse = !slot.cfg.is_dense() && slot.cfg.sparse_decode;
+            let bucket = slot.cache.bucket;
+            exes.push(
+                (0..n_layers)
+                    .map(|l| {
+                        self.token_exe(slot.cfg, sparse, decode_ks[l],
+                                       bucket)
+                    })
+                    .collect(),
+            );
+            ts.push(1);
+            poss.push(slot.pos);
+            xs.push(self.embed(&[slot.token])?);
+        }
+        if n_rows == 0 {
+            return Ok(StepBatchResult {
+                logits: Vec::new(),
+                chunk_tokens,
+            });
+        }
+
+        // ---- the shared layer loop --------------------------------
+        let t_layers = Instant::now();
+        {
+            let mut caches: Vec<&mut SeqKvCache> =
+                Vec::with_capacity(n_rows);
+            if chunk_rows == 1 {
+                let session = prefill
+                    .as_deref_mut()
+                    .expect("chunk plan without a session");
+                caches.push(&mut session.cache);
+            }
+            for slot in decodes.iter_mut() {
+                caches.push(&mut *slot.cache);
+            }
+            let mut kv = StepKv::new(caches);
+            for l in 0..n_layers {
+                let rows: Vec<StepRow> = (0..n_rows)
+                    .map(|i| {
+                        let (k_cache, v_cache) = kv.layer(i, l);
+                        StepRow {
+                            exe: exes[i][l].as_str(),
+                            x: &xs[i],
+                            t: ts[i],
+                            pos: poss[i],
+                            k_cache,
+                            v_cache,
+                            s: kv.bucket(i),
+                        }
+                    })
+                    .collect();
+                let outs = self.rt.run_layer_batch(l, &rows)?;
+                drop(rows);
+                for (i, out) in outs.into_iter().enumerate() {
+                    kv.append(i, l, &out.k_new, &out.v_new, ts[i])?;
+                    xs[i] = out.y;
+                }
+            }
+            // Decode rows advance their write cursor here; the
+            // chunk's cursor advances in `complete_batch_step` (with
+            // the rest of the session bookkeeping).
+            for i in chunk_rows..n_rows {
+                kv.advance(i, 1);
+            }
+        }
+        let layers_dt = t_layers.elapsed();
+
+        // ---- fold results back ------------------------------------
+        if let Some(plan) = &chunk_plan {
+            let session = prefill
+                .as_deref_mut()
+                .expect("chunk plan without a session");
+            let x_out = std::mem::take(&mut xs[0]);
+            // `layers_dt` covers the whole shared pass; it is
+            // attributed to the step that scheduled it.
+            session.complete_batch_step(plan, x_out, layers_dt);
+            chunk_tokens = plan.t;
+        }
+        let mut logits = Vec::with_capacity(decodes.len());
+        for i in chunk_rows..n_rows {
+            logits.push(self.lm_head(&xs[i], 1)?);
+        }
+        Ok(StepBatchResult {
+            logits,
+            chunk_tokens,
+        })
+    }
+}
+
+/// One member sequence of a [`DecodeBatch`].
+struct DecodeSeq {
+    cache: SeqKvCache,
+    pos: usize,
+    logits: Vec<f32>,
+    cfg: SparsityConfig,
+    /// Token staged by [`DecodeBatch::feed`], consumed by the next
+    /// [`DecodeBatch::step`].
+    pending: Option<i32>,
+}
+
+/// One forward pass within a [`DecodeBatch::step`].
+#[derive(Debug, Clone)]
+pub struct StepPass {
+    /// Sequence rows the pass carried (decode rows plus the prefill
+    /// chunk when it rode this pass) — the samples behind the
+    /// `ff_batch_occupancy` metric.
+    pub rows: usize,
+    /// Whether the prefill chunk rode this pass.
+    pub chunk: bool,
+    /// Wall-clock of the pass in milliseconds.
+    pub ms: f64,
+}
+
+/// One failed pass within a [`DecodeBatch::step`]: only the rows of
+/// *this* pass are affected — members advanced by earlier passes (and
+/// stepped by later ones) stay healthy.
+#[derive(Debug, Clone)]
+pub struct StepFailure {
+    /// Member ids that were rows of the failed pass.
+    pub members: Vec<usize>,
+    /// Whether the prefill chunk was part of the failed pass.
+    pub chunk: bool,
+    /// The engine error, stringified.
+    pub error: String,
+}
+
+/// Occupancy and progress accounting of one [`DecodeBatch::step`].
+#[derive(Debug, Default, Clone)]
+pub struct StepStats {
+    /// Forward passes executed (successful or failed).
+    pub steps: usize,
+    /// Sequence rows folded across those passes (decode rows plus the
+    /// prefill chunk when one rode along).
+    pub rows: usize,
+    /// Per-pass occupancy and timing, in execution order.
+    pub passes: Vec<StepPass>,
+    /// Passes that failed, with exactly the member rows they carried.
+    pub failures: Vec<StepFailure>,
+}
+
+/// Lockstep multi-session decode: the scheduler-facing container
+/// behind continuous batching.
+///
+/// Sequences [`join`](DecodeBatch::join) as their prefill finishes
+/// (bringing their filled KV cache and last-position logits) and
+/// [`leave`](DecodeBatch::leave) as they hit EOS or their token
+/// budget. Sampling stays with the caller: it reads a member's
+/// [`logits`](DecodeBatch::logits), picks a token, and
+/// [`feed`](DecodeBatch::feed)s it back; one
+/// [`step`](DecodeBatch::step) then advances every staged member —
+/// plus at most one prefill chunk — through shared forward passes of
+/// at most `max_batch` rows each.
+pub struct DecodeBatch {
+    engine: Engine,
+    /// Slot map: `join` reuses freed slots so member ids stay stable
+    /// for the lifetime of a sequence.
+    seqs: Vec<Option<DecodeSeq>>,
+}
+
+impl DecodeBatch {
+    /// Empty batch bound to `engine`.
+    pub fn new(engine: Engine) -> Self {
+        DecodeBatch {
+            engine,
+            seqs: Vec::new(),
+        }
+    }
+
+    /// Number of member sequences currently decoding.
+    pub fn len(&self) -> usize {
+        self.seqs.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Whether no sequence is currently decoding.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Members with a staged token (rows the next [`DecodeBatch::step`]
+    /// will advance).
+    pub fn staged(&self) -> usize {
+        self.seqs
+            .iter()
+            .filter(|s| {
+                s.as_ref().is_some_and(|s| s.pending.is_some())
+            })
+            .count()
+    }
+
+    /// Join a sequence whose prefill just finished: its filled KV
+    /// `cache`, next position (= prompt length), last-position
+    /// `logits` and configuration. Returns the member id used with
+    /// every other method.
+    pub fn join(&mut self, cache: SeqKvCache, pos: usize,
+                logits: Vec<f32>, cfg: SparsityConfig) -> usize {
+        let seq = DecodeSeq {
+            cache,
+            pos,
+            logits,
+            cfg,
+            pending: None,
+        };
+        match self.seqs.iter_mut().position(|s| s.is_none()) {
+            Some(i) => {
+                self.seqs[i] = Some(seq);
+                i
+            }
+            None => {
+                self.seqs.push(Some(seq));
+                self.seqs.len() - 1
+            }
+        }
+    }
+
+    /// Remove member `id` (finished, cancelled or failed), returning
+    /// its KV cache to the caller.
+    pub fn leave(&mut self, id: usize) -> SeqKvCache {
+        let seq =
+            self.seqs[id].take().expect("leave of unknown decode seq");
+        while matches!(self.seqs.last(), Some(None)) {
+            self.seqs.pop();
+        }
+        seq.cache
+    }
+
+    /// Member `id`'s current next-token logits.
+    pub fn logits(&self, id: usize) -> &[f32] {
+        &self.seqs[id].as_ref().expect("unknown decode seq").logits
+    }
+
+    /// Stage the sampled token for member `id`; the next
+    /// [`DecodeBatch::step`] feeds it and refreshes the member's
+    /// logits.
+    pub fn feed(&mut self, id: usize, token: i32) {
+        let s = self.seqs[id].as_mut().expect("unknown decode seq");
+        debug_assert!(s.pending.is_none(), "feed before previous step");
+        s.pending = Some(token);
+    }
+
+    /// Advance every staged member by one token — and `prefill` by one
+    /// scheduling unit, riding the first pass — through shared forward
+    /// passes of at most `max_batch` rows each. Members without a
+    /// staged token are untouched.
+    ///
+    /// A pass that errors fails **only its own rows**: they are
+    /// reported in [`StepStats::failures`] (their staged tokens
+    /// consumed, their logits left stale) so the caller can fail
+    /// exactly the affected requests; every other pass of the step
+    /// still runs and its members stay healthy.
+    pub fn step(&mut self, mut prefill: Option<&mut PrefillSession>,
+                max_batch: usize) -> StepStats {
+        let max_batch = max_batch.max(1);
+        let staged: Vec<usize> = self
+            .seqs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                s.as_ref().is_some_and(|s| s.pending.is_some())
+            })
+            .map(|(i, _)| i)
+            .collect();
+        let mut stats = StepStats::default();
+        let mut start = 0usize;
+        while start < staged.len() || prefill.is_some() {
+            let chunk = prefill.take();
+            let had_chunk = chunk.is_some();
+            let room = max_batch.saturating_sub(had_chunk as usize);
+            let group =
+                &staged[start..(start + room).min(staged.len())];
+            start += group.len();
+            // Take the members out of the slot map so the batch can
+            // hold one `&mut` cache per row.
+            let mut taken: Vec<(usize, DecodeSeq)> = group
+                .iter()
+                .map(|&id| {
+                    (id, self.seqs[id].take().expect("staged member"))
+                })
+                .collect();
+            let occupancy = taken.len() + had_chunk as usize;
+            let t0 = Instant::now();
+            let res = {
+                let mut slots: Vec<DecodeSlot<'_>> = taken
+                    .iter_mut()
+                    .map(|(_, s)| DecodeSlot {
+                        token: s.pending.take().expect("staged token"),
+                        pos: s.pos,
+                        cache: &mut s.cache,
+                        cfg: &s.cfg,
+                    })
+                    .collect();
+                self.engine.step_batch(chunk, &mut slots)
+            };
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            stats.steps += 1;
+            stats.rows += occupancy;
+            match res {
+                Ok(r) => {
+                    for ((_, s), lg) in taken.iter_mut().zip(r.logits) {
+                        s.logits = lg;
+                        s.pos += 1;
+                    }
+                    stats.passes.push(StepPass {
+                        rows: occupancy,
+                        chunk: had_chunk,
+                        ms,
+                    });
+                }
+                Err(e) => {
+                    stats.failures.push(StepFailure {
+                        members: taken.iter().map(|(id, _)| *id).collect(),
+                        chunk: had_chunk,
+                        error: e.to_string(),
+                    });
+                }
+            }
+            for (id, s) in taken {
+                self.seqs[id] = Some(s);
+            }
+        }
+        stats
+    }
+}

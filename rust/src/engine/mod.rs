@@ -15,13 +15,16 @@
 //! executables, which keeps numerics exact without padding the KV cache
 //! with garbage positions.
 
+mod batch;
 mod generate;
 mod session;
 
+pub use batch::{DecodeBatch, DecodeSlot, StepBatchResult, StepFailure,
+                StepPass, StepStats};
 pub use generate::{GenerateResult, ScoreResult};
 pub use session::PrefillSession;
 
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
@@ -183,13 +186,17 @@ pub struct PrefillResult {
 
 /// Block-wise prefill + decode engine bound to one [`Runtime`].
 ///
-/// `Engine` is deliberately cheap to clone (it shares the `Rc<Runtime>`)
-/// but **not** `Send`: every executor-pool replica constructs its own
-/// engine on its own thread from the same artifacts.
+/// `Engine` is deliberately cheap to clone (it shares the
+/// `Arc<Runtime>`) but **not** `Send`: the runtime's backend holds
+/// per-replica mutable caches, so every executor-pool replica
+/// constructs its own engine on its own thread from the same (shared,
+/// `Arc`'d) manifest + weight store. The `Arc` handle is what lets one
+/// replica's sessions, decode batches and sampling plumbing all point
+/// at a single runtime without reference-count gymnastics.
 #[derive(Clone)]
 pub struct Engine {
-    /// The PJRT runtime executing the AOT artifacts.
-    pub rt: Rc<Runtime>,
+    /// The runtime executing the manifest's executables.
+    pub rt: Arc<Runtime>,
     block: usize,
     d: usize,
     n_layers: usize,
@@ -197,7 +204,7 @@ pub struct Engine {
 
 impl Engine {
     /// Build an engine over a loaded runtime.
-    pub fn new(rt: Rc<Runtime>) -> Self {
+    pub fn new(rt: Arc<Runtime>) -> Self {
         let m = &rt.manifest.model;
         Engine {
             block: m.block,
@@ -229,11 +236,11 @@ impl Engine {
         spec: &crate::manifest::SyntheticSpec,
         opts: crate::runtime::CpuOptions,
     ) -> Result<Engine> {
-        let manifest = std::sync::Arc::new(Manifest::synthetic(spec));
-        let weights = std::sync::Arc::new(
+        let manifest = Arc::new(Manifest::synthetic(spec));
+        let weights = Arc::new(
             crate::weights::WeightStore::seeded(&manifest, spec.seed),
         );
-        Ok(Engine::new(Rc::new(Runtime::cpu_with_options(
+        Ok(Engine::new(Arc::new(Runtime::cpu_with_options(
             manifest, weights, opts,
         )?)))
     }
@@ -280,6 +287,46 @@ impl Engine {
 
     fn exe_name_sparse(&self, k: usize, t: usize, s: usize) -> String {
         format!("layer_sparse_k{k}_t{t}_s{s}")
+    }
+
+    /// The executable a T=1 step (decode or ragged prompt tail)
+    /// dispatches at one layer — the same selection
+    /// [`Engine::run_token`] makes, factored out so the batched step
+    /// planner names exactly the executables the sequential path runs.
+    pub(crate) fn token_exe(&self, cfg: &SparsityConfig, sparse: bool,
+                            k: usize, s: usize) -> String {
+        let d_ffn = self.rt.manifest.model.d_ffn;
+        if sparse && k < d_ffn {
+            self.fused_sparse_exe(cfg, k, 1, s)
+                .unwrap_or_else(|| self.exe_name_sparse(k, 1, s))
+        } else {
+            self.exe_name_dense(1, s)
+        }
+    }
+
+    /// The fused executable a full-block prefill layer step dispatches
+    /// under `cfg`, or `None` when the step needs the split pipeline
+    /// (ablation expert sources, manifests without fused variants) —
+    /// the same selection [`Engine::run_block`] makes.
+    pub(crate) fn block_exe(&self, cfg: &SparsityConfig, k: usize,
+                            s: usize, layer_dense: bool)
+                            -> Option<String> {
+        if layer_dense {
+            return Some(self.exe_name_dense(self.block, s));
+        }
+        self.fused_sparse_exe(cfg, k, self.block, s)
+    }
+
+    /// Map prefill layer Ks onto the compiled decode-K grid: layers
+    /// whose K is not compiled at T=1 run dense during decode.
+    pub(crate) fn decode_ks_for(&self, layer_ks: &[usize]) -> Vec<usize> {
+        let m = &self.rt.manifest;
+        layer_ks
+            .iter()
+            .map(|&k| {
+                if m.decode_k.contains(&k) { k } else { m.model.d_ffn }
+            })
+            .collect()
     }
 
     /// Embed a token block of length `t` (t == block or 1).
@@ -577,13 +624,7 @@ impl Engine {
                        -> Result<Vec<f32>> {
         self.ensure_bucket(cache, pos + 1)?;
         let layer_ks = self.layer_ks(cfg)?;
-        let m = &self.rt.manifest;
-        let decode_ks: Vec<usize> = layer_ks
-            .iter()
-            .map(|&k| {
-                if m.decode_k.contains(&k) { k } else { m.model.d_ffn }
-            })
-            .collect();
+        let decode_ks = self.decode_ks_for(&layer_ks);
         let x = self.embed(&[token])?;
         let sparse = !cfg.is_dense() && cfg.sparse_decode;
         let x = self.run_token(x, cache, pos, sparse, cfg, &decode_ks)?;

@@ -19,6 +19,25 @@ use super::{Engine, PrefillResult, PrefillTiming, SparsityConfig};
 use crate::kvcache::SeqKvCache;
 use crate::sparsity::masks::ExpertSource;
 
+/// One prefill scheduling unit planned as rows of a shared batched
+/// pass: the unit's embedded activations plus the per-layer
+/// executables the sequential path would dispatch for it (see
+/// [`PrefillSession::plan_batch_step`]).
+pub(crate) struct ChunkPlan {
+    /// Token rows in the unit (the prefill block size, or 1 for a
+    /// ragged-tail token).
+    pub(crate) t: usize,
+    /// Absolute position of the unit's first token.
+    pub(crate) pos: usize,
+    /// Whether the unit runs the dense path (timing attribution).
+    pub(crate) dense: bool,
+    /// Embedded input activations, `[t, d_model]`.
+    pub(crate) x: Vec<f32>,
+    /// Per-layer executable names, exactly what the sequential step
+    /// would dispatch.
+    pub(crate) exes: Vec<String>,
+}
+
 /// State of an in-flight block-wise prefill.
 pub struct PrefillSession {
     engine: Engine,
@@ -46,10 +65,7 @@ impl PrefillSession {
         anyhow::ensure!(!tokens.is_empty(), "empty prompt");
         let m = &engine.rt.manifest;
         let layer_ks = engine.layer_ks(&cfg)?;
-        let decode_ks: Vec<usize> = layer_ks
-            .iter()
-            .map(|&k| if m.decode_k.contains(&k) { k } else { m.model.d_ffn })
-            .collect();
+        let decode_ks = engine.decode_ks_for(&layer_ks);
         let cache = SeqKvCache::new(
             m.model.n_layers,
             m.model.n_kv_heads,
@@ -209,6 +225,104 @@ impl PrefillSession {
             self.next_pos += 1;
             self.timing.tail_tokens += 1;
             Ok(1)
+        }
+    }
+
+    /// Plan this session's next scheduling unit as rows of a shared
+    /// batched pass (continuous batching), or `None` when the unit
+    /// must run through the split sequential pipeline instead —
+    /// first-block static capture, and sparse blocks whose expert
+    /// source has no fused executable (Oracle / CATS / static-index
+    /// ablations). Grows the KV bucket and embeds the unit's tokens;
+    /// on `Some`, the caller runs the returned per-layer executables
+    /// over the returned activations and then hands the final
+    /// activations to [`PrefillSession::complete_batch_step`]. On
+    /// `None` nothing was consumed — the caller falls back to
+    /// [`PrefillSession::step`].
+    pub(crate) fn plan_batch_step(&mut self) -> Result<Option<ChunkPlan>> {
+        assert!(!self.done(), "plan on finished session");
+        let engine = self.engine.clone();
+        let block = engine.block();
+        let pos = self.next_pos;
+        let remaining = self.tokens.len() - pos;
+        let n_layers = self.layer_ks.len();
+        let d_ffn = engine.rt.manifest.model.d_ffn;
+        if remaining >= block {
+            let is_first = pos == 0;
+            let is_last = remaining == block; // no tail after this block
+            let dense = self.cfg.is_dense()
+                || (self.cfg.dense_first && is_first)
+                || (self.cfg.dense_last && is_last);
+            let capture_static = self.cfg.source
+                == ExpertSource::FirstBlockStatic
+                && is_first
+                && !self.cfg.is_dense();
+            if capture_static {
+                return Ok(None);
+            }
+            engine.ensure_bucket(&mut self.cache, pos + block)?;
+            let mut exes = Vec::with_capacity(n_layers);
+            for l in 0..n_layers {
+                let k = self.layer_ks[l];
+                let layer_dense = dense || k >= d_ffn;
+                match engine.block_exe(&self.cfg, k, self.cache.bucket,
+                                       layer_dense) {
+                    Some(exe) => exes.push(exe),
+                    None => return Ok(None), // split pipeline required
+                }
+            }
+            let t0 = Instant::now();
+            let x = engine.embed(&self.tokens[pos..pos + block])?;
+            self.timing.embed += t0.elapsed();
+            Ok(Some(ChunkPlan {
+                t: block,
+                pos,
+                dense,
+                x,
+                exes,
+            }))
+        } else {
+            // ragged tail: a T=1 row, always expressible as a batch row
+            engine.ensure_bucket(&mut self.cache, pos + 1)?;
+            let sparse_tail = !self.cfg.is_dense() && !self.cfg.dense_last;
+            let exes = (0..n_layers)
+                .map(|l| {
+                    engine.token_exe(&self.cfg, sparse_tail,
+                                     self.decode_ks[l], self.cache.bucket)
+                })
+                .collect();
+            let t0 = Instant::now();
+            let x = engine.embed(&[self.tokens[pos]])?;
+            self.timing.embed += t0.elapsed();
+            Ok(Some(ChunkPlan {
+                t: 1,
+                pos,
+                dense: false,
+                x,
+                exes,
+            }))
+        }
+    }
+
+    /// Fold a batched step's outputs back into the session: keep the
+    /// final activations for [`PrefillSession::finish`], advance the
+    /// cursor and record the same timing counters
+    /// [`PrefillSession::step`] would.
+    pub(crate) fn complete_batch_step(&mut self, plan: &ChunkPlan,
+                                      x_out: Vec<f32>,
+                                      layers: std::time::Duration) {
+        self.x_last = x_out;
+        self.x_last_is_t1 = plan.t == 1;
+        self.timing.layers += layers;
+        self.cache.advance(plan.t);
+        self.next_pos += plan.t;
+        if plan.t == 1 {
+            self.timing.tail_tokens += 1;
+        } else {
+            self.timing.blocks += 1;
+            if plan.dense {
+                self.timing.dense_blocks += 1;
+            }
         }
     }
 

@@ -230,6 +230,76 @@ impl SeqKvCache {
 }
 
 // ---------------------------------------------------------------------------
+// Batched step view
+// ---------------------------------------------------------------------------
+
+/// Disjoint per-sequence KV views for one continuous-batching step.
+///
+/// A batched step runs several sequences through one shared forward
+/// pass; each sequence's fresh KV rows must scatter into its *own*
+/// cache — its own page set — at its own write cursor. `StepKv` wraps
+/// the member caches behind a `(seq, layer, pos)`-addressable facade:
+/// [`StepKv::layer`] yields the read view a layer dispatch feeds the
+/// backend, [`StepKv::append`] scatters that sequence's fresh rows at
+/// its current fill position, and [`StepKv::advance`] moves the write
+/// cursor once every layer has appended. Holding `&mut SeqKvCache`
+/// exclusively per member is what makes the scatter sets disjoint by
+/// construction — no two rows of a batch can alias a page.
+pub struct StepKv<'a> {
+    caches: Vec<&'a mut SeqKvCache>,
+}
+
+impl<'a> StepKv<'a> {
+    /// Wrap the member caches of one batched step, in row order.
+    pub fn new(caches: Vec<&'a mut SeqKvCache>) -> Self {
+        StepKv { caches }
+    }
+
+    /// Number of member sequences.
+    pub fn len(&self) -> usize {
+        self.caches.len()
+    }
+
+    /// Whether the view has no members.
+    pub fn is_empty(&self) -> bool {
+        self.caches.is_empty()
+    }
+
+    /// Sequence `seq`'s padded bucket capacity (the `s` of its
+    /// executable shapes).
+    pub fn bucket(&self, seq: usize) -> usize {
+        self.caches[seq].bucket
+    }
+
+    /// Sequence `seq`'s current fill position — the absolute position
+    /// its next appended row lands at.
+    pub fn pos(&self, seq: usize) -> usize {
+        self.caches[seq].len
+    }
+
+    /// The `(k, v)` buffers of sequence `seq` at `layer`, each
+    /// `[bucket, n_kv, d_head]` — the read view a batched layer
+    /// dispatch hands the backend.
+    pub fn layer(&self, seq: usize, layer: usize) -> (&[f32], &[f32]) {
+        let c = &self.caches[seq];
+        (&c.k[layer], &c.v[layer])
+    }
+
+    /// Scatter `t` fresh rows for `(seq, layer)` at the sequence's
+    /// write cursor.
+    pub fn append(&mut self, seq: usize, layer: usize, k_new: &[f32],
+                  v_new: &[f32], t: usize) -> Result<()> {
+        self.caches[seq].append_layer(layer, k_new, v_new, t)
+    }
+
+    /// Advance sequence `seq`'s write cursor after all layers appended
+    /// its `t` rows.
+    pub fn advance(&mut self, seq: usize, t: usize) {
+        self.caches[seq].advance(t);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Prefix cache
 // ---------------------------------------------------------------------------
 
@@ -817,6 +887,43 @@ mod tests {
         }
         c.advance(4);
         assert_eq!(c.k[1][4 * row..8 * row], k[..]);
+    }
+
+    #[test]
+    fn step_view_scatters_into_disjoint_caches() {
+        let mut a = SeqKvCache::new(2, 1, 2, 4);
+        let mut b = SeqKvCache::new(2, 1, 2, 8);
+        // b already holds one position; its appends must land after it
+        let row = b.row_elems();
+        let pre = vec![9.0; row];
+        for l in 0..2 {
+            b.append_layer(l, &pre, &pre, 1).unwrap();
+        }
+        b.advance(1);
+
+        let mut view = StepKv::new(vec![&mut a, &mut b]);
+        assert_eq!(view.len(), 2);
+        assert!(!view.is_empty());
+        assert_eq!(view.bucket(0), 4);
+        assert_eq!(view.bucket(1), 8);
+        assert_eq!(view.pos(0), 0);
+        assert_eq!(view.pos(1), 1);
+        let ka = vec![1.0; row];
+        let kb = vec![2.0; row];
+        for l in 0..2 {
+            let (k, v) = view.layer(1, l);
+            assert_eq!(k[..row], pre[..], "read view sees resident rows");
+            assert_eq!(v.len(), 8 * row);
+            view.append(0, l, &ka, &ka, 1).unwrap();
+            view.append(1, l, &kb, &kb, 1).unwrap();
+        }
+        view.advance(0, 1);
+        view.advance(1, 1);
+        assert_eq!(a.len, 1);
+        assert_eq!(b.len, 2);
+        assert_eq!(a.k[0][..row], ka[..]);
+        assert_eq!(b.k[1][row..2 * row], kb[..], "scatter after cursor");
+        assert_eq!(b.k[1][..row], pre[..], "resident rows untouched");
     }
 
     #[test]

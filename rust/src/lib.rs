@@ -14,9 +14,12 @@
 //! * **L3** — this crate: the serving coordinator. Block-wise prefill
 //!   engine with predictive FFN sparsity, a replica-sharded executor
 //!   pool with least-loaded dispatch, block-granular prefix-aware KV
-//!   reuse, dynamic batching with SLO-aware preemptive scheduling
-//!   (interactive vs batch classes, deadline projection), SSE token
-//!   streaming end to end, request routing, HTTP server, paged KV
+//!   reuse, continuous batching (batched decode + mixed
+//!   prefill-chunk/decode steps through one shared forward pass,
+//!   bit-identical to sequential execution) with SLO-aware preemptive
+//!   scheduling (interactive vs batch classes, deadline projection),
+//!   SSE token streaming end to end, request routing, HTTP server,
+//!   paged KV
 //!   management, the paper's layerwise sparsity schedule (Algorithm 1),
 //!   cost model, workload generators and the full evaluation/benchmark
 //!   harness.

@@ -8,7 +8,6 @@
 //! * `cost`     — cost-model exploration (crossovers, speedup curves)
 //! * `info`     — artifact + model summary
 
-use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -43,7 +42,11 @@ fn usage() -> ! {
              --prefix-cache-mb MB (shared prefix KV cache, default 64;
               0 disables) --kv-pages N --block-budget N
              --decode-first-budget N (prefill trickle while interactive
-              decodes run, default 1) --no-slo (disable SLO-aware
+              decodes run, default 1)
+             --max-batch N (max sequence rows per batched forward pass
+              — decode rows + one prefill chunk; default 8, 1 =
+              sequential execution)
+             --no-slo (disable SLO-aware
               scheduling: priority, decode-first, preemption)
              --flop-load-model (FLOP-weighted dispatch cost)
   generate:  --prompt TEXT --max-tokens N --sparsity S
@@ -102,7 +105,7 @@ fn load_engine(args: &Args) -> Result<Engine> {
             let manifest = Arc::new(Manifest::load(&dir)?);
             let weights = Arc::new(WeightStore::load(&manifest)?);
             let rt =
-                Rc::new(Runtime::with_backend(kind, manifest, weights)?);
+                Arc::new(Runtime::with_backend(kind, manifest, weights)?);
             Ok(Engine::new(rt))
         }
     }
@@ -378,13 +381,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_active: args.usize("max-active", 8),
         prefill_block_budget: args.usize("block-budget", 4),
         decode_first_budget: args.usize("decode-first-budget", 1),
+        max_batch: args.usize("max-batch", 8).max(1),
         slo: !args.has("no-slo"),
     };
     let slo_on = bcfg.slo;
+    let max_batch = bcfg.max_batch;
     let pool = ExecutorPool::spawn_backend(router.clone(), bcfg, kind, dir);
     eprintln!(
         "[serve] {} backend, {replicas} replica(s), {} KV pages, prefix \
-         cache {} MiB, SLO scheduling {}",
+         cache {} MiB, max batch {max_batch}, SLO scheduling {}",
         kind.label(),
         kv_pages,
         args.usize("prefix-cache-mb", 64),

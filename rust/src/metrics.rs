@@ -49,6 +49,13 @@ struct Inner {
     blocks_dense: u64,
     blocks_sparse: u64,
     tail_tokens: u64,
+    /// Rows per batched forward pass (decode rows + prefill chunk) —
+    /// the continuous-batching occupancy histogram.
+    batch_occupancy: Summary,
+    /// Batched forward passes executed.
+    batch_steps: u64,
+    /// Sequence rows folded across all batched passes.
+    batch_rows: u64,
     replicas: Vec<ReplicaCounters>,
     /// Latest snapshot of the prefix cache's own counters — the cache
     /// is the single source of truth; the executor pushes snapshots
@@ -177,6 +184,38 @@ impl Metrics {
         self.inner.lock().unwrap().requests_rejected += 1;
     }
 
+    /// Record one batched forward pass of `occupancy` sequence rows
+    /// (decode rows plus the prefill chunk that rode along) — the
+    /// samples behind `ff_batch_occupancy`.
+    pub fn record_batch_step(&self, occupancy: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batch_occupancy.add(occupancy as f64);
+        g.batch_steps += 1;
+        g.batch_rows += occupancy as u64;
+    }
+
+    /// Batched forward passes executed so far.
+    pub fn batch_steps(&self) -> u64 {
+        self.inner.lock().unwrap().batch_steps
+    }
+
+    /// Sequence rows folded across all batched passes so far.
+    pub fn batch_rows(&self) -> u64 {
+        self.inner.lock().unwrap().batch_rows
+    }
+
+    /// Mean rows per batched pass (0.0 before the first pass) — the
+    /// scalar the scheduler regression suite asserts is monotone in
+    /// offered load.
+    pub fn batch_occupancy_mean(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        if g.batch_occupancy.is_empty() {
+            0.0
+        } else {
+            g.batch_occupancy.mean()
+        }
+    }
+
     /// Fold one finished prefill's block counts into the registry.
     /// `timing.blocks` only counts blocks actually *executed*, so
     /// prefix-cache adoptions never inflate the execution counters.
@@ -297,6 +336,23 @@ impl Metrics {
         gauge("ff_prefill_tail_tokens_total",
               "ragged-tail tokens prefilled through T=1 steps",
               g.tail_tokens as f64);
+        gauge("ff_batch_steps_total",
+              "batched forward passes executed",
+              g.batch_steps as f64);
+        gauge("ff_batch_rows_total",
+              "sequence rows folded across batched passes",
+              g.batch_rows as f64);
+        if !g.batch_occupancy.is_empty() {
+            gauge("ff_batch_occupancy",
+                  "mean rows per batched forward pass",
+                  g.batch_occupancy.mean());
+            gauge("ff_batch_occupancy_p50",
+                  "median rows per batched forward pass",
+                  g.batch_occupancy.percentile(50.0));
+            gauge("ff_batch_occupancy_max",
+                  "largest batched forward pass",
+                  g.batch_occupancy.max());
+        }
         gauge("ff_prefix_hits_total", "prefills that adopted a cached prefix",
               g.prefix.hits as f64);
         gauge("ff_prefix_misses_total", "prefills with no cached prefix",
@@ -462,6 +518,25 @@ mod tests {
         assert!(text.contains("ff_prefix_insertions_total 4"));
         assert!(text.contains("ff_prefix_cache_bytes 4096"));
         assert_eq!(m.prefix_counters(), (1, 1, 3));
+    }
+
+    #[test]
+    fn batch_occupancy_series() {
+        let m = Metrics::new();
+        assert_eq!(m.batch_occupancy_mean(), 0.0, "empty → 0");
+        assert!(!m.export().contains("ff_batch_occupancy "),
+                "no occupancy gauge before the first pass");
+        m.record_batch_step(1);
+        m.record_batch_step(3);
+        m.record_batch_step(5);
+        assert_eq!(m.batch_steps(), 3);
+        assert_eq!(m.batch_rows(), 9);
+        assert!((m.batch_occupancy_mean() - 3.0).abs() < 1e-9);
+        let text = m.export();
+        assert!(text.contains("ff_batch_steps_total 3"));
+        assert!(text.contains("ff_batch_rows_total 9"));
+        assert!(text.contains("ff_batch_occupancy 3"));
+        assert!(text.contains("ff_batch_occupancy_max 5"));
     }
 
     #[test]

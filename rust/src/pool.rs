@@ -1,7 +1,8 @@
 //! Replica-sharded executor pool.
 //!
-//! The engine is deliberately `!Send` (it holds `Rc`s into the PJRT
-//! runtime), so the pool cannot hand one engine to N threads. Instead
+//! The engine is deliberately `!Send` (its runtime's backend keeps
+//! per-replica mutable caches), so the pool cannot hand one engine to
+//! N threads. Instead
 //! each worker thread *constructs its own* engine from the same
 //! artifacts via a caller-supplied factory, then runs a [`Batcher`]
 //! loop against its [`crate::router::Replica`] queue. The router
@@ -194,8 +195,7 @@ impl ExecutorPool {
             }
         };
         Ok(Box::new(move || -> Result<Engine> {
-            use std::rc::Rc;
-            let rt = Rc::new(crate::runtime::Runtime::with_backend(
+            let rt = Arc::new(crate::runtime::Runtime::with_backend(
                 kind,
                 manifest.clone(),
                 weights.clone(),

@@ -21,11 +21,105 @@
 //! ABI-level input validation common to every backend (missing inputs,
 //! shape mismatches), and delegates execution here.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::manifest::ExecutableSpec;
+use crate::manifest::{ArgKind, ExecutableSpec};
 
 use super::{DispatchStats, Input, Output};
+
+/// One sequence's slice of a mixed prefill-chunk/decode step batch at
+/// one transformer layer — the batched (`decode_batch`) extension of
+/// the executable ABI.
+///
+/// Each row names its *own* per-row layer executable (already resolved
+/// and shape-validated by [`crate::runtime::Runtime::run_layer_batch`])
+/// plus that sequence's activations, KV views and absolute position. A
+/// backend receives every row of the step at once, so it can fold the
+/// rows into shared weight passes (one read of the layer weights for B
+/// decode rows plus a prefill chunk) while keeping each row's
+/// arithmetic — and therefore each row's output bits — exactly what a
+/// per-row [`Backend::execute`] dispatch would produce.
+pub struct BatchRow<'a> {
+    /// The row's layer executable (e.g. `layer_dense_t1_s256`).
+    pub spec: &'a ExecutableSpec,
+    /// Input activations, `[t, d_model]` row-major.
+    pub x: &'a [f32],
+    /// Token rows in this slice (1 for a decode row, the prefill block
+    /// size for a chunk row).
+    pub t: usize,
+    /// This sequence's KV bucket capacity (the `s` in the exe name).
+    pub s: usize,
+    /// Absolute position of the slice's first token in its sequence.
+    pub pos: usize,
+    /// This sequence's key cache, `[s, n_kv, d_head]`.
+    pub k_cache: &'a [f32],
+    /// This sequence's value cache, same layout as `k_cache`.
+    pub v_cache: &'a [f32],
+}
+
+impl BatchRow<'_> {
+    /// The declared ABI shape of runtime input `name` on this row's
+    /// executable (empty when the spec does not declare it).
+    fn input_shape(&self, name: &str) -> Vec<usize> {
+        self.spec
+            .args
+            .iter()
+            .find_map(|a| match &a.kind {
+                ArgKind::Input(n) if n == name => Some(a.shape.clone()),
+                _ => None,
+            })
+            .unwrap_or_default()
+    }
+}
+
+/// One row's outputs from a batched layer step: the post-layer
+/// activations plus the fresh KV rows to scatter into that sequence's
+/// own cache.
+pub struct BatchRowOut {
+    /// Post-layer activations, `[t, d_model]`.
+    pub y: Vec<f32>,
+    /// Fresh key rows, `[t, n_kv, d_head]`.
+    pub k_new: Vec<f32>,
+    /// Fresh value rows, `[t, n_kv, d_head]`.
+    pub v_new: Vec<f32>,
+}
+
+/// Run every row of a batched layer step through the ordinary per-row
+/// [`Backend::execute`] entry, in row order — the sequential semantics
+/// of the batched ABI. This is the default [`Backend::execute_batch`]
+/// body, the PJRT path (one device dispatch per row), and the CPU
+/// reference oracle's path; the fast CPU backend must match its output
+/// bits exactly (`tests/backend_conformance.rs`).
+pub fn sequential_batch<B: Backend + ?Sized>(
+    backend: &B, layer: usize, rows: &[BatchRow<'_>],
+) -> Result<Vec<BatchRowOut>> {
+    let mut out = Vec::with_capacity(rows.len());
+    for row in rows {
+        let pos_i = [row.pos as i32];
+        let inputs = [
+            ("x", Input::F32(row.x, row.input_shape("x"))),
+            ("k_cache", Input::F32(row.k_cache, row.input_shape("k_cache"))),
+            ("v_cache", Input::F32(row.v_cache, row.input_shape("v_cache"))),
+            ("pos", Input::I32(&pos_i, vec![])),
+        ];
+        let outs = backend.execute(row.spec, layer, &inputs)?;
+        let mut it = outs.into_iter();
+        let (Some(y), Some(k_new), Some(v_new)) =
+            (it.next(), it.next(), it.next())
+        else {
+            return Err(anyhow!(
+                "{}: layer executable returned fewer than 3 outputs",
+                row.spec.name
+            ));
+        };
+        out.push(BatchRowOut {
+            y: y.data,
+            k_new: k_new.data,
+            v_new: v_new.data,
+        });
+    }
+    Ok(out)
+}
 
 /// One execution backend: prepares executables and runs dispatches.
 ///
@@ -53,6 +147,22 @@ pub trait Backend {
     /// tensors.
     fn execute(&self, spec: &ExecutableSpec, layer: usize,
                inputs: &[(&str, Input<'_>)]) -> Result<Vec<Output>>;
+
+    /// Execute one transformer layer for *every* row of a mixed
+    /// prefill-chunk/decode step batch — the batched ABI entry behind
+    /// continuous batching. Rows are independent sequences (disjoint
+    /// KV caches); outputs are returned in row order.
+    ///
+    /// The default body is [`sequential_batch`]: one per-row
+    /// [`Backend::execute`] dispatch each, which is what the PJRT
+    /// backend and the CPU reference oracle run. The fast CPU backend
+    /// overrides it to fold all rows into shared weight passes;
+    /// whatever the implementation, the output bits per row must equal
+    /// the sequential semantics exactly.
+    fn execute_batch(&self, layer: usize, rows: &[BatchRow<'_>])
+                     -> Result<Vec<BatchRowOut>> {
+        sequential_batch(self, layer, rows)
+    }
 
     /// Snapshot of cumulative dispatch statistics.
     fn stats(&self) -> DispatchStats;

@@ -75,7 +75,7 @@ use crate::sparsity::masks::top_k_indices;
 use crate::util::threadpool::{self, ThreadPool};
 use crate::weights::WeightStore;
 
-use super::backend::Backend;
+use super::backend::{sequential_batch, Backend, BatchRow, BatchRowOut};
 use super::{DispatchStats, Input, Output};
 
 /// RMSNorm epsilon (matches python/compile's model).
@@ -273,6 +273,61 @@ fn rope_row(row: &mut [f32], heads: usize, dh: usize, p: usize) {
             let b = row[base + 2 * i + 1] as f64;
             row[base + 2 * i] = (a * cos - b * sin) as f32;
             row[base + 2 * i + 1] = (a * sin + b * cos) as f32;
+        }
+    }
+}
+
+/// One query row of causal GQA attention over one sequence's KV view:
+/// cached rows `[0, pos)` plus that sequence's fresh (already-roped)
+/// rows `[pos, pos + t)`. `lr` is the query's local row index within
+/// the fresh rows (absolute position `pos + lr`), `q_row` its
+/// `[nh * dh]` roped query, `out_row` its `[nh * dh]` output slot.
+/// Identical code runs for every query row whether executed inline
+/// (reference / one thread), on a pool lane, or as one row of a fused
+/// batched step — which is what keeps attention bit-identical across
+/// all three paths.
+#[allow(clippy::too_many_arguments)]
+fn attn_query_row(q_row: &[f32], k_cache: &[f32], v_cache: &[f32],
+                  k_new: &[f32], v_new: &[f32], pos: usize, lr: usize,
+                  nh: usize, nkv: usize, dh: usize, scale: f32,
+                  out_row: &mut [f32], scores: &mut Vec<f32>) {
+    let group = nh / nkv;
+    let p = pos + lr; // absolute position of this query
+    for h in 0..nh {
+        let g = h / group; // the KV head this query head reads
+        let qv = &q_row[h * dh..(h + 1) * dh];
+        scores.clear();
+        let mut max = f32::NEG_INFINITY;
+        for j in 0..=p {
+            let kv = if j < pos {
+                &k_cache[(j * nkv + g) * dh..(j * nkv + g + 1) * dh]
+            } else {
+                let jr = j - pos;
+                &k_new[(jr * nkv + g) * dh..(jr * nkv + g + 1) * dh]
+            };
+            let dot: f32 =
+                qv.iter().zip(kv.iter()).map(|(a, b)| a * b).sum();
+            let sc = dot * scale;
+            max = max.max(sc);
+            scores.push(sc);
+        }
+        let mut denom = 0.0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - max).exp();
+            denom += *sc;
+        }
+        let out = &mut out_row[h * dh..(h + 1) * dh];
+        for (j, &wgt) in scores.iter().enumerate() {
+            let vv = if j < pos {
+                &v_cache[(j * nkv + g) * dh..(j * nkv + g + 1) * dh]
+            } else {
+                let jr = j - pos;
+                &v_new[(jr * nkv + g) * dh..(jr * nkv + g + 1) * dh]
+            };
+            let wn = wgt / denom;
+            for (o, &v) in out.iter_mut().zip(vv.iter()) {
+                *o += wn * v;
+            }
         }
     }
 }
@@ -661,7 +716,6 @@ impl CpuBackend {
             pos + t <= s,
             "attention: pos {pos} + t {t} exceeds bucket {s}"
         );
-        let group = nh / nkv;
 
         let h1 = rmsnorm_rows(x, self.lw(l, "rms1", d)?, t, d);
         let mut q = self.mm(&h1, self.lw(l, "wq", d * nh * dh)?, t, d,
@@ -679,49 +733,25 @@ impl CpuBackend {
 
         let scale = 1.0 / (dh as f32).sqrt();
         let mut attn = vec![0.0f32; t * nh * dh];
-        // One query row of attention output; identical code runs for
-        // every row whether executed inline (reference / 1 thread) or
-        // on a pool lane.
+        // One query row of attention output — delegated to the shared
+        // per-row helper the fused batched step uses too.
         let attn_row = |r: usize, out_row: &mut [f32],
                         scores: &mut Vec<f32>| {
-            let p = pos + r; // absolute position of this query
-            for h in 0..nh {
-                let g = h / group; // the KV head this query head reads
-                let qv = &q[(r * nh + h) * dh..(r * nh + h + 1) * dh];
-                scores.clear();
-                let mut max = f32::NEG_INFINITY;
-                for j in 0..=p {
-                    let kv = if j < pos {
-                        &k_cache[(j * nkv + g) * dh..(j * nkv + g + 1) * dh]
-                    } else {
-                        let jr = j - pos;
-                        &k_new[(jr * nkv + g) * dh..(jr * nkv + g + 1) * dh]
-                    };
-                    let dot: f32 =
-                        qv.iter().zip(kv.iter()).map(|(a, b)| a * b).sum();
-                    let sc = dot * scale;
-                    max = max.max(sc);
-                    scores.push(sc);
-                }
-                let mut denom = 0.0f32;
-                for sc in scores.iter_mut() {
-                    *sc = (*sc - max).exp();
-                    denom += *sc;
-                }
-                let out = &mut out_row[h * dh..(h + 1) * dh];
-                for (j, &wgt) in scores.iter().enumerate() {
-                    let vv = if j < pos {
-                        &v_cache[(j * nkv + g) * dh..(j * nkv + g + 1) * dh]
-                    } else {
-                        let jr = j - pos;
-                        &v_new[(jr * nkv + g) * dh..(jr * nkv + g + 1) * dh]
-                    };
-                    let wn = wgt / denom;
-                    for (o, &v) in out.iter_mut().zip(vv.iter()) {
-                        *o += wn * v;
-                    }
-                }
-            }
+            attn_query_row(
+                &q[r * nh * dh..(r + 1) * nh * dh],
+                k_cache,
+                v_cache,
+                &k_new,
+                &v_new,
+                pos,
+                r,
+                nh,
+                nkv,
+                dh,
+                scale,
+                out_row,
+                scores,
+            );
         };
         if self.reference || t == 1 {
             let mut scores: Vec<f32> = Vec::new();
@@ -788,6 +818,22 @@ impl CpuBackend {
             );
         }
         if !self.reference {
+            // The full-range ungated projection is exactly the matmul
+            // `acts [t, f] @ w_down [f, d]` with the same per-element
+            // accumulation order (ascending j), so route it through
+            // the micro-tiled matmul kernel: unlike `down_proj_tiled`
+            // (which streams `w_down` once per token row), it reuses
+            // each weight panel row across `ROW_BLOCK` token rows —
+            // the weight amortization that batched dense decode and
+            // multi-row blocks are built on. Bit-identical by the
+            // shared-order argument; the conformance suite pins it.
+            let full = alpha.is_none()
+                && idx.len() == f
+                && idx.iter().enumerate().all(|(i, &j)| j as usize == i);
+            if full {
+                return Ok(kernels::matmul_tiled(acts, w_down, t, f, d,
+                                                &self.pool));
+            }
             return Ok(kernels::down_proj_tiled(
                 acts, w_down, alpha, t, f, d, idx, &self.pool,
             ));
@@ -1034,6 +1080,337 @@ impl CpuBackend {
     }
 }
 
+impl CpuBackend {
+    /// Whether every row of a batch is a fused transformer-layer op the
+    /// batched kernel path understands (anything else — split-pipeline
+    /// ops, embed/lm_head — falls back to sequential dispatch).
+    fn batch_fusable(&self, rows: &[BatchRow<'_>]) -> bool {
+        rows.iter().all(|r| {
+            matches!(
+                self.op_for(&r.spec.name),
+                Ok(Op::LayerDense { .. }
+                    | Op::LayerSparse { .. }
+                    | Op::LayerSparseNc { .. })
+            )
+        })
+    }
+
+    /// The fused batched layer step behind continuous batching: the
+    /// QKV/O projections and FFN weight passes run over the *stacked*
+    /// row activations — one read of each weight panel for the whole
+    /// batch — while attention, expert selection and sparse gathers
+    /// stay strictly per row (each row reads only its own sequence's
+    /// KV view and selects its own experts).
+    ///
+    /// Bit-identity with [`sequential_batch`] holds because every
+    /// constituent kernel is row-independent with an unchanged
+    /// per-element accumulation order: stacking rows into one matmul
+    /// decides *which call* computes a row, never the sequence of f32
+    /// additions behind any of its elements. The conformance suite
+    /// (`tests/backend_conformance.rs`) pins this against the
+    /// sequential reference oracle.
+    fn run_batch_fused(&self, layer: usize, rows: &[BatchRow<'_>])
+                       -> Result<Vec<BatchRowOut>> {
+        let m = &self.manifest.model;
+        let (d, f) = (m.d_model, m.d_ffn);
+        let (nh, nkv, dh) = (m.n_heads, m.n_kv_heads, m.d_head);
+        anyhow::ensure!(nh % nkv == 0, "n_heads must be divisible by n_kv");
+        let ops: Vec<Op> = rows
+            .iter()
+            .map(|r| self.op_for(&r.spec.name))
+            .collect::<Result<_>>()?;
+        for r in rows {
+            anyhow::ensure!(
+                r.pos + r.t <= r.s,
+                "attention: pos {} + t {} exceeds bucket {}",
+                r.pos,
+                r.t,
+                r.s
+            );
+        }
+
+        // Row spans in the stacked [total, d] activation matrix.
+        let total: usize = rows.iter().map(|r| r.t).sum();
+        let mut offs = Vec::with_capacity(rows.len());
+        {
+            let mut o = 0usize;
+            for r in rows {
+                offs.push(o);
+                o += r.t;
+            }
+        }
+
+        // ---- shared attention projections over the stacked rows ----
+        let mut x_all = vec![0.0f32; total * d];
+        for (r, &o) in rows.iter().zip(&offs) {
+            x_all[o * d..(o + r.t) * d].copy_from_slice(r.x);
+        }
+        let h1 = rmsnorm_rows(&x_all, self.lw(layer, "rms1", d)?, total, d);
+        let mut q =
+            self.mm(&h1, self.lw(layer, "wq", d * nh * dh)?, total, d,
+                    nh * dh);
+        let mut k_new_all =
+            self.mm(&h1, self.lw(layer, "wk", d * nkv * dh)?, total, d,
+                    nkv * dh);
+        let v_new_all =
+            self.mm(&h1, self.lw(layer, "wv", d * nkv * dh)?, total, d,
+                    nkv * dh);
+        for (r, &o) in rows.iter().zip(&offs) {
+            for lr in 0..r.t {
+                let g = o + lr;
+                rope_row(&mut q[g * nh * dh..(g + 1) * nh * dh], nh, dh,
+                         r.pos + lr);
+                rope_row(
+                    &mut k_new_all[g * nkv * dh..(g + 1) * nkv * dh],
+                    nkv,
+                    dh,
+                    r.pos + lr,
+                );
+            }
+        }
+
+        // ---- per-row attention over per-sequence KV views ----------
+        let seq_of: Vec<usize> = rows
+            .iter()
+            .enumerate()
+            .flat_map(|(i, r)| std::iter::repeat(i).take(r.t))
+            .collect();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut attn = vec![0.0f32; total * nh * dh];
+        {
+            struct RowPtr(*mut f32);
+            unsafe impl Send for RowPtr {}
+            unsafe impl Sync for RowPtr {}
+            let aptr = RowPtr(attn.as_mut_ptr());
+            let row_elems = nh * dh;
+            self.pool.run(total, |g| {
+                let p = &aptr;
+                // SAFETY: each task owns exactly row `g` of `attn`,
+                // and the pool joins before `attn` is read.
+                let out_row = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        p.0.add(g * row_elems),
+                        row_elems,
+                    )
+                };
+                let i = seq_of[g];
+                let r = &rows[i];
+                let span = offs[i] * nkv * dh;
+                let kn = &k_new_all[span..span + r.t * nkv * dh];
+                let vn = &v_new_all[span..span + r.t * nkv * dh];
+                let mut scores: Vec<f32> = Vec::new();
+                attn_query_row(
+                    &q[g * nh * dh..(g + 1) * nh * dh],
+                    r.k_cache,
+                    r.v_cache,
+                    kn,
+                    vn,
+                    r.pos,
+                    g - offs[i],
+                    nh,
+                    nkv,
+                    dh,
+                    scale,
+                    out_row,
+                    &mut scores,
+                );
+            });
+        }
+        let proj = self.mm(&attn, self.lw(layer, "wo", nh * dh * d)?,
+                           total, nh * dh, d);
+        let h = add(&x_all, &proj);
+
+        // ---- FFN: stacked weight passes, per-row expert selection --
+        let h2 = rmsnorm_rows(&h, self.lw(layer, "rms2", d)?, total, d);
+
+        let mut dense_rows = Vec::new();
+        let mut comp_rows = Vec::new(); // fused sparse with compensator
+        let mut nc_rows = Vec::new(); // fused sparse, sub-dense path
+        for (i, op) in ops.iter().enumerate() {
+            match op {
+                Op::LayerDense { .. } => dense_rows.push(i),
+                Op::LayerSparse { .. } => comp_rows.push(i),
+                Op::LayerSparseNc { .. } => nc_rows.push(i),
+                _ => unreachable!("checked by batch_fusable"),
+            }
+        }
+
+        // Stack the h2 spans of a row group contiguously; returns the
+        // stacked buffer, each row's offset within it, and its total
+        // row count.
+        let stack = |ids: &[usize]| -> (Vec<f32>, Vec<usize>, usize) {
+            let mut tt = 0usize;
+            let mut go = Vec::with_capacity(ids.len());
+            for &i in ids {
+                go.push(tt);
+                tt += rows[i].t;
+            }
+            let mut buf = vec![0.0f32; tt * d];
+            for (&i, &o) in ids.iter().zip(&go) {
+                buf[o * d..(o + rows[i].t) * d].copy_from_slice(
+                    &h2[offs[i] * d..(offs[i] + rows[i].t) * d],
+                );
+            }
+            (buf, go, tt)
+        };
+
+        let mut y: Vec<Option<Vec<f32>>> = vec![None; rows.len()];
+        let mut comp: Vec<Option<Vec<f32>>> = vec![None; rows.len()];
+
+        // Dense rows: one shared gate/up/down pass. The down
+        // projection over the full ascending index range routes
+        // through the micro-tiled matmul (see `down_proj`), so all
+        // three FFN weight panels are read once for the whole group.
+        if !dense_rows.is_empty() {
+            let (h2d, go, tt) = stack(&dense_rows);
+            let gate =
+                self.mm(&h2d, self.lw(layer, "w_gate", d * f)?, tt, d, f);
+            let up =
+                self.mm(&h2d, self.lw(layer, "w_up", d * f)?, tt, d, f);
+            let acts: Vec<f32> = gate
+                .iter()
+                .zip(up.iter())
+                .map(|(&g, &u)| silu(g) * u)
+                .collect();
+            // the full-range ungated down projection IS the matmul
+            // `acts @ w_down` (same ascending-j accumulation order —
+            // see `down_proj`); call the kernel directly instead of
+            // materializing a 0..d_ffn index vector per pass
+            let w_down = self.lw(layer, "w_down", f * d)?;
+            let yd = kernels::matmul_tiled(&acts, w_down, tt, f, d,
+                                           &self.pool);
+            for (&i, &o) in dense_rows.iter().zip(&go) {
+                y[i] = Some(yd[o * d..(o + rows[i].t) * d].to_vec());
+            }
+        }
+
+        // Predictor rows (both fused sparse flavours): one shared
+        // low-rank predictor pass, then per-row span aggregation and
+        // top-K — each row selects its own experts, exactly as its
+        // sequential dispatch would.
+        let pred_rows: Vec<usize> = ops
+            .iter()
+            .enumerate()
+            .filter(|(_, op)| {
+                matches!(op,
+                         Op::LayerSparse { .. } | Op::LayerSparseNc { .. })
+            })
+            .map(|(i, _)| i)
+            .collect();
+        let mut idx_of: Vec<Option<Vec<i32>>> = vec![None; rows.len()];
+        if !pred_rows.is_empty() {
+            let (h2p, go, tt) = stack(&pred_rows);
+            let wd = self.weights.get(&format!("pred.{layer}.wd"))?;
+            anyhow::ensure!(
+                !wd.is_empty() && wd.len() % d == 0,
+                "pred.{layer}.wd: {} elements not a multiple of \
+                 d_model {d}",
+                wd.len()
+            );
+            let rank = wd.len() / d;
+            let wu = self.w(&format!("pred.{layer}.wu"), rank * f)?;
+            let z = self.mm(&h2p, wd, tt, d, rank);
+            let p = self.mm(&z, wu, tt, rank, f);
+            for (&i, &o) in pred_rows.iter().zip(&go) {
+                let k = match ops[i] {
+                    Op::LayerSparse { k, .. }
+                    | Op::LayerSparseNc { k, .. } => k,
+                    _ => unreachable!(),
+                };
+                let mut scores = vec![0.0f32; f];
+                for lr in 0..rows[i].t {
+                    for j in 0..f {
+                        scores[j] += p[(o + lr) * f + j].abs();
+                    }
+                }
+                idx_of[i] = Some(top_k_indices(&scores, k.min(f)));
+            }
+        }
+
+        // Compensated sparse rows: full activations from one shared
+        // gate/up pass, then per-row selected + complement-gated down
+        // projections (dense cost by construction; conformance path).
+        if !comp_rows.is_empty() {
+            let (h2c, go, tt) = stack(&comp_rows);
+            let gate =
+                self.mm(&h2c, self.lw(layer, "w_gate", d * f)?, tt, d, f);
+            let up =
+                self.mm(&h2c, self.lw(layer, "w_up", d * f)?, tt, d, f);
+            let acts: Vec<f32> = gate
+                .iter()
+                .zip(up.iter())
+                .map(|(&g, &u)| silu(g) * u)
+                .collect();
+            for (&i, &o) in comp_rows.iter().zip(&go) {
+                let t = rows[i].t;
+                let span = &acts[o * f..(o + t) * f];
+                let idx = idx_of[i]
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("row {i}: missing indices"))?;
+                y[i] = Some(self.down_proj(layer, span, t, idx, None)?);
+                comp[i] = Some(self.down_proj(
+                    layer,
+                    span,
+                    t,
+                    &complement(idx, f),
+                    Some(self.alpha(layer)?),
+                )?);
+            }
+        }
+
+        // Sub-dense sparse rows: per-row gathers over the shared
+        // transposed panels — cost scales with each row's K, and the
+        // indices (hence the touched neurons) are per row.
+        if !nc_rows.is_empty() {
+            anyhow::ensure!(
+                layer < self.gate_t.len(),
+                "layer {layer} out of range for transposed weight cache"
+            );
+            let w_down = self.lw(layer, "w_down", f * d)?;
+            for &i in &nc_rows {
+                let t = rows[i].t;
+                let span = &h2[offs[i] * d..(offs[i] + t) * d];
+                let idx = idx_of[i]
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("row {i}: missing indices"))?;
+                let acts = kernels::gather_acts(
+                    span,
+                    &self.gate_t[layer],
+                    &self.up_t[layer],
+                    t,
+                    d,
+                    idx,
+                    &self.pool,
+                );
+                y[i] = Some(kernels::down_proj_compact(
+                    &acts, w_down, t, d, idx, &self.pool,
+                ));
+            }
+        }
+
+        // ---- per-row assembly: residual add (+ compensator) and the
+        // fresh KV rows to scatter into each sequence's cache --------
+        let mut out = Vec::with_capacity(rows.len());
+        for (i, (r, &o)) in rows.iter().zip(&offs).enumerate() {
+            let hs = &h[o * d..(o + r.t) * d];
+            let yi = y[i]
+                .take()
+                .ok_or_else(|| anyhow!("row {i}: missing FFN output"))?;
+            let mut yr = add(hs, &yi);
+            if let Some(c) = comp[i].take() {
+                add_assign(&mut yr, &c);
+            }
+            let span = o * nkv * dh;
+            out.push(BatchRowOut {
+                y: yr,
+                k_new: k_new_all[span..span + r.t * nkv * dh].to_vec(),
+                v_new: v_new_all[span..span + r.t * nkv * dh].to_vec(),
+            });
+        }
+        Ok(out)
+    }
+}
+
 impl Backend for CpuBackend {
     fn name(&self) -> &'static str {
         "cpu"
@@ -1054,6 +1431,23 @@ impl Backend for CpuBackend {
         let out = self.run_op(op, spec, layer, inputs)?;
         let mut s = self.stats.borrow_mut();
         s.executions += 1;
+        s.execute_time += t0.elapsed();
+        Ok(out)
+    }
+
+    fn execute_batch(&self, layer: usize, rows: &[BatchRow<'_>])
+                     -> Result<Vec<BatchRowOut>> {
+        // The reference oracle keeps the sequential semantics verbatim
+        // (per-row dispatch, per-row stats); so does any batch the
+        // fused path does not understand.
+        if self.reference || !self.batch_fusable(rows) {
+            return sequential_batch(self, layer, rows);
+        }
+        let t0 = Instant::now();
+        let out = self.run_batch_fused(layer, rows)?;
+        let mut s = self.stats.borrow_mut();
+        // one fused pass still executes one layer step per row
+        s.executions += rows.len() as u64;
         s.execute_time += t0.elapsed();
         Ok(out)
     }

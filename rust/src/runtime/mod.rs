@@ -21,7 +21,7 @@ mod backend;
 mod cpu;
 mod pjrt;
 
-pub use backend::{Backend, BackendKind};
+pub use backend::{Backend, BackendKind, BatchRow, BatchRowOut};
 pub use cpu::{CpuBackend, CpuOptions};
 pub use pjrt::PjrtBackend;
 
@@ -54,6 +54,29 @@ impl<'a> Input<'a> {
 pub struct Output {
     /// Host f32 data in row-major layout.
     pub data: Vec<f32>,
+}
+
+/// One sequence's slot in a batched layer dispatch, as the engine
+/// submits it to [`Runtime::run_layer_batch`]: the per-row executable
+/// by ABI name plus this row's activations, KV views and absolute
+/// position. The runtime resolves the name, validates shapes exactly
+/// as [`Runtime::run`] would, and hands the resolved
+/// [`BatchRow`] set to the backend in one call.
+pub struct StepRow<'a> {
+    /// Layer-executable ABI name (e.g. `layer_dense_t1_s256`).
+    pub exe: &'a str,
+    /// Input activations, `[t, d_model]` row-major.
+    pub x: &'a [f32],
+    /// Token rows in this slot (1 for decode, block size for a chunk).
+    pub t: usize,
+    /// Absolute position of the slot's first token in its sequence.
+    pub pos: usize,
+    /// This sequence's key cache, `[s, n_kv, d_head]`.
+    pub k_cache: &'a [f32],
+    /// This sequence's value cache, same layout.
+    pub v_cache: &'a [f32],
+    /// This sequence's KV bucket capacity.
+    pub s: usize,
 }
 
 /// Cumulative dispatch statistics (perf accounting; EXPERIMENTS.md §Perf).
@@ -217,8 +240,15 @@ impl Runtime {
             .executables
             .get(exe_name)
             .ok_or_else(|| anyhow!("unknown executable {exe_name}"))?;
-        // ABI validation common to every backend: each declared input
-        // must be present with the declared shape.
+        Self::validate_inputs(spec, inputs)?;
+        self.backend.execute(spec, layer, inputs)
+    }
+
+    /// ABI validation common to every backend: each declared input
+    /// must be present with the declared shape and dtype.
+    fn validate_inputs(spec: &crate::manifest::ExecutableSpec,
+                       inputs: &[(&str, Input)]) -> Result<()> {
+        let exe_name = &spec.name;
         for arg in &spec.args {
             if let crate::manifest::ArgKind::Input(name) = &arg.kind {
                 let (_, input) = inputs
@@ -242,7 +272,59 @@ impl Runtime {
                 );
             }
         }
-        self.backend.execute(spec, layer, inputs)
+        Ok(())
+    }
+
+    /// Execute one transformer layer for every row of a mixed
+    /// prefill-chunk/decode step batch — the batched (`decode_batch`)
+    /// ABI entry behind continuous batching.
+    ///
+    /// Every row is validated exactly as [`Runtime::run`] validates a
+    /// single dispatch (unknown executable, missing input, shape or
+    /// dtype mismatch — both backends fail identically on ABI misuse),
+    /// then the whole row set is handed to the backend in **one**
+    /// [`Backend::execute_batch`] call so it can fold the rows into
+    /// shared weight passes. Outputs come back in row order and are
+    /// bit-identical to dispatching each row through [`Runtime::run`]
+    /// one at a time.
+    pub fn run_layer_batch(&self, layer: usize, rows: &[StepRow])
+                           -> Result<Vec<BatchRowOut>> {
+        let m = &self.manifest.model;
+        let mut resolved: Vec<BatchRow> = Vec::with_capacity(rows.len());
+        let pos_scratch: Vec<[i32; 1]> =
+            rows.iter().map(|r| [r.pos as i32]).collect();
+        for (row, pos_i) in rows.iter().zip(&pos_scratch) {
+            let spec = self
+                .manifest
+                .executables
+                .get(row.exe)
+                .ok_or_else(|| anyhow!("unknown executable {}", row.exe))?;
+            let inputs = [
+                ("x", Input::F32(row.x, vec![row.t, m.d_model])),
+                (
+                    "k_cache",
+                    Input::F32(row.k_cache,
+                               vec![row.s, m.n_kv_heads, m.d_head]),
+                ),
+                (
+                    "v_cache",
+                    Input::F32(row.v_cache,
+                               vec![row.s, m.n_kv_heads, m.d_head]),
+                ),
+                ("pos", Input::I32(pos_i, vec![])),
+            ];
+            Self::validate_inputs(spec, &inputs)?;
+            resolved.push(BatchRow {
+                spec,
+                x: row.x,
+                t: row.t,
+                s: row.s,
+                pos: row.pos,
+                k_cache: row.k_cache,
+                v_cache: row.v_cache,
+            });
+        }
+        self.backend.execute_batch(layer, &resolved)
     }
 }
 

@@ -17,7 +17,8 @@
 use std::sync::Arc;
 
 use crate::batcher::BatcherConfig;
-use crate::engine::Engine;
+use crate::engine::{argmax, DecodeBatch, Engine, PrefillResult,
+                    SparsityConfig};
 use crate::manifest::SyntheticSpec;
 use crate::pool::ExecutorPool;
 use crate::router::Router;
@@ -56,7 +57,6 @@ pub fn cpu_engine_reference() -> Engine {
 /// assertions).
 pub fn artifact_engine() -> Option<Engine> {
     let dir = crate::test_artifacts_dir()?;
-    use std::rc::Rc;
     let manifest = Arc::new(
         crate::manifest::Manifest::load(&dir).expect("artifact manifest"),
     );
@@ -64,7 +64,7 @@ pub fn artifact_engine() -> Option<Engine> {
         crate::weights::WeightStore::load(&manifest)
             .expect("artifact weights"),
     );
-    let rt = Rc::new(
+    let rt = Arc::new(
         crate::runtime::Runtime::new(manifest, weights)
             .expect("pjrt runtime"),
     );
@@ -90,6 +90,96 @@ pub fn spawn_test_pool(router: Arc<Router>, cfg: BatcherConfig)
             BackendKind::Cpu,
             None,
         ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared decode-bench harness (tier-1 perf gate + fig10 bench)
+// ---------------------------------------------------------------------------
+
+/// FFN-heavy decode-bench model shared by the tier-1 batched-decode
+/// perf gate (`tests/perf_smoke.rs`) and the fig10 bench: ~12 MiB of
+/// FFN weights per token pass (2 layers × 3 panels × 64×8192 f32), so
+/// a T=1 pass streams them from beyond L2 and sequential decode is
+/// weight-read bound — the regime where one shared pass for B rows
+/// pays off. One definition, so the gate and the bench always measure
+/// the same model.
+pub fn decode_bench_spec() -> SyntheticSpec {
+    SyntheticSpec {
+        name: "ff-perf-decode".to_string(),
+        n_layers: 2,
+        d_ffn: 8192,
+        max_ctx: 512,
+        buckets: vec![256, 512],
+        ..SyntheticSpec::default()
+    }
+}
+
+/// Prefill `b` distinct short prompts on `engine` (dense config),
+/// returning each prompt's length and prefill result — the fixed
+/// starting state both decode drivers below consume.
+pub fn decode_bench_seqs(engine: &Engine, b: usize)
+                         -> Vec<(usize, PrefillResult)> {
+    let cfg = SparsityConfig::dense();
+    (0..b)
+        .map(|i| {
+            let toks: Vec<i32> = (0..8)
+                .map(|j| ((i * 37 + j * 11) % 250 + 1) as i32)
+                .collect();
+            let pre = engine.prefill(&toks, &cfg).unwrap();
+            (toks.len(), pre)
+        })
+        .collect()
+}
+
+/// Greedy-decode every sequence one at a time (`Engine::decode_step`)
+/// for `steps` tokens each — the pre-batching execution profile. Each
+/// run clones the prefilled caches, so it is repeatable for timing.
+pub fn decode_bench_sequential(engine: &Engine,
+                               seqs: &[(usize, PrefillResult)],
+                               steps: usize) {
+    let cfg = SparsityConfig::dense();
+    for (len, pre) in seqs {
+        let mut cache = pre.cache.clone();
+        let mut logits = pre.last_logits.clone();
+        let mut pos = *len;
+        for _ in 0..steps {
+            let tok = argmax(&logits) as i32;
+            logits = engine
+                .decode_step(tok, pos, &mut cache, &cfg)
+                .unwrap();
+            pos += 1;
+        }
+    }
+}
+
+/// Greedy-decode all sequences in lockstep through a [`DecodeBatch`]
+/// (`steps` rounds, passes of at most `max_batch` rows) — the batched
+/// execution profile. Clones the prefilled caches like the sequential
+/// driver, so the two are directly comparable.
+pub fn decode_bench_batched(engine: &Engine,
+                            seqs: &[(usize, PrefillResult)],
+                            steps: usize, max_batch: usize) {
+    let cfg = SparsityConfig::dense();
+    let mut db = DecodeBatch::new(engine.clone());
+    let ids: Vec<usize> = seqs
+        .iter()
+        .map(|(len, pre)| {
+            db.join(
+                pre.cache.clone(),
+                *len,
+                pre.last_logits.clone(),
+                cfg.clone(),
+            )
+        })
+        .collect();
+    for _ in 0..steps {
+        for &id in &ids {
+            let tok = argmax(db.logits(id)) as i32;
+            db.feed(id, tok);
+        }
+        let stats = db.step(None, max_batch);
+        assert!(stats.failures.is_empty(), "{:?}", stats.failures);
     }
 }
 

@@ -19,7 +19,9 @@
 //! factory shares one weight-store allocation across replicas instead
 //! of re-seeding per replica.
 
-use fastforward::engine::{Engine, SparsityConfig};
+use fastforward::engine::{argmax, DecodeBatch, Engine, PrefillSession,
+                          SparsityConfig};
+use fastforward::kvcache::SeqKvCache;
 use fastforward::manifest::SyntheticSpec;
 use fastforward::pool::ExecutorPool;
 use fastforward::runtime::BackendKind;
@@ -193,6 +195,228 @@ fn fast_and_reference_share_numeric_fingerprint() {
     );
     let cfg = SparsityConfig::fastforward(0.5);
     assert_eq!(reference.prefix_seed(&cfg), f4.prefix_seed(&cfg));
+}
+
+// ---------------------------------------------------------------------------
+// StepBatch / continuous-batching bit-identity
+// ---------------------------------------------------------------------------
+
+/// Per-sequence trace of one run: the logits after prefill and after
+/// every decode step, plus the final KV cache.
+type SeqTrace = (Vec<Vec<f32>>, SeqKvCache);
+
+/// The sequential oracle: each sequence prefills and decodes entirely
+/// on its own, one engine dispatch at a time.
+fn run_sequential(engine: &Engine, seqs: &[(Vec<i32>, SparsityConfig)],
+                  decode_steps: usize) -> Vec<SeqTrace> {
+    seqs.iter()
+        .map(|(prompt, cfg)| {
+            let pre = engine.prefill(prompt, cfg).unwrap();
+            let mut hist = vec![pre.last_logits.clone()];
+            let mut cache = pre.cache;
+            let mut logits = pre.last_logits;
+            let mut pos = prompt.len();
+            for _ in 0..decode_steps {
+                let tok = argmax(&logits) as i32;
+                logits = engine
+                    .decode_step(tok, pos, &mut cache, cfg)
+                    .unwrap();
+                pos += 1;
+                hist.push(logits.clone());
+            }
+            (hist, cache)
+        })
+        .collect()
+}
+
+/// The continuous-batching path: every sequence prefills chunk-by-chunk
+/// *while* already-finished sequences decode in the same mixed steps
+/// ([`DecodeBatch::step`] → `Engine::step_batch`), then the batch keeps
+/// decoding lockstep until every member did `decode_steps` tokens.
+fn run_batched(engine: &Engine, seqs: &[(Vec<i32>, SparsityConfig)],
+               decode_steps: usize, max_batch: usize) -> Vec<SeqTrace> {
+    let mut db = DecodeBatch::new(engine.clone());
+    let mut sessions: Vec<Option<PrefillSession>> = seqs
+        .iter()
+        .map(|(p, c)| {
+            Some(
+                PrefillSession::new(engine.clone(), p.clone(), c.clone())
+                    .unwrap(),
+            )
+        })
+        .collect();
+    let n = seqs.len();
+    let mut ids: Vec<Option<usize>> = vec![None; n];
+    let mut hist: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n];
+    let mut steps_done = vec![0usize; n];
+    let mut finals: Vec<Option<SeqKvCache>> =
+        (0..n).map(|_| None).collect();
+    loop {
+        // stage one decode token per member still owing steps
+        let mut any_staged = false;
+        for i in 0..n {
+            if let Some(id) = ids[i] {
+                if steps_done[i] < decode_steps {
+                    let tok = argmax(db.logits(id)) as i32;
+                    db.feed(id, tok);
+                    any_staged = true;
+                }
+            }
+        }
+        // at most one prefill chunk rides along
+        let chunk_i = sessions.iter().position(|s| s.is_some());
+        if !any_staged && chunk_i.is_none() {
+            break;
+        }
+        {
+            let chunk = chunk_i.and_then(|i| sessions[i].as_mut());
+            let stats = db.step(chunk, max_batch);
+            assert!(
+                stats.failures.is_empty(),
+                "batched step failed: {:?}",
+                stats.failures
+            );
+        }
+        // collect the stepped members' fresh logits
+        for i in 0..n {
+            if let Some(id) = ids[i] {
+                if steps_done[i] < decode_steps {
+                    steps_done[i] += 1;
+                    hist[i].push(db.logits(id).to_vec());
+                    if steps_done[i] == decode_steps {
+                        finals[i] = Some(db.leave(id));
+                        ids[i] = None;
+                    }
+                }
+            }
+        }
+        // a finished prefill joins the decode batch
+        if let Some(i) = chunk_i {
+            if sessions[i].as_ref().unwrap().done() {
+                let session = sessions[i].take().unwrap();
+                let pre = session.finish().unwrap();
+                hist[i].push(pre.last_logits.clone());
+                if decode_steps == 0 {
+                    finals[i] = Some(pre.cache);
+                } else {
+                    ids[i] = Some(db.join(
+                        pre.cache,
+                        seqs[i].0.len(),
+                        pre.last_logits,
+                        seqs[i].1.clone(),
+                    ));
+                }
+            }
+        }
+    }
+    hist.into_iter()
+        .zip(finals)
+        .map(|(h, c)| (h, c.expect("sequence never finished")))
+        .collect()
+}
+
+fn assert_traces_bit_identical(want: &[SeqTrace], got: &[SeqTrace],
+                               what: &str) {
+    assert_eq!(want.len(), got.len(), "{what}: sequence count");
+    for (i, ((wh, wc), (gh, gc))) in
+        want.iter().zip(got.iter()).enumerate()
+    {
+        assert_eq!(wh.len(), gh.len(), "{what}: seq {i} step count");
+        for (step, (wl, gl)) in wh.iter().zip(gh.iter()).enumerate() {
+            assert_eq!(wl.len(), gl.len());
+            for j in 0..wl.len() {
+                assert_eq!(
+                    wl[j].to_bits(),
+                    gl[j].to_bits(),
+                    "{what}: seq {i} step {step} logit {j} differs \
+                     ({} vs {})",
+                    wl[j],
+                    gl[j]
+                );
+            }
+        }
+        assert_eq!(wc.len, gc.len, "{what}: seq {i} KV length");
+        let elems = wc.len * wc.row_elems();
+        for l in 0..wc.n_layers {
+            assert_eq!(
+                wc.k[l][..elems],
+                gc.k[l][..elems],
+                "{what}: seq {i} layer {l} K rows differ"
+            );
+            assert_eq!(
+                wc.v[l][..elems],
+                gc.v[l][..elems],
+                "{what}: seq {i} layer {l} V rows differ"
+            );
+        }
+    }
+}
+
+/// Mixed prompts + configs for the batched runs: a tail-only dense
+/// sequence, the paper's full method, and a sub-dense nc config that
+/// also decodes sparsely — so one batch mixes dense rows, fused
+/// compensated rows and gathered nc rows at once.
+fn batch_seqs(block: usize) -> Vec<(Vec<i32>, SparsityConfig)> {
+    let mut nc = uniform_cfg(0.5, false);
+    nc.sparse_decode = true;
+    vec![
+        (corpus_prompt(40), SparsityConfig::dense()),
+        (corpus_prompt(block + 1), SparsityConfig::fastforward(0.5)),
+        (corpus_prompt(2 * block + 44), nc),
+    ]
+}
+
+/// The tentpole invariant: B ∈ {1, 3} mixed prefill-chunk/decode
+/// batches produce logits and KV bit-identical to running the same
+/// sequences one at a time on the sequential reference oracle — at
+/// explicit thread counts 1 and 4, and whether all rows fit one pass
+/// (`max_batch = 4`) or the step must split passes (`max_batch = 2`).
+#[test]
+fn step_batch_matches_sequential_reference_bit_identically() {
+    let reference = testing::cpu_engine_reference();
+    let block = reference.block();
+    let fasts = [
+        ("threads=1", testing::cpu_engine_threads(1)),
+        ("threads=4", testing::cpu_engine_threads(4)),
+    ];
+
+    // B = 3, mixed configs
+    let seqs = batch_seqs(block);
+    let want = run_sequential(&reference, &seqs, 4);
+    for (name, fast) in &fasts {
+        for max_batch in [4, 2] {
+            let got = run_batched(fast, &seqs, 4, max_batch);
+            assert_traces_bit_identical(
+                &want,
+                &got,
+                &format!("B=3 {name} max_batch={max_batch}"),
+            );
+        }
+    }
+
+    // B = 1 degenerates to the sequential path under the batched entry
+    let solo = vec![(
+        corpus_prompt(block + 9),
+        SparsityConfig::fastforward(0.5),
+    )];
+    let want = run_sequential(&reference, &solo, 3);
+    for (name, fast) in &fasts {
+        let got = run_batched(fast, &solo, 3, 4);
+        assert_traces_bit_identical(&want, &got,
+                                    &format!("B=1 {name}"));
+    }
+}
+
+/// The batched entry on the *reference* backend itself (sequential
+/// per-row dispatch inside `execute_batch`) also matches the
+/// reference's one-at-a-time path — the default-ABI semantics.
+#[test]
+fn step_batch_on_reference_backend_matches_itself() {
+    let reference = testing::cpu_engine_reference();
+    let seqs = batch_seqs(reference.block());
+    let want = run_sequential(&reference, &seqs, 2);
+    let got = run_batched(&reference, &seqs, 2, 4);
+    assert_traces_bit_identical(&want, &got, "reference step-batch");
 }
 
 // ---------------------------------------------------------------------------

@@ -13,6 +13,11 @@
 //!   never decrease, and end between the number of successful requests
 //!   and the number submitted (each request is sampled at most once,
 //!   at first admission).
+//!
+//! Plus the continuous-batching scheduler regressions: an interactive
+//! prefill arriving under a full decode batch joins within the next
+//! tick instead of waiting for the batch to drain, and the
+//! `ff_batch_occupancy` metric is monotone in offered load.
 
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
@@ -57,6 +62,7 @@ fn randomized_traffic_loses_no_done_events_and_leaks_no_kv() {
             max_active: 4,
             prefill_block_budget: 2,
             decode_first_budget: 1,
+            max_batch: 8,
             slo: true,
         },
         BackendKind::Cpu,
@@ -179,5 +185,186 @@ fn randomized_traffic_loses_no_done_events_and_leaks_no_kv() {
     assert!(
         metrics.cancelled() >= cancelled as u64,
         "cancellations must be visible in metrics"
+    );
+    // the run decoded through batched passes
+    assert!(
+        metrics.batch_steps() > 0,
+        "randomized traffic must exercise the batched step path"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Continuous-batching scheduler regressions
+// ---------------------------------------------------------------------------
+
+/// One single-replica pool over the synthetic CPU model.
+fn one_replica_pool(
+    max_active: usize,
+) -> (Arc<Router>, ExecutorPool, Arc<Metrics>) {
+    let probe = fastforward::testing::cpu_engine();
+    let block = probe.block();
+    let max_ctx = probe.manifest().model.max_ctx;
+    drop(probe);
+    let metrics = Arc::new(Metrics::new());
+    let router = Arc::new(Router::new_pooled(
+        64,
+        max_ctx,
+        512,
+        block,
+        metrics.clone(),
+        1,
+        LoadEstimator::new(block),
+        0,
+    ));
+    let pool = ExecutorPool::spawn_backend(
+        router.clone(),
+        BatcherConfig {
+            max_active,
+            prefill_block_budget: 2,
+            decode_first_budget: 1,
+            max_batch: 8,
+            slo: true,
+        },
+        BackendKind::Cpu,
+        None,
+    );
+    (router, pool, metrics)
+}
+
+/// Under a full decode batch of long batch-class generations, an
+/// arriving interactive prefill must join the very next tick — it
+/// completes while the decode batch is still running, instead of
+/// waiting for the batch to drain.
+#[test]
+fn interactive_prefill_joins_under_full_decode_batch() {
+    let (router, pool, _metrics) = one_replica_pool(8);
+
+    // three decode-heavy batch-class requests fill the decode batch
+    let batch_rxs: Vec<Receiver<TokenEvent>> = (0..3)
+        .map(|i| {
+            let (tx, rx) = channel();
+            router
+                .submit_with(
+                    vec![(10 + i) as i32; 8],
+                    48,
+                    SparsityConfig::dense(),
+                    SubmitOpts {
+                        class: SloClass::Batch,
+                        deadline_ms: None,
+                        cancel: CancelToken::new(),
+                    },
+                    tx,
+                )
+                .unwrap();
+            rx
+        })
+        .collect();
+    // wait until every batch request is decoding (First emitted)
+    for rx in &batch_rxs {
+        loop {
+            match rx.recv_timeout(Duration::from_secs(120)).unwrap() {
+                TokenEvent::First { .. } => break,
+                TokenEvent::Done(resp) => {
+                    panic!("batch request finished too early: {resp:?}")
+                }
+                TokenEvent::Token { .. } => {}
+            }
+        }
+    }
+
+    // now an interactive request arrives: short prompt, two tokens
+    let (tx, rx) = channel();
+    router
+        .submit(vec![7; 8], 2, SparsityConfig::dense(), tx)
+        .unwrap();
+    let resp = Response::collect_timeout(&rx, Duration::from_secs(120))
+        .expect("interactive request must complete");
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+
+    // no starvation: at least one 48-token batch generation is still
+    // in flight when the interactive request is already done
+    let still_running = batch_rxs.iter().any(|rx| {
+        loop {
+            match rx.try_recv() {
+                Ok(TokenEvent::Done(_)) => return false,
+                Ok(_) => continue,
+                Err(_) => return true, // no Done yet
+            }
+        }
+    });
+    assert!(
+        still_running,
+        "interactive request should finish while the decode batch is \
+         still running (it must join mid-batch, not after the drain)"
+    );
+
+    for rx in &batch_rxs {
+        let resp =
+            Response::collect_timeout(rx, Duration::from_secs(300))
+                .expect("batch request completes");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    router.close();
+    pool.join().unwrap();
+}
+
+/// Seeded randomized load sweep: mean batch occupancy must be monotone
+/// in offered load — more co-active requests fold more rows per pass.
+#[test]
+fn batch_occupancy_is_monotone_in_offered_load() {
+    let mut rng = Rng::new(0xBA7C4);
+    let mut occupancy_at = |n_requests: usize| -> f64 {
+        let (router, pool, metrics) = one_replica_pool(8);
+        let rxs: Vec<Receiver<TokenEvent>> = (0..n_requests)
+            .map(|_| {
+                // randomized content, fixed decode-heavy shape so the
+                // members stay co-active
+                let prompt: Vec<i32> = (0..8)
+                    .map(|_| rng.range(1, 250) as i32)
+                    .collect();
+                let (tx, rx) = channel();
+                router
+                    .submit(
+                        prompt,
+                        20 + rng.range(0, 4),
+                        SparsityConfig::dense(),
+                        tx,
+                    )
+                    .unwrap();
+                rx
+            })
+            .collect();
+        for rx in &rxs {
+            let resp =
+                Response::collect_timeout(rx, Duration::from_secs(300))
+                    .expect("request completes");
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+        }
+        router.close();
+        pool.join().unwrap();
+        assert!(metrics.batch_steps() > 0, "no batched passes ran");
+        metrics.batch_occupancy_mean()
+    };
+
+    let low = occupancy_at(1);
+    let mid = occupancy_at(4);
+    let high = occupancy_at(8);
+    eprintln!(
+        "[concurrency] occupancy mean: load 1 → {low:.2}, load 4 → \
+         {mid:.2}, load 8 → {high:.2}"
+    );
+    assert!(
+        (low - 1.0).abs() < 1e-9,
+        "a lone request always runs occupancy-1 passes: {low}"
+    );
+    assert!(
+        mid >= low && high >= mid,
+        "occupancy must be monotone in offered load: {low:.2} → \
+         {mid:.2} → {high:.2}"
+    );
+    assert!(
+        high > 1.5,
+        "eight co-active decode-heavy requests should fold multiple \
+         rows per pass: {high:.2}"
     );
 }

@@ -4,7 +4,7 @@
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
-use std::rc::Rc;
+
 use std::sync::Arc;
 
 use fastforward::batcher::{Batcher, BatcherConfig};
@@ -52,7 +52,7 @@ fn full_http_stack() {
     let exec = std::thread::spawn(move || {
         let m = Arc::new(Manifest::load(&d2).unwrap());
         let w = Arc::new(WeightStore::load(&m).unwrap());
-        let rt = Rc::new(Runtime::new(m, w).unwrap());
+        let rt = Arc::new(Runtime::new(m, w).unwrap());
         Batcher::new(Engine::new(rt), r2, BatcherConfig::default())
             .run()
             .unwrap();

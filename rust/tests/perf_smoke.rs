@@ -21,6 +21,7 @@ use std::time::Instant;
 use fastforward::engine::{Engine, SparsityConfig};
 use fastforward::manifest::SyntheticSpec;
 use fastforward::sparsity::masks::ExpertSource;
+use fastforward::testing;
 
 /// libtest runs the tests of this binary on parallel threads by
 /// default; two wall-clock gates timing each other's CPU load would
@@ -122,6 +123,55 @@ fn sparse_prefill_beats_dense_at_t512() {
         "50% sparse prefill speedup {speedup:.2}x < 1.15x at T=512 \
          (paper claims up to 1.45x; compute-bound expectation here \
          ~1.4x)"
+    );
+}
+
+/// The continuous-batching gate: B=4 batched decode must deliver ≥1.3×
+/// the aggregate tokens/s of decoding the same four sequences one at a
+/// time (B=1 sequential), on the FFN-heavy decode-bench model (~12 MiB
+/// of weights per token pass — `testing::decode_bench_spec`, shared
+/// with the fig10 bench). The batched step is bit-identical to
+/// sequential decode (conformance suite), so this is purely a
+/// throughput claim: one pass over the weights for 4 rows instead of
+/// 4 passes.
+#[test]
+fn batched_decode_beats_sequential() {
+    let _gate = hold_gate();
+    if cores() < 2 {
+        eprintln!(
+            "[skip] perf smoke needs >= 2 cores for stable wall-clock \
+             timing (found {})",
+            cores()
+        );
+        return;
+    }
+    const B: usize = 4;
+    const STEPS: usize = 16;
+    let engine =
+        Engine::synthetic_cpu(&testing::decode_bench_spec()).unwrap();
+    let seqs = testing::decode_bench_seqs(&engine, B);
+
+    let seq_run = || testing::decode_bench_sequential(&engine, &seqs,
+                                                      STEPS);
+    let batch_run =
+        || testing::decode_bench_batched(&engine, &seqs, STEPS, B);
+    // warmup both paths (thread pool spin-up, op-cache fill)
+    seq_run();
+    batch_run();
+    let t_seq = best_of(2, seq_run);
+    let t_batch = best_of(2, batch_run);
+    let speedup = t_seq / t_batch;
+    eprintln!(
+        "[perf] batched decode B={B}, {STEPS} steps: sequential {:.1} \
+         ms, batched {:.1} ms, aggregate speedup {:.2}x",
+        t_seq * 1e3,
+        t_batch * 1e3,
+        speedup
+    );
+    assert!(
+        speedup >= 1.3,
+        "batched decode speedup {speedup:.2}x < 1.3x at B={B} \
+         (one weight pass should serve all {B} rows)"
     );
 }
 

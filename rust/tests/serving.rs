@@ -2,7 +2,6 @@
 //! exercising admission, chunked prefill interleaving, decode rounds,
 //! metrics, and KV page accounting. Skips without artifacts.
 
-use std::rc::Rc;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 
@@ -23,7 +22,7 @@ fn start_stack(max_active: usize) -> Option<(Arc<Router>, std::thread::JoinHandl
     let handle = std::thread::spawn(move || {
         let m = Arc::new(Manifest::load(&dir).unwrap());
         let w = Arc::new(WeightStore::load(&m).unwrap());
-        let rt = Rc::new(Runtime::new(m, w).unwrap());
+        let rt = Arc::new(Runtime::new(m, w).unwrap());
         let engine = Engine::new(rt);
         Batcher::new(
             engine,

@@ -380,6 +380,7 @@ fn interactive_preempts_batch_prefill() {
         max_active: 4,
         prefill_block_budget: 2,
         decode_first_budget: 1,
+        max_batch: 8,
         slo: true,
     });
     let router = stack.router.clone();

@@ -23,6 +23,14 @@ FF_CPU_THREADS=4 cargo test -q --test backend_conformance "${extra[@]}"
 echo "==> one-block CPU perf smoke (sparse beats dense)"
 cargo test -q --test perf_smoke one_block_sparse_beats_dense "${extra[@]}"
 
+echo "==> batched-decode perf smoke (B=4 >= 1.3x sequential)"
+cargo test -q --test perf_smoke batched_decode_beats_sequential \
+    "${extra[@]}"
+
+echo "==> fig10 continuous-batching smoke (--smoke: B in {1,4})"
+cargo bench --bench fig10_continuous_batching "${extra[@]}" -- \
+    --backend cpu --smoke
+
 echo "==> cargo test --doc"
 cargo test --doc -q "${extra[@]}"
 
