@@ -1,0 +1,132 @@
+//! Figure 11: block-sparse attention — prefill speedup vs context
+//! length on the CPU backend.
+//!
+//! For each context length T, the bench prefills a T-token prompt on
+//! the attention-heavy synthetic model two ways:
+//!
+//! * **dense** — the original attention path (every causal key), and
+//! * **block-sparse** — `--attn-sparsity` drop of the optional causal
+//!   key blocks per query block per head, keeping the mandatory
+//!   sink + local band (`fastforward::sparsity::attn`).
+//!
+//! Attention cost grows O(T²) while the dropped fraction of key blocks
+//! approaches the configured drop, so the speedup *rises with context
+//! length* — the shape this figure pins. The model and prefill driver
+//! are shared with the tier-1 perf gate (`fastforward::testing::
+//! attn_bench_*`), so the gate and this bench always measure the same
+//! thing. Needs no artifacts and emits `BENCH_fig11_cpu.json`.
+//!
+//! Flags: `--drop A` block drop fraction (default 0.5), `--smoke` for
+//! the quick check.sh gate (T ∈ {512, 1024}). Acceptance (full run):
+//! T=2048 block-sparse prefill ≥ 1.15× dense — the same bar
+//! `tests/perf_smoke.rs` gates in tier-1.
+
+mod common;
+
+use std::time::Instant;
+
+use fastforward::engine::Engine;
+use fastforward::testing;
+use fastforward::util::cli::Args;
+
+struct Point {
+    len: usize,
+    dense_ms: f64,
+    sparse_ms: f64,
+}
+
+fn measure(engine: &Engine, len: usize, drop: f64) -> Point {
+    let dense_cfg = testing::attn_bench_cfg(None);
+    let sparse_cfg = testing::attn_bench_cfg(Some(drop));
+    let dense_run = || testing::attn_bench_prefill(engine, len,
+                                                   &dense_cfg);
+    let sparse_run = || testing::attn_bench_prefill(engine, len,
+                                                    &sparse_cfg);
+
+    // warmup, then best-of-2 wall clock per path
+    dense_run();
+    sparse_run();
+    let best = |f: &dyn Fn()| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..2 {
+            let t0 = Instant::now();
+            f();
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    Point {
+        len,
+        dense_ms: best(&dense_run) * 1e3,
+        sparse_ms: best(&sparse_run) * 1e3,
+    }
+}
+
+fn main() {
+    common::header(
+        "Figure 11",
+        "block-sparse attention: prefill speedup vs context length",
+    );
+    let args = Args::parse_env();
+    let smoke = args.has("smoke");
+    let drop = args.f64("drop", 0.5);
+    let lens: &[usize] = if smoke {
+        &[512, 1024]
+    } else {
+        &[256, 512, 1024, 2048]
+    };
+    println!(
+        "backend: cpu (synthetic attention-heavy model), block drop \
+         {drop:.2}{}",
+        if smoke { ", smoke mode" } else { "" }
+    );
+
+    let engine =
+        Engine::synthetic_cpu(&testing::attn_bench_spec()).unwrap();
+    let mut points = Vec::new();
+    println!("{:>6} {:>12} {:>12} {:>10}", "T", "dense ms",
+             "sparse ms", "speedup");
+    for &len in lens {
+        let p = measure(&engine, len, drop);
+        println!(
+            "{:>6} {:>12.1} {:>12.1} {:>9.2}x",
+            p.len,
+            p.dense_ms,
+            p.sparse_ms,
+            p.dense_ms / p.sparse_ms
+        );
+        points.push(p);
+    }
+
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"len\":{},\"dense_ms\":{:.2},\"sparse_ms\":{:.2},\
+                 \"speedup\":{:.4}}}",
+                p.len,
+                p.dense_ms,
+                p.sparse_ms,
+                p.dense_ms / p.sparse_ms
+            )
+        })
+        .collect();
+    common::write_bench_json(
+        "BENCH_fig11_cpu.json",
+        &format!(
+            "{{\"figure\":\"fig11_sparse_attention\",\
+             \"backend\":\"cpu\",\"drop\":{drop},\"smoke\":{smoke},\
+             \"points\":[{}]}}\n",
+            rows.join(",")
+        ),
+    );
+
+    if let Some(p) = points.iter().find(|p| p.len == 2048) {
+        let speedup = p.dense_ms / p.sparse_ms;
+        println!(
+            "acceptance: T=2048 block-sparse ≥ 1.15x dense → {:.2}x {}",
+            speedup,
+            if speedup >= 1.15 { "PASS" } else { "MISS" }
+        );
+    }
+}

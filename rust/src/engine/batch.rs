@@ -18,7 +18,11 @@
 //! unchanged per-element accumulation order, and the sequential
 //! fallback (PJRT, the reference oracle, split-pipeline chunks) *is*
 //! the one-at-a-time dispatch. `tests/backend_conformance.rs` pins
-//! this against [`crate::runtime::CpuBackend::reference`].
+//! this against [`crate::runtime::CpuBackend::reference`]. Block-
+//! sparse attention rows keep the guarantee for free: the chunk plan
+//! carries the resolved `a{pct}` executable name, and the fused CPU
+//! path computes each row's block-selection plan sequentially before
+//! its row-parallel loop — identical to the sequential dispatch.
 //!
 //! [`DecodeBatch`] is the scheduler-facing lockstep container:
 //! sequences join as their prefill finishes, leave as they hit EOS or

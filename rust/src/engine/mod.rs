@@ -52,6 +52,16 @@ pub struct SparsityConfig {
     pub source: ExpertSource,
     /// Apply FFN sparsity during decode as well (Tab. 3).
     pub sparse_decode: bool,
+    /// Block-sparse attention for full prefill blocks: `None` = dense
+    /// attention (the original path, untouched); `Some(a)` = drop
+    /// fraction `a` of the *optional* causal key blocks per query
+    /// block per head, always keeping the sink + local band
+    /// ([`crate::sparsity::attn`]). `Some(0.0)` routes through the
+    /// sparse machinery at full coverage — bit-identical to dense.
+    /// Quantized onto the manifest's compiled `attn_grid`; orthogonal
+    /// to (and composable with) the FFN `sparsity` knob. T=1 steps
+    /// (ragged tail, decode) always run dense attention.
+    pub attn_sparsity: Option<f64>,
 }
 
 impl SparsityConfig {
@@ -65,6 +75,7 @@ impl SparsityConfig {
             compensator: false,
             source: ExpertSource::Trained,
             sparse_decode: false,
+            attn_sparsity: None,
         }
     }
 
@@ -92,10 +103,14 @@ impl SparsityConfig {
             compensator: true,
             source: ExpertSource::Trained,
             sparse_decode: false,
+            attn_sparsity: None,
         }
     }
 
-    /// Whether this is the dense baseline (no sparsity applied).
+    /// Whether the FFN path is the dense baseline (no FFN sparsity).
+    /// Deliberately ignores `attn_sparsity`: attention sparsity is an
+    /// orthogonal axis that rides on the dense-FFN executables when no
+    /// FFN sparsity is requested.
     pub fn is_dense(&self) -> bool {
         self.sparsity.is_none()
     }
@@ -143,6 +158,13 @@ impl SparsityConfig {
                 ExpertSource::FirstBlockStatic => 3,
                 ExpertSource::Cats => 4,
             },
+        );
+        // attention-sparse KV differs numerically from dense KV at
+        // every layer past the first — the prefix cache must never
+        // adopt rows across attention configurations
+        h = mix(
+            h,
+            self.attn_sparsity.map(|a| a.to_bits()).unwrap_or(u64::MAX),
         );
         h
     }
@@ -281,40 +303,77 @@ impl Engine {
         }
     }
 
-    fn exe_name_dense(&self, t: usize, s: usize) -> String {
-        format!("layer_dense_t{t}_s{s}")
+    /// The `a{pct}_` name segment for an attention drop level (empty
+    /// for the dense attention path).
+    fn a_seg(a: Option<usize>) -> String {
+        a.map(|p| format!("a{p}_")).unwrap_or_default()
     }
 
-    fn exe_name_sparse(&self, k: usize, t: usize, s: usize) -> String {
-        format!("layer_sparse_k{k}_t{t}_s{s}")
+    fn exe_name_dense(&self, a: Option<usize>, t: usize, s: usize)
+                      -> String {
+        format!("layer_dense_{}t{t}_s{s}", Self::a_seg(a))
+    }
+
+    fn exe_name_sparse(&self, a: Option<usize>, k: usize, t: usize,
+                       s: usize) -> String {
+        format!("layer_sparse_{}k{k}_t{t}_s{s}", Self::a_seg(a))
+    }
+
+    /// Resolve `cfg.attn_sparsity` onto the manifest's compiled
+    /// attention-drop grid (percent levels, nearest wins, ties toward
+    /// the lower level). `Ok(None)` = dense attention. Fails fast when
+    /// attention sparsity is requested against a manifest that ships
+    /// no attention-sparse executables — silently running dense would
+    /// misreport every speedup measured on top.
+    pub(crate) fn attn_pct(&self, cfg: &SparsityConfig)
+                           -> Result<Option<usize>> {
+        let Some(a) = cfg.attn_sparsity else { return Ok(None) };
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&a),
+            "attn sparsity {a} outside [0, 1]"
+        );
+        let grid = &self.rt.manifest.attn_grid;
+        anyhow::ensure!(
+            !grid.is_empty(),
+            "attention sparsity requested but the manifest ships no \
+             attention-sparse executables (empty attn_grid)"
+        );
+        let target = (a * 100.0).round() as i64;
+        Ok(grid
+            .iter()
+            .copied()
+            .min_by_key(|&g| ((g as i64 - target).abs(), g)))
     }
 
     /// The executable a T=1 step (decode or ragged prompt tail)
     /// dispatches at one layer — the same selection
     /// [`Engine::run_token`] makes, factored out so the batched step
     /// planner names exactly the executables the sequential path runs.
+    /// T=1 steps never carry an attention-sparsity segment: a single
+    /// query row has no query block to pool.
     pub(crate) fn token_exe(&self, cfg: &SparsityConfig, sparse: bool,
                             k: usize, s: usize) -> String {
         let d_ffn = self.rt.manifest.model.d_ffn;
         if sparse && k < d_ffn {
-            self.fused_sparse_exe(cfg, k, 1, s)
-                .unwrap_or_else(|| self.exe_name_sparse(k, 1, s))
+            self.fused_sparse_exe(cfg, k, 1, s, None)
+                .unwrap_or_else(|| self.exe_name_sparse(None, k, 1, s))
         } else {
-            self.exe_name_dense(1, s)
+            self.exe_name_dense(None, 1, s)
         }
     }
 
     /// The fused executable a full-block prefill layer step dispatches
     /// under `cfg`, or `None` when the step needs the split pipeline
     /// (ablation expert sources, manifests without fused variants) —
-    /// the same selection [`Engine::run_block`] makes.
+    /// the same selection [`Engine::run_block`] makes. `a` is the
+    /// resolved attention drop level ([`Engine::attn_pct`]).
     pub(crate) fn block_exe(&self, cfg: &SparsityConfig, k: usize,
-                            s: usize, layer_dense: bool)
-                            -> Option<String> {
+                            s: usize, layer_dense: bool,
+                            a: Option<usize>) -> Option<String> {
         if layer_dense {
-            return Some(self.exe_name_dense(self.block, s));
+            return Some(self.exe_name_dense(a, self.block, s));
         }
-        self.fused_sparse_exe(cfg, k, self.block, s)
+        self.fused_sparse_exe(cfg, k, self.block, s, a)
     }
 
     /// Map prefill layer Ks onto the compiled decode-K grid: layers
@@ -350,13 +409,16 @@ impl Engine {
         Ok(out.into_iter().next().unwrap().data)
     }
 
-    /// One dense transformer layer over a t-block; appends KV rows.
+    /// One dense-FFN transformer layer over a t-block; appends KV rows.
+    /// `a` is the resolved attention drop level (`None` = dense
+    /// attention).
     fn layer_dense(&self, l: usize, x: &[f32], t: usize,
-                   cache: &mut SeqKvCache, pos: usize) -> Result<Vec<f32>> {
+                   cache: &mut SeqKvCache, pos: usize,
+                   a: Option<usize>) -> Result<Vec<f32>> {
         let s = cache.bucket;
         let pos_i = [pos as i32];
         let out = self.rt.run(
-            &self.exe_name_dense(t, s),
+            &self.exe_name_dense(a, t, s),
             l,
             &[
                 ("x", Input::F32(x, vec![t, self.d])),
@@ -380,14 +442,15 @@ impl Engine {
     /// ships it (synthetic manifests do; AOT bundles do not, and fall
     /// back to the split path exactly as before).
     fn fused_sparse_exe(&self, cfg: &SparsityConfig, k: usize, t: usize,
-                        s: usize) -> Option<String> {
+                        s: usize, a: Option<usize>) -> Option<String> {
         if cfg.source != ExpertSource::Trained {
             return None;
         }
+        let aseg = Self::a_seg(a);
         let name = if cfg.compensator {
-            self.exe_name_sparse(k, t, s)
+            self.exe_name_sparse(a, k, t, s)
         } else {
-            format!("layer_sparse_nc_k{k}_t{t}_s{s}")
+            format!("layer_sparse_nc_{aseg}k{k}_t{t}_s{s}")
         };
         self.rt.manifest.has_executable(&name).then_some(name)
     }
@@ -524,6 +587,9 @@ impl Engine {
                  static_idx: &mut Vec<Option<Vec<i32>>>,
                  capture_static: bool) -> Result<Vec<f32>> {
         let d_ffn = self.rt.manifest.model.d_ffn;
+        // Attention sparsity applies only to the fused full-block path;
+        // the split ablation pipeline below keeps dense attention.
+        let a = self.attn_pct(cfg)?;
         let mut x = x0;
         for l in 0..self.n_layers {
             let k = layer_ks[l];
@@ -531,10 +597,10 @@ impl Engine {
             let fused = if layer_dense || capture_static {
                 None
             } else {
-                self.fused_sparse_exe(cfg, k, self.block, cache.bucket)
+                self.fused_sparse_exe(cfg, k, self.block, cache.bucket, a)
             };
             if layer_dense && !capture_static {
-                x = self.layer_dense(l, &x, self.block, cache, pos)?;
+                x = self.layer_dense(l, &x, self.block, cache, pos, a)?;
             } else if let Some(exe) = &fused {
                 x = self.layer_sparse_fused(exe, l, &x, self.block,
                                             cache, pos)?;
@@ -593,13 +659,15 @@ impl Engine {
                 // without the compensator the sub-dense nc variant is
                 // preferred where the manifest ships it.
                 let exe = self
-                    .fused_sparse_exe(cfg, k, 1, cache.bucket)
+                    .fused_sparse_exe(cfg, k, 1, cache.bucket, None)
                     .unwrap_or_else(|| {
-                        self.exe_name_sparse(k, 1, cache.bucket)
+                        self.exe_name_sparse(None, k, 1, cache.bucket)
                     });
                 x = self.layer_sparse_fused(&exe, l, &x, 1, cache, pos)?;
             } else {
-                x = self.layer_dense(l, &x, 1, cache, pos)?;
+                // T=1 steps always run dense attention (no query block
+                // to pool), so no attention-sparsity segment here.
+                x = self.layer_dense(l, &x, 1, cache, pos, None)?;
             }
         }
         Ok(x)

@@ -64,6 +64,10 @@ impl PrefillSession {
                cfg: SparsityConfig) -> Result<Self> {
         anyhow::ensure!(!tokens.is_empty(), "empty prompt");
         let m = &engine.rt.manifest;
+        // Fail fast on invalid / unsupported attention-sparsity configs
+        // before any prompt work starts (the resolved level itself is
+        // recomputed per planned step).
+        engine.attn_pct(&cfg)?;
         let layer_ks = engine.layer_ks(&cfg)?;
         let decode_ks = engine.decode_ks_for(&layer_ks);
         let cache = SeqKvCache::new(
@@ -261,12 +265,15 @@ impl PrefillSession {
                 return Ok(None);
             }
             engine.ensure_bucket(&mut self.cache, pos + block)?;
+            // Resolved once per planned block; T=1 tail rows below stay
+            // dense-attention (token_exe passes no attention segment).
+            let a = engine.attn_pct(&self.cfg)?;
             let mut exes = Vec::with_capacity(n_layers);
             for l in 0..n_layers {
                 let k = self.layer_ks[l];
                 let layer_dense = dense || k >= d_ffn;
                 match engine.block_exe(&self.cfg, k, self.cache.bucket,
-                                       layer_dense) {
+                                       layer_dense, a) {
                     Some(exe) => exes.push(exe),
                     None => return Ok(None), // split pipeline required
                 }

@@ -37,6 +37,10 @@ fn usage() -> ! {
              --cpu-threads N (cpu backend worker lanes per engine;
               default FF_CPU_THREADS, else available cores capped at 8.
               thread count never changes a single output bit)
+             --attn-sparsity A (block-sparse attention for full prefill
+              blocks: fraction of optional causal key blocks dropped,
+              0..1; 0 = dense attention. Quantized onto the manifest's
+              compiled grid. Orthogonal to --sparsity)
   serve:     --addr HOST:PORT --sparsity S --max-active N --queue N
              --replicas N (executor pool size, default 1)
              --prefix-cache-mb MB (shared prefix KV cache, default 64;
@@ -113,6 +117,10 @@ fn load_engine(args: &Args) -> Result<Engine> {
 
 fn cfg_from_args(args: &Args) -> SparsityConfig {
     let sp = args.f64("sparsity", 0.0);
+    // Attention drop is orthogonal to FFN sparsity: it applies on the
+    // dense branch too (attention-only sparse configs are valid).
+    let attn = args.f64("attn-sparsity", 0.0);
+    let attn = (attn > 0.0).then_some(attn);
     if sp > 0.0 {
         let mut cfg = SparsityConfig::fastforward(sp);
         cfg.layerwise = !args.has("uniform");
@@ -126,9 +134,12 @@ fn cfg_from_args(args: &Args) -> SparsityConfig {
             "cats" => ExpertSource::Cats,
             _ => ExpertSource::Trained,
         };
+        cfg.attn_sparsity = attn;
         cfg
     } else {
-        SparsityConfig::dense()
+        let mut cfg = SparsityConfig::dense();
+        cfg.attn_sparsity = attn;
+        cfg
     }
 }
 
@@ -400,11 +411,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let s = args.f64("sparsity", 0.5);
         if s > 0.0 { Some(s) } else { None }
     };
+    let default_attn_sparsity = {
+        let a = args.f64("attn-sparsity", 0.0);
+        if a > 0.0 { Some(a) } else { None }
+    };
     let server = Arc::new(Server {
         router: router.clone(),
         metrics,
         tokenizer: Tokenizer::new(vocab),
         default_sparsity,
+        default_attn_sparsity,
     });
     let res = server.serve(&addr);
     router.close();

@@ -37,6 +37,9 @@ pub struct ModelCfg {
     pub max_ctx: usize,
     /// Compiled KV-bucket sizes, ascending.
     pub buckets: Vec<usize>,
+    /// Key/query block size for block-sparse attention (must divide
+    /// `block`; pre-attention-sparsity bundles default to 64).
+    pub attn_block: usize,
 }
 
 /// One weight's location in weights.bin.
@@ -132,6 +135,11 @@ pub struct Manifest {
     pub k_grid: Vec<usize>,
     /// Compiled sparse-K grid for T=1 decode steps.
     pub decode_k: Vec<usize>,
+    /// Compiled attention drop levels in percent (the `a{pct}`
+    /// executable variants). Empty when the bundle ships no
+    /// attention-sparse executables — `--attn-sparsity` then fails
+    /// fast instead of silently running dense.
+    pub attn_grid: Vec<usize>,
     /// Calibrated sparsity schedules.
     pub schedule: Schedule,
 }
@@ -166,6 +174,9 @@ pub struct SyntheticSpec {
     pub max_ctx: usize,
     /// KV bucket sizes, ascending.
     pub buckets: Vec<usize>,
+    /// Key/query block size for block-sparse attention (must divide
+    /// `block`).
+    pub attn_block: usize,
     /// Rank of the low-rank expert predictor (`pred.{l}.wd` is
     /// `[d_model, pred_rank]`, `pred.{l}.wu` is `[pred_rank, d_ffn]`).
     /// The paper's predictors are small networks whose overhead is a
@@ -195,11 +206,18 @@ impl Default for SyntheticSpec {
             ftile: 32,
             max_ctx: 2048,
             buckets: vec![256, 512, 1024, 2048],
+            attn_block: 64,
             pred_rank: 16,
             seed: 0xF057_F0A4,
         }
     }
 }
+
+/// Attention drop levels (percent of optional key blocks dropped) the
+/// synthetic manifest compiles `a{pct}` executable variants for.
+/// 0 = full coverage through the sparse machinery (bit-identical to
+/// dense), 100 = sink + local band only.
+pub const SYNTHETIC_ATTN_GRID: [usize; 5] = [0, 25, 50, 75, 100];
 
 impl Manifest {
     /// Parse manifest.json + schedule.json from an artifact directory.
@@ -223,6 +241,11 @@ impl Manifest {
             ftile: req_usize(m, "ftile")?,
             max_ctx: req_usize(m, "max_ctx")?,
             buckets: m.req("buckets")?.usize_vec()?,
+            // pre-attention-sparsity bundles omit the field
+            attn_block: m
+                .get("attn_block")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(64),
         };
 
         let mut weights = BTreeMap::new();
@@ -292,6 +315,12 @@ impl Manifest {
             executables,
             k_grid: j.req("k_grid")?.usize_vec()?,
             decode_k: j.req("decode_k")?.usize_vec()?,
+            // AOT bundles without attention-sparse executables ship no
+            // attn_grid; the engine rejects `--attn-sparsity` for them
+            attn_grid: match j.get("attn_grid") {
+                Some(v) => v.usize_vec()?,
+                None => Vec::new(),
+            },
             schedule,
         })
     }
@@ -318,6 +347,8 @@ impl Manifest {
                 "vocab must cover the byte-tokenizer specials (>= 259)");
         assert!(spec.pred_rank > 0 && spec.pred_rank <= spec.d_ffn,
                 "pred_rank must be in [1, d_ffn]");
+        assert!(spec.attn_block > 0 && spec.block % spec.attn_block == 0,
+                "attn_block must divide the prefill block");
         let (d, f) = (spec.d_model, spec.d_ffn);
         let (nh, nkv, dh) = (spec.n_heads, spec.n_kv_heads, spec.d_head);
 
@@ -433,35 +464,63 @@ impl Manifest {
         }
         for &s in &spec.buckets {
             for t in [spec.block, 1] {
-                let mut args = Vec::new();
-                attn_weights(&mut args);
-                ffn_weights(&mut args);
-                layer_inputs(&mut args, t, s);
-                add_x(format!("layer_dense_t{t}_s{s}"), args);
-                for &k in &k_grid {
-                    // fused sparse layer, exact compensator inside
+                // Attention-sparse `a{pct}` variants exist only for
+                // full prefill blocks: T=1 steps (ragged tail, decode)
+                // always run dense attention. `None` is the original
+                // dense-attention name; `Some(0)` is a distinct name —
+                // the sparse machinery at full coverage, bit-identical
+                // to `None` by the accumulation-order contract.
+                let mut a_levels: Vec<Option<usize>> = vec![None];
+                if t == spec.block {
+                    a_levels.extend(
+                        SYNTHETIC_ATTN_GRID.iter().map(|&p| Some(p)),
+                    );
+                }
+                for a in a_levels {
+                    let aseg = a
+                        .map(|p| format!("a{p}_"))
+                        .unwrap_or_default();
                     let mut args = Vec::new();
                     attn_weights(&mut args);
                     ffn_weights(&mut args);
-                    pred_weights(&mut args);
-                    args.push(farg(
-                        ArgKind::CompWeight("alpha".into()),
-                        vec![f],
-                    ));
                     layer_inputs(&mut args, t, s);
-                    add_x(format!("layer_sparse_k{k}_t{t}_s{s}"), args);
-                    // fused sparse layer, no compensator: the backend
-                    // may skip dropped-neuron activations entirely —
-                    // the genuinely-sub-dense compute profile of the
-                    // paper's kernels (synthetic manifests only; AOT
-                    // bundles do not ship this variant and the engine
-                    // falls back to the split pipeline)
-                    let mut args = Vec::new();
-                    attn_weights(&mut args);
-                    ffn_weights(&mut args);
-                    pred_weights(&mut args);
-                    layer_inputs(&mut args, t, s);
-                    add_x(format!("layer_sparse_nc_k{k}_t{t}_s{s}"), args);
+                    add_x(format!("layer_dense_{aseg}t{t}_s{s}"), args);
+                    for &k in &k_grid {
+                        // fused sparse layer, exact compensator inside
+                        let mut args = Vec::new();
+                        attn_weights(&mut args);
+                        ffn_weights(&mut args);
+                        pred_weights(&mut args);
+                        args.push(farg(
+                            ArgKind::CompWeight("alpha".into()),
+                            vec![f],
+                        ));
+                        layer_inputs(&mut args, t, s);
+                        add_x(
+                            format!(
+                                "layer_sparse_{aseg}k{k}_t{t}_s{s}"
+                            ),
+                            args,
+                        );
+                        // fused sparse layer, no compensator: the
+                        // backend may skip dropped-neuron activations
+                        // entirely — the genuinely-sub-dense compute
+                        // profile of the paper's kernels (synthetic
+                        // manifests only; AOT bundles do not ship this
+                        // variant and the engine falls back to the
+                        // split pipeline)
+                        let mut args = Vec::new();
+                        attn_weights(&mut args);
+                        ffn_weights(&mut args);
+                        pred_weights(&mut args);
+                        layer_inputs(&mut args, t, s);
+                        add_x(
+                            format!(
+                                "layer_sparse_nc_{aseg}k{k}_t{t}_s{s}"
+                            ),
+                            args,
+                        );
+                    }
                 }
             }
             let mut args = Vec::new();
@@ -546,12 +605,14 @@ impl Manifest {
                 ftile: spec.ftile,
                 max_ctx: spec.max_ctx,
                 buckets: spec.buckets.clone(),
+                attn_block: spec.attn_block,
             },
             weights_file: PathBuf::new(),
             weights,
             executables,
             k_grid,
             decode_k,
+            attn_grid: SYNTHETIC_ATTN_GRID.to_vec(),
             schedule: Schedule {
                 attention_masses: masses,
                 budgets,
@@ -580,6 +641,7 @@ impl Manifest {
             self.model.d_ffn,
             self.model.block,
             self.model.ftile,
+            self.model.attn_block,
         ] {
             h = hash::mix(h, v as u64);
         }
@@ -715,6 +777,19 @@ mod tests {
             format!("layer_sparse_nc_k{}_t1_s{}",
                     m.k_grid[0], m.model.buckets[0]),
             format!("layer_attn_t{block}_s{}", m.model.buckets[0]),
+            // attention-sparse variants: every grid level, full
+            // blocks only (T=1 steps stay dense-attention)
+            format!("layer_dense_a0_t{block}_s{}", m.model.buckets[0]),
+            format!("layer_dense_a50_t{block}_s{}", m.model.buckets[0]),
+            format!("layer_dense_a100_t{block}_s{}", m.model.buckets[0]),
+            format!(
+                "layer_sparse_a50_k{}_t{block}_s{}",
+                m.k_grid[0], m.model.buckets[0]
+            ),
+            format!(
+                "layer_sparse_nc_a50_k{}_t{block}_s{}",
+                m.k_grid[0], m.model.buckets[0]
+            ),
             format!("predictor_t{block}"),
             format!("ffn_acts_t{block}"),
             format!("ffn_dense_t{block}"),
@@ -751,6 +826,15 @@ mod tests {
         for pair in spans.windows(2) {
             assert!(pair[0].1 <= pair[1].0, "overlapping weights");
         }
+        // no attention-sparse executable exists at T=1 (tail + decode
+        // steps are always dense-attention), and the attn grid spans
+        // full coverage (a0) through sink+local-only (a100)
+        assert!(!m
+            .executables
+            .keys()
+            .any(|k| k.contains("_a") && k.contains("_t1_")));
+        assert_eq!(m.attn_grid, vec![0, 25, 50, 75, 100]);
+        assert_eq!(m.model.block % m.model.attn_block, 0);
         // the K grid is tiled and the schedule covers the paper budgets
         assert!(m.k_grid.iter().all(|k| k % m.model.ftile == 0));
         assert!(m.k_grid.contains(&m.model.d_ffn));

@@ -32,6 +32,15 @@
 //! * `layer_sparse_nc_k{K}_t{T}_s{S}` — the fused sparse layer without
 //!   the compensator: the only variant whose compute is genuinely
 //!   *sub-dense* (only selected neurons are ever touched; see below),
+//! * `layer_dense_a{A}_t{T}_s{S}` / `layer_sparse[_nc]_a{A}_k{K}_…` —
+//!   the same fused layers with *block-sparse attention*: keys pooled
+//!   into `attn_block`-sized blocks, a pooled-QK estimate ranks the
+//!   causal key blocks per query block per head, and each query row
+//!   visits only the selected blocks (always including a mandatory
+//!   sink + local band — [`crate::sparsity::attn`]). `A` is the percent
+//!   of optional blocks dropped; `a0` covers every causal block and is
+//!   bit-identical to the dense attention path by the shared
+//!   accumulation-order contract,
 //! * `layer_attn_t{T}_s{S}` / `predictor_t{T}` / `ffn_acts_t{T}` /
 //!   `ffn_dense_t{T}` / `ffn_sparse_ext_k{K}_t{T}` /
 //!   `ffn_sparse_nc_k{K}_t{T}` — the split ablation pipeline
@@ -83,14 +92,18 @@ const RMS_EPS: f32 = 1e-5;
 /// RoPE base frequency.
 const ROPE_THETA: f64 = 10000.0;
 
-/// One parsed executable name.
+/// One parsed executable name. `a` on the fused layer ops is the
+/// block-sparse attention drop level in percent (`None` = the original
+/// dense attention path, `Some(0)` = the sparse machinery at full
+/// coverage — bit-identical to dense by the accumulation-order
+/// contract, `Some(100)` = sink + local band only).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Op {
     Embed { t: usize },
     LmHead { t: usize },
-    LayerDense { t: usize, s: usize },
-    LayerSparse { k: usize, t: usize, s: usize },
-    LayerSparseNc { k: usize, t: usize, s: usize },
+    LayerDense { t: usize, s: usize, a: Option<usize> },
+    LayerSparse { k: usize, t: usize, s: usize, a: Option<usize> },
+    LayerSparseNc { k: usize, t: usize, s: usize, a: Option<usize> },
     LayerAttn { t: usize, s: usize },
     Predictor { t: usize },
     FfnActs { t: usize },
@@ -99,11 +112,14 @@ enum Op {
     FfnSparseNc { k: usize, t: usize },
 }
 
-/// Split `name` into its base and its `t`/`s`/`k` parameters
-/// (`layer_sparse_k64_t128_s512` → ("layer_sparse", k=64, t=128, s=512)).
-fn parse_name(name: &str) -> Option<(String, [Option<usize>; 3])> {
+/// Split `name` into its base and its `t`/`s`/`k`/`a` parameters
+/// (`layer_sparse_a50_k64_t128_s512` → ("layer_sparse", k=64, t=128,
+/// s=512, a=50)). Segments whose tail is not all digits (`attn`,
+/// `acts`, `sparse`, …) join the base, so the pre-existing names parse
+/// unchanged.
+fn parse_name(name: &str) -> Option<(String, [Option<usize>; 4])> {
     let mut base: Vec<&str> = Vec::new();
-    let mut tsk: [Option<usize>; 3] = [None, None, None];
+    let mut tska: [Option<usize>; 4] = [None, None, None, None];
     for seg in name.split('_') {
         let mut chars = seg.chars();
         let head = chars.next()?;
@@ -112,22 +128,23 @@ fn parse_name(name: &str) -> Option<(String, [Option<usize>; 3])> {
             't' => 0,
             's' => 1,
             'k' => 2,
-            _ => 3,
+            'a' => 3,
+            _ => 4,
         };
-        if slot < 3
+        if slot < 4
             && !rest.is_empty()
             && rest.bytes().all(|b| b.is_ascii_digit())
         {
-            tsk[slot] = rest.parse().ok();
+            tska[slot] = rest.parse().ok();
         } else {
             base.push(seg);
         }
     }
-    Some((base.join("_"), tsk))
+    Some((base.join("_"), tska))
 }
 
 fn parse_op(name: &str) -> Result<Op> {
-    let (base, [t, s, k]) =
+    let (base, [t, s, k, a]) =
         parse_name(name).ok_or_else(|| anyhow!("bad exe name {name}"))?;
     let need = |v: Option<usize>, what: &str| {
         v.ok_or_else(|| anyhow!("{name}: missing {what} parameter"))
@@ -138,16 +155,19 @@ fn parse_op(name: &str) -> Result<Op> {
         "layer_dense" => Op::LayerDense {
             t: need(t, "t")?,
             s: need(s, "s")?,
+            a,
         },
         "layer_sparse" => Op::LayerSparse {
             k: need(k, "k")?,
             t: need(t, "t")?,
             s: need(s, "s")?,
+            a,
         },
         "layer_sparse_nc" => Op::LayerSparseNc {
             k: need(k, "k")?,
             t: need(t, "t")?,
             s: need(s, "s")?,
+            a,
         },
         "layer_attn" => Op::LayerAttn {
             t: need(t, "t")?,
@@ -327,6 +347,76 @@ fn attn_query_row(q_row: &[f32], k_cache: &[f32], v_cache: &[f32],
             let wn = wgt / denom;
             for (o, &v) in out.iter_mut().zip(vv.iter()) {
                 *o += wn * v;
+            }
+        }
+    }
+}
+
+/// One query row of *block-sparse* causal GQA attention: identical to
+/// [`attn_query_row`] except that each head only visits the key
+/// positions inside its selected key blocks (`blocks_by_head[h]`,
+/// ascending — see [`crate::sparsity::attn`]), clamped per row to the
+/// causal frontier `j ≤ p`. The three passes (score/max, exp/denom,
+/// weighted V) run over that position subset in ascending order with
+/// the dense kernel's exact per-element accumulation order — so when
+/// the selection covers every causal block the f32 op sequence is
+/// *the same* as the dense kernel's and the output is bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn attn_query_row_sparse(q_row: &[f32], k_cache: &[f32], v_cache: &[f32],
+                         k_new: &[f32], v_new: &[f32], pos: usize,
+                         lr: usize, nh: usize, nkv: usize, dh: usize,
+                         scale: f32, out_row: &mut [f32],
+                         scores: &mut Vec<f32>,
+                         blocks_by_head: &[Vec<u32>], ab: usize) {
+    let group = nh / nkv;
+    let p = pos + lr; // absolute position of this query
+    for h in 0..nh {
+        let g = h / group; // the KV head this query head reads
+        let qv = &q_row[h * dh..(h + 1) * dh];
+        let blocks = &blocks_by_head[h];
+        scores.clear();
+        let mut max = f32::NEG_INFINITY;
+        for &b in blocks {
+            let lo = b as usize * ab;
+            let hi = (lo + ab).min(p + 1);
+            for j in lo..hi {
+                let kv = if j < pos {
+                    &k_cache[(j * nkv + g) * dh..(j * nkv + g + 1) * dh]
+                } else {
+                    let jr = j - pos;
+                    &k_new[(jr * nkv + g) * dh..(jr * nkv + g + 1) * dh]
+                };
+                let dot: f32 =
+                    qv.iter().zip(kv.iter()).map(|(a, b)| a * b).sum();
+                let sc = dot * scale;
+                max = max.max(sc);
+                scores.push(sc);
+            }
+        }
+        let mut denom = 0.0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - max).exp();
+            denom += *sc;
+        }
+        let out = &mut out_row[h * dh..(h + 1) * dh];
+        // re-walk the same blocks with a running score cursor — no
+        // position buffer, same per-element order as the dense pass
+        let mut cursor = 0usize;
+        for &b in blocks {
+            let lo = b as usize * ab;
+            let hi = (lo + ab).min(p + 1);
+            for j in lo..hi {
+                let vv = if j < pos {
+                    &v_cache[(j * nkv + g) * dh..(j * nkv + g + 1) * dh]
+                } else {
+                    let jr = j - pos;
+                    &v_new[(jr * nkv + g) * dh..(jr * nkv + g + 1) * dh]
+                };
+                let wn = scores[cursor] / denom;
+                cursor += 1;
+                for (o, &v) in out.iter_mut().zip(vv.iter()) {
+                    *o += wn * v;
+                }
             }
         }
     }
@@ -698,19 +788,55 @@ impl CpuBackend {
         }
     }
 
+    /// Compute the block-sparse attention plan for a chunk when the
+    /// dispatched executable carries an `a{pct}` drop level, or `None`
+    /// for the original dense attention path. Runs sequentially on the
+    /// dispatching thread (selection never depends on thread count);
+    /// the per-row kernels consume it read-only.
+    #[allow(clippy::too_many_arguments)]
+    fn attn_plan(&self, a: Option<usize>, q: &[f32], k_cache: &[f32],
+                 k_new: &[f32], pos: usize, t: usize)
+                 -> Result<Option<Vec<Vec<Vec<u32>>>>> {
+        let Some(pct) = a else { return Ok(None) };
+        let m = &self.manifest.model;
+        let ab = m.attn_block;
+        anyhow::ensure!(pct <= 100, "attention drop {pct}% out of range");
+        anyhow::ensure!(
+            ab > 0 && pos % ab == 0 && t % ab == 0,
+            "attention-sparse dispatch must be block-aligned \
+             (pos {pos}, t {t}, attn_block {ab})"
+        );
+        Ok(Some(crate::sparsity::attn::plan(
+            q,
+            k_cache,
+            k_new,
+            pos,
+            t,
+            m.n_heads,
+            m.n_kv_heads,
+            m.d_head,
+            ab,
+            pct as f64 / 100.0,
+        )))
+    }
+
     /// RMSNorm(x, rms1) → QKV (+ RoPE) → causal GQA attention → output
     /// projection → residual. Returns `(h, k_new, v_new)` where `h` is
     /// the post-attention residual stream `x + attn_out @ wo`. The
     /// score/softmax/weighted-sum loop parallelizes across query rows
     /// (each row's computation is untouched, so thread count never
-    /// changes a bit).
+    /// changes a bit). `a` is the block-sparse attention drop level in
+    /// percent (`None` = dense attention, the pre-existing path,
+    /// untouched op for op).
     #[allow(clippy::too_many_arguments)]
     fn attention_block(&self, l: usize, x: &[f32], t: usize, s: usize,
-                       pos: usize, k_cache: &[f32], v_cache: &[f32])
+                       pos: usize, k_cache: &[f32], v_cache: &[f32],
+                       a: Option<usize>)
                        -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
         let m = &self.manifest.model;
         let (d, nh, nkv, dh) =
             (m.d_model, m.n_heads, m.n_kv_heads, m.d_head);
+        let ab = m.attn_block;
         anyhow::ensure!(nh % nkv == 0, "n_heads must be divisible by n_kv");
         anyhow::ensure!(
             pos + t <= s,
@@ -731,27 +857,48 @@ impl CpuBackend {
                      pos + r);
         }
 
+        let plan = self.attn_plan(a, &q, k_cache, &k_new, pos, t)?;
         let scale = 1.0 / (dh as f32).sqrt();
         let mut attn = vec![0.0f32; t * nh * dh];
         // One query row of attention output — delegated to the shared
-        // per-row helper the fused batched step uses too.
+        // per-row helpers the fused batched step uses too. The sparse
+        // variant reads the precomputed plan of the row's query block.
         let attn_row = |r: usize, out_row: &mut [f32],
                         scores: &mut Vec<f32>| {
-            attn_query_row(
-                &q[r * nh * dh..(r + 1) * nh * dh],
-                k_cache,
-                v_cache,
-                &k_new,
-                &v_new,
-                pos,
-                r,
-                nh,
-                nkv,
-                dh,
-                scale,
-                out_row,
-                scores,
-            );
+            match &plan {
+                Some(p) => attn_query_row_sparse(
+                    &q[r * nh * dh..(r + 1) * nh * dh],
+                    k_cache,
+                    v_cache,
+                    &k_new,
+                    &v_new,
+                    pos,
+                    r,
+                    nh,
+                    nkv,
+                    dh,
+                    scale,
+                    out_row,
+                    scores,
+                    &p[r / ab],
+                    ab,
+                ),
+                None => attn_query_row(
+                    &q[r * nh * dh..(r + 1) * nh * dh],
+                    k_cache,
+                    v_cache,
+                    &k_new,
+                    &v_new,
+                    pos,
+                    r,
+                    nh,
+                    nkv,
+                    dh,
+                    scale,
+                    out_row,
+                    scores,
+                ),
+            }
         };
         if self.reference || t == 1 {
             let mut scores: Vec<f32> = Vec::new();
@@ -958,13 +1105,13 @@ impl CpuBackend {
                     self.mm(&xr, self.w("lm_head", d * vocab)?, t, d, vocab);
                 Ok(vec![Output { data: logits }])
             }
-            Op::LayerDense { t, s } => {
+            Op::LayerDense { t, s, a } => {
                 let x = f32_input(inputs, exe, "x")?;
                 let kc = f32_input(inputs, exe, "k_cache")?;
                 let vc = f32_input(inputs, exe, "v_cache")?;
                 let pos = i32_input(inputs, exe, "pos")?[0] as usize;
                 let (h, k_new, v_new) =
-                    self.attention_block(layer, x, t, s, pos, kc, vc)?;
+                    self.attention_block(layer, x, t, s, pos, kc, vc, a)?;
                 let acts = self.ffn_activations(layer, &h, t)?;
                 let all: Vec<i32> = (0..f as i32).collect();
                 let y = self.down_proj(layer, &acts, t, &all, None)?;
@@ -974,13 +1121,13 @@ impl CpuBackend {
                     Output { data: v_new },
                 ])
             }
-            Op::LayerSparse { k, t, s } => {
+            Op::LayerSparse { k, t, s, a } => {
                 let x = f32_input(inputs, exe, "x")?;
                 let kc = f32_input(inputs, exe, "k_cache")?;
                 let vc = f32_input(inputs, exe, "v_cache")?;
                 let pos = i32_input(inputs, exe, "pos")?[0] as usize;
                 let (h, k_new, v_new) =
-                    self.attention_block(layer, x, t, s, pos, kc, vc)?;
+                    self.attention_block(layer, x, t, s, pos, kc, vc, a)?;
                 let scores = self.predictor_scores(layer, &h, t)?;
                 let idx = top_k_indices(&scores, k.min(f));
                 let acts = self.ffn_activations(layer, &h, t)?;
@@ -1000,13 +1147,13 @@ impl CpuBackend {
                     Output { data: v_new },
                 ])
             }
-            Op::LayerSparseNc { k, t, s } => {
+            Op::LayerSparseNc { k, t, s, a } => {
                 let x = f32_input(inputs, exe, "x")?;
                 let kc = f32_input(inputs, exe, "k_cache")?;
                 let vc = f32_input(inputs, exe, "v_cache")?;
                 let pos = i32_input(inputs, exe, "pos")?[0] as usize;
                 let (h, k_new, v_new) =
-                    self.attention_block(layer, x, t, s, pos, kc, vc)?;
+                    self.attention_block(layer, x, t, s, pos, kc, vc, a)?;
                 let scores = self.predictor_scores(layer, &h, t)?;
                 let idx = top_k_indices(&scores, k.min(f));
                 let y = self.ffn_sparse_only(layer, &h, t, &idx)?;
@@ -1021,8 +1168,10 @@ impl CpuBackend {
                 let kc = f32_input(inputs, exe, "k_cache")?;
                 let vc = f32_input(inputs, exe, "v_cache")?;
                 let pos = i32_input(inputs, exe, "pos")?[0] as usize;
+                // the split ablation pipeline keeps dense attention
                 let (h, k_new, v_new) =
-                    self.attention_block(layer, x, t, s, pos, kc, vc)?;
+                    self.attention_block(layer, x, t, s, pos, kc, vc,
+                                         None)?;
                 Ok(vec![
                     Output { data: h },
                     Output { data: k_new },
@@ -1170,6 +1319,30 @@ impl CpuBackend {
         }
 
         // ---- per-row attention over per-sequence KV views ----------
+        // Block-sparse selection plans are computed sequentially here,
+        // one per attention-sparse row, *before* the row-parallel loop
+        // — so the selection (and hence every output bit) is invariant
+        // under thread count, exactly as in the sequential dispatch.
+        let ab = m.attn_block;
+        let mut plans: Vec<Option<Vec<Vec<Vec<u32>>>>> =
+            Vec::with_capacity(rows.len());
+        for (i, (r, op)) in rows.iter().zip(&ops).enumerate() {
+            let a = match op {
+                Op::LayerDense { a, .. }
+                | Op::LayerSparse { a, .. }
+                | Op::LayerSparseNc { a, .. } => *a,
+                _ => unreachable!("checked by batch_fusable"),
+            };
+            let span = offs[i];
+            plans.push(self.attn_plan(
+                a,
+                &q[span * nh * dh..(span + r.t) * nh * dh],
+                r.k_cache,
+                &k_new_all[span * nkv * dh..(span + r.t) * nkv * dh],
+                r.pos,
+                r.t,
+            )?);
+        }
         let seq_of: Vec<usize> = rows
             .iter()
             .enumerate()
@@ -1198,22 +1371,42 @@ impl CpuBackend {
                 let span = offs[i] * nkv * dh;
                 let kn = &k_new_all[span..span + r.t * nkv * dh];
                 let vn = &v_new_all[span..span + r.t * nkv * dh];
+                let lr = g - offs[i];
                 let mut scores: Vec<f32> = Vec::new();
-                attn_query_row(
-                    &q[g * nh * dh..(g + 1) * nh * dh],
-                    r.k_cache,
-                    r.v_cache,
-                    kn,
-                    vn,
-                    r.pos,
-                    g - offs[i],
-                    nh,
-                    nkv,
-                    dh,
-                    scale,
-                    out_row,
-                    &mut scores,
-                );
+                match &plans[i] {
+                    Some(plan) => attn_query_row_sparse(
+                        &q[g * nh * dh..(g + 1) * nh * dh],
+                        r.k_cache,
+                        r.v_cache,
+                        kn,
+                        vn,
+                        r.pos,
+                        lr,
+                        nh,
+                        nkv,
+                        dh,
+                        scale,
+                        out_row,
+                        &mut scores,
+                        &plan[lr / ab],
+                        ab,
+                    ),
+                    None => attn_query_row(
+                        &q[g * nh * dh..(g + 1) * nh * dh],
+                        r.k_cache,
+                        r.v_cache,
+                        kn,
+                        vn,
+                        r.pos,
+                        lr,
+                        nh,
+                        nkv,
+                        dh,
+                        scale,
+                        out_row,
+                        &mut scores,
+                    ),
+                }
             });
         }
         let proj = self.mm(&attn, self.lw(layer, "wo", nh * dh * d)?,
@@ -1469,15 +1662,15 @@ mod tests {
         assert_eq!(parse_op("lm_head_t1").unwrap(), Op::LmHead { t: 1 });
         assert_eq!(
             parse_op("layer_dense_t128_s512").unwrap(),
-            Op::LayerDense { t: 128, s: 512 }
+            Op::LayerDense { t: 128, s: 512, a: None }
         );
         assert_eq!(
             parse_op("layer_sparse_k64_t1_s256").unwrap(),
-            Op::LayerSparse { k: 64, t: 1, s: 256 }
+            Op::LayerSparse { k: 64, t: 1, s: 256, a: None }
         );
         assert_eq!(
             parse_op("layer_sparse_nc_k64_t128_s256").unwrap(),
-            Op::LayerSparseNc { k: 64, t: 128, s: 256 }
+            Op::LayerSparseNc { k: 64, t: 128, s: 256, a: None }
         );
         assert_eq!(
             parse_op("ffn_sparse_ext_k96_t128").unwrap(),
@@ -1493,6 +1686,41 @@ mod tests {
         );
         assert!(parse_op("warp_drive_t4").is_err());
         assert!(parse_op("layer_dense_t128").is_err(), "missing s");
+    }
+
+    /// The `a{pct}` attention-sparsity segment parses on the fused
+    /// layer ops — including `a0`, a *distinct* name from the base
+    /// (sparse machinery at full coverage vs the untouched dense
+    /// path) — and names with an `attn`/`acts` segment still route the
+    /// non-numeric segment into the base, not the `a` slot.
+    #[test]
+    fn name_parsing_attn_sparsity() {
+        assert_eq!(
+            parse_op("layer_dense_a50_t128_s512").unwrap(),
+            Op::LayerDense { t: 128, s: 512, a: Some(50) }
+        );
+        assert_eq!(
+            parse_op("layer_dense_a0_t128_s512").unwrap(),
+            Op::LayerDense { t: 128, s: 512, a: Some(0) }
+        );
+        assert_eq!(
+            parse_op("layer_sparse_a25_k64_t128_s256").unwrap(),
+            Op::LayerSparse { k: 64, t: 128, s: 256, a: Some(25) }
+        );
+        assert_eq!(
+            parse_op("layer_sparse_nc_a100_k64_t128_s256").unwrap(),
+            Op::LayerSparseNc { k: 64, t: 128, s: 256, a: Some(100) }
+        );
+        // `attn` / `acts` start with 'a' but are not digit tails —
+        // they stay in the base name exactly as before
+        assert_eq!(
+            parse_op("layer_attn_t128_s512").unwrap(),
+            Op::LayerAttn { t: 128, s: 512 }
+        );
+        assert_eq!(
+            parse_op("ffn_acts_t128").unwrap(),
+            Op::FfnActs { t: 128 }
+        );
     }
 
     #[test]

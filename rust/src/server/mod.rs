@@ -64,6 +64,11 @@ pub struct Server {
     /// Sparsity applied when a request doesn't specify one
     /// (None = dense).
     pub default_sparsity: Option<f64>,
+    /// Attention block drop applied when a request doesn't specify
+    /// `attn_sparsity` (None = dense attention). Orthogonal to FFN
+    /// sparsity; the prefix cache keys on it, so mixed-config traffic
+    /// never shares KV across attention configurations.
+    pub default_attn_sparsity: Option<f64>,
 }
 
 /// A parsed HTTP request (just enough of HTTP/1.1).
@@ -300,10 +305,15 @@ impl Server {
             .get("sparsity")
             .and_then(|v| v.as_f64())
             .or(self.default_sparsity);
-        let cfg = match sparsity {
+        let mut cfg = match sparsity {
             Some(s) if s > 0.0 => SparsityConfig::fastforward(s),
             _ => SparsityConfig::dense(),
         };
+        cfg.attn_sparsity = j
+            .get("attn_sparsity")
+            .and_then(|v| v.as_f64())
+            .or(self.default_attn_sparsity)
+            .filter(|&a| a > 0.0);
         let stream_mode = j
             .get("stream")
             .and_then(|v| v.as_bool())

@@ -1,0 +1,337 @@
+//! Block-sparse attention selection (FlashPrefill/UniPrefill-style):
+//! keys are pooled into fixed-size blocks, each query-block×key-block
+//! pair is scored with a cheap pooled-QK estimate, and per query block
+//! per head only the top-scoring key blocks are attended — always
+//! including a mandatory *sink + local* streaming band so early and
+//! recent context survive regardless of scores.
+//!
+//! Everything here is **pure selection**: the functions decide *which*
+//! key blocks a query block reads, never the attention values
+//! themselves. The CPU kernel (`runtime/cpu.rs`) then iterates the
+//! selected blocks in ascending order with the dense kernel's exact
+//! per-element accumulation order, so a selection covering every causal
+//! block reproduces the dense output **bit for bit** — the oracle
+//! contract `tests/backend_conformance.rs` pins. Selection runs
+//! sequentially on the dispatching thread before any row-parallel work,
+//! so it is invariant under thread count by construction.
+
+/// Mandatory sink band: the first `SINK_BLOCKS` key blocks are always
+/// attended (attention-sink positions, StreamingLLM-style).
+pub const SINK_BLOCKS: usize = 1;
+
+/// Mandatory local band: the last `LOCAL_BLOCKS` causal key blocks
+/// (the query's own block and its predecessor) are always attended.
+pub const LOCAL_BLOCKS: usize = 2;
+
+/// Select the key blocks one (query block, head) pair attends.
+///
+/// `scores[b]` is the pooled-QK estimate for causal key block `b`
+/// (`b ∈ 0..=qb`, where `qb` is the query block's absolute index).
+/// `drop ∈ [0, 1]` is the fraction of *optional* candidates discarded:
+/// the sink + local band is always kept, and of the remaining causal
+/// blocks the top `ceil((1 − drop) · n_optional)` by score survive
+/// (ties broken toward the lower block index). `drop == 0.0` therefore
+/// selects every causal block and `drop == 1.0` degenerates to the
+/// sink + local band alone. Returns ascending, duplicate-free indices.
+pub fn select_blocks(scores: &[f32], qb: usize, drop: f64) -> Vec<u32> {
+    assert!(scores.len() > qb, "need a score for every causal block");
+    assert!((0.0..=1.0).contains(&drop), "drop must be in [0, 1]");
+    let mandatory = |b: usize| -> bool {
+        b < SINK_BLOCKS || b + LOCAL_BLOCKS > qb
+    };
+    let optional: Vec<usize> =
+        (0..=qb).filter(|&b| !mandatory(b)).collect();
+    let keep = ((1.0 - drop) * optional.len() as f64)
+        .ceil()
+        .min(optional.len() as f64) as usize;
+    let mut ranked = optional;
+    // score descending, then block index ascending — a total order, so
+    // the pick is deterministic even under tied pooled scores
+    ranked.sort_by(|&a, &b| {
+        scores[b]
+            .total_cmp(&scores[a])
+            .then_with(|| a.cmp(&b))
+    });
+    ranked.truncate(keep);
+    let mut out: Vec<u32> = (0..=qb)
+        .filter(|&b| mandatory(b))
+        .map(|b| b as u32)
+        .chain(ranked.into_iter().map(|b| b as u32))
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// Mean-pool the keys of a chunk's KV view into per-block per-KV-head
+/// vectors: block `b`, head `g` gets the mean of key rows
+/// `b·ab ..< min((b+1)·ab, pos+t)`. Cached rows come from `k_cache`
+/// (layout `[s, nkv, dh]`, rows `0..pos` valid), fresh rows from
+/// `k_new` (layout `[t, nkv, dh]`, already roped). Returns
+/// `[n_blocks, nkv, dh]` row-major.
+#[allow(clippy::too_many_arguments)]
+pub fn pool_keys(k_cache: &[f32], k_new: &[f32], pos: usize, t: usize,
+                 nkv: usize, dh: usize, ab: usize) -> Vec<f32> {
+    let n_keys = pos + t;
+    let n_blocks = n_keys.div_ceil(ab);
+    let mut out = vec![0.0f32; n_blocks * nkv * dh];
+    for b in 0..n_blocks {
+        let lo = b * ab;
+        let hi = ((b + 1) * ab).min(n_keys);
+        let inv = 1.0 / (hi - lo) as f32;
+        for j in lo..hi {
+            let row = if j < pos {
+                &k_cache[j * nkv * dh..(j + 1) * nkv * dh]
+            } else {
+                let jr = j - pos;
+                &k_new[jr * nkv * dh..(jr + 1) * nkv * dh]
+            };
+            let dst = &mut out[b * nkv * dh..(b + 1) * nkv * dh];
+            for (o, &v) in dst.iter_mut().zip(row.iter()) {
+                *o += v * inv;
+            }
+        }
+    }
+    out
+}
+
+/// Mean-pool a chunk's roped queries (`[t, nh·dh]`) into per-block
+/// per-head vectors, `[t/ab, nh, dh]` row-major.
+pub fn pool_queries(q: &[f32], t: usize, nh: usize, dh: usize, ab: usize)
+                    -> Vec<f32> {
+    assert_eq!(t % ab, 0, "query rows must fill whole blocks");
+    let n_blocks = t / ab;
+    let mut out = vec![0.0f32; n_blocks * nh * dh];
+    let inv = 1.0 / ab as f32;
+    for b in 0..n_blocks {
+        for r in b * ab..(b + 1) * ab {
+            let row = &q[r * nh * dh..(r + 1) * nh * dh];
+            let dst = &mut out[b * nh * dh..(b + 1) * nh * dh];
+            for (o, &v) in dst.iter_mut().zip(row.iter()) {
+                *o += v * inv;
+            }
+        }
+    }
+    out
+}
+
+/// Build the block-selection plan for one chunk of `t` query rows at
+/// absolute position `pos`: `plan[lqb][h]` is the ascending list of
+/// key-block indices query block `lqb` (local to this chunk) attends
+/// through head `h`. `pos` and `t` must both be multiples of the
+/// attention block size `ab` — the engine only names attention-sparse
+/// executables for aligned full prefill blocks, whose positions are
+/// always block multiples.
+#[allow(clippy::too_many_arguments)]
+pub fn plan(q: &[f32], k_cache: &[f32], k_new: &[f32], pos: usize,
+            t: usize, nh: usize, nkv: usize, dh: usize, ab: usize,
+            drop: f64) -> Vec<Vec<Vec<u32>>> {
+    assert!(ab > 0, "attention block size must be positive");
+    assert_eq!(pos % ab, 0, "chunk start must be block-aligned");
+    assert_eq!(t % ab, 0, "chunk length must fill whole blocks");
+    let group = nh / nkv;
+    let pooled_k = pool_keys(k_cache, k_new, pos, t, nkv, dh, ab);
+    let pooled_q = pool_queries(q, t, nh, dh, ab);
+    let n_qb = t / ab;
+    let mut out = Vec::with_capacity(n_qb);
+    for lqb in 0..n_qb {
+        let qb = pos / ab + lqb; // absolute query-block index
+        let mut heads = Vec::with_capacity(nh);
+        for h in 0..nh {
+            let g = h / group;
+            let qv = &pooled_q
+                [(lqb * nh + h) * dh..(lqb * nh + h + 1) * dh];
+            let scores: Vec<f32> = (0..=qb)
+                .map(|b| {
+                    let kv = &pooled_k
+                        [(b * nkv + g) * dh..(b * nkv + g + 1) * dh];
+                    qv.iter().zip(kv.iter()).map(|(a, b)| a * b).sum()
+                })
+                .collect();
+            heads.push(select_blocks(&scores, qb, drop));
+        }
+        out.push(heads);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn rand_scores(r: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (r.f64() * 8.0 - 4.0) as f32).collect()
+    }
+
+    /// Causality: no selected block ever exceeds the query block.
+    #[test]
+    fn prop_selection_is_causal() {
+        check("attn-select-causal", 300, |r| {
+            let qb = r.range(0, 40);
+            let drop = r.f64();
+            let scores = rand_scores(r, qb + 1);
+            let sel = select_blocks(&scores, qb, drop);
+            crate::prop_assert!(
+                sel.iter().all(|&b| (b as usize) <= qb),
+                "future key block selected: {sel:?} at qb={qb}"
+            );
+            for w in sel.windows(2) {
+                crate::prop_assert!(
+                    w[0] < w[1],
+                    "not strictly ascending: {sel:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// The sink and local bands survive regardless of scores — even
+    /// when every optional block outscores them.
+    #[test]
+    fn prop_sink_and_local_always_present() {
+        check("attn-select-mandatory", 300, |r| {
+            let qb = r.range(0, 40);
+            let drop = r.f64();
+            // adversarial scores: mandatory blocks score worst
+            let scores: Vec<f32> = (0..=qb)
+                .map(|b| {
+                    if b < SINK_BLOCKS || b + LOCAL_BLOCKS > qb {
+                        -1e9
+                    } else {
+                        (r.f64() * 4.0) as f32
+                    }
+                })
+                .collect();
+            let sel = select_blocks(&scores, qb, drop);
+            for b in 0..SINK_BLOCKS.min(qb + 1) {
+                crate::prop_assert!(
+                    sel.contains(&(b as u32)),
+                    "sink block {b} dropped: {sel:?}"
+                );
+            }
+            for b in (qb + 1).saturating_sub(LOCAL_BLOCKS)..=qb {
+                crate::prop_assert!(
+                    sel.contains(&(b as u32)),
+                    "local block {b} dropped at qb={qb}: {sel:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// drop = 1.0 (keep zero optional blocks) degenerates to exactly
+    /// the sink + local band; drop = 0.0 keeps every causal block.
+    #[test]
+    fn prop_degenerate_drops() {
+        check("attn-select-degenerate", 200, |r| {
+            let qb = r.range(0, 40);
+            let scores = rand_scores(r, qb + 1);
+            let all = select_blocks(&scores, qb, 0.0);
+            crate::prop_assert!(
+                all == (0..=qb as u32).collect::<Vec<_>>(),
+                "drop=0 must keep all causal blocks: {all:?}"
+            );
+            let band = select_blocks(&scores, qb, 1.0);
+            let expect: Vec<u32> = (0..=qb)
+                .filter(|&b| b < SINK_BLOCKS || b + LOCAL_BLOCKS > qb)
+                .map(|b| b as u32)
+                .collect();
+            crate::prop_assert!(
+                band == expect,
+                "drop=1 must keep only sink+local: {band:?} vs {expect:?}"
+            );
+            Ok(())
+        });
+    }
+
+    /// Selection is a pure function of scores — two invocations agree,
+    /// and a plan built from the same inputs is identical. (The kernel
+    /// computes plans sequentially before any row-parallel work, so
+    /// thread count cannot enter the selection at all; the conformance
+    /// suite re-checks the end-to-end claim at threads {1, 4}.)
+    #[test]
+    fn prop_selection_deterministic() {
+        check("attn-select-deterministic", 100, |r| {
+            let qb = r.range(0, 30);
+            let drop = r.f64();
+            let scores = rand_scores(r, qb + 1);
+            crate::prop_assert!(
+                select_blocks(&scores, qb, drop)
+                    == select_blocks(&scores, qb, drop),
+                "selection not deterministic"
+            );
+            Ok(())
+        });
+    }
+
+    /// Kept-count arithmetic: the selection size is the mandatory band
+    /// plus `ceil((1 − drop) · n_optional)` survivors.
+    #[test]
+    fn prop_keep_count() {
+        check("attn-select-count", 200, |r| {
+            let qb = r.range(0, 60);
+            let drop = r.f64();
+            let scores = rand_scores(r, qb + 1);
+            let n_mand = (0..=qb)
+                .filter(|&b| b < SINK_BLOCKS || b + LOCAL_BLOCKS > qb)
+                .count();
+            let n_opt = qb + 1 - n_mand;
+            let keep = ((1.0 - drop) * n_opt as f64).ceil() as usize;
+            let sel = select_blocks(&scores, qb, drop);
+            crate::prop_assert!(
+                sel.len() == n_mand + keep.min(n_opt),
+                "size {} != mandatory {n_mand} + keep {keep}",
+                sel.len()
+            );
+            Ok(())
+        });
+    }
+
+    /// Plans over a seeded KV view are deterministic and causal, and a
+    /// drop of 0.0 covers every causal block for every head.
+    #[test]
+    fn prop_plan_invariants() {
+        check("attn-plan", 40, |r| {
+            let (nh, nkv, dh, ab) = (4usize, 2usize, 8usize, 16usize);
+            let n_blocks = r.range(1, 5);
+            let pos = r.range(0, 4) * ab;
+            let t = n_blocks * ab;
+            let q: Vec<f32> = (0..t * nh * dh)
+                .map(|_| (r.f64() * 2.0 - 1.0) as f32)
+                .collect();
+            let kc: Vec<f32> = (0..pos * nkv * dh)
+                .map(|_| (r.f64() * 2.0 - 1.0) as f32)
+                .collect();
+            let kn: Vec<f32> = (0..t * nkv * dh)
+                .map(|_| (r.f64() * 2.0 - 1.0) as f32)
+                .collect();
+            let drop = r.f64();
+            let p = plan(&q, &kc, &kn, pos, t, nh, nkv, dh, ab, drop);
+            let p2 = plan(&q, &kc, &kn, pos, t, nh, nkv, dh, ab, drop);
+            crate::prop_assert!(p == p2, "plan not deterministic");
+            crate::prop_assert!(p.len() == t / ab, "plan block count");
+            for (lqb, heads) in p.iter().enumerate() {
+                let qb = pos / ab + lqb;
+                crate::prop_assert!(heads.len() == nh, "head count");
+                for sel in heads {
+                    crate::prop_assert!(
+                        sel.iter().all(|&b| (b as usize) <= qb),
+                        "plan selected a future block"
+                    );
+                }
+            }
+            let full = plan(&q, &kc, &kn, pos, t, nh, nkv, dh, ab, 0.0);
+            for (lqb, heads) in full.iter().enumerate() {
+                let qb = pos / ab + lqb;
+                for sel in heads {
+                    crate::prop_assert!(
+                        *sel == (0..=qb as u32).collect::<Vec<_>>(),
+                        "drop=0 plan must cover all causal blocks"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

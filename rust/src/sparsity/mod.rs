@@ -1,8 +1,9 @@
 //! FastForward sparsity machinery: the layerwise schedule (Algorithm 1),
-//! expert mask selection, and the baseline predictors from the paper's
-//! ablations (per-block-dynamic oracle, GRIFFIN first-block-static, CATS
-//! thresholding).
+//! expert mask selection, block-sparse attention selection, and the
+//! baseline predictors from the paper's ablations (per-block-dynamic
+//! oracle, GRIFFIN first-block-static, CATS thresholding).
 
+pub mod attn;
 pub mod masks;
 pub mod schedule;
 

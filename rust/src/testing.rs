@@ -183,6 +183,45 @@ pub fn decode_bench_batched(engine: &Engine,
     }
 }
 
+// ---------------------------------------------------------------------------
+// Shared attention-bench harness (tier-1 attn perf gate + fig11 bench)
+// ---------------------------------------------------------------------------
+
+/// Attention-heavy prefill-bench model shared by the tier-1 sparse-
+/// attention perf gate (`tests/perf_smoke.rs`) and the fig11 bench:
+/// long context with a deliberately small FFN (`d_ffn` 128), so at
+/// T = 2048 the O(T²) score/softmax/weighted-V loop dominates the
+/// prefill wall-clock — the regime where dropping key blocks pays off.
+/// One definition, so the gate and the bench always measure the same
+/// model.
+pub fn attn_bench_spec() -> SyntheticSpec {
+    SyntheticSpec {
+        name: "ff-perf-attn".to_string(),
+        n_layers: 2,
+        d_ffn: 128,
+        max_ctx: 2048,
+        buckets: vec![512, 1024, 2048],
+        ..SyntheticSpec::default()
+    }
+}
+
+/// Dense-FFN config with block-sparse attention at `drop` (`None` =
+/// fully dense attention) — the two ends the attention gate and the
+/// fig11 sweep compare.
+pub fn attn_bench_cfg(drop: Option<f64>) -> SparsityConfig {
+    let mut cfg = SparsityConfig::dense();
+    cfg.attn_sparsity = drop;
+    cfg
+}
+
+/// One timed prefill of a `len`-token prompt under `cfg` (result
+/// dropped; deterministic prompt so every run does identical work).
+pub fn attn_bench_prefill(engine: &Engine, len: usize,
+                          cfg: &SparsityConfig) {
+    let toks: Vec<i32> = (0..len).map(|i| (i % 250) as i32 + 1).collect();
+    engine.prefill(&toks, cfg).expect("attn bench prefill");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -14,6 +14,12 @@
 //! compensator, across prefill block boundaries (tail-only prompts,
 //! exact-block prompts, block+1, multi-block + ragged tail).
 //!
+//! The block-sparse attention axis rides the same contract: a drop of
+//! 0.0 (all causal key blocks kept) must equal the dense path bit for
+//! bit, standalone and inside B=3 mixed batches, and genuinely sparse
+//! drops (0.5, sink+local-only) must be deterministic and identical
+//! between the fast backend and the reference at every thread count.
+//!
 //! Also hosts the `Rc → Arc` migration regressions: `Manifest` /
 //! `WeightStore` are `Send + Sync`, and `ExecutorPool`'s backend
 //! factory shares one weight-store allocation across replicas instead
@@ -53,6 +59,7 @@ fn uniform_cfg(sparsity: f64, compensator: bool) -> SparsityConfig {
         compensator,
         source: ExpertSource::Trained,
         sparse_decode: false,
+        attn_sparsity: None,
     }
 }
 
@@ -417,6 +424,166 @@ fn step_batch_on_reference_backend_matches_itself() {
     let want = run_sequential(&reference, &seqs, 2);
     let got = run_batched(&reference, &seqs, 2, 4);
     assert_traces_bit_identical(&want, &got, "reference step-batch");
+}
+
+// ---------------------------------------------------------------------------
+// Block-sparse attention conformance axis
+// ---------------------------------------------------------------------------
+
+/// Dense-FFN config with block-sparse attention at `drop` — `0.0`
+/// keeps every causal key block (the oracle case: bit-identical to
+/// dense by the accumulation-order contract), `1.0` keeps only the
+/// mandatory sink + local band.
+fn attn_cfg(drop: f64) -> SparsityConfig {
+    let mut cfg = SparsityConfig::dense();
+    cfg.attn_sparsity = Some(drop);
+    cfg
+}
+
+/// Prompt lengths straddling the attention-block (64) and prefill-block
+/// (128) boundaries: tail-only lengths around one attention block, one
+/// exact prefill block (two attention blocks), and multi-block +
+/// ragged tail.
+fn attn_lens(ab: usize, block: usize) -> [usize; 5] {
+    [ab - 1, ab, ab + 1, block, 2 * block + 44]
+}
+
+/// The attention oracle contract: `attn_sparsity = 0.0` routes through
+/// the block-sparse machinery at full coverage, and must reproduce the
+/// dense path **bit-identically** (logits + KV) — on the reference
+/// oracle and on the fast backend at threads ∈ {1, 4}, standalone,
+/// with and without FFN sparsity riding along.
+#[test]
+fn attn_all_blocks_matches_dense_bit_identically() {
+    let reference = testing::cpu_engine_reference();
+    let fasts = [
+        ("threads=1", testing::cpu_engine_threads(1)),
+        ("threads=4", testing::cpu_engine_threads(4)),
+    ];
+    let ab = reference.manifest().model.attn_block;
+    let block = reference.block();
+    for &len in &attn_lens(ab, block) {
+        let prompt = corpus_prompt(len);
+        let dense = reference
+            .prefill(&prompt, &SparsityConfig::dense())
+            .unwrap();
+        let full = reference.prefill(&prompt, &attn_cfg(0.0)).unwrap();
+        assert_prefill_bit_identical(
+            &dense,
+            &full,
+            &format!("attn=0.0 reference len={len}"),
+        );
+        for (threads, fast) in &fasts {
+            let got = fast.prefill(&prompt, &attn_cfg(0.0)).unwrap();
+            assert_prefill_bit_identical(
+                &dense,
+                &got,
+                &format!("attn=0.0 {threads} len={len}"),
+            );
+        }
+        // composed with FFN sparsity: attn=0.0 on top of the paper's
+        // full method must equal the method with dense attention
+        let ff = SparsityConfig::fastforward(0.5);
+        let mut ff_attn = ff.clone();
+        ff_attn.attn_sparsity = Some(0.0);
+        let want = reference.prefill(&prompt, &ff).unwrap();
+        for (threads, fast) in &fasts {
+            let got = fast.prefill(&prompt, &ff_attn).unwrap();
+            assert_prefill_bit_identical(
+                &want,
+                &got,
+                &format!("ff50+attn=0.0 {threads} len={len}"),
+            );
+        }
+    }
+}
+
+/// Genuinely sparse attention (50% drop, and sink+local-only) agrees
+/// bit-for-bit between the fast backend at threads ∈ {1, 4} and the
+/// sequential reference, and is deterministic across repeated runs —
+/// block selection happens sequentially before any row-parallel work,
+/// so thread count can never reach it.
+#[test]
+fn attn_sparse_matches_reference_and_is_deterministic() {
+    let reference = testing::cpu_engine_reference();
+    let fasts = [
+        ("threads=1", testing::cpu_engine_threads(1)),
+        ("threads=4", testing::cpu_engine_threads(4)),
+    ];
+    let ab = reference.manifest().model.attn_block;
+    let block = reference.block();
+    for &drop in &[0.5, 1.0] {
+        for &len in &attn_lens(ab, block) {
+            let prompt = corpus_prompt(len);
+            let cfg = attn_cfg(drop);
+            let want = reference.prefill(&prompt, &cfg).unwrap();
+            let again = reference.prefill(&prompt, &cfg).unwrap();
+            assert_prefill_bit_identical(
+                &want,
+                &again,
+                &format!("attn={drop} reference rerun len={len}"),
+            );
+            for (threads, fast) in &fasts {
+                let got = fast.prefill(&prompt, &cfg).unwrap();
+                assert_prefill_bit_identical(
+                    &want,
+                    &got,
+                    &format!("attn={drop} {threads} len={len}"),
+                );
+                let got2 = fast.prefill(&prompt, &cfg).unwrap();
+                assert_prefill_bit_identical(
+                    &got,
+                    &got2,
+                    &format!("attn={drop} {threads} rerun len={len}"),
+                );
+            }
+        }
+    }
+}
+
+/// Mixed prompts + configs exercising the attention axis inside one
+/// batch: an all-blocks (oracle) row, the paper's method with 50%
+/// attention drop on top, and a plain dense row.
+fn attn_batch_seqs(block: usize) -> Vec<(Vec<i32>, SparsityConfig)> {
+    let mut ff = SparsityConfig::fastforward(0.5);
+    ff.attn_sparsity = Some(0.5);
+    vec![
+        (corpus_prompt(2 * block + 44), attn_cfg(0.0)),
+        (corpus_prompt(block + 1), ff),
+        (corpus_prompt(40), SparsityConfig::dense()),
+    ]
+}
+
+/// B = 3 mixed prefill-chunk/decode batches with attention-sparse rows
+/// keep the bit-identity guarantee: batched == sequential reference,
+/// at threads ∈ {1, 4}, and the all-blocks row inside the batch equals
+/// a standalone dense run of the same prompt.
+#[test]
+fn attn_sparse_step_batch_matches_sequential_bit_identically() {
+    let reference = testing::cpu_engine_reference();
+    let block = reference.block();
+    let fasts = [
+        ("threads=1", testing::cpu_engine_threads(1)),
+        ("threads=4", testing::cpu_engine_threads(4)),
+    ];
+    let seqs = attn_batch_seqs(block);
+    let want = run_sequential(&reference, &seqs, 3);
+    for (name, fast) in &fasts {
+        let got = run_batched(fast, &seqs, 3, 4);
+        assert_traces_bit_identical(
+            &want,
+            &got,
+            &format!("attn B=3 {name}"),
+        );
+    }
+    // the attn=0.0 member is indistinguishable from dense end to end
+    let dense_solo = vec![(seqs[0].0.clone(), SparsityConfig::dense())];
+    let dense = run_sequential(&reference, &dense_solo, 3);
+    assert_traces_bit_identical(
+        &dense,
+        &want[0..1],
+        "attn=0.0 batch member vs standalone dense",
+    );
 }
 
 // ---------------------------------------------------------------------------

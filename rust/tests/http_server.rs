@@ -67,6 +67,7 @@ fn full_http_stack() {
         metrics: metrics.clone(),
         tokenizer: Tokenizer::new(384),
         default_sparsity: Some(0.5),
+        default_attn_sparsity: None,
     });
     let addr2 = addr.clone();
     std::thread::spawn(move || {

@@ -117,6 +117,77 @@ fn bucket_growth_is_transparent() {
     }
 }
 
+/// The combined fast path end to end: FFN sparsity 0.5 *and* block-
+/// sparse attention 0.5 together (the CLI's `--sparsity 0.5
+/// --attn-sparsity 0.5`). Prefill is deterministic and finite, decode
+/// continues over the sparse-prefilled KV, prefix-cache adoption under
+/// the combined config is numerically invisible, and cached KV never
+/// crosses attention configurations.
+#[test]
+fn combined_ffn_and_attention_sparsity_end_to_end() {
+    use fastforward::kvcache::{PagedAllocator, PrefixCache};
+    let engine = testing::cpu_engine();
+    let block = engine.block();
+    let mut cfg = SparsityConfig::fastforward(0.5);
+    cfg.attn_sparsity = Some(0.5);
+    let prompt = corpus_prompt(3 * block + 21);
+
+    let cold = engine.prefill(&prompt, &cfg).unwrap();
+    assert_eq!(cold.timing.blocks, 3);
+    assert!(cold.last_logits.iter().all(|x| x.is_finite()));
+    let again = engine.prefill(&prompt, &cfg).unwrap();
+    assert_eq!(
+        cold.last_logits, again.last_logits,
+        "combined sparse prefill must be deterministic"
+    );
+
+    // decode rides the combined-sparse KV
+    let mut pre = engine.prefill(&prompt, &cfg).unwrap();
+    let mut pos = prompt.len();
+    let mut logits = pre.last_logits.clone();
+    for _ in 0..4 {
+        let tok = fastforward::engine::argmax(&logits) as i32;
+        logits = engine
+            .decode_step(tok, pos, &mut pre.cache, &cfg)
+            .unwrap();
+        pos += 1;
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    // prefix-cache adoption under the combined config is invisible
+    let mut alloc = PagedAllocator::new(1024, block);
+    let mut pc = PrefixCache::new(block, 256 << 20);
+    let seed = engine.prefix_seed(&cfg);
+    let inserted =
+        pc.insert(seed, &prompt, usize::MAX, &cold.cache, &mut alloc);
+    assert_eq!(inserted, 3);
+    let mut warm =
+        PrefillSession::new(engine.clone(), prompt.clone(), cfg.clone())
+            .unwrap();
+    let hit = pc.acquire(seed, &prompt).expect("prefix hit");
+    warm.adopt_prefix(hit.tokens, |cache| hit.copy_into(cache))
+        .unwrap();
+    pc.release(&hit);
+    while !warm.done() {
+        warm.step().unwrap();
+    }
+    let warm = warm.finish().unwrap();
+    assert_eq!(warm.timing.blocks, 0, "cached blocks must not re-run");
+    assert_eq!(warm.timing.adopted_blocks, 3);
+    assert_eq!(
+        warm.last_logits, cold.last_logits,
+        "adoption under the combined config must be bit-identical"
+    );
+
+    // the same prompt under the same FFN sparsity but *dense* attention
+    // must not see the attention-sparse KV (fingerprint separation)
+    let dense_attn = SparsityConfig::fastforward(0.5);
+    assert!(
+        pc.acquire(engine.prefix_seed(&dense_attn), &prompt).is_none(),
+        "KV must never cross attention configurations"
+    );
+}
+
 /// The crown-jewel exactness invariant: the fused sparse layer at
 /// `K == d_ffn` (every expert selected, nothing dropped, compensator
 /// over an empty set) must reproduce the dense layer to 1e-5 — outputs

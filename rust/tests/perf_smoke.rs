@@ -57,6 +57,7 @@ fn sparse_cfg() -> SparsityConfig {
         compensator: false,
         source: ExpertSource::Trained,
         sparse_decode: false,
+        attn_sparsity: None,
     }
 }
 
@@ -172,6 +173,53 @@ fn batched_decode_beats_sequential() {
         speedup >= 1.3,
         "batched decode speedup {speedup:.2}x < 1.3x at B={B} \
          (one weight pass should serve all {B} rows)"
+    );
+}
+
+/// The block-sparse attention gate: at T = 2048 on the attention-heavy
+/// bench model (`testing::attn_bench_spec`, shared with the fig11
+/// bench), a 50% drop of optional key blocks must prefill ≥ 1.15×
+/// faster than dense attention. At this length attention is ~85% of
+/// the prefill compute and 50% drop visits under half the key blocks,
+/// so the compute-bound expectation is ≈ 1.5× — generous margin for
+/// the gate, per the module's methodology.
+#[test]
+fn sparse_attention_beats_dense_at_t2048() {
+    let _gate = hold_gate();
+    if cores() < 2 {
+        eprintln!(
+            "[skip] perf smoke needs >= 2 cores for stable wall-clock \
+             timing (found {})",
+            cores()
+        );
+        return;
+    }
+    const LEN: usize = 2048;
+    let engine =
+        Engine::synthetic_cpu(&testing::attn_bench_spec()).unwrap();
+    let dense_cfg = testing::attn_bench_cfg(None);
+    let sparse_cfg = testing::attn_bench_cfg(Some(0.5));
+    // warmup both paths (thread pool spin-up, op-cache fill)
+    testing::attn_bench_prefill(&engine, LEN, &dense_cfg);
+    testing::attn_bench_prefill(&engine, LEN, &sparse_cfg);
+    let dense = best_of(2, || {
+        testing::attn_bench_prefill(&engine, LEN, &dense_cfg)
+    });
+    let sparse = best_of(2, || {
+        testing::attn_bench_prefill(&engine, LEN, &sparse_cfg)
+    });
+    let speedup = dense / sparse;
+    eprintln!(
+        "[perf] attn len={LEN}: dense {:.1} ms, block-sparse(50%) \
+         {:.1} ms, speedup {:.2}x",
+        dense * 1e3,
+        sparse * 1e3,
+        speedup
+    );
+    assert!(
+        speedup >= 1.15,
+        "50% block-sparse attention prefill speedup {speedup:.2}x < \
+         1.15x at T={LEN} (compute-bound expectation ~1.5x)"
     );
 }
 

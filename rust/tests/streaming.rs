@@ -167,6 +167,7 @@ fn sse_event_ordering_and_framing() {
         metrics,
         tokenizer: Tokenizer::new(384),
         default_sparsity: None,
+        default_attn_sparsity: None,
     });
     let addr = spawn_server(server);
 
@@ -315,6 +316,7 @@ fn disconnect_mid_stream_releases_kv_pages() {
         metrics: router.metrics.clone(),
         tokenizer: Tokenizer::new(384),
         default_sparsity: Some(0.5),
+        default_attn_sparsity: None,
     });
     let addr = spawn_server(server);
 

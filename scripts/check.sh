@@ -27,8 +27,16 @@ echo "==> batched-decode perf smoke (B=4 >= 1.3x sequential)"
 cargo test -q --test perf_smoke batched_decode_beats_sequential \
     "${extra[@]}"
 
+echo "==> block-sparse attention perf smoke (50% >= 1.15x dense)"
+cargo test -q --test perf_smoke sparse_attention_beats_dense_at_t2048 \
+    "${extra[@]}"
+
 echo "==> fig10 continuous-batching smoke (--smoke: B in {1,4})"
 cargo bench --bench fig10_continuous_batching "${extra[@]}" -- \
+    --backend cpu --smoke
+
+echo "==> fig11 sparse-attention smoke (--smoke: T in {512,1024})"
+cargo bench --bench fig11_sparse_attention "${extra[@]}" -- \
     --backend cpu --smoke
 
 echo "==> cargo test --doc"
