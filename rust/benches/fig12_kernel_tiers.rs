@@ -1,0 +1,129 @@
+//! Figure 12: CPU kernel tiers — dense prefill throughput of the
+//! scalar-f32, simd-f32 and simd-bf16 kernel tiers.
+//!
+//! For each context length T, the bench prefills a T-token prompt on
+//! the FFN-heavy synthetic model (the tier-1 perf-gate regime: dense
+//! FFN matmuls dominate) under three engine configurations:
+//!
+//! * **scalar-f32** — the sequential-order fast path, bit-identical to
+//!   the reference oracle (`--cpu-kernel scalar`),
+//! * **simd-f32** — lane-chunked/register-tiled kernels, gated by the
+//!   ULP tolerance tier (`--cpu-kernel simd`), and
+//! * **simd-bf16** — the same kernels streaming raw bf16 weight panels
+//!   with f32 accumulation (`--weight-precision bf16`), halving the
+//!   weight-read bytes.
+//!
+//! Reported as tokens/s so tiers compare directly across lengths. The
+//! roofline note in docs/ARCHITECTURE.md §2.4 explains what each step
+//! up should buy; this bench is how those wins are *measured*, not
+//! assumed. Needs no artifacts and emits `BENCH_fig12_cpu.json`.
+//!
+//! Flags: `--smoke` for the quick check.sh gate (T = 256 only).
+//! Acceptance (full run): simd-f32 ≥ 1.2× scalar-f32 tokens/s at
+//! T = 512 — the same bar `tests/perf_smoke.rs` gates in tier-1.
+
+mod common;
+
+use std::time::Instant;
+
+use fastforward::engine::Engine;
+use fastforward::manifest::SyntheticSpec;
+use fastforward::runtime::{CpuKernel, CpuOptions};
+use fastforward::util::cli::Args;
+use fastforward::weights::WeightPrecision;
+
+/// FFN-heavy bench model (same regime as the tier-1 perf gates).
+fn bench_spec(precision: WeightPrecision) -> SyntheticSpec {
+    SyntheticSpec {
+        name: "ff-perf-kernel-tiers".to_string(),
+        n_layers: 2,
+        d_ffn: 1024,
+        max_ctx: 1024,
+        buckets: vec![512, 1024],
+        weight_precision: precision,
+        ..SyntheticSpec::default()
+    }
+}
+
+fn tier_engine(kernel: CpuKernel, precision: WeightPrecision) -> Engine {
+    Engine::synthetic_cpu_with(
+        &bench_spec(precision),
+        CpuOptions { threads: 0, reference: false, kernel: Some(kernel) },
+    )
+    .expect("synthetic tier engine")
+}
+
+/// Best-of-2 dense prefill wall-clock → tokens/s.
+fn tokens_per_s(engine: &Engine, len: usize) -> f64 {
+    let toks = common::prompt_tokens(len, 0xF16_12);
+    let cfg = fastforward::engine::SparsityConfig::dense();
+    engine.prefill(&toks, &cfg).unwrap(); // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        engine.prefill(&toks, &cfg).unwrap();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    len as f64 / best
+}
+
+fn main() {
+    common::header(
+        "Figure 12",
+        "CPU kernel tiers: dense prefill tokens/s \
+         (scalar-f32 / simd-f32 / simd-bf16)",
+    );
+    let args = Args::parse_env();
+    let smoke = args.has("smoke");
+    let lens: &[usize] = if smoke { &[256] } else { &[256, 512, 1024] };
+    println!(
+        "backend: cpu (synthetic FFN-heavy model){}",
+        if smoke { ", smoke mode" } else { "" }
+    );
+
+    let tiers = [
+        ("scalar-f32",
+         tier_engine(CpuKernel::Scalar, WeightPrecision::F32)),
+        ("simd-f32",
+         tier_engine(CpuKernel::Simd, WeightPrecision::F32)),
+        ("simd-bf16",
+         tier_engine(CpuKernel::Simd, WeightPrecision::Bf16)),
+    ];
+    println!("{:>6} {:>14} {:>14} {:>14}", "T", tiers[0].0, tiers[1].0,
+             tiers[2].0);
+    let mut rows = Vec::new();
+    let mut simd_vs_scalar_at_512 = None;
+    for &len in lens {
+        let tps: Vec<f64> =
+            tiers.iter().map(|(_, e)| tokens_per_s(e, len)).collect();
+        println!(
+            "{:>6} {:>12.0}/s {:>12.0}/s {:>12.0}/s",
+            len, tps[0], tps[1], tps[2]
+        );
+        if len == 512 {
+            simd_vs_scalar_at_512 = Some(tps[1] / tps[0]);
+        }
+        rows.push(format!(
+            "{{\"len\":{len},\"scalar_f32_tps\":{:.1},\
+             \"simd_f32_tps\":{:.1},\"simd_bf16_tps\":{:.1}}}",
+            tps[0], tps[1], tps[2]
+        ));
+    }
+
+    common::write_bench_json(
+        "BENCH_fig12_cpu.json",
+        &format!(
+            "{{\"figure\":\"fig12_kernel_tiers\",\"backend\":\"cpu\",\
+             \"smoke\":{smoke},\"points\":[{}]}}\n",
+            rows.join(",")
+        ),
+    );
+
+    if let Some(ratio) = simd_vs_scalar_at_512 {
+        println!(
+            "acceptance: T=512 simd-f32 ≥ 1.2x scalar-f32 → {:.2}x {}",
+            ratio,
+            if ratio >= 1.2 { "PASS" } else { "MISS" }
+        );
+    }
+}

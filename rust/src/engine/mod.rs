@@ -252,16 +252,22 @@ impl Engine {
 
     /// [`Engine::synthetic_cpu`] with explicit CPU backend options —
     /// how the conformance suite builds reference (sequential oracle)
-    /// and fast (`threads ∈ {1, 4, …}`) engines over the *same* seeded
-    /// weights.
+    /// and fast (`threads ∈ {1, 4, …}`, scalar/SIMD kernel tier)
+    /// engines over the *same* seeded weights. The spec's
+    /// `weight_precision` selects the storage mode
+    /// ([`crate::weights::WeightStore::seeded_with`]): bf16 stores
+    /// carry the widened-f32 mirror every scalar consumer reads plus
+    /// the raw u16 panels the SIMD kernel streams.
     pub fn synthetic_cpu_with(
         spec: &crate::manifest::SyntheticSpec,
         opts: crate::runtime::CpuOptions,
     ) -> Result<Engine> {
         let manifest = Arc::new(Manifest::synthetic(spec));
-        let weights = Arc::new(
-            crate::weights::WeightStore::seeded(&manifest, spec.seed),
-        );
+        let weights = Arc::new(crate::weights::WeightStore::seeded_with(
+            &manifest,
+            spec.seed,
+            spec.weight_precision,
+        ));
         Ok(Engine::new(Arc::new(Runtime::cpu_with_options(
             manifest, weights, opts,
         )?)))

@@ -37,6 +37,14 @@ fn usage() -> ! {
              --cpu-threads N (cpu backend worker lanes per engine;
               default FF_CPU_THREADS, else available cores capped at 8.
               thread count never changes a single output bit)
+             --cpu-kernel scalar|simd (cpu inner-kernel tier; default
+              FF_CPU_KERNEL, else scalar. scalar is bit-identical to
+              the sequential reference; simd is deterministic and
+              thread-invariant but re-associates reductions, so it is
+              validated under a ULP tolerance tier instead)
+             --weight-precision f32|bf16 (synthetic weight storage;
+              default FF_WEIGHT_PREC, else f32. bf16 stores weights
+              rounded-to-nearest-even and accumulates in f32)
              --attn-sparsity A (block-sparse attention for full prefill
               blocks: fraction of optional causal key blocks dropped,
               0..1; 0 = dense attention. Quantized onto the manifest's
@@ -104,7 +112,12 @@ fn resolve_backend(args: &Args)
 
 fn load_engine(args: &Args) -> Result<Engine> {
     match resolve_backend(args)? {
-        (_, None) => Engine::synthetic_cpu(&SyntheticSpec::default()),
+        (_, None) => {
+            let mut spec = SyntheticSpec::default();
+            spec.weight_precision =
+                fastforward::weights::WeightPrecision::from_env();
+            Engine::synthetic_cpu(&spec)
+        }
         (kind, Some(dir)) => {
             let manifest = Arc::new(Manifest::load(&dir)?);
             let weights = Arc::new(WeightStore::load(&manifest)?);
@@ -438,6 +451,25 @@ fn main() -> Result<()> {
             fastforward::util::threadpool::THREADS_ENV,
             n,
         );
+    }
+    // `--cpu-kernel` / `--weight-precision` forward the same way
+    // (FF_CPU_KERNEL / FF_WEIGHT_PREC), validated up front so a typo
+    // errors instead of silently falling back to the default tier.
+    if let Some(k) = args.opt_str("cpu-kernel") {
+        if fastforward::runtime::CpuKernel::parse(&k).is_none() {
+            return Err(anyhow!(
+                "unknown --cpu-kernel {k:?} (expected scalar|simd)"
+            ));
+        }
+        std::env::set_var(fastforward::runtime::KERNEL_ENV, k);
+    }
+    if let Some(p) = args.opt_str("weight-precision") {
+        if fastforward::weights::WeightPrecision::parse(&p).is_none() {
+            return Err(anyhow!(
+                "unknown --weight-precision {p:?} (expected f32|bf16)"
+            ));
+        }
+        std::env::set_var(fastforward::weights::PRECISION_ENV, p);
     }
     match args.positional.first().map(|s| s.as_str()) {
         Some("serve") => cmd_serve(&args),

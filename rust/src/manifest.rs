@@ -186,6 +186,12 @@ pub struct SyntheticSpec {
     pub pred_rank: usize,
     /// Seed for [`crate::weights::WeightStore::seeded`].
     pub seed: u64,
+    /// Storage precision of the seeded weights
+    /// ([`crate::weights::WeightStore::seeded_with`]): `F32` is the
+    /// bitwise-gated default; `Bf16` rounds every weight to bfloat16
+    /// (f32 accumulation) and is conformance-gated at the relaxed
+    /// tolerance tier (`testing::bf16_spec`).
+    pub weight_precision: crate::weights::WeightPrecision,
 }
 
 impl Default for SyntheticSpec {
@@ -209,6 +215,7 @@ impl Default for SyntheticSpec {
             attn_block: 64,
             pred_rank: 16,
             seed: 0xF057_F0A4,
+            weight_precision: crate::weights::WeightPrecision::F32,
         }
     }
 }

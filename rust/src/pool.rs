@@ -169,12 +169,17 @@ impl ExecutorPool {
                 (manifest, weights)
             }
             (BackendKind::Cpu, None) => {
-                let spec = crate::manifest::SyntheticSpec::default();
+                // Serving honors the process-wide storage choice
+                // (`--weight-precision` forwards through FF_WEIGHT_PREC)
+                // so every replica shares one store of the right mode.
+                let mut spec = crate::manifest::SyntheticSpec::default();
+                spec.weight_precision =
+                    crate::weights::WeightPrecision::from_env();
                 let manifest =
                     Arc::new(crate::manifest::Manifest::synthetic(&spec));
                 let weights = Arc::new(
-                    crate::weights::WeightStore::seeded(
-                        &manifest, spec.seed,
+                    crate::weights::WeightStore::seeded_with(
+                        &manifest, spec.seed, spec.weight_precision,
                     ),
                 );
                 (manifest, weights)

@@ -22,6 +22,25 @@
 //! runs of the same trace produce byte-identical logits, which is the
 //! foundation of the always-on numeric test tier (docs/TESTING.md).
 //!
+//! **Kernel tiers.** The fast path has two inner-kernel tiers,
+//! selected by `--cpu-kernel scalar|simd` / [`KERNEL_ENV`]:
+//!
+//! * [`CpuKernel::Scalar`] (the default) keeps the sequential
+//!   per-element accumulation order above — bit-identical to the
+//!   reference oracle, gated by the **bitwise** conformance tier.
+//! * [`CpuKernel::Simd`] reduces dot products in fixed-width lane
+//!   chunks ([`kernels::lane_dot`]: 8 independent partial sums, folded
+//!   in lane order) so the compiler can keep the accumulators in
+//!   vector registers. The lane split is a pure function of the
+//!   operand length — never of thread count, tiling, or batch shape —
+//!   so SIMD output is still deterministic and thread-invariant, but
+//!   it is *re-associated* relative to the scalar order and therefore
+//!   gated by the **tolerance** conformance tier
+//!   (`crate::testing::simd_spec`), not bitwise identity. On a bf16
+//!   weight store ([`crate::weights::WeightPrecision::Bf16`]) the SIMD
+//!   matmul additionally streams the raw half-width weight words and
+//!   widens them in registers (f32 accumulation throughout).
+//!
 //! Every executable the engine can dispatch —
 //!
 //! * `embed_t{T}` / `lm_head_t{T}` — token embedding and LM head,
@@ -230,6 +249,38 @@ fn rmsnorm_rows(x: &[f32], gain: &[f32], t: usize, d: usize) -> Vec<f32> {
     out
 }
 
+/// [`rmsnorm_rows`] with the square-sum reduced by lane-chunked
+/// accumulation ([`kernels::lane_dot`] of the row with itself). Same
+/// normalization math; the re-associated mean-square is what puts the
+/// SIMD tier on the tolerance (not bitwise) conformance contract.
+fn rmsnorm_rows_simd(x: &[f32], gain: &[f32], t: usize, d: usize)
+                     -> Vec<f32> {
+    let mut out = vec![0.0f32; t * d];
+    for r in 0..t {
+        let row = &x[r * d..(r + 1) * d];
+        let ms = kernels::lane_dot(row, row) / d as f32;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        for c in 0..d {
+            out[r * d + c] = row[c] * inv * gain[c];
+        }
+    }
+    out
+}
+
+/// The attention score dot under the active kernel tier: lane-chunked
+/// in SIMD mode ([`kernels::lane_dot`]), sequential otherwise. Shared
+/// by the dense and block-sparse query-row kernels so the two stay on
+/// the same accumulation order within a tier (the full-coverage ≡
+/// dense identity holds per tier, including SIMD).
+#[inline]
+fn attn_dot(simd: bool, a: &[f32], b: &[f32]) -> f32 {
+    if simd {
+        kernels::lane_dot(a, b)
+    } else {
+        a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+    }
+}
+
 /// `x [t, m] @ w [m, n] -> [t, n]`, plain sequential accumulation (the
 /// naive reference kernel; [`kernels::matmul_tiled`] must match it
 /// bit-for-bit — see the kernel property suite below).
@@ -307,10 +358,11 @@ fn rope_row(row: &mut [f32], heads: usize, dh: usize, p: usize) {
 /// batched step — which is what keeps attention bit-identical across
 /// all three paths.
 #[allow(clippy::too_many_arguments)]
-fn attn_query_row(q_row: &[f32], k_cache: &[f32], v_cache: &[f32],
-                  k_new: &[f32], v_new: &[f32], pos: usize, lr: usize,
-                  nh: usize, nkv: usize, dh: usize, scale: f32,
-                  out_row: &mut [f32], scores: &mut Vec<f32>) {
+fn attn_query_row(simd: bool, q_row: &[f32], k_cache: &[f32],
+                  v_cache: &[f32], k_new: &[f32], v_new: &[f32],
+                  pos: usize, lr: usize, nh: usize, nkv: usize,
+                  dh: usize, scale: f32, out_row: &mut [f32],
+                  scores: &mut Vec<f32>) {
     let group = nh / nkv;
     let p = pos + lr; // absolute position of this query
     for h in 0..nh {
@@ -325,8 +377,7 @@ fn attn_query_row(q_row: &[f32], k_cache: &[f32], v_cache: &[f32],
                 let jr = j - pos;
                 &k_new[(jr * nkv + g) * dh..(jr * nkv + g + 1) * dh]
             };
-            let dot: f32 =
-                qv.iter().zip(kv.iter()).map(|(a, b)| a * b).sum();
+            let dot = attn_dot(simd, qv, kv);
             let sc = dot * scale;
             max = max.max(sc);
             scores.push(sc);
@@ -362,10 +413,10 @@ fn attn_query_row(q_row: &[f32], k_cache: &[f32], v_cache: &[f32],
 /// the selection covers every causal block the f32 op sequence is
 /// *the same* as the dense kernel's and the output is bit-identical.
 #[allow(clippy::too_many_arguments)]
-fn attn_query_row_sparse(q_row: &[f32], k_cache: &[f32], v_cache: &[f32],
-                         k_new: &[f32], v_new: &[f32], pos: usize,
-                         lr: usize, nh: usize, nkv: usize, dh: usize,
-                         scale: f32, out_row: &mut [f32],
+fn attn_query_row_sparse(simd: bool, q_row: &[f32], k_cache: &[f32],
+                         v_cache: &[f32], k_new: &[f32], v_new: &[f32],
+                         pos: usize, lr: usize, nh: usize, nkv: usize,
+                         dh: usize, scale: f32, out_row: &mut [f32],
                          scores: &mut Vec<f32>,
                          blocks_by_head: &[Vec<u32>], ab: usize) {
     let group = nh / nkv;
@@ -386,8 +437,7 @@ fn attn_query_row_sparse(q_row: &[f32], k_cache: &[f32], v_cache: &[f32],
                     let jr = j - pos;
                     &k_new[(jr * nkv + g) * dh..(jr * nkv + g + 1) * dh]
                 };
-                let dot: f32 =
-                    qv.iter().zip(kv.iter()).map(|(a, b)| a * b).sum();
+                let dot = attn_dot(simd, qv, kv);
                 let sc = dot * scale;
                 max = max.max(sc);
                 scores.push(sc);
@@ -436,10 +486,13 @@ fn complement(idx: &[i32], f: usize) -> Vec<i32> {
 }
 
 /// Cache-blocked kernels behind the fast path. Shared invariant: every
-/// kernel writes each output element from exactly one task, and
-/// accumulates its reduction in ascending reduction-index order — the
-/// same order as the naive reference loops — so tiling and threading
-/// never change a single output bit.
+/// kernel writes each output element from exactly one task, and the
+/// reduction order behind each element is a pure function of the
+/// operands and the kernel tier — never of threads or tiling. Scalar
+/// kernels ascend the reduction index (the naive reference order, so
+/// tiling and threading never change a single output bit); the SIMD
+/// variants re-associate through [`lane_dot`]'s fixed lane split and
+/// are gated by the tolerance tier instead.
 mod kernels {
     use crate::util::threadpool::ThreadPool;
 
@@ -452,6 +505,43 @@ mod kernels {
     /// Register-blocked row micro-tile: each loaded weight panel row is
     /// reused across this many token rows.
     const ROW_BLOCK: usize = 4;
+    /// Accumulator lanes for the SIMD kernel tier (chosen to fill one
+    /// AVX2 register / two NEON registers of f32).
+    pub(super) const LANES: usize = 8;
+
+    /// Lane-chunked dot product — the SIMD tier's reduction primitive.
+    ///
+    /// The aligned body accumulates into [`LANES`] *independent*
+    /// partial sums (stride-`LANES` interleave), which are folded in
+    /// fixed lane order, followed by a sequential scalar tail. The
+    /// independent local accumulators are what lets the compiler keep
+    /// the reduction in vector registers; the price is that the f32
+    /// additions are *re-associated* relative to the sequential dot,
+    /// so results differ from the scalar kernel by rounding (ULP
+    /// tier), not bitwise. The split depends only on `a.len()` — never
+    /// on threads, tiling, or batch shape — so `lane_dot` is a pure
+    /// function of its operands: deterministic and thread-invariant.
+    pub(super) fn lane_dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let body = n - n % LANES;
+        let mut acc = [0.0f32; LANES];
+        let mut i = 0;
+        while i < body {
+            for l in 0..LANES {
+                acc[l] += a[i + l] * b[i + l];
+            }
+            i += LANES;
+        }
+        let mut sum = 0.0f32;
+        for l in 0..LANES {
+            sum += acc[l];
+        }
+        for j in body..n {
+            sum += a[j] * b[j];
+        }
+        sum
+    }
 
     /// Raw output pointer shareable across pool lanes.
     ///
@@ -514,16 +604,126 @@ mod kernels {
         }
     }
 
+    /// Register-tiled `x [t, m] @ w [m, n] -> [t, n]` for the SIMD
+    /// kernel tier: same task grid as [`matmul_tiled`], but each
+    /// `ROW_BLOCK × COL_TILE` output tile accumulates in a stack-local
+    /// array written back once per tile, instead of read-modify-writing
+    /// the shared output buffer on every reduction step. The local
+    /// accumulators carry no aliasing with the streamed weight panel,
+    /// which is what lets the compiler vectorize the column loop and
+    /// keep the tile in registers — the scalar kernel's raw-pointer
+    /// writes defeat both. Per output element the `m` reduction still
+    /// ascends, so this kernel's *values* match the scalar tiling; the
+    /// SIMD tier's re-association enters through [`lane_dot`]
+    /// (attention dots, gathered activations, RMSNorm square sums).
+    pub(super) fn matmul_tiled_simd(x: &[f32], w: &[f32], t: usize,
+                                    m: usize, n: usize,
+                                    pool: &ThreadPool) -> Vec<f32> {
+        debug_assert_eq!(x.len(), t * m);
+        debug_assert_eq!(w.len(), m * n);
+        let mut out = vec![0.0f32; t * n];
+        let (rows, cols) = grid(t, n);
+        let optr = OutPtr(out.as_mut_ptr());
+        pool.run(rows * cols, |task| {
+            let (ri, ci) = (task / cols, task % cols);
+            let (r0, r1) = (ri * ROW_CHUNK, (ri * ROW_CHUNK + ROW_CHUNK).min(t));
+            let (c0, c1) = (ci * COL_TILE, (ci * COL_TILE + COL_TILE).min(n));
+            let p = optr;
+            // SAFETY: tasks cover disjoint [r0,r1) × [c0,c1) regions.
+            unsafe { matmul_block_simd(x, None, w, m, n, r0, r1, c0, c1, p.0) };
+        });
+        out
+    }
+
+    /// [`matmul_tiled_simd`] streaming a raw bf16 weight buffer
+    /// (`w16`, one `u16` per element of the logical `[m, n]` panel):
+    /// each panel row slice is widened to f32 in a stack buffer once
+    /// per reduction step, then accumulated exactly as the f32 SIMD
+    /// kernel does. Widening bf16→f32 is exact, so over a bf16 weight
+    /// store this is bit-identical to [`matmul_tiled_simd`] on the
+    /// widened `data` mirror — it just moves half the weight bytes.
+    pub(super) fn matmul_tiled_bf16(x: &[f32], w16: &[u16], t: usize,
+                                    m: usize, n: usize,
+                                    pool: &ThreadPool) -> Vec<f32> {
+        debug_assert_eq!(x.len(), t * m);
+        debug_assert_eq!(w16.len(), m * n);
+        let mut out = vec![0.0f32; t * n];
+        let (rows, cols) = grid(t, n);
+        let optr = OutPtr(out.as_mut_ptr());
+        pool.run(rows * cols, |task| {
+            let (ri, ci) = (task / cols, task % cols);
+            let (r0, r1) = (ri * ROW_CHUNK, (ri * ROW_CHUNK + ROW_CHUNK).min(t));
+            let (c0, c1) = (ci * COL_TILE, (ci * COL_TILE + COL_TILE).min(n));
+            let p = optr;
+            // SAFETY: tasks cover disjoint [r0,r1) × [c0,c1) regions.
+            unsafe {
+                matmul_block_simd(x, Some(w16), &[], m, n, r0, r1, c0, c1, p.0)
+            };
+        });
+        out
+    }
+
+    /// One register-tiled block for the SIMD tier. Reads the weight
+    /// panel from `w16` (widening bf16→f32 into a stack row buffer)
+    /// when present, else from the f32 `w`.
+    ///
+    /// SAFETY: caller guarantees `out` points at a `[t, n]` buffer and
+    /// no other thread touches rows `[r0, r1)` columns `[c0, c1)`.
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn matmul_block_simd(x: &[f32], w16: Option<&[u16]>, w: &[f32],
+                                m: usize, n: usize, r0: usize, r1: usize,
+                                c0: usize, c1: usize, out: *mut f32) {
+        let width = c1 - c0;
+        let mut wide = [0.0f32; COL_TILE];
+        let mut rb = r0;
+        while rb < r1 {
+            let rend = (rb + ROW_BLOCK).min(r1);
+            let mut acc = [[0.0f32; COL_TILE]; ROW_BLOCK];
+            for i in 0..m {
+                let wrow: &[f32] = match w16 {
+                    Some(raw) => {
+                        for (wc, &b) in wide[..width]
+                            .iter_mut()
+                            .zip(raw[i * n + c0..i * n + c1].iter())
+                        {
+                            *wc = crate::weights::bf16_to_f32(b);
+                        }
+                        &wide[..width]
+                    }
+                    None => &w[i * n + c0..i * n + c1],
+                };
+                for r in rb..rend {
+                    let xv = x[r * m + i];
+                    let arow = &mut acc[r - rb];
+                    for c in 0..width {
+                        arow[c] += xv * wrow[c];
+                    }
+                }
+            }
+            for r in rb..rend {
+                let orow = out.add(r * n + c0);
+                let arow = &acc[r - rb];
+                for c in 0..width {
+                    *orow.add(c) = arow[c];
+                }
+            }
+            rb = rend;
+        }
+    }
+
     /// Gathered SwiGLU activations restricted to `idx`, compact layout:
     /// `out[r, j'] = silu(h2[r]·gate_t[idx[j']]) * (h2[r]·up_t[idx[j']])`
     /// over pre-transposed `[f, d]` gate/up weights, so each selected
-    /// neuron is one pair of contiguous row dots. Dots ascend the `d`
-    /// axis — bit-identical to the corresponding columns of the dense
-    /// `h2 @ w_gate` / `h2 @ w_up` matmuls. Cost scales with `idx.len()`
-    /// instead of `d_ffn`: this is the sub-dense sparse hot path.
+    /// neuron is one pair of contiguous row dots. With `simd` unset the
+    /// dots ascend the `d` axis — bit-identical to the corresponding
+    /// columns of the dense `h2 @ w_gate` / `h2 @ w_up` matmuls; with
+    /// `simd` set they run through [`lane_dot`] (tolerance tier). Cost
+    /// scales with `idx.len()` instead of `d_ffn`: this is the
+    /// sub-dense sparse hot path.
+    #[allow(clippy::too_many_arguments)]
     pub(super) fn gather_acts(h2: &[f32], gate_t: &[f32], up_t: &[f32],
                               t: usize, d: usize, idx: &[i32],
-                              pool: &ThreadPool) -> Vec<f32> {
+                              simd: bool, pool: &ThreadPool) -> Vec<f32> {
         let k = idx.len();
         debug_assert_eq!(h2.len(), t * d);
         let mut out = vec![0.0f32; t * k];
@@ -538,16 +738,19 @@ mod kernels {
                 let hr = &h2[r * d..(r + 1) * d];
                 for jj in c0..c1 {
                     let j = idx[jj] as usize;
-                    let g: f32 = hr
-                        .iter()
-                        .zip(gate_t[j * d..(j + 1) * d].iter())
-                        .map(|(a, b)| a * b)
-                        .sum();
-                    let u: f32 = hr
-                        .iter()
-                        .zip(up_t[j * d..(j + 1) * d].iter())
-                        .map(|(a, b)| a * b)
-                        .sum();
+                    let (g, u) = if simd {
+                        (lane_dot(hr, &gate_t[j * d..(j + 1) * d]),
+                         lane_dot(hr, &up_t[j * d..(j + 1) * d]))
+                    } else {
+                        (hr.iter()
+                            .zip(gate_t[j * d..(j + 1) * d].iter())
+                            .map(|(a, b)| a * b)
+                            .sum(),
+                         hr.iter()
+                            .zip(up_t[j * d..(j + 1) * d].iter())
+                            .map(|(a, b)| a * b)
+                            .sum())
+                    };
                     // SAFETY: element (r, jj) belongs to this task only.
                     unsafe {
                         *p.0.add(r * k + jj) = super::silu(g) * u;
@@ -631,6 +834,56 @@ mod kernels {
     }
 }
 
+/// Env var naming the CPU kernel tier (`scalar` | `simd`); the
+/// `--cpu-kernel` CLI flag forwards through it so engine construction
+/// anywhere in the process (including pool replicas) sees the choice.
+/// Unset or unrecognized → scalar.
+pub const KERNEL_ENV: &str = "FF_CPU_KERNEL";
+
+/// Inner-kernel tier of the fast CPU path (module docs, "Kernel
+/// tiers"). Orthogonal to reference mode: the reference oracle is
+/// always scalar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CpuKernel {
+    /// Sequential per-element accumulation — bit-identical to the
+    /// reference oracle at any thread count (bitwise conformance
+    /// tier). The default.
+    #[default]
+    Scalar,
+    /// Lane-chunked accumulation ([`kernels::LANES`]-wide partial
+    /// sums) — deterministic and thread-invariant but re-associated;
+    /// gated by the tolerance tier (`crate::testing::simd_spec`).
+    Simd,
+}
+
+impl CpuKernel {
+    /// Parse a CLI/env spelling (`scalar` | `simd`, case-insensitive).
+    pub fn parse(s: &str) -> Option<CpuKernel> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(CpuKernel::Scalar),
+            "simd" => Some(CpuKernel::Simd),
+            _ => None,
+        }
+    }
+
+    /// The tier [`KERNEL_ENV`] selects (scalar when unset or
+    /// unrecognized — an opt-in knob must fail closed).
+    pub fn from_env() -> CpuKernel {
+        std::env::var(KERNEL_ENV)
+            .ok()
+            .and_then(|v| Self::parse(&v))
+            .unwrap_or_default()
+    }
+
+    /// Stable lowercase label (bench/log spelling, `parse`-able).
+    pub fn label(self) -> &'static str {
+        match self {
+            CpuKernel::Scalar => "scalar",
+            CpuKernel::Simd => "simd",
+        }
+    }
+}
+
 /// Construction options for [`CpuBackend::with_options`].
 #[derive(Debug, Clone, Default)]
 pub struct CpuOptions {
@@ -641,6 +894,24 @@ pub struct CpuOptions {
     /// Force the sequential scalar reference interpreter (implies one
     /// thread, naive kernels). This is the conformance oracle.
     pub reference: bool,
+    /// Kernel tier for the fast path; `None` resolves via
+    /// [`CpuKernel::from_env`]. Ignored (forced scalar) in reference
+    /// mode.
+    pub kernel: Option<CpuKernel>,
+}
+
+impl CpuOptions {
+    /// The kernel tier this option set builds: explicit choice, else
+    /// [`KERNEL_ENV`], with reference mode pinned to scalar. Exposed
+    /// so fingerprinting can resolve the tier *before* constructing
+    /// the backend ([`crate::runtime::Runtime::cpu_with_options`]).
+    pub fn resolved_kernel(&self) -> CpuKernel {
+        if self.reference {
+            CpuKernel::Scalar
+        } else {
+            self.kernel.unwrap_or_else(CpuKernel::from_env)
+        }
+    }
 }
 
 /// The pure-Rust deterministic backend. See the module docs for the
@@ -654,6 +925,9 @@ pub struct CpuBackend {
     stats: RefCell<DispatchStats>,
     /// Sequential scalar oracle mode (naive kernels, no pool).
     reference: bool,
+    /// Inner-kernel tier of the fast path (always scalar in reference
+    /// mode).
+    kernel: CpuKernel,
     /// Worker pool for the fast kernels (1 lane → inline execution).
     pool: ThreadPool,
     /// Fast path only: per-layer transposed `w_gate` (`[f, d]`) for the
@@ -689,7 +963,7 @@ impl CpuBackend {
         Self::with_options(
             manifest,
             weights,
-            CpuOptions { threads: 1, reference: true },
+            CpuOptions { threads: 1, reference: true, kernel: None },
         )
     }
 
@@ -735,6 +1009,7 @@ impl CpuBackend {
             ops: RefCell::new(HashMap::new()),
             stats: RefCell::new(DispatchStats::default()),
             reference: opts.reference,
+            kernel: opts.resolved_kernel(),
             pool: ThreadPool::new(threads),
             gate_t,
             up_t,
@@ -749,6 +1024,28 @@ impl CpuBackend {
     /// Whether this is the sequential reference oracle.
     pub fn is_reference(&self) -> bool {
         self.reference
+    }
+
+    /// The inner-kernel tier this backend runs (scalar in reference
+    /// mode).
+    pub fn kernel(&self) -> CpuKernel {
+        self.kernel
+    }
+
+    /// Whether the lane-chunked SIMD kernel tier is active (never in
+    /// reference mode — resolution pins the oracle to scalar).
+    fn simd(&self) -> bool {
+        self.kernel == CpuKernel::Simd
+    }
+
+    /// RMSNorm through the active kernel tier.
+    fn rms(&self, x: &[f32], gain: &[f32], t: usize, d: usize)
+           -> Vec<f32> {
+        if self.simd() {
+            rmsnorm_rows_simd(x, gain, t, d)
+        } else {
+            rmsnorm_rows(x, gain, t, d)
+        }
     }
 
     /// Parse (and cache) the op an executable name denotes. Steady-state
@@ -777,14 +1074,48 @@ impl CpuBackend {
         self.w(&format!("layers.{l}.{role}"), expect)
     }
 
-    /// Matmul through the active kernel set (naive in reference mode,
-    /// tiled + pooled otherwise; bit-identical either way).
+    /// Raw bf16 mirror of a named weight (`None` on f32 stores — and
+    /// deliberately `None` in reference/scalar modes, which always
+    /// consume the widened f32 `data`).
+    fn w16(&self, name: &str) -> Option<&[u16]> {
+        self.weights.get_bf16(name)
+    }
+
+    /// [`Self::w16`] for a per-layer weight role.
+    fn lw16(&self, l: usize, role: &str) -> Option<&[u16]> {
+        self.w16(&format!("layers.{l}.{role}"))
+    }
+
+    /// Matmul through the active kernel tier (naive in reference mode,
+    /// tiled + pooled otherwise; bit-identical to the reference in
+    /// scalar tier, tolerance tier under SIMD).
     fn mm(&self, x: &[f32], w: &[f32], t: usize, m: usize, n: usize)
           -> Vec<f32> {
+        self.mm2(x, w, None, t, m, n)
+    }
+
+    /// [`Self::mm`] with an optional raw bf16 mirror of `w`: in SIMD
+    /// tier with the mirror present, the kernel streams the half-width
+    /// weight words and widens in registers (numerically identical to
+    /// the f32 SIMD kernel over the widened store — widening is exact
+    /// — just half the weight traffic). Scalar and reference tiers
+    /// always consume the widened f32 panel.
+    fn mm2(&self, x: &[f32], w: &[f32], w16: Option<&[u16]>, t: usize,
+           m: usize, n: usize) -> Vec<f32> {
         if self.reference {
-            matmul(x, w, t, m, n)
-        } else {
-            kernels::matmul_tiled(x, w, t, m, n, &self.pool)
+            return matmul(x, w, t, m, n);
+        }
+        match (self.kernel, w16) {
+            (CpuKernel::Scalar, _) => {
+                kernels::matmul_tiled(x, w, t, m, n, &self.pool)
+            }
+            (CpuKernel::Simd, Some(raw)) => {
+                debug_assert_eq!(raw.len(), w.len());
+                kernels::matmul_tiled_bf16(x, raw, t, m, n, &self.pool)
+            }
+            (CpuKernel::Simd, None) => {
+                kernels::matmul_tiled_simd(x, w, t, m, n, &self.pool)
+            }
         }
     }
 
@@ -843,13 +1174,15 @@ impl CpuBackend {
             "attention: pos {pos} + t {t} exceeds bucket {s}"
         );
 
-        let h1 = rmsnorm_rows(x, self.lw(l, "rms1", d)?, t, d);
-        let mut q = self.mm(&h1, self.lw(l, "wq", d * nh * dh)?, t, d,
-                            nh * dh);
+        let h1 = self.rms(x, self.lw(l, "rms1", d)?, t, d);
+        let mut q = self.mm2(&h1, self.lw(l, "wq", d * nh * dh)?,
+                             self.lw16(l, "wq"), t, d, nh * dh);
         let mut k_new =
-            self.mm(&h1, self.lw(l, "wk", d * nkv * dh)?, t, d, nkv * dh);
+            self.mm2(&h1, self.lw(l, "wk", d * nkv * dh)?,
+                     self.lw16(l, "wk"), t, d, nkv * dh);
         let v_new =
-            self.mm(&h1, self.lw(l, "wv", d * nkv * dh)?, t, d, nkv * dh);
+            self.mm2(&h1, self.lw(l, "wv", d * nkv * dh)?,
+                     self.lw16(l, "wv"), t, d, nkv * dh);
         for r in 0..t {
             rope_row(&mut q[r * nh * dh..(r + 1) * nh * dh], nh, dh,
                      pos + r);
@@ -863,10 +1196,12 @@ impl CpuBackend {
         // One query row of attention output — delegated to the shared
         // per-row helpers the fused batched step uses too. The sparse
         // variant reads the precomputed plan of the row's query block.
+        let simd = self.simd();
         let attn_row = |r: usize, out_row: &mut [f32],
                         scores: &mut Vec<f32>| {
             match &plan {
                 Some(p) => attn_query_row_sparse(
+                    simd,
                     &q[r * nh * dh..(r + 1) * nh * dh],
                     k_cache,
                     v_cache,
@@ -884,6 +1219,7 @@ impl CpuBackend {
                     ab,
                 ),
                 None => attn_query_row(
+                    simd,
                     &q[r * nh * dh..(r + 1) * nh * dh],
                     k_cache,
                     v_cache,
@@ -925,8 +1261,8 @@ impl CpuBackend {
                 attn_row(r, out_row, &mut scores);
             });
         }
-        let proj = self.mm(&attn, self.lw(l, "wo", nh * dh * d)?, t,
-                           nh * dh, d);
+        let proj = self.mm2(&attn, self.lw(l, "wo", nh * dh * d)?,
+                            self.lw16(l, "wo"), t, nh * dh, d);
         Ok((add(x, &proj), k_new, v_new))
     }
 
@@ -936,9 +1272,11 @@ impl CpuBackend {
                        -> Result<Vec<f32>> {
         let m = &self.manifest.model;
         let (d, f) = (m.d_model, m.d_ffn);
-        let h2 = rmsnorm_rows(h, self.lw(l, "rms2", d)?, t, d);
-        let gate = self.mm(&h2, self.lw(l, "w_gate", d * f)?, t, d, f);
-        let up = self.mm(&h2, self.lw(l, "w_up", d * f)?, t, d, f);
+        let h2 = self.rms(h, self.lw(l, "rms2", d)?, t, d);
+        let gate = self.mm2(&h2, self.lw(l, "w_gate", d * f)?,
+                            self.lw16(l, "w_gate"), t, d, f);
+        let up = self.mm2(&h2, self.lw(l, "w_up", d * f)?,
+                          self.lw16(l, "w_up"), t, d, f);
         Ok(gate
             .iter()
             .zip(up.iter())
@@ -978,8 +1316,8 @@ impl CpuBackend {
                 && idx.len() == f
                 && idx.iter().enumerate().all(|(i, &j)| j as usize == i);
             if full {
-                return Ok(kernels::matmul_tiled(acts, w_down, t, f, d,
-                                                &self.pool));
+                return Ok(self.mm2(acts, w_down, self.lw16(l, "w_down"),
+                                   t, f, d));
             }
             return Ok(kernels::down_proj_tiled(
                 acts, w_down, alpha, t, f, d, idx, &self.pool,
@@ -1024,9 +1362,10 @@ impl CpuBackend {
             l < self.gate_t.len(),
             "layer {l} out of range for transposed weight cache"
         );
-        let h2 = rmsnorm_rows(h, self.lw(l, "rms2", d)?, t, d);
+        let h2 = self.rms(h, self.lw(l, "rms2", d)?, t, d);
         let acts = kernels::gather_acts(
-            &h2, &self.gate_t[l], &self.up_t[l], t, d, idx, &self.pool,
+            &h2, &self.gate_t[l], &self.up_t[l], t, d, idx,
+            self.simd(), &self.pool,
         );
         let w_down = self.lw(l, "w_down", f * d)?;
         Ok(kernels::down_proj_compact(
@@ -1041,7 +1380,7 @@ impl CpuBackend {
                         -> Result<Vec<f32>> {
         let m = &self.manifest.model;
         let (d, f) = (m.d_model, m.d_ffn);
-        let h2 = rmsnorm_rows(h, self.lw(l, "rms2", d)?, t, d);
+        let h2 = self.rms(h, self.lw(l, "rms2", d)?, t, d);
         let wd = self.weights.get(&format!("pred.{l}.wd"))?;
         anyhow::ensure!(
             !wd.is_empty() && wd.len() % d == 0,
@@ -1050,8 +1389,10 @@ impl CpuBackend {
         );
         let rank = wd.len() / d;
         let wu = self.w(&format!("pred.{l}.wu"), rank * f)?;
-        let z = self.mm(&h2, wd, t, d, rank);
-        let p = self.mm(&z, wu, t, rank, f);
+        let z = self.mm2(&h2, wd, self.w16(&format!("pred.{l}.wd")), t,
+                         d, rank);
+        let p = self.mm2(&z, wu, self.w16(&format!("pred.{l}.wu")), t,
+                         rank, f);
         let mut scores = vec![0.0f32; f];
         for r in 0..t {
             for j in 0..f {
@@ -1100,9 +1441,9 @@ impl CpuBackend {
             }
             Op::LmHead { t } => {
                 let x = f32_input(inputs, exe, "x")?;
-                let xr = rmsnorm_rows(x, self.w("final_rms", d)?, t, d);
-                let logits =
-                    self.mm(&xr, self.w("lm_head", d * vocab)?, t, d, vocab);
+                let xr = self.rms(x, self.w("final_rms", d)?, t, d);
+                let logits = self.mm2(&xr, self.w("lm_head", d * vocab)?,
+                                      self.w16("lm_head"), t, d, vocab);
                 Ok(vec![Output { data: logits }])
             }
             Op::LayerDense { t, s, a } => {
@@ -1294,16 +1635,16 @@ impl CpuBackend {
         for (r, &o) in rows.iter().zip(&offs) {
             x_all[o * d..(o + r.t) * d].copy_from_slice(r.x);
         }
-        let h1 = rmsnorm_rows(&x_all, self.lw(layer, "rms1", d)?, total, d);
+        let h1 = self.rms(&x_all, self.lw(layer, "rms1", d)?, total, d);
         let mut q =
-            self.mm(&h1, self.lw(layer, "wq", d * nh * dh)?, total, d,
-                    nh * dh);
+            self.mm2(&h1, self.lw(layer, "wq", d * nh * dh)?,
+                     self.lw16(layer, "wq"), total, d, nh * dh);
         let mut k_new_all =
-            self.mm(&h1, self.lw(layer, "wk", d * nkv * dh)?, total, d,
-                    nkv * dh);
+            self.mm2(&h1, self.lw(layer, "wk", d * nkv * dh)?,
+                     self.lw16(layer, "wk"), total, d, nkv * dh);
         let v_new_all =
-            self.mm(&h1, self.lw(layer, "wv", d * nkv * dh)?, total, d,
-                    nkv * dh);
+            self.mm2(&h1, self.lw(layer, "wv", d * nkv * dh)?,
+                     self.lw16(layer, "wv"), total, d, nkv * dh);
         for (r, &o) in rows.iter().zip(&offs) {
             for lr in 0..r.t {
                 let g = o + lr;
@@ -1349,6 +1690,7 @@ impl CpuBackend {
             .flat_map(|(i, r)| std::iter::repeat(i).take(r.t))
             .collect();
         let scale = 1.0 / (dh as f32).sqrt();
+        let simd = self.simd();
         let mut attn = vec![0.0f32; total * nh * dh];
         {
             struct RowPtr(*mut f32);
@@ -1375,6 +1717,7 @@ impl CpuBackend {
                 let mut scores: Vec<f32> = Vec::new();
                 match &plans[i] {
                     Some(plan) => attn_query_row_sparse(
+                        simd,
                         &q[g * nh * dh..(g + 1) * nh * dh],
                         r.k_cache,
                         r.v_cache,
@@ -1392,6 +1735,7 @@ impl CpuBackend {
                         ab,
                     ),
                     None => attn_query_row(
+                        simd,
                         &q[g * nh * dh..(g + 1) * nh * dh],
                         r.k_cache,
                         r.v_cache,
@@ -1409,12 +1753,12 @@ impl CpuBackend {
                 }
             });
         }
-        let proj = self.mm(&attn, self.lw(layer, "wo", nh * dh * d)?,
-                           total, nh * dh, d);
+        let proj = self.mm2(&attn, self.lw(layer, "wo", nh * dh * d)?,
+                            self.lw16(layer, "wo"), total, nh * dh, d);
         let h = add(&x_all, &proj);
 
         // ---- FFN: stacked weight passes, per-row expert selection --
-        let h2 = rmsnorm_rows(&h, self.lw(layer, "rms2", d)?, total, d);
+        let h2 = self.rms(&h, self.lw(layer, "rms2", d)?, total, d);
 
         let mut dense_rows = Vec::new();
         let mut comp_rows = Vec::new(); // fused sparse with compensator
@@ -1457,9 +1801,11 @@ impl CpuBackend {
         if !dense_rows.is_empty() {
             let (h2d, go, tt) = stack(&dense_rows);
             let gate =
-                self.mm(&h2d, self.lw(layer, "w_gate", d * f)?, tt, d, f);
+                self.mm2(&h2d, self.lw(layer, "w_gate", d * f)?,
+                         self.lw16(layer, "w_gate"), tt, d, f);
             let up =
-                self.mm(&h2d, self.lw(layer, "w_up", d * f)?, tt, d, f);
+                self.mm2(&h2d, self.lw(layer, "w_up", d * f)?,
+                         self.lw16(layer, "w_up"), tt, d, f);
             let acts: Vec<f32> = gate
                 .iter()
                 .zip(up.iter())
@@ -1467,11 +1813,11 @@ impl CpuBackend {
                 .collect();
             // the full-range ungated down projection IS the matmul
             // `acts @ w_down` (same ascending-j accumulation order —
-            // see `down_proj`); call the kernel directly instead of
-            // materializing a 0..d_ffn index vector per pass
+            // see `down_proj`); dispatch the matmul directly instead
+            // of materializing a 0..d_ffn index vector per pass
             let w_down = self.lw(layer, "w_down", f * d)?;
-            let yd = kernels::matmul_tiled(&acts, w_down, tt, f, d,
-                                           &self.pool);
+            let yd = self.mm2(&acts, w_down, self.lw16(layer, "w_down"),
+                              tt, f, d);
             for (&i, &o) in dense_rows.iter().zip(&go) {
                 y[i] = Some(yd[o * d..(o + rows[i].t) * d].to_vec());
             }
@@ -1502,8 +1848,12 @@ impl CpuBackend {
             );
             let rank = wd.len() / d;
             let wu = self.w(&format!("pred.{layer}.wu"), rank * f)?;
-            let z = self.mm(&h2p, wd, tt, d, rank);
-            let p = self.mm(&z, wu, tt, rank, f);
+            let z = self.mm2(&h2p, wd,
+                             self.w16(&format!("pred.{layer}.wd")), tt,
+                             d, rank);
+            let p = self.mm2(&z, wu,
+                             self.w16(&format!("pred.{layer}.wu")), tt,
+                             rank, f);
             for (&i, &o) in pred_rows.iter().zip(&go) {
                 let k = match ops[i] {
                     Op::LayerSparse { k, .. }
@@ -1526,9 +1876,11 @@ impl CpuBackend {
         if !comp_rows.is_empty() {
             let (h2c, go, tt) = stack(&comp_rows);
             let gate =
-                self.mm(&h2c, self.lw(layer, "w_gate", d * f)?, tt, d, f);
+                self.mm2(&h2c, self.lw(layer, "w_gate", d * f)?,
+                         self.lw16(layer, "w_gate"), tt, d, f);
             let up =
-                self.mm(&h2c, self.lw(layer, "w_up", d * f)?, tt, d, f);
+                self.mm2(&h2c, self.lw(layer, "w_up", d * f)?,
+                         self.lw16(layer, "w_up"), tt, d, f);
             let acts: Vec<f32> = gate
                 .iter()
                 .zip(up.iter())
@@ -1573,6 +1925,7 @@ impl CpuBackend {
                     t,
                     d,
                     idx,
+                    simd,
                     &self.pool,
                 );
                 y[i] = Some(kernels::down_proj_compact(
@@ -1866,7 +2219,7 @@ mod tests {
             let gate_t = transpose(&gate, d, f);
             let up_t = transpose(&up, d, f);
             let acts = kernels::gather_acts(&h2, &gate_t, &up_t, t, d,
-                                            &idx, &pool);
+                                            &idx, false, &pool);
             // gathered compact activations == the selected columns
             for r in 0..t {
                 for (jj, &ji) in idx.iter().enumerate() {
@@ -1903,6 +2256,164 @@ mod tests {
         });
     }
 
+    // -----------------------------------------------------------------
+    // SIMD kernel tier properties. The register-tiled matmul preserves
+    // the per-element ascending-i order (bitwise vs naive; the tier's
+    // re-association lives in lane_dot), lane_dot is a pure function
+    // of its operands (bitwise thread/rerun-invariant) within a small
+    // ULP envelope of the sequential dot, and the bf16 kernel is
+    // bitwise the f32 SIMD kernel over widened weights.
+    // -----------------------------------------------------------------
+
+    /// Pass/fail for the kernel-level ULP envelope: within
+    /// `max_ulp` ULPs or `abs` absolute difference.
+    fn within_ulp(a: f32, b: f32, max_ulp: u64, abs: f32) -> bool {
+        crate::testing::ulp_distance(a, b) <= max_ulp
+            || (a - b).abs() <= abs
+    }
+
+    #[test]
+    fn prop_simd_matmul_is_order_preserving_and_thread_invariant() {
+        let pools: Vec<ThreadPool> =
+            [1, 2, 4].iter().map(|&t| ThreadPool::new(t)).collect();
+        proptest::check("simd-matmul", 40, |rng| {
+            let t = [1, 2, 7, 16, 17, 33][rng.range(0, 6)];
+            let m = rng.range(1, 70);
+            let n = [1, 3, 31, 64, 127, 128, 129, 200][rng.range(0, 8)];
+            let x = rand_vec(rng, t * m);
+            let w = rand_vec(rng, m * n);
+            let naive = matmul(&x, &w, t, m, n);
+            let base =
+                kernels::matmul_tiled_simd(&x, &w, t, m, n, &pools[0]);
+            // per-element reduction order is unchanged → bitwise
+            assert_bits_eq(&naive, &base,
+                           &format!("simd vs naive t={t} m={m} n={n}"))?;
+            for pool in &pools[1..] {
+                let other =
+                    kernels::matmul_tiled_simd(&x, &w, t, m, n, pool);
+                assert_bits_eq(&base, &other, "simd thread-invariance")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_lane_dot_within_ulp_of_sequential_dot() {
+        proptest::check("lane-dot", 60, |rng| {
+            let n = [1, 7, 8, 9, 16, 23, 64, 100, 257][rng.range(0, 9)];
+            let a = rand_vec(rng, n);
+            let b = rand_vec(rng, n);
+            let seq: f32 =
+                a.iter().zip(b.iter()).map(|(x, y)| x * y).sum();
+            let lane = kernels::lane_dot(&a, &b);
+            // absolute floor scales with the mass of the summands so a
+            // cancelling sum (seq ≈ 0, huge relative error) still passes
+            let mass: f32 = a
+                .iter()
+                .zip(b.iter())
+                .map(|(x, y)| (x * y).abs())
+                .sum();
+            let floor = 1e-5f32.max(1e-6 * mass);
+            if !within_ulp(seq, lane, 512, floor) {
+                return Err(format!(
+                    "n={n}: lane {lane} vs seq {seq} ({} ulp)",
+                    crate::testing::ulp_distance(seq, lane)
+                ));
+            }
+            // pure function of the operands: rerun is bitwise
+            if lane.to_bits() != kernels::lane_dot(&a, &b).to_bits() {
+                return Err(format!("n={n}: lane_dot not deterministic"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_bf16_matmul_matches_simd_over_widened_weights() {
+        use crate::weights::{bf16_to_f32, f32_to_bf16};
+        let pool = ThreadPool::new(2);
+        proptest::check("bf16-matmul", 30, |rng| {
+            let t = [1, 3, 17][rng.range(0, 3)];
+            let m = rng.range(1, 50);
+            let n = [1, 31, 128, 130][rng.range(0, 4)];
+            let x = rand_vec(rng, t * m);
+            let raw: Vec<u16> = rand_vec(rng, m * n)
+                .iter()
+                .map(|&v| f32_to_bf16(v))
+                .collect();
+            let wide: Vec<f32> =
+                raw.iter().map(|&bb| bf16_to_f32(bb)).collect();
+            let a = kernels::matmul_tiled_simd(&x, &wide, t, m, n, &pool);
+            let b = kernels::matmul_tiled_bf16(&x, &raw, t, m, n, &pool);
+            // widening is exact → streaming raw bf16 changes nothing
+            assert_bits_eq(&a, &b, &format!("t={t} m={m} n={n}"))
+        });
+    }
+
+    #[test]
+    fn prop_simd_rmsnorm_and_gather_within_ulp_of_scalar() {
+        let pool = ThreadPool::new(2);
+        proptest::check("simd-rmsnorm-gather", 30, |rng| {
+            let t = rng.range(1, 6);
+            let d = [4, 8, 15, 64, 100][rng.range(0, 5)];
+            let x = rand_vec(rng, t * d);
+            let gain = rand_vec(rng, d);
+            let a = rmsnorm_rows(&x, &gain, t, d);
+            let b = rmsnorm_rows_simd(&x, &gain, t, d);
+            for i in 0..a.len() {
+                if !within_ulp(a[i], b[i], 512, 1e-5) {
+                    return Err(format!(
+                        "rmsnorm[{i}]: {} vs {} ({} ulp)", a[i], b[i],
+                        crate::testing::ulp_distance(a[i], b[i])
+                    ));
+                }
+            }
+            let f = rng.range(4, 40);
+            let k = rng.range(1, f + 1);
+            let gate_t = rand_vec(rng, f * d);
+            let up_t = rand_vec(rng, f * d);
+            let idx = rand_idx(rng, f, k);
+            let sc = kernels::gather_acts(&x, &gate_t, &up_t, t, d, &idx,
+                                          false, &pool);
+            let sv = kernels::gather_acts(&x, &gate_t, &up_t, t, d, &idx,
+                                          true, &pool);
+            for i in 0..sc.len() {
+                if !within_ulp(sc[i], sv[i], 512, 1e-4) {
+                    return Err(format!(
+                        "gather[{i}]: {} vs {} ({} ulp)", sc[i], sv[i],
+                        crate::testing::ulp_distance(sc[i], sv[i])
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cpu_kernel_parse_env_and_reference_pinning() {
+        assert_eq!(CpuKernel::parse("simd"), Some(CpuKernel::Simd));
+        assert_eq!(CpuKernel::parse("SIMD"), Some(CpuKernel::Simd));
+        assert_eq!(CpuKernel::parse("scalar"), Some(CpuKernel::Scalar));
+        assert_eq!(CpuKernel::parse("avx512"), None);
+        for k in [CpuKernel::Scalar, CpuKernel::Simd] {
+            assert_eq!(CpuKernel::parse(k.label()), Some(k));
+        }
+        // reference mode pins the oracle to scalar even when SIMD is
+        // requested explicitly
+        let opts = CpuOptions {
+            threads: 1,
+            reference: true,
+            kernel: Some(CpuKernel::Simd),
+        };
+        assert_eq!(opts.resolved_kernel(), CpuKernel::Scalar);
+        let opts = CpuOptions {
+            threads: 0,
+            reference: false,
+            kernel: Some(CpuKernel::Simd),
+        };
+        assert_eq!(opts.resolved_kernel(), CpuKernel::Simd);
+    }
+
     #[test]
     fn fast_and_reference_backends_agree_on_one_dispatch() {
         use crate::manifest::SyntheticSpec;
@@ -1913,7 +2424,11 @@ mod tests {
         let fast = CpuBackend::with_options(
             manifest.clone(),
             weights.clone(),
-            CpuOptions { threads: 4, reference: false },
+            CpuOptions {
+                threads: 4,
+                reference: false,
+                kernel: Some(CpuKernel::Scalar),
+            },
         )
         .unwrap();
         let refr =

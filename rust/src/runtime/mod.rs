@@ -22,7 +22,7 @@ mod cpu;
 mod pjrt;
 
 pub use backend::{Backend, BackendKind, BatchRow, BatchRowOut};
-pub use cpu::{CpuBackend, CpuOptions};
+pub use cpu::{CpuBackend, CpuKernel, CpuOptions, KERNEL_ENV};
 pub use pjrt::PjrtBackend;
 
 use std::sync::Arc;
@@ -134,17 +134,28 @@ impl Runtime {
         Self::cpu_with_options(
             manifest,
             weights,
-            CpuOptions { threads: 1, reference: true },
+            CpuOptions { threads: 1, reference: true, kernel: None },
         )
     }
 
     /// CPU runtime with explicit [`CpuOptions`] (thread count /
-    /// reference mode).
+    /// reference mode / kernel tier). The kernel tier is resolved
+    /// *here* — explicit option, else [`KERNEL_ENV`] — so it can fold
+    /// into the numeric fingerprint before the backend is built.
     pub fn cpu_with_options(manifest: Arc<Manifest>,
                             weights: Arc<WeightStore>, opts: CpuOptions)
                             -> Result<Self> {
-        let fp = Self::fingerprint_for(BackendKind::Cpu, &manifest,
-                                       &weights);
+        let mut fp = Self::fingerprint_for(BackendKind::Cpu, &manifest,
+                                           &weights);
+        // The SIMD tier is deterministic but *not* bit-identical to
+        // the scalar/reference tier (re-associated accumulation), so
+        // its KV must never be adopted across tiers: mix the tier into
+        // the fingerprint. Scalar keeps the historical fingerprint —
+        // scalar, reference and pre-SIMD caches stay interchangeable.
+        if opts.resolved_kernel() == CpuKernel::Simd {
+            use crate::util::hash;
+            fp = hash::mix(fp, hash::fnv1a(b"cpu-kernel:simd"));
+        }
         let backend: Box<dyn Backend> = Box::new(
             CpuBackend::with_options(manifest.clone(), weights, opts)?,
         );
@@ -158,11 +169,15 @@ impl Runtime {
     /// Construct a runtime with an explicit backend choice.
     pub fn with_backend(kind: BackendKind, manifest: Arc<Manifest>,
                         weights: Arc<WeightStore>) -> Result<Self> {
+        // CPU resolves its kernel tier from the environment inside
+        // cpu_with_options so the tier also lands in the fingerprint.
+        if matches!(kind, BackendKind::Cpu) {
+            return Self::cpu_with_options(manifest, weights,
+                                          CpuOptions::default());
+        }
         let fp = Self::fingerprint_for(kind, &manifest, &weights);
         let backend: Box<dyn Backend> = match kind {
-            BackendKind::Cpu => {
-                Box::new(CpuBackend::new(manifest.clone(), weights)?)
-            }
+            BackendKind::Cpu => unreachable!("handled above"),
             BackendKind::Pjrt => {
                 Box::new(PjrtBackend::new(manifest.clone(), weights)?)
             }
@@ -177,7 +192,11 @@ impl Runtime {
     /// The combined numeric identity of (backend kind, model, weight
     /// values). Deliberately *not* a function of thread count or
     /// fast-vs-reference mode: those are bit-identical by the
-    /// determinism contract, so their KV is interchangeable.
+    /// determinism contract, so their KV is interchangeable. The CPU
+    /// *kernel tier* is the exception — it changes accumulation order,
+    /// so [`Runtime::cpu_with_options`] mixes the resolved tier on top
+    /// of this base (bf16 weight stores differ automatically through
+    /// [`WeightStore::fingerprint`] over the rounded values).
     fn fingerprint_for(kind: BackendKind, manifest: &Manifest,
                        weights: &WeightStore) -> u64 {
         use crate::util::hash;
@@ -446,11 +465,27 @@ mod tests {
         assert!(rt.warm(&["no_such_exe_t1"]).is_err());
     }
 
+    /// CPU runtime pinned to an explicit kernel tier (env-independent,
+    /// so the fingerprint assertions below hold under any
+    /// `FF_CPU_KERNEL`).
+    fn cpu_runtime_kernel(kernel: CpuKernel) -> Runtime {
+        let spec = SyntheticSpec::default();
+        let m = Arc::new(Manifest::synthetic(&spec));
+        let w = Arc::new(WeightStore::seeded(&m, spec.seed));
+        Runtime::cpu_with_options(
+            m,
+            w,
+            CpuOptions { threads: 0, reference: false,
+                         kernel: Some(kernel) },
+        )
+        .unwrap()
+    }
+
     #[test]
     fn backend_fingerprints_differ_per_backend_and_model() {
-        let a = cpu_runtime();
+        let a = cpu_runtime_kernel(CpuKernel::Scalar);
         assert_eq!(a.backend_name(), "cpu");
-        let b = cpu_runtime();
+        let b = cpu_runtime_kernel(CpuKernel::Scalar);
         assert_eq!(
             a.numeric_fingerprint(),
             b.numeric_fingerprint(),
@@ -489,6 +524,21 @@ mod tests {
             a.numeric_fingerprint(),
             r.numeric_fingerprint(),
             "reference oracle must share the fast backend's fingerprint"
+        );
+        // the SIMD kernel tier is NOT bit-identical to scalar, so its
+        // KV must never be adopted across tiers: distinct fingerprint,
+        // stable across constructions
+        let s1 = cpu_runtime_kernel(CpuKernel::Simd);
+        let s2 = cpu_runtime_kernel(CpuKernel::Simd);
+        assert_ne!(
+            a.numeric_fingerprint(),
+            s1.numeric_fingerprint(),
+            "simd tier must not share the scalar fingerprint"
+        );
+        assert_eq!(
+            s1.numeric_fingerprint(),
+            s2.numeric_fingerprint(),
+            "simd fingerprint is deterministic"
         );
     }
 

@@ -13,6 +13,15 @@
 //!   real trained artifacts; assertions about *trained-weight quality*
 //!   (cos-sim fidelity bounds, python parity fixtures, ablation
 //!   orderings) live behind it and skip cleanly elsewhere.
+//!
+//! It also hosts the **conformance-tier machinery** (docs/TESTING.md
+//! "Conformance tiers"): a [`Tolerance`] spec per backend/kernel mode
+//! (bitwise | ULP budget | abs/rel epsilon), the [`compare_tensors`]
+//! engine that reports the worst-case ULP distance with the offending
+//! tensor/index on failure, and the statistical guards
+//! ([`argmax_agrees`], [`rel_l2`]) that keep relaxed tiers honest. The
+//! per-tier budgets live in [`bitwise_spec`] / [`simd_spec`] /
+//! [`bf16_spec`].
 
 use std::sync::Arc;
 
@@ -22,7 +31,256 @@ use crate::engine::{argmax, DecodeBatch, Engine, PrefillResult,
 use crate::manifest::SyntheticSpec;
 use crate::pool::ExecutorPool;
 use crate::router::Router;
-use crate::runtime::BackendKind;
+use crate::runtime::{BackendKind, CpuKernel, CpuOptions};
+use crate::weights::WeightPrecision;
+
+// ---------------------------------------------------------------------------
+// Deterministic fuzz-seed replay (FF_TEST_SEED)
+// ---------------------------------------------------------------------------
+
+/// Env var overriding the RNG seed of every seeded fuzz/property suite
+/// (`tests/attn_sparse.rs`, the kernel property tests, the proptest
+/// harness). Accepts decimal or `0x`-hex, `_` separators allowed —
+/// exactly the spelling failure messages print.
+pub const TEST_SEED_ENV: &str = "FF_TEST_SEED";
+
+/// The seed [`TEST_SEED_ENV`] requests, if any. Panics on an
+/// unparseable value — a typo'd replay must not silently fuzz afresh.
+pub fn seed_override() -> Option<u64> {
+    let v = std::env::var(TEST_SEED_ENV).ok()?;
+    let s = v.trim().replace('_', "");
+    let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => s.parse().ok(),
+    };
+    Some(parsed.unwrap_or_else(|| {
+        panic!("{TEST_SEED_ENV}={v}: expected a u64 (decimal or 0x-hex)")
+    }))
+}
+
+/// The RNG seed a fuzz suite should run with: [`TEST_SEED_ENV`] when
+/// set (deterministic replay of a reported failure), else `default`.
+pub fn fuzz_seed(default: u64) -> u64 {
+    seed_override().unwrap_or(default)
+}
+
+// ---------------------------------------------------------------------------
+// Conformance tiers: tolerance specs, ULP comparison, statistical guards
+// ---------------------------------------------------------------------------
+
+/// Per-tensor numeric equivalence contract between a backend/kernel
+/// mode and the scalar reference oracle (docs/TESTING.md, "Conformance
+/// tiers").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Tolerance {
+    /// Byte-identical f32s. The scalar fast path's contract: tiling,
+    /// threading and batching must not change a single output bit.
+    Bitwise,
+    /// Within `max_ulp` [`ulp_distance`] units, or within `abs_floor`
+    /// absolutely (the floor absorbs cancellation near zero, where ULP
+    /// distance explodes while the absolute error stays tiny). The
+    /// kernel-level contract for re-associated accumulation.
+    Ulp { max_ulp: u64, abs_floor: f32 },
+    /// `|got - want| ≤ abs + rel·|want|` — the end-to-end contract for
+    /// whole-model outputs, where per-layer rounding compounds and a
+    /// fixed ULP budget would be shape-dependent.
+    AbsRel { abs: f32, rel: f32 },
+}
+
+/// Distance between two f32s in units in the last place, over the
+/// ordered-integer key (negative floats map below positives, so the
+/// metric is monotone across the sign boundary and `-0.0 == +0.0`).
+/// Both-NaN → 0; NaN vs non-NaN → `u64::MAX`. Infinities sit one step
+/// past the largest finite value.
+pub fn ulp_distance(a: f32, b: f32) -> u64 {
+    if a.is_nan() || b.is_nan() {
+        return if a.is_nan() && b.is_nan() { 0 } else { u64::MAX };
+    }
+    fn key(x: f32) -> i64 {
+        let bits = x.to_bits() as i64;
+        if bits & (1 << 31) != 0 {
+            -(bits & 0x7FFF_FFFF)
+        } else {
+            bits
+        }
+    }
+    (key(a) - key(b)).unsigned_abs()
+}
+
+/// Compare `got` against the oracle's `want` under `tol`, element by
+/// element. On failure the message carries everything a debug session
+/// needs: the tensor name, how many elements broke the budget, the
+/// first offender (index, both values, ULP distance) and the
+/// worst-case ULP distance with *its* index — whether or not that
+/// element itself failed (under [`Tolerance::AbsRel`] the worst ULP
+/// offender is usually a near-zero cancellation that passed).
+pub fn compare_tensors(what: &str, want: &[f32], got: &[f32],
+                       tol: Tolerance) -> Result<(), String> {
+    if want.len() != got.len() {
+        return Err(format!(
+            "{what}: length mismatch — oracle {} vs {}",
+            want.len(),
+            got.len()
+        ));
+    }
+    let ok = |a: f32, b: f32, d: u64| -> bool {
+        match tol {
+            Tolerance::Bitwise => a.to_bits() == b.to_bits(),
+            Tolerance::Ulp { max_ulp, abs_floor } => {
+                d <= max_ulp || (a - b).abs() <= abs_floor
+            }
+            Tolerance::AbsRel { abs, rel } => {
+                (a - b).abs() <= abs + rel * a.abs()
+            }
+        }
+    };
+    let (mut worst_ulp, mut worst_idx) = (0u64, 0usize);
+    let mut first_fail: Option<usize> = None;
+    let mut failures = 0usize;
+    for i in 0..want.len() {
+        let d = ulp_distance(want[i], got[i]);
+        if d > worst_ulp {
+            (worst_ulp, worst_idx) = (d, i);
+        }
+        if !ok(want[i], got[i], d) {
+            failures += 1;
+            first_fail.get_or_insert(i);
+        }
+    }
+    let Some(i) = first_fail else { return Ok(()) };
+    Err(format!(
+        "{what}: {failures}/{} elements out of {tol:?}; first at \
+         [{i}]: want {} got {} ({} ulp); worst-case {worst_ulp} ulp at \
+         [{worst_idx}]: want {} got {}",
+        want.len(),
+        want[i],
+        got[i],
+        ulp_distance(want[i], got[i]),
+        want[worst_idx],
+        got[worst_idx],
+    ))
+}
+
+/// Statistical guard for relaxed tiers: the tier under test must pick
+/// the oracle's argmax token, or a token whose *oracle* logit is
+/// within `margin` of the oracle's max (a genuine near-tie the
+/// rounding tier is allowed to flip). Catches the real bugs a loose
+/// epsilon would wave through — a wrong-but-close logit surface still
+/// has to rank tokens like the oracle does.
+pub fn argmax_agrees(want: &[f32], got: &[f32], margin: f32)
+                     -> Result<(), String> {
+    if want.is_empty() || want.len() != got.len() {
+        return Err(format!(
+            "argmax: length mismatch — oracle {} vs {}",
+            want.len(),
+            got.len()
+        ));
+    }
+    let wi = argmax(want);
+    let gi = argmax(got);
+    if wi == gi || want[gi] >= want[wi] - margin {
+        return Ok(());
+    }
+    Err(format!(
+        "argmax disagrees: oracle picks {wi} ({}), tier picks {gi} \
+         (oracle logit {}, margin {margin})",
+        want[wi], want[gi]
+    ))
+}
+
+/// Relative L2 drift `‖got − want‖₂ / ‖want‖₂` — the KV-cache norm
+/// guard of the relaxed tiers (a per-element epsilon can hide a
+/// systematic bias; a norm bound cannot).
+pub fn rel_l2(want: &[f32], got: &[f32]) -> f32 {
+    assert_eq!(want.len(), got.len(), "rel_l2: length mismatch");
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (w, g) in want.iter().zip(got.iter()) {
+        num += ((g - w) as f64).powi(2);
+        den += (*w as f64).powi(2);
+    }
+    (num.sqrt() / den.sqrt().max(1e-30)) as f32
+}
+
+/// The full conformance contract of one backend/kernel mode against
+/// the scalar reference oracle: per-tensor tolerances plus the
+/// statistical guards.
+#[derive(Debug, Clone, Copy)]
+pub struct ConformanceSpec {
+    /// Human tag for failure messages ("scalar", "simd", "bf16").
+    pub tier: &'static str,
+    /// Logits tolerance vs the oracle.
+    pub logits: Tolerance,
+    /// KV-cache tolerance vs the oracle.
+    pub kv: Tolerance,
+    /// [`argmax_agrees`] margin on logits.
+    pub argmax_margin: f32,
+    /// [`rel_l2`] bound on KV caches.
+    pub kv_rel_l2: f32,
+}
+
+impl ConformanceSpec {
+    /// Assert logits within this spec (tolerance + argmax guard).
+    pub fn check_logits(&self, what: &str, want: &[f32], got: &[f32]) {
+        compare_tensors(what, want, got, self.logits)
+            .and_then(|()| argmax_agrees(want, got, self.argmax_margin))
+            .unwrap_or_else(|e| panic!("[{}] {e}", self.tier));
+    }
+
+    /// Assert a KV tensor within this spec (tolerance + norm guard).
+    pub fn check_kv(&self, what: &str, want: &[f32], got: &[f32]) {
+        compare_tensors(what, want, got, self.kv)
+            .unwrap_or_else(|e| panic!("[{}] {e}", self.tier));
+        let drift = rel_l2(want, got);
+        assert!(
+            drift <= self.kv_rel_l2,
+            "[{}] {what}: KV rel-L2 drift {drift} exceeds {}",
+            self.tier,
+            self.kv_rel_l2
+        );
+    }
+}
+
+/// The scalar fast path's contract: bit-identity with the oracle, at
+/// any thread count, for every config (the pre-existing tier).
+pub fn bitwise_spec() -> ConformanceSpec {
+    ConformanceSpec {
+        tier: "scalar",
+        logits: Tolerance::Bitwise,
+        kv: Tolerance::Bitwise,
+        argmax_margin: 0.0,
+        kv_rel_l2: 0.0,
+    }
+}
+
+/// The SIMD kernel tier's budget. Re-association perturbs each
+/// reduction by O(ulp) and the perturbation compounds across layers,
+/// so the end-to-end bound is abs/rel rather than a per-op ULP count;
+/// the statistical guards pin ranking and norm behaviour to the
+/// oracle's.
+pub fn simd_spec() -> ConformanceSpec {
+    ConformanceSpec {
+        tier: "simd",
+        logits: Tolerance::AbsRel { abs: 1e-4, rel: 1e-3 },
+        kv: Tolerance::AbsRel { abs: 1e-4, rel: 1e-3 },
+        argmax_margin: 0.05,
+        kv_rel_l2: 1e-4,
+    }
+}
+
+/// The bf16-storage tier's budget vs the **f32-weight** oracle: the
+/// dominant term is the one-time weight rounding (relative error up to
+/// 2⁻⁸ per weight), not the kernels — so the budget is set by storage
+/// precision, and the argmax margin is correspondingly wider.
+pub fn bf16_spec() -> ConformanceSpec {
+    ConformanceSpec {
+        tier: "bf16",
+        logits: Tolerance::AbsRel { abs: 5e-2, rel: 5e-2 },
+        kv: Tolerance::AbsRel { abs: 2e-2, rel: 2e-2 },
+        argmax_margin: 0.5,
+        kv_rel_l2: 0.05,
+    }
+}
 
 /// The deterministic CPU engine over the default synthetic model
 /// (fast tiled/parallel backend; threads from `FF_CPU_THREADS`).
@@ -32,22 +290,57 @@ pub fn cpu_engine() -> Engine {
         .expect("synthetic CPU engine")
 }
 
-/// [`cpu_engine`] pinned to an explicit worker-lane count — the
-/// conformance suite sweeps `threads ∈ {1, 4}` with it.
+/// [`cpu_engine`] pinned to an explicit worker-lane count *and*
+/// scalar kernels — the bitwise conformance matrix sweeps
+/// `threads ∈ {1, 4}` with it, so it must not drift onto the SIMD
+/// tier when `FF_CPU_KERNEL=simd` is exported for the whole test run.
 pub fn cpu_engine_threads(threads: usize) -> Engine {
+    cpu_engine_with(threads, CpuKernel::Scalar)
+}
+
+/// Default synthetic engine pinned to an explicit thread count and
+/// kernel tier — the conformance matrix axis constructor.
+pub fn cpu_engine_with(threads: usize, kernel: CpuKernel) -> Engine {
     Engine::synthetic_cpu_with(
         &SyntheticSpec::default(),
-        crate::runtime::CpuOptions { threads, reference: false },
+        CpuOptions { threads, reference: false, kernel: Some(kernel) },
     )
     .expect("synthetic CPU engine")
 }
 
+/// [`cpu_engine_with`] on the SIMD kernel tier (f32 weights) — gated
+/// by [`simd_spec`], never bitwise.
+pub fn cpu_engine_simd(threads: usize) -> Engine {
+    cpu_engine_with(threads, CpuKernel::Simd)
+}
+
+/// SIMD-tier engine over a **bf16** weight store (widened-f32 mirror
+/// plus raw u16 panels; `crate::weights::WeightStore::seeded_with`) —
+/// gated by [`bf16_spec`] against the f32-weight reference oracle.
+pub fn cpu_engine_bf16_simd(threads: usize) -> Engine {
+    let spec = SyntheticSpec {
+        weight_precision: WeightPrecision::Bf16,
+        ..SyntheticSpec::default()
+    };
+    Engine::synthetic_cpu_with(
+        &spec,
+        CpuOptions {
+            threads,
+            reference: false,
+            kernel: Some(CpuKernel::Simd),
+        },
+    )
+    .expect("synthetic bf16 CPU engine")
+}
+
 /// The sequential scalar CPU *reference* engine — the oracle the fast
-/// backend is conformance-tested against (bit-identical by contract).
+/// backend is conformance-tested against (bit-identical by contract
+/// for the scalar tier; within [`simd_spec`] / [`bf16_spec`] for the
+/// relaxed tiers).
 pub fn cpu_engine_reference() -> Engine {
     Engine::synthetic_cpu_with(
         &SyntheticSpec::default(),
-        crate::runtime::CpuOptions { threads: 1, reference: true },
+        CpuOptions { threads: 1, reference: true, kernel: None },
     )
     .expect("synthetic CPU reference engine")
 }
@@ -231,5 +524,125 @@ mod tests {
         let e = test_engine();
         assert!(e.block() > 0);
         assert!(e.manifest().model.n_layers > 0);
+    }
+
+    // -- ULP-math unit suite (the comparison engine itself) ----------
+
+    #[test]
+    fn ulp_distance_identities_and_adjacency() {
+        assert_eq!(ulp_distance(1.0, 1.0), 0);
+        assert_eq!(ulp_distance(0.0, -0.0), 0);
+        assert_eq!(ulp_distance(f32::NEG_INFINITY, f32::NEG_INFINITY), 0);
+        // adjacent representable values are exactly 1 apart
+        let next = f32::from_bits(1.0f32.to_bits() + 1);
+        assert_eq!(ulp_distance(1.0, next), 1);
+        assert_eq!(ulp_distance(next, 1.0), 1);
+        // symmetric for negatives
+        let nprev = f32::from_bits((-1.0f32).to_bits() + 1);
+        assert_eq!(ulp_distance(-1.0, nprev), 1);
+    }
+
+    #[test]
+    fn ulp_distance_subnormals_and_sign_boundary() {
+        let tiny = f32::from_bits(1); // smallest positive subnormal
+        // one step off +0, two steps from its own negation (the metric
+        // is monotone across the signed-zero boundary)
+        assert_eq!(ulp_distance(0.0, tiny), 1);
+        assert_eq!(ulp_distance(-tiny, tiny), 2);
+        assert_eq!(ulp_distance(-0.0, tiny), 1);
+        // adjacent subnormals
+        let tiny2 = f32::from_bits(2);
+        assert_eq!(ulp_distance(tiny, tiny2), 1);
+        // a same-magnitude sign flip on a normal value is enormous
+        assert!(ulp_distance(1.0, -1.0) > u32::MAX as u64 / 4);
+    }
+
+    #[test]
+    fn ulp_distance_infinities_and_nan() {
+        assert_eq!(ulp_distance(f32::MAX, f32::INFINITY), 1);
+        assert_eq!(ulp_distance(-f32::MAX, f32::NEG_INFINITY), 1);
+        assert!(ulp_distance(f32::INFINITY, f32::NEG_INFINITY)
+                > u32::MAX as u64);
+        assert_eq!(ulp_distance(f32::NAN, f32::NAN), 0);
+        assert_eq!(ulp_distance(f32::NAN, 1.0), u64::MAX);
+        assert_eq!(ulp_distance(1.0, f32::NAN), u64::MAX);
+    }
+
+    /// Regression: a single flipped mantissa bit in a 4096-element
+    /// tensor must fail the ULP tier *and* be located by index in the
+    /// report.
+    #[test]
+    fn flipped_mantissa_bit_is_caught_and_located() {
+        let want: Vec<f32> =
+            (0..4096).map(|i| 1.0 + i as f32 * 1e-3).collect();
+        let mut got = want.clone();
+        let idx = 2477;
+        got[idx] = f32::from_bits(got[idx].to_bits() ^ (1 << 12));
+        let err = compare_tensors(
+            "logits", &want, &got,
+            Tolerance::Ulp { max_ulp: 512, abs_floor: 0.0 },
+        )
+        .expect_err("flipped bit must fail the ULP tier");
+        assert!(err.contains("[2477]"), "report must locate it: {err}");
+        assert!(err.contains("1/4096"), "exactly one offender: {err}");
+        // bitwise rejects it too; a loose abs/rel tier would not
+        compare_tensors("logits", &want, &got, Tolerance::Bitwise)
+            .expect_err("bitwise must fail");
+        compare_tensors(
+            "logits", &want, &got,
+            Tolerance::AbsRel { abs: 1e-2, rel: 1e-2 },
+        )
+        .expect("a 2^12-mantissa flip is ~5e-4 relative — under 1e-2");
+    }
+
+    #[test]
+    fn compare_tensors_reports_worst_case_ulp() {
+        let want = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut got = want.clone();
+        got[1] = f32::from_bits(got[1].to_bits() + 3); // 3 ulp
+        got[3] = f32::from_bits(got[3].to_bits() + 9); // 9 ulp (worst)
+        let err = compare_tensors(
+            "kv", &want, &got,
+            Tolerance::Ulp { max_ulp: 2, abs_floor: 0.0 },
+        )
+        .expect_err("both exceed 2 ulp");
+        assert!(err.contains("first at [1]"), "{err}");
+        assert!(err.contains("worst-case 9 ulp at [3]"), "{err}");
+        // with budget 16 both pass
+        compare_tensors(
+            "kv", &want, &got,
+            Tolerance::Ulp { max_ulp: 16, abs_floor: 0.0 },
+        )
+        .unwrap();
+        // abs floor rescues a near-zero cancellation (huge ULP count)
+        compare_tensors(
+            "z", &[1e-9], &[-1e-9],
+            Tolerance::Ulp { max_ulp: 1, abs_floor: 1e-6 },
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn statistical_guards_catch_rank_and_norm_bugs() {
+        // argmax: exact agreement passes
+        argmax_agrees(&[0.1, 0.9, 0.3], &[0.1, 0.8, 0.3], 0.0).unwrap();
+        // near-tie flip within margin passes
+        argmax_agrees(&[0.5, 0.49, 0.0], &[0.48, 0.5, 0.0], 0.05)
+            .unwrap();
+        // a genuine rank change beyond margin fails
+        argmax_agrees(&[1.0, 0.2, 0.0], &[0.1, 0.9, 0.0], 0.05)
+            .expect_err("rank flip must fail");
+        // rel_l2: zero for identical tensors, scales with the bias
+        assert_eq!(rel_l2(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        let drift = rel_l2(&[3.0, 4.0], &[3.3, 4.4]); // 10% systematic
+        assert!((drift - 0.1).abs() < 1e-6, "drift {drift}");
+    }
+
+    #[test]
+    fn fuzz_seed_parses_decimal_and_hex() {
+        // no env override in the normal test run → default comes back
+        if std::env::var(TEST_SEED_ENV).is_err() {
+            assert_eq!(fuzz_seed(0xA77_F022), 0xA77_F022);
+        }
     }
 }

@@ -1,22 +1,39 @@
 //! Property-testing harness (std-only substrate for the absent proptest
 //! crate): runs a property over many seeded random cases and, on failure,
-//! reports the seed so the case can be replayed deterministically.
+//! reports the seed so the case can be replayed deterministically —
+//! `FF_TEST_SEED=<reported seed> cargo test <test>` reruns exactly the
+//! failing case (`crate::testing::TEST_SEED_ENV`).
 
 use super::rng::Rng;
 
 /// Run `prop` over `cases` random cases. `prop` receives a fresh Rng per
 /// case and returns Err(description) on violation. Panics with the seed
-/// of the first failing case.
+/// of the first failing case, in the exact spelling `FF_TEST_SEED`
+/// accepts. When `FF_TEST_SEED` is set, only that seed runs — a
+/// deterministic replay of a reported failure, regardless of which
+/// case index originally produced it.
 pub fn check<F>(name: &str, cases: usize, prop: F)
 where
     F: Fn(&mut Rng) -> Result<(), String>,
 {
+    if let Some(seed) = crate::testing::seed_override() {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed (replay, seed {seed:#x}): {msg}"
+            );
+        }
+        return;
+    }
     let base = 0xFA57F0A4u64;
     for i in 0..cases {
         let seed = base.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
         let mut rng = Rng::new(seed);
         if let Err(msg) = prop(&mut rng) {
-            panic!("property '{name}' failed (case {i}, seed {seed:#x}): {msg}");
+            panic!(
+                "property '{name}' failed (case {i}, seed {seed:#x}): \
+                 {msg} — replay with FF_TEST_SEED={seed:#x}"
+            );
         }
     }
 }
@@ -52,5 +69,16 @@ mod tests {
     #[should_panic(expected = "property 'always-fails'")]
     fn reports_failures() {
         check("always-fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with FF_TEST_SEED=")]
+    fn failure_message_advises_seed_replay() {
+        // only meaningful when no replay override is active — under an
+        // override the replay panic message is the expected one anyway
+        if std::env::var(crate::testing::TEST_SEED_ENV).is_ok() {
+            panic!("replay with FF_TEST_SEED= (override active)");
+        }
+        check("always-fails", 1, |_| Err("nope".into()));
     }
 }

@@ -14,6 +14,74 @@ use crate::manifest::{Manifest, WeightEntry};
 use crate::util::hash;
 use crate::util::rng::Rng;
 
+/// Env var naming the synthetic weight storage precision
+/// (`f32` | `bf16`); the `--weight-precision` CLI flag forwards
+/// through it so every engine construction site resolves the same
+/// mode.
+pub const PRECISION_ENV: &str = "FF_WEIGHT_PREC";
+
+/// Storage precision of the seeded synthetic weights.
+///
+/// `Bf16` is a *storage* mode: every generated value is rounded to
+/// bfloat16 (round-to-nearest-even) and all arithmetic still
+/// accumulates in f32 — the load-compressed/compute-dense pattern.
+/// The f32 view served by [`WeightStore::get`] holds the widened
+/// rounded values, so the scalar and SIMD f32 kernels compute over
+/// exactly the numbers the bf16-streaming kernel widens on the fly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WeightPrecision {
+    /// Full f32 storage (the default).
+    #[default]
+    F32,
+    /// bfloat16 storage, f32 accumulation.
+    Bf16,
+}
+
+impl WeightPrecision {
+    /// Parse a CLI/env spelling (`f32` | `bf16`).
+    pub fn parse(s: &str) -> Option<WeightPrecision> {
+        match s {
+            "f32" => Some(WeightPrecision::F32),
+            "bf16" => Some(WeightPrecision::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Resolve from [`PRECISION_ENV`]; unset or unparsable means
+    /// [`WeightPrecision::F32`].
+    pub fn from_env() -> WeightPrecision {
+        std::env::var(PRECISION_ENV)
+            .ok()
+            .and_then(|s| Self::parse(&s))
+            .unwrap_or_default()
+    }
+
+    /// Stable display label (the CLI/env spelling).
+    pub fn label(self) -> &'static str {
+        match self {
+            WeightPrecision::F32 => "f32",
+            WeightPrecision::Bf16 => "bf16",
+        }
+    }
+}
+
+/// Round an f32 to bfloat16 (round-to-nearest-even on the dropped 16
+/// mantissa bits). NaN payloads are quieted so the result is never an
+/// accidental infinity.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// Widen a bfloat16 bit pattern back to f32 (exact).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
 /// All model weights resident as one flat host f32 buffer plus the
 /// name → (offset, shape) table from the manifest.
 ///
@@ -26,6 +94,13 @@ use crate::util::rng::Rng;
 #[derive(Debug)]
 pub struct WeightStore {
     data: Vec<f32>,
+    /// Raw bf16 mirror of `data` (same offset/4 layout), present only
+    /// for [`WeightPrecision::Bf16`] stores: the SIMD matmul streams
+    /// these half-width words and widens in registers, halving the
+    /// weight-read bytes. `data` always holds the widened values, so
+    /// every f32 consumer sees identical numbers.
+    bf16: Option<Vec<u16>>,
+    precision: WeightPrecision,
     table: BTreeMap<String, WeightEntry>,
 }
 
@@ -61,7 +136,12 @@ impl WeightStore {
                 e.numel()
             );
         }
-        Ok(WeightStore { data, table })
+        Ok(WeightStore {
+            data,
+            bf16: None,
+            precision: WeightPrecision::F32,
+            table,
+        })
     }
 
     /// Build a store from an in-memory buffer + table (bounds-validated
@@ -79,7 +159,12 @@ impl WeightStore {
                 e.numel()
             );
         }
-        Ok(WeightStore { data, table })
+        Ok(WeightStore {
+            data,
+            bf16: None,
+            precision: WeightPrecision::F32,
+            table,
+        })
     }
 
     /// Generate deterministic synthetic weights for every entry in the
@@ -97,6 +182,34 @@ impl WeightStore {
     ///   `runtime::cpu`).
     /// * Matrices — normal, scaled by `1/sqrt(fan_in)` (first dim).
     pub fn seeded(manifest: &Manifest, seed: u64) -> WeightStore {
+        Self::seeded_with(manifest, seed, WeightPrecision::F32)
+    }
+
+    /// [`WeightStore::seeded`] with an explicit storage precision. For
+    /// [`WeightPrecision::Bf16`] every generated value is rounded to
+    /// bfloat16; the f32 buffer holds the widened rounded values and a
+    /// parallel raw-u16 mirror feeds the bf16-streaming SIMD matmul.
+    /// The value [`WeightStore::fingerprint`] therefore differs from
+    /// the f32 store's, so prefix-cache KV never crosses precisions.
+    pub fn seeded_with(
+        manifest: &Manifest,
+        seed: u64,
+        precision: WeightPrecision,
+    ) -> WeightStore {
+        let mut store = Self::seeded_f32(manifest, seed);
+        if precision == WeightPrecision::Bf16 {
+            let raw: Vec<u16> =
+                store.data.iter().map(|&v| f32_to_bf16(v)).collect();
+            for (v, &b) in store.data.iter_mut().zip(raw.iter()) {
+                *v = bf16_to_f32(b);
+            }
+            store.bf16 = Some(raw);
+            store.precision = WeightPrecision::Bf16;
+        }
+        store
+    }
+
+    fn seeded_f32(manifest: &Manifest, seed: u64) -> WeightStore {
         let total = manifest
             .weights
             .values()
@@ -159,6 +272,20 @@ impl WeightStore {
             .ok_or_else(|| anyhow!("unknown weight {name}"))?;
         let start = e.offset / 4;
         Ok(&self.data[start..start + e.numel()])
+    }
+
+    /// Borrow one tensor's raw bf16 words, or `None` on an f32 store.
+    /// Widening each word reproduces [`WeightStore::get`] exactly.
+    pub fn get_bf16(&self, name: &str) -> Option<&[u16]> {
+        let raw = self.bf16.as_ref()?;
+        let e = self.table.get(name)?;
+        let start = e.offset / 4;
+        Some(&raw[start..start + e.numel()])
+    }
+
+    /// Storage precision of this store.
+    pub fn precision(&self) -> WeightPrecision {
+        self.precision
     }
 
     /// One tensor's shape by name.
@@ -264,6 +391,78 @@ mod tests {
             assert!(wd.iter().chain(wu.iter()).all(|x| x.is_finite()));
             assert!(wd.iter().any(|&x| x != 0.0));
         }
+    }
+
+    #[test]
+    fn bf16_round_trip_and_rounding_mode() {
+        // Exactly representable values survive the round trip.
+        for v in [0.0f32, -0.0, 1.0, -2.0, 0.5, f32::INFINITY] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(v)).to_bits(), v.to_bits());
+        }
+        // Round-to-nearest-even on the dropped mantissa half: 1.0 plus
+        // exactly half a bf16 ulp rounds to the even neighbour (1.0).
+        let half_ulp = f32::from_bits(1.0f32.to_bits() + 0x8000);
+        assert_eq!(bf16_to_f32(f32_to_bf16(half_ulp)), 1.0);
+        // ...and anything past the halfway point rounds up.
+        let past = f32::from_bits(1.0f32.to_bits() + 0x8001);
+        assert!(bf16_to_f32(f32_to_bf16(past)) > 1.0);
+        // NaN stays NaN (never collapses to an infinity).
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // Relative error of rounding is within 2^-8 for normal values.
+        let v = 0.123456789f32;
+        let r = bf16_to_f32(f32_to_bf16(v));
+        assert!(((r - v) / v).abs() <= 1.0 / 256.0);
+    }
+
+    #[test]
+    fn seeded_bf16_store_mirrors_widened_values() {
+        let spec = crate::manifest::SyntheticSpec::default();
+        let m = Manifest::synthetic(&spec);
+        let f = WeightStore::seeded(&m, spec.seed);
+        let b = WeightStore::seeded_with(
+            &m,
+            spec.seed,
+            WeightPrecision::Bf16,
+        );
+        assert_eq!(f.precision(), WeightPrecision::F32);
+        assert_eq!(b.precision(), WeightPrecision::Bf16);
+        assert!(f.get_bf16("embed").is_none());
+        let mut any_rounded = false;
+        for name in b.names() {
+            let raw = b.get_bf16(name).expect("bf16 mirror present");
+            let wide = b.get(name).unwrap();
+            let full = f.get(name).unwrap();
+            assert_eq!(raw.len(), wide.len());
+            for i in 0..raw.len() {
+                // the f32 view is exactly the widened raw word…
+                assert_eq!(
+                    wide[i].to_bits(),
+                    bf16_to_f32(raw[i]).to_bits(),
+                    "{name}[{i}]"
+                );
+                // …which is the rounded full-precision value
+                assert_eq!(raw[i], f32_to_bf16(full[i]), "{name}[{i}]");
+                any_rounded |= wide[i].to_bits() != full[i].to_bits();
+            }
+        }
+        assert!(any_rounded, "rounding must actually change values");
+        assert_ne!(
+            f.fingerprint(),
+            b.fingerprint(),
+            "precisions must never share prefix-cache KV"
+        );
+    }
+
+    #[test]
+    fn weight_precision_parses_and_labels() {
+        assert_eq!(WeightPrecision::parse("f32"), Some(WeightPrecision::F32));
+        assert_eq!(
+            WeightPrecision::parse("bf16"),
+            Some(WeightPrecision::Bf16)
+        );
+        assert_eq!(WeightPrecision::parse("fp8"), None);
+        assert_eq!(WeightPrecision::F32.label(), "f32");
+        assert_eq!(WeightPrecision::Bf16.label(), "bf16");
     }
 
     #[test]

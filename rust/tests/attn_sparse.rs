@@ -9,6 +9,10 @@
 //! off-by-one prompt tails, chunks whose last attention block is
 //! clamped by the causal frontier, and decode steps stacked on KV that
 //! a sparse prefill produced.
+//!
+//! Every suite draws from `testing::fuzz_seed`: failure messages carry
+//! the RNG seed, and exporting `FF_TEST_SEED=<seed>` replays exactly
+//! that case deterministically.
 
 use fastforward::engine::{argmax, Engine, SparsityConfig};
 use fastforward::testing;
@@ -49,7 +53,8 @@ fn boundary_len(rng: &mut Rng, ab: usize, max_ctx: usize) -> usize {
 fn fuzz_sparse_prefill_is_finite() {
     let engine = testing::cpu_engine();
     let m = engine.manifest().model.clone();
-    let mut rng = Rng::new(0xA77_F022);
+    let seed = testing::fuzz_seed(0xA77_F022);
+    let mut rng = Rng::new(seed);
     for _ in 0..12 {
         let len = boundary_len(&mut rng, m.attn_block, m.max_ctx);
         let drop = rng.f64();
@@ -57,7 +62,8 @@ fn fuzz_sparse_prefill_is_finite() {
         let pre = engine.prefill(&prompt, &attn_cfg(drop)).unwrap();
         assert!(
             pre.last_logits.iter().all(|v| v.is_finite()),
-            "non-finite logit at len={len} drop={drop:.3}"
+            "non-finite logit at len={len} drop={drop:.3} — replay \
+             with FF_TEST_SEED={seed:#x}"
         );
         let elems = pre.cache.len * pre.cache.row_elems();
         for l in 0..pre.cache.n_layers {
@@ -66,7 +72,8 @@ fn fuzz_sparse_prefill_is_finite() {
                     && pre.cache.v[l][..elems]
                         .iter()
                         .all(|v| v.is_finite()),
-                "non-finite KV at layer {l} len={len} drop={drop:.3}"
+                "non-finite KV at layer {l} len={len} drop={drop:.3} \
+                 — replay with FF_TEST_SEED={seed:#x}"
             );
         }
     }
@@ -81,7 +88,8 @@ fn fuzz_sparse_prefill_is_finite() {
 fn fuzz_decode_after_full_coverage_prefill_matches_dense() {
     let engine = testing::cpu_engine();
     let m = engine.manifest().model.clone();
-    let mut rng = Rng::new(0xA77_D0DE);
+    let seed = testing::fuzz_seed(0xA77_D0DE);
+    let mut rng = Rng::new(seed);
     let dense_cfg = SparsityConfig::dense();
     let full_cfg = attn_cfg(0.0);
     for _ in 0..6 {
@@ -97,7 +105,8 @@ fn fuzz_decode_after_full_coverage_prefill_matches_dense() {
                 assert_eq!(
                     la[j].to_bits(),
                     lb[j].to_bits(),
-                    "len={len} step {step}: logit {j} diverged"
+                    "len={len} step {step}: logit {j} diverged — \
+                     replay with FF_TEST_SEED={seed:#x}"
                 );
             }
             let tok = argmax(&la) as i32;
@@ -119,7 +128,8 @@ fn fuzz_decode_after_full_coverage_prefill_matches_dense() {
 fn fuzz_decode_after_sparse_prefill_is_deterministic() {
     let engine = testing::cpu_engine();
     let m = engine.manifest().model.clone();
-    let mut rng = Rng::new(0xA77_5EED);
+    let seed = testing::fuzz_seed(0xA77_5EED);
+    let mut rng = Rng::new(seed);
     for _ in 0..4 {
         let len = boundary_len(&mut rng, m.attn_block, m.max_ctx / 2);
         let drop = 0.25 + rng.f64() * 0.75;
@@ -148,13 +158,15 @@ fn fuzz_decode_after_sparse_prefill_is_deterministic() {
             for j in 0..wa.len() {
                 assert!(
                     wa[j].is_finite(),
-                    "len={len} drop={drop:.3} step {step}: non-finite"
+                    "len={len} drop={drop:.3} step {step}: non-finite \
+                     — replay with FF_TEST_SEED={seed:#x}"
                 );
                 assert_eq!(
                     wa[j].to_bits(),
                     wb[j].to_bits(),
                     "len={len} drop={drop:.3} step {step}: logit {j} \
-                     not deterministic"
+                     not deterministic — replay with \
+                     FF_TEST_SEED={seed:#x}"
                 );
             }
         }

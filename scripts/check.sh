@@ -20,6 +20,14 @@ FF_CPU_THREADS=1 cargo test -q --test backend_conformance "${extra[@]}"
 echo "==> backend conformance suite (FF_CPU_THREADS=4)"
 FF_CPU_THREADS=4 cargo test -q --test backend_conformance "${extra[@]}"
 
+echo "==> backend conformance suite (FF_CPU_KERNEL=scalar)"
+FF_CPU_KERNEL=scalar cargo test -q --test backend_conformance \
+    "${extra[@]}"
+
+echo "==> backend conformance suite (FF_CPU_KERNEL=simd)"
+FF_CPU_KERNEL=simd cargo test -q --test backend_conformance \
+    "${extra[@]}"
+
 echo "==> one-block CPU perf smoke (sparse beats dense)"
 cargo test -q --test perf_smoke one_block_sparse_beats_dense "${extra[@]}"
 
@@ -31,12 +39,20 @@ echo "==> block-sparse attention perf smoke (50% >= 1.15x dense)"
 cargo test -q --test perf_smoke sparse_attention_beats_dense_at_t2048 \
     "${extra[@]}"
 
+echo "==> SIMD kernel-tier perf smoke (dense prefill >= 1.2x scalar)"
+cargo test -q --test perf_smoke simd_dense_prefill_beats_scalar_at_t512 \
+    "${extra[@]}"
+
 echo "==> fig10 continuous-batching smoke (--smoke: B in {1,4})"
 cargo bench --bench fig10_continuous_batching "${extra[@]}" -- \
     --backend cpu --smoke
 
 echo "==> fig11 sparse-attention smoke (--smoke: T in {512,1024})"
 cargo bench --bench fig11_sparse_attention "${extra[@]}" -- \
+    --backend cpu --smoke
+
+echo "==> fig12 kernel-tier smoke (--smoke: scalar/simd/bf16 at T=256)"
+cargo bench --bench fig12_kernel_tiers "${extra[@]}" -- \
     --backend cpu --smoke
 
 echo "==> cargo test --doc"
