@@ -5,12 +5,14 @@
 #   make serve       run the server against the built artifacts
 #   make serve-cpu   run the server on the pure-Rust CPU backend
 #                    (no artifacts, no XLA bindings needed)
-#   make bench-cpu   fig6/fig7/fig10/fig11/fig12 wall-clock benches on
-#                    the CPU backend; writes rust/BENCH_fig6_cpu.json,
+#   make bench-cpu   fig6/fig7/fig10/fig11/fig12/fig13 wall-clock
+#                    benches on the CPU backend; writes
+#                    rust/BENCH_fig6_cpu.json,
 #                    rust/BENCH_fig7_cpu.json,
 #                    rust/BENCH_fig10_cpu.json,
-#                    rust/BENCH_fig11_cpu.json and
-#                    rust/BENCH_fig12_cpu.json
+#                    rust/BENCH_fig11_cpu.json,
+#                    rust/BENCH_fig12_cpu.json and
+#                    rust/BENCH_fig13_cpu.json
 
 ARTIFACTS ?= rust/artifacts
 REPLICAS  ?= 1
@@ -37,6 +39,7 @@ bench-cpu:
 	cd rust && cargo bench --bench fig10_continuous_batching -- --backend cpu
 	cd rust && cargo bench --bench fig11_sparse_attention -- --backend cpu
 	cd rust && cargo bench --bench fig12_kernel_tiers -- --backend cpu
+	cd rust && cargo bench --bench fig13_quantized_weights -- --backend cpu
 
 clean:
 	cd rust && cargo clean

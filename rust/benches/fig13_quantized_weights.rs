@@ -1,0 +1,177 @@
+//! Figure 13: quantized weight storage — dense prefill throughput and
+//! resident memory of the f32 / bf16 / int8 weight tiers on the SIMD
+//! kernels.
+//!
+//! For each context length T, the bench prefills a T-token prompt on
+//! the FFN-heavy synthetic model (the tier-1 perf-gate regime: dense
+//! FFN matmuls dominate) under three engine configurations, all on
+//! `--cpu-kernel simd`:
+//!
+//! * **simd-f32** — f32 weight panels (the baseline tier),
+//! * **simd-bf16** — raw bf16 panels widened to f32 in-register,
+//!   halving the weight-read bytes (`--weight-precision bf16`),
+//! * **simd-int8** — int8 codes + per-column-tile f32 scales
+//!   dequantized in-register, quartering the weight-read bytes
+//!   (`--weight-precision int8`).
+//!
+//! Reported as tokens/s plus each tier's resident weight bytes
+//! (`WeightStore::resident_bytes`) and the process RSS after engine
+//! construction — the memory story is half the point of load-time
+//! quantization. Needs no artifacts and emits `BENCH_fig13_cpu.json`.
+//!
+//! Flags: `--smoke` for the quick check.sh gate (T = 256 only).
+//! Acceptance (full run): simd-int8 ≥ 1.2× simd-f32 tokens/s at
+//! T = 512 — the same bar `tests/perf_smoke.rs` gates in tier-1.
+
+mod common;
+
+use std::time::Instant;
+
+use fastforward::engine::Engine;
+use fastforward::manifest::SyntheticSpec;
+use fastforward::runtime::{CpuKernel, CpuOptions};
+use fastforward::util::cli::Args;
+use fastforward::weights::{WeightPrecision, WeightStore};
+
+/// FFN-heavy bench model (same regime as the tier-1 perf gates).
+fn bench_spec(precision: WeightPrecision) -> SyntheticSpec {
+    SyntheticSpec {
+        name: "ff-perf-quant-weights".to_string(),
+        n_layers: 2,
+        d_ffn: 1024,
+        max_ctx: 1024,
+        buckets: vec![512, 1024],
+        weight_precision: precision,
+        ..SyntheticSpec::default()
+    }
+}
+
+fn tier_engine(precision: WeightPrecision) -> Engine {
+    Engine::synthetic_cpu_with(
+        &bench_spec(precision),
+        CpuOptions {
+            threads: 0,
+            reference: false,
+            kernel: Some(CpuKernel::Simd),
+        },
+    )
+    .expect("synthetic tier engine")
+}
+
+/// Resident bytes of a standalone store seeded like the bench engine's
+/// (the engine shares one `Arc`'d store; this measures the same thing
+/// without reaching into engine internals).
+fn store_bytes(precision: WeightPrecision) -> usize {
+    let spec = bench_spec(precision);
+    let manifest = fastforward::manifest::Manifest::synthetic(&spec);
+    WeightStore::seeded_with(&manifest, spec.seed, precision)
+        .resident_bytes()
+}
+
+/// Process resident set size from /proc/self/status (kB → bytes);
+/// `None` off Linux or if the field is missing.
+fn process_rss_bytes() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmRSS:"))?;
+    let kb: usize =
+        line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
+/// Best-of-2 dense prefill wall-clock → tokens/s.
+fn tokens_per_s(engine: &Engine, len: usize) -> f64 {
+    let toks = common::prompt_tokens(len, 0xF16_13);
+    let cfg = fastforward::engine::SparsityConfig::dense();
+    engine.prefill(&toks, &cfg).unwrap(); // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        engine.prefill(&toks, &cfg).unwrap();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    len as f64 / best
+}
+
+fn main() {
+    common::header(
+        "Figure 13",
+        "quantized weight tiers: dense prefill tokens/s + resident \
+         bytes (simd-f32 / simd-bf16 / simd-int8)",
+    );
+    let args = Args::parse_env();
+    let smoke = args.has("smoke");
+    let lens: &[usize] = if smoke { &[256] } else { &[256, 512, 1024] };
+    println!(
+        "backend: cpu (synthetic FFN-heavy model){}",
+        if smoke { ", smoke mode" } else { "" }
+    );
+
+    let precisions = [
+        ("simd-f32", WeightPrecision::F32),
+        ("simd-bf16", WeightPrecision::Bf16),
+        ("simd-int8", WeightPrecision::Int8),
+    ];
+    let tiers: Vec<(&str, WeightPrecision, Engine)> = precisions
+        .iter()
+        .map(|&(name, p)| (name, p, tier_engine(p)))
+        .collect();
+
+    println!("{:>10} {:>16} {:>14}", "tier", "weight bytes", "RSS");
+    let mut mem_rows = Vec::new();
+    for &(name, p, _) in &tiers {
+        let bytes = store_bytes(p);
+        let rss = process_rss_bytes();
+        println!(
+            "{:>10} {:>14.1}MB {:>14}",
+            name,
+            bytes as f64 / (1024.0 * 1024.0),
+            rss.map_or("n/a".to_string(),
+                       |r| format!("{:.1}MB", r as f64 / 1048576.0)),
+        );
+        mem_rows.push(format!(
+            "{{\"tier\":\"{name}\",\"weight_bytes\":{bytes},\
+             \"rss_bytes\":{}}}",
+            rss.map_or("null".to_string(), |r| r.to_string())
+        ));
+    }
+
+    println!("{:>6} {:>14} {:>14} {:>14}", "T", tiers[0].0, tiers[1].0,
+             tiers[2].0);
+    let mut rows = Vec::new();
+    let mut int8_vs_f32_at_512 = None;
+    for &len in lens {
+        let tps: Vec<f64> =
+            tiers.iter().map(|(_, _, e)| tokens_per_s(e, len)).collect();
+        println!(
+            "{:>6} {:>12.0}/s {:>12.0}/s {:>12.0}/s",
+            len, tps[0], tps[1], tps[2]
+        );
+        if len == 512 {
+            int8_vs_f32_at_512 = Some(tps[2] / tps[0]);
+        }
+        rows.push(format!(
+            "{{\"len\":{len},\"simd_f32_tps\":{:.1},\
+             \"simd_bf16_tps\":{:.1},\"simd_int8_tps\":{:.1}}}",
+            tps[0], tps[1], tps[2]
+        ));
+    }
+
+    common::write_bench_json(
+        "BENCH_fig13_cpu.json",
+        &format!(
+            "{{\"figure\":\"fig13_quantized_weights\",\
+             \"backend\":\"cpu\",\"smoke\":{smoke},\
+             \"memory\":[{}],\"points\":[{}]}}\n",
+            mem_rows.join(","),
+            rows.join(",")
+        ),
+    );
+
+    if let Some(ratio) = int8_vs_f32_at_512 {
+        println!(
+            "acceptance: T=512 simd-int8 ≥ 1.2x simd-f32 → {:.2}x {}",
+            ratio,
+            if ratio >= 1.2 { "PASS" } else { "MISS" }
+        );
+    }
+}

@@ -255,9 +255,10 @@ impl Engine {
     /// and fast (`threads ∈ {1, 4, …}`, scalar/SIMD kernel tier)
     /// engines over the *same* seeded weights. The spec's
     /// `weight_precision` selects the storage mode
-    /// ([`crate::weights::WeightStore::seeded_with`]): bf16 stores
-    /// carry the widened-f32 mirror every scalar consumer reads plus
-    /// the raw u16 panels the SIMD kernel streams.
+    /// ([`crate::weights::WeightStore::seeded_with`]): f32, bf16 (raw
+    /// u16 panels, widened in-register) or int8 (codes +
+    /// per-column-tile scales, dequantized in-register) — exactly one
+    /// representation stays resident per store.
     pub fn synthetic_cpu_with(
         spec: &crate::manifest::SyntheticSpec,
         opts: crate::runtime::CpuOptions,
@@ -715,12 +716,17 @@ pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
     logits.iter().map(|&x| x - lse).collect()
 }
 
-/// Greedy argmax over logits.
+/// Greedy argmax over logits. Total order (`f32::total_cmp`) with the
+/// lowest index winning ties, so the pick is deterministic and a NaN
+/// logit can never panic the sampling path (the runtime additionally
+/// rejects non-finite activations before they ever reach a sampler).
 pub fn argmax(logits: &[f32]) -> usize {
     logits
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| {
+            a.1.total_cmp(b.1).then_with(|| b.0.cmp(&a.0))
+        })
         .map(|(i, _)| i)
         .unwrap_or(0)
 }

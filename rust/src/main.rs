@@ -42,9 +42,11 @@ fn usage() -> ! {
               the sequential reference; simd is deterministic and
               thread-invariant but re-associates reductions, so it is
               validated under a ULP tolerance tier instead)
-             --weight-precision f32|bf16 (synthetic weight storage;
-              default FF_WEIGHT_PREC, else f32. bf16 stores weights
-              rounded-to-nearest-even and accumulates in f32)
+             --weight-precision f32|bf16|int8 (synthetic weight
+              storage; default FF_WEIGHT_PREC, else f32. bf16 stores
+              weights rounded-to-nearest-even; int8 stores symmetric
+              absmax codes + per-column-tile f32 scales; both
+              dequantize in-register and accumulate in f32)
              --attn-sparsity A (block-sparse attention for full prefill
               blocks: fraction of optional causal key blocks dropped,
               0..1; 0 = dense attention. Quantized onto the manifest's
@@ -466,7 +468,8 @@ fn main() -> Result<()> {
     if let Some(p) = args.opt_str("weight-precision") {
         if fastforward::weights::WeightPrecision::parse(&p).is_none() {
             return Err(anyhow!(
-                "unknown --weight-precision {p:?} (expected f32|bf16)"
+                "unknown --weight-precision {p:?} \
+                 (expected f32|bf16|int8)"
             ));
         }
         std::env::set_var(fastforward::weights::PRECISION_ENV, p);

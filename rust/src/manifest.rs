@@ -189,8 +189,10 @@ pub struct SyntheticSpec {
     /// Storage precision of the seeded weights
     /// ([`crate::weights::WeightStore::seeded_with`]): `F32` is the
     /// bitwise-gated default; `Bf16` rounds every weight to bfloat16
-    /// (f32 accumulation) and is conformance-gated at the relaxed
-    /// tolerance tier (`testing::bf16_spec`).
+    /// (f32 accumulation), conformance-gated at the relaxed tolerance
+    /// tier (`testing::bf16_spec`); `Int8` stores symmetric-absmax
+    /// codes + per-column-tile f32 scales, dequantized in-register and
+    /// gated by `testing::int8_spec`.
     pub weight_precision: crate::weights::WeightPrecision,
 }
 

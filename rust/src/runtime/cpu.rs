@@ -39,7 +39,18 @@
 //!   (`crate::testing::simd_spec`), not bitwise identity. On a bf16
 //!   weight store ([`crate::weights::WeightPrecision::Bf16`]) the SIMD
 //!   matmul additionally streams the raw half-width weight words and
-//!   widens them in registers (f32 accumulation throughout).
+//!   widens them in registers (f32 accumulation throughout). On an
+//!   int8 store ([`crate::weights::WeightPrecision::Int8`]) it streams
+//!   quarter-width codes plus one f32 scale per
+//!   [`crate::weights::QUANT_TILE`]-wide row slice
+//!   ([`kernels::matmul_tiled_int8`]), dequantizing `q as f32 * scale`
+//!   in-register with the same fixed fold order — so the int8 tier is
+//!   deterministic, thread-invariant and batch-invariant exactly like
+//!   scalar/simd/bf16, and is gated by the wider
+//!   `crate::testing::int8_spec` tolerance tier. Under the scalar
+//!   kernel or the reference oracle a reduced-precision store is
+//!   dequantized once to an f32 shadow at construction, so those
+//!   paths keep their sequential-order numerics unchanged.
 //!
 //! Every executable the engine can dispatch —
 //!
@@ -101,7 +112,7 @@ use anyhow::{anyhow, Result};
 use crate::manifest::{ExecutableSpec, Manifest};
 use crate::sparsity::masks::top_k_indices;
 use crate::util::threadpool::{self, ThreadPool};
-use crate::weights::WeightStore;
+use crate::weights::{WeightPrecision, WeightStore, WeightView};
 
 use super::backend::{sequential_batch, Backend, BatchRow, BatchRowOut};
 use super::{DispatchStats, Input, Output};
@@ -500,8 +511,83 @@ mod kernels {
     pub(super) const ROW_CHUNK: usize = 16;
     /// Output-column tile width per task: 128 f32 = 512 B of
     /// accumulator slab, small enough to stay in L1 while a weight
-    /// panel streams through.
+    /// panel streams through. Must equal
+    /// [`crate::weights::QUANT_TILE`] so the int8 store's
+    /// per-row-slice scales line up one-to-one with the kernels'
+    /// column tiles (asserted below).
     pub(super) const COL_TILE: usize = 128;
+    const _: () = assert!(
+        COL_TILE == crate::weights::QUANT_TILE,
+        "int8 scale tiling must match the kernel column tile"
+    );
+
+    /// A weight panel in whichever representation the store keeps
+    /// resident. Kernels widen reduced panels to f32 in-register —
+    /// bf16 exactly, int8 as `q as f32 * scale` with one scale per
+    /// [`COL_TILE`]-wide row slice — in the same fixed fold order as
+    /// the f32 SIMD path, preserving the module-level determinism
+    /// contract (reduction order is a pure function of operands and
+    /// kernel tier, never of threads, tiling, or batch shape).
+    #[derive(Clone, Copy)]
+    pub(super) enum Panel<'a> {
+        /// Full-precision panel.
+        F32(&'a [f32]),
+        /// Raw bf16 words of the logical `[m, n]` panel.
+        Bf16(&'a [u16]),
+        /// int8 codes plus per-`(row, COL_TILE slice)` f32 scales for
+        /// a panel whose rows are `cols` elements wide (`cols` must
+        /// equal the matmul `n`; debug-asserted at every row access).
+        I8 { q: &'a [i8], scales: &'a [f32], cols: usize },
+    }
+
+    impl<'a> Panel<'a> {
+        /// Element count of the backing buffer (codes for int8).
+        pub(super) fn elems(&self) -> usize {
+            match self {
+                Panel::F32(w) => w.len(),
+                Panel::Bf16(w) => w.len(),
+                Panel::I8 { q, .. } => q.len(),
+            }
+        }
+
+        /// Row `j` columns `[c0, c1)` as f32, widening reduced panels
+        /// into `buf`. `n` is the row stride; the caller's task grid
+        /// guarantees `c0` is COL_TILE-aligned and
+        /// `c1 - c0 <= COL_TILE`, so an int8 slice spans exactly one
+        /// scale tile.
+        #[inline]
+        fn row<'b>(&self, j: usize, n: usize, c0: usize, c1: usize,
+                   buf: &'b mut [f32; COL_TILE]) -> &'b [f32]
+        where
+            'a: 'b,
+        {
+            let width = c1 - c0;
+            match *self {
+                Panel::F32(w) => &w[j * n + c0..j * n + c1],
+                Panel::Bf16(raw) => {
+                    for (wc, &b) in buf[..width]
+                        .iter_mut()
+                        .zip(raw[j * n + c0..j * n + c1].iter())
+                    {
+                        *wc = crate::weights::bf16_to_f32(b);
+                    }
+                    &buf[..width]
+                }
+                Panel::I8 { q, scales, cols } => {
+                    debug_assert_eq!(cols, n);
+                    let s =
+                        scales[j * n.div_ceil(COL_TILE) + c0 / COL_TILE];
+                    for (wc, &cq) in buf[..width]
+                        .iter_mut()
+                        .zip(q[j * n + c0..j * n + c1].iter())
+                    {
+                        *wc = cq as f32 * s;
+                    }
+                    &buf[..width]
+                }
+            }
+        }
+    }
     /// Register-blocked row micro-tile: each loaded weight panel row is
     /// reused across this many token rows.
     const ROW_BLOCK: usize = 4;
@@ -619,20 +705,7 @@ mod kernels {
     pub(super) fn matmul_tiled_simd(x: &[f32], w: &[f32], t: usize,
                                     m: usize, n: usize,
                                     pool: &ThreadPool) -> Vec<f32> {
-        debug_assert_eq!(x.len(), t * m);
-        debug_assert_eq!(w.len(), m * n);
-        let mut out = vec![0.0f32; t * n];
-        let (rows, cols) = grid(t, n);
-        let optr = OutPtr(out.as_mut_ptr());
-        pool.run(rows * cols, |task| {
-            let (ri, ci) = (task / cols, task % cols);
-            let (r0, r1) = (ri * ROW_CHUNK, (ri * ROW_CHUNK + ROW_CHUNK).min(t));
-            let (c0, c1) = (ci * COL_TILE, (ci * COL_TILE + COL_TILE).min(n));
-            let p = optr;
-            // SAFETY: tasks cover disjoint [r0,r1) × [c0,c1) regions.
-            unsafe { matmul_block_simd(x, None, w, m, n, r0, r1, c0, c1, p.0) };
-        });
-        out
+        matmul_tiled_wide(x, Panel::F32(w), t, m, n, pool)
     }
 
     /// [`matmul_tiled_simd`] streaming a raw bf16 weight buffer
@@ -641,12 +714,39 @@ mod kernels {
     /// per reduction step, then accumulated exactly as the f32 SIMD
     /// kernel does. Widening bf16→f32 is exact, so over a bf16 weight
     /// store this is bit-identical to [`matmul_tiled_simd`] on the
-    /// widened `data` mirror — it just moves half the weight bytes.
+    /// widened f32 panel — it just moves half the weight bytes.
     pub(super) fn matmul_tiled_bf16(x: &[f32], w16: &[u16], t: usize,
                                     m: usize, n: usize,
                                     pool: &ThreadPool) -> Vec<f32> {
+        matmul_tiled_wide(x, Panel::Bf16(w16), t, m, n, pool)
+    }
+
+    /// [`matmul_tiled_simd`] streaming int8 codes (`q`, one per
+    /// element of the logical `[m, n]` panel) plus per-`(row,
+    /// COL_TILE slice)` f32 `scales`: each panel row slice is
+    /// dequantized `q as f32 * scale` into a stack buffer once per
+    /// reduction step, then accumulated exactly as the f32 SIMD
+    /// kernel does. The dequantized values are identical for every
+    /// task/thread split (one scale covers the whole slice), so over
+    /// the *same* codes this is bit-identical to
+    /// [`matmul_tiled_simd`] on the dequantized panel — it just moves
+    /// a quarter of the weight bytes. Accuracy vs the original f32
+    /// weights is bounded by the quantizer (absmax/254 per element)
+    /// and gated by `crate::testing::int8_spec`.
+    pub(super) fn matmul_tiled_int8(x: &[f32], q: &[i8], scales: &[f32],
+                                    t: usize, m: usize, n: usize,
+                                    pool: &ThreadPool) -> Vec<f32> {
+        debug_assert_eq!(scales.len(), m * n.div_ceil(COL_TILE));
+        matmul_tiled_wide(x, Panel::I8 { q, scales, cols: n }, t, m, n,
+                          pool)
+    }
+
+    /// Shared grid driver for the SIMD-tier matmuls over any panel
+    /// representation.
+    fn matmul_tiled_wide(x: &[f32], w: Panel<'_>, t: usize, m: usize,
+                         n: usize, pool: &ThreadPool) -> Vec<f32> {
         debug_assert_eq!(x.len(), t * m);
-        debug_assert_eq!(w16.len(), m * n);
+        debug_assert_eq!(w.elems(), m * n);
         let mut out = vec![0.0f32; t * n];
         let (rows, cols) = grid(t, n);
         let optr = OutPtr(out.as_mut_ptr());
@@ -656,21 +756,19 @@ mod kernels {
             let (c0, c1) = (ci * COL_TILE, (ci * COL_TILE + COL_TILE).min(n));
             let p = optr;
             // SAFETY: tasks cover disjoint [r0,r1) × [c0,c1) regions.
-            unsafe {
-                matmul_block_simd(x, Some(w16), &[], m, n, r0, r1, c0, c1, p.0)
-            };
+            unsafe { matmul_block_simd(x, w, m, n, r0, r1, c0, c1, p.0) };
         });
         out
     }
 
     /// One register-tiled block for the SIMD tier. Reads the weight
-    /// panel from `w16` (widening bf16→f32 into a stack row buffer)
-    /// when present, else from the f32 `w`.
+    /// panel through [`Panel::row`], widening reduced representations
+    /// into a stack row buffer.
     ///
     /// SAFETY: caller guarantees `out` points at a `[t, n]` buffer and
     /// no other thread touches rows `[r0, r1)` columns `[c0, c1)`.
     #[allow(clippy::too_many_arguments)]
-    unsafe fn matmul_block_simd(x: &[f32], w16: Option<&[u16]>, w: &[f32],
+    unsafe fn matmul_block_simd(x: &[f32], w: Panel<'_>,
                                 m: usize, n: usize, r0: usize, r1: usize,
                                 c0: usize, c1: usize, out: *mut f32) {
         let width = c1 - c0;
@@ -680,18 +778,7 @@ mod kernels {
             let rend = (rb + ROW_BLOCK).min(r1);
             let mut acc = [[0.0f32; COL_TILE]; ROW_BLOCK];
             for i in 0..m {
-                let wrow: &[f32] = match w16 {
-                    Some(raw) => {
-                        for (wc, &b) in wide[..width]
-                            .iter_mut()
-                            .zip(raw[i * n + c0..i * n + c1].iter())
-                        {
-                            *wc = crate::weights::bf16_to_f32(b);
-                        }
-                        &wide[..width]
-                    }
-                    None => &w[i * n + c0..i * n + c1],
-                };
+                let wrow = w.row(i, n, c0, c1, &mut wide);
                 for r in rb..rend {
                     let xv = x[r * m + i];
                     let arow = &mut acc[r - rb];
@@ -711,19 +798,55 @@ mod kernels {
         }
     }
 
+    /// Full-row dot `x · panel[j, :]` (`x.len() == d`). An f32 panel
+    /// reduces in one pass — lane-chunked when `simd`, else the
+    /// sequential bitwise order. A reduced panel widens one
+    /// COL_TILE-wide slice at a time into a stack buffer and folds the
+    /// per-slice partial sums in ascending slice order — a pure
+    /// function of the operands and representation, so the reduced
+    /// gather path keeps the determinism contract (tolerance tier).
+    fn panel_row_dot(x: &[f32], p: Panel<'_>, j: usize, d: usize,
+                     simd: bool) -> f32 {
+        if let Panel::F32(w) = p {
+            let row = &w[j * d..(j + 1) * d];
+            return if simd {
+                lane_dot(x, row)
+            } else {
+                x.iter().zip(row.iter()).map(|(a, b)| a * b).sum()
+            };
+        }
+        let mut buf = [0.0f32; COL_TILE];
+        let mut sum = 0.0f32;
+        let mut c0 = 0;
+        while c0 < d {
+            let c1 = (c0 + COL_TILE).min(d);
+            let row = p.row(j, d, c0, c1, &mut buf);
+            let xa = &x[c0..c1];
+            sum += if simd {
+                lane_dot(xa, row)
+            } else {
+                xa.iter().zip(row.iter()).map(|(a, b)| a * b).sum::<f32>()
+            };
+            c0 = c1;
+        }
+        sum
+    }
+
     /// Gathered SwiGLU activations restricted to `idx`, compact layout:
     /// `out[r, j'] = silu(h2[r]·gate_t[idx[j']]) * (h2[r]·up_t[idx[j']])`
-    /// over pre-transposed `[f, d]` gate/up weights, so each selected
-    /// neuron is one pair of contiguous row dots. With `simd` unset the
-    /// dots ascend the `d` axis — bit-identical to the corresponding
-    /// columns of the dense `h2 @ w_gate` / `h2 @ w_up` matmuls; with
-    /// `simd` set they run through [`lane_dot`] (tolerance tier). Cost
-    /// scales with `idx.len()` instead of `d_ffn`: this is the
-    /// sub-dense sparse hot path.
+    /// over pre-transposed `[f, d]` gate/up panels, so each selected
+    /// neuron is one pair of contiguous row dots ([`panel_row_dot`]).
+    /// With `simd` unset (f32 panels only) the dots ascend the `d`
+    /// axis — bit-identical to the corresponding columns of the dense
+    /// `h2 @ w_gate` / `h2 @ w_up` matmuls; with `simd` set they run
+    /// through [`lane_dot`] (tolerance tier), dequantizing int8 panels
+    /// slice-by-slice inside the loop. Cost scales with `idx.len()`
+    /// instead of `d_ffn`: this is the sub-dense sparse hot path.
     #[allow(clippy::too_many_arguments)]
-    pub(super) fn gather_acts(h2: &[f32], gate_t: &[f32], up_t: &[f32],
-                              t: usize, d: usize, idx: &[i32],
-                              simd: bool, pool: &ThreadPool) -> Vec<f32> {
+    pub(super) fn gather_acts(h2: &[f32], gate_t: Panel<'_>,
+                              up_t: Panel<'_>, t: usize, d: usize,
+                              idx: &[i32], simd: bool,
+                              pool: &ThreadPool) -> Vec<f32> {
         let k = idx.len();
         debug_assert_eq!(h2.len(), t * d);
         let mut out = vec![0.0f32; t * k];
@@ -738,19 +861,8 @@ mod kernels {
                 let hr = &h2[r * d..(r + 1) * d];
                 for jj in c0..c1 {
                     let j = idx[jj] as usize;
-                    let (g, u) = if simd {
-                        (lane_dot(hr, &gate_t[j * d..(j + 1) * d]),
-                         lane_dot(hr, &up_t[j * d..(j + 1) * d]))
-                    } else {
-                        (hr.iter()
-                            .zip(gate_t[j * d..(j + 1) * d].iter())
-                            .map(|(a, b)| a * b)
-                            .sum(),
-                         hr.iter()
-                            .zip(up_t[j * d..(j + 1) * d].iter())
-                            .map(|(a, b)| a * b)
-                            .sum())
-                    };
+                    let g = panel_row_dot(hr, gate_t, j, d, simd);
+                    let u = panel_row_dot(hr, up_t, j, d, simd);
                     // SAFETY: element (r, jj) belongs to this task only.
                     unsafe {
                         *p.0.add(r * k + jj) = super::silu(g) * u;
@@ -763,15 +875,18 @@ mod kernels {
 
     /// Tiled down-projection over full-width activations `[t, f]`:
     /// `out[r, c] += Σ_{j ∈ idx} alpha?[j] · acts[r, j] · w_down[j, c]`,
-    /// `j` in `idx` order per element — bit-identical to the reference
-    /// `down_proj` loop.
+    /// `j` in `idx` order per element — over an f32 panel this is
+    /// bit-identical to the reference `down_proj` loop; reduced panels
+    /// widen each `[j, c0..c1)` slice on the stack first (bf16
+    /// exactly; int8 with its one scale per slice) and keep the same
+    /// accumulation order.
     #[allow(clippy::too_many_arguments)]
-    pub(super) fn down_proj_tiled(acts: &[f32], w_down: &[f32],
+    pub(super) fn down_proj_tiled(acts: &[f32], w_down: Panel<'_>,
                                   alpha: Option<&[f32]>, t: usize,
                                   f: usize, d: usize, idx: &[i32],
                                   pool: &ThreadPool) -> Vec<f32> {
         debug_assert_eq!(acts.len(), t * f);
-        debug_assert_eq!(w_down.len(), f * d);
+        debug_assert_eq!(w_down.elems(), f * d);
         let mut out = vec![0.0f32; t * d];
         let (rows, cols) = grid(t, d);
         let optr = OutPtr(out.as_mut_ptr());
@@ -781,6 +896,7 @@ mod kernels {
             let (c0, c1) = (ci * COL_TILE, (ci * COL_TILE + COL_TILE).min(d));
             let width = c1 - c0;
             let p = optr;
+            let mut wide = [0.0f32; COL_TILE];
             for r in r0..r1 {
                 // SAFETY: rows/cols of this region belong to this task.
                 let orow = unsafe { p.0.add(r * d + c0) };
@@ -788,7 +904,7 @@ mod kernels {
                     let j = ji as usize;
                     let a = acts[r * f + j]
                         * alpha.map_or(1.0, |al| al[j]);
-                    let wrow = &w_down[j * d + c0..j * d + c1];
+                    let wrow = w_down.row(j, d, c0, c1, &mut wide);
                     for c in 0..width {
                         unsafe { *orow.add(c) += a * wrow[c] };
                     }
@@ -802,8 +918,9 @@ mod kernels {
     /// (column `j'` holds neuron `idx[j']`):
     /// `out[r, c] += Σ_{j'} acts[r, j'] · w_down[idx[j'], c]`.
     /// Same per-element accumulation order as `down_proj_tiled` /
-    /// the reference loop over the same `idx`.
-    pub(super) fn down_proj_compact(acts: &[f32], w_down: &[f32],
+    /// the reference loop over the same `idx`; reduced panels widen
+    /// each row slice on the stack exactly as `down_proj_tiled` does.
+    pub(super) fn down_proj_compact(acts: &[f32], w_down: Panel<'_>,
                                     t: usize, d: usize, idx: &[i32],
                                     pool: &ThreadPool) -> Vec<f32> {
         let k = idx.len();
@@ -817,13 +934,14 @@ mod kernels {
             let (c0, c1) = (ci * COL_TILE, (ci * COL_TILE + COL_TILE).min(d));
             let width = c1 - c0;
             let p = optr;
+            let mut wide = [0.0f32; COL_TILE];
             for r in r0..r1 {
                 // SAFETY: rows/cols of this region belong to this task.
                 let orow = unsafe { p.0.add(r * d + c0) };
                 for (jj, &ji) in idx.iter().enumerate() {
                     let j = ji as usize;
                     let a = acts[r * k + jj];
-                    let wrow = &w_down[j * d + c0..j * d + c1];
+                    let wrow = w_down.row(j, d, c0, c1, &mut wide);
                     for c in 0..width {
                         unsafe { *orow.add(c) += a * wrow[c] };
                     }
@@ -939,6 +1057,24 @@ pub struct CpuBackend {
     gate_t: Vec<Vec<f32>>,
     /// Fast path only: per-layer transposed `w_up` (`[f, d]`).
     up_t: Vec<Vec<f32>>,
+    /// Int8 + SIMD only: per-layer transposed gate panels re-quantized
+    /// along the `d` axis (`[f, d]` codes + per-`(neuron, QUANT_TILE
+    /// slice)` scales), so the gathered sparse path streams
+    /// quarter-width rows like the dense path does. Empty on every
+    /// other tier (the f32 `gate_t`/`up_t` panels are used instead).
+    gate_t_q: Vec<(Vec<i8>, Vec<f32>)>,
+    /// Int8 + SIMD only: per-layer transposed up panels (see
+    /// `gate_t_q`).
+    up_t_q: Vec<(Vec<i8>, Vec<f32>)>,
+    /// Dequantized f32 copies served by [`Self::w`] when the store
+    /// keeps a reduced representation. Under the reference oracle or
+    /// the scalar kernel tier this holds *every* tensor (those paths
+    /// keep their sequential-order f32 numerics, at f32 residency);
+    /// under SIMD it holds only the tensors the kernels consume as
+    /// f32 — the 1-D gains/alphas and the `embed` table (row copies,
+    /// never a matmul operand) — so reduced residency is preserved on
+    /// the tier that exists to exploit it.
+    shadow: HashMap<String, Vec<f32>>,
 }
 
 impl CpuBackend {
@@ -975,7 +1111,7 @@ impl CpuBackend {
                         -> Result<Self> {
         for name in ["embed", "final_rms", "lm_head", "layers.0.wq",
                      "layers.0.rms1", "pred.0.wd", "comp.0.alpha"] {
-            weights.get(name).map_err(|_| {
+            weights.shape(name).map_err(|_| {
                 anyhow!(
                     "cpu backend: weight table missing '{name}' — the \
                      interpreter requires the ff weight naming convention"
@@ -989,18 +1125,45 @@ impl CpuBackend {
                 (opts.threads > 0).then_some(opts.threads),
             )
         };
+        let kernel = opts.resolved_kernel();
+        let precision = weights.precision();
+
+        // Dequantized f32 shadow (struct-field docs): everything for
+        // reference/scalar over a reduced store, just the non-matmul
+        // tensors (1-D gains/alphas + embed row table) under SIMD.
+        let mut shadow = HashMap::new();
+        if precision != WeightPrecision::F32 {
+            let full = opts.reference || kernel == CpuKernel::Scalar;
+            for name in weights.names() {
+                let small =
+                    name == "embed" || weights.shape(name)?.len() < 2;
+                if full || small {
+                    shadow.insert(name.clone(), weights.dequant(name)?);
+                }
+            }
+        }
+
         let (mut gate_t, mut up_t) = (Vec::new(), Vec::new());
+        let (mut gate_t_q, mut up_t_q) = (Vec::new(), Vec::new());
         if !opts.reference {
             let (d, f) = (manifest.model.d_model, manifest.model.d_ffn);
+            let quantized_gather = precision == WeightPrecision::Int8
+                && kernel == CpuKernel::Simd;
             for l in 0..manifest.model.n_layers {
-                let g = weights.get(&format!("layers.{l}.w_gate"))?;
-                let u = weights.get(&format!("layers.{l}.w_up"))?;
+                let g = weights.dequant(&format!("layers.{l}.w_gate"))?;
+                let u = weights.dequant(&format!("layers.{l}.w_up"))?;
                 anyhow::ensure!(
                     g.len() == d * f && u.len() == d * f,
                     "layer {l}: gate/up shape mismatch"
                 );
-                gate_t.push(transpose(g, d, f));
-                up_t.push(transpose(u, d, f));
+                let (gt, ut) = (transpose(&g, d, f), transpose(&u, d, f));
+                if quantized_gather {
+                    gate_t_q.push(crate::weights::quantize_int8(&gt, f, d));
+                    up_t_q.push(crate::weights::quantize_int8(&ut, f, d));
+                } else {
+                    gate_t.push(gt);
+                    up_t.push(ut);
+                }
             }
         }
         Ok(CpuBackend {
@@ -1009,10 +1172,13 @@ impl CpuBackend {
             ops: RefCell::new(HashMap::new()),
             stats: RefCell::new(DispatchStats::default()),
             reference: opts.reference,
-            kernel: opts.resolved_kernel(),
+            kernel,
             pool: ThreadPool::new(threads),
             gate_t,
             up_t,
+            gate_t_q,
+            up_t_q,
+            shadow,
         })
     }
 
@@ -1059,9 +1225,15 @@ impl CpuBackend {
         Ok(op)
     }
 
-    /// Fetch a weight slice, validating its element count.
+    /// Fetch a weight slice as f32, validating its element count.
+    /// Serves the dequantized shadow when the store is reduced (the
+    /// construction shadow policy guarantees the shadow covers every
+    /// name this is called with on the active tier).
     fn w(&self, name: &str, expect: usize) -> Result<&[f32]> {
-        let data = self.weights.get(name)?;
+        let data = match self.shadow.get(name) {
+            Some(s) => s.as_slice(),
+            None => self.weights.get(name)?,
+        };
         anyhow::ensure!(
             data.len() == expect,
             "weight {name}: {} elements, interpreter expects {expect}",
@@ -1074,49 +1246,101 @@ impl CpuBackend {
         self.w(&format!("layers.{l}.{role}"), expect)
     }
 
-    /// Raw bf16 mirror of a named weight (`None` on f32 stores — and
-    /// deliberately `None` in reference/scalar modes, which always
-    /// consume the widened f32 `data`).
-    fn w16(&self, name: &str) -> Option<&[u16]> {
-        self.weights.get_bf16(name)
+    /// Fetch a weight as a kernel [`kernels::Panel`] in the
+    /// representation the active tier consumes: the f32 shadow when
+    /// present (always, for reference/scalar over a reduced store),
+    /// else the store's native panel (f32, raw bf16 words, or int8
+    /// codes + scales). Validates the element count.
+    fn wp(&self, name: &str, expect: usize)
+          -> Result<kernels::Panel<'_>> {
+        if let Some(s) = self.shadow.get(name) {
+            anyhow::ensure!(
+                s.len() == expect,
+                "weight {name}: {} elements, interpreter expects {expect}",
+                s.len()
+            );
+            return Ok(kernels::Panel::F32(s));
+        }
+        let p = match self.weights.view(name)? {
+            WeightView::F32(w) => kernels::Panel::F32(w),
+            WeightView::Bf16(raw) => kernels::Panel::Bf16(raw),
+            WeightView::Int8 { q, scales, cols } => {
+                kernels::Panel::I8 { q, scales, cols }
+            }
+        };
+        anyhow::ensure!(
+            p.elems() == expect,
+            "weight {name}: {} elements, interpreter expects {expect}",
+            p.elems()
+        );
+        Ok(p)
     }
 
-    /// [`Self::w16`] for a per-layer weight role.
-    fn lw16(&self, l: usize, role: &str) -> Option<&[u16]> {
-        self.w16(&format!("layers.{l}.{role}"))
+    /// [`Self::wp`] for a per-layer weight role.
+    fn lwp(&self, l: usize, role: &str, expect: usize)
+           -> Result<kernels::Panel<'_>> {
+        self.wp(&format!("layers.{l}.{role}"), expect)
     }
 
     /// Matmul through the active kernel tier (naive in reference mode,
     /// tiled + pooled otherwise; bit-identical to the reference in
-    /// scalar tier, tolerance tier under SIMD).
-    fn mm(&self, x: &[f32], w: &[f32], t: usize, m: usize, n: usize)
-          -> Vec<f32> {
-        self.mm2(x, w, None, t, m, n)
-    }
-
-    /// [`Self::mm`] with an optional raw bf16 mirror of `w`: in SIMD
-    /// tier with the mirror present, the kernel streams the half-width
-    /// weight words and widens in registers (numerically identical to
-    /// the f32 SIMD kernel over the widened store — widening is exact
-    /// — just half the weight traffic). Scalar and reference tiers
-    /// always consume the widened f32 panel.
-    fn mm2(&self, x: &[f32], w: &[f32], w16: Option<&[u16]>, t: usize,
-           m: usize, n: usize) -> Vec<f32> {
-        if self.reference {
-            return matmul(x, w, t, m, n);
-        }
-        match (self.kernel, w16) {
-            (CpuKernel::Scalar, _) => {
+    /// scalar tier, tolerance tier under SIMD). Reduced-precision
+    /// panels only reach the SIMD kernels — bf16 streams half-width
+    /// words, int8 streams quarter-width codes + per-tile scales —
+    /// because reference/scalar modes shadow every tensor to f32 at
+    /// construction.
+    fn mm2(&self, x: &[f32], w: kernels::Panel<'_>, t: usize, m: usize,
+           n: usize) -> Vec<f32> {
+        if self.reference || self.kernel == CpuKernel::Scalar {
+            let kernels::Panel::F32(w) = w else {
+                unreachable!(
+                    "reference/scalar tiers consume the f32 shadow"
+                );
+            };
+            return if self.reference {
+                matmul(x, w, t, m, n)
+            } else {
                 kernels::matmul_tiled(x, w, t, m, n, &self.pool)
-            }
-            (CpuKernel::Simd, Some(raw)) => {
-                debug_assert_eq!(raw.len(), w.len());
-                kernels::matmul_tiled_bf16(x, raw, t, m, n, &self.pool)
-            }
-            (CpuKernel::Simd, None) => {
+            };
+        }
+        match w {
+            kernels::Panel::F32(w) => {
                 kernels::matmul_tiled_simd(x, w, t, m, n, &self.pool)
             }
+            kernels::Panel::Bf16(raw) => {
+                kernels::matmul_tiled_bf16(x, raw, t, m, n, &self.pool)
+            }
+            kernels::Panel::I8 { q, scales, cols } => {
+                debug_assert_eq!(cols, n);
+                kernels::matmul_tiled_int8(x, q, scales, t, m, n,
+                                           &self.pool)
+            }
         }
+    }
+
+    /// The gathered sparse-FFN gate/up panels for layer `l`, in the
+    /// representation the active tier streams (int8 under SIMD on an
+    /// int8 store, f32 otherwise). Errors in reference mode, which
+    /// builds no panels.
+    fn gather_panels(&self, l: usize)
+                     -> Result<(kernels::Panel<'_>, kernels::Panel<'_>)> {
+        if l < self.gate_t_q.len() {
+            let (gq, gs) = &self.gate_t_q[l];
+            let (uq, us) = &self.up_t_q[l];
+            let d = self.manifest.model.d_model;
+            return Ok((
+                kernels::Panel::I8 { q: gq, scales: gs, cols: d },
+                kernels::Panel::I8 { q: uq, scales: us, cols: d },
+            ));
+        }
+        anyhow::ensure!(
+            l < self.gate_t.len() && l < self.up_t.len(),
+            "layer {l} out of range for transposed FFN weights"
+        );
+        Ok((
+            kernels::Panel::F32(&self.gate_t[l]),
+            kernels::Panel::F32(&self.up_t[l]),
+        ))
     }
 
     /// Compute the block-sparse attention plan for a chunk when the
@@ -1175,14 +1399,12 @@ impl CpuBackend {
         );
 
         let h1 = self.rms(x, self.lw(l, "rms1", d)?, t, d);
-        let mut q = self.mm2(&h1, self.lw(l, "wq", d * nh * dh)?,
-                             self.lw16(l, "wq"), t, d, nh * dh);
-        let mut k_new =
-            self.mm2(&h1, self.lw(l, "wk", d * nkv * dh)?,
-                     self.lw16(l, "wk"), t, d, nkv * dh);
-        let v_new =
-            self.mm2(&h1, self.lw(l, "wv", d * nkv * dh)?,
-                     self.lw16(l, "wv"), t, d, nkv * dh);
+        let mut q = self.mm2(&h1, self.lwp(l, "wq", d * nh * dh)?, t, d,
+                             nh * dh);
+        let mut k_new = self.mm2(&h1, self.lwp(l, "wk", d * nkv * dh)?,
+                                 t, d, nkv * dh);
+        let v_new = self.mm2(&h1, self.lwp(l, "wv", d * nkv * dh)?, t,
+                             d, nkv * dh);
         for r in 0..t {
             rope_row(&mut q[r * nh * dh..(r + 1) * nh * dh], nh, dh,
                      pos + r);
@@ -1261,8 +1483,8 @@ impl CpuBackend {
                 attn_row(r, out_row, &mut scores);
             });
         }
-        let proj = self.mm2(&attn, self.lw(l, "wo", nh * dh * d)?,
-                            self.lw16(l, "wo"), t, nh * dh, d);
+        let proj = self.mm2(&attn, self.lwp(l, "wo", nh * dh * d)?, t,
+                            nh * dh, d);
         Ok((add(x, &proj), k_new, v_new))
     }
 
@@ -1273,10 +1495,9 @@ impl CpuBackend {
         let m = &self.manifest.model;
         let (d, f) = (m.d_model, m.d_ffn);
         let h2 = self.rms(h, self.lw(l, "rms2", d)?, t, d);
-        let gate = self.mm2(&h2, self.lw(l, "w_gate", d * f)?,
-                            self.lw16(l, "w_gate"), t, d, f);
-        let up = self.mm2(&h2, self.lw(l, "w_up", d * f)?,
-                          self.lw16(l, "w_up"), t, d, f);
+        let gate =
+            self.mm2(&h2, self.lwp(l, "w_gate", d * f)?, t, d, f);
+        let up = self.mm2(&h2, self.lwp(l, "w_up", d * f)?, t, d, f);
         Ok(gate
             .iter()
             .zip(up.iter())
@@ -1295,7 +1516,6 @@ impl CpuBackend {
                  alpha: Option<&[f32]>) -> Result<Vec<f32>> {
         let m = &self.manifest.model;
         let (d, f) = (m.d_model, m.d_ffn);
-        let w_down = self.lw(l, "w_down", f * d)?;
         for &ji in idx {
             anyhow::ensure!(
                 ji >= 0 && (ji as usize) < f,
@@ -1303,6 +1523,7 @@ impl CpuBackend {
             );
         }
         if !self.reference {
+            let w_down = self.lwp(l, "w_down", f * d)?;
             // The full-range ungated projection is exactly the matmul
             // `acts [t, f] @ w_down [f, d]` with the same per-element
             // accumulation order (ascending j), so route it through
@@ -1316,13 +1537,13 @@ impl CpuBackend {
                 && idx.len() == f
                 && idx.iter().enumerate().all(|(i, &j)| j as usize == i);
             if full {
-                return Ok(self.mm2(acts, w_down, self.lw16(l, "w_down"),
-                                   t, f, d));
+                return Ok(self.mm2(acts, w_down, t, f, d));
             }
             return Ok(kernels::down_proj_tiled(
                 acts, w_down, alpha, t, f, d, idx, &self.pool,
             ));
         }
+        let w_down = self.lw(l, "w_down", f * d)?;
         let mut out = vec![0.0f32; t * d];
         for r in 0..t {
             for &ji in idx {
@@ -1358,16 +1579,12 @@ impl CpuBackend {
             let acts = self.ffn_activations(l, h, t)?;
             return self.down_proj(l, &acts, t, idx, None);
         }
-        anyhow::ensure!(
-            l < self.gate_t.len(),
-            "layer {l} out of range for transposed weight cache"
-        );
+        let (gate_p, up_p) = self.gather_panels(l)?;
         let h2 = self.rms(h, self.lw(l, "rms2", d)?, t, d);
         let acts = kernels::gather_acts(
-            &h2, &self.gate_t[l], &self.up_t[l], t, d, idx,
-            self.simd(), &self.pool,
+            &h2, gate_p, up_p, t, d, idx, self.simd(), &self.pool,
         );
-        let w_down = self.lw(l, "w_down", f * d)?;
+        let w_down = self.lwp(l, "w_down", f * d)?;
         Ok(kernels::down_proj_compact(
             &acts, w_down, t, d, idx, &self.pool,
         ))
@@ -1381,18 +1598,21 @@ impl CpuBackend {
         let m = &self.manifest.model;
         let (d, f) = (m.d_model, m.d_ffn);
         let h2 = self.rms(h, self.lw(l, "rms2", d)?, t, d);
-        let wd = self.weights.get(&format!("pred.{l}.wd"))?;
+        let wd_numel: usize = self
+            .weights
+            .shape(&format!("pred.{l}.wd"))?
+            .iter()
+            .product();
         anyhow::ensure!(
-            !wd.is_empty() && wd.len() % d == 0,
-            "pred.{l}.wd: {} elements not a multiple of d_model {d}",
-            wd.len()
+            wd_numel > 0 && wd_numel % d == 0,
+            "pred.{l}.wd: {wd_numel} elements not a multiple of \
+             d_model {d}"
         );
-        let rank = wd.len() / d;
-        let wu = self.w(&format!("pred.{l}.wu"), rank * f)?;
-        let z = self.mm2(&h2, wd, self.w16(&format!("pred.{l}.wd")), t,
-                         d, rank);
-        let p = self.mm2(&z, wu, self.w16(&format!("pred.{l}.wu")), t,
-                         rank, f);
+        let rank = wd_numel / d;
+        let wd = self.wp(&format!("pred.{l}.wd"), d * rank)?;
+        let wu = self.wp(&format!("pred.{l}.wu"), rank * f)?;
+        let z = self.mm2(&h2, wd, t, d, rank);
+        let p = self.mm2(&z, wu, t, rank, f);
         let mut scores = vec![0.0f32; f];
         for r in 0..t {
             for j in 0..f {
@@ -1442,8 +1662,13 @@ impl CpuBackend {
             Op::LmHead { t } => {
                 let x = f32_input(inputs, exe, "x")?;
                 let xr = self.rms(x, self.w("final_rms", d)?, t, d);
-                let logits = self.mm2(&xr, self.w("lm_head", d * vocab)?,
-                                      self.w16("lm_head"), t, d, vocab);
+                let logits = self.mm2(
+                    &xr,
+                    self.wp("lm_head", d * vocab)?,
+                    t,
+                    d,
+                    vocab,
+                );
                 Ok(vec![Output { data: logits }])
             }
             Op::LayerDense { t, s, a } => {
@@ -1636,15 +1861,14 @@ impl CpuBackend {
             x_all[o * d..(o + r.t) * d].copy_from_slice(r.x);
         }
         let h1 = self.rms(&x_all, self.lw(layer, "rms1", d)?, total, d);
-        let mut q =
-            self.mm2(&h1, self.lw(layer, "wq", d * nh * dh)?,
-                     self.lw16(layer, "wq"), total, d, nh * dh);
+        let mut q = self.mm2(&h1, self.lwp(layer, "wq", d * nh * dh)?,
+                             total, d, nh * dh);
         let mut k_new_all =
-            self.mm2(&h1, self.lw(layer, "wk", d * nkv * dh)?,
-                     self.lw16(layer, "wk"), total, d, nkv * dh);
+            self.mm2(&h1, self.lwp(layer, "wk", d * nkv * dh)?, total,
+                     d, nkv * dh);
         let v_new_all =
-            self.mm2(&h1, self.lw(layer, "wv", d * nkv * dh)?,
-                     self.lw16(layer, "wv"), total, d, nkv * dh);
+            self.mm2(&h1, self.lwp(layer, "wv", d * nkv * dh)?, total,
+                     d, nkv * dh);
         for (r, &o) in rows.iter().zip(&offs) {
             for lr in 0..r.t {
                 let g = o + lr;
@@ -1753,8 +1977,8 @@ impl CpuBackend {
                 }
             });
         }
-        let proj = self.mm2(&attn, self.lw(layer, "wo", nh * dh * d)?,
-                            self.lw16(layer, "wo"), total, nh * dh, d);
+        let proj = self.mm2(&attn, self.lwp(layer, "wo", nh * dh * d)?,
+                            total, nh * dh, d);
         let h = add(&x_all, &proj);
 
         // ---- FFN: stacked weight passes, per-row expert selection --
@@ -1800,12 +2024,10 @@ impl CpuBackend {
         // three FFN weight panels are read once for the whole group.
         if !dense_rows.is_empty() {
             let (h2d, go, tt) = stack(&dense_rows);
-            let gate =
-                self.mm2(&h2d, self.lw(layer, "w_gate", d * f)?,
-                         self.lw16(layer, "w_gate"), tt, d, f);
-            let up =
-                self.mm2(&h2d, self.lw(layer, "w_up", d * f)?,
-                         self.lw16(layer, "w_up"), tt, d, f);
+            let gate = self.mm2(&h2d, self.lwp(layer, "w_gate", d * f)?,
+                                tt, d, f);
+            let up = self.mm2(&h2d, self.lwp(layer, "w_up", d * f)?, tt,
+                              d, f);
             let acts: Vec<f32> = gate
                 .iter()
                 .zip(up.iter())
@@ -1815,9 +2037,8 @@ impl CpuBackend {
             // `acts @ w_down` (same ascending-j accumulation order —
             // see `down_proj`); dispatch the matmul directly instead
             // of materializing a 0..d_ffn index vector per pass
-            let w_down = self.lw(layer, "w_down", f * d)?;
-            let yd = self.mm2(&acts, w_down, self.lw16(layer, "w_down"),
-                              tt, f, d);
+            let w_down = self.lwp(layer, "w_down", f * d)?;
+            let yd = self.mm2(&acts, w_down, tt, f, d);
             for (&i, &o) in dense_rows.iter().zip(&go) {
                 y[i] = Some(yd[o * d..(o + rows[i].t) * d].to_vec());
             }
@@ -1839,21 +2060,21 @@ impl CpuBackend {
         let mut idx_of: Vec<Option<Vec<i32>>> = vec![None; rows.len()];
         if !pred_rows.is_empty() {
             let (h2p, go, tt) = stack(&pred_rows);
-            let wd = self.weights.get(&format!("pred.{layer}.wd"))?;
+            let wd_numel: usize = self
+                .weights
+                .shape(&format!("pred.{layer}.wd"))?
+                .iter()
+                .product();
             anyhow::ensure!(
-                !wd.is_empty() && wd.len() % d == 0,
-                "pred.{layer}.wd: {} elements not a multiple of \
-                 d_model {d}",
-                wd.len()
+                wd_numel > 0 && wd_numel % d == 0,
+                "pred.{layer}.wd: {wd_numel} elements not a multiple \
+                 of d_model {d}"
             );
-            let rank = wd.len() / d;
-            let wu = self.w(&format!("pred.{layer}.wu"), rank * f)?;
-            let z = self.mm2(&h2p, wd,
-                             self.w16(&format!("pred.{layer}.wd")), tt,
-                             d, rank);
-            let p = self.mm2(&z, wu,
-                             self.w16(&format!("pred.{layer}.wu")), tt,
-                             rank, f);
+            let rank = wd_numel / d;
+            let wd = self.wp(&format!("pred.{layer}.wd"), d * rank)?;
+            let wu = self.wp(&format!("pred.{layer}.wu"), rank * f)?;
+            let z = self.mm2(&h2p, wd, tt, d, rank);
+            let p = self.mm2(&z, wu, tt, rank, f);
             for (&i, &o) in pred_rows.iter().zip(&go) {
                 let k = match ops[i] {
                     Op::LayerSparse { k, .. }
@@ -1875,12 +2096,10 @@ impl CpuBackend {
         // projections (dense cost by construction; conformance path).
         if !comp_rows.is_empty() {
             let (h2c, go, tt) = stack(&comp_rows);
-            let gate =
-                self.mm2(&h2c, self.lw(layer, "w_gate", d * f)?,
-                         self.lw16(layer, "w_gate"), tt, d, f);
-            let up =
-                self.mm2(&h2c, self.lw(layer, "w_up", d * f)?,
-                         self.lw16(layer, "w_up"), tt, d, f);
+            let gate = self.mm2(&h2c, self.lwp(layer, "w_gate", d * f)?,
+                                tt, d, f);
+            let up = self.mm2(&h2c, self.lwp(layer, "w_up", d * f)?, tt,
+                              d, f);
             let acts: Vec<f32> = gate
                 .iter()
                 .zip(up.iter())
@@ -1907,11 +2126,8 @@ impl CpuBackend {
         // transposed panels — cost scales with each row's K, and the
         // indices (hence the touched neurons) are per row.
         if !nc_rows.is_empty() {
-            anyhow::ensure!(
-                layer < self.gate_t.len(),
-                "layer {layer} out of range for transposed weight cache"
-            );
-            let w_down = self.lw(layer, "w_down", f * d)?;
+            let (gate_p, up_p) = self.gather_panels(layer)?;
+            let w_down = self.lwp(layer, "w_down", f * d)?;
             for &i in &nc_rows {
                 let t = rows[i].t;
                 let span = &h2[offs[i] * d..(offs[i] + t) * d];
@@ -1919,14 +2135,7 @@ impl CpuBackend {
                     .as_ref()
                     .ok_or_else(|| anyhow!("row {i}: missing indices"))?;
                 let acts = kernels::gather_acts(
-                    span,
-                    &self.gate_t[layer],
-                    &self.up_t[layer],
-                    t,
-                    d,
-                    idx,
-                    simd,
-                    &self.pool,
+                    span, gate_p, up_p, t, d, idx, simd, &self.pool,
                 );
                 y[i] = Some(kernels::down_proj_compact(
                     &acts, w_down, t, d, idx, &self.pool,
@@ -2218,8 +2427,16 @@ mod tests {
             // gathered path over transposed weights
             let gate_t = transpose(&gate, d, f);
             let up_t = transpose(&up, d, f);
-            let acts = kernels::gather_acts(&h2, &gate_t, &up_t, t, d,
-                                            &idx, false, &pool);
+            let acts = kernels::gather_acts(
+                &h2,
+                kernels::Panel::F32(&gate_t),
+                kernels::Panel::F32(&up_t),
+                t,
+                d,
+                &idx,
+                false,
+                &pool,
+            );
             // gathered compact activations == the selected columns
             for r in 0..t {
                 for (jj, &ji) in idx.iter().enumerate() {
@@ -2232,8 +2449,14 @@ mod tests {
                     }
                 }
             }
-            let got = kernels::down_proj_compact(&acts, &w_down, t, d,
-                                                 &idx, &pool);
+            let got = kernels::down_proj_compact(
+                &acts,
+                kernels::Panel::F32(&w_down),
+                t,
+                d,
+                &idx,
+                &pool,
+            );
             assert_bits_eq(&naive, &got,
                            &format!("t={t} d={d} f={f} k={k}"))?;
 
@@ -2250,7 +2473,14 @@ mod tests {
                 }
             }
             let got_a = kernels::down_proj_tiled(
-                &acts_full, &w_down, Some(&alpha), t, f, d, &idx, &pool,
+                &acts_full,
+                kernels::Panel::F32(&w_down),
+                Some(&alpha),
+                t,
+                f,
+                d,
+                &idx,
+                &pool,
             );
             assert_bits_eq(&naive_a, &got_a, "down_proj_tiled+alpha")
         });
@@ -2351,6 +2581,135 @@ mod tests {
     }
 
     #[test]
+    fn prop_int8_matmul_matches_simd_over_dequantized_weights() {
+        use crate::weights::quantize_int8;
+        let pools: Vec<ThreadPool> =
+            [1, 2, 4].iter().map(|&t| ThreadPool::new(t)).collect();
+        proptest::check("int8-matmul", 30, |rng| {
+            let t = [1, 3, 17][rng.range(0, 3)];
+            let m = rng.range(1, 50);
+            let n = [1, 31, 128, 130, 257][rng.range(0, 5)];
+            let x = rand_vec(rng, t * m);
+            let w = rand_vec(rng, m * n);
+            let (q, scales) = quantize_int8(&w, m, n);
+            // `q as f32 * scale` yields the same f32 for every
+            // task/thread split, so the int8 kernel must be bitwise
+            // the f32 SIMD kernel over the dequantized panel
+            let wide: Vec<f32> = q
+                .iter()
+                .enumerate()
+                .map(|(i, &c)| {
+                    let (r, col) = (i / n, i % n);
+                    c as f32
+                        * scales[r * n.div_ceil(kernels::COL_TILE)
+                            + col / kernels::COL_TILE]
+                })
+                .collect();
+            let a = kernels::matmul_tiled_simd(&x, &wide, t, m, n,
+                                               &pools[0]);
+            let b = kernels::matmul_tiled_int8(&x, &q, &scales, t, m, n,
+                                               &pools[0]);
+            assert_bits_eq(&a, &b, &format!("t={t} m={m} n={n}"))?;
+            // thread-invariant like every other kernel tier
+            for pool in &pools[1..] {
+                let c = kernels::matmul_tiled_int8(&x, &q, &scales, t,
+                                                   m, n, pool);
+                assert_bits_eq(&b, &c, "int8 thread-invariance")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_int8_gather_and_down_proj_are_deterministic_and_close() {
+        use crate::weights::quantize_int8;
+        let pools: Vec<ThreadPool> =
+            [1, 2, 4].iter().map(|&t| ThreadPool::new(t)).collect();
+        proptest::check("int8-gather", 20, |rng| {
+            let t = rng.range(1, 5);
+            let d = [8, 64, 130, 200][rng.range(0, 4)];
+            let f = rng.range(4, 40);
+            let k = rng.range(1, f + 1);
+            let x = rand_vec(rng, t * d);
+            let gate_t = rand_vec(rng, f * d);
+            let up_t = rand_vec(rng, f * d);
+            let idx = rand_idx(rng, f, k);
+            let (gq, gs) = quantize_int8(&gate_t, f, d);
+            let (uq, us) = quantize_int8(&up_t, f, d);
+            let gp = kernels::Panel::I8 { q: &gq, scales: &gs, cols: d };
+            let up = kernels::Panel::I8 { q: &uq, scales: &us, cols: d };
+            let base = kernels::gather_acts(&x, gp, up, t, d, &idx,
+                                            true, &pools[0]);
+            // quantization error bounded → close to the f32 gather
+            let f32acts = kernels::gather_acts(
+                &x,
+                kernels::Panel::F32(&gate_t),
+                kernels::Panel::F32(&up_t),
+                t,
+                d,
+                &idx,
+                true,
+                &pools[0],
+            );
+            for i in 0..base.len() {
+                let (a, b) = (f32acts[i], base[i]);
+                let tol = 0.05f32.max(0.05 * a.abs().max(b.abs()));
+                if (a - b).abs() > tol {
+                    return Err(format!(
+                        "gather[{i}]: int8 {b} vs f32 {a}"
+                    ));
+                }
+            }
+            // deterministic + thread-invariant (bitwise within tier)
+            for pool in &pools[1..] {
+                let other = kernels::gather_acts(&x, gp, up, t, d, &idx,
+                                                 true, pool);
+                for i in 0..base.len() {
+                    if base[i].to_bits() != other[i].to_bits() {
+                        return Err(format!(
+                            "gather[{i}] thread-variant"
+                        ));
+                    }
+                }
+            }
+            // compact down-proj over an int8 panel: bitwise equal to
+            // the same kernel over the dequantized panel (one scale
+            // per COL_TILE slice → identical widened values), and
+            // thread-invariant
+            let w_down = rand_vec(rng, f * d);
+            let (dq, ds) = quantize_int8(&w_down, f, d);
+            let wide: Vec<f32> = dq
+                .iter()
+                .enumerate()
+                .map(|(i, &c)| {
+                    let (r, col) = (i / d, i % d);
+                    c as f32
+                        * ds[r * d.div_ceil(kernels::COL_TILE)
+                            + col / kernels::COL_TILE]
+                })
+                .collect();
+            let dp = kernels::Panel::I8 { q: &dq, scales: &ds, cols: d };
+            let y8 = kernels::down_proj_compact(&base, dp, t, d, &idx,
+                                                &pools[0]);
+            let yw = kernels::down_proj_compact(
+                &base,
+                kernels::Panel::F32(&wide),
+                t,
+                d,
+                &idx,
+                &pools[0],
+            );
+            assert_bits_eq(&yw, &y8, "down_proj_compact int8 vs wide")?;
+            for pool in &pools[1..] {
+                let yo = kernels::down_proj_compact(&base, dp, t, d,
+                                                    &idx, pool);
+                assert_bits_eq(&y8, &yo, "down_proj thread-invariance")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_simd_rmsnorm_and_gather_within_ulp_of_scalar() {
         let pool = ThreadPool::new(2);
         proptest::check("simd-rmsnorm-gather", 30, |rng| {
@@ -2373,10 +2732,26 @@ mod tests {
             let gate_t = rand_vec(rng, f * d);
             let up_t = rand_vec(rng, f * d);
             let idx = rand_idx(rng, f, k);
-            let sc = kernels::gather_acts(&x, &gate_t, &up_t, t, d, &idx,
-                                          false, &pool);
-            let sv = kernels::gather_acts(&x, &gate_t, &up_t, t, d, &idx,
-                                          true, &pool);
+            let sc = kernels::gather_acts(
+                &x,
+                kernels::Panel::F32(&gate_t),
+                kernels::Panel::F32(&up_t),
+                t,
+                d,
+                &idx,
+                false,
+                &pool,
+            );
+            let sv = kernels::gather_acts(
+                &x,
+                kernels::Panel::F32(&gate_t),
+                kernels::Panel::F32(&up_t),
+                t,
+                d,
+                &idx,
+                true,
+                &pool,
+            );
             for i in 0..sc.len() {
                 if !within_ulp(sc[i], sv[i], 512, 1e-4) {
                     return Err(format!(

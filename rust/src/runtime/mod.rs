@@ -195,8 +195,9 @@ impl Runtime {
     /// determinism contract, so their KV is interchangeable. The CPU
     /// *kernel tier* is the exception — it changes accumulation order,
     /// so [`Runtime::cpu_with_options`] mixes the resolved tier on top
-    /// of this base (bf16 weight stores differ automatically through
-    /// [`WeightStore::fingerprint`] over the rounded values).
+    /// of this base (reduced-precision weight stores — bf16, int8 —
+    /// differ automatically through [`WeightStore::fingerprint`] over
+    /// the stored representation plus a precision label).
     fn fingerprint_for(kind: BackendKind, manifest: &Manifest,
                        weights: &WeightStore) -> u64 {
         use crate::util::hash;
@@ -252,6 +253,12 @@ impl Runtime {
     /// and shape-checked against the manifest spec; weight arguments
     /// resolve through the manifest + weight store inside the backend.
     /// Returns the decomposed output tuple as host f32 tensors.
+    ///
+    /// Outputs are screened for non-finite values: a NaN/inf activation
+    /// (corrupt weights, numeric overflow) comes back as a request
+    /// `Err` naming the executable and offending element — never as a
+    /// poisoned tensor that would later panic a score ordering or a
+    /// sampler deep inside the engine.
     pub fn run(&self, exe_name: &str, layer: usize,
                inputs: &[(&str, Input)]) -> Result<Vec<Output>> {
         let manifest = self.manifest.clone();
@@ -260,7 +267,28 @@ impl Runtime {
             .get(exe_name)
             .ok_or_else(|| anyhow!("unknown executable {exe_name}"))?;
         Self::validate_inputs(spec, inputs)?;
-        self.backend.execute(spec, layer, inputs)
+        let outputs = self.backend.execute(spec, layer, inputs)?;
+        for (i, out) in outputs.iter().enumerate() {
+            Self::ensure_finite(exe_name, &format!("output {i}"),
+                                &out.data)?;
+        }
+        Ok(outputs)
+    }
+
+    /// Reject non-finite backend outputs as a request error. A NaN or
+    /// inf that slipped through here would surface much later as a
+    /// nonsense sample or a panicking comparison; failing the dispatch
+    /// keeps the blast radius to the one request that produced it.
+    fn ensure_finite(exe: &str, what: &str, data: &[f32]) -> Result<()> {
+        if let Some((i, v)) =
+            data.iter().enumerate().find(|(_, v)| !v.is_finite())
+        {
+            return Err(anyhow!(
+                "{exe}: non-finite activation in {what} at element {i} \
+                 ({v}) — rejecting the request instead of propagating it"
+            ));
+        }
+        Ok(())
     }
 
     /// ABI validation common to every backend: each declared input
@@ -305,7 +333,9 @@ impl Runtime {
     /// [`Backend::execute_batch`] call so it can fold the rows into
     /// shared weight passes. Outputs come back in row order and are
     /// bit-identical to dispatching each row through [`Runtime::run`]
-    /// one at a time.
+    /// one at a time. Like [`Runtime::run`], non-finite activations in
+    /// any row's outputs fail the dispatch with a request error naming
+    /// the row's executable.
     pub fn run_layer_batch(&self, layer: usize, rows: &[StepRow])
                            -> Result<Vec<BatchRowOut>> {
         let m = &self.manifest.model;
@@ -343,7 +373,13 @@ impl Runtime {
                 v_cache: row.v_cache,
             });
         }
-        self.backend.execute_batch(layer, &resolved)
+        let outs = self.backend.execute_batch(layer, &resolved)?;
+        for (row, out) in rows.iter().zip(&outs) {
+            Self::ensure_finite(row.exe, "y", &out.y)?;
+            Self::ensure_finite(row.exe, "k_new", &out.k_new)?;
+            Self::ensure_finite(row.exe, "v_new", &out.v_new)?;
+        }
+        Ok(outs)
     }
 }
 
@@ -540,6 +576,49 @@ mod tests {
             s2.numeric_fingerprint(),
             "simd fingerprint is deterministic"
         );
+    }
+
+    /// A NaN smuggled into the weight store must surface as a request
+    /// error naming the executable — not poison downstream score
+    /// orderings (where a NaN comparison used to panic the replica).
+    #[test]
+    fn non_finite_activations_are_a_request_error() {
+        let spec = SyntheticSpec::default();
+        let m = Arc::new(Manifest::synthetic(&spec));
+        let seeded = WeightStore::seeded(&m, spec.seed);
+        // Rebuild the seeded store's flat f32 buffer entry by entry,
+        // then poison one embedding value and reload via `from_data`.
+        let total = m
+            .weights
+            .values()
+            .map(|e| e.offset / 4 + e.numel())
+            .max()
+            .unwrap();
+        let mut data = vec![0f32; total];
+        for (name, e) in &m.weights {
+            let start = e.offset / 4;
+            data[start..start + e.numel()]
+                .copy_from_slice(&seeded.dequant(name).unwrap());
+        }
+        let embed = &m.weights["embed"];
+        data[embed.offset / 4 + 1] = f32::NAN;
+        let w = Arc::new(
+            WeightStore::from_data(data, m.weights.clone()).unwrap(),
+        );
+        let rt = Runtime::cpu(m, w).unwrap();
+        let block = rt.manifest.model.block;
+        // Flat element 1 of `embed` ([vocab, d_model]) is token row 0,
+        // column 1 — embedding token 0 streams the NaN straight out.
+        let tokens = vec![0i32; block];
+        let err = rt
+            .run(
+                &format!("embed_t{block}"),
+                0,
+                &[("tokens", Input::I32(&tokens, vec![block]))],
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("non-finite"), "{err}");
     }
 
     #[test]

@@ -29,9 +29,13 @@ pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<i32> {
     }
     let mut idx: Vec<usize> = (0..scores.len()).collect();
     if k < scores.len() {
-        // O(f) partial selection of the k largest by score.
+        // O(f) partial selection of the k largest by score. Score
+        // descending, then index ascending — a *total* order
+        // (`f32::total_cmp` never panics on NaN, unlike
+        // `partial_cmp().unwrap()`), so the selection is deterministic
+        // under tied scores and NaN-safe.
         idx.select_nth_unstable_by(k - 1, |&a, &b| {
-            scores[b].partial_cmp(&scores[a]).unwrap()
+            scores[b].total_cmp(&scores[a]).then_with(|| a.cmp(&b))
         });
         idx.truncate(k);
     }
@@ -60,7 +64,8 @@ pub fn cats_threshold_indices(scores: &[f32], threshold: f32) -> Vec<i32> {
 /// Pick the CATS threshold achieving `density` on a score sample.
 pub fn cats_calibrate_threshold(scores: &[f32], density: f64) -> f32 {
     let mut abs: Vec<f32> = scores.iter().map(|s| s.abs()).collect();
-    abs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    // Descending total order — NaN-safe where partial_cmp would panic.
+    abs.sort_by(|a, b| b.total_cmp(a));
     let keep = ((abs.len() as f64) * density).round() as usize;
     if keep == 0 {
         return f32::MAX;
@@ -112,7 +117,12 @@ mod tests {
     fn naive_top_k(scores: &[f32], k: usize) -> Vec<i32> {
         let mut pairs: Vec<(f32, usize)> =
             scores.iter().cloned().zip(0..).collect();
-        pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        // Same total order as the fast path: score descending, index
+        // ascending — so the two selections agree *exactly*, ties and
+        // all (and neither can panic on NaN).
+        pairs.sort_by(|a, b| {
+            b.0.total_cmp(&a.0).then_with(|| a.1.cmp(&b.1))
+        });
         let mut idx: Vec<i32> =
             pairs.iter().take(k).map(|&(_, i)| i as i32).collect();
         idx.sort_unstable();
@@ -136,17 +146,11 @@ mod tests {
                 (0..n).map(|_| (r.f64() * 20.0 - 10.0) as f32).collect();
             let fast = top_k_indices(&scores, k);
             let naive = naive_top_k(&scores, k);
-            // score multisets must match (indices may differ under ties)
-            let sf: Vec<f32> =
-                fast.iter().map(|&i| scores[i as usize]).collect();
-            let sn: Vec<f32> =
-                naive.iter().map(|&i| scores[i as usize]).collect();
-            let sum_f: f32 = sf.iter().sum();
-            let sum_n: f32 = sn.iter().sum();
-            crate::prop_assert!(fast.len() == naive.len(), "len");
+            // same total order (score desc, index asc) → the index
+            // *sets* agree exactly, ties included
             crate::prop_assert!(
-                (sum_f - sum_n).abs() < 1e-4 * (1.0 + sum_n.abs()),
-                "top-k score mass differs: {sum_f} vs {sum_n}"
+                fast == naive,
+                "top-k disagrees with naive: {fast:?} vs {naive:?}"
             );
             // sortedness + dedup
             for w in fast.windows(2) {
@@ -154,6 +158,25 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The orderings are NaN-safe (`total_cmp`) and break ties by
+    /// index: a poisoned score must not panic, and tied scores must
+    /// select deterministically (lowest indices win).
+    #[test]
+    fn top_k_is_nan_safe_and_tie_deterministic() {
+        // all-tied scores: the k lowest indices win
+        let tied = [1.0f32; 8];
+        assert_eq!(top_k_indices(&tied, 3), vec![0, 1, 2]);
+        // NaN present: no panic, selection still well-defined and
+        // repeatable
+        let scores = [0.5f32, f32::NAN, 2.0, -1.0, 2.0, 0.0];
+        let a = top_k_indices(&scores, 3);
+        let b = top_k_indices(&scores, 3);
+        assert_eq!(a, b, "NaN selection must be deterministic");
+        assert_eq!(a.len(), 3);
+        // calibration over NaN scores must not panic either
+        let _ = cats_calibrate_threshold(&scores, 0.5);
     }
 
     #[test]

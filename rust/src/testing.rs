@@ -21,7 +21,7 @@
 //! tensor/index on failure, and the statistical guards
 //! ([`argmax_agrees`], [`rel_l2`]) that keep relaxed tiers honest. The
 //! per-tier budgets live in [`bitwise_spec`] / [`simd_spec`] /
-//! [`bf16_spec`].
+//! [`bf16_spec`] / [`int8_spec`].
 
 use std::sync::Arc;
 
@@ -282,6 +282,27 @@ pub fn bf16_spec() -> ConformanceSpec {
     }
 }
 
+/// The int8-storage tier's budget vs the **f32-weight** oracle. Like
+/// [`bf16_spec`], the dominant term is the one-time weight
+/// quantization, not the kernels: symmetric absmax over each
+/// [`crate::weights::QUANT_TILE`]-wide panel slice bounds each
+/// weight's error by `absmax/254` of its slice — tiny relative to the
+/// largest weight in a slice, but potentially large for small weights
+/// sharing a slice with a big one — so the budget
+/// sits a bit above bf16's and leans on the statistical guards
+/// (ranking + KV norm) rather than per-element tightness. Within the
+/// tier, outputs remain bitwise thread/batch-invariant (the
+/// dequantize-in-register fold order is fixed; see `runtime/cpu.rs`).
+pub fn int8_spec() -> ConformanceSpec {
+    ConformanceSpec {
+        tier: "int8",
+        logits: Tolerance::AbsRel { abs: 8e-2, rel: 8e-2 },
+        kv: Tolerance::AbsRel { abs: 4e-2, rel: 4e-2 },
+        argmax_margin: 0.8,
+        kv_rel_l2: 0.08,
+    }
+}
+
 /// The deterministic CPU engine over the default synthetic model
 /// (fast tiled/parallel backend; threads from `FF_CPU_THREADS`).
 /// Infallible by construction (panics only on an internal bug).
@@ -314,12 +335,28 @@ pub fn cpu_engine_simd(threads: usize) -> Engine {
     cpu_engine_with(threads, CpuKernel::Simd)
 }
 
-/// SIMD-tier engine over a **bf16** weight store (widened-f32 mirror
-/// plus raw u16 panels; `crate::weights::WeightStore::seeded_with`) —
-/// gated by [`bf16_spec`] against the f32-weight reference oracle.
+/// SIMD-tier engine over a **bf16** weight store (raw u16 panels as
+/// the *only* resident copy, widened to f32 in-register;
+/// `crate::weights::WeightStore::seeded_with`) — gated by
+/// [`bf16_spec`] against the f32-weight reference oracle.
 pub fn cpu_engine_bf16_simd(threads: usize) -> Engine {
+    cpu_engine_precision_simd(threads, WeightPrecision::Bf16)
+}
+
+/// SIMD-tier engine over an **int8** weight store (int8 codes +
+/// per-column-tile f32 scales as the only resident copy, dequantized
+/// in-register inside the tile loop) — gated by [`int8_spec`] against
+/// the f32-weight reference oracle.
+pub fn cpu_engine_int8_simd(threads: usize) -> Engine {
+    cpu_engine_precision_simd(threads, WeightPrecision::Int8)
+}
+
+/// Default synthetic engine on the SIMD kernel tier with an explicit
+/// weight-storage precision — the reduced-precision conformance axis.
+pub fn cpu_engine_precision_simd(threads: usize,
+                                 precision: WeightPrecision) -> Engine {
     let spec = SyntheticSpec {
-        weight_precision: WeightPrecision::Bf16,
+        weight_precision: precision,
         ..SyntheticSpec::default()
     };
     Engine::synthetic_cpu_with(
@@ -330,7 +367,7 @@ pub fn cpu_engine_bf16_simd(threads: usize) -> Engine {
             kernel: Some(CpuKernel::Simd),
         },
     )
-    .expect("synthetic bf16 CPU engine")
+    .expect("synthetic reduced-precision CPU engine")
 }
 
 /// The sequential scalar CPU *reference* engine — the oracle the fast

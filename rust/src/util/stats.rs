@@ -58,7 +58,8 @@ impl Summary {
             return 0.0;
         }
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Total order: a NaN sample must not panic the metrics thread.
+        s.sort_by(|a, b| a.total_cmp(b));
         let pos = q / 100.0 * (s.len() - 1) as f64;
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;

@@ -4,6 +4,15 @@
 //! weights from a manifest's table — the artifact-free substrate the
 //! pure-Rust [`crate::runtime::CpuBackend`] runs the always-on numeric
 //! test tier against.
+//!
+//! **Single residency.** A store holds exactly one representation of
+//! the weights: f32 XOR raw bf16 words XOR int8 panels + per-tile f32
+//! scales. Reduced-precision stores do *not* keep a widened f32 mirror
+//! (an earlier revision did, leaving bf16 mode resident at 1.5× the
+//! f32 footprint); consumers either stream the native representation
+//! ([`WeightStore::view`]) or materialize a transient f32 copy
+//! ([`WeightStore::dequant`]). The per-tier resident footprint is
+//! regression-tested via [`WeightStore::resident_bytes`].
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -15,19 +24,26 @@ use crate::util::hash;
 use crate::util::rng::Rng;
 
 /// Env var naming the synthetic weight storage precision
-/// (`f32` | `bf16`); the `--weight-precision` CLI flag forwards
-/// through it so every engine construction site resolves the same
-/// mode.
+/// (`f32` | `bf16` | `int8`); the `--weight-precision` CLI flag
+/// forwards through it so every engine construction site resolves the
+/// same mode.
 pub const PRECISION_ENV: &str = "FF_WEIGHT_PREC";
+
+/// Column-tile width of the int8 quantizer: one f32 scale per
+/// `QUANT_TILE`-wide slice of each panel row (symmetric absmax). Must
+/// equal the CPU kernels' column tile (`COL_TILE`) so a tiled matmul
+/// touches exactly one scale per (row, column-tile) pair — asserted at
+/// backend construction in `runtime/cpu.rs`.
+pub const QUANT_TILE: usize = 128;
 
 /// Storage precision of the seeded synthetic weights.
 ///
-/// `Bf16` is a *storage* mode: every generated value is rounded to
-/// bfloat16 (round-to-nearest-even) and all arithmetic still
-/// accumulates in f32 — the load-compressed/compute-dense pattern.
-/// The f32 view served by [`WeightStore::get`] holds the widened
-/// rounded values, so the scalar and SIMD f32 kernels compute over
-/// exactly the numbers the bf16-streaming kernel widens on the fly.
+/// `Bf16` and `Int8` are *storage* modes: the generated f32 values are
+/// rounded (bf16, round-to-nearest-even) or quantized (int8, symmetric
+/// absmax per [`QUANT_TILE`]-wide panel slice) once at seed time, and
+/// all arithmetic still accumulates in f32 — the
+/// load-compressed/compute-dense pattern. The store keeps only the
+/// reduced representation resident; kernels widen it in registers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum WeightPrecision {
     /// Full f32 storage (the default).
@@ -35,14 +51,17 @@ pub enum WeightPrecision {
     F32,
     /// bfloat16 storage, f32 accumulation.
     Bf16,
+    /// int8 storage with per-column-tile f32 scales, f32 accumulation.
+    Int8,
 }
 
 impl WeightPrecision {
-    /// Parse a CLI/env spelling (`f32` | `bf16`).
+    /// Parse a CLI/env spelling (`f32` | `bf16` | `int8`).
     pub fn parse(s: &str) -> Option<WeightPrecision> {
         match s {
             "f32" => Some(WeightPrecision::F32),
             "bf16" => Some(WeightPrecision::Bf16),
+            "int8" => Some(WeightPrecision::Int8),
             _ => None,
         }
     }
@@ -61,6 +80,7 @@ impl WeightPrecision {
         match self {
             WeightPrecision::F32 => "f32",
             WeightPrecision::Bf16 => "bf16",
+            WeightPrecision::Int8 => "int8",
         }
     }
 }
@@ -82,8 +102,87 @@ pub fn bf16_to_f32(b: u16) -> f32 {
     f32::from_bits((b as u32) << 16)
 }
 
-/// All model weights resident as one flat host f32 buffer plus the
-/// name → (offset, shape) table from the manifest.
+/// Symmetric absmax int8 quantization of one row-major `rows × cols`
+/// panel: each row is cut into [`QUANT_TILE`]-wide slices, every slice
+/// gets `scale = absmax / 127` (an all-zero slice keeps scale 0 and
+/// all-zero codes — no division by zero), and each value becomes
+/// `round(v / scale)` clamped to ±127. Dequantization is
+/// `q as f32 * scale`, so the per-element round-trip error is bounded
+/// by `scale / 2 = absmax / 254`.
+///
+/// Returns `(codes, scales)` with `codes.len() == rows * cols` and
+/// `scales.len() == rows * cols.div_ceil(QUANT_TILE)`; the scale for
+/// element `(r, c)` is `scales[r * n_tiles + c / QUANT_TILE]`.
+pub fn quantize_int8(
+    values: &[f32],
+    rows: usize,
+    cols: usize,
+) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(values.len(), rows * cols, "panel shape mismatch");
+    let n_tiles = cols.div_ceil(QUANT_TILE);
+    let mut q = vec![0i8; values.len()];
+    let mut scales = vec![0f32; rows * n_tiles];
+    for r in 0..rows {
+        let row = &values[r * cols..(r + 1) * cols];
+        for tile in 0..n_tiles {
+            let c0 = tile * QUANT_TILE;
+            let c1 = (c0 + QUANT_TILE).min(cols);
+            let absmax =
+                row[c0..c1].iter().fold(0f32, |m, &v| m.max(v.abs()));
+            if absmax == 0.0 {
+                continue;
+            }
+            let scale = absmax / 127.0;
+            scales[r * n_tiles + tile] = scale;
+            for c in c0..c1 {
+                let code = (row[c] / scale).round();
+                q[r * cols + c] = code.clamp(-127.0, 127.0) as i8;
+            }
+        }
+    }
+    (q, scales)
+}
+
+/// The single resident representation of the weight values. Exactly
+/// one variant is held — no widened mirrors (see module docs).
+#[derive(Debug)]
+enum Storage {
+    /// Flat f32 buffer, indexed by `offset / 4` from the table.
+    F32(Vec<f32>),
+    /// Raw bf16 words, same `offset / 4` element layout as f32.
+    Bf16(Vec<u16>),
+    /// int8 codes (same element layout) plus per-tensor scale vectors
+    /// in [`quantize_int8`]'s `(row, column-tile)` layout.
+    Int8 {
+        q: Vec<i8>,
+        scales: BTreeMap<String, Vec<f32>>,
+    },
+}
+
+/// Borrowed native representation of one tensor, for kernels that
+/// stream reduced-precision panels and widen in registers.
+#[derive(Debug, Clone, Copy)]
+pub enum WeightView<'a> {
+    /// Full-precision panel.
+    F32(&'a [f32]),
+    /// Raw bf16 words; widening each word is exact.
+    Bf16(&'a [u16]),
+    /// int8 codes + scales; element `(r, c)` of a `rows × cols` panel
+    /// dequantizes as
+    /// `q[r * cols + c] as f32 * scales[r * n_tiles + c / QUANT_TILE]`
+    /// with `n_tiles = cols.div_ceil(QUANT_TILE)`.
+    Int8 {
+        /// Quantized codes, row-major.
+        q: &'a [i8],
+        /// Per-(row, column-tile) scales.
+        scales: &'a [f32],
+        /// Row length of the panel (scale indexing needs it).
+        cols: usize,
+    },
+}
+
+/// All model weights resident in one representation (see [`Storage`])
+/// plus the name → (offset, shape) table from the manifest.
 ///
 /// Plain immutable data, hence `Send + Sync`: the executor pool loads
 /// or seeds **one** store and shares it across every replica thread
@@ -93,15 +192,16 @@ pub fn bf16_to_f32(b: u16) -> f32 {
 /// fingerprint regression in `tests/backend_conformance.rs`.
 #[derive(Debug)]
 pub struct WeightStore {
-    data: Vec<f32>,
-    /// Raw bf16 mirror of `data` (same offset/4 layout), present only
-    /// for [`WeightPrecision::Bf16`] stores: the SIMD matmul streams
-    /// these half-width words and widens in registers, halving the
-    /// weight-read bytes. `data` always holds the widened values, so
-    /// every f32 consumer sees identical numbers.
-    bf16: Option<Vec<u16>>,
-    precision: WeightPrecision,
+    storage: Storage,
     table: BTreeMap<String, WeightEntry>,
+}
+
+/// Quantization panel geometry of a table entry: matrices quantize per
+/// (first-dim row, [`QUANT_TILE`]-wide slice of the remaining dims),
+/// vectors as a single row.
+fn panel_dims(e: &WeightEntry) -> (usize, usize) {
+    let rows = if e.shape.len() >= 2 { e.shape[0].max(1) } else { 1 };
+    (rows, e.numel() / rows)
 }
 
 impl WeightStore {
@@ -126,26 +226,11 @@ impl WeightStore {
         for (i, chunk) in bytes.chunks_exact(4).enumerate() {
             data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
         }
-        // Validate the table against the blob before serving anything.
-        for (name, e) in &table {
-            let end = e.offset / 4 + e.numel();
-            anyhow::ensure!(
-                e.offset % 4 == 0 && end <= data.len(),
-                "weight {name} out of bounds (offset {} numel {})",
-                e.offset,
-                e.numel()
-            );
-        }
-        Ok(WeightStore {
-            data,
-            bf16: None,
-            precision: WeightPrecision::F32,
-            table,
-        })
+        Self::from_data(data, table)
     }
 
-    /// Build a store from an in-memory buffer + table (bounds-validated
-    /// like [`WeightStore::load_from`]).
+    /// Build a store from an in-memory f32 buffer + table
+    /// (bounds-validated like [`WeightStore::load_from`]).
     pub fn from_data(
         data: Vec<f32>,
         table: BTreeMap<String, WeightEntry>,
@@ -159,12 +244,7 @@ impl WeightStore {
                 e.numel()
             );
         }
-        Ok(WeightStore {
-            data,
-            bf16: None,
-            precision: WeightPrecision::F32,
-            table,
-        })
+        Ok(WeightStore { storage: Storage::F32(data), table })
     }
 
     /// Generate deterministic synthetic weights for every entry in the
@@ -185,28 +265,46 @@ impl WeightStore {
         Self::seeded_with(manifest, seed, WeightPrecision::F32)
     }
 
-    /// [`WeightStore::seeded`] with an explicit storage precision. For
-    /// [`WeightPrecision::Bf16`] every generated value is rounded to
-    /// bfloat16; the f32 buffer holds the widened rounded values and a
-    /// parallel raw-u16 mirror feeds the bf16-streaming SIMD matmul.
-    /// The value [`WeightStore::fingerprint`] therefore differs from
-    /// the f32 store's, so prefix-cache KV never crosses precisions.
+    /// [`WeightStore::seeded`] with an explicit storage precision. The
+    /// f32 values are generated first, then converted *in place of*
+    /// the f32 buffer — only the reduced representation stays resident
+    /// (bf16: RNE-rounded words; int8: [`quantize_int8`] codes +
+    /// scales). The value [`WeightStore::fingerprint`] therefore
+    /// differs from the f32 store's, so prefix-cache KV never crosses
+    /// precisions.
     pub fn seeded_with(
         manifest: &Manifest,
         seed: u64,
         precision: WeightPrecision,
     ) -> WeightStore {
-        let mut store = Self::seeded_f32(manifest, seed);
-        if precision == WeightPrecision::Bf16 {
-            let raw: Vec<u16> =
-                store.data.iter().map(|&v| f32_to_bf16(v)).collect();
-            for (v, &b) in store.data.iter_mut().zip(raw.iter()) {
-                *v = bf16_to_f32(b);
+        let store = Self::seeded_f32(manifest, seed);
+        let Storage::F32(data) = store.storage else {
+            unreachable!("seeded_f32 builds an f32 store");
+        };
+        let table = store.table;
+        let storage = match precision {
+            WeightPrecision::F32 => Storage::F32(data),
+            WeightPrecision::Bf16 => {
+                Storage::Bf16(data.iter().map(|&v| f32_to_bf16(v)).collect())
             }
-            store.bf16 = Some(raw);
-            store.precision = WeightPrecision::Bf16;
-        }
-        store
+            WeightPrecision::Int8 => {
+                let mut q = vec![0i8; data.len()];
+                let mut scales = BTreeMap::new();
+                for (name, e) in &table {
+                    let (rows, cols) = panel_dims(e);
+                    let start = e.offset / 4;
+                    let (tq, ts) = quantize_int8(
+                        &data[start..start + e.numel()],
+                        rows,
+                        cols,
+                    );
+                    q[start..start + e.numel()].copy_from_slice(&tq);
+                    scales.insert(name.clone(), ts);
+                }
+                Storage::Int8 { q, scales }
+            }
+        };
+        WeightStore { storage, table }
     }
 
     fn seeded_f32(manifest: &Manifest, seed: u64) -> WeightStore {
@@ -245,56 +343,159 @@ impl WeightStore {
             .expect("seeded data is sized to the manifest table")
     }
 
-    /// Stable 64-bit fingerprint of the *weight values* (table layout +
-    /// every f32 bit pattern). Computed once at runtime construction
-    /// and mixed into [`crate::runtime::Runtime::numeric_fingerprint`]:
-    /// two stores with the same shapes but different values (a
-    /// different seed, retrained artifacts) must never share
-    /// prefix-cache KV.
+    /// Stable 64-bit fingerprint of the *stored weight values* (table
+    /// layout + every raw bit pattern of the resident representation,
+    /// plus the precision label for reduced tiers). Computed once at
+    /// runtime construction and mixed into
+    /// [`crate::runtime::Runtime::numeric_fingerprint`]: two stores
+    /// with the same shapes but different values (a different seed,
+    /// retrained artifacts) — or the same values at different storage
+    /// precisions — must never share prefix-cache KV.
     pub fn fingerprint(&self) -> u64 {
         let mut h = hash::BASIS;
         for (name, e) in &self.table {
             h = hash::mix(h, hash::fnv1a(name.as_bytes()));
             h = hash::mix(h, e.offset as u64);
             let start = e.offset / 4;
-            for &v in &self.data[start..start + e.numel()] {
-                h = hash::mix(h, v.to_bits() as u64);
+            match &self.storage {
+                Storage::F32(data) => {
+                    for &v in &data[start..start + e.numel()] {
+                        h = hash::mix(h, v.to_bits() as u64);
+                    }
+                }
+                Storage::Bf16(raw) => {
+                    for &b in &raw[start..start + e.numel()] {
+                        h = hash::mix(h, b as u64);
+                    }
+                }
+                Storage::Int8 { q, scales } => {
+                    for &c in &q[start..start + e.numel()] {
+                        h = hash::mix(h, c as u8 as u64);
+                    }
+                    for &s in scales.get(name).map_or(&[][..], |v| v) {
+                        h = hash::mix(h, s.to_bits() as u64);
+                    }
+                }
             }
         }
-        h
+        // The f32 hash stays byte-for-byte what it always was; reduced
+        // tiers additionally mix their label so raw-word collisions
+        // across representations can never alias fingerprints.
+        match self.precision() {
+            WeightPrecision::F32 => h,
+            p => hash::mix(h, hash::fnv1a(p.label().as_bytes())),
+        }
     }
 
-    /// Borrow one tensor's data by name.
-    pub fn get(&self, name: &str) -> Result<&[f32]> {
-        let e = self
-            .table
+    fn entry(&self, name: &str) -> Result<&WeightEntry> {
+        self.table
             .get(name)
-            .ok_or_else(|| anyhow!("unknown weight {name}"))?;
-        let start = e.offset / 4;
-        Ok(&self.data[start..start + e.numel()])
+            .ok_or_else(|| anyhow!("unknown weight {name}"))
     }
 
-    /// Borrow one tensor's raw bf16 words, or `None` on an f32 store.
-    /// Widening each word reproduces [`WeightStore::get`] exactly.
-    pub fn get_bf16(&self, name: &str) -> Option<&[u16]> {
-        let raw = self.bf16.as_ref()?;
-        let e = self.table.get(name)?;
+    /// Borrow one tensor's f32 data by name. Only f32 stores serve
+    /// this view — reduced-precision stores have no resident f32
+    /// mirror (use [`WeightStore::view`] to stream the native panels
+    /// or [`WeightStore::dequant`] for a transient widened copy).
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        let e = self.entry(name)?;
         let start = e.offset / 4;
-        Some(&raw[start..start + e.numel()])
+        match &self.storage {
+            Storage::F32(data) => Ok(&data[start..start + e.numel()]),
+            _ => Err(anyhow!(
+                "weight {name} is stored as {} (no resident f32 view); \
+                 use view() or dequant()",
+                self.precision().label()
+            )),
+        }
+    }
+
+    /// Borrow one tensor in its native stored representation.
+    pub fn view(&self, name: &str) -> Result<WeightView<'_>> {
+        let e = self.entry(name)?;
+        let start = e.offset / 4;
+        Ok(match &self.storage {
+            Storage::F32(data) => {
+                WeightView::F32(&data[start..start + e.numel()])
+            }
+            Storage::Bf16(raw) => {
+                WeightView::Bf16(&raw[start..start + e.numel()])
+            }
+            Storage::Int8 { q, scales } => {
+                let (_, cols) = panel_dims(e);
+                WeightView::Int8 {
+                    q: &q[start..start + e.numel()],
+                    scales: scales
+                        .get(name)
+                        .map_or(&[][..], |v| v.as_slice()),
+                    cols,
+                }
+            }
+        })
+    }
+
+    /// Materialize one tensor as f32, whatever the stored
+    /// representation (exact widening for bf16, `q * scale` for int8).
+    /// A transient copy even on f32 stores — construction-time
+    /// consumers only; hot paths stream [`WeightStore::view`].
+    pub fn dequant(&self, name: &str) -> Result<Vec<f32>> {
+        Ok(match self.view(name)? {
+            WeightView::F32(w) => w.to_vec(),
+            WeightView::Bf16(raw) => {
+                raw.iter().map(|&b| bf16_to_f32(b)).collect()
+            }
+            WeightView::Int8 { q, scales, cols } => {
+                let n_tiles = cols.div_ceil(QUANT_TILE);
+                q.iter()
+                    .enumerate()
+                    .map(|(i, &c)| {
+                        let (r, col) = (i / cols, i % cols);
+                        c as f32 * scales[r * n_tiles + col / QUANT_TILE]
+                    })
+                    .collect()
+            }
+        })
+    }
+
+    /// Borrow one tensor's raw bf16 words, or `None` unless this is a
+    /// bf16 store. Widening each word reproduces the seeded rounded
+    /// values exactly.
+    pub fn get_bf16(&self, name: &str) -> Option<&[u16]> {
+        match self.view(name).ok()? {
+            WeightView::Bf16(raw) => Some(raw),
+            _ => None,
+        }
     }
 
     /// Storage precision of this store.
     pub fn precision(&self) -> WeightPrecision {
-        self.precision
+        match &self.storage {
+            Storage::F32(_) => WeightPrecision::F32,
+            Storage::Bf16(_) => WeightPrecision::Bf16,
+            Storage::Int8 { .. } => WeightPrecision::Int8,
+        }
+    }
+
+    /// Bytes resident for the weight values themselves (codes +
+    /// scales for int8). The single-residency regression test pins
+    /// int8 < bf16 < f32 on the synthetic model.
+    pub fn resident_bytes(&self) -> usize {
+        match &self.storage {
+            Storage::F32(data) => std::mem::size_of_val(data.as_slice()),
+            Storage::Bf16(raw) => std::mem::size_of_val(raw.as_slice()),
+            Storage::Int8 { q, scales } => {
+                std::mem::size_of_val(q.as_slice())
+                    + scales
+                        .values()
+                        .map(|s| std::mem::size_of_val(s.as_slice()))
+                        .sum::<usize>()
+            }
+        }
     }
 
     /// One tensor's shape by name.
     pub fn shape(&self, name: &str) -> Result<&[usize]> {
-        Ok(&self
-            .table
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown weight {name}"))?
-            .shape)
+        Ok(&self.entry(name)?.shape)
     }
 
     /// Iterate all weight names (sorted).
@@ -414,8 +615,55 @@ mod tests {
         assert!(((r - v) / v).abs() <= 1.0 / 256.0);
     }
 
+    /// Edge cases of the rounding path: NaN quieting, both infinities,
+    /// and mantissa-rounding carries that overflow into the exponent
+    /// (including the carry past `f32::MAX` into infinity — the case
+    /// the `wrapping_add` must produce, not wrap into a small value).
     #[test]
-    fn seeded_bf16_store_mirrors_widened_values() {
+    fn bf16_edge_cases_nan_inf_and_mantissa_carry() {
+        // A NaN whose payload lives only in the dropped low 16 bits
+        // would truncate to an infinity pattern; the quieting bit must
+        // keep it NaN (and quiet: mantissa bit 6 set).
+        let payload_nan = f32::from_bits(0x7F80_0001);
+        assert!(payload_nan.is_nan());
+        let q = f32_to_bf16(payload_nan);
+        assert_eq!(q & 0x7F80, 0x7F80, "exponent stays all-ones");
+        assert_ne!(q & 0x007F, 0, "mantissa must stay nonzero (NaN)");
+        assert_eq!(q & 0x0040, 0x0040, "quiet bit set");
+        assert!(bf16_to_f32(q).is_nan());
+        // Sign survives quieting.
+        let neg_nan = f32::from_bits(0xFF80_0001);
+        assert_eq!(f32_to_bf16(neg_nan) & 0x8000, 0x8000);
+        // Both infinities are exactly representable and exact.
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7F80);
+        assert_eq!(f32_to_bf16(f32::NEG_INFINITY), 0xFF80);
+        // Mantissa carry into the exponent: just under 2.0 rounds up
+        // across the binade boundary to exactly 2.0.
+        let under_two = f32::from_bits(0x3FFF_FFFF);
+        assert_eq!(bf16_to_f32(f32_to_bf16(under_two)), 2.0);
+        // Carry past the largest finite bf16: f32::MAX (mantissa
+        // all-ones) must round to +inf under RNE, and symmetrically
+        // for -MAX — not wrap around.
+        assert_eq!(f32_to_bf16(f32::MAX), 0x7F80);
+        assert_eq!(f32_to_bf16(f32::MIN), 0xFF80);
+        // The largest value that rounds *down* stays the top finite
+        // bf16 (0x7F7F): bf16::MAX plus less than half an ulp.
+        let max_bf16 = bf16_to_f32(0x7F7F);
+        let below_half = f32::from_bits(max_bf16.to_bits() + 0x7FFF);
+        assert_eq!(f32_to_bf16(below_half), 0x7F7F);
+        // Exactly half an ulp above ties to even — and the even
+        // neighbour here is the infinity pattern's predecessor's
+        // upper neighbour 0x7F80 (odd mantissa 0x7F rounds away).
+        let half_above = f32::from_bits(max_bf16.to_bits() + 0x8000);
+        assert_eq!(f32_to_bf16(half_above), 0x7F80);
+    }
+
+    /// The bf16 store is single-residency: raw words only, no widened
+    /// f32 mirror. `dequant` reproduces the RNE-rounded values of the
+    /// f32 seed, rounding genuinely changes values, and the
+    /// fingerprint diverges from the f32 store's.
+    #[test]
+    fn seeded_bf16_store_is_rounded_and_single_residency() {
         let spec = crate::manifest::SyntheticSpec::default();
         let m = Manifest::synthetic(&spec);
         let f = WeightStore::seeded(&m, spec.seed);
@@ -427,14 +675,17 @@ mod tests {
         assert_eq!(f.precision(), WeightPrecision::F32);
         assert_eq!(b.precision(), WeightPrecision::Bf16);
         assert!(f.get_bf16("embed").is_none());
+        // no resident f32 view on the reduced store
+        let err = b.get("embed").unwrap_err().to_string();
+        assert!(err.contains("bf16"), "{err}");
         let mut any_rounded = false;
         for name in b.names() {
-            let raw = b.get_bf16(name).expect("bf16 mirror present");
-            let wide = b.get(name).unwrap();
+            let raw = b.get_bf16(name).expect("bf16 words present");
+            let wide = b.dequant(name).unwrap();
             let full = f.get(name).unwrap();
             assert_eq!(raw.len(), wide.len());
             for i in 0..raw.len() {
-                // the f32 view is exactly the widened raw word…
+                // dequant is exactly the widened raw word…
                 assert_eq!(
                     wide[i].to_bits(),
                     bf16_to_f32(raw[i]).to_bits(),
@@ -453,6 +704,139 @@ mod tests {
         );
     }
 
+    /// int8 quantizer properties: per-tile round-trip error bound
+    /// (≤ absmax / 254), zero tiles quantize to zero scale + zero
+    /// codes without dividing by zero, and the codes stay in ±127.
+    #[test]
+    fn int8_quantizer_round_trip_error_is_bounded() {
+        let mut rng = Rng::new(0x1178_0001);
+        let (rows, cols) = (7, 300); // ragged: 300 = 2*128 + 44
+        let vals: Vec<f32> = (0..rows * cols)
+            .map(|_| (rng.normal() * 0.3) as f32)
+            .collect();
+        let (q, scales) = quantize_int8(&vals, rows, cols);
+        let n_tiles = cols.div_ceil(QUANT_TILE);
+        assert_eq!(scales.len(), rows * n_tiles);
+        for r in 0..rows {
+            for tile in 0..n_tiles {
+                let c0 = tile * QUANT_TILE;
+                let c1 = (c0 + QUANT_TILE).min(cols);
+                let absmax = vals[r * cols + c0..r * cols + c1]
+                    .iter()
+                    .fold(0f32, |m, &v| m.max(v.abs()));
+                let s = scales[r * n_tiles + tile];
+                assert!((s - absmax / 127.0).abs() <= f32::EPSILON * absmax);
+                for c in c0..c1 {
+                    let v = vals[r * cols + c];
+                    let dq = q[r * cols + c] as f32 * s;
+                    assert!(
+                        (v - dq).abs() <= absmax / 254.0 + 1e-9,
+                        "({r},{c}): |{v} - {dq}| > absmax/254"
+                    );
+                }
+            }
+        }
+        assert!(q.iter().all(|&c| (-127..=127).contains(&(c as i32))));
+    }
+
+    #[test]
+    fn int8_quantizer_zero_panel_and_determinism() {
+        // an all-zero tile inside an otherwise nonzero panel
+        let cols = 2 * QUANT_TILE;
+        let mut vals = vec![0f32; cols];
+        for (i, v) in vals[QUANT_TILE..].iter_mut().enumerate() {
+            *v = (i as f32 - 60.0) * 0.01;
+        }
+        let (q, scales) = quantize_int8(&vals, 1, cols);
+        assert_eq!(scales[0], 0.0, "zero tile keeps zero scale");
+        assert!(q[..QUANT_TILE].iter().all(|&c| c == 0));
+        assert!(scales[1] > 0.0);
+        assert!(q[QUANT_TILE..].iter().any(|&c| c != 0));
+        // extreme values land exactly on ±127
+        let (q2, s2) = quantize_int8(&[-1.0, 1.0, 0.5], 1, 3);
+        assert_eq!(s2[0], 1.0 / 127.0);
+        assert_eq!((q2[0], q2[1]), (-127, 127));
+        // deterministic: same input, same codes + scales
+        let spec = crate::manifest::SyntheticSpec::default();
+        let m = Manifest::synthetic(&spec);
+        let a = WeightStore::seeded_with(&m, spec.seed,
+                                         WeightPrecision::Int8);
+        let b = WeightStore::seeded_with(&m, spec.seed,
+                                         WeightPrecision::Int8);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    /// The seeded int8 store dequantizes within the per-tile bound of
+    /// the f32 seed on every tensor, and its views carry consistent
+    /// scale geometry.
+    #[test]
+    fn seeded_int8_store_dequantizes_within_bound() {
+        let spec = crate::manifest::SyntheticSpec::default();
+        let m = Manifest::synthetic(&spec);
+        let f = WeightStore::seeded(&m, spec.seed);
+        let i8s = WeightStore::seeded_with(
+            &m,
+            spec.seed,
+            WeightPrecision::Int8,
+        );
+        assert_eq!(i8s.precision(), WeightPrecision::Int8);
+        assert!(i8s.get_bf16("embed").is_none());
+        assert!(i8s.get("embed").is_err());
+        for name in i8s.names() {
+            let full = f.get(name).unwrap();
+            let dq = i8s.dequant(name).unwrap();
+            let WeightView::Int8 { q, scales, cols } =
+                i8s.view(name).unwrap()
+            else {
+                panic!("{name}: int8 view expected");
+            };
+            assert_eq!(q.len(), full.len());
+            let n_tiles = cols.div_ceil(QUANT_TILE);
+            assert_eq!(scales.len(), (full.len() / cols) * n_tiles);
+            for (i, (&v, &d)) in full.iter().zip(dq.iter()).enumerate() {
+                let (r, c) = (i / cols, i % cols);
+                let c0 = (c / QUANT_TILE) * QUANT_TILE;
+                let c1 = (c0 + QUANT_TILE).min(cols);
+                let absmax = full[r * cols + c0..r * cols + c1]
+                    .iter()
+                    .fold(0f32, |m, &v| m.max(v.abs()));
+                assert!(
+                    (v - d).abs() <= absmax / 254.0 + 1e-9,
+                    "{name}[{i}]: |{v} - {d}| > absmax/254"
+                );
+            }
+        }
+        assert_ne!(f.fingerprint(), i8s.fingerprint());
+    }
+
+    /// The single-residency contract, measured: per-tier resident
+    /// weight bytes strictly order int8 < bf16 < f32 (bf16 no longer
+    /// keeps a widened mirror; int8 is codes + per-tile scales).
+    #[test]
+    fn resident_bytes_order_int8_lt_bf16_lt_f32() {
+        let spec = crate::manifest::SyntheticSpec::default();
+        let m = Manifest::synthetic(&spec);
+        let f = WeightStore::seeded(&m, spec.seed);
+        let b = WeightStore::seeded_with(&m, spec.seed,
+                                         WeightPrecision::Bf16);
+        let q = WeightStore::seeded_with(&m, spec.seed,
+                                         WeightPrecision::Int8);
+        let (bf, bb, bq) = (
+            f.resident_bytes(),
+            b.resident_bytes(),
+            q.resident_bytes(),
+        );
+        assert_eq!(bb * 2, bf, "bf16 must be exactly half of f32");
+        assert!(
+            bq < bb && bb < bf,
+            "resident bytes must order int8 ({bq}) < bf16 ({bb}) < \
+             f32 ({bf})"
+        );
+        // int8 = 1 byte/param + scales; scales add < 4% on QUANT_TILE
+        // panels of this model, so it stays well under 3/4 of bf16.
+        assert!(bq * 4 < bf * 2, "int8 must stay under half of bf16×2");
+    }
+
     #[test]
     fn weight_precision_parses_and_labels() {
         assert_eq!(WeightPrecision::parse("f32"), Some(WeightPrecision::F32));
@@ -460,9 +844,14 @@ mod tests {
             WeightPrecision::parse("bf16"),
             Some(WeightPrecision::Bf16)
         );
+        assert_eq!(
+            WeightPrecision::parse("int8"),
+            Some(WeightPrecision::Int8)
+        );
         assert_eq!(WeightPrecision::parse("fp8"), None);
         assert_eq!(WeightPrecision::F32.label(), "f32");
         assert_eq!(WeightPrecision::Bf16.label(), "bf16");
+        assert_eq!(WeightPrecision::Int8.label(), "int8");
     }
 
     #[test]

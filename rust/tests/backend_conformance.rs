@@ -29,9 +29,14 @@
 //! statistical guards (logit argmax agreement, KV rel-L2 drift) — and
 //! must still be **deterministic and thread-invariant bitwise against
 //! itself**: lane folding is a pure function of the operands, never of
-//! the thread count. The bf16 storage tier (`--weight-precision
-//! bf16`) rides the SIMD kernels over rounded weights and is gated by
-//! [`testing::bf16_spec`] against the f32-weight oracle.
+//! the thread count. The reduced-precision storage tiers ride the
+//! SIMD kernels over their own resident representation and are gated
+//! against the f32-weight oracle: bf16 (`--weight-precision bf16`,
+//! raw u16 panels widened in-register) under [`testing::bf16_spec`],
+//! int8 (`--weight-precision int8`, symmetric-absmax codes +
+//! per-column-tile scales dequantized in-register) under
+//! [`testing::int8_spec`]. Both must also stay deterministic and
+//! thread/batch-invariant bitwise against themselves.
 //!
 //! Also hosts the `Rc → Arc` migration regressions: `Manifest` /
 //! `WeightStore` are `Send + Sync`, and `ExecutorPool`'s backend
@@ -817,6 +822,75 @@ fn bf16_tier_matches_f32_reference_within_budget() {
     assert_prefill_bit_identical(&a, &b, "bf16 t1 vs t4");
 }
 
+/// The int8 storage tier (SIMD kernels streaming int8 codes +
+/// per-column-tile scales, dequantized in-register, f32 accumulation)
+/// against the **f32-weight** oracle, under [`testing::int8_spec`]:
+/// the budget is set by the one-time symmetric-absmax quantization,
+/// and the argmax + KV-norm guards keep the quantized model ranking
+/// tokens and shaping caches like the oracle — across the full
+/// config × length × thread matrix.
+#[test]
+fn int8_tier_matches_f32_reference_within_budget() {
+    let reference = testing::cpu_engine_reference();
+    let spec = testing::int8_spec();
+    let block = reference.block();
+    let int8s = [
+        ("threads=1", testing::cpu_engine_int8_simd(1)),
+        ("threads=4", testing::cpu_engine_int8_simd(4)),
+    ];
+    for (name, cfg) in tier_configs() {
+        for &len in &[40, block + 1, 2 * block + 44] {
+            let prompt = corpus_prompt(len);
+            let want = reference.prefill(&prompt, &cfg).unwrap();
+            for (threads, int8) in &int8s {
+                let got = int8.prefill(&prompt, &cfg).unwrap();
+                assert_prefill_within(
+                    &spec,
+                    &want,
+                    &got,
+                    &format!("int8 {name} len={len} {threads}"),
+                );
+            }
+        }
+    }
+    // and the tier is deterministic + thread-invariant against itself
+    let prompt = corpus_prompt(block + 1);
+    let cfg = SparsityConfig::fastforward(0.5);
+    let a = int8s[0].1.prefill(&prompt, &cfg).unwrap();
+    let b = int8s[1].1.prefill(&prompt, &cfg).unwrap();
+    assert_prefill_bit_identical(&a, &b, "int8 t1 vs t4");
+    let again = int8s[1].1.prefill(&prompt, &cfg).unwrap();
+    assert_prefill_bit_identical(&b, &again, "int8 t4 rerun");
+}
+
+/// Mixed prefill-chunk/decode batches on the int8 tier: batched equals
+/// the int8 engine's own sequential path **bitwise** (batching never
+/// changes the dequantize-and-fold order), and both stay within the
+/// tier budget of the f32-weight oracle.
+#[test]
+fn int8_step_batch_is_batch_invariant_and_within_budget() {
+    let reference = testing::cpu_engine_reference();
+    let spec = testing::int8_spec();
+    let seqs = batch_seqs(reference.block());
+    let want = run_sequential(&reference, &seqs, 3);
+    for threads in [1usize, 4] {
+        let int8 = testing::cpu_engine_int8_simd(threads);
+        let solo = run_sequential(&int8, &seqs, 3);
+        let got = run_batched(&int8, &seqs, 3, 4);
+        assert_traces_bit_identical(
+            &solo,
+            &got,
+            &format!("int8 B=3 threads={threads} batched vs solo"),
+        );
+        assert_traces_within(
+            &spec,
+            &want,
+            &got,
+            &format!("int8 B=3 threads={threads} vs oracle"),
+        );
+    }
+}
+
 /// The env-resolved engine (what `cargo test` under
 /// `FF_CPU_KERNEL=...` actually builds — scripts/check.sh runs this
 /// suite both ways) is gated at whichever tier the env selects:
@@ -849,7 +923,7 @@ fn env_kernel_engine_matches_reference_at_its_tier() {
     }
 }
 
-/// KV-cache safety across tiers: the SIMD and bf16 tiers carry
+/// KV-cache safety across tiers: the SIMD, bf16 and int8 tiers carry
 /// distinct numeric fingerprints, so prefix-cache KV computed on one
 /// tier is never silently adopted by another — while the scalar fast
 /// path still shares the reference fingerprint (bit-identical ⇒
@@ -860,6 +934,7 @@ fn relaxed_tiers_have_distinct_numeric_fingerprints() {
     let scalar = testing::cpu_engine_threads(1);
     let simd = testing::cpu_engine_simd(1);
     let bf16 = testing::cpu_engine_bf16_simd(1);
+    let int8 = testing::cpu_engine_int8_simd(1);
     assert_eq!(
         reference.rt.numeric_fingerprint(),
         scalar.rt.numeric_fingerprint(),
@@ -879,6 +954,21 @@ fn relaxed_tiers_have_distinct_numeric_fingerprints() {
         simd.rt.numeric_fingerprint(),
         bf16.rt.numeric_fingerprint(),
         "bf16 tier must not adopt f32-simd KV"
+    );
+    assert_ne!(
+        scalar.rt.numeric_fingerprint(),
+        int8.rt.numeric_fingerprint(),
+        "int8 tier must not adopt scalar KV"
+    );
+    assert_ne!(
+        simd.rt.numeric_fingerprint(),
+        int8.rt.numeric_fingerprint(),
+        "int8 tier must not adopt f32-simd KV"
+    );
+    assert_ne!(
+        bf16.rt.numeric_fingerprint(),
+        int8.rt.numeric_fingerprint(),
+        "int8 tier must not adopt bf16 KV"
     );
 }
 
@@ -917,7 +1007,13 @@ fn pool_factory_shares_one_weight_set_across_replicas() {
         "replicas must share one manifest allocation, not re-seed"
     );
     // and the factory-built engine matches a hand-built one numerically
-    let hand = Engine::synthetic_cpu(&SyntheticSpec::default()).unwrap();
+    // (the factory honors FF_WEIGHT_PREC, so the hand-built spec must
+    // resolve the same storage precision for the fingerprints to agree)
+    let spec = SyntheticSpec {
+        weight_precision: fastforward::weights::WeightPrecision::from_env(),
+        ..SyntheticSpec::default()
+    };
+    let hand = Engine::synthetic_cpu(&spec).unwrap();
     assert_eq!(
         a.rt.numeric_fingerprint(),
         hand.rt.numeric_fingerprint()

@@ -290,3 +290,61 @@ fn simd_dense_prefill_beats_scalar_at_t512() {
          (register-tiled matmul + lane-chunked reductions)"
     );
 }
+
+/// The int8 weight-tier gate: dense prefill at T = 512 on the
+/// FFN-heavy bench model must run ≥ 1.2× faster streaming int8 weight
+/// panels (`--weight-precision int8`, SIMD kernels) than streaming f32
+/// panels on the same SIMD kernels. The tiled matmuls are
+/// memory-bandwidth-bound at this shape, so quartering the weight-read
+/// bytes (1 code byte + amortized per-tile scale vs 4 bytes) should
+/// comfortably clear the bar even after the in-register dequantize.
+#[test]
+fn int8_dense_prefill_beats_f32_at_t512() {
+    let _gate = hold_gate();
+    if skip_few_cores("int8_dense_prefill_beats_f32_at_t512") {
+        return;
+    }
+    let precision_engine = |precision| {
+        let spec = SyntheticSpec {
+            weight_precision: precision,
+            ..perf_spec()
+        };
+        Engine::synthetic_cpu_with(
+            &spec,
+            CpuOptions {
+                threads: 0,
+                reference: false,
+                kernel: Some(CpuKernel::Simd),
+            },
+        )
+        .unwrap()
+    };
+    let f32e =
+        precision_engine(fastforward::weights::WeightPrecision::F32);
+    let int8e =
+        precision_engine(fastforward::weights::WeightPrecision::Int8);
+    let toks = prompt(512);
+    let cfg = SparsityConfig::dense();
+    // warmup both tiers (thread pool spin-up, op-cache fill)
+    f32e.prefill(&toks, &cfg).unwrap();
+    int8e.prefill(&toks, &cfg).unwrap();
+    let t_f32 = best_of(2, || {
+        f32e.prefill(&toks, &cfg).unwrap();
+    });
+    let t_int8 = best_of(2, || {
+        int8e.prefill(&toks, &cfg).unwrap();
+    });
+    let speedup = t_f32 / t_int8;
+    eprintln!(
+        "[perf] weight tiers len=512: simd-f32 {:.1} ms, simd-int8 \
+         {:.1} ms, speedup {:.2}x",
+        t_f32 * 1e3,
+        t_int8 * 1e3,
+        speedup
+    );
+    assert!(
+        speedup >= 1.2,
+        "int8 dense prefill speedup {speedup:.2}x < 1.2x at T=512 \
+         (quartered weight-read bytes on bandwidth-bound matmuls)"
+    );
+}

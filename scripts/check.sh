@@ -28,6 +28,10 @@ echo "==> backend conformance suite (FF_CPU_KERNEL=simd)"
 FF_CPU_KERNEL=simd cargo test -q --test backend_conformance \
     "${extra[@]}"
 
+echo "==> backend conformance suite (FF_WEIGHT_PREC=int8)"
+FF_WEIGHT_PREC=int8 cargo test -q --test backend_conformance \
+    "${extra[@]}"
+
 echo "==> one-block CPU perf smoke (sparse beats dense)"
 cargo test -q --test perf_smoke one_block_sparse_beats_dense "${extra[@]}"
 
@@ -43,6 +47,10 @@ echo "==> SIMD kernel-tier perf smoke (dense prefill >= 1.2x scalar)"
 cargo test -q --test perf_smoke simd_dense_prefill_beats_scalar_at_t512 \
     "${extra[@]}"
 
+echo "==> int8 weight-tier perf smoke (dense prefill >= 1.2x simd-f32)"
+cargo test -q --test perf_smoke int8_dense_prefill_beats_f32_at_t512 \
+    "${extra[@]}"
+
 echo "==> fig10 continuous-batching smoke (--smoke: B in {1,4})"
 cargo bench --bench fig10_continuous_batching "${extra[@]}" -- \
     --backend cpu --smoke
@@ -53,6 +61,10 @@ cargo bench --bench fig11_sparse_attention "${extra[@]}" -- \
 
 echo "==> fig12 kernel-tier smoke (--smoke: scalar/simd/bf16 at T=256)"
 cargo bench --bench fig12_kernel_tiers "${extra[@]}" -- \
+    --backend cpu --smoke
+
+echo "==> fig13 quantized-weight smoke (--smoke: f32/bf16/int8 at T=256)"
+cargo bench --bench fig13_quantized_weights "${extra[@]}" -- \
     --backend cpu --smoke
 
 echo "==> cargo test --doc"
