@@ -1,0 +1,144 @@
+//! Figure 14: speculative prefill — quality vs speedup as the token
+//! keep ratio falls.
+//!
+//! For each keep ratio r, the bench runs the longbench-sim suite with
+//! `--token-keep-ratio r` on the synthetic CPU model: the low-rank FFN
+//! predictor scores every prompt token in one cheap pass, the top-K
+//! survive (sink + local bands always kept, `fastforward::sparsity::
+//! tokens`), and only the survivors go through the main prefill. The
+//! sweep reports, per ratio:
+//!
+//! * the likelihood score average and its relative gap vs r = 1.0
+//!   (the paper's accuracy axis),
+//! * the greedy-overlap score on the needle tasks (full runs only),
+//! * mean prefill wall-clock and its speedup vs r = 1.0.
+//!
+//! r = 1.0 is bit-identical to the unpruned path by construction (the
+//! conformance tier pins that), so it doubles as the dense baseline.
+//! Needs no artifacts and emits `BENCH_fig14_cpu.json`.
+//!
+//! Flags: `--smoke` for the quick check.sh gate (two ratios, smaller
+//! task set, no generation pass).
+
+mod common;
+
+use fastforward::engine::SparsityConfig;
+use fastforward::eval::{self, EvalSpec};
+use fastforward::testing;
+use fastforward::util::cli::Args;
+
+struct Point {
+    keep: f64,
+    avg: f64,
+    rel_gap_pct: f64,
+    overlap_avg: f64,
+    mean_ttft_ms: f64,
+    speedup: f64,
+}
+
+fn main() {
+    common::header(
+        "Figure 14",
+        "speculative prefill: quality vs speedup over token keep ratio",
+    );
+    let args = Args::parse_env();
+    let smoke = args.has("smoke");
+    let keeps: &[f64] = if smoke {
+        &[1.0, 0.5]
+    } else {
+        &[1.0, 0.75, 0.5, 0.25]
+    };
+    let spec = if smoke {
+        EvalSpec {
+            tasks_per_group: 2,
+            prompt_chars: 512,
+            with_generation: false,
+            ..EvalSpec::default()
+        }
+    } else {
+        EvalSpec {
+            with_generation: true,
+            max_gen_tokens: 12,
+            ..EvalSpec::default()
+        }
+    };
+    println!(
+        "backend: cpu (synthetic model), longbench-sim {} tasks/group, \
+         {} prompt chars{}",
+        spec.tasks_per_group,
+        spec.prompt_chars,
+        if smoke { ", smoke mode" } else { "" }
+    );
+
+    let engine = testing::cpu_engine();
+    let tasks = eval::build_tasks(&spec);
+    let mut points: Vec<Point> = Vec::new();
+    println!(
+        "{:>6} {:>8} {:>10} {:>10} {:>10} {:>9}",
+        "keep", "avg", "gap %", "overlap", "ttft ms", "speedup"
+    );
+    for &keep in keeps {
+        let mut cfg = SparsityConfig::dense();
+        cfg.token_keep_ratio = Some(keep);
+        let r = eval::evaluate(&engine, &tasks, &cfg, &spec).unwrap();
+        let base = points.first();
+        let rel_gap = base.map_or(0.0, |b| {
+            if b.avg == 0.0 {
+                0.0
+            } else {
+                (r.average - b.avg) / b.avg * 100.0
+            }
+        });
+        let speedup =
+            base.map_or(1.0, |b| b.mean_ttft_ms / r.mean_ttft_ms);
+        let overlap_avg = if r.group_overlap.is_empty() {
+            0.0
+        } else {
+            r.group_overlap.values().sum::<f64>()
+                / r.group_overlap.len() as f64
+        };
+        println!(
+            "{keep:>6.2} {:>8.2} {rel_gap:>+10.2} {overlap_avg:>10.2} \
+             {:>10.2} {speedup:>8.2}x",
+            r.average, r.mean_ttft_ms
+        );
+        points.push(Point {
+            keep,
+            avg: r.average,
+            rel_gap_pct: rel_gap,
+            overlap_avg,
+            mean_ttft_ms: r.mean_ttft_ms,
+            speedup,
+        });
+    }
+
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"keep\":{},\"avg\":{:.4},\"rel_gap_pct\":{:.4},\
+                 \"overlap_avg\":{:.4},\"mean_ttft_ms\":{:.3},\
+                 \"speedup\":{:.4}}}",
+                p.keep, p.avg, p.rel_gap_pct, p.overlap_avg,
+                p.mean_ttft_ms, p.speedup
+            )
+        })
+        .collect();
+    common::write_bench_json(
+        "BENCH_fig14_cpu.json",
+        &format!(
+            "{{\"figure\":\"fig14_speculative_prefill\",\
+             \"backend\":\"cpu\",\"smoke\":{smoke},\"points\":[{}]}}\n",
+            rows.join(",")
+        ),
+    );
+
+    if let Some(p) = points.iter().find(|p| p.keep == 0.5) {
+        println!(
+            "acceptance: keep=0.5 prefill faster than unpruned → \
+             {:.2}x {}",
+            p.speedup,
+            if p.speedup > 1.0 { "PASS" } else { "MISS" }
+        );
+    }
+}

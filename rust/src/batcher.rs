@@ -65,6 +65,7 @@ use crate::metrics::Metrics;
 use crate::router::{Replica, Request, Response, Router, SloClass,
                     TokenEvent};
 use crate::tokenizer::{StreamDecoder, Tokenizer, EOS};
+use crate::util::sync::lock_recover;
 
 /// Executor tuning knobs (see docs/SCHEDULING.md for guidance).
 #[derive(Debug, Clone)]
@@ -503,7 +504,7 @@ impl Batcher {
     /// whether anything was ejected.
     fn eject_preempted(&mut self, active: &mut Vec<Active>) -> bool {
         let cache_enabled =
-            self.router.prefix_cache.lock().unwrap().enabled();
+            lock_recover(&self.router.prefix_cache).enabled();
         let ejectable = |a: &Active| -> bool {
             let Phase::Prefill(session) = &a.phase else {
                 return false;
@@ -527,12 +528,15 @@ impl Batcher {
         else {
             unreachable!()
         };
-        // counters first (blocks that ran, ran), then salvage
+        // counters first (blocks that ran, ran), then salvage. The
+        // salvaged blocks are keyed on the *effective* (possibly
+        // token-pruned) prompt, matching what re-admission will look up.
         self.metrics.record_prefill_timing(session.timing());
-        self.offer_blocks(&a.req, &session.cache,
+        self.offer_blocks(&a.req, session.effective_tokens(),
+                          session.keep_map(), &session.cache,
                           session.resident_blocks());
         {
-            let mut pool = self.router.kv_pool.lock().unwrap();
+            let mut pool = lock_recover(&self.router.kv_pool);
             if let Err(e) = pool.release_all(&a.pages) {
                 eprintln!(
                     "[batcher:{}] page release: {e}",
@@ -589,16 +593,34 @@ impl Batcher {
         }
     }
 
-    /// Allocate pages, build the prefill session and adopt the longest
-    /// cached prefix (if any). Returns (session, pages, reused_blocks).
+    /// Build the prefill session, allocate pages for its *effective*
+    /// prompt and adopt the longest cached prefix (if any). Returns
+    /// (session, pages, reused_blocks).
+    ///
+    /// The session is built **before** pages are allocated: under
+    /// speculative token pruning the session's scoring pass decides how
+    /// many tokens actually prefill, and the page reservation covers
+    /// only the surviving tokens (plus the decode budget) — a keep=0.5
+    /// request reserves roughly half the KV a dense one would. A
+    /// KV-pressure retry rebuilds the session, re-running the cheap
+    /// scoring pass; selection is deterministic, so it reproduces the
+    /// same keep-set.
     fn try_admit(&mut self, req: &Request)
                  -> std::result::Result<
                      (PrefillSession, Vec<PageId>, usize),
                      AdmitError,
                  > {
-        let total = req.prompt.len() + req.max_tokens;
+        let mut session = match PrefillSession::new(
+            self.engine.clone(),
+            req.prompt.clone(),
+            req.cfg.clone(),
+        ) {
+            Ok(s) => s,
+            Err(e) => return Err(AdmitError::Fatal(e)),
+        };
+        let total = session.effective_tokens().len() + req.max_tokens;
         let pages = {
-            let mut pool = self.router.kv_pool.lock().unwrap();
+            let mut pool = lock_recover(&self.router.kv_pool);
             let n = pool.pages_for(total);
             match pool.allocate(n) {
                 Ok(p) => p,
@@ -610,44 +632,35 @@ impl Batcher {
                     // the router admitted this request, so pages will
                     // appear as other work retires.
                     drop(pool);
-                    let mut pc = self.router.prefix_cache.lock().unwrap();
-                    let mut pool = self.router.kv_pool.lock().unwrap();
+                    let mut pc = lock_recover(&self.router.prefix_cache);
+                    let mut pool = lock_recover(&self.router.kv_pool);
                     pc.evict_for(n, &mut pool);
                     pool.allocate(n).map_err(|_| AdmitError::KvPressure)?
                 }
             }
         };
         let release_on_err = |pages: &[PageId], router: &Router| {
-            let mut pool = router.kv_pool.lock().unwrap();
+            let mut pool = lock_recover(&router.kv_pool);
             let _ = pool.release_all(pages);
-        };
-        let mut session = match PrefillSession::new(
-            self.engine.clone(),
-            req.prompt.clone(),
-            req.cfg.clone(),
-        ) {
-            Ok(s) => s,
-            Err(e) => {
-                release_on_err(&pages, &self.router);
-                return Err(AdmitError::Fatal(e));
-            }
         };
 
         // Prefix adoption: pin the longest cached prefix under the lock,
         // then copy lock-free from the hit's Arc-shared rows — a long
         // memcpy never serializes the other replicas' admissions. The
         // refcount pin keeps the entries (and their page accounting)
-        // resident until released.
+        // resident until released. Lookup keys on the *effective*
+        // tokens: pruned KV only ever matches pruned KV (the config
+        // fingerprint in the seed already separates keep ratios).
         let mut reused_blocks = 0;
         if req.cfg.prefix_cacheable() {
             // config ⊕ model ⊕ backend: KV is only shared when all match
             let seed = self.engine.prefix_seed(&req.cfg);
             let hit = {
-                let mut pc = self.router.prefix_cache.lock().unwrap();
+                let mut pc = lock_recover(&self.router.prefix_cache);
                 if !pc.enabled() {
                     None
                 } else {
-                    let hit = pc.acquire(seed, &req.prompt);
+                    let hit = pc.acquire(seed, session.effective_tokens());
                     if hit.is_none() {
                         // miss already counted by acquire
                         self.metrics.set_prefix_state(
@@ -663,7 +676,7 @@ impl Batcher {
                 let adopt = session
                     .adopt_prefix(hit.tokens, |cache| hit.copy_into(cache));
                 {
-                    let mut pc = self.router.prefix_cache.lock().unwrap();
+                    let mut pc = lock_recover(&self.router.prefix_cache);
                     pc.release(&hit);
                     self.metrics.set_prefix_state(
                         pc.stats(),
@@ -722,6 +735,10 @@ impl Batcher {
         // before finish() so a finish-time error can't lose the
         // blocks that genuinely ran
         self.metrics.record_prefill_timing(session.timing());
+        // the effective (possibly token-pruned) prompt keys the prefix
+        // offer, and its length — the cache fill — is where decode
+        // positions continue from
+        let effective = session.effective_tokens().to_vec();
         let pre = session.finish()?;
         let ttft = a.admitted.elapsed().as_secs_f64() * 1e3;
         a.ttft_ms = Some(ttft);
@@ -731,10 +748,12 @@ impl Batcher {
             reused_blocks: a.reused_blocks,
         });
         a.last_emit = Some(Instant::now());
-        self.offer_prefix(&a.req, &pre.cache);
+        self.offer_prefix(&a.req, &effective, pre.keep_map.as_deref(),
+                          &pre.cache);
+        let next_pos = pre.cache.len;
         let seq = self.decode.join(
             pre.cache,
-            a.req.prompt.len(),
+            next_pos,
             pre.last_logits,
             a.req.cfg.clone(),
         );
@@ -746,13 +765,15 @@ impl Batcher {
     }
 
     /// Offer a finished prefill's leading full blocks to the shared
-    /// prefix cache. A `dense_last` final block is excluded: its KV is
+    /// prefix cache, keyed on the *effective* (possibly token-pruned)
+    /// prompt. A `dense_last` final block is excluded: its KV is
     /// position-special and would be wrong for a longer prompt sharing
     /// the prefix. Never fails the request — caching is best-effort.
-    fn offer_prefix(&self, req: &Request, cache: &SeqKvCache) {
+    fn offer_prefix(&self, req: &Request, tokens: &[i32],
+                    keep_map: Option<&[u32]>, cache: &SeqKvCache) {
         let block = self.engine.block();
-        let full_blocks = req.prompt.len() / block;
-        let prompt_is_block_aligned = req.prompt.len() % block == 0;
+        let full_blocks = tokens.len() / block;
+        let prompt_is_block_aligned = tokens.len() % block == 0;
         let dense_last_applies = !req.cfg.is_dense()
             && req.cfg.dense_last
             && prompt_is_block_aligned;
@@ -761,15 +782,19 @@ impl Batcher {
         } else {
             full_blocks
         };
-        self.offer_blocks(req, cache, max_blocks);
+        self.offer_blocks(req, tokens, keep_map, cache, max_blocks);
     }
 
     /// Offer the leading `max_blocks` full blocks of `cache` to the
-    /// shared prefix cache. Also used by `eject_preempted` to salvage a
+    /// shared prefix cache. `tokens` is the effective prompt the rows
+    /// were computed from (pruned when `keep_map` is present; each
+    /// compressed page then records its rows' original positions as
+    /// metadata). Also used by `eject_preempted` to salvage a
     /// partially-executed prefill (`cache.len` then covers only the
     /// prompt prefix computed so far; a mid-prompt block is never
     /// `dense_last`, so no exclusion applies).
-    fn offer_blocks(&self, req: &Request, cache: &SeqKvCache,
+    fn offer_blocks(&self, req: &Request, tokens: &[i32],
+                    keep_map: Option<&[u32]>, cache: &SeqKvCache,
                     max_blocks: usize) {
         if !req.cfg.prefix_cacheable() || max_blocks == 0 {
             return;
@@ -777,28 +802,34 @@ impl Batcher {
         let seed = self.engine.prefix_seed(&req.cfg);
         // cheap probe under the lock: which blocks are actually new
         let missing = {
-            let pc = self.router.prefix_cache.lock().unwrap();
+            let pc = lock_recover(&self.router.prefix_cache);
             if !pc.enabled() {
                 return;
             }
-            pc.missing_blocks(seed, &req.prompt, max_blocks, cache.len)
+            pc.missing_blocks(seed, tokens, max_blocks, cache.len)
         };
         // the expensive memcpy runs with NO locks held, so offering a
         // long prefill never serializes the other replicas
+        let block = self.engine.block();
         let prepared: Vec<crate::kvcache::PreparedBlock> = missing
             .into_iter()
-            .map(|b| crate::kvcache::PreparedBlock::copy_from(
-                cache,
-                self.engine.block(),
-                b,
-            ))
+            .map(|b| {
+                let p = crate::kvcache::PreparedBlock::copy_from(
+                    cache, block, b,
+                );
+                match keep_map {
+                    Some(km) => p.with_keep(
+                        km[b * block..(b + 1) * block].to_vec(),
+                    ),
+                    None => p,
+                }
+            })
             .collect();
-        let mut pc = self.router.prefix_cache.lock().unwrap();
+        let mut pc = lock_recover(&self.router.prefix_cache);
         // lock order: prefix_cache before kv_pool (as at every nested
         // site); insert_prepared only hashes, evicts and moves Arcs
-        let mut pool = self.router.kv_pool.lock().unwrap();
-        pc.insert_prepared(seed, &req.prompt, max_blocks, prepared,
-                           &mut pool);
+        let mut pool = lock_recover(&self.router.kv_pool);
+        pc.insert_prepared(seed, tokens, max_blocks, prepared, &mut pool);
         drop(pool);
         self.metrics.set_prefix_state(
             pc.stats(),
@@ -992,7 +1023,7 @@ impl Batcher {
     }
 
     fn retire(&mut self, a: &mut Active) {
-        let mut pool = self.router.kv_pool.lock().unwrap();
+        let mut pool = lock_recover(&self.router.kv_pool);
         if let Err(e) = pool.release_all(&a.pages) {
             eprintln!("[batcher:{}] page release: {e}", self.replica.id());
         }

@@ -40,7 +40,9 @@ impl Engine {
         let t0 = std::time::Instant::now();
         let mut pre = self.prefill(prompt, cfg)?;
         let ttft_ms = t0.elapsed().as_secs_f64() * 1e3; // first logits ready
-        let mut pos = prompt.len();
+        // decode continues from the cache length — under token pruning
+        // the KV holds only the surviving tokens at compacted positions
+        let mut pos = pre.cache.len;
         let mut logits = pre.last_logits.clone();
         let mut out = Vec::new();
         let t1 = std::time::Instant::now();
@@ -77,7 +79,8 @@ impl Engine {
                               cfg: &SparsityConfig) -> Result<ScoreResult> {
         anyhow::ensure!(!answer.is_empty(), "empty answer");
         let mut pre = self.prefill(prompt, cfg)?;
-        let mut pos = prompt.len();
+        // compacted-position decode, as in `generate`
+        let mut pos = pre.cache.len;
         let mut logits = pre.last_logits.clone();
         let mut total_lp = 0.0f64;
         for (i, &tok) in answer.iter().enumerate() {

@@ -62,6 +62,16 @@ pub struct SparsityConfig {
     /// to (and composable with) the FFN `sparsity` knob. T=1 steps
     /// (ragged tail, decode) always run dense attention.
     pub attn_sparsity: Option<f64>,
+    /// Speculative prefill: `None` (or `Some(1.0)`) = prefill every
+    /// prompt token (the original path, untouched); `Some(r)` with
+    /// `r < 1.0` = score every prompt token with the low-rank predictor
+    /// once, keep the top `ceil(r · n)` tokens (always including the
+    /// sink + local bands, [`crate::sparsity::tokens`]), and prefill
+    /// only the survivors at consecutive compacted positions. The KV
+    /// cache then holds `ceil(r · n)` rows instead of `n` — context
+    /// reduction decoupled from the FFN/attention sparsity axes, and
+    /// composable with both.
+    pub token_keep_ratio: Option<f64>,
 }
 
 impl SparsityConfig {
@@ -76,6 +86,7 @@ impl SparsityConfig {
             source: ExpertSource::Trained,
             sparse_decode: false,
             attn_sparsity: None,
+            token_keep_ratio: None,
         }
     }
 
@@ -104,6 +115,7 @@ impl SparsityConfig {
             source: ExpertSource::Trained,
             sparse_decode: false,
             attn_sparsity: None,
+            token_keep_ratio: None,
         }
     }
 
@@ -166,6 +178,17 @@ impl SparsityConfig {
             h,
             self.attn_sparsity.map(|a| a.to_bits()).unwrap_or(u64::MAX),
         );
+        // pruned-prompt KV holds different tokens at different
+        // positions than the full prompt's; `Some(1.0)` is the
+        // identity selection and deliberately shares the unpruned
+        // fingerprint (the KV is bit-identical by construction)
+        h = mix(
+            h,
+            self.token_keep_ratio
+                .filter(|&r| r < 1.0)
+                .map(|r| r.to_bits())
+                .unwrap_or(u64::MAX),
+        );
         h
     }
 }
@@ -192,11 +215,18 @@ pub struct PrefillTiming {
     pub tail_tokens: usize,
     /// Blocks whose KV was adopted from the prefix cache (not executed).
     pub adopted_blocks: usize,
+    /// Time in the speculative-prefill scoring pass (zero when no
+    /// token pruning was requested).
+    pub score: Duration,
+    /// Prompt tokens dropped by speculative token pruning before the
+    /// main prefill (zero on the unpruned path).
+    pub pruned_tokens: usize,
 }
 
 /// Result of prefilling one prompt.
 pub struct PrefillResult {
-    /// The filled KV cache (`len` == prompt length).
+    /// The filled KV cache (`len` == the number of prefilled tokens:
+    /// the prompt length, or the keep-set size under token pruning).
     pub cache: SeqKvCache,
     /// Hidden state of the final prompt position, [d_model].
     pub last_hidden: Vec<f32>,
@@ -204,6 +234,11 @@ pub struct PrefillResult {
     pub last_logits: Vec<f32>,
     /// Timing and block-count breakdown.
     pub timing: PrefillTiming,
+    /// Speculative-prefill keep map: the ascending original prompt
+    /// indices of the surviving tokens (`None` when the prompt was
+    /// prefilled whole). `cache` row `i` holds the KV of original
+    /// prompt token `keep_map[i]`, computed at compacted position `i`.
+    pub keep_map: Option<Vec<u32>>,
 }
 
 /// Block-wise prefill + decode engine bound to one [`Runtime`].
@@ -350,6 +385,72 @@ impl Engine {
             .iter()
             .copied()
             .min_by_key(|&g| ((g as i64 - target).abs(), g)))
+    }
+
+    /// Resolve `cfg.token_keep_ratio`. `Ok(None)` = no pruning — both
+    /// the unset case and `Some(1.0)`, whose identity selection is
+    /// skipped outright so the unpruned path stays bit-identical by
+    /// construction. Fails fast when pruning is requested against a
+    /// manifest that ships no predictor executable (the scorer) —
+    /// silently prefilling the whole prompt would misreport every
+    /// speedup measured on top.
+    pub(crate) fn token_keep(&self, cfg: &SparsityConfig)
+                             -> Result<Option<f64>> {
+        let Some(r) = cfg.token_keep_ratio else { return Ok(None) };
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&r),
+            "token keep ratio {r} outside [0, 1]"
+        );
+        if r >= 1.0 {
+            return Ok(None);
+        }
+        let scorer = format!("predictor_t{}", self.block);
+        anyhow::ensure!(
+            self.rt.manifest.has_executable(&scorer),
+            "token pruning requested but the manifest ships no \
+             predictor executable ({scorer}) to score tokens with"
+        );
+        Ok(Some(r))
+    }
+
+    /// The speculative-prefill scoring pass: one cheap importance
+    /// estimate per prompt token, computed *before* the main prefill.
+    ///
+    /// Each `block`-sized chunk of the prompt is embedded and fed to
+    /// the layer-0 low-rank predictor (`predictor_t{block}` — the PR 4
+    /// expert scorer repurposed over pooled embeddings, no attention
+    /// and no KV involved); a token's importance is the mean absolute
+    /// predicted neuron score across the FFN axis — tokens that excite
+    /// the FFN strongly are the ones worth prefilling. The ragged tail
+    /// chunk is padded with token 0 to the full block shape (only
+    /// `predictor_t{block}` is compiled) and the padded positions'
+    /// scores are discarded. The host reduction is sequential, so
+    /// scores — and therefore the keep-set — are invariant under
+    /// thread count and batch shape.
+    pub(crate) fn token_scores(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let d_ffn = self.rt.manifest.model.d_ffn;
+        let t = self.block;
+        let mut scores = Vec::with_capacity(tokens.len());
+        for chunk in tokens.chunks(t) {
+            let h = if chunk.len() == t {
+                self.embed(chunk)?
+            } else {
+                let mut padded = chunk.to_vec();
+                padded.resize(t, 0);
+                self.embed(&padded)?
+            };
+            let out = self.rt.run(
+                &format!("predictor_t{t}"),
+                0,
+                &[("h", Input::F32(&h, vec![t, self.d]))],
+            )?;
+            let pred = out.into_iter().next().unwrap().data;
+            for row in pred.chunks(d_ffn).take(chunk.len()) {
+                let sum: f32 = row.iter().map(|v| v.abs()).sum();
+                scores.push(sum / d_ffn as f32);
+            }
+        }
+        Ok(scores)
     }
 
     /// The executable a T=1 step (decode or ragged prompt tail)

@@ -53,21 +53,46 @@ pub struct PrefillSession {
     pub next_pos: usize,
     x_last: Vec<f32>,
     x_last_is_t1: bool,
+    keep_map: Option<Vec<u32>>,
     timing: PrefillTiming,
     started: Instant,
 }
 
 impl PrefillSession {
     /// Start a session over `tokens` under `cfg` (no work happens until
-    /// the first [`PrefillSession::step`]).
+    /// the first [`PrefillSession::step`], except the speculative
+    /// token-scoring pass when `cfg.token_keep_ratio < 1.0`).
     pub fn new(engine: Engine, tokens: Vec<i32>,
                cfg: SparsityConfig) -> Result<Self> {
         anyhow::ensure!(!tokens.is_empty(), "empty prompt");
-        let m = &engine.rt.manifest;
         // Fail fast on invalid / unsupported attention-sparsity configs
         // before any prompt work starts (the resolved level itself is
         // recomputed per planned step).
         engine.attn_pct(&cfg)?;
+        // Speculative prefill: score every prompt token once and keep
+        // only the top `ceil(r · n)` (sink + local bands always
+        // survive). The keep-set compacts in place — survivors prefill
+        // at consecutive positions 0..n_keep, so no kernel changes are
+        // needed and RoPE sees a shorter, contiguous sequence. At
+        // keep >= 1.0 the resolver returns None and nothing here runs:
+        // the unpruned path stays bit-identical by construction.
+        let mut timing = PrefillTiming::default();
+        let mut keep_map = None;
+        let mut tokens = tokens;
+        if let Some(r) = engine.token_keep(&cfg)? {
+            let t0 = Instant::now();
+            let scores = engine.token_scores(&tokens)?;
+            let sel =
+                crate::sparsity::tokens::select_tokens(&scores, r);
+            timing.score = t0.elapsed();
+            if sel.len() < tokens.len() {
+                timing.pruned_tokens = tokens.len() - sel.len();
+                tokens =
+                    sel.iter().map(|&i| tokens[i as usize]).collect();
+                keep_map = Some(sel);
+            }
+        }
+        let m = &engine.rt.manifest;
         let layer_ks = engine.layer_ks(&cfg)?;
         let decode_ks = engine.decode_ks_for(&layer_ks);
         let cache = SeqKvCache::new(
@@ -88,14 +113,30 @@ impl PrefillSession {
             next_pos: 0,
             x_last: Vec::new(),
             x_last_is_t1: false,
-            timing: PrefillTiming::default(),
+            keep_map,
+            timing,
             started: Instant::now(),
         })
     }
 
-    /// Prompt length in tokens.
+    /// Tokens this session prefills — the pruned prompt under token
+    /// pruning, the submitted prompt otherwise.
     pub fn total_tokens(&self) -> usize {
         self.tokens.len()
+    }
+
+    /// The token sequence this session actually prefills (pruned under
+    /// token pruning). This — not the submitted prompt — is what
+    /// prefix-cache keys must hash, since it is what the KV rows hold.
+    pub fn effective_tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    /// Speculative-prefill keep map: ascending original prompt indices
+    /// of the surviving tokens, or `None` when the prompt is prefilled
+    /// whole. `cache` row `i` belongs to original token `keep_map[i]`.
+    pub fn keep_map(&self) -> Option<&[u32]> {
+        self.keep_map.as_deref()
     }
 
     /// Prompt tokens not yet processed.
@@ -357,6 +398,7 @@ impl PrefillSession {
             last_hidden,
             last_logits,
             timing: self.timing,
+            keep_map: self.keep_map,
         })
     }
 }

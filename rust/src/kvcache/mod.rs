@@ -342,6 +342,13 @@ struct PrefixBlock {
     tokens: Vec<i32>,
     /// The KV rows (shared with adopters).
     data: std::sync::Arc<BlockKv>,
+    /// Compressed-page metadata: the original prompt positions of this
+    /// block's rows under speculative token pruning (`None` = dense
+    /// identity block). Purely diagnostic — the KV rows are a function
+    /// of the *effective* (pruned) token sequence alone, which the
+    /// chain hash and the configuration seed already commit to, so
+    /// adoption correctness never consults this map.
+    keep: Option<std::sync::Arc<[u32]>>,
     /// Pages accounting for this entry's residency in the shared pool.
     pages: Vec<PageId>,
     /// Sessions currently adopting this entry; eviction skips entries
@@ -367,6 +374,7 @@ pub struct PrefixHit {
     pub tokens: usize,
     block: usize,
     data: Vec<std::sync::Arc<BlockKv>>,
+    keep: Vec<Option<std::sync::Arc<[u32]>>>,
 }
 
 /// One block's KV rows staged for insertion, copied from a finished
@@ -378,6 +386,7 @@ pub struct PrefixHit {
 pub struct PreparedBlock {
     index: usize,
     data: BlockKv,
+    keep: Option<std::sync::Arc<[u32]>>,
 }
 
 impl PreparedBlock {
@@ -397,7 +406,18 @@ impl PreparedBlock {
                     .map(|l| src.v[l][lo..hi].to_vec())
                     .collect(),
             },
+            keep: None,
         }
+    }
+
+    /// Attach compressed-page metadata: `rows[i]` is the *original*
+    /// prompt position of this block's row `i` (the keep-map slice a
+    /// speculative prefill recorded for these tokens). Stored alongside
+    /// the entry so cache observability can attribute compression; the
+    /// KV itself is keyed purely on the effective token chain.
+    pub fn with_keep(mut self, rows: Vec<u32>) -> Self {
+        self.keep = Some(rows.into());
+        self
     }
 }
 
@@ -428,6 +448,20 @@ impl PrefixHit {
         }
         Ok(())
     }
+
+    /// How many of the matched blocks hold token-pruned (compressed)
+    /// KV — rows covering more original prompt positions than they
+    /// occupy.
+    pub fn compressed_blocks(&self) -> usize {
+        self.keep.iter().filter(|k| k.is_some()).count()
+    }
+
+    /// The keep-map recorded for matched block `i`: the original prompt
+    /// position of each of its rows, or `None` for a dense identity
+    /// block.
+    pub fn keep_map(&self, i: usize) -> Option<&[u32]> {
+        self.keep.get(i).and_then(|k| k.as_deref())
+    }
 }
 
 /// Lifetime counters for the prefix cache (exported via `/metrics`).
@@ -442,6 +476,10 @@ pub struct PrefixCacheStats {
     pub blocks_reused: u64,
     /// Block entries inserted.
     pub insertions: u64,
+    /// Of the insertions, entries holding token-pruned (compressed) KV
+    /// — each covers more prompt positions than the rows it pays for,
+    /// so cached capacity effectively multiplies by `1 / keep_ratio`.
+    pub compressed_insertions: u64,
     /// Block entries evicted under memory pressure.
     pub evictions: u64,
 }
@@ -565,6 +603,7 @@ impl PrefixCache {
         let max_tokens = self.max_adopt_tokens(tokens.len());
         let mut keys = Vec::new();
         let mut data = Vec::new();
+        let mut keep = Vec::new();
         let mut h = seed;
         let mut covered = 0;
         while covered + self.block <= max_tokens {
@@ -577,6 +616,7 @@ impl PrefixCache {
                     e.last_used = self.clock;
                     keys.push(h);
                     data.push(e.data.clone());
+                    keep.push(e.keep.clone());
                     covered += self.block;
                 }
                 _ => break,
@@ -593,6 +633,7 @@ impl PrefixCache {
             keys,
             block: self.block,
             data,
+            keep,
         })
     }
 
@@ -696,9 +737,9 @@ impl PrefixCache {
             return 0;
         }
         let n_blocks = (tokens.len() / self.block).min(max_blocks);
-        let mut staged: HashMap<usize, BlockKv> = prepared
+        let mut staged: HashMap<usize, PreparedBlock> = prepared
             .into_iter()
-            .map(|p| (p.index, p.data))
+            .map(|p| (p.index, p))
             .collect();
         let pages_needed = alloc.pages_for(self.block);
         let mut inserted = 0;
@@ -723,7 +764,8 @@ impl PrefixCache {
             // probe→insert window. Later blocks of this chain would be
             // unreachable (lookups walk from block 0), so stop rather
             // than insert orphans that pin pages with zero hit value.
-            let Some(data) = staged.remove(&b) else { break 'blocks };
+            let Some(p) = staged.remove(&b) else { break 'blocks };
+            let (data, keep) = (p.data, p.keep);
             let bytes =
                 self.entry_bytes(data.k.len(), data.k[0].len() / self.block);
             // make room: byte budget first, then page feasibility; if
@@ -745,11 +787,15 @@ impl PrefixCache {
             };
             let Some(pages) = pages else { break 'blocks };
             self.clock += 1;
+            if keep.is_some() {
+                self.stats.compressed_insertions += 1;
+            }
             self.entries.insert(
                 h,
                 PrefixBlock {
                     tokens: blk.to_vec(),
                     data: std::sync::Arc::new(data),
+                    keep,
                     pages,
                     refs: 1,
                     last_used: self.clock,
@@ -1086,6 +1132,36 @@ mod tests {
         assert_eq!(pc.insert(9, &toks, usize::MAX, &src, &mut alloc), 0);
         assert_eq!(pc.entry_count(), 2);
         assert_eq!(pc.stats().insertions, 2);
+    }
+
+    #[test]
+    fn compressed_entry_metadata_roundtrip() {
+        let mut alloc = PagedAllocator::new(64, BLOCK);
+        let mut pc = PrefixCache::new(BLOCK, 1 << 20);
+        let toks = prompt(2 * BLOCK + 1);
+        let src = filled_cache(toks.len());
+        // block 0 staged with a keep-map (token-pruned rows covering a
+        // 3x-wider span of the original prompt), block 1 dense
+        let keep: Vec<u32> = (0..BLOCK as u32).map(|i| i * 3).collect();
+        let prepared = vec![
+            PreparedBlock::copy_from(&src, BLOCK, 0).with_keep(keep.clone()),
+            PreparedBlock::copy_from(&src, BLOCK, 1),
+        ];
+        let n = pc.insert_prepared(11, &toks, usize::MAX, prepared,
+                                   &mut alloc);
+        assert_eq!(n, 2);
+        assert_eq!(pc.stats().compressed_insertions, 1);
+        let hit = pc.acquire(11, &toks).expect("hit");
+        assert_eq!(hit.compressed_blocks(), 1);
+        assert_eq!(hit.keep_map(0), Some(&keep[..]));
+        assert_eq!(hit.keep_map(1), None);
+        // metadata never affects the adopted rows
+        let mut dst = SeqKvCache::new(2, 1, 2, toks.len());
+        hit.copy_into(&mut dst).unwrap();
+        assert_eq!(dst.len, 2 * BLOCK);
+        let row = src.row_elems();
+        assert_eq!(dst.k[0][..2 * BLOCK * row], src.k[0][..2 * BLOCK * row]);
+        pc.release(&hit);
     }
 
     #[test]

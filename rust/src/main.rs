@@ -51,6 +51,12 @@ fn usage() -> ! {
               blocks: fraction of optional causal key blocks dropped,
               0..1; 0 = dense attention. Quantized onto the manifest's
               compiled grid. Orthogonal to --sparsity)
+             --token-keep-ratio R (speculative prefill: score every
+              prompt token once with the low-rank predictor, keep the
+              top ceil(R*n) tokens — sink + local bands always kept —
+              and prefill only the survivors at compacted positions.
+              1.0 = bit-identical to the unpruned path; orthogonal to
+              --sparsity / --attn-sparsity)
   serve:     --addr HOST:PORT --sparsity S --max-active N --queue N
              --replicas N (executor pool size, default 1)
              --prefix-cache-mb MB (shared prefix KV cache, default 64;
@@ -136,6 +142,10 @@ fn cfg_from_args(args: &Args) -> SparsityConfig {
     // dense branch too (attention-only sparse configs are valid).
     let attn = args.f64("attn-sparsity", 0.0);
     let attn = (attn > 0.0).then_some(attn);
+    // Speculative-prefill token pruning is likewise orthogonal; 1.0
+    // (or unset) means every prompt token prefills.
+    let keep = args.f64("token-keep-ratio", 1.0);
+    let keep = (keep < 1.0).then_some(keep);
     if sp > 0.0 {
         let mut cfg = SparsityConfig::fastforward(sp);
         cfg.layerwise = !args.has("uniform");
@@ -150,10 +160,12 @@ fn cfg_from_args(args: &Args) -> SparsityConfig {
             _ => ExpertSource::Trained,
         };
         cfg.attn_sparsity = attn;
+        cfg.token_keep_ratio = keep;
         cfg
     } else {
         let mut cfg = SparsityConfig::dense();
         cfg.attn_sparsity = attn;
+        cfg.token_keep_ratio = keep;
         cfg
     }
 }
@@ -430,12 +442,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let a = args.f64("attn-sparsity", 0.0);
         if a > 0.0 { Some(a) } else { None }
     };
+    let default_token_keep = {
+        let k = args.f64("token-keep-ratio", 1.0);
+        if k < 1.0 { Some(k) } else { None }
+    };
     let server = Arc::new(Server {
         router: router.clone(),
         metrics,
         tokenizer: Tokenizer::new(vocab),
         default_sparsity,
         default_attn_sparsity,
+        default_token_keep,
     });
     let res = server.serve(&addr);
     router.close();

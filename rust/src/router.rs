@@ -630,15 +630,21 @@ impl Router {
             });
         }
         {
-            let pool = self.kv_pool.lock().unwrap();
+            // poison-recovering locks throughout: a panicking executor
+            // must not turn every later admission into a PoisonError
+            // cascade (the page accounting is repaired by release
+            // sweeps, not by the panicked critical section)
+            let pool = crate::util::sync::lock_recover(&self.kv_pool);
             if !pool.can_allocate(total) {
                 // Live requests outrank cached residency: reclaim
                 // unpinned prefix entries before rejecting. Lock order
                 // matches the batcher's insert site (prefix before
                 // pool), so re-acquire in that order.
                 drop(pool);
-                let mut pc = self.prefix_cache.lock().unwrap();
-                let mut pool = self.kv_pool.lock().unwrap();
+                let mut pc =
+                    crate::util::sync::lock_recover(&self.prefix_cache);
+                let mut pool =
+                    crate::util::sync::lock_recover(&self.kv_pool);
                 let needed = pool.pages_for(total);
                 pc.evict_for(needed, &mut pool);
                 if !pool.can_allocate(total) {

@@ -5,7 +5,8 @@
 //!
 //! Endpoints:
 //! * `POST /generate`  — {"prompt": str, "max_tokens": n, "sparsity": s?,
-//!   "stream": bool?, "class": "interactive"|"batch"?, "deadline_ms": n?}
+//!   "attn_sparsity": a?, "token_keep_ratio": r?, "stream": bool?,
+//!   "class": "interactive"|"batch"?, "deadline_ms": n?}
 //! * `GET  /metrics`   — Prometheus text
 //! * `GET  /healthz`   — liveness
 //!
@@ -69,6 +70,11 @@ pub struct Server {
     /// sparsity; the prefix cache keys on it, so mixed-config traffic
     /// never shares KV across attention configurations.
     pub default_attn_sparsity: Option<f64>,
+    /// Speculative-prefill keep ratio applied when a request doesn't
+    /// specify `token_keep_ratio` (None = prefill every prompt token).
+    /// The prefix cache keys on it too: token-pruned KV is only ever
+    /// shared between requests pruned under the same ratio.
+    pub default_token_keep: Option<f64>,
 }
 
 /// A parsed HTTP request (just enough of HTTP/1.1).
@@ -314,6 +320,11 @@ impl Server {
             .and_then(|v| v.as_f64())
             .or(self.default_attn_sparsity)
             .filter(|&a| a > 0.0);
+        cfg.token_keep_ratio = j
+            .get("token_keep_ratio")
+            .and_then(|v| v.as_f64())
+            .or(self.default_token_keep)
+            .filter(|&k| k < 1.0);
         let stream_mode = j
             .get("stream")
             .and_then(|v| v.as_bool())

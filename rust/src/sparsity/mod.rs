@@ -1,11 +1,13 @@
 //! FastForward sparsity machinery: the layerwise schedule (Algorithm 1),
-//! expert mask selection, block-sparse attention selection, and the
-//! baseline predictors from the paper's ablations (per-block-dynamic
-//! oracle, GRIFFIN first-block-static, CATS thresholding).
+//! expert mask selection, block-sparse attention selection, speculative
+//! prefill token selection, and the baseline predictors from the
+//! paper's ablations (per-block-dynamic oracle, GRIFFIN
+//! first-block-static, CATS thresholding).
 
 pub mod attn;
 pub mod masks;
 pub mod schedule;
+pub mod tokens;
 
 pub use masks::{top_k_indices, ExpertSource};
 pub use schedule::{layerwise_schedule, quantize_densities};

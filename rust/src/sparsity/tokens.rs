@@ -1,0 +1,232 @@
+//! Speculative-prefill token selection (Speculative Prefill /
+//! FastKV-style): a cheap importance score is computed for every prompt
+//! token once, and only the top-scoring tokens — plus mandatory *sink +
+//! local* keep bands — survive into the main prefill. The surviving
+//! tokens are prefilled at consecutive compacted positions, so their KV
+//! occupies `ceil(keep · n)` rows instead of `n` and the prefix cache's
+//! effective capacity multiplies by `1 / keep`.
+//!
+//! Everything here is **pure selection**: the function decides *which*
+//! prompt tokens the engine prefills, never the scores themselves (the
+//! engine's scoring pass lives in `engine/mod.rs`). Selection runs
+//! sequentially on the dispatching thread, so it is invariant under
+//! thread count and batch shape by construction — the same contract as
+//! [`super::attn::select_blocks`].
+
+/// Mandatory sink band: the first `SINK_TOKENS` prompt tokens are
+/// always kept (attention-sink positions, StreamingLLM-style).
+pub const SINK_TOKENS: usize = 4;
+
+/// Mandatory local band: the last `LOCAL_TOKENS` prompt tokens are
+/// always kept — the final token in particular must survive so the
+/// last-position logits (and the decode continuation) exist.
+pub const LOCAL_TOKENS: usize = 16;
+
+/// Select the prompt tokens a speculative prefill keeps.
+///
+/// `scores[i]` is the importance estimate for prompt token `i`;
+/// `keep_ratio ∈ [0, 1]` is the fraction of the prompt that survives.
+/// The sink + local bands are always kept, and the overall target of
+/// `ceil(keep_ratio · n)` tokens (clamped to at least the mandatory
+/// band) is filled from the optional middle by score (ties broken
+/// toward the lower token index). `keep_ratio == 1.0` is the identity
+/// selection, and `keep_ratio == 0.0` degenerates to the sink + local
+/// bands alone. Prompts no longer than the mandatory bands are kept
+/// whole. Returns ascending, duplicate-free indices.
+pub fn select_tokens(scores: &[f32], keep_ratio: f64) -> Vec<u32> {
+    let n = scores.len();
+    assert!(
+        (0.0..=1.0).contains(&keep_ratio),
+        "keep_ratio must be in [0, 1]"
+    );
+    if n <= SINK_TOKENS + LOCAL_TOKENS || keep_ratio >= 1.0 {
+        return (0..n as u32).collect();
+    }
+    let mandatory =
+        |i: usize| -> bool { i < SINK_TOKENS || i + LOCAL_TOKENS >= n };
+    let n_mandatory = SINK_TOKENS + LOCAL_TOKENS;
+    let target = ((keep_ratio * n as f64).ceil() as usize)
+        .clamp(n_mandatory, n);
+    let keep_optional = target - n_mandatory;
+    let mut ranked: Vec<usize> =
+        (0..n).filter(|&i| !mandatory(i)).collect();
+    // score descending, then token index ascending — a total order, so
+    // the pick is deterministic even under tied (or NaN) scores
+    ranked.sort_by(|&a, &b| {
+        scores[b]
+            .total_cmp(&scores[a])
+            .then_with(|| a.cmp(&b))
+    });
+    ranked.truncate(keep_optional);
+    let mut out: Vec<u32> = (0..n)
+        .filter(|&i| mandatory(i))
+        .map(|i| i as u32)
+        .chain(ranked.into_iter().map(|i| i as u32))
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn rand_scores(r: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (r.f64() * 8.0 - 4.0) as f32).collect()
+    }
+
+    /// Output is strictly ascending, duplicate-free and in range.
+    #[test]
+    fn prop_ascending_unique_in_range() {
+        check("token-select-ascending", 300, |r| {
+            let n = r.range(1, 200);
+            let keep = r.f64();
+            let scores = rand_scores(r, n);
+            let sel = select_tokens(&scores, keep);
+            crate::prop_assert!(
+                sel.iter().all(|&i| (i as usize) < n),
+                "out-of-range index: {sel:?} at n={n}"
+            );
+            for w in sel.windows(2) {
+                crate::prop_assert!(
+                    w[0] < w[1],
+                    "not strictly ascending: {sel:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// The sink and local bands survive regardless of scores — even
+    /// when every optional token outscores them.
+    #[test]
+    fn prop_sink_and_local_always_kept() {
+        check("token-select-mandatory", 300, |r| {
+            let n = r.range(1, 200);
+            let keep = r.f64();
+            // adversarial scores: mandatory tokens score worst
+            let scores: Vec<f32> = (0..n)
+                .map(|i| {
+                    if i < SINK_TOKENS || i + LOCAL_TOKENS >= n {
+                        -1e9
+                    } else {
+                        (r.f64() * 4.0) as f32
+                    }
+                })
+                .collect();
+            let sel = select_tokens(&scores, keep);
+            for i in 0..SINK_TOKENS.min(n) {
+                crate::prop_assert!(
+                    sel.contains(&(i as u32)),
+                    "sink token {i} dropped: {sel:?}"
+                );
+            }
+            for i in n.saturating_sub(LOCAL_TOKENS)..n {
+                crate::prop_assert!(
+                    sel.contains(&(i as u32)),
+                    "local token {i} dropped at n={n}: {sel:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// keep = 1.0 is the identity; keep = 0.0 degenerates to exactly
+    /// the sink + local bands (whole short prompts survive intact).
+    #[test]
+    fn prop_degenerate_ratios() {
+        check("token-select-degenerate", 200, |r| {
+            let n = r.range(1, 200);
+            let scores = rand_scores(r, n);
+            let all = select_tokens(&scores, 1.0);
+            crate::prop_assert!(
+                all == (0..n as u32).collect::<Vec<_>>(),
+                "keep=1.0 must be the identity: {all:?}"
+            );
+            let band = select_tokens(&scores, 0.0);
+            let expect: Vec<u32> = (0..n)
+                .filter(|&i| {
+                    n <= SINK_TOKENS + LOCAL_TOKENS
+                        || i < SINK_TOKENS
+                        || i + LOCAL_TOKENS >= n
+                })
+                .map(|i| i as u32)
+                .collect();
+            crate::prop_assert!(
+                band == expect,
+                "keep=0 must keep only sink+local: {band:?} vs {expect:?}"
+            );
+            Ok(())
+        });
+    }
+
+    /// Kept-count arithmetic: `ceil(keep · n)` tokens survive, clamped
+    /// to at least the mandatory band (long prompts only — short
+    /// prompts are kept whole).
+    #[test]
+    fn prop_keep_count() {
+        check("token-select-count", 200, |r| {
+            let n = r.range(SINK_TOKENS + LOCAL_TOKENS + 1, 400);
+            let keep = r.f64();
+            let scores = rand_scores(r, n);
+            let sel = select_tokens(&scores, keep);
+            let expect = ((keep * n as f64).ceil() as usize)
+                .clamp(SINK_TOKENS + LOCAL_TOKENS, n);
+            crate::prop_assert!(
+                sel.len() == expect,
+                "size {} != ceil({keep}·{n}) clamped = {expect}",
+                sel.len()
+            );
+            Ok(())
+        });
+    }
+
+    /// Selection is a pure function of its inputs — two invocations
+    /// agree (the conformance suite re-checks the end-to-end claim at
+    /// threads {1, 4} and B ∈ {1, 3}).
+    #[test]
+    fn prop_selection_deterministic() {
+        check("token-select-deterministic", 100, |r| {
+            let n = r.range(1, 200);
+            let keep = r.f64();
+            let scores = rand_scores(r, n);
+            crate::prop_assert!(
+                select_tokens(&scores, keep)
+                    == select_tokens(&scores, keep),
+                "selection not deterministic"
+            );
+            Ok(())
+        });
+    }
+
+    /// NaN scores cannot poison the ordering: `total_cmp` gives NaN a
+    /// fixed rank, the output stays well-formed and the mandatory
+    /// bands still survive.
+    #[test]
+    fn prop_nan_scores_are_safe() {
+        check("token-select-nan", 100, |r| {
+            let n = r.range(SINK_TOKENS + LOCAL_TOKENS + 1, 120);
+            let keep = r.f64();
+            let scores: Vec<f32> = (0..n)
+                .map(|_| {
+                    if r.bool(0.3) { f32::NAN } else { r.f64() as f32 }
+                })
+                .collect();
+            let sel = select_tokens(&scores, keep);
+            for w in sel.windows(2) {
+                crate::prop_assert!(w[0] < w[1], "not ascending");
+            }
+            crate::prop_assert!(
+                sel.contains(&0) && sel.contains(&((n - 1) as u32)),
+                "band lost under NaN scores: {sel:?}"
+            );
+            crate::prop_assert!(
+                sel == select_tokens(&scores, keep),
+                "NaN scores broke determinism"
+            );
+            Ok(())
+        });
+    }
+}

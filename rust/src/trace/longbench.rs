@@ -74,6 +74,17 @@ pub struct Task {
     pub answer: String,
 }
 
+/// Smallest `target_chars` accepted by [`TaskGen::generate`].
+///
+/// Below this, several groups used to degenerate *silently* — the
+/// `saturating_sub` budget guards produced empty documents
+/// (single_doc_qa body hits zero near `key+val+40` chars), zero-shot
+/// few_shot prompts (no ` maps to ` example to infer the rule from)
+/// and topic-free summaries — and the eval then graded noise while
+/// reporting a normal-looking score. Generation now fails fast
+/// instead.
+pub const MIN_TASK_CHARS: usize = 128;
+
 /// Deterministic task generator. `target_chars` sets the prompt length
 /// (bytes == tokens for the byte tokenizer).
 pub struct TaskGen {
@@ -90,7 +101,19 @@ impl TaskGen {
     }
 
     /// Generate one task of `group` with a ~`target_chars` prompt.
+    ///
+    /// # Panics
+    ///
+    /// When `target_chars < `[`MIN_TASK_CHARS`] — prompts that small
+    /// cannot carry the planted structure the grader scores against.
     pub fn generate(&mut self, group: TaskGroup, target_chars: usize) -> Task {
+        assert!(
+            target_chars >= MIN_TASK_CHARS,
+            "longbench-sim target_chars {target_chars} is below the \
+             {MIN_TASK_CHARS}-char minimum: prompts this small degenerate \
+             (empty documents, zero-shot patterns) and the eval would \
+             grade noise"
+        );
         match group {
             TaskGroup::SingleDocQa => self.single_doc_qa(target_chars),
             TaskGroup::MultiDocQa => self.multi_doc_qa(target_chars),
@@ -150,7 +173,10 @@ impl TaskGen {
         let mut total = 0;
         while total < chars.saturating_sub(40) {
             let mut s = self.bank.sentence(&mut self.rng);
-            if self.rng.bool(0.5) {
+            // the first sentence always names the topic — near the
+            // minimum size a coin-flip-only placement can emit a
+            // document that never mentions its own answer
+            if parts.is_empty() || self.rng.bool(0.5) {
                 s = format!("the {topic} {s}");
             }
             total += s.len() + 1;
@@ -311,6 +337,52 @@ mod tests {
         let half = overlap_score("the cat", "the dog");
         assert!(half > 0.4 && half < 0.6);
         assert_eq!(overlap_score("", "x"), 0.0);
+    }
+
+    /// Regression: the smallest accepted size must still produce
+    /// structurally sound tasks in every group — non-empty filler
+    /// around the planted fact, at least one few-shot example, the
+    /// needle present in the haystack. Before the `MIN_TASK_CHARS`
+    /// gate, sizes just below these thresholds silently emitted
+    /// prompts with the structure missing.
+    #[test]
+    fn smallest_valid_size_is_not_degenerate() {
+        let mut g = TaskGen::new(11);
+        for group in TaskGroup::all() {
+            let t = g.generate(group, MIN_TASK_CHARS);
+            assert!(!t.answer.is_empty(), "{group:?} empty answer");
+            assert!(
+                t.prompt.len() >= MIN_TASK_CHARS / 2,
+                "{group:?} prompt collapsed to {} chars",
+                t.prompt.len()
+            );
+            match group {
+                TaskGroup::SingleDocQa
+                | TaskGroup::MultiDocQa
+                | TaskGroup::Synthetic => assert!(
+                    t.prompt.contains(t.answer.trim()),
+                    "{group:?} needle missing from haystack"
+                ),
+                TaskGroup::FewShot => assert!(
+                    t.prompt.matches(" maps to ").count() >= 2,
+                    "few_shot has no in-context example to learn from"
+                ),
+                TaskGroup::Summarization => assert!(
+                    t.prompt.contains(t.answer.trim()),
+                    "summarization topic never appears in the document"
+                ),
+                TaskGroup::Code => assert!(
+                    t.prompt.contains("fn "),
+                    "code task has no function to close"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "below the")]
+    fn undersized_target_fails_fast() {
+        TaskGen::new(4).generate(TaskGroup::FewShot, MIN_TASK_CHARS - 1);
     }
 
     #[test]

@@ -61,8 +61,13 @@ impl Summary {
         // Total order: a NaN sample must not panic the metrics thread.
         s.sort_by(|a, b| a.total_cmp(b));
         let pos = q / 100.0 * (s.len() - 1) as f64;
-        let lo = pos.floor() as usize;
-        let hi = pos.ceil() as usize;
+        // f64 round-off can push `pos` a hair past len-1 (e.g. q=100
+        // with len where (len-1)·100/100 lands above the integer), so
+        // both indices are clamped back in range instead of trusting
+        // floor/ceil to stay there.
+        let last = s.len() - 1;
+        let lo = (pos.floor() as usize).min(last);
+        let hi = (pos.ceil() as usize).min(last);
         if lo == hi {
             s[lo]
         } else {
@@ -135,5 +140,36 @@ mod tests {
         let s = Summary::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(50.0), 0.0);
+    }
+
+    /// Regression: `pos.ceil() as usize` could land on `len` when the
+    /// `q/100·(len-1)` product rounds a hair high, indexing one past
+    /// the end. p100 and the tiny-sample shapes are the risk surface.
+    #[test]
+    fn percentile_edges_never_index_out_of_bounds() {
+        let mut one = Summary::new();
+        one.add(7.0);
+        for q in [0.0, 33.3, 50.0, 99.999, 100.0] {
+            assert_eq!(one.percentile(q), 7.0, "len=1 q={q}");
+        }
+        let mut two = Summary::new();
+        two.add(1.0);
+        two.add(3.0);
+        assert_eq!(two.percentile(100.0), 3.0);
+        assert_eq!(two.percentile(0.0), 1.0);
+        assert!((two.percentile(50.0) - 2.0).abs() < 1e-12);
+        // sweep q densely over an awkward length so any rounding that
+        // escapes [0, len-1] panics here rather than in a bench
+        let mut s = Summary::new();
+        for i in 0..7 {
+            s.add(i as f64);
+        }
+        let mut q = 0.0;
+        while q <= 100.0 {
+            let v = s.percentile(q);
+            assert!((0.0..=6.0).contains(&v), "q={q} -> {v}");
+            q += 0.1;
+        }
+        assert_eq!(s.percentile(100.0), 6.0);
     }
 }

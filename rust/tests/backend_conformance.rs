@@ -78,6 +78,7 @@ fn uniform_cfg(sparsity: f64, compensator: bool) -> SparsityConfig {
         source: ExpertSource::Trained,
         sparse_decode: false,
         attn_sparsity: None,
+        token_keep_ratio: None,
     }
 }
 
@@ -606,6 +607,200 @@ fn attn_sparse_step_batch_matches_sequential_bit_identically() {
         &dense,
         &want[0..1],
         "attn=0.0 batch member vs standalone dense",
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Speculative-prefill token-pruning axis
+// ---------------------------------------------------------------------------
+
+/// Dense config with speculative token pruning at `keep` — `1.0` must
+/// be *the* unpruned path (no scoring pass runs at all), and `< 1.0`
+/// prunes the prompt before the main prefill.
+fn keep_cfg(keep: f64) -> SparsityConfig {
+    let mut cfg = SparsityConfig::dense();
+    cfg.token_keep_ratio = Some(keep);
+    cfg
+}
+
+/// The tentpole gate: `token_keep_ratio = 1.0` is **bit-identical**
+/// (logits + KV) to leaving the knob unset — on the reference oracle
+/// and at threads ∈ {1, 4} — for dense and the paper's full method,
+/// across prompt lengths straddling the prefill-block boundary. The
+/// identity holds by construction (the resolver returns the unpruned
+/// path before any scoring code runs), and this test is what keeps it
+/// that way.
+#[test]
+fn token_keep_one_matches_unpruned_bit_identically() {
+    let reference = testing::cpu_engine_reference();
+    let fasts = [
+        ("threads=1", testing::cpu_engine_threads(1)),
+        ("threads=4", testing::cpu_engine_threads(4)),
+    ];
+    let block = reference.block();
+    for (name, base) in [
+        ("dense", SparsityConfig::dense()),
+        ("fastforward-50", SparsityConfig::fastforward(0.5)),
+    ] {
+        let mut keep1 = base.clone();
+        keep1.token_keep_ratio = Some(1.0);
+        assert_eq!(
+            base.prefill_fingerprint(),
+            keep1.prefill_fingerprint(),
+            "{name}: keep=1.0 must share the unpruned KV fingerprint"
+        );
+        for &len in &[40, block + 1, 2 * block + 44] {
+            let prompt = corpus_prompt(len);
+            let want = reference.prefill(&prompt, &base).unwrap();
+            let got = reference.prefill(&prompt, &keep1).unwrap();
+            assert_prefill_bit_identical(
+                &want,
+                &got,
+                &format!("{name} keep=1.0 reference len={len}"),
+            );
+            for (threads, fast) in &fasts {
+                let got = fast.prefill(&prompt, &keep1).unwrap();
+                assert_prefill_bit_identical(
+                    &want,
+                    &got,
+                    &format!("{name} keep=1.0 {threads} len={len}"),
+                );
+            }
+        }
+    }
+}
+
+/// keep = 1.0 inside mixed B ∈ {1, 3} prefill-chunk/decode batches:
+/// batched equals the unpruned sequential reference bit for bit at
+/// threads ∈ {1, 4} and both batch shapes.
+#[test]
+fn token_keep_one_step_batch_matches_sequential_bit_identically() {
+    let reference = testing::cpu_engine_reference();
+    let block = reference.block();
+    let fasts = [
+        ("threads=1", testing::cpu_engine_threads(1)),
+        ("threads=4", testing::cpu_engine_threads(4)),
+    ];
+    // the unpruned oracle...
+    let base = batch_seqs(block);
+    let want = run_sequential(&reference, &base, 3);
+    // ...against the same sequences with keep=1.0 set explicitly
+    let seqs: Vec<(Vec<i32>, SparsityConfig)> = base
+        .iter()
+        .map(|(p, c)| {
+            let mut c = c.clone();
+            c.token_keep_ratio = Some(1.0);
+            (p.clone(), c)
+        })
+        .collect();
+    for (name, fast) in &fasts {
+        let got = run_batched(fast, &seqs, 3, 4);
+        assert_traces_bit_identical(
+            &want,
+            &got,
+            &format!("keep=1.0 B=3 {name}"),
+        );
+    }
+    // B = 1
+    let solo_base =
+        vec![(corpus_prompt(block + 9), SparsityConfig::fastforward(0.5))];
+    let want = run_sequential(&reference, &solo_base, 3);
+    let mut solo = solo_base.clone();
+    solo[0].1.token_keep_ratio = Some(1.0);
+    for (name, fast) in &fasts {
+        let got = run_batched(fast, &solo, 3, 4);
+        assert_traces_bit_identical(
+            &want,
+            &got,
+            &format!("keep=1.0 B=1 {name}"),
+        );
+    }
+}
+
+/// Genuinely pruned prefill (keep ∈ {0.5, 0.25}) is deterministic
+/// across reruns and **thread-invariant bitwise**: scoring and
+/// selection run sequentially on the dispatching thread, so threads
+/// ∈ {1, 4} and the reference oracle agree on the keep-set, the
+/// compacted KV and the logits. The keep-map invariants (count,
+/// mandatory bands, ascending order) are checked on the engine's
+/// actual output, not just the pure selection function.
+#[test]
+fn pruned_prefill_is_deterministic_and_thread_invariant() {
+    use fastforward::sparsity::tokens::{LOCAL_TOKENS, SINK_TOKENS};
+    let reference = testing::cpu_engine_reference();
+    let fasts = [
+        ("threads=1", testing::cpu_engine_threads(1)),
+        ("threads=4", testing::cpu_engine_threads(4)),
+    ];
+    let block = reference.block();
+    for &keep in &[0.5, 0.25] {
+        for &len in &[block + 1, 2 * block + 44] {
+            let prompt = corpus_prompt(len);
+            let cfg = keep_cfg(keep);
+            let want = reference.prefill(&prompt, &cfg).unwrap();
+            let expect = ((keep * len as f64).ceil() as usize)
+                .clamp(SINK_TOKENS + LOCAL_TOKENS, len);
+            assert_eq!(
+                want.cache.len, expect,
+                "keep={keep} len={len}: pruned KV length"
+            );
+            let map = want
+                .keep_map
+                .as_ref()
+                .expect("pruned prefill must report its keep-map");
+            assert_eq!(map.len(), expect);
+            assert!(
+                map.windows(2).all(|w| w[0] < w[1]),
+                "keep-map not strictly ascending"
+            );
+            for i in 0..SINK_TOKENS {
+                assert!(map.contains(&(i as u32)), "sink {i} dropped");
+            }
+            for i in len - LOCAL_TOKENS..len {
+                assert!(map.contains(&(i as u32)), "local {i} dropped");
+            }
+            let again = reference.prefill(&prompt, &cfg).unwrap();
+            assert_eq!(want.keep_map, again.keep_map);
+            assert_prefill_bit_identical(
+                &want,
+                &again,
+                &format!("keep={keep} reference rerun len={len}"),
+            );
+            for (threads, fast) in &fasts {
+                let got = fast.prefill(&prompt, &cfg).unwrap();
+                assert_eq!(
+                    want.keep_map, got.keep_map,
+                    "keep={keep} {threads} len={len}: keep-set differs"
+                );
+                assert_prefill_bit_identical(
+                    &want,
+                    &got,
+                    &format!("keep={keep} {threads} len={len}"),
+                );
+            }
+        }
+    }
+}
+
+/// Prefix-cache isolation of the pruning axis: distinct keep ratios
+/// carry distinct KV fingerprints (pruned KV never crosses
+/// configurations), while `Some(1.0)` and `None` deliberately share
+/// one — their KV is bit-identical, so sharing is sound and keeps the
+/// cache warm across the flag's two unpruned spellings.
+#[test]
+fn token_keep_fingerprints_isolate_pruned_kv() {
+    let dense = SparsityConfig::dense();
+    assert_eq!(
+        dense.prefill_fingerprint(),
+        keep_cfg(1.0).prefill_fingerprint()
+    );
+    assert_ne!(
+        dense.prefill_fingerprint(),
+        keep_cfg(0.5).prefill_fingerprint()
+    );
+    assert_ne!(
+        keep_cfg(0.5).prefill_fingerprint(),
+        keep_cfg(0.25).prefill_fingerprint()
     );
 }
 

@@ -68,6 +68,7 @@ fn full_http_stack() {
         tokenizer: Tokenizer::new(384),
         default_sparsity: Some(0.5),
         default_attn_sparsity: None,
+        default_token_keep: None,
     });
     let addr2 = addr.clone();
     std::thread::spawn(move || {

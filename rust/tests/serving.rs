@@ -39,6 +39,31 @@ fn start_stack(max_active: usize) -> Option<(Arc<Router>, std::thread::JoinHandl
     Some((router, handle))
 }
 
+/// Same stack shape as [`start_stack`] but on a synthetic CPU engine,
+/// so lock-poisoning regressions are exercised even where no trained
+/// artifacts are installed.
+fn start_synthetic_stack(
+    max_active: usize,
+) -> (Arc<Router>, std::thread::JoinHandle<()>) {
+    let metrics = Arc::new(Metrics::new());
+    let router = Arc::new(Router::new(64, 2048, 512, 128, metrics));
+    let r2 = router.clone();
+    let handle = std::thread::spawn(move || {
+        Batcher::new(
+            fastforward::testing::cpu_engine(),
+            r2,
+            BatcherConfig {
+                max_active,
+                prefill_block_budget: 2,
+                ..Default::default()
+            },
+        )
+        .run()
+        .unwrap();
+    });
+    (router, handle)
+}
+
 fn prompt_text(n: usize) -> String {
     let mut rng = fastforward::util::rng::Rng::new(5);
     let bank = fastforward::trace::WordBank::new(&mut rng, 64);
@@ -86,6 +111,82 @@ fn serves_concurrent_requests_with_ttft() {
     router.close();
     handle.join().unwrap();
     assert_eq!(router.kv_pool.lock().unwrap().used_pages(), 0);
+}
+
+/// Regression: a panic while holding `kv_pool` / `prefix_cache` used
+/// to poison the mutexes and turn every subsequent admission into a
+/// `PoisonError` unwrap panic — one bad request killed the whole
+/// serving stack. The hot paths now recover the guard
+/// (`util::sync::lock_recover`), so requests submitted *after* the
+/// poisoning must still be admitted, complete cleanly, and leave the
+/// page accounting drained.
+#[test]
+fn poisoned_shared_locks_do_not_cascade_into_failures() {
+    let (router, handle) = start_synthetic_stack(2);
+    let tok = Tokenizer::new(384);
+
+    // healthy request before the injected fault
+    let (tx, rx) = channel::<TokenEvent>();
+    router
+        .submit(tok.encode(&prompt_text(160)), 4,
+                SparsityConfig::dense(), tx)
+        .unwrap();
+    let resp =
+        Response::collect_timeout(&rx, std::time::Duration::from_secs(120))
+            .expect("pre-fault response");
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+
+    // inject a panic while holding each shared lock
+    for poison in [true, false] {
+        let r = router.clone();
+        let t = std::thread::spawn(move || {
+            let _g = if poison {
+                Ok(r.kv_pool.lock().unwrap())
+            } else {
+                Err(r.prefix_cache.lock().unwrap())
+            };
+            panic!("injected panic while holding a shared router lock");
+        });
+        assert!(t.join().is_err(), "injector thread must panic");
+    }
+    assert!(router.kv_pool.lock().is_err(), "kv_pool not poisoned");
+    assert!(
+        router.prefix_cache.lock().is_err(),
+        "prefix_cache not poisoned"
+    );
+
+    // requests after the fault still run to completion
+    let mut rxs = Vec::new();
+    for i in 0..3 {
+        let (tx, rx) = channel::<TokenEvent>();
+        router
+            .submit(
+                tok.encode(&prompt_text(140 + i * 90)),
+                4,
+                if i % 2 == 0 {
+                    SparsityConfig::dense()
+                } else {
+                    SparsityConfig::fastforward(0.5)
+                },
+                tx,
+            )
+            .expect("admission must survive poisoned locks");
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        let resp = Response::collect_timeout(
+            &rx,
+            std::time::Duration::from_secs(120),
+        )
+        .expect("post-fault response");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(resp.tokens <= 4);
+    }
+
+    router.close();
+    handle.join().unwrap();
+    let pool = fastforward::util::sync::lock_recover(&router.kv_pool);
+    assert_eq!(pool.used_pages(), 0, "page accounting leaked");
 }
 
 #[test]

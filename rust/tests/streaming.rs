@@ -168,6 +168,7 @@ fn sse_event_ordering_and_framing() {
         tokenizer: Tokenizer::new(384),
         default_sparsity: None,
         default_attn_sparsity: None,
+        default_token_keep: None,
     });
     let addr = spawn_server(server);
 
@@ -317,6 +318,7 @@ fn disconnect_mid_stream_releases_kv_pages() {
         tokenizer: Tokenizer::new(384),
         default_sparsity: Some(0.5),
         default_attn_sparsity: None,
+        default_token_keep: None,
     });
     let addr = spawn_server(server);
 

@@ -67,6 +67,14 @@ echo "==> fig13 quantized-weight smoke (--smoke: f32/bf16/int8 at T=256)"
 cargo bench --bench fig13_quantized_weights "${extra[@]}" -- \
     --backend cpu --smoke
 
+echo "==> token-pruning perf smoke (keep=0.5 >= 1.2x dense-length)"
+cargo test -q --test perf_smoke \
+    token_pruned_prefill_beats_dense_length_at_t512 "${extra[@]}"
+
+echo "==> fig14 speculative-prefill smoke (--smoke: keep in {1.0,0.5})"
+cargo bench --bench fig14_speculative_prefill "${extra[@]}" -- \
+    --backend cpu --smoke
+
 echo "==> cargo test --doc"
 cargo test --doc -q "${extra[@]}"
 
