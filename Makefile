@@ -5,15 +5,16 @@
 #   make serve       run the server against the built artifacts
 #   make serve-cpu   run the server on the pure-Rust CPU backend
 #                    (no artifacts, no XLA bindings needed)
-#   make bench-cpu   fig6/fig7/fig10/fig11/fig12/fig13/fig14 wall-clock
-#                    benches on the CPU backend; writes
+#   make bench-cpu   fig6/fig7/fig10/fig11/fig12/fig13/fig14/fig15
+#                    wall-clock benches on the CPU backend; writes
 #                    rust/BENCH_fig6_cpu.json,
 #                    rust/BENCH_fig7_cpu.json,
 #                    rust/BENCH_fig10_cpu.json,
 #                    rust/BENCH_fig11_cpu.json,
 #                    rust/BENCH_fig12_cpu.json,
-#                    rust/BENCH_fig13_cpu.json and
-#                    rust/BENCH_fig14_cpu.json
+#                    rust/BENCH_fig13_cpu.json,
+#                    rust/BENCH_fig14_cpu.json and
+#                    rust/BENCH_fig15_cpu.json
 
 ARTIFACTS ?= rust/artifacts
 REPLICAS  ?= 1
@@ -42,6 +43,7 @@ bench-cpu:
 	cd rust && cargo bench --bench fig12_kernel_tiers -- --backend cpu
 	cd rust && cargo bench --bench fig13_quantized_weights -- --backend cpu
 	cd rust && cargo bench --bench fig14_speculative_prefill -- --backend cpu
+	cd rust && cargo bench --bench fig15_cluster_load -- --backend cpu
 
 clean:
 	cd rust && cargo clean

@@ -1,0 +1,76 @@
+//! Seeded arrival-trace + prompt-recipe generators shared by the
+//! load-driven benches (fig8 sharded throughput, fig9 SLO latency,
+//! fig15 cluster load). One definition, so every bench's "open-loop
+//! Poisson at rate λ with a heavy-tail mix and a mid-trace burst" means
+//! exactly the same thing.
+
+use fastforward::util::rng::Rng;
+
+/// A shared-document prompt: `doc` (possibly empty) followed by a
+/// seeded unique suffix of `suffix_tokens` tokens — the RAG-style
+/// recipe every multi-client bench uses. Callers derive `seed` from
+/// (client, request) so suffixes never collide across the fleet.
+pub fn client_prompt(doc: &[i32], suffix_tokens: usize, seed: u64)
+                     -> Vec<i32> {
+    let mut p = doc.to_vec();
+    p.extend(super::prompt_tokens(suffix_tokens, seed));
+    p
+}
+
+/// Seed formula for per-(client, request) prompt suffixes: distinct
+/// strides per client keep streams disjoint while staying reproducible
+/// run-to-run.
+pub fn client_seed(client: usize, req: usize) -> u64 {
+    1 + client as u64 * 7919 + req as u64
+}
+
+/// `n` cumulative Poisson arrival offsets (milliseconds from trace
+/// start) at `rate_per_s`: exponential inter-arrivals via inverse-CDF
+/// (`-ln(1-u)/λ`), seeded — the memoryless open-loop baseline.
+pub fn poisson_arrivals_ms(rng: &mut Rng, n: usize, rate_per_s: f64)
+                           -> Vec<f64> {
+    assert!(rate_per_s > 0.0, "arrival rate must be positive");
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            let u = rng.f64().min(1.0 - 1e-12);
+            t += -(1.0 - u).ln() / rate_per_s * 1e3;
+            t
+        })
+        .collect()
+}
+
+/// `n` cumulative arrival offsets (ms) with Pareto (heavy-tail)
+/// inter-arrivals at mean rate `rate_per_s`: most gaps are short, a few
+/// are very long — the bursty regime that stresses queues harder than
+/// Poisson at the same average rate. `alpha` > 1 controls tail weight
+/// (smaller = heavier; 1.5 is a reasonable default).
+pub fn heavy_tail_arrivals_ms(rng: &mut Rng, n: usize, rate_per_s: f64,
+                              alpha: f64) -> Vec<f64> {
+    assert!(rate_per_s > 0.0, "arrival rate must be positive");
+    assert!(alpha > 1.0, "Pareto needs alpha > 1 for a finite mean");
+    // Pareto(x_m, alpha) has mean x_m * alpha / (alpha - 1); pick x_m so
+    // the mean inter-arrival equals 1/rate.
+    let mean = 1.0 / rate_per_s;
+    let x_m = mean * (alpha - 1.0) / alpha;
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            let u = rng.f64().min(1.0 - 1e-12);
+            t += x_m / (1.0 - u).powf(1.0 / alpha) * 1e3;
+            t
+        })
+        .collect()
+}
+
+/// Inject a synchronized burst into a sorted arrival trace: `burst_n`
+/// extra arrivals all landing at `at_frac` of the trace's span
+/// (thundering-herd moment). Returns the combined sorted trace.
+pub fn with_burst(mut arrivals_ms: Vec<f64>, at_frac: f64,
+                  burst_n: usize) -> Vec<f64> {
+    let span = arrivals_ms.last().copied().unwrap_or(0.0);
+    let at = span * at_frac.clamp(0.0, 1.0);
+    arrivals_ms.extend(std::iter::repeat(at).take(burst_n));
+    arrivals_ms.sort_by(|a, b| a.total_cmp(b));
+    arrivals_ms
+}

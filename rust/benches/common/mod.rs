@@ -4,6 +4,8 @@
 //! crate set has no criterion; util::stats::bench provides warmup + reps
 //! with mean/σ/percentile reporting).
 
+pub mod arrivals;
+
 use std::sync::Arc;
 
 use fastforward::engine::Engine;

@@ -1,0 +1,355 @@
+//! Figure 15 (repo extension): prefix-affinity cluster dispatch vs
+//! random placement over real `serve` worker processes.
+//!
+//! The harness spawns two `fastforward serve --backend cpu` workers
+//! (each with a prefix cache deliberately sized to hold only its *own*
+//! affine share of the document set), fronts them with an in-process
+//! [`fastforward::cluster::ClusterFront`], and drives a trace-driven
+//! open-loop workload of shared-document (RAG-style) prompts:
+//!
+//! * **affinity vs random** — the same seeded Poisson arrival trace is
+//!   replayed against consistent-hash prefix-affinity dispatch and
+//!   against uniform-random placement (fresh workers each, so caches
+//!   start cold). Affinity keeps each document on one worker, so after
+//!   one cold prefill per document every request adopts cached KV;
+//!   random placement spreads every document across both workers, whose
+//!   caches cannot hold the full set — LRU thrash, repeated cold
+//!   prefills, inflated TTFT. Reported: TTFT p50/p99, shed counts, and
+//!   the cluster-wide prefix hit rate scraped from the workers' own
+//!   `/metrics`.
+//! * **chaos** — a heavy-tail (Pareto) arrival trace with a
+//!   thundering-herd burst, during which worker 0 is SIGKILLed
+//!   mid-trace. Acceptance: every request resolves (ok + shed + failed
+//!   == total, failures bounded by the in-flight cap, no hangs) while
+//!   the health checker + backplane retry re-route the dead worker's
+//!   arc to the survivor.
+//!
+//! The document set is pre-balanced: doc texts are chosen so the
+//! routing ring assigns exactly half to each worker, making the
+//! cache-sizing argument deterministic rather than dependent on a lucky
+//! ring split. Needs no artifacts; emits `BENCH_fig15_cpu.json`.
+//!
+//! Flags: `--backend cpu` (required), `--smoke` for the quick check.sh
+//! gate (shorter trace).
+
+mod common;
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use fastforward::cluster::{http_get, http_post, ClusterConfig,
+                           ClusterFront, DispatchMode};
+use fastforward::metrics::Metrics;
+use fastforward::testing::{ascii_doc_text, balanced_cluster_docs,
+                           WorkerProc};
+use fastforward::util::json::{self, Json};
+use fastforward::util::rng::Rng;
+use fastforward::util::stats::Summary;
+
+/// Prefill block size of the default synthetic model.
+const BLOCK: usize = 128;
+/// Full blocks per shared document (512 tokens).
+const DOC_BLOCKS: usize = 4;
+/// Shared documents (4 affine to each of the 2 workers).
+const DOCS: usize = 8;
+/// Unique suffix bytes (= tokens) per request.
+const SUFFIX_BYTES: usize = 32;
+const DECODE_TOKENS: usize = 4;
+const WORKERS: usize = 2;
+
+/// Worker flags: one replica, 2 CPU lanes, and a 3 MiB prefix cache =
+/// 24 cached blocks — its affine share (4 docs × 4 blocks = 16) plus
+/// slack, but well under the full set (8 docs × 4 = 32 blocks), so
+/// random placement thrashes while affinity stays warm.
+const WORKER_FLAGS: &[&str] = &[
+    "--replicas", "1", "--cpu-threads", "2", "--queue", "256",
+    "--prefix-cache-mb", "3",
+];
+
+fn cluster_cfg(dispatch: DispatchMode) -> ClusterConfig {
+    ClusterConfig {
+        dispatch,
+        block: BLOCK,
+        key_blocks: DOC_BLOCKS,
+        vocab: 384,
+        max_inflight: 8,
+        health_interval: Duration::from_millis(100),
+        fail_threshold: 2,
+        connect_timeout: Duration::from_millis(500),
+        proxy_read_timeout: Duration::from_secs(30),
+        ..ClusterConfig::default()
+    }
+}
+
+struct Outcome {
+    ok: usize,
+    shed: usize,
+    failed: usize,
+    ttft: Summary,
+    /// Cluster-wide prefix hit rate summed over live workers' /metrics.
+    hit_rate: f64,
+    /// Fraction of dispatches that landed on the affine worker.
+    affine_frac: f64,
+}
+
+/// First sample of a metric series in Prometheus text exposition.
+fn scrape_metric(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find(|l| {
+            l.strip_prefix(name)
+                .map(|rest| rest.starts_with(' '))
+                .unwrap_or(false)
+        })
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.0)
+}
+
+/// Replay `arrivals_ms` (one request per entry, doc `i % DOCS` + unique
+/// suffix) against a fresh 2-worker cluster under `dispatch`. With
+/// `chaos_at = Some(i)`, worker 0 is killed when request `i`'s arrival
+/// time passes.
+fn run_scenario(bin: &str, dispatch: DispatchMode, arrivals_ms: &[f64],
+                docs: &[String], chaos_at: Option<usize>) -> Outcome {
+    let w0 = WorkerProc::spawn(bin, WORKER_FLAGS);
+    let w1 = WorkerProc::spawn(bin, WORKER_FLAGS);
+    let worker_addrs = vec![w0.addr().to_string(), w1.addr().to_string()];
+
+    let metrics = Arc::new(Metrics::new());
+    let front = ClusterFront::new(worker_addrs.clone(),
+                                  cluster_cfg(dispatch), metrics);
+    let (front_addr, front_handle) =
+        front.clone().spawn("127.0.0.1:0").expect("front binds");
+    let front_addr = front_addr.to_string();
+
+    let t0 = Instant::now();
+    let w0 = Arc::new(Mutex::new(w0));
+    let killer = chaos_at.map(|i| {
+        let at = Duration::from_micros((arrivals_ms[i] * 1e3) as u64);
+        let w0 = w0.clone();
+        std::thread::spawn(move || {
+            let gone = t0.elapsed();
+            if at > gone {
+                std::thread::sleep(at - gone);
+            }
+            w0.lock().unwrap().kill();
+            eprintln!("[chaos] worker 0 killed at {:?}", t0.elapsed());
+        })
+    });
+
+    let clients: Vec<_> = arrivals_ms
+        .iter()
+        .enumerate()
+        .map(|(i, &at_ms)| {
+            let at = Duration::from_micros((at_ms * 1e3) as u64);
+            let addr = front_addr.clone();
+            let prompt = format!(
+                "{}{}",
+                docs[i % DOCS],
+                ascii_doc_text(500_000 + i as u64, SUFFIX_BYTES)
+            );
+            std::thread::spawn(move || {
+                let gone = t0.elapsed();
+                if at > gone {
+                    std::thread::sleep(at - gone);
+                }
+                let body = Json::obj(vec![
+                    ("prompt", Json::Str(prompt)),
+                    ("max_tokens", Json::Num(DECODE_TOKENS as f64)),
+                ])
+                .to_string();
+                match http_post(&addr, "/generate", &body,
+                                Duration::from_secs(60)) {
+                    Ok((200, b)) => {
+                        let ttft = json::parse(&b).ok().and_then(|j| {
+                            j.get("ttft_ms").and_then(|v| v.as_f64())
+                        });
+                        match ttft {
+                            Some(t) => (0u8, t),
+                            None => (2, 0.0),
+                        }
+                    }
+                    Ok((429, _)) | Ok((503, _)) => (1, 0.0),
+                    Ok(_) | Err(_) => (2, 0.0),
+                }
+            })
+        })
+        .collect();
+
+    let (mut ok, mut shed, mut failed) = (0usize, 0usize, 0usize);
+    let mut ttft = Summary::new();
+    for c in clients {
+        match c.join().expect("client thread") {
+            (0, t) => {
+                ok += 1;
+                ttft.add(t);
+            }
+            (1, _) => shed += 1,
+            _ => failed += 1,
+        }
+    }
+    if let Some(k) = killer {
+        let _ = k.join();
+    }
+
+    // cluster-wide prefix reuse, straight from the workers' own
+    // counters (dead workers are skipped — their hits already happened)
+    let (mut hits, mut misses) = (0.0f64, 0.0f64);
+    for addr in &worker_addrs {
+        if let Ok((200, text)) =
+            http_get(addr, "/metrics", Duration::from_secs(2))
+        {
+            hits += scrape_metric(&text, "ff_prefix_hits_total");
+            misses += scrape_metric(&text, "ff_prefix_misses_total");
+        }
+    }
+    let hit_rate = if hits + misses > 0.0 {
+        hits / (hits + misses)
+    } else {
+        0.0
+    };
+    let (affine, fallback, random) = front.metrics.cluster_dispatches();
+    let total_disp = (affine + fallback + random).max(1);
+    let affine_frac = affine as f64 / total_disp as f64;
+
+    front.stop();
+    let _ = front_handle.join();
+    w0.lock().unwrap().kill();
+    Outcome { ok, shed, failed, ttft, hit_rate, affine_frac }
+}
+
+fn main() {
+    common::header(
+        "Figure 15",
+        "prefix-affinity cluster dispatch vs random, 2 worker processes",
+    );
+    if !common::cpu_mode() {
+        println!("fig15 drives real `serve --backend cpu` worker \
+                  processes; rerun with --backend cpu");
+        return;
+    }
+    let args = fastforward::util::cli::Args::parse_env();
+    let smoke = args.has("smoke");
+    let n_requests = if smoke { 36 } else { 120 };
+    let bin = env!("CARGO_BIN_EXE_fastforward");
+    let cfg = cluster_cfg(DispatchMode::Affinity);
+    let docs =
+        balanced_cluster_docs(&cfg, WORKERS, DOCS, DOC_BLOCKS * BLOCK);
+
+    // Calibrate the offered rate off one cold end-to-end request, so
+    // the trace sits between the warm (affinity) and cold (random)
+    // service capacities on any machine.
+    let calib = WorkerProc::spawn(bin, WORKER_FLAGS);
+    let body = Json::obj(vec![
+        ("prompt", Json::Str(format!("{}{}", docs[0],
+                                     ascii_doc_text(999, SUFFIX_BYTES)))),
+        ("max_tokens", Json::Num(DECODE_TOKENS as f64)),
+    ])
+    .to_string();
+    let t = Instant::now();
+    let (status, _) = http_post(calib.addr(), "/generate", &body,
+                                Duration::from_secs(60))
+        .expect("calibration request");
+    assert_eq!(status, 200, "calibration request must succeed");
+    let t_cold = t.elapsed().as_secs_f64().max(1e-3);
+    drop(calib);
+    let rate_per_s =
+        (0.7 * WORKERS as f64 / t_cold).clamp(0.5, 500.0);
+    println!(
+        "cold request {:.1} ms → offered rate {:.1} req/s \
+         ({n_requests} requests{})",
+        t_cold * 1e3,
+        rate_per_s,
+        if smoke { ", smoke" } else { "" }
+    );
+
+    let poisson = common::arrivals::poisson_arrivals_ms(
+        &mut Rng::new(7), n_requests, rate_per_s);
+    let bursty = common::arrivals::with_burst(
+        common::arrivals::heavy_tail_arrivals_ms(
+            &mut Rng::new(9), n_requests, rate_per_s, 1.5),
+        0.6,
+        8,
+    );
+
+    println!(
+        "\n{:>16} {:>5} {:>5} {:>7} {:>11} {:>11} {:>9} {:>8}",
+        "scenario", "ok", "shed", "failed", "ttft p50", "ttft p99",
+        "hit rate", "affine"
+    );
+    let mut rows: Vec<String> = Vec::new();
+    let mut report = |label: &str, o: &Outcome| {
+        println!(
+            "{label:>16} {:>5} {:>5} {:>7} {:>9.1}ms {:>9.1}ms \
+             {:>8.1}% {:>7.1}%",
+            o.ok, o.shed, o.failed,
+            o.ttft.percentile(50.0), o.ttft.percentile(99.0),
+            o.hit_rate * 100.0, o.affine_frac * 100.0
+        );
+        rows.push(format!(
+            "{{\"scenario\":\"{label}\",\"ok\":{},\"shed\":{},\
+             \"failed\":{},\"ttft_p50_ms\":{:.3},\"ttft_p99_ms\":{:.3},\
+             \"prefix_hit_rate\":{:.4},\"affine_frac\":{:.4}}}",
+            o.ok, o.shed, o.failed,
+            o.ttft.percentile(50.0), o.ttft.percentile(99.0),
+            o.hit_rate, o.affine_frac
+        ));
+    };
+
+    let aff = run_scenario(bin, DispatchMode::Affinity, &poisson,
+                           &docs, None);
+    report("affinity", &aff);
+    let rnd = run_scenario(bin, DispatchMode::Random, &poisson,
+                           &docs, None);
+    report("random", &rnd);
+    let chaos = run_scenario(bin, DispatchMode::Affinity, &bursty,
+                             &docs, Some(bursty.len() * 2 / 5));
+    report("affinity+chaos", &chaos);
+
+    let speedup = if aff.ttft.percentile(50.0) > 0.0 {
+        rnd.ttft.percentile(50.0) / aff.ttft.percentile(50.0)
+    } else {
+        0.0
+    };
+    common::write_bench_json(
+        "BENCH_fig15_cpu.json",
+        &format!(
+            "{{\"figure\":\"fig15_cluster_load\",\"backend\":\"cpu\",\
+             \"smoke\":{smoke},\"workers\":{WORKERS},\
+             \"offered_rate_per_s\":{rate_per_s:.2},\
+             \"affinity_ttft_p50_speedup\":{speedup:.3},\
+             \"scenarios\":[{}]}}\n",
+            rows.join(",")
+        ),
+    );
+
+    // ---- acceptance -----------------------------------------------------
+    let total = bursty.len();
+    assert_eq!(
+        chaos.ok + chaos.shed + chaos.failed, total,
+        "chaos trace lost requests"
+    );
+    assert!(
+        chaos.failed <= 2 * 8,
+        "chaos failures ({}) exceed the in-flight bound",
+        chaos.failed
+    );
+    assert!(
+        chaos.ok >= total / 2,
+        "chaos trace completed only {}/{total} requests",
+        chaos.ok
+    );
+    assert!(
+        aff.hit_rate > rnd.hit_rate,
+        "affinity cluster-wide prefix hit rate ({:.1}%) must beat \
+         random ({:.1}%)",
+        aff.hit_rate * 100.0,
+        rnd.hit_rate * 100.0
+    );
+    println!(
+        "\nacceptance: affinity TTFT p50 speedup vs random {speedup:.2}x \
+         {}; chaos {}/{total} ok, {} shed, {} failed, none lost",
+        if speedup >= 1.3 { "PASS (>= 1.3x)" } else { "MISS (< 1.3x)" },
+        chaos.ok, chaos.shed, chaos.failed
+    );
+}

@@ -81,15 +81,13 @@ fn run(dir: &PathBuf, block: usize, sc: &Scenario) -> Outcome {
             std::thread::spawn(move || {
                 let mut ttfts = Vec::with_capacity(sc_reqs);
                 for i in 0..sc_reqs {
-                    let mut prompt = if shared > 0 {
-                        doc.clone()
-                    } else {
-                        Vec::new()
-                    };
-                    prompt.extend(common::prompt_tokens(
+                    let shared_doc: &[i32] =
+                        if shared > 0 { &doc } else { &[] };
+                    let prompt = common::arrivals::client_prompt(
+                        shared_doc,
                         suffix,
-                        1 + (c * 1000 + i) as u64,
-                    ));
+                        common::arrivals::client_seed(c, i),
+                    );
                     let (tx, rx) = channel();
                     router
                         .submit(

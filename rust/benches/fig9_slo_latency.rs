@@ -76,11 +76,12 @@ fn run(dir: &std::path::PathBuf, block: usize, slo: bool,
             let stop = stop.clone();
             std::thread::spawn(move || {
                 let mut done = 0usize;
-                let mut i = 0u64;
+                let mut i = 0usize;
                 while !stop.load(Ordering::Relaxed) {
-                    let prompt = common::prompt_tokens(
+                    let prompt = common::arrivals::client_prompt(
+                        &[],
                         BATCH_PREFILL_BLOCKS * block,
-                        1 + c as u64 * 7919 + i,
+                        common::arrivals::client_seed(c, i),
                     );
                     let (tx, rx) = channel();
                     if router

@@ -1,0 +1,822 @@
+//! Multi-process serving tier: a standalone front that dispatches over
+//! N `serve` worker processes through a loopback-HTTP backplane,
+//! turning per-worker prefix caches into one cluster-wide cache.
+//!
+//! Routing *is* the cache policy: a repeated long prompt only skips
+//! prefill if it lands on the worker already holding its KV blocks, so
+//! the front keys every request on the prompt's leading block-chain
+//! hash ([`crate::kvcache::routing_key`] — the same walk the workers'
+//! [`crate::kvcache::PrefixCache`] performs) and places it on a
+//! consistent-hash ring ([`policy::HashRing`]). Same leading blocks →
+//! same worker → warm cache; a worker death re-homes only its own arcs.
+//!
+//! The backplane is plain HTTP/1.1 over loopback: the front re-issues
+//! the client's `POST /generate` body to the chosen worker and pipes
+//! the response bytes back verbatim — one-shot JSON and SSE streams
+//! proxy identically (`Connection: close` framing end-to-end, no
+//! transfer-encoding to re-chunk).
+//!
+//! Admission control ("millions of users" hygiene):
+//! * per-tenant token-bucket quotas ([`policy::TenantQuotas`], keyed on
+//!   the request's `"tenant"` field) shed hot tenants with 429;
+//! * per-worker in-flight caps bound the backplane — an affine worker
+//!   at its cap falls back to the least-loaded routable worker
+//!   ([`policy::least_loaded`], the identical rule the in-process
+//!   router applies), and when every worker is at its cap the front
+//!   sheds with 429 instead of queueing unboundedly;
+//! * no routable worker at all → 503.
+//!
+//! Worker lifecycle: a health-checker thread probes each worker's
+//! `/readyz` every [`ClusterConfig::health_interval`]; after
+//! [`ClusterConfig::fail_threshold`] consecutive failures the worker is
+//! marked dead and the ring routes around it (mark-dead + re-hash); a
+//! later successful probe revives it. Draining a worker (`POST
+//! /admin/drain`) flips its `/healthz`+`/readyz` to 503, so the checker
+//! stops routing new work to it while its in-flight streams finish.
+
+pub mod policy;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::kvcache::routing_key;
+use crate::metrics::{ClusterRoute, Metrics};
+use crate::server::{error_json, read_request, respond};
+use crate::tokenizer::Tokenizer;
+use crate::util::json;
+
+use policy::{Candidate, HashRing, PickError, TenantQuotas};
+
+// ---------------------------------------------------------------------------
+// Minimal loopback-HTTP client (health checks, tests, benches)
+// ---------------------------------------------------------------------------
+
+/// One blocking HTTP/1.1 request against a numeric `host:port` address
+/// with connect/read/write deadlines. Returns `(status, body)`; the
+/// response must be `Connection: close`-framed (which every server in
+/// this crate is).
+pub fn http_request(addr: &str, method: &str, path: &str, body: &str,
+                    timeout: Duration) -> Result<(u16, String)> {
+    let sock: SocketAddr = addr
+        .parse()
+        .with_context(|| format!("bad worker address {addr:?}"))?;
+    let mut s = TcpStream::connect_timeout(&sock, timeout)?;
+    s.set_read_timeout(Some(timeout))?;
+    s.set_write_timeout(Some(timeout))?;
+    let _ = s.set_nodelay(true);
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut out = String::new();
+    s.read_to_string(&mut out)?;
+    parse_response(&out)
+}
+
+/// `GET path` against a worker ([`http_request`] without a body).
+pub fn http_get(addr: &str, path: &str, timeout: Duration)
+                -> Result<(u16, String)> {
+    http_request(addr, "GET", path, "", timeout)
+}
+
+/// `POST path` with a JSON body ([`http_request`]).
+pub fn http_post(addr: &str, path: &str, body: &str, timeout: Duration)
+                 -> Result<(u16, String)> {
+    http_request(addr, "POST", path, body, timeout)
+}
+
+/// Split a raw `Connection: close` HTTP response into (status, body).
+fn parse_response(raw: &str) -> Result<(u16, String)> {
+    let status = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| anyhow!("malformed response: {raw:?}"))?;
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((status, body))
+}
+
+// ---------------------------------------------------------------------------
+// Config + worker state
+// ---------------------------------------------------------------------------
+
+/// How the front places requests on workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Consistent-hash prefix affinity with least-loaded fallback — the
+    /// production policy.
+    Affinity,
+    /// Uniform-random placement over routable workers — the baseline
+    /// the fig15 harness compares against.
+    Random,
+}
+
+impl DispatchMode {
+    /// Parse a `--dispatch` flag value.
+    pub fn parse(s: &str) -> Option<DispatchMode> {
+        match s {
+            "affinity" => Some(DispatchMode::Affinity),
+            "random" => Some(DispatchMode::Random),
+            _ => None,
+        }
+    }
+}
+
+/// Front-tier tuning knobs (`ff cluster` flags; see
+/// docs/OPERATIONS.md §6).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Placement policy.
+    pub dispatch: DispatchMode,
+    /// Prefill block size of the model the workers serve — routing keys
+    /// must walk the same block granularity the worker prefix caches
+    /// use, or affinity degenerates to random.
+    pub block: usize,
+    /// Leading full blocks folded into the routing key. More blocks
+    /// discriminate longer shared prefixes; fewer spread a workload
+    /// whose prompts all share one template. 4 is a good default.
+    pub key_blocks: usize,
+    /// Seed of the routing-key chain. Any constant works (it need not
+    /// match the workers' internal sparsity fingerprints — placement
+    /// only needs *consistency*); all front replicas must agree.
+    pub routing_seed: u64,
+    /// Virtual nodes per worker on the hash ring.
+    pub vnodes: usize,
+    /// Per-worker in-flight cap — the bounded backplane queue. At the
+    /// cap the affine worker falls back; all workers at cap sheds 429.
+    pub max_inflight: usize,
+    /// Per-tenant sustained requests/second (`<= 0` disables quotas).
+    pub quota_rps: f64,
+    /// Per-tenant burst headroom in requests.
+    pub quota_burst: f64,
+    /// Vocabulary of the byte tokenizer used to key prompts (must match
+    /// the workers' model).
+    pub vocab: usize,
+    /// Health-check period.
+    pub health_interval: Duration,
+    /// Consecutive failed probes before a worker is marked dead.
+    pub fail_threshold: u32,
+    /// Connect/probe deadline for backplane requests.
+    pub connect_timeout: Duration,
+    /// Per-read deadline while proxying a response (bounds a hung
+    /// worker; each SSE token write resets it).
+    pub proxy_read_timeout: Duration,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            dispatch: DispatchMode::Affinity,
+            block: 128,
+            key_blocks: 4,
+            routing_seed: 0xFF_C1_05_7E,
+            vnodes: 64,
+            max_inflight: 32,
+            quota_rps: 0.0,
+            quota_burst: 8.0,
+            vocab: 384,
+            health_interval: Duration::from_millis(500),
+            fail_threshold: 3,
+            connect_timeout: Duration::from_millis(1000),
+            proxy_read_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// One backplane worker as the front sees it.
+#[derive(Debug)]
+pub struct Worker {
+    addr: String,
+    /// Requests currently proxied to this worker.
+    inflight: AtomicUsize,
+    /// Passed its last health probe (starts `true`: workers are waited
+    /// on at startup, and an optimistic start never *adds* traffic to a
+    /// dead worker for long — the first probe corrects it).
+    healthy: AtomicBool,
+    /// Consecutive failed probes.
+    fails: AtomicUsize,
+}
+
+impl Worker {
+    fn new(addr: String) -> Self {
+        Worker {
+            addr,
+            inflight: AtomicUsize::new(0),
+            healthy: AtomicBool::new(true),
+            fails: AtomicUsize::new(0),
+        }
+    }
+
+    /// The worker's `host:port`.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Currently proxied requests.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Passed its last health probe.
+    pub fn healthy(&self) -> bool {
+        self.healthy.load(Ordering::Acquire)
+    }
+}
+
+/// Decrements a worker's in-flight gauge on scope exit (success, error
+/// or panic alike), so a failed proxy can never leak capacity.
+struct InflightGuard<'a> {
+    worker: &'a Worker,
+}
+
+impl<'a> InflightGuard<'a> {
+    fn enter(worker: &'a Worker) -> Self {
+        worker.inflight.fetch_add(1, Ordering::AcqRel);
+        InflightGuard { worker }
+    }
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.worker.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The front tier
+// ---------------------------------------------------------------------------
+
+/// The standalone front: consistent-hash prefix-affinity dispatch over
+/// worker processes, quota/shed admission, health-checked lifecycle.
+///
+/// Endpoints: `POST /generate` (routed + proxied), `GET /healthz`
+/// (front liveness), `GET /readyz` (≥ 1 routable worker), `GET
+/// /metrics` (`ff_cluster_*` series).
+pub struct ClusterFront {
+    workers: Vec<Arc<Worker>>,
+    ring: HashRing,
+    cfg: ClusterConfig,
+    quotas: Mutex<TenantQuotas>,
+    tokenizer: Tokenizer,
+    /// Shared metrics registry (exported on the front's `/metrics`).
+    pub metrics: Arc<Metrics>,
+    shutdown: AtomicBool,
+    /// Resolved listen address once `serve`/`spawn` has bound.
+    bound: Mutex<Option<SocketAddr>>,
+    /// Counter feeding the random-dispatch baseline.
+    rr: AtomicU64,
+}
+
+impl ClusterFront {
+    /// A front over `worker_addrs` (each a `host:port` of a running
+    /// `serve` process).
+    pub fn new(worker_addrs: Vec<String>, cfg: ClusterConfig,
+               metrics: Arc<Metrics>) -> Arc<ClusterFront> {
+        assert!(!worker_addrs.is_empty(), "cluster needs ≥1 worker");
+        metrics.ensure_cluster_workers(worker_addrs.len());
+        let ring = HashRing::new(worker_addrs.len(), cfg.vnodes);
+        let quotas = TenantQuotas::new(cfg.quota_rps, cfg.quota_burst);
+        let tokenizer = Tokenizer::new(cfg.vocab);
+        Arc::new(ClusterFront {
+            workers: worker_addrs
+                .into_iter()
+                .map(|a| Arc::new(Worker::new(a)))
+                .collect(),
+            ring,
+            cfg,
+            quotas: Mutex::new(quotas),
+            tokenizer,
+            metrics,
+            shutdown: AtomicBool::new(false),
+            bound: Mutex::new(None),
+            rr: AtomicU64::new(0),
+        })
+    }
+
+    /// The worker table (health/inflight snapshots for tests + benches).
+    pub fn workers(&self) -> &[Arc<Worker>] {
+        &self.workers
+    }
+
+    fn routable(&self, w: usize) -> bool {
+        self.workers[w].healthy()
+    }
+
+    /// Routing key for a prompt's token ids — exposed so benches can
+    /// pre-compute placements.
+    pub fn key_for(&self, tokens: &[i32]) -> u64 {
+        routing_key(self.cfg.routing_seed, tokens, self.cfg.block,
+                    self.cfg.key_blocks)
+    }
+
+    /// Place one request: `Ok((worker, route))` or `Err(status)` to
+    /// shed (429 = all routable workers at their in-flight cap, 503 =
+    /// none routable).
+    fn place(&self, key: u64) -> std::result::Result<(usize, ClusterRoute),
+                                                     u16> {
+        let room = |w: usize| {
+            self.workers[w].inflight() < self.cfg.max_inflight
+        };
+        if self.cfg.dispatch == DispatchMode::Random {
+            // uniform over routable workers with room: the baseline
+            // still sheds like affinity does, it just ignores the key
+            let n = self.workers.len();
+            let tick = self.rr.fetch_add(1, Ordering::Relaxed);
+            let start = (mix_tick(tick) % n as u64) as usize;
+            let mut any_routable = false;
+            for i in 0..n {
+                let w = (start + i) % n;
+                if !self.routable(w) {
+                    continue;
+                }
+                any_routable = true;
+                if room(w) {
+                    return Ok((w, ClusterRoute::Random));
+                }
+            }
+            return Err(if any_routable { 429 } else { 503 });
+        }
+        if let Some(w) = self.ring.assign(key, |w| self.routable(w)) {
+            if room(w) {
+                return Ok((w, ClusterRoute::Affine));
+            }
+            // affine worker saturated: least-loaded fallback, same rule
+            // as the in-process router
+            let picked =
+                policy::least_loaded(self.workers.iter().enumerate().map(
+                    |(i, wk)| Candidate {
+                        idx: i,
+                        alive: wk.healthy(),
+                        has_room: room(i),
+                        load: wk.inflight() as f64,
+                    },
+                ));
+            return match picked {
+                Ok(i) => Ok((i, ClusterRoute::Fallback)),
+                Err(PickError::Saturated) => Err(429),
+                Err(PickError::NoneAlive) => Err(503),
+            };
+        }
+        Err(503)
+    }
+
+    /// Serve forever on `addr` (port 0 binds ephemeral; see
+    /// [`ClusterFront::spawn`] for the handle-returning variant).
+    /// Starts the health-checker thread, then accepts connections until
+    /// [`ClusterFront::stop`].
+    pub fn serve(self: Arc<Self>, addr: &str) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        self.serve_on(listener)
+    }
+
+    /// [`ClusterFront::serve`] over an already-bound listener.
+    pub fn serve_on(self: Arc<Self>, listener: TcpListener) -> Result<()> {
+        let local = listener.local_addr()?;
+        *self.bound.lock().unwrap() = Some(local);
+        eprintln!(
+            "[cluster] front on {local}: {} workers, {:?} dispatch",
+            self.workers.len(),
+            self.cfg.dispatch
+        );
+        let checker = {
+            let this = self.clone();
+            std::thread::spawn(move || this.health_loop())
+        };
+        for stream in listener.incoming() {
+            if self.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let this = self.clone();
+            std::thread::spawn(move || {
+                let mut stream = stream;
+                if let Err(e) = this.handle(&mut stream) {
+                    let _ = respond(
+                        &mut stream,
+                        500,
+                        "application/json",
+                        &error_json(&e.to_string()),
+                    );
+                }
+            });
+        }
+        let _ = checker.join();
+        Ok(())
+    }
+
+    /// Bind `addr`, then serve on a background thread. Returns the
+    /// resolved address (so `addr` may use port 0) and the serving
+    /// thread's handle.
+    pub fn spawn(self: Arc<Self>, addr: &str)
+                 -> Result<(SocketAddr, std::thread::JoinHandle<()>)> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let this = self;
+        let handle = std::thread::spawn(move || {
+            let _ = this.serve_on(listener);
+        });
+        Ok((local, handle))
+    }
+
+    /// Stop accepting connections and end the health-checker. In-flight
+    /// proxies finish on their own threads.
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        // poke the accept loop so it observes the flag
+        if let Some(addr) = *self.bound.lock().unwrap() {
+            let _ = TcpStream::connect_timeout(
+                &addr,
+                Duration::from_millis(200),
+            );
+        }
+    }
+
+    /// One pass of health probes (also called periodically by the
+    /// checker thread). Public so tests drive it deterministically.
+    pub fn probe_workers(&self) {
+        for (i, w) in self.workers.iter().enumerate() {
+            let ok = matches!(
+                http_get(&w.addr, "/readyz", self.cfg.connect_timeout),
+                Ok((200, _))
+            );
+            if ok {
+                w.fails.store(0, Ordering::Release);
+                w.healthy.store(true, Ordering::Release);
+            } else {
+                let f = w.fails.fetch_add(1, Ordering::AcqRel) + 1;
+                if f as u32 >= self.cfg.fail_threshold {
+                    w.healthy.store(false, Ordering::Release);
+                }
+            }
+            self.metrics.set_cluster_worker(i, w.healthy(), w.inflight());
+        }
+    }
+
+    fn health_loop(&self) {
+        while !self.shutdown.load(Ordering::Acquire) {
+            self.probe_workers();
+            std::thread::sleep(self.cfg.health_interval);
+        }
+    }
+
+    fn handle(&self, stream: &mut TcpStream) -> Result<()> {
+        // same slow-loris discipline as the worker server
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+        let req = read_request(stream);
+        let _ = stream.set_read_timeout(None);
+        let req = match req {
+            Ok(Ok(req)) => req,
+            Ok(Err(e)) => {
+                return respond(stream, e.status, "application/json",
+                               &error_json(e.message))
+            }
+            Err(_) => return Ok(()), // dead connection, nothing to send
+        };
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => {
+                respond(stream, 200, "text/plain", "ok")
+            }
+            ("GET", "/readyz") => {
+                if self.workers.iter().any(|w| w.healthy()) {
+                    respond(stream, 200, "text/plain", "ready")
+                } else {
+                    respond(stream, 503, "text/plain",
+                            "no routable workers")
+                }
+            }
+            ("GET", "/metrics") => {
+                respond(stream, 200, "text/plain", &self.metrics.export())
+            }
+            ("POST", "/generate") => self.generate(stream, &req.body),
+            _ => respond(stream, 404, "text/plain", "not found"),
+        }
+    }
+
+    fn generate(&self, stream: &mut TcpStream, body: &str) -> Result<()> {
+        let j = match json::parse(body) {
+            Ok(j) => j,
+            Err(e) => {
+                return respond(stream, 400, "application/json",
+                               &error_json(&format!("bad json: {e}")))
+            }
+        };
+        let Some(prompt) = j.get("prompt").and_then(|p| p.as_str()) else {
+            return respond(stream, 400, "application/json",
+                           &error_json("missing prompt"));
+        };
+        // per-tenant admission first: over-quota traffic never consumes
+        // backplane capacity
+        let tenant = j
+            .get("tenant")
+            .and_then(|t| t.as_str())
+            .unwrap_or("default");
+        let admitted = crate::util::sync::lock_recover(&self.quotas)
+            .admit(tenant, Instant::now());
+        if !admitted {
+            self.metrics.record_cluster_quota_reject();
+            self.metrics.record_cluster_shed(429);
+            return respond(stream, 429, "application/json",
+                           &error_json("tenant over quota"));
+        }
+        let key = self.key_for(&self.tokenizer.encode(prompt));
+        // one retry on a *different* worker after a backplane failure
+        // that forwarded nothing — safe (the worker saw at most a
+        // partial request) and it absorbs the kill-restart window
+        let mut excluded: Option<usize> = None;
+        for attempt in 0..2 {
+            // on retry the failed worker was marked unhealthy below, so
+            // place() already routes around it; the guard arm covers
+            // the window where another thread revived it
+            let placed = self.place(key);
+            let (w, route) = match placed {
+                Ok(p) if Some(p.0) == excluded => {
+                    // ring still points at the worker that just failed
+                    // (health checker hasn't caught up): force fallback
+                    match policy::least_loaded(
+                        self.workers.iter().enumerate().map(|(i, wk)| {
+                            Candidate {
+                                idx: i,
+                                alive: wk.healthy()
+                                    && Some(i) != excluded,
+                                has_room: wk.inflight()
+                                    < self.cfg.max_inflight,
+                                load: wk.inflight() as f64,
+                            }
+                        }),
+                    ) {
+                        Ok(i) => (i, ClusterRoute::Fallback),
+                        Err(PickError::Saturated) => {
+                            self.metrics.record_cluster_shed(429);
+                            return respond(
+                                stream, 429, "application/json",
+                                &error_json("all workers saturated"),
+                            );
+                        }
+                        Err(PickError::NoneAlive) => {
+                            self.metrics.record_cluster_shed(503);
+                            return respond(
+                                stream, 503, "application/json",
+                                &error_json("no workers available"),
+                            );
+                        }
+                    }
+                }
+                Ok(p) => p,
+                Err(status) => {
+                    self.metrics.record_cluster_shed(status);
+                    let msg = if status == 429 {
+                        "all workers saturated"
+                    } else {
+                        "no workers available"
+                    };
+                    return respond(stream, status, "application/json",
+                                   &error_json(msg));
+                }
+            };
+            match self.proxy(w, stream, body) {
+                ProxyOutcome::Done => {
+                    self.metrics.record_cluster_dispatch(route);
+                    return Ok(());
+                }
+                ProxyOutcome::Retriable => {
+                    self.metrics.record_cluster_backplane_error();
+                    // a connect/write failure is a strong death signal;
+                    // don't wait fail_threshold probes to route around
+                    self.workers[w]
+                        .healthy
+                        .store(false, Ordering::Release);
+                    self.metrics.set_cluster_worker(
+                        w,
+                        false,
+                        self.workers[w].inflight(),
+                    );
+                    excluded = Some(w);
+                    if attempt == 0 {
+                        self.metrics.record_cluster_retry();
+                        continue;
+                    }
+                }
+            }
+        }
+        respond(stream, 502, "application/json",
+                &error_json("backplane failure"))
+    }
+
+    /// Forward `body` to worker `w` and pipe the response back. Never
+    /// blocks forever: connects under `connect_timeout`, reads under
+    /// `proxy_read_timeout` per chunk.
+    fn proxy(&self, w: usize, client: &mut TcpStream, body: &str)
+             -> ProxyOutcome {
+        let worker = &self.workers[w];
+        let _guard = InflightGuard::enter(worker);
+        let Ok(sock) = worker.addr.parse::<SocketAddr>() else {
+            return ProxyOutcome::Retriable;
+        };
+        let Ok(mut up) =
+            TcpStream::connect_timeout(&sock, self.cfg.connect_timeout)
+        else {
+            return ProxyOutcome::Retriable;
+        };
+        let _ = up.set_nodelay(true);
+        let _ = up.set_read_timeout(Some(self.cfg.proxy_read_timeout));
+        let _ = up.set_write_timeout(Some(self.cfg.connect_timeout));
+        if write!(
+            up,
+            "POST /generate HTTP/1.1\r\nHost: {}\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
+            worker.addr,
+            body.len()
+        )
+        .is_err()
+        {
+            return ProxyOutcome::Retriable;
+        }
+        let _ = client.set_nodelay(true);
+        let mut piped = false;
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            match up.read(&mut buf) {
+                Ok(0) => {
+                    // EOF before any response byte = the worker died
+                    // after accepting: retriable (it processed nothing
+                    // it could have answered)
+                    return if piped {
+                        ProxyOutcome::Done
+                    } else {
+                        ProxyOutcome::Retriable
+                    };
+                }
+                Ok(n) => {
+                    if client.write_all(&buf[..n]).is_err() {
+                        // client went away; drop both sides (the worker
+                        // notices its own peer_gone probe)
+                        return ProxyOutcome::Done;
+                    }
+                    piped = true;
+                }
+                Err(_) => {
+                    return if piped {
+                        // mid-response failure: the client got a
+                        // truncated reply; closing tells it so
+                        ProxyOutcome::Done
+                    } else {
+                        ProxyOutcome::Retriable
+                    };
+                }
+            }
+        }
+    }
+}
+
+/// How a proxied request ended.
+enum ProxyOutcome {
+    /// Response bytes were delivered (fully, or until the client left).
+    Done,
+    /// Nothing was forwarded to the client — safe to retry elsewhere.
+    Retriable,
+}
+
+/// Mix a counter into a placement tick (SplitMix64 finalizer) — the
+/// random-dispatch baseline's "coin".
+fn mix_tick(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Poll `addr`'s `/readyz` until it answers 200 or `deadline` passes.
+pub fn wait_ready(addr: &str, deadline: Duration) -> Result<()> {
+    let t0 = Instant::now();
+    loop {
+        if let Ok((200, _)) =
+            http_get(addr, "/readyz", Duration::from_millis(250))
+        {
+            return Ok(());
+        }
+        if t0.elapsed() > deadline {
+            return Err(anyhow!(
+                "worker {addr} not ready after {deadline:?}"
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_mode_parses() {
+        assert_eq!(DispatchMode::parse("affinity"),
+                   Some(DispatchMode::Affinity));
+        assert_eq!(DispatchMode::parse("random"),
+                   Some(DispatchMode::Random));
+        assert_eq!(DispatchMode::parse("nope"), None);
+    }
+
+    #[test]
+    fn parse_response_splits_status_and_body() {
+        let (status, body) = parse_response(
+            "HTTP/1.1 429 Too Many Requests\r\nContent-Length: 2\r\n\r\nhi",
+        )
+        .unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(body, "hi");
+        assert!(parse_response("garbage").is_err());
+    }
+
+    #[test]
+    fn placement_is_affine_until_saturated() {
+        let metrics = Arc::new(Metrics::new());
+        let front = ClusterFront::new(
+            vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()],
+            ClusterConfig { max_inflight: 1, ..Default::default() },
+            metrics,
+        );
+        let key = 0x1234_5678_9abc_def0;
+        let (w, route) = front.place(key).unwrap();
+        assert_eq!(route, ClusterRoute::Affine);
+        // saturate the affine worker → fallback to the other
+        let _g = InflightGuard::enter(&front.workers[w]);
+        let (w2, route2) = front.place(key).unwrap();
+        assert_eq!(route2, ClusterRoute::Fallback);
+        assert_ne!(w2, w);
+        // saturate both → 429
+        let _g2 = InflightGuard::enter(&front.workers[w2]);
+        assert_eq!(front.place(key), Err(429));
+        // kill both → 503
+        drop((_g, _g2));
+        for wk in front.workers() {
+            wk.healthy.store(false, Ordering::Release);
+        }
+        assert_eq!(front.place(key), Err(503));
+    }
+
+    #[test]
+    fn placement_same_key_same_worker() {
+        let metrics = Arc::new(Metrics::new());
+        let front = ClusterFront::new(
+            (0..4).map(|i| format!("127.0.0.1:{}", i + 1)).collect(),
+            ClusterConfig::default(),
+            metrics,
+        );
+        for k in 0..200u64 {
+            let key = mix_tick(k + 1);
+            let (w1, _) = front.place(key).unwrap();
+            let (w2, _) = front.place(key).unwrap();
+            assert_eq!(w1, w2, "same key must stay affine");
+        }
+    }
+
+    #[test]
+    fn random_mode_spreads_and_sheds() {
+        let metrics = Arc::new(Metrics::new());
+        let front = ClusterFront::new(
+            vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()],
+            ClusterConfig {
+                dispatch: DispatchMode::Random,
+                max_inflight: 1,
+                ..Default::default()
+            },
+            metrics,
+        );
+        let key = 42;
+        let mut seen = [false; 2];
+        for _ in 0..64 {
+            let (w, route) = front.place(key).unwrap();
+            assert_eq!(route, ClusterRoute::Random);
+            seen[w] = true;
+        }
+        assert!(seen[0] && seen[1], "random must use both workers");
+        let _g0 = InflightGuard::enter(&front.workers[0]);
+        let _g1 = InflightGuard::enter(&front.workers[1]);
+        assert_eq!(front.place(key), Err(429));
+    }
+
+    #[test]
+    fn inflight_guard_is_exception_safe() {
+        let w = Worker::new("127.0.0.1:1".into());
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let _g = InflightGuard::enter(&w);
+                assert_eq!(w.inflight(), 1);
+                panic!("boom");
+            }),
+        );
+        assert!(r.is_err());
+        assert_eq!(w.inflight(), 0, "guard must release on panic");
+    }
+}

@@ -1,0 +1,367 @@
+//! Reusable dispatch-policy primitives shared by the in-process
+//! [`crate::router::Router`] and the multi-process cluster front tier
+//! ([`crate::cluster`]):
+//!
+//! * [`least_loaded`] — the pure placement rule both tiers apply when
+//!   affinity is unavailable or saturated (lowest outstanding load among
+//!   routable candidates with queue room, ties toward the lowest index);
+//! * [`HashRing`] — consistent-hash assignment with virtual nodes, so a
+//!   worker death re-homes only its own arc of the key space instead of
+//!   reshuffling every prefix;
+//! * [`TokenBucket`] / [`TenantQuotas`] — per-tenant admission control
+//!   (millions-of-users hygiene: one hot tenant sheds with 429 instead
+//!   of starving everyone's prefix-affine workers).
+//!
+//! Everything here is pure state + explicit clocks (an [`Instant`] is
+//! *passed in*, never read): deterministic to unit-test, free of I/O,
+//! and usable under any lock discipline the caller prefers.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Least-loaded placement
+// ---------------------------------------------------------------------------
+
+/// One placement candidate's admission snapshot, as seen by
+/// [`least_loaded`]. The caller samples these under whatever locking it
+/// uses; the pick itself is pure.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    /// Caller-meaningful index (replica id, worker slot).
+    pub idx: usize,
+    /// Routable at all (not dead / not health-checked out).
+    pub alive: bool,
+    /// Below its queue/inflight bound — a live-but-full candidate
+    /// contributes to `alive` accounting but is never picked.
+    pub has_room: bool,
+    /// Outstanding load estimate (queued + in-flight cost).
+    pub load: f64,
+}
+
+/// Why [`least_loaded`] could not place a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PickError {
+    /// Every alive candidate is at its bound — shed with 429 semantics.
+    Saturated,
+    /// No candidate is alive at all — shed with 503 semantics.
+    NoneAlive,
+}
+
+/// The least-loaded alive candidate *among those with room* (ties break
+/// toward the lowest `idx`, so placement is deterministic under equal
+/// load). Exactly the [`crate::router::Router`] dispatch rule, extracted
+/// so the cluster front applies the identical policy across worker
+/// processes.
+pub fn least_loaded<I>(candidates: I) -> Result<usize, PickError>
+where
+    I: IntoIterator<Item = Candidate>,
+{
+    let mut any_alive = false;
+    let mut best: Option<(f64, usize)> = None;
+    for c in candidates {
+        if !c.alive {
+            continue;
+        }
+        any_alive = true;
+        if !c.has_room {
+            continue;
+        }
+        match best {
+            Some((b, i)) if b < c.load || (b == c.load && i < c.idx) => {}
+            _ => best = Some((c.load, c.idx)),
+        }
+    }
+    match best {
+        Some((_, i)) => Ok(i),
+        None if any_alive => Err(PickError::Saturated),
+        None => Err(PickError::NoneAlive),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Consistent-hash ring
+// ---------------------------------------------------------------------------
+
+/// SplitMix64 finalizer — the point-placement mix for ring positions.
+/// Deterministic across processes, so every front replica computes the
+/// same ring for the same worker count.
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Consistent-hash ring over `n` workers with `vnodes` virtual points
+/// each.
+///
+/// [`HashRing::assign`] maps a 64-bit routing key (the prompt's leading
+/// block-chain hash, [`crate::kvcache::routing_key`]) to the first
+/// *routable* worker clockwise from the key's ring position. Virtual
+/// nodes keep per-worker arcs balanced; when a worker dies, only keys
+/// on its arcs re-home (to each arc's clockwise successor) — every
+/// other prompt keeps hitting the worker whose prefix cache is already
+/// warm.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// `(ring_position, worker)` sorted by position.
+    points: Vec<(u64, usize)>,
+    workers: usize,
+}
+
+impl HashRing {
+    /// A ring over `workers` workers with `vnodes` points each (both
+    /// clamped to ≥ 1).
+    pub fn new(workers: usize, vnodes: usize) -> Self {
+        let workers = workers.max(1);
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(workers * vnodes);
+        for w in 0..workers {
+            for v in 0..vnodes {
+                let pos = mix64(
+                    (w as u64).wrapping_mul(0x9e3779b97f4a7c15)
+                        ^ mix64(v as u64 + 1),
+                );
+                points.push((pos, w));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points, workers }
+    }
+
+    /// Number of workers the ring was built over.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The worker owning `key`: the first ring point clockwise from
+    /// `key` whose worker satisfies `routable`, wrapping at the top.
+    /// `None` when no worker is routable.
+    pub fn assign<F>(&self, key: u64, routable: F) -> Option<usize>
+    where
+        F: Fn(usize) -> bool,
+    {
+        if self.points.is_empty() {
+            return None;
+        }
+        let start = self
+            .points
+            .partition_point(|&(pos, _)| pos < key);
+        let n = self.points.len();
+        for step in 0..n {
+            let (_, w) = self.points[(start + step) % n];
+            if routable(w) {
+                return Some(w);
+            }
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Token-bucket quotas
+// ---------------------------------------------------------------------------
+
+/// A classic token bucket: `burst` capacity refilled at `rate` tokens
+/// per second. The clock is passed in, so tests drive it
+/// deterministically.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: Option<Instant>,
+}
+
+impl TokenBucket {
+    /// A bucket refilling at `rate`/s with `burst` capacity, born full.
+    pub fn new(rate: f64, burst: f64) -> Self {
+        let burst = burst.max(1.0);
+        TokenBucket { rate: rate.max(0.0), burst, tokens: burst,
+                      last: None }
+    }
+
+    /// Take `cost` tokens at time `now`; `false` means over quota
+    /// (nothing is deducted on refusal).
+    pub fn try_take(&mut self, now: Instant, cost: f64) -> bool {
+        if let Some(last) = self.last {
+            let dt = now.saturating_duration_since(last).as_secs_f64();
+            self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        }
+        self.last = Some(now);
+        if self.tokens + 1e-9 >= cost {
+            self.tokens -= cost;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Per-tenant admission control: one [`TokenBucket`] per tenant id,
+/// created on first sight with the shared `rate`/`burst`. A
+/// non-positive rate disables quotas entirely (every request admitted)
+/// — the single-tenant default.
+#[derive(Debug)]
+pub struct TenantQuotas {
+    rate: f64,
+    burst: f64,
+    buckets: HashMap<String, TokenBucket>,
+}
+
+impl TenantQuotas {
+    /// Quotas of `rate` requests/s with `burst` headroom per tenant;
+    /// `rate <= 0` disables enforcement.
+    pub fn new(rate: f64, burst: f64) -> Self {
+        TenantQuotas { rate, burst, buckets: HashMap::new() }
+    }
+
+    /// Whether quotas are enforced at all.
+    pub fn enabled(&self) -> bool {
+        self.rate > 0.0
+    }
+
+    /// Admit one request from `tenant` at `now`; `false` = over quota
+    /// (shed with 429).
+    pub fn admit(&mut self, tenant: &str, now: Instant) -> bool {
+        if !self.enabled() {
+            return true;
+        }
+        self.buckets
+            .entry(tenant.to_string())
+            .or_insert_with(|| TokenBucket::new(self.rate, self.burst))
+            .try_take(now, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn cand(idx: usize, alive: bool, has_room: bool, load: f64)
+            -> Candidate {
+        Candidate { idx, alive, has_room, load }
+    }
+
+    #[test]
+    fn least_loaded_picks_lowest_load_with_room() {
+        let picked = least_loaded([
+            cand(0, true, true, 5.0),
+            cand(1, true, true, 2.0),
+            cand(2, true, false, 0.0), // full: never picked
+        ])
+        .unwrap();
+        assert_eq!(picked, 1);
+    }
+
+    #[test]
+    fn least_loaded_ties_break_to_lowest_idx() {
+        let picked = least_loaded([
+            cand(2, true, true, 1.0),
+            cand(0, true, true, 1.0),
+            cand(1, true, true, 1.0),
+        ])
+        .unwrap();
+        assert_eq!(picked, 0);
+    }
+
+    #[test]
+    fn least_loaded_distinguishes_saturated_from_dead() {
+        assert_eq!(
+            least_loaded([cand(0, true, false, 0.0)]),
+            Err(PickError::Saturated)
+        );
+        assert_eq!(
+            least_loaded([cand(0, false, true, 0.0)]),
+            Err(PickError::NoneAlive)
+        );
+        assert_eq!(least_loaded([]), Err(PickError::NoneAlive));
+    }
+
+    #[test]
+    fn ring_is_deterministic_and_total() {
+        let ring = HashRing::new(4, 64);
+        let again = HashRing::new(4, 64);
+        for k in 0..1000u64 {
+            let key = k.wrapping_mul(0x9e3779b97f4a7c15);
+            let w = ring.assign(key, |_| true).unwrap();
+            assert!(w < 4);
+            assert_eq!(again.assign(key, |_| true), Some(w),
+                       "same ring, same key, same worker");
+        }
+    }
+
+    #[test]
+    fn ring_spreads_keys_roughly_evenly() {
+        let ring = HashRing::new(4, 64);
+        let mut counts = [0usize; 4];
+        for k in 0..4000u64 {
+            let key = mix64(k + 1);
+            counts[ring.assign(key, |_| true).unwrap()] += 1;
+        }
+        for (w, &c) in counts.iter().enumerate() {
+            assert!(
+                (400..=2200).contains(&c),
+                "worker {w} owns {c}/4000 keys — ring badly unbalanced: \
+                 {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn ring_death_rehomes_only_dead_arcs() {
+        let ring = HashRing::new(4, 64);
+        let mut moved = 0usize;
+        let total = 4000usize;
+        for k in 0..total as u64 {
+            let key = mix64(k + 1);
+            let before = ring.assign(key, |_| true).unwrap();
+            let after = ring.assign(key, |w| w != 2).unwrap();
+            assert_ne!(after, 2);
+            if before != 2 {
+                assert_eq!(before, after,
+                           "keys off the dead worker must not move");
+            } else {
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "worker 2 owned nothing?");
+        assert!(moved < total / 2,
+                "death of 1/4 workers re-homed {moved}/{total} keys");
+        // nobody routable → None, never a spin
+        assert_eq!(ring.assign(12345, |_| false), None);
+    }
+
+    #[test]
+    fn token_bucket_enforces_rate_and_burst() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(10.0, 2.0);
+        // burst of 2 from a full bucket
+        assert!(b.try_take(t0, 1.0));
+        assert!(b.try_take(t0, 1.0));
+        assert!(!b.try_take(t0, 1.0), "burst exhausted");
+        // 100ms at 10/s refills exactly one token
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(b.try_take(t1, 1.0));
+        assert!(!b.try_take(t1, 1.0));
+        // refill caps at burst
+        let t2 = t1 + Duration::from_secs(60);
+        assert!(b.try_take(t2, 2.0));
+        assert!(!b.try_take(t2, 1.0));
+    }
+
+    #[test]
+    fn tenant_quotas_isolate_tenants() {
+        let t0 = Instant::now();
+        let mut q = TenantQuotas::new(1.0, 1.0);
+        assert!(q.admit("a", t0));
+        assert!(!q.admit("a", t0), "tenant a over quota");
+        assert!(q.admit("b", t0), "tenant b unaffected");
+        // disabled quotas admit everything
+        let mut open = TenantQuotas::new(0.0, 1.0);
+        for _ in 0..100 {
+            assert!(open.admit("a", t0));
+        }
+    }
+}

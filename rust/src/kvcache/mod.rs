@@ -319,6 +319,30 @@ fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
     h.wrapping_mul(0x100000001b3)
 }
 
+/// Cluster routing key for a prompt: the chained block hash of up to
+/// `max_blocks` leading **full** `block`-token blocks, seeded at `seed`
+/// — exactly the walk [`PrefixCache::acquire`] performs, so two prompts
+/// share a routing key iff they would adopt the same leading cache
+/// entries. Prompts shorter than one block (which the prefix cache
+/// never stores) hash their whole token slice instead, so short prompts
+/// still spread deterministically across a hash ring.
+///
+/// Cheap by construction — O(`min(len, max_blocks·block)`) byte hashing,
+/// no allocation, no cache lock — so a front tier can key *every*
+/// incoming request on it before any session state exists.
+pub fn routing_key(seed: u64, tokens: &[i32], block: usize,
+                   max_blocks: usize) -> u64 {
+    let mut h = seed;
+    let full = (tokens.len() / block.max(1)).min(max_blocks);
+    if full == 0 {
+        return chain_hash(h, tokens);
+    }
+    for b in 0..full {
+        h = chain_hash(h, &tokens[b * block..(b + 1) * block]);
+    }
+    h
+}
+
 /// One cached block's KV rows for all layers. `Arc`-shared between the
 /// resident entry and in-flight adoptions, so copies proceed without
 /// holding the cache lock.
@@ -850,6 +874,52 @@ mod tests {
         a.release_all(&pages).unwrap();
         assert_eq!(a.used_pages(), 0);
         assert_eq!(a.free_pages(), 8);
+    }
+
+    #[test]
+    fn routing_key_tracks_leading_blocks_only() {
+        let block = 4;
+        let a: Vec<i32> = (0..13).collect();
+        // same leading blocks, different tail → same key (the tail is
+        // beyond the keyed prefix, so affinity still lands together)
+        let mut b = a.clone();
+        b[12] = 999;
+        assert_eq!(
+            routing_key(7, &a, block, 2),
+            routing_key(7, &b, block, 2)
+        );
+        // a flipped token inside the first block changes the key
+        let mut c = a.clone();
+        c[0] = 999;
+        assert_ne!(
+            routing_key(7, &a, block, 2),
+            routing_key(7, &c, block, 2)
+        );
+        // key matches the acquire-walk chain for the same blocks
+        assert_eq!(
+            routing_key(7, &a, block, 1),
+            chain_hash(7, &a[..block])
+        );
+        assert_eq!(
+            routing_key(7, &a, block, 2),
+            chain_hash(chain_hash(7, &a[..block]), &a[block..2 * block])
+        );
+        // max_blocks caps the walk even when more full blocks exist
+        assert_eq!(
+            routing_key(7, &a, block, 1),
+            routing_key(7, &a[..block], block, 8)
+        );
+        // short prompts (< one block) hash their whole slice — distinct
+        // short prompts still spread
+        assert_ne!(
+            routing_key(7, &[1, 2], block, 2),
+            routing_key(7, &[1, 3], block, 2)
+        );
+        // and a different seed relocates everything
+        assert_ne!(
+            routing_key(7, &a, block, 2),
+            routing_key(8, &a, block, 2)
+        );
     }
 
     #[test]

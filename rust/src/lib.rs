@@ -54,6 +54,7 @@
 //! `docs/SCHEDULING.md` for the SLO scheduling rules.
 
 pub mod batcher;
+pub mod cluster;
 pub mod cost;
 pub mod engine;
 pub mod eval;

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //! * `serve`    — start the HTTP serving stack (router → batcher → engine)
+//! * `cluster`  — prefix-affinity front tier over N `serve` worker
+//!   processes (spawned as children, or attached via `--worker-addrs`)
 //! * `generate` — one-shot generation from the command line
 //! * `eval`     — run the longbench-sim accuracy harness
 //! * `schedule` — print the calibrated layerwise sparsity schedule
@@ -9,6 +11,7 @@
 //! * `info`     — artifact + model summary
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 use fastforward::batcher::BatcherConfig;
@@ -28,7 +31,7 @@ use fastforward::weights::WeightStore;
 
 fn usage() -> ! {
     eprintln!(
-        "fastforward <serve|generate|eval|schedule|cost|info> [flags]
+        "fastforward <serve|cluster|generate|eval|schedule|cost|info> [flags]
   common:    --artifacts DIR (default ./artifacts)
              --backend cpu|pjrt (execution backend; default pjrt when
               compiled with the pjrt feature, cpu otherwise. cpu needs
@@ -69,6 +72,28 @@ fn usage() -> ! {
              --no-slo (disable SLO-aware
               scheduling: priority, decode-first, preemption)
              --flop-load-model (FLOP-weighted dispatch cost)
+  cluster:   --addr HOST:PORT (front listen address)
+             --workers N (spawn N child `serve` worker processes on
+              loopback ephemeral ports; serve flags like --backend,
+              --replicas, --sparsity, --prefix-cache-mb, --queue are
+              forwarded to each worker)
+             --worker-addrs HOST:PORT,... (attach to already-running
+              workers instead of spawning; mutually exclusive with
+              --workers)
+             --dispatch affinity|random (placement policy; default
+              affinity = consistent-hash on the prompt's leading
+              prefix-block chain, least-loaded fallback when the
+              affine worker is saturated)
+             --key-blocks N (leading full blocks in the routing key,
+              default 4) --vnodes N (ring points per worker, default 64)
+             --max-inflight N (per-worker backplane bound, default 32;
+              all workers at the bound sheds 429)
+             --quota-rps R --quota-burst B (per-tenant token-bucket
+              admission keyed on the request's \"tenant\" field;
+              rps <= 0 disables, default off)
+             --health-interval-ms MS (worker /readyz probe period,
+              default 500) --fail-threshold N (consecutive probe
+              failures before a worker is routed around, default 3)
   generate:  --prompt TEXT --max-tokens N --sparsity S
   eval:      --sparsity LIST --tasks N --prompt-chars N --ablation NAME
   cost:      --model llama8b|llama1b|llama3b|artifact --sparsity LIST
@@ -453,10 +478,113 @@ fn cmd_serve(args: &Args) -> Result<()> {
         default_sparsity,
         default_attn_sparsity,
         default_token_keep,
+        lifecycle: fastforward::server::Lifecycle::new(),
+        header_timeout: Duration::from_millis(
+            args.usize("header-timeout-ms", 5000) as u64,
+        ),
     });
     let res = server.serve(&addr);
     router.close();
     let _ = pool.join();
+    res
+}
+
+/// `serve` flags forwarded verbatim to each spawned cluster worker.
+const WORKER_FLAGS: &[&str] = &[
+    "backend", "artifacts", "replicas", "sparsity", "attn-sparsity",
+    "token-keep-ratio", "prefix-cache-mb", "queue", "kv-pages",
+    "max-active", "block-budget", "decode-first-budget", "max-batch",
+    "no-slo", "flop-load-model", "cpu-threads", "cpu-kernel",
+    "weight-precision", "header-timeout-ms",
+];
+
+/// Reserve a loopback `host:port` by binding port 0 and releasing it.
+/// The tiny bind race is acceptable here (same pattern the test suite
+/// uses): workers re-bind the port milliseconds later.
+fn free_loopback_addr() -> Result<String> {
+    let l = std::net::TcpListener::bind("127.0.0.1:0")?;
+    Ok(l.local_addr()?.to_string())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    use fastforward::cluster::{wait_ready, ClusterConfig, ClusterFront,
+                               DispatchMode};
+    let addr = args.str("addr", "127.0.0.1:8080");
+    let metrics = Arc::new(Metrics::new());
+    // Probe the model config the workers will serve: routing keys must
+    // walk the same prefill block size the worker prefix caches use.
+    let (_kind, dir) = resolve_backend(args)?;
+    let probe = match &dir {
+        Some(d) => Manifest::load(d)?,
+        None => Manifest::synthetic(&SyntheticSpec::default()),
+    };
+    let dispatch_s = args.str("dispatch", "affinity");
+    let dispatch = DispatchMode::parse(&dispatch_s).ok_or_else(|| {
+        anyhow!("unknown --dispatch {dispatch_s:?} \
+                 (expected affinity|random)")
+    })?;
+    let cfg = ClusterConfig {
+        dispatch,
+        block: probe.model.block,
+        key_blocks: args.usize("key-blocks", 4),
+        vnodes: args.usize("vnodes", 64),
+        max_inflight: args.usize("max-inflight", 32).max(1),
+        quota_rps: args.f64("quota-rps", 0.0),
+        quota_burst: args.f64("quota-burst", 8.0),
+        vocab: probe.model.vocab,
+        health_interval: Duration::from_millis(
+            args.usize("health-interval-ms", 500) as u64,
+        ),
+        fail_threshold: args.usize("fail-threshold", 3).max(1) as u32,
+        ..ClusterConfig::default()
+    };
+
+    let mut children: Vec<std::process::Child> = Vec::new();
+    let workers: Vec<String> = match args.opt_str("worker-addrs") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        None => {
+            let n = args.usize("workers", 2).max(1);
+            let exe = std::env::current_exe()?;
+            let mut addrs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let waddr = free_loopback_addr()?;
+                let mut cmd = std::process::Command::new(&exe);
+                cmd.arg("serve").arg("--addr").arg(&waddr);
+                for flag in WORKER_FLAGS {
+                    if let Some(v) = args.opt_str(flag) {
+                        cmd.arg(format!("--{flag}"));
+                        if v != fastforward::util::cli::FLAG_SET {
+                            cmd.arg(v);
+                        }
+                    }
+                }
+                children.push(cmd.spawn()?);
+                addrs.push(waddr);
+            }
+            addrs
+        }
+    };
+    anyhow::ensure!(!workers.is_empty(), "cluster needs >= 1 worker");
+
+    let res = (|| -> Result<()> {
+        for w in &workers {
+            wait_ready(w, Duration::from_secs(60))?;
+        }
+        eprintln!(
+            "[cluster] {} worker(s) ready: {}",
+            workers.len(),
+            workers.join(", ")
+        );
+        ClusterFront::new(workers.clone(), cfg, metrics).serve(&addr)
+    })();
+    for mut c in children {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
     res
 }
 
@@ -493,6 +621,7 @@ fn main() -> Result<()> {
     }
     match args.positional.first().map(|s| s.as_str()) {
         Some("serve") => cmd_serve(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("generate") => cmd_generate(&args),
         Some("eval") => cmd_eval(&args),
         Some("schedule") => cmd_schedule(&args),

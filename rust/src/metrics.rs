@@ -22,6 +22,41 @@ struct ReplicaCounters {
     failed: u64,
 }
 
+/// How the cluster front placed a request on a worker — the label of
+/// `ff_cluster_dispatch_total`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterRoute {
+    /// Landed on the consistent-hash affine worker (prefix likely warm).
+    Affine,
+    /// Affine worker saturated/dead — least-loaded fallback.
+    Fallback,
+    /// Random dispatch baseline (`--dispatch random`).
+    Random,
+}
+
+/// One backplane worker's health/inflight gauge pair.
+#[derive(Default, Clone)]
+struct WorkerGauges {
+    healthy: bool,
+    inflight: u64,
+}
+
+/// Cluster front-tier counters — populated only by `ff cluster`; the
+/// whole `ff_cluster_*` block stays out of the exposition until
+/// [`Metrics::ensure_cluster_workers`] registers a worker table.
+#[derive(Default)]
+struct ClusterCounters {
+    dispatch_affine: u64,
+    dispatch_fallback: u64,
+    dispatch_random: u64,
+    sheds_429: u64,
+    sheds_503: u64,
+    quota_rejects: u64,
+    backplane_errors: u64,
+    retries: u64,
+    workers: Vec<WorkerGauges>,
+}
+
 #[derive(Default)]
 struct Inner {
     ttft_ms: Summary,
@@ -57,6 +92,11 @@ struct Inner {
     /// Sequence rows folded across all batched passes.
     batch_rows: u64,
     replicas: Vec<ReplicaCounters>,
+    /// Requests re-routed off a dead replica's queue to a survivor.
+    failover_rerouted: u64,
+    /// Dead-replica requests no survivor could absorb (errored back).
+    failover_failed: u64,
+    cluster: ClusterCounters,
     /// Latest snapshot of the prefix cache's own counters — the cache
     /// is the single source of truth; the executor pushes snapshots
     /// after lookups and inserts.
@@ -260,6 +300,97 @@ impl Metrics {
         }
     }
 
+    /// Record a dead replica's queue fail-over: `rerouted` requests
+    /// re-admitted on survivors, `failed` errored back to clients.
+    pub fn record_failover(&self, rerouted: u64, failed: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.failover_rerouted += rerouted;
+        g.failover_failed += failed;
+    }
+
+    /// `(rerouted, failed)` fail-over counts so far.
+    pub fn failover_counts(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.failover_rerouted, g.failover_failed)
+    }
+
+    /// Size the cluster worker gauge table (idempotent; grows only).
+    /// Registering any worker turns on the `ff_cluster_*` exposition
+    /// block.
+    pub fn ensure_cluster_workers(&self, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if g.cluster.workers.len() < n {
+            g.cluster.workers.resize(n, WorkerGauges::default());
+        }
+    }
+
+    /// Record one cluster dispatch decision.
+    pub fn record_cluster_dispatch(&self, route: ClusterRoute) {
+        let mut g = self.inner.lock().unwrap();
+        match route {
+            ClusterRoute::Affine => g.cluster.dispatch_affine += 1,
+            ClusterRoute::Fallback => g.cluster.dispatch_fallback += 1,
+            ClusterRoute::Random => g.cluster.dispatch_random += 1,
+        }
+    }
+
+    /// `(affine, fallback, random)` cluster dispatch counts so far.
+    pub fn cluster_dispatches(&self) -> (u64, u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (
+            g.cluster.dispatch_affine,
+            g.cluster.dispatch_fallback,
+            g.cluster.dispatch_random,
+        )
+    }
+
+    /// Record a request shed at the cluster front (`status` ∈ {429,
+    /// 503}; anything else counts toward 503).
+    pub fn record_cluster_shed(&self, status: u16) {
+        let mut g = self.inner.lock().unwrap();
+        if status == 429 {
+            g.cluster.sheds_429 += 1;
+        } else {
+            g.cluster.sheds_503 += 1;
+        }
+    }
+
+    /// `(sheds_429, sheds_503)` cluster load-shed counts so far.
+    pub fn cluster_sheds(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.cluster.sheds_429, g.cluster.sheds_503)
+    }
+
+    /// Record a request refused by per-tenant quota (subset of 429
+    /// sheds, counted separately so quota pressure is visible).
+    pub fn record_cluster_quota_reject(&self) {
+        self.inner.lock().unwrap().cluster.quota_rejects += 1;
+    }
+
+    /// Record a backplane I/O failure against a worker (connect/write/
+    /// proxy error — not an HTTP-level rejection).
+    pub fn record_cluster_backplane_error(&self) {
+        self.inner.lock().unwrap().cluster.backplane_errors += 1;
+    }
+
+    /// Record a dispatch retried on another worker after a backplane
+    /// failure.
+    pub fn record_cluster_retry(&self) {
+        self.inner.lock().unwrap().cluster.retries += 1;
+    }
+
+    /// Update worker `id`'s health/inflight gauges (health-checker +
+    /// proxy bookkeeping).
+    pub fn set_cluster_worker(&self, id: usize, healthy: bool,
+                              inflight: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if g.cluster.workers.len() <= id {
+            g.cluster.workers.resize(id + 1, WorkerGauges::default());
+        }
+        g.cluster.workers[id] =
+            WorkerGauges { healthy, inflight: inflight as u64 };
+    }
+
     /// Push the latest prefix-cache snapshot (counters + residency).
     /// Called by the executor after lookups and inserts while it holds
     /// the cache lock, so the exported series never drift from the
@@ -455,6 +586,84 @@ impl Metrics {
                 ));
             }
         }
+        if g.failover_rerouted + g.failover_failed > 0 {
+            gauge("ff_failover_rerouted_total",
+                  "dead-replica requests re-routed to survivors",
+                  g.failover_rerouted as f64);
+            gauge("ff_failover_failed_total",
+                  "dead-replica requests no survivor could absorb",
+                  g.failover_failed as f64);
+        }
+        // Cluster front-tier block: only `ff cluster` registers workers,
+        // so a plain `serve` exposition never carries empty series.
+        if !g.cluster.workers.is_empty() {
+            let c = &g.cluster;
+            out.push_str(
+                "# HELP ff_cluster_dispatch_total requests placed on a \
+                 worker, by route\n\
+                 # TYPE ff_cluster_dispatch_total gauge\n",
+            );
+            for (route, v) in [
+                ("affine", c.dispatch_affine),
+                ("fallback", c.dispatch_fallback),
+                ("random", c.dispatch_random),
+            ] {
+                out.push_str(&format!(
+                    "ff_cluster_dispatch_total{{route=\"{route}\"}} {v}\n"
+                ));
+            }
+            let total =
+                c.dispatch_affine + c.dispatch_fallback + c.dispatch_random;
+            gauge("ff_cluster_affinity_hit_rate",
+                  "fraction of dispatches that landed affine",
+                  if total > 0 {
+                      c.dispatch_affine as f64 / total as f64
+                  } else {
+                      0.0
+                  });
+            out.push_str(
+                "# HELP ff_cluster_sheds_total requests shed at the \
+                 front, by status code\n\
+                 # TYPE ff_cluster_sheds_total gauge\n",
+            );
+            for (code, v) in [("429", c.sheds_429), ("503", c.sheds_503)] {
+                out.push_str(&format!(
+                    "ff_cluster_sheds_total{{code=\"{code}\"}} {v}\n"
+                ));
+            }
+            gauge("ff_cluster_quota_rejects_total",
+                  "requests refused by per-tenant quota",
+                  c.quota_rejects as f64);
+            gauge("ff_cluster_backplane_errors_total",
+                  "backplane I/O failures against workers",
+                  c.backplane_errors as f64);
+            gauge("ff_cluster_retries_total",
+                  "dispatches retried on another worker",
+                  c.retries as f64);
+            for (metric, help, get) in [
+                (
+                    "ff_cluster_worker_healthy",
+                    "worker passes health checks (1/0)",
+                    (|w: &WorkerGauges| w.healthy as u64)
+                        as fn(&WorkerGauges) -> u64,
+                ),
+                (
+                    "ff_cluster_worker_inflight",
+                    "requests currently proxied to this worker",
+                    |w: &WorkerGauges| w.inflight,
+                ),
+            ] {
+                out.push_str(&format!(
+                    "# HELP {metric} {help}\n# TYPE {metric} gauge\n"
+                ));
+                for (i, w) in c.workers.iter().enumerate() {
+                    out.push_str(&format!(
+                        "{metric}{{worker=\"{i}\"}} {}\n",
+                        get(w)
+                    ));
+                }
+            }
+        }
         out
     }
 }
@@ -569,6 +778,61 @@ mod tests {
             .contains("ff_queue_delay_ms_p50{class=\"batch\"} 30"));
         // valid exposition format: one HELP/TYPE block per metric name
         // even when both classes have samples
+        let helps: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("# HELP"))
+            .collect();
+        let mut dedup = helps.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(helps.len(), dedup.len(), "duplicate HELP lines");
+    }
+
+    #[test]
+    fn cluster_and_failover_series() {
+        let m = Metrics::new();
+        // plain serve exposition carries neither block
+        let text = m.export();
+        assert!(!text.contains("ff_cluster_"));
+        assert!(!text.contains("ff_failover_"));
+        m.record_failover(3, 1);
+        m.ensure_cluster_workers(2);
+        m.record_cluster_dispatch(ClusterRoute::Affine);
+        m.record_cluster_dispatch(ClusterRoute::Affine);
+        m.record_cluster_dispatch(ClusterRoute::Fallback);
+        m.record_cluster_shed(429);
+        m.record_cluster_shed(503);
+        m.record_cluster_shed(503);
+        m.record_cluster_quota_reject();
+        m.record_cluster_backplane_error();
+        m.record_cluster_retry();
+        m.set_cluster_worker(0, true, 4);
+        m.set_cluster_worker(1, false, 0);
+        assert_eq!(m.failover_counts(), (3, 1));
+        assert_eq!(m.cluster_dispatches(), (2, 1, 0));
+        assert_eq!(m.cluster_sheds(), (1, 2));
+        let text = m.export();
+        assert!(text.contains("ff_failover_rerouted_total 3"));
+        assert!(text.contains("ff_failover_failed_total 1"));
+        assert!(text
+            .contains("ff_cluster_dispatch_total{route=\"affine\"} 2"));
+        assert!(text
+            .contains("ff_cluster_dispatch_total{route=\"fallback\"} 1"));
+        assert!(text
+            .contains("ff_cluster_dispatch_total{route=\"random\"} 0"));
+        assert!(
+            text.contains("ff_cluster_affinity_hit_rate 0.66"),
+            "2/3 affine: {text}"
+        );
+        assert!(text.contains("ff_cluster_sheds_total{code=\"429\"} 1"));
+        assert!(text.contains("ff_cluster_sheds_total{code=\"503\"} 2"));
+        assert!(text.contains("ff_cluster_quota_rejects_total 1"));
+        assert!(text.contains("ff_cluster_backplane_errors_total 1"));
+        assert!(text.contains("ff_cluster_retries_total 1"));
+        assert!(text.contains("ff_cluster_worker_healthy{worker=\"0\"} 1"));
+        assert!(text.contains("ff_cluster_worker_healthy{worker=\"1\"} 0"));
+        assert!(text.contains("ff_cluster_worker_inflight{worker=\"0\"} 4"));
+        // still a valid exposition: no duplicate HELP lines
         let helps: Vec<&str> = text
             .lines()
             .filter(|l| l.starts_with("# HELP"))

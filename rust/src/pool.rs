@@ -47,7 +47,9 @@ pub type BackendFactory =
 /// (unwinding runs destructors). Without it, a panicking executor
 /// would leave its queue live in the router: clients already queued
 /// would hang forever and new traffic would keep being dispatched into
-/// the void.
+/// the void. Queued requests *fail over* to the surviving replicas
+/// ([`Router::fail_over`]); only requests no alive replica can absorb
+/// are errored back to their clients.
 struct DeadOnExit {
     router: Arc<Router>,
     id: usize,
@@ -56,8 +58,7 @@ struct DeadOnExit {
 impl Drop for DeadOnExit {
     fn drop(&mut self) {
         self.router
-            .replica(self.id)
-            .mark_dead("executor thread terminated");
+            .fail_over(self.id, "executor thread terminated");
     }
 }
 

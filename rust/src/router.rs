@@ -500,8 +500,22 @@ impl Replica {
     }
 
     /// Mark the replica permanently failed (the router stops dispatching
-    /// to it) and fail every queued request with `error`.
+    /// to it) and fail every queued request with `error`. Prefer
+    /// [`Router::fail_over`], which re-routes the drained queue to the
+    /// surviving replicas instead of erroring it.
     pub fn mark_dead(&self, error: &str) {
+        for req in self.drain_dead() {
+            let _ = req.events.send(TokenEvent::Done(Response::failed(
+                req.id,
+                error.to_string(),
+            )));
+        }
+    }
+
+    /// Flip the replica dead+closed and take its queued (never-popped)
+    /// requests. The caller decides their fate — [`Replica::mark_dead`]
+    /// fails them, [`Router::fail_over`] re-routes them.
+    pub(crate) fn drain_dead(&self) -> Vec<Request> {
         let drained: Vec<Request> = {
             let mut g = self.inner.lock().unwrap();
             g.dead = true;
@@ -515,12 +529,7 @@ impl Replica {
                 .collect()
         };
         self.notify.notify_all();
-        for req in drained {
-            let _ = req.events.send(TokenEvent::Done(Response::failed(
-                req.id,
-                error.to_string(),
-            )));
-        }
+        drained
     }
 }
 
@@ -693,29 +702,65 @@ impl Router {
     /// their queue bound are skipped, so cost-based load and queue
     /// depth diverging (one replica full of tiny requests, another of
     /// huge ones) never causes spurious QueueFull while capacity
-    /// exists elsewhere.
+    /// exists elsewhere. The pick itself is the shared
+    /// [`crate::cluster::policy::least_loaded`] rule — the same policy
+    /// the cluster front applies across worker processes.
     fn least_loaded(&self) -> std::result::Result<Arc<Replica>, Reject> {
-        let mut any_alive = false;
-        let mut best: Option<(f64, &Arc<Replica>)> = None;
-        for r in &self.replicas {
-            if r.is_dead() {
-                continue;
+        use crate::cluster::policy::{self, Candidate, PickError};
+        let picked = policy::least_loaded(self.replicas.iter().map(|r| {
+            Candidate {
+                idx: r.id(),
+                alive: !r.is_dead(),
+                has_room: r.queue_len() < self.max_queue,
+                load: r.load(),
             }
-            any_alive = true;
-            if r.queue_len() >= self.max_queue {
-                continue;
-            }
-            let load = r.load();
-            match best {
-                Some((b, _)) if b <= load => {}
-                _ => best = Some((load, r)),
-            }
+        }));
+        match picked {
+            Ok(i) => Ok(self.replicas[i].clone()),
+            Err(PickError::Saturated) => Err(Reject::QueueFull),
+            Err(PickError::NoneAlive) => Err(Reject::Unavailable),
         }
-        match best {
-            Some((_, r)) => Ok(r.clone()),
-            None if any_alive => Err(Reject::QueueFull),
-            None => Err(Reject::Unavailable),
+    }
+
+    /// Whether any replica is still accepting work — the `/readyz`
+    /// predicate (a server whose every executor died is up but not
+    /// ready).
+    pub fn has_alive_replica(&self) -> bool {
+        self.replicas.iter().any(|r| !r.is_dead())
+    }
+
+    /// Mark replica `id` dead and **re-route** its queued requests to
+    /// the surviving replicas instead of failing them: each drained
+    /// request is re-admitted through the least-loaded pick, and only
+    /// requests no alive replica can take (none left, or all at their
+    /// bound) fail with `error`. Returns `(rerouted, failed)` counts;
+    /// both are also recorded as `ff_failover_*` metrics.
+    pub fn fail_over(&self, id: usize, error: &str) -> (usize, usize) {
+        let drained = self.replicas[id].drain_dead();
+        let (mut rerouted, mut failed) = (0usize, 0usize);
+        for req in drained {
+            // re-pick per request so re-routed load spreads instead of
+            // dogpiling the single least-loaded survivor
+            let target = self.least_loaded();
+            let req = match target {
+                Ok(replica) => match replica.push(req) {
+                    Ok(()) => {
+                        self.metrics.record_replica_dispatch(replica.id());
+                        rerouted += 1;
+                        continue;
+                    }
+                    Err((req, _reject)) => req,
+                },
+                Err(_) => req,
+            };
+            failed += 1;
+            let _ = req.events.send(TokenEvent::Done(Response::failed(
+                req.id,
+                error.to_string(),
+            )));
         }
+        self.metrics.record_failover(rerouted as u64, failed as u64);
+        (rerouted, failed)
     }
 
     /// Blocking pop from replica 0 — the legacy single-executor path
@@ -1005,5 +1050,90 @@ mod tests {
             .submit(vec![3; 64], 2, SparsityConfig::dense(), tx)
             .unwrap_err();
         assert_eq!(e, Reject::Unavailable);
+    }
+
+    /// Executor death under a live burst: replica 0 dies with queued
+    /// work while new submissions race the failover. Everything the
+    /// router *accepted* must still get exactly one `Done` — re-routed
+    /// to the survivor, never lost, never spuriously errored. (A submit
+    /// refused inside the mark-dead window is fine: that client was
+    /// told synchronously.)
+    #[test]
+    fn failover_under_churn_loses_no_responses() {
+        let r = Arc::new(pooled(256, 2));
+
+        // seed a burst before any consumer runs, so both replicas hold
+        // queued work deterministically (least-loaded alternates)
+        let mut rxs = Vec::new();
+        for i in 0..16usize {
+            let (tx, rx) = channel();
+            r.submit(vec![(i % 250) as i32 + 1; 64], 2,
+                     SparsityConfig::dense(), tx)
+                .unwrap();
+            rxs.push(rx);
+        }
+        assert!(r.replica(0).queue_len() > 0, "burst missed replica 0");
+        assert!(r.replica(1).queue_len() > 0, "burst missed replica 1");
+
+        // consumer services replica 1 only: replica 0's executor has
+        // "crashed" mid-burst with its queue intact
+        let consumer = {
+            let r = r.clone();
+            std::thread::spawn(move || {
+                let mut served = 0usize;
+                while let Some(req) = r.replica(1).pop_blocking() {
+                    r.replica(1)
+                        .complete(req.prompt.len(), req.max_tokens);
+                    let _ = req.events.send(TokenEvent::Done(Response {
+                        id: req.id,
+                        text: String::new(),
+                        tokens: 1,
+                        ttft_ms: 0.1,
+                        tpot_ms: 0.1,
+                        e2e_ms: 0.2,
+                        reused_blocks: 0,
+                        error: None,
+                    }));
+                    served += 1;
+                }
+                served
+            })
+        };
+
+        // churn: 16 more submissions race the fail_over call below
+        let churn = {
+            let r = r.clone();
+            std::thread::spawn(move || {
+                let mut accepted = Vec::new();
+                for i in 0..16usize {
+                    let (tx, rx) = channel();
+                    if r.submit(vec![(i % 250) as i32 + 1; 64], 2,
+                                SparsityConfig::dense(), tx)
+                        .is_ok()
+                    {
+                        accepted.push(rx);
+                    }
+                }
+                accepted
+            })
+        };
+
+        let (rerouted, failed) = r.fail_over(0, "replica 0 died");
+        assert!(rerouted > 0,
+                "replica 0's queue must re-route, not vanish");
+        assert_eq!(failed, 0,
+                   "survivor had queue room — nothing may fail");
+
+        rxs.extend(churn.join().unwrap());
+        for rx in &rxs {
+            let resp = Response::collect(rx).expect("lost Done event");
+            assert!(resp.error.is_none(),
+                    "re-routed request errored: {:?}", resp.error);
+        }
+
+        r.close();
+        let served = consumer.join().unwrap();
+        assert_eq!(served, rxs.len(),
+                   "every accepted request flows through the survivor");
     }
 }

@@ -8,7 +8,12 @@
 //!   "attn_sparsity": a?, "token_keep_ratio": r?, "stream": bool?,
 //!   "class": "interactive"|"batch"?, "deadline_ms": n?}
 //! * `GET  /metrics`   — Prometheus text
-//! * `GET  /healthz`   — liveness
+//! * `GET  /healthz`   — liveness (503 while draining, so load
+//!   balancers stop sending new work)
+//! * `GET  /readyz`    — readiness: the pool is spawned *and* at least
+//!   one replica is accepting; the cluster health-checker keys on this
+//! * `POST /admin/drain` — begin drain: `/healthz` flips to 503 and new
+//!   `/generate` requests are refused while in-flight streams finish
 //!
 //! **Streaming:** with `"stream": true` the reply is Server-Sent Events
 //! (`Content-Type: text/event-stream`): one `first` event at prefill
@@ -25,10 +30,15 @@
 //! non-numeric `content-length` values get a 400, and total bytes read
 //! per connection are hard-capped ([`MAX_HEADER_BYTES`] +
 //! [`MAX_BODY_BYTES`]) so endless request lines or header streams
-//! cannot exhaust memory.
+//! cannot exhaust memory. A slow-loris client — connected but trickling
+//! (or never sending) its request line/headers — holds a connection
+//! thread at most [`Server::header_timeout`]: the socket carries a read
+//! deadline until the request is fully read, and a deadline expiry gets
+//! a 408.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::Duration;
@@ -53,6 +63,54 @@ pub const MAX_BODY_BYTES: usize = 1 << 20;
 /// headers cannot grow memory without bound.
 pub const MAX_HEADER_BYTES: usize = 16 << 10;
 
+/// Default [`Server::header_timeout`]: generous for humans with curl,
+/// three orders of magnitude tighter than "forever".
+pub const DEFAULT_HEADER_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Liveness/readiness/drain state shared between the server, its
+/// supervisor and the cluster health-checker.
+///
+/// * **ready** — flipped once by [`Server::serve`] after the listener
+///   binds (the pool is spawned before the server starts). `/readyz`
+///   also requires a live replica, so a pool whose every executor died
+///   reports unready while staying alive.
+/// * **draining** — flipped by `POST /admin/drain` (or the process'
+///   signal handler). `/healthz` turns 503 so load balancers stop
+///   sending new work, new `/generate` requests are refused with 503,
+///   and in-flight streams finish undisturbed.
+#[derive(Debug, Default)]
+pub struct Lifecycle {
+    ready: AtomicBool,
+    draining: AtomicBool,
+}
+
+impl Lifecycle {
+    /// Fresh state: not ready, not draining.
+    pub fn new() -> Arc<Lifecycle> {
+        Arc::new(Lifecycle::default())
+    }
+
+    /// Mark the process ready (idempotent).
+    pub fn set_ready(&self) {
+        self.ready.store(true, Ordering::Release);
+    }
+
+    /// Whether [`Lifecycle::set_ready`] has run.
+    pub fn is_ready(&self) -> bool {
+        self.ready.load(Ordering::Acquire)
+    }
+
+    /// Begin draining (idempotent): refuse new work, finish in-flight.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    /// Whether a drain has begun.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+}
+
 /// The HTTP front-end: owns the listener loop and shares the router /
 /// metrics / tokenizer with every connection thread.
 pub struct Server {
@@ -75,19 +133,26 @@ pub struct Server {
     /// The prefix cache keys on it too: token-pruned KV is only ever
     /// shared between requests pruned under the same ratio.
     pub default_token_keep: Option<f64>,
+    /// Ready/draining flags behind `/readyz`, `/healthz` and
+    /// `/admin/drain` ([`Lifecycle::new`] for a fresh one).
+    pub lifecycle: Arc<Lifecycle>,
+    /// Slow-loris guard: the per-connection read deadline on the
+    /// request line + headers + body ([`DEFAULT_HEADER_TIMEOUT`]
+    /// unless tuned). Expiry answers 408 and closes the connection.
+    pub header_timeout: Duration,
 }
 
 /// A parsed HTTP request (just enough of HTTP/1.1).
-struct HttpReq {
-    method: String,
-    path: String,
-    body: String,
+pub(crate) struct HttpReq {
+    pub(crate) method: String,
+    pub(crate) path: String,
+    pub(crate) body: String,
 }
 
 /// Protocol-level rejection decided while reading the request.
-struct HttpError {
-    status: u16,
-    message: &'static str,
+pub(crate) struct HttpError {
+    pub(crate) status: u16,
+    pub(crate) message: &'static str,
 }
 
 /// Read one `\n`-terminated line, refusing to buffer more than `cap`
@@ -132,7 +197,7 @@ fn read_line_capped<R: BufRead>(reader: &mut R, cap: usize)
 /// Read one request. Outer `Err` = I/O failure (connection is dead,
 /// nothing can be sent); inner `Err` = protocol violation to answer
 /// with the carried status code.
-fn read_request(stream: &mut TcpStream)
+pub(crate) fn read_request(stream: &mut TcpStream)
                 -> Result<std::result::Result<HttpReq, HttpError>> {
     // Hard cap on total bytes read as a backstop; on top of it, the
     // request line and headers are read through a separate
@@ -210,14 +275,16 @@ fn read_request(stream: &mut TcpStream)
     }))
 }
 
-fn respond(stream: &mut TcpStream, status: u16, content_type: &str,
-           body: &str) -> Result<()> {
+pub(crate) fn respond(stream: &mut TcpStream, status: u16,
+                      content_type: &str, body: &str) -> Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        408 => "Request Timeout",
         413 => "Payload Too Large",
         429 => "Too Many Requests",
+        502 => "Bad Gateway",
         503 => "Service Unavailable",
         _ => "Internal Server Error",
     };
@@ -229,15 +296,19 @@ fn respond(stream: &mut TcpStream, status: u16, content_type: &str,
     Ok(())
 }
 
-fn error_json(msg: &str) -> String {
+pub(crate) fn error_json(msg: &str) -> String {
     Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
 }
 
 impl Server {
-    /// Serve forever on `addr` (e.g. "127.0.0.1:8080").
+    /// Serve forever on `addr` (e.g. "127.0.0.1:8080"; port 0 binds an
+    /// ephemeral port — the resolved address is printed). Marks the
+    /// process ready once the listener is bound.
     pub fn serve(self: Arc<Self>, addr: &str) -> Result<()> {
         let listener = TcpListener::bind(addr)?;
-        eprintln!("[server] listening on {addr}");
+        let local = listener.local_addr()?;
+        self.lifecycle.set_ready();
+        eprintln!("[server] listening on {local}");
         for stream in listener.incoming() {
             let Ok(stream) = stream else { continue };
             let this = self.clone();
@@ -257,9 +328,15 @@ impl Server {
     }
 
     fn handle(&self, stream: &mut TcpStream) -> Result<()> {
-        let req = match read_request(stream)? {
-            Ok(req) => req,
-            Err(e) => {
+        // Slow-loris guard: the whole request (line + headers + body)
+        // must arrive within header_timeout. Cleared before the
+        // response so long-lived SSE streams are unaffected.
+        let _ = stream.set_read_timeout(Some(self.header_timeout));
+        let req = read_request(stream);
+        let _ = stream.set_read_timeout(None);
+        let req = match req {
+            Ok(Ok(req)) => req,
+            Ok(Err(e)) => {
                 return respond(
                     stream,
                     e.status,
@@ -267,15 +344,73 @@ impl Server {
                     &error_json(e.message),
                 )
             }
+            Err(e) => {
+                let timed_out = e
+                    .downcast_ref::<std::io::Error>()
+                    .map(|io| {
+                        matches!(
+                            io.kind(),
+                            std::io::ErrorKind::WouldBlock
+                                | std::io::ErrorKind::TimedOut
+                        )
+                    })
+                    .unwrap_or(false);
+                if timed_out {
+                    return respond(
+                        stream,
+                        408,
+                        "application/json",
+                        &error_json("timed out reading request"),
+                    );
+                }
+                return Err(e);
+            }
         };
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/healthz") => {
-                respond(stream, 200, "text/plain", "ok")
+                if self.lifecycle.is_draining() {
+                    respond(stream, 503, "text/plain", "draining")
+                } else {
+                    respond(stream, 200, "text/plain", "ok")
+                }
+            }
+            ("GET", "/readyz") => {
+                let lc = &self.lifecycle;
+                if lc.is_draining() {
+                    respond(stream, 503, "text/plain", "draining")
+                } else if !lc.is_ready() {
+                    respond(stream, 503, "text/plain", "starting")
+                } else if !self.router.has_alive_replica() {
+                    respond(stream, 503, "text/plain",
+                            "no replicas accepting")
+                } else {
+                    respond(stream, 200, "text/plain", "ready")
+                }
+            }
+            ("POST", "/admin/drain") => {
+                self.lifecycle.begin_drain();
+                respond(
+                    stream,
+                    200,
+                    "application/json",
+                    &Json::obj(vec![("draining", Json::Bool(true))])
+                        .to_string(),
+                )
             }
             ("GET", "/metrics") => {
                 respond(stream, 200, "text/plain", &self.metrics.export())
             }
-            ("POST", "/generate") => self.generate(stream, &req.body),
+            ("POST", "/generate") => {
+                if self.lifecycle.is_draining() {
+                    return respond(
+                        stream,
+                        503,
+                        "application/json",
+                        &error_json("draining"),
+                    );
+                }
+                self.generate(stream, &req.body)
+            }
             _ => respond(stream, 404, "text/plain", "not found"),
         }
     }

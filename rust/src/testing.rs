@@ -552,6 +552,124 @@ pub fn attn_bench_prefill(engine: &Engine, len: usize,
     engine.prefill(&toks, cfg).expect("attn bench prefill");
 }
 
+// ---------------------------------------------------------------------------
+// Cluster worker-process harness (tests/cluster.rs + fig15 + perf gate)
+// ---------------------------------------------------------------------------
+
+/// One real `fastforward serve` worker process on a loopback ephemeral
+/// port, killed on drop — the substrate of the multi-process cluster
+/// suites (`tests/cluster.rs`, the fig15 bench, the affinity perf
+/// gate).
+///
+/// The binary path comes from the caller (`env!("CARGO_BIN_EXE_\
+/// fastforward")` in integration tests and benches — that env var only
+/// exists when cargo compiles test/bench targets, so the library cannot
+/// bake it in).
+pub struct WorkerProc {
+    child: std::process::Child,
+    addr: String,
+}
+
+/// Reserve a loopback `host:port` by binding port 0 and dropping the
+/// listener. The reserve-release race is the test suite's established
+/// pattern (the spawned process re-binds milliseconds later).
+pub fn free_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0")
+        .expect("bind loopback");
+    l.local_addr().expect("local addr").to_string()
+}
+
+impl WorkerProc {
+    /// Spawn `bin serve --backend cpu --addr <ephemeral> <extra_args>`
+    /// and wait (≤ 60 s) until its `/readyz` answers 200.
+    pub fn spawn(bin: &str, extra_args: &[&str]) -> WorkerProc {
+        let addr = free_addr();
+        let mut cmd = std::process::Command::new(bin);
+        cmd.arg("serve")
+            .arg("--backend")
+            .arg("cpu")
+            .arg("--addr")
+            .arg(&addr)
+            .args(extra_args)
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null());
+        let child = cmd.spawn().expect("spawn serve worker");
+        let w = WorkerProc { child, addr };
+        crate::cluster::wait_ready(
+            &w.addr,
+            std::time::Duration::from_secs(60),
+        )
+        .expect("worker became ready");
+        w
+    }
+
+    /// The worker's `host:port`.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Kill the worker process immediately (chaos cases; idempotent —
+    /// drop will find it already dead).
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Printable ASCII text of exactly `bytes` bytes — and, because the
+/// byte-level tokenizer emits one id per byte, exactly `bytes` tokens.
+/// Quote/backslash-free so it embeds in JSON prompts verbatim.
+pub fn ascii_doc_text(seed: u64, bytes: usize) -> String {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let bank = crate::trace::WordBank::new(&mut rng, 128);
+    let mut s: String = bank
+        .filler(&mut rng, bytes * 2)
+        .chars()
+        .filter(|c| c.is_ascii() && *c != '"' && *c != '\\')
+        .take(bytes)
+        .collect();
+    while s.len() < bytes {
+        s.push('x');
+    }
+    s
+}
+
+/// `n_docs` shared-document texts of `doc_bytes` bytes each whose
+/// routing keys split *evenly* across an `n_workers`-way hash ring
+/// under `cfg` (same key walk + ring the front uses), so a cluster
+/// bench's per-worker cache-sizing argument is deterministic instead of
+/// hostage to a lucky ring split. Requires `n_docs % n_workers == 0`.
+pub fn balanced_cluster_docs(cfg: &crate::cluster::ClusterConfig,
+                             n_workers: usize, n_docs: usize,
+                             doc_bytes: usize) -> Vec<String> {
+    assert_eq!(n_docs % n_workers, 0, "docs must divide evenly");
+    let tok = crate::tokenizer::Tokenizer::new(cfg.vocab);
+    let ring = crate::cluster::policy::HashRing::new(n_workers,
+                                                     cfg.vnodes);
+    let mut per_worker = vec![0usize; n_workers];
+    let mut docs = Vec::with_capacity(n_docs);
+    let mut seed = 1000u64;
+    while docs.len() < n_docs {
+        let text = ascii_doc_text(seed, doc_bytes);
+        seed += 1;
+        let key = crate::kvcache::routing_key(cfg.routing_seed,
+                                              &tok.encode(&text),
+                                              cfg.block, cfg.key_blocks);
+        let w = ring.assign(key, |_| true).expect("ring covers workers");
+        if per_worker[w] < n_docs / n_workers {
+            per_worker[w] += 1;
+            docs.push(text);
+        }
+    }
+    docs
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

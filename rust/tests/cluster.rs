@@ -1,0 +1,383 @@
+//! Cluster front-tier integration: consistent-hash prefix-affinity
+//! dispatch, quota/shed admission, health-checked lifecycle and the
+//! backplane retry — all over real loopback TCP, with the workers
+//! played by in-process `Server` stacks (stub executors, no engine) so
+//! every case is deterministic and artifact-free. The multi-*process*
+//! version of this surface is the fig15 bench and the
+//! `cluster_affinity_beats_random_dispatch` perf gate.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastforward::cluster::policy::HashRing;
+use fastforward::cluster::{http_get, http_post, ClusterConfig,
+                           ClusterFront, DispatchMode};
+use fastforward::metrics::Metrics;
+use fastforward::router::{Response, Router, TokenEvent};
+use fastforward::server::{Lifecycle, Server, DEFAULT_HEADER_TIMEOUT};
+use fastforward::testing;
+use fastforward::tokenizer::Tokenizer;
+use fastforward::util::json;
+
+const TIMEOUT: Duration = Duration::from_secs(10);
+
+/// An in-process worker: a real `Server` whose executor is a stub
+/// thread, plus a served-request counter so dispatch tests can see
+/// which worker took what.
+struct StubWorker {
+    router: Arc<Router>,
+    exec: std::thread::JoinHandle<()>,
+    addr: String,
+    served: Arc<AtomicUsize>,
+}
+
+fn start_worker() -> StubWorker {
+    let metrics = Arc::new(Metrics::new());
+    let router =
+        Arc::new(Router::new(64, 4096, 256, 128, metrics.clone()));
+    let served = Arc::new(AtomicUsize::new(0));
+    let (r2, s2) = (router.clone(), served.clone());
+    let exec = std::thread::spawn(move || {
+        while let Some(req) = r2.pop_blocking() {
+            s2.fetch_add(1, Ordering::AcqRel);
+            let mut done = Response::failed(req.id, String::new());
+            done.error = None;
+            done.text = "ok".to_string();
+            done.tokens = 1;
+            let _ = req.events.send(TokenEvent::Done(done));
+        }
+    });
+    let server = Arc::new(Server {
+        router: router.clone(),
+        metrics,
+        tokenizer: Tokenizer::new(384),
+        default_sparsity: None,
+        default_attn_sparsity: None,
+        default_token_keep: None,
+        lifecycle: Lifecycle::new(),
+        header_timeout: DEFAULT_HEADER_TIMEOUT,
+    });
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener); // reserve-release: the server re-binds momentarily
+    let addr2 = addr.clone();
+    std::thread::spawn(move || {
+        let _ = server.serve(&addr2);
+    });
+    fastforward::cluster::wait_ready(&addr, Duration::from_secs(30))
+        .expect("stub worker ready");
+    StubWorker { router, exec, addr, served }
+}
+
+impl StubWorker {
+    fn served(&self) -> usize {
+        self.served.load(Ordering::Acquire)
+    }
+
+    fn shutdown(self) {
+        self.router.close();
+        self.exec.join().unwrap();
+    }
+}
+
+fn cfg(dispatch: DispatchMode) -> ClusterConfig {
+    ClusterConfig {
+        dispatch,
+        connect_timeout: Duration::from_millis(500),
+        proxy_read_timeout: Duration::from_secs(10),
+        ..ClusterConfig::default()
+    }
+}
+
+fn front_over(workers: &[&StubWorker], cfg: ClusterConfig)
+              -> (Arc<ClusterFront>, String) {
+    let front = ClusterFront::new(
+        workers.iter().map(|w| w.addr.clone()).collect(),
+        cfg,
+        Arc::new(Metrics::new()),
+    );
+    let (addr, _handle) =
+        front.clone().spawn("127.0.0.1:0").expect("front binds");
+    (front, addr.to_string())
+}
+
+fn gen_body(prompt: &str) -> String {
+    format!("{{\"prompt\":\"{prompt}\",\"max_tokens\":2}}")
+}
+
+#[test]
+fn front_proxies_generate_and_streams_end_to_end() {
+    let w0 = start_worker();
+    let w1 = start_worker();
+    let (front, addr) =
+        front_over(&[&w0, &w1], cfg(DispatchMode::Affinity));
+
+    // one-shot JSON passes through the backplane byte-for-byte
+    let (status, body) =
+        http_post(&addr, "/generate", &gen_body("hello cluster"),
+                  TIMEOUT)
+            .unwrap();
+    assert_eq!(status, 200, "{body}");
+    let j = json::parse(&body).expect("proxied json");
+    assert_eq!(j.get("text").and_then(|t| t.as_str()), Some("ok"));
+
+    // an SSE stream proxies identically (Connection: close framing)
+    let (status, body) = http_post(
+        &addr,
+        "/generate",
+        "{\"prompt\":\"abc\",\"max_tokens\":2,\"stream\":true}",
+        TIMEOUT,
+    )
+    .unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("event: done"), "SSE frames survive: {body}");
+
+    // front health + metrics surface
+    let (status, _) = http_get(&addr, "/healthz", TIMEOUT).unwrap();
+    assert_eq!(status, 200);
+    let (status, _) = http_get(&addr, "/readyz", TIMEOUT).unwrap();
+    assert_eq!(status, 200);
+    let (status, metrics) = http_get(&addr, "/metrics", TIMEOUT).unwrap();
+    assert_eq!(status, 200);
+    assert!(metrics.contains("ff_cluster_dispatch_total"), "{metrics}");
+
+    let (affine, fallback, random) = front.metrics.cluster_dispatches();
+    assert_eq!(affine + fallback, 2, "both requests were dispatched");
+    assert_eq!(random, 0);
+    assert_eq!(w0.served() + w1.served(), 2);
+    front.stop();
+    w0.shutdown();
+    w1.shutdown();
+}
+
+#[test]
+fn affinity_pins_documents_and_random_does_not_starve() {
+    let w0 = start_worker();
+    let w1 = start_worker();
+    let base = cfg(DispatchMode::Affinity);
+    let (front, addr) = front_over(&[&w0, &w1], base.clone());
+
+    // pre-balanced docs: 2 pin to each worker by construction
+    let docs = testing::balanced_cluster_docs(&base, 2, 4,
+                                              base.key_blocks * 128);
+    // same document repeated → same worker every time
+    for _ in 0..3 {
+        let (status, _) =
+            http_post(&addr, "/generate", &gen_body(&docs[0]), TIMEOUT)
+                .unwrap();
+        assert_eq!(status, 200);
+    }
+    let pinned = [w0.served(), w1.served()];
+    assert!(
+        pinned == [3, 0] || pinned == [0, 3],
+        "one document must pin to exactly one worker, got {pinned:?}"
+    );
+
+    // the full balanced set touches both workers
+    for d in &docs {
+        let (status, _) =
+            http_post(&addr, "/generate", &gen_body(d), TIMEOUT)
+                .unwrap();
+        assert_eq!(status, 200);
+    }
+    assert!(w0.served() > 0 && w1.served() > 0,
+            "balanced docs must reach both workers");
+    let (affine, fallback, _) = front.metrics.cluster_dispatches();
+    assert_eq!(affine, 7, "unloaded cluster routes everything affine");
+    assert_eq!(fallback, 0);
+    front.stop();
+    w0.shutdown();
+    w1.shutdown();
+}
+
+#[test]
+fn tenant_quota_sheds_with_429() {
+    let w0 = start_worker();
+    let (front, addr) = front_over(
+        &[&w0],
+        ClusterConfig {
+            quota_rps: 0.001, // refill ~never within the test
+            quota_burst: 2.0,
+            ..cfg(DispatchMode::Affinity)
+        },
+    );
+
+    let body = "{\"prompt\":\"hi\",\"tenant\":\"hot\"}";
+    for _ in 0..2 {
+        let (status, _) =
+            http_post(&addr, "/generate", body, TIMEOUT).unwrap();
+        assert_eq!(status, 200, "burst allowance admits");
+    }
+    let (status, resp) =
+        http_post(&addr, "/generate", body, TIMEOUT).unwrap();
+    assert_eq!(status, 429, "{resp}");
+    assert!(resp.contains("over quota"), "{resp}");
+
+    // quotas are per-tenant: another tenant is unaffected
+    let (status, _) = http_post(
+        &addr,
+        "/generate",
+        "{\"prompt\":\"hi\",\"tenant\":\"cold\"}",
+        TIMEOUT,
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+
+    let (_, metrics) = http_get(&addr, "/metrics", TIMEOUT).unwrap();
+    assert!(
+        metrics.contains("ff_cluster_quota_rejects_total 1"),
+        "{metrics}"
+    );
+    assert!(
+        metrics.contains("ff_cluster_sheds_total{code=\"429\"} 1"),
+        "{metrics}"
+    );
+    front.stop();
+    w0.shutdown();
+}
+
+#[test]
+fn health_checker_routes_around_dead_worker() {
+    let w0 = start_worker();
+    let dead = testing::free_addr(); // reserved, nobody listening
+    let base = cfg(DispatchMode::Affinity);
+    let fail_threshold = base.fail_threshold;
+    let (front, addr) = front_over_addrs(
+        vec![w0.addr.clone(), dead],
+        base,
+    );
+
+    // drive the checker deterministically instead of sleeping
+    for _ in 0..fail_threshold {
+        front.probe_workers();
+    }
+    assert!(front.workers()[0].healthy());
+    assert!(!front.workers()[1].healthy(), "dead worker marked");
+
+    // ≥1 routable worker → the front stays ready, and every request
+    // lands on the survivor regardless of its affine key
+    let (status, _) = http_get(&addr, "/readyz", TIMEOUT).unwrap();
+    assert_eq!(status, 200);
+    for i in 0..4 {
+        let (status, _) = http_post(
+            &addr,
+            "/generate",
+            &gen_body(&format!("doc number {i}")),
+            TIMEOUT,
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+    }
+    assert_eq!(w0.served(), 4);
+
+    // kill the survivor too: the front reports unready and sheds 503
+    w0.router.replica(0).mark_dead("gone");
+    for _ in 0..fail_threshold {
+        front.probe_workers();
+    }
+    let (status, _) = http_get(&addr, "/readyz", TIMEOUT).unwrap();
+    assert_eq!(status, 503);
+    let (status, resp) =
+        http_post(&addr, "/generate", &gen_body("x"), TIMEOUT).unwrap();
+    assert_eq!(status, 503, "{resp}");
+    front.stop();
+    w0.shutdown();
+}
+
+/// [`front_over`] for raw addresses (dead-worker cases where no
+/// `StubWorker` exists).
+fn front_over_addrs(addrs: Vec<String>, cfg: ClusterConfig)
+                    -> (Arc<ClusterFront>, String) {
+    let front = ClusterFront::new(addrs, cfg, Arc::new(Metrics::new()));
+    let (addr, _handle) =
+        front.clone().spawn("127.0.0.1:0").expect("front binds");
+    (front, addr.to_string())
+}
+
+#[test]
+fn backplane_retry_recovers_from_unprobed_death() {
+    // worker 0 is dead but still *believed* healthy (no probe has run):
+    // the kill-restart window. A request whose affine worker is the
+    // dead one must be retried on the survivor, not failed.
+    let live = start_worker();
+    let dead = testing::free_addr();
+    // keep the background checker out of the way: this test *wants*
+    // the stale-health window, and a slow machine must not let probes
+    // retire worker 0 before the request arrives
+    let base = ClusterConfig {
+        health_interval: Duration::from_secs(60),
+        fail_threshold: 1000,
+        ..cfg(DispatchMode::Affinity)
+    };
+
+    // find a prompt whose ring slot is worker 0 (the dead one)
+    let ring = HashRing::new(2, base.vnodes);
+    let tok = Tokenizer::new(base.vocab);
+    let prompt = (0..64u64)
+        .map(|i| testing::ascii_doc_text(7000 + i, base.key_blocks * 128))
+        .find(|p| {
+            let key = fastforward::kvcache::routing_key(
+                base.routing_seed,
+                &tok.encode(p),
+                base.block,
+                base.key_blocks,
+            );
+            ring.assign(key, |_| true) == Some(0)
+        })
+        .expect("some doc keys to slot 0");
+
+    let (front, addr) =
+        front_over_addrs(vec![dead, live.addr.clone()], base);
+    let (status, body) =
+        http_post(&addr, "/generate", &gen_body(&prompt), TIMEOUT)
+            .unwrap();
+    assert_eq!(status, 200, "retry must recover: {body}");
+    assert_eq!(live.served(), 1);
+    assert!(!front.workers()[0].healthy(),
+            "connect failure is a death signal — no probe needed");
+
+    let (_, metrics) = http_get(&addr, "/metrics", TIMEOUT).unwrap();
+    assert!(metrics.contains("ff_cluster_retries_total 1"), "{metrics}");
+    assert!(
+        metrics.contains("ff_cluster_backplane_errors_total 1"),
+        "{metrics}"
+    );
+    front.stop();
+    live.shutdown();
+}
+
+#[test]
+fn draining_worker_is_retired_by_probes() {
+    let w0 = start_worker();
+    let w1 = start_worker();
+    let base = cfg(DispatchMode::Affinity);
+    let fail_threshold = base.fail_threshold;
+    let (front, addr) = front_over(&[&w0, &w1], base.clone());
+
+    // drain worker 1 (the operator runbook: POST /admin/drain, wait for
+    // the front to retire it, then stop the process)
+    let (status, _) =
+        http_post(&w1.addr, "/admin/drain", "", TIMEOUT).unwrap();
+    assert_eq!(status, 200);
+    for _ in 0..fail_threshold {
+        front.probe_workers();
+    }
+    assert!(!front.workers()[1].healthy(), "draining worker retired");
+
+    // all traffic — including worker 1's affine documents — now flows
+    // to worker 0, with zero client-visible errors
+    let docs = testing::balanced_cluster_docs(&base, 2, 4,
+                                              base.key_blocks * 128);
+    for d in &docs {
+        let (status, _) =
+            http_post(&addr, "/generate", &gen_body(d), TIMEOUT)
+                .unwrap();
+        assert_eq!(status, 200);
+    }
+    assert_eq!(w0.served(), 4);
+    assert_eq!(w1.served(), 0);
+    front.stop();
+    w0.shutdown();
+    w1.shutdown();
+}

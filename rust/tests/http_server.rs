@@ -13,7 +13,7 @@ use fastforward::manifest::Manifest;
 use fastforward::metrics::Metrics;
 use fastforward::router::Router;
 use fastforward::runtime::Runtime;
-use fastforward::server::Server;
+use fastforward::server::{Lifecycle, Server, DEFAULT_HEADER_TIMEOUT};
 use fastforward::tokenizer::Tokenizer;
 use fastforward::util::json;
 use fastforward::weights::WeightStore;
@@ -69,6 +69,8 @@ fn full_http_stack() {
         default_sparsity: Some(0.5),
         default_attn_sparsity: None,
         default_token_keep: None,
+        lifecycle: Lifecycle::new(),
+        header_timeout: DEFAULT_HEADER_TIMEOUT,
     });
     let addr2 = addr.clone();
     std::thread::spawn(move || {

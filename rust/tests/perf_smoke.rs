@@ -15,7 +15,7 @@
 //! Skipped with a message on single-core machines, where wall-clock
 //! smoke timing is at the scheduler's mercy.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use fastforward::engine::{Engine, SparsityConfig};
@@ -83,20 +83,25 @@ fn cores() -> usize {
         .unwrap_or(1)
 }
 
-/// Wall-clock gates need ≥ 2 cores; on smaller machines each gate
-/// reports itself SKIPPED by name — an explicit line per gate, so a CI
-/// log shows exactly which perf claims went unmeasured instead of a
-/// silently green run.
-fn skip_few_cores(gate: &str) -> bool {
+/// Wall-clock gates need a minimum core count; on smaller machines each
+/// gate reports itself SKIPPED by name — an explicit line per gate, so
+/// a CI log shows exactly which perf claims went unmeasured instead of
+/// a silently green run.
+fn skip_under_cores(gate: &str, need: usize) -> bool {
     let n = cores();
-    if n >= 2 {
+    if n >= need {
         return false;
     }
     eprintln!(
-        "[perf] {gate}: SKIPPED ({n} cores) — needs >= 2 for stable \
-         wall-clock timing"
+        "[perf] {gate}: SKIPPED ({n} cores) — needs >= {need} for \
+         stable wall-clock timing"
     );
     true
+}
+
+/// The single-process gates' threshold: ≥ 2 cores.
+fn skip_few_cores(gate: &str) -> bool {
+    skip_under_cores(gate, 2)
 }
 
 fn measure_speedup(engine: &Engine, len: usize, reps: usize) -> f64 {
@@ -391,5 +396,132 @@ fn int8_dense_prefill_beats_f32_at_t512() {
         speedup >= 1.2,
         "int8 dense prefill speedup {speedup:.2}x < 1.2x at T=512 \
          (quartered weight-read bytes on bandwidth-bound matmuls)"
+    );
+}
+
+/// The cluster-affinity gate: on a 2-worker cluster serving a
+/// shared-document workload whose full working set overflows any one
+/// worker's prefix cache but whose *per-worker affine share* fits,
+/// consistent-hash prefix-affinity dispatch must deliver ≥ 1.3× lower
+/// TTFT p50 than uniform-random placement.
+///
+/// Mechanism under test (docs/ARCHITECTURE.md §3): affinity pins each
+/// document to one worker, so after a single cold prefill per document
+/// every request adopts cached KV and prefills only its 32-token
+/// suffix; random placement cycles all 8 documents (32 KV blocks)
+/// through both 24-block caches — LRU thrash, repeated 4½-block cold
+/// prefills. The compute-bound expectation is ~4×; 1.3× leaves the
+/// module's usual generous margin. Closed-loop (4 clients, no arrival
+/// trace) so the measurement can't be confounded by queueing; the
+/// open-loop + chaos version of this claim is the fig15 bench.
+#[test]
+fn cluster_affinity_beats_random_dispatch() {
+    let _gate = hold_gate();
+    // two worker processes × 2 lanes + front + clients
+    if skip_under_cores("cluster_affinity_beats_random_dispatch", 4) {
+        return;
+    }
+    use fastforward::cluster::{http_post, ClusterConfig, ClusterFront,
+                               DispatchMode};
+    use fastforward::metrics::Metrics;
+    use fastforward::util::json;
+
+    const DOCS: usize = 8;
+    const DOC_BLOCKS: usize = 4; // × 128-token blocks = 512-byte docs
+    const CLIENTS: usize = 4;
+    const REQS: usize = 10;
+    let base = ClusterConfig {
+        block: 128,
+        key_blocks: DOC_BLOCKS,
+        vocab: 384,
+        max_inflight: 8,
+        connect_timeout: std::time::Duration::from_millis(500),
+        proxy_read_timeout: std::time::Duration::from_secs(30),
+        ..ClusterConfig::default()
+    };
+    let docs =
+        testing::balanced_cluster_docs(&base, 2, DOCS, DOC_BLOCKS * 128);
+    let bin = env!("CARGO_BIN_EXE_fastforward");
+
+    // per-worker cache = 24 blocks: affine share (16) fits, full
+    // working set (32) doesn't — see the sizing argument above
+    let worker_flags: &[&str] = &[
+        "--replicas", "1", "--cpu-threads", "2", "--queue", "256",
+        "--prefix-cache-mb", "3",
+    ];
+    let run = |dispatch: DispatchMode| -> f64 {
+        let w0 = testing::WorkerProc::spawn(bin, worker_flags);
+        let w1 = testing::WorkerProc::spawn(bin, worker_flags);
+        let front = ClusterFront::new(
+            vec![w0.addr().to_string(), w1.addr().to_string()],
+            ClusterConfig { dispatch, ..base.clone() },
+            Arc::new(Metrics::new()),
+        );
+        let (addr, handle) =
+            front.clone().spawn("127.0.0.1:0").expect("front binds");
+        let addr = addr.to_string();
+        let clients: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let addr = addr.clone();
+                let docs = docs.clone();
+                std::thread::spawn(move || {
+                    let mut ttfts = Vec::with_capacity(REQS);
+                    for i in 0..REQS {
+                        let prompt = format!(
+                            "{}{}",
+                            docs[(c * REQS + i) % DOCS],
+                            testing::ascii_doc_text(
+                                900_000 + (c * REQS + i) as u64,
+                                32,
+                            )
+                        );
+                        let body = format!(
+                            "{{\"prompt\":\"{prompt}\",\
+                             \"max_tokens\":4}}"
+                        );
+                        let (status, resp) = http_post(
+                            &addr,
+                            "/generate",
+                            &body,
+                            std::time::Duration::from_secs(60),
+                        )
+                        .expect("cluster request");
+                        assert_eq!(status, 200, "unexpected shed: {resp}");
+                        let ttft = json::parse(&resp)
+                            .expect("response json")
+                            .get("ttft_ms")
+                            .and_then(|v| v.as_f64())
+                            .expect("ttft_ms in response");
+                        ttfts.push(ttft);
+                    }
+                    ttfts
+                })
+            })
+            .collect();
+        let mut all = fastforward::util::stats::Summary::new();
+        for c in clients {
+            for t in c.join().expect("client thread") {
+                all.add(t);
+            }
+        }
+        front.stop();
+        let _ = handle.join();
+        all.percentile(50.0)
+    };
+
+    let p50_affinity = run(DispatchMode::Affinity);
+    let p50_random = run(DispatchMode::Random);
+    let speedup = p50_random / p50_affinity.max(1e-9);
+    eprintln!(
+        "[perf] cluster dispatch, {DOCS} docs x {DOC_BLOCKS} blocks, \
+         {} reqs: affinity ttft p50 {p50_affinity:.1} ms, random \
+         {p50_random:.1} ms, speedup {speedup:.2}x",
+        CLIENTS * REQS
+    );
+    assert!(
+        speedup >= 1.3,
+        "prefix-affinity dispatch ttft p50 speedup {speedup:.2}x < \
+         1.3x vs random on 2 workers (warm suffix-only prefill vs \
+         LRU-thrashed cold prefills; compute-bound expectation ~4x)"
     );
 }

@@ -1,0 +1,191 @@
+//! HTTP front-end robustness: request-size caps, slow-loris deadlines
+//! and the drain lifecycle — host-only (stub executor, no artifacts),
+//! over real TCP connections so the wire behavior is what's asserted.
+//!
+//! * bodies larger than `MAX_BODY_BYTES` are refused with 413 from the
+//!   `Content-Length` header alone — before the server reads (or
+//!   allocates for) a single body byte;
+//! * a connection that stalls mid-header is answered 408 and closed
+//!   within `Server::header_timeout`, so idle sockets can't pin
+//!   connection threads forever;
+//! * `POST /admin/drain` flips `/healthz` and `/readyz` to 503 and
+//!   refuses new `/generate` work while `/metrics` stays observable;
+//! * `/readyz` (the cluster health-checker's probe) goes 503 when every
+//!   replica is dead, while `/healthz` liveness stays 200.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastforward::metrics::Metrics;
+use fastforward::router::{Response, Router, TokenEvent};
+use fastforward::server::{Lifecycle, Server, DEFAULT_HEADER_TIMEOUT,
+                          MAX_BODY_BYTES};
+use fastforward::tokenizer::Tokenizer;
+
+/// Stub stack: a real `Server` over a real `Router`, with the executor
+/// side played by a thread that echoes each prompt token — the full
+/// HTTP surface with no engine.
+struct Stub {
+    router: Arc<Router>,
+    exec: std::thread::JoinHandle<()>,
+    addr: String,
+}
+
+fn start_stub(header_timeout: Duration) -> Stub {
+    let metrics = Arc::new(Metrics::new());
+    let router =
+        Arc::new(Router::new(16, 4096, 256, 128, metrics.clone()));
+    let r2 = router.clone();
+    let exec = std::thread::spawn(move || {
+        while let Some(req) = r2.pop_blocking() {
+            let mut done = Response::failed(req.id, String::new());
+            done.error = None;
+            done.text = "ok".to_string();
+            done.tokens = 1;
+            let _ = req.events.send(TokenEvent::Done(done));
+        }
+    });
+    let server = Arc::new(Server {
+        router: router.clone(),
+        metrics,
+        tokenizer: Tokenizer::new(384),
+        default_sparsity: None,
+        default_attn_sparsity: None,
+        default_token_keep: None,
+        lifecycle: Lifecycle::new(),
+        header_timeout,
+    });
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener); // reserve-release: the server re-binds momentarily
+    let addr2 = addr.clone();
+    std::thread::spawn(move || {
+        let _ = server.serve(&addr2);
+    });
+    std::thread::sleep(Duration::from_millis(200));
+    Stub { router, exec, addr }
+}
+
+impl Stub {
+    fn shutdown(self) {
+        self.router.close();
+        self.exec.join().unwrap();
+    }
+}
+
+fn request(addr: &str, raw: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(raw.as_bytes()).unwrap();
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    out
+}
+
+fn get(addr: &str, path: &str) -> String {
+    request(addr, &format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n"))
+}
+
+fn post(addr: &str, path: &str, body: &str) -> String {
+    request(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: x\r\n\
+             Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+#[test]
+fn oversized_body_is_rejected_413_before_read() {
+    let stub = start_stub(DEFAULT_HEADER_TIMEOUT);
+    // claim a body one byte over the cap but never send it: the 413
+    // must come from the Content-Length header alone
+    let t0 = Instant::now();
+    let raw = request(
+        &stub.addr,
+        &format!(
+            "POST /generate HTTP/1.1\r\nHost: x\r\n\
+             Content-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        ),
+    );
+    assert!(raw.starts_with("HTTP/1.1 413"), "{raw}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "413 must not wait for the body"
+    );
+    // a request at the boundary still parses (and fails later on JSON,
+    // not on size) — the cap is exclusive of valid maximum-size bodies
+    let raw = post(&stub.addr, "/generate", "{\"prompt\":\"hi\"}");
+    assert!(raw.starts_with("HTTP/1.1 200"), "{raw}");
+    stub.shutdown();
+}
+
+#[test]
+fn stalled_headers_time_out_408() {
+    let stub = start_stub(Duration::from_millis(300));
+    let t0 = Instant::now();
+    let mut s = TcpStream::connect(&stub.addr).unwrap();
+    // a slow-loris client: half a request line, then silence
+    s.write_all(b"POST /generate HTTP/1.1\r\nContent-Le").unwrap();
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    let waited = t0.elapsed();
+    assert!(out.starts_with("HTTP/1.1 408"), "{out}");
+    assert!(
+        waited >= Duration::from_millis(250),
+        "timed out suspiciously early ({waited:?})"
+    );
+    assert!(
+        waited < Duration::from_secs(10),
+        "stalled connection held its thread for {waited:?}"
+    );
+    // the connection thread is free again: a well-formed request on a
+    // fresh connection works immediately
+    let raw = post(&stub.addr, "/generate", "{\"prompt\":\"hi\"}");
+    assert!(raw.starts_with("HTTP/1.1 200"), "{raw}");
+    stub.shutdown();
+}
+
+#[test]
+fn drain_flips_health_and_refuses_new_work() {
+    let stub = start_stub(DEFAULT_HEADER_TIMEOUT);
+    assert!(get(&stub.addr, "/healthz").starts_with("HTTP/1.1 200"));
+    assert!(get(&stub.addr, "/readyz").starts_with("HTTP/1.1 200"));
+
+    let raw = post(&stub.addr, "/admin/drain", "");
+    assert!(raw.starts_with("HTTP/1.1 200"), "{raw}");
+
+    // load balancers and the cluster health-checker both see 503 now
+    let health = get(&stub.addr, "/healthz");
+    assert!(health.starts_with("HTTP/1.1 503"), "{health}");
+    assert!(health.contains("draining"), "{health}");
+    assert!(get(&stub.addr, "/readyz").starts_with("HTTP/1.1 503"));
+
+    // new work is refused...
+    let gen = post(&stub.addr, "/generate", "{\"prompt\":\"hi\"}");
+    assert!(gen.starts_with("HTTP/1.1 503"), "{gen}");
+    assert!(gen.contains("draining"), "{gen}");
+
+    // ...but observability survives the drain
+    let metrics = get(&stub.addr, "/metrics");
+    assert!(metrics.starts_with("HTTP/1.1 200"), "{metrics}");
+    assert!(metrics.contains("ff_"), "{metrics}");
+    stub.shutdown();
+}
+
+#[test]
+fn readyz_requires_a_live_replica() {
+    let stub = start_stub(DEFAULT_HEADER_TIMEOUT);
+    assert!(get(&stub.addr, "/readyz").starts_with("HTTP/1.1 200"));
+    stub.router.replica(0).mark_dead("executor crashed");
+    // alive (the process runs) but not ready (nothing can serve)
+    assert!(get(&stub.addr, "/healthz").starts_with("HTTP/1.1 200"));
+    let ready = get(&stub.addr, "/readyz");
+    assert!(ready.starts_with("HTTP/1.1 503"), "{ready}");
+    assert!(ready.contains("no replicas accepting"), "{ready}");
+    stub.shutdown();
+}

@@ -25,7 +25,7 @@ use fastforward::engine::SparsityConfig;
 use fastforward::metrics::Metrics;
 use fastforward::router::{Response, Router, SloClass, SubmitOpts,
                           TokenEvent};
-use fastforward::server::Server;
+use fastforward::server::{Lifecycle, Server, DEFAULT_HEADER_TIMEOUT};
 use fastforward::testing;
 use fastforward::tokenizer::Tokenizer;
 use fastforward::util::json;
@@ -169,6 +169,8 @@ fn sse_event_ordering_and_framing() {
         default_sparsity: None,
         default_attn_sparsity: None,
         default_token_keep: None,
+        lifecycle: Lifecycle::new(),
+        header_timeout: DEFAULT_HEADER_TIMEOUT,
     });
     let addr = spawn_server(server);
 
@@ -319,6 +321,8 @@ fn disconnect_mid_stream_releases_kv_pages() {
         default_sparsity: Some(0.5),
         default_attn_sparsity: None,
         default_token_keep: None,
+        lifecycle: Lifecycle::new(),
+        header_timeout: DEFAULT_HEADER_TIMEOUT,
     });
     let addr = spawn_server(server);
 

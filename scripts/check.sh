@@ -75,6 +75,14 @@ echo "==> fig14 speculative-prefill smoke (--smoke: keep in {1.0,0.5})"
 cargo bench --bench fig14_speculative_prefill "${extra[@]}" -- \
     --backend cpu --smoke
 
+echo "==> cluster-affinity perf smoke (affinity >= 1.3x random ttft p50)"
+cargo test -q --test perf_smoke cluster_affinity_beats_random_dispatch \
+    "${extra[@]}"
+
+echo "==> fig15 cluster-load smoke (--smoke: affinity/random/chaos, 2 workers)"
+cargo bench --bench fig15_cluster_load "${extra[@]}" -- \
+    --backend cpu --smoke
+
 echo "==> cargo test --doc"
 cargo test --doc -q "${extra[@]}"
 
